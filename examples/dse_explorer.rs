@@ -1,0 +1,81 @@
+//! DSE explorer: walk the Fig. 14 design space interactively and print the
+//! throughput / area-efficiency frontier, plus what the analytical models
+//! say about each point's area, power and peak efficiency at all three
+//! precisions.
+//!
+//! ```sh
+//! cargo run --release --example dse_explorer [-- <lanes> <tile_r> <tile_c>]
+//! ```
+
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::dse::{dse_workload, eval_point, peak_area_eff, sweep};
+use speed_rvv::metrics::{speed_area, speed_power};
+
+fn describe(cfg: &SpeedConfig) {
+    let area = speed_area(cfg);
+    let power = speed_power(cfg);
+    println!(
+        "config {}L {}x{}: {} PEs, {:.2} mm² (lanes {:.0}%), {:.0} mW",
+        cfg.lanes,
+        cfg.tile_r,
+        cfg.tile_c,
+        cfg.total_pes(),
+        area.total(),
+        100.0 * area.lane_fraction(),
+        power * 1e3
+    );
+    for p in Precision::ALL {
+        println!(
+            "  {p}: theoretical peak {:7.1} GOPS -> {:6.1} GOPS/mm², {:7.0} GOPS/W",
+            cfg.peak_gops(p),
+            cfg.peak_gops(p) / area.total(),
+            cfg.peak_gops(p) / power
+        );
+    }
+    let pt = eval_point(cfg, &dse_workload()).expect("sim");
+    println!(
+        "  measured on CONV3x3 @16-bit: {:.1} GOPS achieved ({:.0}% of peak), \
+         {:.1} GOPS/mm²",
+        pt.gops,
+        100.0 * pt.gops / cfg.peak_gops(Precision::Int16),
+        pt.area_eff()
+    );
+}
+
+fn main() {
+    let args: Vec<u32> =
+        std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    if args.len() == 3 {
+        let cfg = SpeedConfig::dse(args[0], args[1], args[2]);
+        if let Err(e) = cfg.validate() {
+            eprintln!("invalid configuration: {e}");
+            std::process::exit(1);
+        }
+        describe(&cfg);
+        return;
+    }
+
+    println!("Fig. 14 design space: lanes x TILE_R x TILE_C in {{2,4,8}}³\n");
+    let points = sweep();
+    println!("{:<10} {:>8} {:>9} {:>10}", "config", "GOPS", "area mm²", "GOPS/mm²");
+    for p in &points {
+        println!(
+            "{:<10} {:>8.1} {:>9.2} {:>10.1}",
+            format!("{}L {}x{}", p.cfg.lanes, p.cfg.tile_r, p.cfg.tile_c),
+            p.gops,
+            p.area_mm2,
+            p.area_eff()
+        );
+    }
+    let peak = peak_area_eff(&points);
+    println!(
+        "\npeak area efficiency: {:.1} GOPS/mm² at {:.1} GOPS ({}L {}x{}) — \
+         the paper reports the 4-lane instances as the efficiency sweet spot\n",
+        peak.area_eff(),
+        peak.gops,
+        peak.cfg.lanes,
+        peak.cfg.tile_r,
+        peak.cfg.tile_c
+    );
+    describe(&peak.cfg);
+}

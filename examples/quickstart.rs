@@ -1,0 +1,88 @@
+//! Quickstart: assemble a SPEED program, run it on the cycle simulator,
+//! and verify the numerics against the AOT-compiled JAX artifact via PJRT.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use speed_rvv::compiler::{compile_op, MemLayout};
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::isa::{assemble, StrategyKind};
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::runtime::Engine;
+use speed_rvv::sim::Processor;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. The hardware: the paper's reference instance. --------------
+    let cfg = SpeedConfig::reference();
+    println!(
+        "SPEED: {} lanes x {}x{} MPTU @ {:.2} GHz (peak {:.1} GOPS @INT8)\n",
+        cfg.lanes,
+        cfg.tile_r,
+        cfg.tile_c,
+        cfg.freq_ghz,
+        cfg.peak_gops(Precision::Int8)
+    );
+
+    // ---- 2. Hand-written vector assembly, straight from Fig. 2. --------
+    let src = r#"
+        li         x1, 16
+        vsetvli    x0, x1, e8
+        vsacfg     x2, prec=8, k=1, strat=mm
+        li         x3, 0
+        vsald      v0, (x3), seq, w=cfg     # inputs, lane-striped
+        li         x4, 0x100
+        vsald      v4, (x4), bcast, w=cfg   # weights, multi-broadcast
+        vsam       v8, v0, v4, stages=4
+    "#;
+    let prog = assemble(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("assembled {} instructions (Fig. 2 style stream)", prog.len());
+
+    // ---- 3. A real operator through the operator compiler. -------------
+    // 32x64 @ 64x32 INT8 matrix multiply — the same computation as the
+    // `mm_i8` AOT artifact.
+    let op = OpDesc::mm(32, 64, 32, Precision::Int8);
+    let mem = 1 << 22;
+    let layout = MemLayout::for_op(&op, mem).map_err(anyhow::Error::msg)?;
+    let compiled =
+        compile_op(&op, &cfg, StrategyKind::Mm, layout, true).map_err(anyhow::Error::msg)?;
+    println!(
+        "compiled MM operator: {} insns ({} VSAM bursts, {} stages, {} vregs)",
+        compiled.summary.total_insns,
+        compiled.summary.vsam,
+        compiled.summary.total_stages,
+        compiled.summary.vregs_used
+    );
+
+    // Deterministic INT8 operands.
+    let a: Vec<i32> = (0..32 * 64).map(|i| (i % 17) - 8).collect();
+    let b: Vec<i32> = (0..64 * 32).map(|i| (i % 13) - 6).collect();
+
+    let mut proc = Processor::new(cfg, mem);
+    proc.mem.preload_packed(layout.in_addr, &a, op.prec);
+    proc.mem.preload_packed(layout.w_addr, &b, op.prec);
+    proc.set_plan(compiled.plan);
+    let mut stats = speed_rvv::sim::SimStats::default();
+    for seg in &compiled.segments {
+        stats.merge(&proc.run(seg).map_err(|e| anyhow::anyhow!("{e}"))?);
+    }
+    let sim_out = proc.mem.inspect_i32(layout.out_addr, op.output_elems() as usize);
+    println!(
+        "simulated: {} cycles, {:.2} ops/cycle ({:.1} GOPS), {:.1} KiB DRAM traffic",
+        stats.cycles,
+        stats.ops_per_cycle(),
+        stats.gops(cfg.freq_ghz),
+        stats.traffic.total() as f64 / 1024.0
+    );
+
+    // ---- 4. Golden check against the JAX/Pallas artifact via PJRT. -----
+    match Engine::open("artifacts") {
+        Ok(mut engine) => {
+            let hlo_out = engine.execute("mm_i8", &[a, b])?;
+            assert_eq!(sim_out, hlo_out, "simulator disagrees with the HLO artifact!");
+            println!("golden check: simulator == AOT HLO artifact ({} elems) ✔", hlo_out.len());
+        }
+        Err(_) => println!("(artifacts not built — run `make artifacts` for the golden check)"),
+    }
+    Ok(())
+}

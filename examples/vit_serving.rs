@@ -1,0 +1,95 @@
+//! Transformer serving: batched ViT MLP blocks through the PJRT hot path.
+//!
+//! Demonstrates the production runtime topology: Python never runs — the
+//! coordinator loads the AOT-compiled `vit_mlp_i8` artifact once, then
+//! serves a stream of requests against it while the cycle simulator
+//! predicts what the same workload costs on SPEED silicon. Reports
+//! functional throughput/latency of the PJRT path and the projected
+//! on-silicon numbers.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example vit_serving
+//! ```
+
+use std::time::Instant;
+
+use speed_rvv::compiler::{execute_op, MemLayout};
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::isa::StrategyKind;
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::runtime::Engine;
+use speed_rvv::sim::Processor;
+
+const REQUESTS: usize = 64;
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = match Engine::open("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let art = engine
+        .manifest()
+        .artifact("vit_mlp_i8")
+        .expect("vit_mlp_i8 in manifest")
+        .clone();
+    println!(
+        "serving vit_mlp_i8: x{:?} @ w1{:?} / w2{:?} (INT8, requantized)",
+        art.input_shapes[0], art.input_shapes[1], art.input_shapes[2]
+    );
+
+    // Fixed weights (loaded once, like a deployed model) + per-request
+    // activations.
+    let n_of = |s: &[i64]| s.iter().product::<i64>() as usize;
+    let w1: Vec<i32> = (0..n_of(&art.input_shapes[1])).map(|i| (i as i32 % 11) - 5).collect();
+    let w2: Vec<i32> = (0..n_of(&art.input_shapes[2])).map(|i| (i as i32 % 7) - 3).collect();
+
+    // Warm the executable cache (compile once).
+    let x0: Vec<i32> = vec![1; n_of(&art.input_shapes[0])];
+    let _ = engine.execute("vit_mlp_i8", &[x0.clone(), w1.clone(), w2.clone()])?;
+
+    let t0 = Instant::now();
+    let mut checksum = 0i64;
+    for req in 0..REQUESTS {
+        let x: Vec<i32> = (0..n_of(&art.input_shapes[0]))
+            .map(|i| (((i + req * 31) % 23) as i32) - 11)
+            .collect();
+        let y = engine.execute("vit_mlp_i8", &[x, w1.clone(), w2.clone()])?;
+        checksum = checksum.wrapping_add(y.iter().map(|&v| v as i64).sum::<i64>());
+    }
+    let dt = t0.elapsed();
+    println!(
+        "PJRT hot path: {REQUESTS} requests in {:.1} ms -> {:.0} req/s \
+         (p50 latency {:.2} ms/batch, checksum {checksum})",
+        dt.as_secs_f64() * 1e3,
+        REQUESTS as f64 / dt.as_secs_f64(),
+        dt.as_secs_f64() * 1e3 / REQUESTS as f64
+    );
+
+    // ---- what the same block costs on SPEED silicon ----------------------
+    let cfg = SpeedConfig::reference();
+    let tokens = art.input_shapes[0][0] as u32;
+    let d = art.input_shapes[0][1] as u32;
+    let hidden = art.input_shapes[1][1] as u32;
+    let mm1 = OpDesc::mm(tokens, d, hidden, Precision::Int8);
+    let mm2 = OpDesc::mm(tokens, hidden, d, Precision::Int8);
+    let mut proc = Processor::new(cfg, 1 << 24);
+    let mut cycles = 0u64;
+    for op in [mm1, mm2] {
+        let layout = MemLayout::for_op(&op, 1 << 24).map_err(anyhow::Error::msg)?;
+        let (st, _) =
+            execute_op(&mut proc, &op, StrategyKind::Mm, layout, false)
+                .map_err(anyhow::Error::msg)?;
+        cycles += st.cycles;
+    }
+    println!(
+        "SPEED silicon estimate: {cycles} cycles/block ({:.2} µs @ {:.2} GHz, \
+         {:.0}k blocks/s)",
+        cycles as f64 / (cfg.freq_ghz * 1e9) * 1e6,
+        cfg.freq_ghz,
+        cfg.freq_ghz * 1e9 / cycles as f64 / 1e3
+    );
+    Ok(())
+}

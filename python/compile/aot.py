@@ -1,0 +1,218 @@
+"""AOT pipeline: lower fixed-shape L2 graphs to HLO text + a manifest.
+
+This is the single build-time bridge between the Python compile path and the
+Rust runtime.  Each artifact is a jitted L2 function lowered to stablehlo and
+converted to **HLO text** — NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`), while the HLO text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every function is lowered with `return_tuple=True`; the Rust side unwraps
+with `to_tuple1()`.  All boundary tensors are int32 (values constrained to
+the active precision's range — see kernels/ref.py).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclass
+class ArtifactSpec:
+    """One AOT-compiled computation the Rust runtime can load by name."""
+
+    name: str
+    fn: Callable
+    input_shapes: Sequence[tuple[int, ...]]
+    meta: dict = field(default_factory=dict)
+
+    def lower(self):
+        specs = [jax.ShapeDtypeStruct(s, jnp.int32) for s in self.input_shapes]
+        return jax.jit(self.fn).lower(*specs)
+
+
+def _tuple1(fn):
+    """Wrap an L2 function so the lowered computation returns a 1-tuple."""
+
+    def wrapped(*args):
+        return (fn(*args),)
+
+    return wrapped
+
+
+def build_specs() -> list[ArtifactSpec]:
+    """The artifact set the Rust coordinator and examples depend on.
+
+    Shapes are chosen to (a) cover every operator class of the paper's
+    evaluation, (b) exercise all three precisions' PP blocking in the Pallas
+    kernel, and (c) stay small enough that interpret-mode lowering is quick.
+    """
+    specs: list[ArtifactSpec] = []
+
+    # --- MM operator at each precision (Fig. 12 Transformer path). -------
+    for bits in ref.PRECISIONS:
+        specs.append(ArtifactSpec(
+            name=f"mm_i{bits}",
+            fn=_tuple1(lambda a, b, bits=bits: model.matmul(a, b, bits=bits)),
+            input_shapes=[(32, 64), (64, 32)],
+            meta={"op": "mm", "bits": bits, "m": 32, "k": 64, "n": 32},
+        ))
+
+    # --- Fig. 2 trace workload: INT16 4x8 MM. -----------------------------
+    specs.append(ArtifactSpec(
+        name="mm_fig2_i16",
+        fn=_tuple1(lambda a, b: model.matmul(a, b, bits=16, tile_r=2,
+                                             tile_c=2)),
+        input_shapes=[(4, 8), (8, 8)],
+        meta={"op": "mm", "bits": 16, "m": 4, "k": 8, "n": 8},
+    ))
+
+    # --- CONV operators (Fig. 10/11 benchmark set). ------------------------
+    specs.append(ArtifactSpec(
+        name="conv3x3_i8",
+        fn=_tuple1(lambda x, w: model.conv2d(x, w, stride=1, padding=1,
+                                             bits=8)),
+        input_shapes=[(1, 8, 12, 12), (16, 8, 3, 3)],
+        meta={"op": "conv", "bits": 8, "k": 3, "stride": 1, "pad": 1,
+              "in": [1, 8, 12, 12], "out": [1, 16, 12, 12]},
+    ))
+    specs.append(ArtifactSpec(
+        name="conv5x5_i8",
+        fn=_tuple1(lambda x, w: model.conv2d(x, w, stride=1, padding=2,
+                                             bits=8)),
+        input_shapes=[(1, 8, 12, 12), (16, 8, 5, 5)],
+        meta={"op": "conv", "bits": 8, "k": 5, "stride": 1, "pad": 2,
+              "in": [1, 8, 12, 12], "out": [1, 16, 12, 12]},
+    ))
+    specs.append(ArtifactSpec(
+        name="pwconv_i8",
+        fn=_tuple1(lambda x, w: model.pwconv2d(x, w, bits=8)),
+        input_shapes=[(1, 16, 8, 8), (32, 16)],
+        meta={"op": "pwcv", "bits": 8, "in": [1, 16, 8, 8],
+              "out": [1, 32, 8, 8]},
+    ))
+    specs.append(ArtifactSpec(
+        name="dwconv3x3_s2_i8",
+        fn=_tuple1(lambda x, w: model.dwconv2d(x, w, stride=2, padding=1,
+                                               bits=8)),
+        input_shapes=[(1, 8, 13, 13), (8, 3, 3)],
+        meta={"op": "dwcv", "bits": 8, "k": 3, "stride": 2, "pad": 1,
+              "in": [1, 8, 13, 13], "out": [1, 8, 7, 7]},
+    ))
+
+    # --- Composite blocks for the end-to-end examples. ---------------------
+    specs.append(ArtifactSpec(
+        name="mnv2_block_i8",
+        fn=_tuple1(lambda x, we, wd, wp: model.inverted_residual(
+            x, we, wd, wp, stride=1, bits=8, shift=7)),
+        input_shapes=[(1, 8, 8, 8), (32, 8), (32, 3, 3), (8, 32)],
+        meta={"op": "mnv2_block", "bits": 8, "stride": 1, "shift": 7,
+              "in": [1, 8, 8, 8], "out": [1, 8, 8, 8]},
+    ))
+    specs.append(ArtifactSpec(
+        name="vit_mlp_i8",
+        fn=_tuple1(lambda x, w1, w2: model.vit_mlp(x, w1, w2, bits=8,
+                                                   shift=7)),
+        input_shapes=[(16, 32), (32, 128), (128, 32)],
+        meta={"op": "vit_mlp", "bits": 8, "shift": 7, "in": [16, 32],
+              "out": [16, 32]},
+    ))
+    specs.append(ArtifactSpec(
+        name="requant_s7_i8",
+        fn=_tuple1(lambda acc: model.requantize(acc, shift=7, bits=8)),
+        input_shapes=[(32, 32)],
+        meta={"op": "requant", "bits": 8, "shift": 7, "in": [32, 32],
+              "out": [32, 32]},
+    ))
+
+    return specs
+
+
+def golden_vectors(spec: ArtifactSpec, seed: int = 2024):
+    """Deterministic inputs + oracle output for the Rust golden check.
+
+    Inputs are drawn in the artifact's precision range; the expected output
+    is computed by *executing the jitted L2 function in JAX* (which already
+    equals the pure-jnp oracle by the pytest suite).
+    """
+    rng = np.random.default_rng(seed)
+    bits = spec.meta.get("bits", 8)
+    inputs = [ref.random_operand(rng, s, min(bits, 8))
+              for s in spec.input_shapes]
+    out = jax.jit(spec.fn)(*[jnp.asarray(x) for x in inputs])[0]
+    return inputs, np.asarray(out)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None,
+                        help="comma-separated artifact names to rebuild")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text", "artifacts": {}}
+    for spec in build_specs():
+        if only and spec.name not in only:
+            continue
+        text = to_hlo_text(spec.lower())
+        path = os.path.join(args.out_dir, f"{spec.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+
+        inputs, expected = golden_vectors(spec)
+        golden = {
+            "inputs": [{"shape": list(x.shape), "data": x.reshape(-1).tolist()}
+                       for x in inputs],
+            "output": {"shape": list(expected.shape),
+                       "data": expected.reshape(-1).tolist()},
+        }
+        gpath = os.path.join(args.out_dir, f"{spec.name}.golden.json")
+        with open(gpath, "w") as f:
+            json.dump(golden, f)
+
+        manifest["artifacts"][spec.name] = {
+            "hlo": f"{spec.name}.hlo.txt",
+            "golden": f"{spec.name}.golden.json",
+            "inputs": [{"shape": list(s), "dtype": "i32"}
+                       for s in spec.input_shapes],
+            "output": {"shape": list(np.asarray(expected).shape),
+                       "dtype": "i32"},
+            "meta": spec.meta,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Layer-1 Pallas kernels: the MPTU tensor core as a tiled compute kernel.
+
+The paper's MPTU is a #TILE_R x #TILE_C array of output-stationary PEs, each
+holding sixteen 4-bit multipliers that fuse into 1x16-bit / 4x8-bit / 16x4-bit
+MACs per cycle (PP = parallelism-within-PE).  The Pallas adaptation for a
+tiled-memory machine (see DESIGN.md §Hardware-Adaptation):
+
+* the (TILE_R, TILE_C) *output tile* is the Pallas block shape — the grid
+  walks output tiles the way the result queue walks the VRF;
+* the reduction dimension is blocked by ``k_block``, a multiple of PP, so one
+  grid step along k consumes an integer number of the paper's dataflow
+  "stages" (one stage = PP input-channel elements per PE);
+* the output block stays resident across the k grid dimension and is
+  initialised under ``pl.when(k == 0)`` — the output-stationary strategy of
+  the PE's 32-bit accumulator, expressed as an accumulator-carried grid;
+* block shapes are sized against the 16 KiB/lane VRF budget (VMEM ≈ VRF);
+  :func:`vmem_footprint_bytes` reports the arithmetic used in DESIGN.md §Perf.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowering emits plain HLO that the
+Rust runtime's PJRT CPU client executes directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PP_FOR_BITS, PRECISIONS
+
+#: VRF capacity per lane (bytes) — the paper's 16 KiB configuration.
+VRF_BYTES_PER_LANE = 16 * 1024
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def default_k_block(bits: int, k: int) -> int:
+    """Reduction block: a multiple of PP covering up to 8 dataflow stages."""
+    pp = PP_FOR_BITS[bits]
+    stages = max(1, min(8, k // pp if k >= pp else 1))
+    return pp * stages
+
+
+def vmem_footprint_bytes(tile_r: int, tile_c: int, k_block: int) -> int:
+    """Per-grid-step VMEM bytes: input tile + weight tile + int32 accumulator.
+
+    Mirrors the VRF-budget arithmetic of the hardware: the operand queues and
+    accumulator of one MPTU invocation must fit the lane-local storage.
+    """
+    a_tile = tile_r * k_block * 4
+    b_tile = k_block * tile_c * 4
+    acc = tile_r * tile_c * 4
+    return a_tile + b_tile + acc
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """Output-stationary tile MAC: o += a @ b with 32-bit accumulation."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "tile_r", "tile_c",
+                                             "k_block", "interpret"))
+def mptu_matmul(a, b, *, bits: int = 8, tile_r: int = 8, tile_c: int = 8,
+                k_block: int | None = None, interpret: bool = True):
+    """Multi-precision tile matmul on the MPTU PE-array schedule.
+
+    a: (M, K) int32 values in `bits` range; b: (K, N) likewise.
+    Returns (M, N) int32 — identical to :func:`ref.mm_ref`.
+
+    M/N/K need not be multiples of the tile sizes; operands are zero-padded
+    (zeros contribute nothing to the MAC, matching the hardware's masked
+    lanes at tensor edges) and the result is cropped.
+    """
+    if bits not in PRECISIONS:
+        raise ValueError(f"unsupported precision: {bits}")
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner-dim mismatch: {k} vs {k2}")
+    kb = k_block if k_block is not None else default_k_block(bits, k)
+    pp = PP_FOR_BITS[bits]
+    if kb % pp:
+        raise ValueError(f"k_block {kb} must be a multiple of PP={pp}")
+
+    mp, np_, kp = _ceil_to(m, tile_r), _ceil_to(n, tile_c), _ceil_to(k, kb)
+    a_pad = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_pad = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // tile_r, np_ // tile_c, kp // kb)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, kb), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((kb, tile_c), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, tile_c), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(a_pad, b_pad)
+    return out[:m, :n]
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, kh, kw, stride, oh, ow):
+    """Per-channel 2D correlation (DWCV) — the FF strategy's inner stage.
+
+    One grid step owns one (channel) plane: inputs are traversed along the
+    feature-map dimension with the same weights multiplied every stage,
+    exactly the OP1-only schedule of the FF dataflow.
+    """
+    x = x_ref[...]  # (1, H, W)
+    w = w_ref[...]  # (1, kh, kw)
+    acc = jnp.zeros((1, oh, ow), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x, (0, i, j), (1, i + stride * (oh - 1) + 1,
+                               j + stride * (ow - 1) + 1), (1, stride, stride))
+            acc = acc + patch * w[0, i, j]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def mptu_dwconv(x, w, *, stride: int = 1, interpret: bool = True):
+    """Depth-wise convolution kernel, one channel plane per grid step.
+
+    x: (C, H, W) int32; w: (C, KH, KW) int32 -> (C, OH, OW) int32.
+    (Batch and padding are handled by the L2 graph, which pads before the
+    call — the hardware VLDU likewise delivers pre-padded tiles.)
+    """
+    x = jnp.asarray(x, jnp.int32)
+    w = jnp.asarray(w, jnp.int32)
+    c, h, wd = x.shape
+    cw, kh, kw = w.shape
+    assert c == cw
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    kern = functools.partial(_dw_kernel, kh=kh, kw=kw, stride=stride,
+                             oh=oh, ow=ow)
+    return pl.pallas_call(
+        kern,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, h, wd), lambda ci: (ci, 0, 0)),
+            pl.BlockSpec((1, kh, kw), lambda ci: (ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda ci: (ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _requant_kernel(acc_ref, o_ref, *, shift, lo, hi):
+    acc = acc_ref[...]
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    o_ref[...] = jnp.clip(acc, lo, hi)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "bits", "interpret"))
+def mptu_requantize(acc, *, shift: int, bits: int, interpret: bool = True):
+    """Result-path epilogue: shift-round-clip 32-bit accums to `bits` range.
+
+    Runs as a flat elementwise Pallas kernel (the vector-ALU path in SPEED).
+    """
+    from .ref import qrange
+
+    lo, hi = qrange(bits)
+    acc = jnp.asarray(acc, jnp.int32)
+    flat = acc.reshape(-1)
+    n = flat.shape[0]
+    blk = min(1024, n)
+    npad = _ceil_to(n, blk)
+    flat = jnp.pad(flat, (0, npad - n))
+    kern = functools.partial(_requant_kernel, shift=shift, lo=lo, hi=hi)
+    out = pl.pallas_call(
+        kern,
+        grid=(npad // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.int32),
+        interpret=interpret,
+    )(flat)
+    return out[:n].reshape(acc.shape)

@@ -1,0 +1,139 @@
+"""Pure-jnp correctness oracles for the SPEED compute stack.
+
+These functions define the *golden numerics* of the machine: what the MPTU
+(multi-precision tensor unit) must compute, expressed with plain jax.numpy and
+no Pallas. Every Pallas kernel in this package is pytest/hypothesis-verified
+against the oracle here, and the Rust cycle simulator is in turn verified
+against the AOT-lowered HLO of the L2 graph built on these semantics.
+
+Precision convention
+--------------------
+SPEED's datapath carries 4-, 8-, and 16-bit signed integers and accumulates in
+32 bits (each PE holds a 32-bit accumulator).  At the HLO interchange boundary
+we carry every operand as int32 whose *values* are constrained to the active
+precision's range; this sidesteps narrow-dtype support gaps in the PJRT
+bridge while keeping the arithmetic bit-exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Supported operand precisions (bits) — the paper's 4/8/16-bit datapath.
+PRECISIONS = (4, 8, 16)
+
+#: Parallelism-within-PE for each precision (sixteen 4-bit multipliers/PE).
+PP_FOR_BITS = {16: 1, 8: 4, 4: 16}
+
+
+def qrange(bits: int) -> tuple[int, int]:
+    """Inclusive signed range for a given operand precision."""
+    if bits not in PRECISIONS:
+        raise ValueError(f"unsupported precision: {bits} (expected 4/8/16)")
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def quantize(x, bits: int):
+    """Clamp values into the signed `bits`-bit range (symmetric clip)."""
+    lo, hi = qrange(bits)
+    return jnp.clip(jnp.round(x).astype(jnp.int32), lo, hi)
+
+
+def random_operand(rng: np.random.Generator, shape, bits: int) -> np.ndarray:
+    """Seeded synthetic operand with values in the precision's range."""
+    lo, hi = qrange(bits)
+    return rng.integers(lo, hi + 1, size=shape, dtype=np.int64).astype(np.int32)
+
+
+def mm_ref(a, b):
+    """int32 matrix multiply oracle: (M,K) @ (K,N) -> (M,N), 32-bit acc.
+
+    This is exactly what a #TILE_R x #TILE_C output-stationary PE array
+    produces once every K-stage has been accumulated.
+    """
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+def im2col_ref(x, kh: int, kw: int, stride: int, padding: int):
+    """im2col: (N,C,H,W) -> ((C*KH*KW, N*OH*OW), OH, OW)."""
+    n, c, h, w = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+        h, w = h + 2 * padding, w + 2 * padding
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, :, i:i + stride * oh:stride, j:j + stride * ow:stride]
+            patches.append(patch)  # (N, C, OH, OW)
+    cols = jnp.stack(patches, axis=2)  # (N, C, KH*KW, OH, OW)
+    cols = cols.transpose(1, 2, 0, 3, 4).reshape(c * kh * kw, n * oh * ow)
+    return cols, oh, ow
+
+
+def conv2d_ref(x, w, stride: int = 1, padding: int = 0):
+    """Standard convolution oracle (CONV / PWCV when kh=kw=1).
+
+    x: (N, C, H, W) int32; w: (F, C, KH, KW) int32 -> (N, F, OH, OW) int32.
+    Implemented as explicit im2col + matmul so it shares the MM oracle's
+    accumulation semantics (the paper converts CONV to MM the same way).
+    """
+    x = jnp.asarray(x, jnp.int32)
+    w = jnp.asarray(w, jnp.int32)
+    n, c, h, wd = x.shape
+    f, cw, kh, kw = w.shape
+    assert c == cw, f"channel mismatch {c} vs {cw}"
+    cols, oh, ow = im2col_ref(x, kh, kw, stride, padding)
+    out = mm_ref(w.reshape(f, c * kh * kw), cols)
+    return out.reshape(f, n, oh, ow).transpose(1, 0, 2, 3)
+
+
+def dwconv2d_ref(x, w, stride: int = 1, padding: int = 0):
+    """Depth-wise convolution oracle (DWCV).
+
+    x: (N, C, H, W); w: (C, KH, KW) -> (N, C, OH, OW).  Each channel is
+    independent — exactly the decoupling the FF dataflow strategy exploits.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    w = jnp.asarray(w, jnp.int32)
+    n, c, h, wd = x.shape
+    cw, kh, kw = w.shape
+    assert c == cw
+    if padding:
+        x = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+        h, wd = h + 2 * padding, wd + 2 * padding
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    out = jnp.zeros((n, c, oh, ow), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, :, i:i + stride * oh:stride, j:j + stride * ow:stride]
+            out = out + patch * w[None, :, i, j, None, None]
+    return out
+
+
+def pwconv2d_ref(x, w):
+    """Point-wise (1x1) convolution oracle: x (N,C,H,W), w (F,C) -> (N,F,H,W)."""
+    return conv2d_ref(x, jnp.asarray(w, jnp.int32)[:, :, None, None])
+
+
+def requantize_ref(acc, shift: int, bits: int):
+    """Requantize 32-bit accumulators back to `bits` precision.
+
+    Arithmetic right shift with round-half-up, then clip — the standard
+    fixed-point epilogue SPEED performs in the result path before the VRF
+    write-back.
+    """
+    acc = jnp.asarray(acc, jnp.int32)
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    lo, hi = qrange(bits)
+    return jnp.clip(acc, lo, hi)
+
+
+def relu_ref(x):
+    """ReLU on integer activations (vector-ALU op in SPEED)."""
+    return jnp.maximum(jnp.asarray(x, jnp.int32), 0)

@@ -1,0 +1,123 @@
+"""Layer-2 JAX compute graph: quantized MP-DNN operators built on the MPTU.
+
+This module is the machine's *functional contract*: every operator SPEED
+executes (MM, CONV, PWCV, DWCV, requantize, relu) expressed as a JAX graph
+that calls the Layer-1 Pallas kernels.  `aot.py` lowers fixed-shape instances
+of these functions to HLO text; the Rust coordinator executes those artifacts
+via PJRT and cross-checks the cycle simulator's functional output against
+them.
+
+Everything here is build-time Python — never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.mptu import mptu_dwconv, mptu_matmul, mptu_requantize
+
+#: Default MPTU geometry: the paper's four-lane reference config has a 2x2
+#: tensor core per lane; the fused logical array seen by the L2 graph is
+#: (lanes * TILE_R) x TILE_C for MM-style operators.
+DEFAULT_TILE_R = 8
+DEFAULT_TILE_C = 8
+
+
+def matmul(a, b, *, bits: int = 8, tile_r: int = DEFAULT_TILE_R,
+           tile_c: int = DEFAULT_TILE_C):
+    """MM operator: (M,K) @ (K,N) int32 with `bits`-range operands."""
+    return mptu_matmul(a, b, bits=bits, tile_r=tile_r, tile_c=tile_c)
+
+
+def conv2d(x, w, *, stride: int = 1, padding: int = 0, bits: int = 8,
+           tile_r: int = DEFAULT_TILE_R, tile_c: int = DEFAULT_TILE_C):
+    """CONV operator via im2col + MPTU matmul (FFCS-mapped in hardware).
+
+    x: (N, C, H, W), w: (F, C, KH, KW) -> (N, F, OH, OW) int32 accumulators.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    w = jnp.asarray(w, jnp.int32)
+    n, c, h, wd = x.shape
+    f, cw, kh, kw = w.shape
+    assert c == cw
+    cols, oh, ow = ref.im2col_ref(x, kh, kw, stride, padding)
+    out = matmul(w.reshape(f, c * kh * kw), cols, bits=bits,
+                 tile_r=tile_r, tile_c=tile_c)
+    return out.reshape(f, n, oh, ow).transpose(1, 0, 2, 3)
+
+
+def pwconv2d(x, w, *, bits: int = 8, tile_r: int = DEFAULT_TILE_R,
+             tile_c: int = DEFAULT_TILE_C):
+    """PWCV operator (1x1 conv, CF-mapped in hardware): w is (F, C)."""
+    x = jnp.asarray(x, jnp.int32)
+    w = jnp.asarray(w, jnp.int32)
+    n, c, h, wd = x.shape
+    f, cw = w.shape
+    assert c == cw
+    out = matmul(w, x.transpose(1, 0, 2, 3).reshape(c, n * h * wd),
+                 bits=bits, tile_r=tile_r, tile_c=tile_c)
+    return out.reshape(f, n, h, wd).transpose(1, 0, 2, 3)
+
+
+def dwconv2d(x, w, *, stride: int = 1, padding: int = 0, bits: int = 8):
+    """DWCV operator (FF-mapped in hardware): x (N,C,H,W), w (C,KH,KW)."""
+    x = jnp.asarray(x, jnp.int32)
+    w = jnp.asarray(w, jnp.int32)
+    if padding:
+        x = jnp.pad(x, ((0, 0), (0, 0), (padding, padding),
+                        (padding, padding)))
+    outs = [mptu_dwconv(x[i], w, stride=stride) for i in range(x.shape[0])]
+    return jnp.stack(outs, axis=0)
+
+
+def requantize(acc, *, shift: int, bits: int):
+    """Result-path epilogue (shift-round-clip) on 32-bit accumulators."""
+    return mptu_requantize(acc, shift=shift, bits=bits)
+
+
+def relu(x):
+    """Vector-ALU ReLU."""
+    return jnp.maximum(jnp.asarray(x, jnp.int32), 0)
+
+
+def linear(x, w, *, bits: int = 8, tile_r: int = DEFAULT_TILE_R,
+           tile_c: int = DEFAULT_TILE_C):
+    """Fully-connected layer: x (B, K) @ w.T with w (N, K)."""
+    return matmul(jnp.asarray(x, jnp.int32), jnp.asarray(w, jnp.int32).T,
+                  bits=bits, tile_r=tile_r, tile_c=tile_c)
+
+
+def inverted_residual(x, w_expand, w_dw, w_project, *, stride: int = 1,
+                      bits: int = 8, shift: int = 7):
+    """MobileNetV2 inverted-residual block: PWCV -> DWCV -> PWCV.
+
+    The paper's model-level evaluation is dominated by exactly this
+    composition (CF strategy for the two PWCVs, FF for the DWCV).  All
+    intermediate activations are requantized back to `bits`.
+    x: (N, C, H, W); w_expand: (E, C); w_dw: (E, 3, 3); w_project: (F, E).
+    Residual add is applied when stride == 1 and C == F.
+    """
+    h = requantize(relu(pwconv2d(x, w_expand, bits=bits)),
+                   shift=shift, bits=bits)
+    h = requantize(relu(dwconv2d(h, w_dw, stride=stride, padding=1,
+                                 bits=bits)), shift=shift, bits=bits)
+    h = requantize(pwconv2d(h, w_project, bits=bits), shift=shift, bits=bits)
+    if stride == 1 and x.shape[1] == h.shape[1]:
+        h = requantize(x + h, shift=0, bits=bits)
+    return h
+
+
+def vit_mlp(x, w1, w2, *, bits: int = 8, shift: int = 7):
+    """Transformer MLP block: two MMs with ReLU between (MM strategy).
+
+    x: (T, D); w1: (D, 4D); w2: (4D, D).
+    """
+    h = requantize(relu(matmul(x, w1, bits=bits)), shift=shift, bits=bits)
+    return requantize(matmul(h, w2, bits=bits), shift=shift, bits=bits)
+
+
+def attention_scores(q, k, *, bits: int = 8, shift: int = 7):
+    """Q @ K^T score matrix — the Transformer MM the paper's Fig. 1 calls out."""
+    return requantize(matmul(q, jnp.asarray(k, jnp.int32).T, bits=bits),
+                      shift=shift, bits=bits)

@@ -1,0 +1,185 @@
+"""Layer-1 correctness: Pallas MPTU kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: everything the Rust
+runtime will ever execute is lowered from these kernels, so exact integer
+equality against ref.py here certifies the numerics of the whole stack.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.mptu import (
+    default_k_block,
+    mptu_dwconv,
+    mptu_matmul,
+    mptu_requantize,
+    vmem_footprint_bytes,
+    VRF_BYTES_PER_LANE,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+# ---------------------------------------------------------------------------
+# mptu_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", ref.PRECISIONS)
+@pytest.mark.parametrize("shape", [(4, 8, 8), (16, 16, 16), (13, 37, 9),
+                                   (1, 1, 1), (8, 64, 8), (33, 5, 17)])
+def test_matmul_matches_oracle(bits, shape):
+    m, k, n = shape
+    a = ref.random_operand(RNG, (m, k), bits)
+    b = ref.random_operand(RNG, (k, n), bits)
+    got = np.asarray(mptu_matmul(a, b, bits=bits, tile_r=4, tile_c=4))
+    want = np.asarray(ref.mm_ref(a, b))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("tile_r,tile_c", [(2, 2), (2, 8), (8, 2), (8, 8)])
+def test_matmul_tile_geometry_invariance(tile_r, tile_c):
+    """Output must not depend on the PE-array geometry — only timing does."""
+    a = ref.random_operand(RNG, (12, 24), 8)
+    b = ref.random_operand(RNG, (24, 12), 8)
+    want = np.asarray(ref.mm_ref(a, b))
+    got = np.asarray(mptu_matmul(a, b, bits=8, tile_r=tile_r, tile_c=tile_c))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("bits", ref.PRECISIONS)
+def test_matmul_k_block_invariance(bits):
+    """Any PP-multiple reduction blocking produces identical accumulators."""
+    pp = ref.PP_FOR_BITS[bits]
+    a = ref.random_operand(RNG, (8, 4 * pp * 3), bits)
+    b = ref.random_operand(RNG, (4 * pp * 3, 8), bits)
+    want = np.asarray(ref.mm_ref(a, b))
+    for stages in (1, 2, 3):
+        got = np.asarray(mptu_matmul(a, b, bits=bits, tile_r=4, tile_c=4,
+                                     k_block=pp * stages))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_matmul_rejects_bad_precision():
+    a = np.zeros((4, 4), np.int32)
+    with pytest.raises(ValueError, match="unsupported precision"):
+        mptu_matmul(a, a, bits=2)
+
+
+def test_matmul_rejects_mismatched_k():
+    a = np.zeros((4, 4), np.int32)
+    b = np.zeros((5, 4), np.int32)
+    with pytest.raises(ValueError, match="inner-dim"):
+        mptu_matmul(a, b, bits=8)
+
+
+def test_matmul_rejects_non_pp_k_block():
+    a = np.zeros((4, 8), np.int32)
+    b = np.zeros((8, 4), np.int32)
+    with pytest.raises(ValueError, match="multiple of PP"):
+        mptu_matmul(a, b, bits=4, k_block=5)
+
+
+def test_matmul_extreme_values_no_overflow():
+    """Full-range 16-bit operands with K small enough for int32 accumulation."""
+    lo, hi = ref.qrange(16)
+    a = np.full((4, 2), hi, np.int32)
+    b = np.full((2, 4), lo, np.int32)
+    got = np.asarray(mptu_matmul(a, b, bits=16, tile_r=2, tile_c=2))
+    np.testing.assert_array_equal(got, np.asarray(ref.mm_ref(a, b)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 24), k=st.integers(1, 48), n=st.integers(1, 24),
+    bits=st.sampled_from(ref.PRECISIONS),
+    tile_r=st.sampled_from([2, 4, 8]), tile_c=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_sweep(m, k, n, bits, tile_r, tile_c, seed):
+    """Property: kernel == oracle over arbitrary shapes/precisions/tiles."""
+    rng = np.random.default_rng(seed)
+    a = ref.random_operand(rng, (m, k), bits)
+    b = ref.random_operand(rng, (k, n), bits)
+    got = np.asarray(mptu_matmul(a, b, bits=bits, tile_r=tile_r,
+                                 tile_c=tile_c))
+    np.testing.assert_array_equal(got, np.asarray(ref.mm_ref(a, b)))
+
+
+# ---------------------------------------------------------------------------
+# mptu_dwconv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_dwconv_matches_oracle(stride, k):
+    x = ref.random_operand(RNG, (4, 11, 11), 8)
+    w = ref.random_operand(RNG, (4, k, k), 8)
+    got = np.asarray(mptu_dwconv(x, w, stride=stride))
+    want = np.asarray(ref.dwconv2d_ref(x[None], w, stride=stride)[0])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(1, 6), h=st.integers(3, 14),
+    k=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]),
+    bits=st.sampled_from(ref.PRECISIONS), seed=st.integers(0, 2**31 - 1),
+)
+def test_dwconv_hypothesis_sweep(c, h, k, stride, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = ref.random_operand(rng, (c, h, h), bits)
+    w = ref.random_operand(rng, (c, k, k), bits)
+    got = np.asarray(mptu_dwconv(x, w, stride=stride))
+    want = np.asarray(ref.dwconv2d_ref(x[None], w, stride=stride)[0])
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# mptu_requantize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", ref.PRECISIONS)
+@pytest.mark.parametrize("shift", [0, 1, 7, 15])
+def test_requantize_matches_oracle(bits, shift):
+    acc = RNG.integers(-(2 ** 26), 2 ** 26, size=(17, 5)).astype(np.int32)
+    got = np.asarray(mptu_requantize(acc, shift=shift, bits=bits))
+    want = np.asarray(ref.requantize_ref(acc, shift, bits))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_requantize_saturates():
+    acc = np.array([2 ** 30, -(2 ** 30)], np.int32)
+    got = np.asarray(mptu_requantize(acc, shift=0, bits=8))
+    np.testing.assert_array_equal(got, np.array([127, -128], np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 300), shift=st.integers(0, 20),
+       bits=st.sampled_from(ref.PRECISIONS), seed=st.integers(0, 2**31 - 1))
+def test_requantize_hypothesis_sweep(n, shift, bits, seed):
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-(2 ** 28), 2 ** 28, size=(n,)).astype(np.int32)
+    got = np.asarray(mptu_requantize(acc, shift=shift, bits=bits))
+    want = np.asarray(ref.requantize_ref(acc, shift, bits))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget arithmetic (DESIGN.md §Perf / §Hardware-Adaptation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", ref.PRECISIONS)
+@pytest.mark.parametrize("tile", [2, 4, 8])
+def test_default_blocks_fit_vrf_budget(bits, tile):
+    """Default block shapes must fit the 16 KiB/lane VRF budget."""
+    kb = default_k_block(bits, 512)
+    assert kb % ref.PP_FOR_BITS[bits] == 0
+    assert vmem_footprint_bytes(tile, tile, kb) <= VRF_BYTES_PER_LANE
+
+
+def test_vmem_footprint_monotone_in_tiles():
+    f1 = vmem_footprint_bytes(2, 2, 16)
+    f2 = vmem_footprint_bytes(8, 8, 16)
+    assert f2 > f1

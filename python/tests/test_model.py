@@ -1,0 +1,112 @@
+"""Layer-2 correctness: quantized operator graphs vs the pure-jnp oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+@pytest.mark.parametrize("bits", ref.PRECISIONS)
+def test_conv2d_matches_oracle(bits):
+    x = ref.random_operand(RNG, (2, 4, 9, 9), bits)
+    w = ref.random_operand(RNG, (6, 4, 3, 3), bits)
+    got = np.asarray(model.conv2d(x, w, stride=1, padding=1, bits=bits))
+    want = np.asarray(ref.conv2d_ref(x, w, stride=1, padding=1))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("stride,pad,k", [(1, 0, 1), (1, 1, 3), (2, 1, 3),
+                                          (1, 2, 5), (2, 2, 5)])
+def test_conv2d_geometry(stride, pad, k):
+    x = ref.random_operand(RNG, (1, 3, 11, 11), 8)
+    w = ref.random_operand(RNG, (5, 3, k, k), 8)
+    got = np.asarray(model.conv2d(x, w, stride=stride, padding=pad, bits=8))
+    want = np.asarray(ref.conv2d_ref(x, w, stride=stride, padding=pad))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pwconv2d_matches_oracle():
+    x = ref.random_operand(RNG, (2, 8, 6, 6), 8)
+    w = ref.random_operand(RNG, (12, 8), 8)
+    got = np.asarray(model.pwconv2d(x, w, bits=8))
+    want = np.asarray(ref.pwconv2d_ref(x, w))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_dwconv2d_matches_oracle(stride):
+    x = ref.random_operand(RNG, (2, 5, 9, 9), 8)
+    w = ref.random_operand(RNG, (5, 3, 3), 8)
+    got = np.asarray(model.dwconv2d(x, w, stride=stride, padding=1, bits=8))
+    want = np.asarray(ref.dwconv2d_ref(x, w, stride=stride, padding=1))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_linear_matches_oracle():
+    x = ref.random_operand(RNG, (4, 16), 8)
+    w = ref.random_operand(RNG, (10, 16), 8)
+    got = np.asarray(model.linear(x, w, bits=8))
+    want = np.asarray(ref.mm_ref(x, w.T))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_inverted_residual_shapes_and_range():
+    x = ref.random_operand(RNG, (1, 8, 8, 8), 8)
+    we = ref.random_operand(RNG, (32, 8), 8)
+    wd = ref.random_operand(RNG, (32, 3, 3), 8)
+    wp = ref.random_operand(RNG, (8, 32), 8)
+    out = np.asarray(model.inverted_residual(x, we, wd, wp, stride=1,
+                                             bits=8, shift=7))
+    assert out.shape == (1, 8, 8, 8)
+    lo, hi = ref.qrange(8)
+    assert out.min() >= lo and out.max() <= hi
+
+
+def test_inverted_residual_stride2_no_residual():
+    x = ref.random_operand(RNG, (1, 8, 8, 8), 8)
+    we = ref.random_operand(RNG, (16, 8), 8)
+    wd = ref.random_operand(RNG, (16, 3, 3), 8)
+    wp = ref.random_operand(RNG, (12, 16), 8)
+    out = np.asarray(model.inverted_residual(x, we, wd, wp, stride=2,
+                                             bits=8, shift=7))
+    assert out.shape == (1, 12, 4, 4)
+
+
+def test_vit_mlp_shapes_and_range():
+    x = ref.random_operand(RNG, (16, 32), 8)
+    w1 = ref.random_operand(RNG, (32, 128), 8)
+    w2 = ref.random_operand(RNG, (128, 32), 8)
+    out = np.asarray(model.vit_mlp(x, w1, w2, bits=8, shift=7))
+    assert out.shape == (16, 32)
+    lo, hi = ref.qrange(8)
+    assert out.min() >= lo and out.max() <= hi
+
+
+def test_attention_scores_matches_manual():
+    q = ref.random_operand(RNG, (8, 16), 8)
+    k = ref.random_operand(RNG, (8, 16), 8)
+    got = np.asarray(model.attention_scores(q, k, bits=8, shift=7))
+    want = np.asarray(ref.requantize_ref(ref.mm_ref(q, k.T), 7, 8))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.integers(1, 5), f=st.integers(1, 6), h=st.integers(3, 9),
+       bits=st.sampled_from(ref.PRECISIONS), seed=st.integers(0, 2**31 - 1))
+def test_conv_hypothesis_sweep(c, f, h, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = ref.random_operand(rng, (1, c, h, h), bits)
+    w = ref.random_operand(rng, (f, c, 3, 3), bits)
+    got = np.asarray(model.conv2d(x, w, stride=1, padding=1, bits=bits))
+    want = np.asarray(ref.conv2d_ref(x, w, stride=1, padding=1))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_relu_clamps_negative():
+    x = np.array([-5, 0, 3], np.int32)
+    np.testing.assert_array_equal(np.asarray(model.relu(x)),
+                                  np.array([0, 0, 3], np.int32))

@@ -1,0 +1,80 @@
+//! Ablation: the mixed dataflow mapping vs forcing one strategy everywhere
+//! — the design choice Sec. III motivates ("a one-size-fits-all dataflow
+//! approach would suffer from under-utilized computation").
+//!
+//! For every benchmark network (quick scale) and each fixed strategy, the
+//! fixed policy runs only the operators the strategy supports; the mixed
+//! row is restricted to the same operator subset so the comparison is
+//! apples-to-apples. Also reports the traffic arm of the trade-off.
+
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::coordinator::{run_model, Policy};
+use speed_rvv::isa::StrategyKind;
+use speed_rvv::models::zoo::{model_by_name, MODELS};
+use speed_rvv::models::OpKind;
+use speed_rvv::report::fig12::downscale;
+
+fn main() {
+    let cfg = SpeedConfig::reference();
+    println!(
+        "=== ablation: mixed dataflow vs fixed strategies (INT8, 1/4 scale) ===\n"
+    );
+    println!(
+        "{:<12} {:>14} {:>14} {:>14} {:>14}",
+        "model", "mixed cycles", "all-FFCS", "all-CF", "all-FF"
+    );
+    for name in MODELS {
+        let model = downscale(&model_by_name(name).unwrap(), 4);
+        let mixed = run_model(&model, Precision::Int8, &cfg, Policy::Mixed).unwrap();
+        let mut row = format!("{name:<12}");
+        // Mixed total over conv-family ops only (what fixed policies run).
+        let conv_subset = |r: &speed_rvv::coordinator::ModelResult, s: StrategyKind| {
+            r.layers
+                .iter()
+                .filter(|l| match s {
+                    StrategyKind::Ff => {
+                        matches!(l.op.kind, OpKind::Conv | OpKind::Pwcv | OpKind::Dwcv)
+                    }
+                    _ => matches!(l.op.kind, OpKind::Conv | OpKind::Pwcv),
+                })
+                .map(|l| l.stats.cycles)
+                .sum::<u64>()
+        };
+        row.push_str(&format!("{:>14}", mixed.vector_cycles()));
+        for strat in [StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff] {
+            let fixed =
+                run_model(&model, Precision::Int8, &cfg, Policy::Fixed(strat)).unwrap();
+            let fixed_cycles: u64 = fixed.layers.iter().map(|l| l.stats.cycles).sum();
+            let mixed_same = conv_subset(&mixed, strat);
+            let ratio = if mixed_same > 0 {
+                fixed_cycles as f64 / mixed_same as f64
+            } else {
+                f64::NAN
+            };
+            row.push_str(&format!("{:>13.2}x", ratio));
+        }
+        println!("{row}");
+    }
+    println!(
+        "\n(cells are fixed-policy cycles / mixed-policy cycles on the same \
+         operator subset; > 1.00x means the mixed mapping wins)\n"
+    );
+
+    // The traffic arm of the trade-off, on MobileNetV2.
+    let model = downscale(&model_by_name("mobilenetv2").unwrap(), 4);
+    println!("MobileNetV2 traffic by policy (INT8):");
+    for (label, policy) in [
+        ("mixed", Policy::Mixed),
+        ("all-FFCS", Policy::Fixed(StrategyKind::Ffcs)),
+        ("all-CF", Policy::Fixed(StrategyKind::Cf)),
+        ("all-FF", Policy::Fixed(StrategyKind::Ff)),
+    ] {
+        let r = run_model(&model, Precision::Int8, &cfg, policy).unwrap();
+        println!(
+            "  {label:<9} {:8.2} MiB DRAM over {:2} layers ({} cycles)",
+            r.total.traffic.total() as f64 / (1 << 20) as f64,
+            r.layers.len(),
+            r.vector_cycles()
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerates Fig. 10 (external-memory access size per dataflow
+//! strategy vs Ara) and times the byte-accurate traffic simulation.
+
+use std::time::Instant;
+
+use speed_rvv::config::SpeedConfig;
+use speed_rvv::report::fig10::{fig10, fig10_data};
+
+fn main() {
+    let cfg = SpeedConfig::reference();
+    println!("=== Fig. 10 — external memory access size ===\n");
+    println!("{}", fig10(&cfg));
+
+    let t0 = Instant::now();
+    let reps = 10;
+    for _ in 0..reps {
+        let cells = fig10_data(&cfg);
+        assert_eq!(cells.len(), 10);
+        std::hint::black_box(cells);
+    }
+    println!(
+        "bench fig10_traffic_sim: {:.1} ms/iter ({reps} reps)",
+        t0.elapsed().as_secs_f64() / reps as f64 * 1e3
+    );
+}

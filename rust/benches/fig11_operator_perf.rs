@@ -1,0 +1,24 @@
+//! Bench: regenerates Fig. 11 (operator performance vs Ara across tensor
+//! sizes) and times the operator-level sweep.
+
+use std::time::Instant;
+
+use speed_rvv::config::SpeedConfig;
+use speed_rvv::report::fig11::{fig11, fig11_data, DEFAULT_SIZES};
+
+fn main() {
+    let cfg = SpeedConfig::reference();
+    println!("=== Fig. 11 — operator performance across tensor sizes ===\n");
+    println!("{}", fig11(&cfg, &DEFAULT_SIZES));
+
+    let t0 = Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        let pts = fig11_data(&cfg, &[8, 16]);
+        std::hint::black_box(pts);
+    }
+    println!(
+        "bench fig11_operator_sweep: {:.1} ms/iter ({reps} reps)",
+        t0.elapsed().as_secs_f64() / reps as f64 * 1e3
+    );
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerates Fig. 12 (model-level SPEED vs Ara on the six DNN
+//! benchmarks at 16/8/4-bit).
+//!
+//! Pass `--full` for the full-size networks (≈20 s of simulation across
+//! all 18 points); the default quick mode uses 1/4-scale feature maps.
+
+use std::time::Instant;
+
+use speed_rvv::config::SpeedConfig;
+use speed_rvv::report::fig12::fig12;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = SpeedConfig::reference();
+    println!("=== Fig. 12 — model-level performance ===\n");
+    let t0 = Instant::now();
+    println!("{}", fig12(&cfg, !full));
+    println!(
+        "bench fig12_model_suite{}: {:.1} s total (6 models x 3 precisions)",
+        if full { " (full)" } else { " (quick)" },
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerates Fig. 14 (27-point design-space exploration) plus the
+//! Table II / Fig. 13 / Table III analytical-model reports.
+
+use std::time::Instant;
+
+use speed_rvv::report::{fig13, fig14, table2, table3};
+
+fn main() {
+    println!("=== Table II — synthesis comparison ===\n{}", table2());
+    println!("=== Fig. 13 — area breakdown ===\n{}", fig13());
+    println!("=== Table III — state-of-the-art comparison ===\n{}", table3());
+
+    println!("=== Fig. 14 — design-space exploration ===\n");
+    let t0 = Instant::now();
+    let (text, points) = fig14();
+    println!("{text}");
+    println!(
+        "bench fig14_dse_sweep: {:.1} s for {} configurations",
+        t0.elapsed().as_secs_f64(),
+        points.len()
+    );
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerates Fig. 2 (INT16 MM instruction traces, SPEED vs Ara)
+//! and times the simulation of the SPEED trace.
+//!
+//! (The deployment image vendors no criterion; benches use a hand-rolled
+//! measure-and-report harness with warmup + repetitions.)
+
+use std::time::Instant;
+
+use speed_rvv::report::fig2::{fig2, fig2_data};
+
+fn bench<F: FnMut()>(name: &str, mut f: F) {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let reps = 50;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("bench {name}: {:.3} ms/iter ({reps} reps)", per * 1e3);
+}
+
+fn main() {
+    println!("=== Fig. 2 — INT16 MM instruction-trace comparison ===\n");
+    println!("{}", fig2());
+    bench("fig2_trace_sim", || {
+        let d = fig2_data();
+        assert!(d.speed_insns < d.ara_insns);
+        std::hint::black_box(d);
+    });
+}

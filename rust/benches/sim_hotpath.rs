@@ -1,0 +1,69 @@
+//! Bench: the simulator hot path itself (the L3 performance deliverable).
+//!
+//! Measures simulated-stages-per-second on a large CONV3×3 stream — the
+//! metric the EXPERIMENTS.md §Perf log tracks — plus instruction-stream
+//! generation throughput and the PJRT execute path when artifacts exist.
+
+use std::time::Instant;
+
+use speed_rvv::compiler::{execute_op, summarize_op, MemLayout};
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::isa::StrategyKind;
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::sim::Processor;
+
+fn main() {
+    let cfg = SpeedConfig::reference();
+    let op = OpDesc::conv(64, 64, 56, 56, 3, 1, 1, Precision::Int16);
+    let layout = MemLayout::for_op(&op, 1 << 26).unwrap();
+
+    // --- instruction-stream generation only (codegen throughput) --------
+    let t0 = Instant::now();
+    let reps = 5;
+    let mut summary = None;
+    for _ in 0..reps {
+        summary = Some(summarize_op(&op, &cfg, StrategyKind::Ffcs, &layout).unwrap());
+    }
+    let s = summary.unwrap();
+    let gen_per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "codegen: {:.1} ms for {} insns ({:.1} M insns/s)",
+        gen_per * 1e3,
+        s.total_insns,
+        s.total_insns as f64 / gen_per / 1e6
+    );
+
+    // --- full simulation (codegen + scoreboard + traffic) ---------------
+    let t0 = Instant::now();
+    let mut stats = None;
+    for _ in 0..reps {
+        let mut p = Processor::new(cfg, 1 << 26);
+        let (st, _) = execute_op(&mut p, &op, StrategyKind::Ffcs, layout, false).unwrap();
+        stats = Some(st);
+    }
+    let st = stats.unwrap();
+    let sim_per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "simulate: {:.1} ms for {} cycles / {} stages ({:.1} M insns/s, {:.1} M simcycles/s)",
+        sim_per * 1e3,
+        st.cycles,
+        s.total_stages,
+        s.total_insns as f64 / sim_per / 1e6,
+        st.cycles as f64 / sim_per / 1e6
+    );
+
+    // --- PJRT execute hot path (if artifacts built) ----------------------
+    if let Ok(mut engine) = speed_rvv::runtime::Engine::open("artifacts") {
+        let a: Vec<i32> = vec![1; 32 * 64];
+        let b: Vec<i32> = vec![1; 64 * 32];
+        let _ = engine.execute("mm_i8", &[a.clone(), b.clone()]).unwrap(); // warm
+        let t0 = Instant::now();
+        let reps = 200;
+        for _ in 0..reps {
+            let out = engine.execute("mm_i8", &[a.clone(), b.clone()]).unwrap();
+            std::hint::black_box(out);
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("pjrt_execute mm_i8: {:.2} ms/call ({reps} reps)", per * 1e3);
+    }
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerates Table I (complete-application VGG16 + MobileNetV2
+//! inference at INT8, conv-only and complete, vs Ara).
+//!
+//! Pass `--full` for the full 224×224 networks.
+
+use std::time::Instant;
+
+use speed_rvv::config::SpeedConfig;
+use speed_rvv::report::table1::table1;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = SpeedConfig::reference();
+    println!("=== Table I — complete-application inference ===\n");
+    let t0 = Instant::now();
+    println!("{}", table1(&cfg, !full));
+    println!(
+        "bench table1_apps{}: {:.1} s total",
+        if full { " (full)" } else { " (quick)" },
+        t0.elapsed().as_secs_f64()
+    );
+}

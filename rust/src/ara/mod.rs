@@ -1,0 +1,26 @@
+//! Ara baseline model (Perotti et al., ASAP'22 — the paper's comparison
+//! target for Figs. 2, 10, 11, 12 and Table I).
+//!
+//! Ara is the pioneering open-source RVV v1.0 processor: four 64-bit
+//! lanes, 16 KiB of VRF, official instructions only. Its relevant
+//! microarchitectural properties — as the SPEED paper exploits them — are:
+//!
+//! * **official RVV only**: no configuration/tensor instructions, so DNN
+//!   operators decompose into long `VLE`/`VMACC`/`VSE` sequences (Fig. 2);
+//! * **single-dimension parallelism**: `lanes × 64/SEW` MACs per cycle,
+//!   and no sub-byte support (4-bit workloads execute at 8-bit);
+//! * **no multi-broadcast loads**: every lane group re-fetches shared
+//!   data, and input rows survive across the output-channel sweep only
+//!   while they fit the architectural register file;
+//! * **deep lane pipeline**: dependent accumulation chains (`VMACC` into
+//!   the same destination) expose the writeback latency on short vectors
+//!   — the mechanism behind Ara's collapse on small tensors (Fig. 11).
+//!
+//! The model is *mechanistic* (instruction schedules with documented
+//! constants), not fitted: the constants below come from the Ara paper's
+//! published pipeline structure, and the single cross-check point is
+//! Fig. 2's 4.74 OPs/cycle INT16 MM trace (see `fig2` tests).
+
+pub mod model;
+
+pub use model::{ara_cost, AraCost, AraParams};

@@ -1,0 +1,27 @@
+//! Operator compiler: lowers a DNN operator + dataflow strategy to the
+//! SPEED instruction stream the paper's programs would contain (Figs. 2, 9).
+//!
+//! The compiler owns the loop orders that define each strategy's reuse:
+//!
+//! * **MM** — `for row_block { for k_chunk { load A; for col_tile { bcast
+//!   B; VSAM } } store rows }`: inputs reused across processing stages,
+//!   weights multi-broadcast, PE output-stationary across K chunks.
+//! * **FFCS** — `for fm_block { for c_chunk { bcast inputs (sliding rows);
+//!   for f_group { load W; VSAM } } store }`: inputs stream exactly once,
+//!   partial sums for *all* output channels of the block stay in the VRF
+//!   partial partition (spilled off-chip only when they cannot fit).
+//! * **CF** — `for f_group { for fm_row { bcast inputs; for c_chunk { load
+//!   W; VSAM } } store }`: accumulation lives in the PE across the whole
+//!   input-channel traversal (no partial traffic at all), at the cost of
+//!   re-streaming inputs once per output-channel group.
+//! * **FF** — per-channel feature-map streaming (DWCV: no cross-channel
+//!   accumulation whatsoever; CONV/PWCV ablation: partials round-trip the
+//!   result path once per channel pass).
+//!
+//! Every emitted program is *executable*: the cycle simulator runs it and
+//! the byte-accurate traffic of Fig. 10 and cycle counts of Figs. 11/12
+//! fall out of the simulation rather than closed-form estimates.
+
+pub mod codegen;
+
+pub use codegen::{compile_op, execute_op, summarize_op, CodegenSummary, CompiledOp, MemLayout};

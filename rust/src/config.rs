@@ -1,0 +1,258 @@
+//! Hardware configuration of a SPEED instance.
+//!
+//! SPEED is parameterized exactly as in the paper: a number of scalable
+//! modules (lanes), a per-lane MPTU tensor-core geometry (`#TILE_R` ×
+//! `#TILE_C`), a per-lane VRF capacity, and an operating frequency. The
+//! reference evaluation instance (Sec. IV-A) is 4 lanes, 2×2 tiles, 16 KiB
+//! VRF at 1.05 GHz; the Table III instance is 4 lanes with 8×4 tiles.
+
+
+
+/// Operand precision of the datapath. SPEED supports runtime switching
+/// between these via a single-cycle `VSACFG` update (Sec. II-E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 16-bit operands — PP = 1 MAC per PE per cycle.
+    Int16,
+    /// 8-bit operands — PP = 4 MACs per PE per cycle.
+    Int8,
+    /// 4-bit operands — PP = 16 MACs per PE per cycle.
+    Int4,
+}
+
+impl Precision {
+    /// Operand width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Int16 => 16,
+            Precision::Int8 => 8,
+            Precision::Int4 => 4,
+        }
+    }
+
+    /// Operand width in bytes as stored in VRF / external memory.
+    /// 4-bit operands are nibble-packed, two per byte.
+    pub fn bytes_num(self) -> u32 {
+        self.bits()
+    }
+
+    /// Bytes occupied by `n` operands (nibble packing for 4-bit).
+    pub fn bytes_for(self, n: u64) -> u64 {
+        (n * self.bits() as u64).div_ceil(8)
+    }
+
+    /// Parallelism-within-PE: how many MACs one PE performs per cycle.
+    /// Each PE holds sixteen 4-bit multipliers (Fig. 4): one 16-bit MAC,
+    /// four 8-bit MACs, or sixteen 4-bit MACs.
+    pub fn pp(self) -> u32 {
+        match self {
+            Precision::Int16 => 1,
+            Precision::Int8 => 4,
+            Precision::Int4 => 16,
+        }
+    }
+
+    /// Signed value range (inclusive).
+    pub fn range(self) -> (i32, i32) {
+        let b = self.bits();
+        (-(1 << (b - 1)), (1 << (b - 1)) - 1)
+    }
+
+    /// Clamp a value into this precision's range.
+    pub fn clamp(self, v: i32) -> i32 {
+        let (lo, hi) = self.range();
+        v.clamp(lo, hi)
+    }
+
+    pub fn from_bits(bits: u32) -> Option<Precision> {
+        match bits {
+            16 => Some(Precision::Int16),
+            8 => Some(Precision::Int8),
+            4 => Some(Precision::Int4),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Precision; 3] = [Precision::Int16, Precision::Int8, Precision::Int4];
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "INT{}", self.bits())
+    }
+}
+
+/// Full hardware configuration of one SPEED instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeedConfig {
+    /// Number of scalable modules (lanes). The paper evaluates 2 / 4 / 8.
+    pub lanes: u32,
+    /// MPTU tensor-core rows per lane (`#TILE_R`) — POI parallelism.
+    pub tile_r: u32,
+    /// MPTU tensor-core columns per lane (`#TILE_C`) — POW parallelism.
+    pub tile_c: u32,
+    /// Vector register file capacity per lane, KiB.
+    pub vrf_kib: u32,
+    /// Typical-corner operating frequency, GHz.
+    pub freq_ghz: f64,
+    /// External-memory bandwidth, bytes per processor cycle (AXI-style port).
+    pub mem_bw_bytes_per_cycle: u32,
+    /// External-memory access latency in cycles (first-word).
+    pub mem_latency: u32,
+}
+
+impl SpeedConfig {
+    /// The paper's operator/model evaluation instance (Sec. IV-A):
+    /// 4 lanes, 2×2 MPTU, 16 KiB VRF, 1.05 GHz — matched to Ara's
+    /// computational resources for the comparisons of Figs. 10–12.
+    pub fn reference() -> Self {
+        SpeedConfig {
+            lanes: 4,
+            tile_r: 2,
+            tile_c: 2,
+            vrf_kib: 16,
+            freq_ghz: 1.05,
+            // One 4-byte/cycle AXI-style port per lane (aggregate 16 B/cyc
+            // at 4 lanes) to the external SRAM-class memory of the paper's
+            // testbed; the VLDU pipelines bursts, so the exposed first-word
+            // latency is short.
+            mem_bw_bytes_per_cycle: 16,
+            mem_latency: 4,
+        }
+    }
+
+    /// The Table III instance: 4 lanes, TILE_R = 8, TILE_C = 4 — the
+    /// highest-area-efficiency configuration.
+    pub fn table3() -> Self {
+        SpeedConfig { tile_r: 8, tile_c: 4, ..Self::reference() }
+    }
+
+    /// A DSE point (Fig. 14): lanes ∈ {2,4,8}, tile_{r,c} ∈ {2,4,8}.
+    /// External-memory bandwidth scales with the lane count (one VLDU port
+    /// per scalable module), as in the reference instance.
+    pub fn dse(lanes: u32, tile_r: u32, tile_c: u32) -> Self {
+        SpeedConfig {
+            lanes,
+            tile_r,
+            tile_c,
+            mem_bw_bytes_per_cycle: 4 * lanes,
+            ..Self::reference()
+        }
+    }
+
+    /// Processing elements per lane.
+    pub fn pes_per_lane(&self) -> u32 {
+        self.tile_r * self.tile_c
+    }
+
+    /// Total PEs across all lanes.
+    pub fn total_pes(&self) -> u32 {
+        self.lanes * self.pes_per_lane()
+    }
+
+    /// Peak MACs per cycle at a precision (all PEs busy).
+    pub fn peak_macs_per_cycle(&self, p: Precision) -> u64 {
+        self.total_pes() as u64 * p.pp() as u64
+    }
+
+    /// Peak throughput in GOPS (1 MAC = 2 ops) at a precision.
+    pub fn peak_gops(&self, p: Precision) -> f64 {
+        self.peak_macs_per_cycle(p) as f64 * 2.0 * self.freq_ghz
+    }
+
+    /// VRF bytes per lane.
+    pub fn vrf_bytes(&self) -> u32 {
+        self.vrf_kib * 1024
+    }
+
+    /// Validate structural constraints (powers of two, supported ranges).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.lanes.is_power_of_two() || self.lanes == 0 || self.lanes > 16 {
+            return Err(format!("lanes must be a power of two in 1..=16, got {}", self.lanes));
+        }
+        for (name, v) in [("tile_r", self.tile_r), ("tile_c", self.tile_c)] {
+            if !v.is_power_of_two() || v == 0 || v > 16 {
+                return Err(format!("{name} must be a power of two in 1..=16, got {v}"));
+            }
+        }
+        if self.vrf_kib == 0 {
+            return Err("vrf_kib must be nonzero".into());
+        }
+        if self.freq_ghz <= 0.0 {
+            return Err("freq_ghz must be positive".into());
+        }
+        if self.mem_bw_bytes_per_cycle == 0 {
+            return Err("mem_bw_bytes_per_cycle must be nonzero".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for SpeedConfig {
+    fn default() -> Self {
+        Self::reference()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pp_matches_paper() {
+        assert_eq!(Precision::Int16.pp(), 1);
+        assert_eq!(Precision::Int8.pp(), 4);
+        assert_eq!(Precision::Int4.pp(), 16);
+    }
+
+    #[test]
+    fn precision_ranges() {
+        assert_eq!(Precision::Int4.range(), (-8, 7));
+        assert_eq!(Precision::Int8.range(), (-128, 127));
+        assert_eq!(Precision::Int16.range(), (-32768, 32767));
+    }
+
+    #[test]
+    fn nibble_packing() {
+        assert_eq!(Precision::Int4.bytes_for(3), 2);
+        assert_eq!(Precision::Int4.bytes_for(4), 2);
+        assert_eq!(Precision::Int8.bytes_for(3), 3);
+        assert_eq!(Precision::Int16.bytes_for(3), 6);
+    }
+
+    #[test]
+    fn reference_matches_paper_setup() {
+        let c = SpeedConfig::reference();
+        assert_eq!(c.lanes, 4);
+        assert_eq!((c.tile_r, c.tile_c), (2, 2));
+        assert_eq!(c.vrf_kib, 16);
+        // Matched to Ara's 16-bit peak: 4 lanes × 2×2 PEs × 1 PP × 2 ops
+        // = 32 ops/cycle, the same as Ara's 4×(64/16)×2.
+        assert_eq!(c.peak_macs_per_cycle(Precision::Int16), 16);
+    }
+
+    #[test]
+    fn table3_peak_gops_order_of_magnitude() {
+        // 4 lanes × 8×4 PEs × 16 PP × 2 × 1.05 GHz = 4300.8 GOPS theoretical
+        // peak; the paper's 737.9 GOPS is the *achieved* benchmark peak.
+        let c = SpeedConfig::table3();
+        assert_eq!(c.total_pes(), 128);
+        assert!((c.peak_gops(Precision::Int4) - 4300.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        assert!(SpeedConfig { lanes: 3, ..SpeedConfig::reference() }.validate().is_err());
+        assert!(SpeedConfig { tile_r: 0, ..SpeedConfig::reference() }.validate().is_err());
+        assert!(SpeedConfig { freq_ghz: 0.0, ..SpeedConfig::reference() }.validate().is_err());
+        assert!(SpeedConfig::reference().validate().is_ok());
+        assert!(SpeedConfig::table3().validate().is_ok());
+    }
+
+    #[test]
+    fn clamp_saturates() {
+        assert_eq!(Precision::Int8.clamp(1000), 127);
+        assert_eq!(Precision::Int8.clamp(-1000), -128);
+        assert_eq!(Precision::Int4.clamp(5), 5);
+    }
+}

@@ -1,0 +1,162 @@
+//! Result-path epilogues on the vector ALU.
+//!
+//! SPEED's MPTU produces 32-bit accumulators; quantized deployment
+//! requantizes them back to the operating precision (shift-round-clip)
+//! before the next layer. The paper routes this through the lane's vector
+//! ALU — this module emits that instruction stream, and the integration
+//! tests verify it bit-exactly against the AOT-compiled `requant_s7_i8`
+//! JAX/Pallas artifact via PJRT (the fourth leg of the golden agreement).
+
+use crate::config::{Precision, SpeedConfig};
+use crate::isa::{Insn, Vtype};
+
+// Scalar scratch registers (disjoint from the codegen set).
+const X_ADDR: u8 = 20;
+const X_VAL: u8 = 21;
+const X_VL: u8 = 22;
+
+// Vector registers: data + four splatted constants.
+const V_DATA: u8 = 24;
+const V_ROUND: u8 = 25;
+const V_SHIFT: u8 = 26;
+const V_HI: u8 = 27;
+const V_LO: u8 = 28;
+
+/// Emit a requantization program over `n` 32-bit accumulators at
+/// `in_addr`, writing requantized 32-bit values (clipped to the `bits`
+/// range, like the artifact) to `out_addr`.
+///
+/// Per chunk: `acc = clip((acc + (1 << (shift-1))) >> shift, lo, hi)` via
+/// `VADD`/`VSRA`/`VMIN`/`VMAX` — the exact arithmetic of
+/// `kernels/ref.py::requantize_ref`.
+pub fn requant_program(
+    cfg: &SpeedConfig,
+    n: u64,
+    shift: u32,
+    bits: u32,
+    in_addr: u64,
+    out_addr: u64,
+) -> Vec<Insn> {
+    let prec = Precision::from_bits(bits).expect("4/8/16-bit only");
+    let (lo, hi) = prec.range();
+    // Chunk so each lane stripe of i32 data fits one vreg region.
+    let chunk = (cfg.lanes as u64 * (cfg.vrf_bytes() as u64 / 32) / 4).min(n).max(1);
+
+    let mut prog = Vec::new();
+    let li = |prog: &mut Vec<Insn>, rd: u8, v: i64| {
+        prog.push(Insn::Addi { rd, rs1: 0, imm: v as i32 });
+    };
+    let setvl = |prog: &mut Vec<Insn>, vl: u64| {
+        li(prog, X_VL, vl as i64);
+        prog.push(Insn::Vsetvli { rd: 0, rs1: X_VL, vtype: Vtype::new(32) });
+    };
+
+    // Splat the constants once (full-chunk vl).
+    setvl(&mut prog, chunk);
+    if shift > 0 {
+        li(&mut prog, X_VAL, 1i64 << (shift - 1));
+        prog.push(Insn::Vmv { vd: V_ROUND, rs1: X_VAL });
+        li(&mut prog, X_VAL, shift as i64);
+        prog.push(Insn::Vmv { vd: V_SHIFT, rs1: X_VAL });
+    }
+    li(&mut prog, X_VAL, hi as i64);
+    prog.push(Insn::Vmv { vd: V_HI, rs1: X_VAL });
+    li(&mut prog, X_VAL, lo as i64);
+    prog.push(Insn::Vmv { vd: V_LO, rs1: X_VAL });
+
+    let mut done = 0u64;
+    while done < n {
+        let cur = chunk.min(n - done);
+        if cur != chunk {
+            // Tail chunk: re-splat constants at the shorter vl so the
+            // element-wise ops line up.
+            setvl(&mut prog, cur);
+            if shift > 0 {
+                li(&mut prog, X_VAL, 1i64 << (shift - 1));
+                prog.push(Insn::Vmv { vd: V_ROUND, rs1: X_VAL });
+                li(&mut prog, X_VAL, shift as i64);
+                prog.push(Insn::Vmv { vd: V_SHIFT, rs1: X_VAL });
+            }
+            li(&mut prog, X_VAL, hi as i64);
+            prog.push(Insn::Vmv { vd: V_HI, rs1: X_VAL });
+            li(&mut prog, X_VAL, lo as i64);
+            prog.push(Insn::Vmv { vd: V_LO, rs1: X_VAL });
+        }
+        li(&mut prog, X_ADDR, (in_addr + done * 4) as i64);
+        prog.push(Insn::Vle { vd: V_DATA, rs1: X_ADDR, eew: 32 });
+        if shift > 0 {
+            prog.push(Insn::Vadd { vd: V_DATA, vs1: V_DATA, vs2: V_ROUND });
+            prog.push(Insn::Vsra { vd: V_DATA, vs1: V_DATA, vs2: V_SHIFT });
+        }
+        prog.push(Insn::Vmin { vd: V_DATA, vs1: V_DATA, vs2: V_HI });
+        prog.push(Insn::Vmax { vd: V_DATA, vs1: V_DATA, vs2: V_LO });
+        li(&mut prog, X_ADDR, (out_addr + done * 4) as i64);
+        prog.push(Insn::Vse { vs3: V_DATA, rs1: X_ADDR, eew: 32 });
+        done += cur;
+    }
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Processor;
+
+    fn run_requant(acc: &[i32], shift: u32, bits: u32) -> Vec<i32> {
+        let cfg = SpeedConfig::reference();
+        let mut p = Processor::new(cfg, 1 << 20);
+        let in_addr = 0x100u64;
+        let out_addr = 0x8000u64;
+        for (i, &v) in acc.iter().enumerate() {
+            p.mem.preload(in_addr + 4 * i as u64, &v.to_le_bytes());
+        }
+        let prog = requant_program(&cfg, acc.len() as u64, shift, bits, in_addr, out_addr);
+        p.run(&prog).unwrap();
+        p.mem.inspect_i32(out_addr, acc.len())
+    }
+
+    fn requant_ref(acc: &[i32], shift: u32, bits: u32) -> Vec<i32> {
+        let prec = Precision::from_bits(bits).unwrap();
+        acc.iter()
+            .map(|&a| {
+                let v = if shift > 0 { (a + (1 << (shift - 1))) >> shift } else { a };
+                prec.clamp(v)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn requant_matches_reference_math() {
+        let acc: Vec<i32> = (-50..50).map(|i| i * 1_000_003).collect();
+        for (shift, bits) in [(0u32, 8u32), (7, 8), (7, 4), (12, 16), (1, 8)] {
+            assert_eq!(
+                run_requant(&acc, shift, bits),
+                requant_ref(&acc, shift, bits),
+                "shift={shift} bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn requant_saturates_extremes() {
+        let acc = vec![i32::MAX / 2, i32::MIN / 2, 0, 127, -128, 128, -129];
+        let got = run_requant(&acc, 0, 8);
+        assert_eq!(got, vec![127, -128, 0, 127, -128, 127, -128]);
+    }
+
+    #[test]
+    fn requant_handles_tail_chunks() {
+        // A length that is not a multiple of the chunk size.
+        let acc: Vec<i32> = (0..5000).map(|i| (i - 2500) * 77).collect();
+        assert_eq!(run_requant(&acc, 7, 8), requant_ref(&acc, 7, 8));
+    }
+
+    #[test]
+    fn requant_uses_the_vector_alu() {
+        let cfg = SpeedConfig::reference();
+        let mut p = Processor::new(cfg, 1 << 20);
+        let prog = requant_program(&cfg, 64, 7, 8, 0x100, 0x8000);
+        let st = p.run(&prog).unwrap();
+        assert!(st.fu_busy[crate::sim::Fu::Valu.index()] > 0, "VALU never used");
+    }
+}

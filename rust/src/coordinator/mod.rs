@@ -1,0 +1,240 @@
+//! Inference coordinator: schedules whole networks on SPEED.
+//!
+//! The coordinator is the deployment layer of Sec. IV-C: it walks a
+//! model's operator sequence, selects the dataflow strategy per operator
+//! (the paper's *mixed dataflow*: MM / FFCS / CF / FF by operator kind, or
+//! a fixed strategy for ablation), emits the `VSACFG` precision switches,
+//! executes every operator's instruction stream on the cycle simulator,
+//! and accounts the scalar-core share of the complete application
+//! (Table I). A thread-based sweep runner evaluates many (model,
+//! precision, config) points in parallel.
+
+pub mod epilogue;
+pub mod runner;
+
+use crate::ara::{ara_cost, AraParams};
+use crate::compiler::{execute_op, MemLayout};
+use crate::config::{Precision, SpeedConfig};
+use crate::isa::StrategyKind;
+use crate::models::zoo::Model;
+use crate::models::OpDesc;
+use crate::sim::{Processor, SimStats};
+
+/// Strategy selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's mixed dataflow: each operator uses its matched strategy.
+    Mixed,
+    /// Force one strategy for every applicable operator (ablation).
+    Fixed(StrategyKind),
+}
+
+impl Policy {
+    /// Strategy for an operator under this policy (None = not applicable,
+    /// the operator is skipped in ablation sweeps).
+    pub fn strategy_for(&self, op: &OpDesc) -> Option<StrategyKind> {
+        match self {
+            Policy::Mixed => Some(op.preferred_strategy()),
+            Policy::Fixed(s) => crate::dataflow::applicable(*s, op).then_some(*s),
+        }
+    }
+}
+
+/// Per-layer outcome.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    pub op: OpDesc,
+    pub strat: StrategyKind,
+    pub stats: SimStats,
+}
+
+/// Whole-model outcome on SPEED.
+#[derive(Debug, Clone)]
+pub struct ModelResult {
+    pub name: String,
+    pub prec: Precision,
+    pub layers: Vec<LayerResult>,
+    /// Merged vector-processor stats (cycles = Σ layer cycles).
+    pub total: SimStats,
+    /// Scalar-core cycles of the complete application (pooling, norms...).
+    pub scalar_cycles: u64,
+}
+
+impl ModelResult {
+    /// Vector-only cycles (the paper's "inference convolutional layers
+    /// only" rows in Table I).
+    pub fn vector_cycles(&self) -> u64 {
+        self.total.cycles
+    }
+
+    /// Complete-application cycles (vector + scalar core).
+    pub fn complete_cycles(&self) -> u64 {
+        self.total.cycles + self.scalar_cycles
+    }
+
+    pub fn ops_per_cycle(&self) -> f64 {
+        self.total.ops_per_cycle()
+    }
+
+    pub fn gops(&self, freq_ghz: f64) -> f64 {
+        self.total.gops(freq_ghz)
+    }
+}
+
+/// External-memory bytes a model execution needs (largest operator).
+pub fn mem_requirement(model: &Model) -> usize {
+    let mut need = 1u64 << 20;
+    for op in &model.ops {
+        let end = 256
+            + op.input_bytes()
+            + op.weight_bytes()
+            + 2 * op.output_bytes()
+            + 4096;
+        need = need.max(end);
+    }
+    need as usize
+}
+
+/// Run a model at a precision on a SPEED configuration.
+///
+/// Timing/traffic simulation only (`functional = false`): numerics of every
+/// operator class are certified separately against the AOT-compiled JAX
+/// artifacts (see `runtime::golden` and the integration tests).
+pub fn run_model(
+    model: &Model,
+    prec: Precision,
+    cfg: &SpeedConfig,
+    policy: Policy,
+) -> Result<ModelResult, String> {
+    let m = model.at_precision(prec);
+    let mut proc = Processor::new(*cfg, mem_requirement(&m));
+    let mut layers = Vec::with_capacity(m.ops.len());
+    let mut total = SimStats::default();
+    for op in &m.ops {
+        let Some(strat) = policy.strategy_for(op) else {
+            continue;
+        };
+        let layout = MemLayout::for_op(op, proc.mem.size())?;
+        let (stats, _) = execute_op(&mut proc, op, strat, layout, false)?;
+        total.merge(&stats);
+        layers.push(LayerResult { op: *op, strat, stats });
+    }
+    let scalar_cycles = (total.cycles as f64 * m.scalar_fraction) as u64;
+    Ok(ModelResult {
+        name: m.name.to_string(),
+        prec,
+        layers,
+        total,
+        scalar_cycles,
+    })
+}
+
+/// Ara cost of the same model (official RVV baseline). 4-bit runs at
+/// Ara's minimum SEW of 8 (no sub-byte support).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AraModelResult {
+    pub cycles: u64,
+    pub dram_bytes: u64,
+    pub insns: u64,
+}
+
+pub fn run_model_ara(model: &Model, prec: Precision, params: &AraParams) -> AraModelResult {
+    let m = model.at_precision(prec);
+    let mut out = AraModelResult::default();
+    for op in &m.ops {
+        let c = ara_cost(op, params);
+        out.cycles += c.cycles;
+        out.dram_bytes += c.dram_total();
+        out.insns += c.insns;
+    }
+    out
+}
+
+/// Ara complete-application cycles: the scalar-core share is the same
+/// absolute work as on SPEED (both couple to an equivalent scalar core —
+/// Table I adds ~equal scalar cycles to both columns).
+pub fn ara_complete_cycles(ara: &AraModelResult, speed: &ModelResult) -> u64 {
+    ara.cycles + speed.scalar_cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn tiny_model() -> Model {
+        Model {
+            name: "tiny",
+            ops: vec![
+                OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int8),
+                OpDesc::pwcv(8, 8, 10, 10, Precision::Int8),
+                OpDesc::dwcv(8, 10, 10, 3, 1, 1, Precision::Int8),
+                OpDesc::mm(10, 8, 12, Precision::Int8),
+            ],
+            scalar_fraction: 0.1,
+        }
+    }
+
+    #[test]
+    fn mixed_policy_assigns_matched_strategies() {
+        let m = tiny_model();
+        let r = run_model(&m, Precision::Int8, &SpeedConfig::reference(), Policy::Mixed)
+            .unwrap();
+        assert_eq!(r.layers.len(), 4);
+        assert_eq!(r.layers[0].strat, StrategyKind::Ffcs);
+        assert_eq!(r.layers[1].strat, StrategyKind::Cf);
+        assert_eq!(r.layers[2].strat, StrategyKind::Ff);
+        assert_eq!(r.layers[3].strat, StrategyKind::Mm);
+        assert!(r.total.cycles > 0);
+        assert_eq!(r.total.macs,
+            m.ops.iter().map(|o| o.total_macs()).sum::<u64>());
+        assert!(r.complete_cycles() > r.vector_cycles());
+    }
+
+    #[test]
+    fn fixed_policy_skips_inapplicable() {
+        let m = tiny_model();
+        let r = run_model(&m, Precision::Int8, &SpeedConfig::reference(),
+                          Policy::Fixed(StrategyKind::Cf)).unwrap();
+        // CF applies to CONV and PWCV only (not DWCV, not MM).
+        assert_eq!(r.layers.len(), 2);
+    }
+
+    #[test]
+    fn lower_precision_is_faster() {
+        let m = tiny_model();
+        let cfg = SpeedConfig::reference();
+        let c16 = run_model(&m, Precision::Int16, &cfg, Policy::Mixed).unwrap();
+        let c8 = run_model(&m, Precision::Int8, &cfg, Policy::Mixed).unwrap();
+        let c4 = run_model(&m, Precision::Int4, &cfg, Policy::Mixed).unwrap();
+        assert!(c8.vector_cycles() < c16.vector_cycles(),
+                "8b {} !< 16b {}", c8.vector_cycles(), c16.vector_cycles());
+        assert!(c4.vector_cycles() < c8.vector_cycles());
+    }
+
+    #[test]
+    fn speed_beats_ara_on_every_benchmark_model_precision() {
+        // The headline claim of Fig. 12, on a reduced-size proxy: use the
+        // tiny model to keep the test fast.
+        let m = tiny_model();
+        let cfg = SpeedConfig::reference();
+        let params = AraParams::default();
+        for prec in [Precision::Int16, Precision::Int8] {
+            let s = run_model(&m, prec, &cfg, Policy::Mixed).unwrap();
+            let a = run_model_ara(&m, prec, &params);
+            assert!(a.cycles > s.vector_cycles(),
+                    "{prec}: Ara {} !> SPEED {}", a.cycles, s.vector_cycles());
+        }
+    }
+
+    #[test]
+    fn mem_requirement_covers_all_models() {
+        for name in zoo::MODELS {
+            let m = zoo::model_by_name(name).unwrap();
+            let need = mem_requirement(&m);
+            for op in &m.ops {
+                assert!(MemLayout::for_op(op, need).is_ok(), "{name} {op:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Thread-based sweep runner: evaluates many (model, precision, config)
+//! points concurrently.
+//!
+//! The coordinator's sweeps (Fig. 12's 6 models × 3 precisions, Fig. 14's
+//! 27-point DSE) are embarrassingly parallel; each point owns its own
+//! `Processor`. (The deployment image is fully offline — no async runtime
+//! is vendored — so the runner uses `std::thread` scoped threads; see
+//! DESIGN.md "Substitutions".)
+
+use std::sync::mpsc;
+use std::thread;
+
+/// Run `jobs` across up to `workers` threads, preserving input order.
+pub fn run_parallel<T, R, F>(jobs: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let jobs: Vec<(usize, T)> = jobs.into_iter().enumerate().collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let jobs = &jobs;
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (idx, job) = &jobs[i];
+                let r = f(job);
+                if tx.send((*idx, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (idx, r) in rx {
+            out[idx] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("worker dropped a job")).collect()
+    })
+}
+
+/// Default worker count: physical parallelism minus one, at least 1.
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get().saturating_sub(1)).unwrap_or(1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_results() {
+        let jobs: Vec<u64> = (0..100).collect();
+        let out = run_parallel(jobs, 8, |&x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let out: Vec<u32> = run_parallel(Vec::<u32>::new(), 4, |&x| x);
+        assert!(out.is_empty());
+        let out = run_parallel(vec![7], 4, |&x| x + 1);
+        assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn more_workers_than_jobs_is_fine() {
+        let out = run_parallel(vec![1, 2, 3], 64, |&x| x * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn runs_simulations_in_parallel() {
+        use crate::config::{Precision, SpeedConfig};
+        use crate::coordinator::{run_model, Policy};
+        use crate::models::ops::OpDesc;
+        use crate::models::zoo::Model;
+
+        let model = Model {
+            name: "par",
+            ops: vec![OpDesc::conv(4, 8, 8, 8, 3, 1, 1, Precision::Int8)],
+            scalar_fraction: 0.0,
+        };
+        let jobs: Vec<Precision> = vec![Precision::Int16, Precision::Int8, Precision::Int4];
+        let out = run_parallel(jobs, 3, |&p| {
+            run_model(&model, p, &SpeedConfig::reference(), Policy::Mixed)
+                .unwrap()
+                .vector_cycles()
+        });
+        assert_eq!(out.len(), 3);
+        assert!(out[2] < out[0], "4-bit must beat 16-bit: {out:?}");
+    }
+}

@@ -1,0 +1,356 @@
+//! The mixed dataflow mapping method of Sec. III.
+//!
+//! Four strategies, each matched to an operator's compute/storage profile:
+//!
+//! * **MM** — matrix multiplication: weights multi-broadcast across lanes,
+//!   inputs reused across processing stages, PP packs the reduction dim.
+//! * **FFCS** (Feature-map-First-Channel-Second) — CONV: weights stay
+//!   stationary for N feature-map stages (OP1), then the walk steps along
+//!   the input-channel dimension (OP2); partial sums live in the VRF.
+//! * **CF** (Channel-First) — PWCV: the input-channel dimension is
+//!   traversed first so partial sums accumulate *inside the PE*, removing
+//!   the MPTU↔VRF partial traffic — at the cost of re-fetching weights per
+//!   feature-map tile when they exceed the VRF.
+//! * **FF** (Feature-map-First) — DWCV: channels are decoupled, inputs are
+//!   streamed exactly once, weights are tiny and resident.
+//!
+//! This module provides the *geometry* of each mapping — chunk sizes that
+//! respect the VRF budget, stage counts, and the applicability rules — and
+//! [`crate::compiler`] turns a mapping into the concrete instruction stream
+//! whose simulation yields the cycles and DRAM traffic of Figs. 10–12.
+
+use crate::config::{Precision, SpeedConfig};
+use crate::isa::StrategyKind;
+use crate::models::ops::{OpDesc, OpKind};
+
+/// Geometry of one strategy applied to one operator on one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Mapping {
+    pub strat: StrategyKind,
+    /// Input-channel (or reduction-dim) elements consumed per chunk.
+    pub chunk: u32,
+    /// Output-channel group processed per pass (lanes × TILE_C for
+    /// CONV/PWCV; lanes × PP channels for DWCV under FF).
+    pub group: u32,
+    /// MPTU stages (≈ cycles in EX steady state) for the whole operator,
+    /// including non-overlapped accumulation stages the strategy incurs.
+    pub total_stages: u64,
+    /// Whether partial sums fit the VRF partial partition (no DRAM spill).
+    pub partials_in_vrf: bool,
+}
+
+/// VRF partition budget per lane: the paper's VRF serves three concurrently
+/// accessible partitions (inputs / weights / results, Sec. III-C); each
+/// gets a third of the lane's capacity.
+pub fn partition_budget(cfg: &SpeedConfig) -> u32 {
+    cfg.vrf_bytes() / 3
+}
+
+/// Bytes one vector register region holds per lane (32 architectural regs).
+pub fn vreg_region(cfg: &SpeedConfig) -> u32 {
+    cfg.vrf_bytes() / 32
+}
+
+fn floor_to(v: u32, m: u32) -> u32 {
+    (v / m).max(1) * m
+}
+
+/// Is `strat` applicable to `op`? (Fig. 10: FFCS and CF are developed for
+/// computations along the input-channel dimension and are not applicable
+/// to DWCV; MM applies only to MM operators and vice versa.)
+pub fn applicable(strat: StrategyKind, op: &OpDesc) -> bool {
+    match (strat, op.kind) {
+        (StrategyKind::Mm, OpKind::Mm) => true,
+        (_, OpKind::Mm) | (StrategyKind::Mm, _) => false,
+        (StrategyKind::Ffcs | StrategyKind::Cf, OpKind::Dwcv) => false,
+        _ => true,
+    }
+}
+
+/// Compute the mapping geometry of `strat` over `op`.
+///
+/// Panics if the strategy is not applicable (callers check [`applicable`]).
+pub fn map_op(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Mapping {
+    assert!(applicable(strat, op), "{strat} not applicable to {}", op.kind);
+    match strat {
+        StrategyKind::Mm => map_mm(op, cfg),
+        StrategyKind::Ffcs => map_ffcs(op, cfg),
+        StrategyKind::Cf => map_cf(op, cfg),
+        StrategyKind::Ff => map_ff(op, cfg),
+    }
+}
+
+/// Reduction-dim chunk for MM: the A-tile (TILE_R × kc) and broadcast
+/// B-tile (kc × TILE_C) must each fit one vreg region.
+pub fn mm_k_chunk(op: &OpDesc, cfg: &SpeedConfig) -> u32 {
+    let pb = bytes_per_elem_x16(op.prec); // fixed-point x16 to handle nibbles
+    let region = vreg_region(cfg) * 16;
+    let by_a = region / (cfg.tile_r * pb);
+    let by_b = region / (cfg.tile_c * pb);
+    let pp = op.prec.pp();
+    floor_to(by_a.min(by_b).min(op.k).max(pp), pp).min(floor_to(op.k.max(pp), pp))
+}
+
+/// Channel chunk for convolutions: the per-lane weight slice
+/// (TILE_C × cc × K²) must fit one vreg region.
+pub fn conv_c_chunk(op: &OpDesc, cfg: &SpeedConfig) -> u32 {
+    let pb = bytes_per_elem_x16(op.prec);
+    let region = vreg_region(cfg) * 16;
+    let kk = op.ksize * op.ksize;
+    let fit = region / (cfg.tile_c * kk * pb);
+    let pp = op.prec.pp();
+    floor_to(fit.max(pp), pp).min(floor_to(op.c.max(pp), pp))
+}
+
+/// Bytes per element ×16 (so INT4's half-byte is exact integer arithmetic).
+fn bytes_per_elem_x16(p: Precision) -> u32 {
+    2 * p.bits() // 16 * bits/8
+}
+
+/// Channel chunk for FF on CONV/PWCV: *all* output channels' weights for
+/// the chunk (`(F/lanes) × cc × K²` per lane) must fit the VRF weight
+/// partition, so inputs and weights both stream exactly once.
+pub fn ff_c_chunk(op: &OpDesc, cfg: &SpeedConfig) -> u32 {
+    let pb = bytes_per_elem_x16(op.prec);
+    let kk = op.ksize * op.ksize;
+    let budget = partition_budget(cfg) * 16;
+    let per_lane_f = op.f.div_ceil(cfg.lanes).max(1);
+    let fit = budget / (per_lane_f * kk * pb).max(1);
+    let pp = op.prec.pp();
+    floor_to(fit.max(pp), pp).min(floor_to(op.c.max(pp), pp))
+}
+
+fn map_mm(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
+    let pp = op.prec.pp();
+    let kc = mm_k_chunk(op, cfg);
+    let row_blocks = op.m.div_ceil(cfg.lanes * cfg.tile_r) as u64;
+    let col_tiles = op.n.div_ceil(cfg.tile_c) as u64;
+    let kchunks = op.k.div_ceil(kc) as u64;
+    let stages_per_chunk = kc.div_ceil(pp) as u64;
+    // Last chunk may be smaller; compute exactly.
+    let last_kc = op.k - (kchunks as u32 - 1) * kc;
+    let stages_k = (kchunks - 1) * stages_per_chunk + last_kc.div_ceil(pp) as u64;
+    Mapping {
+        strat: StrategyKind::Mm,
+        chunk: kc,
+        group: cfg.lanes * cfg.tile_r,
+        total_stages: row_blocks * col_tiles * stages_k,
+        partials_in_vrf: true, // output-stationary in PE across K chunks
+    }
+}
+
+/// Does a per-lane partial image of `rows × OW × TILE_C` i32 fit the
+/// partial partition?
+fn conv_partials_fit(op: &OpDesc, cfg: &SpeedConfig) -> bool {
+    let per_lane = op.oh() as u64 * op.ow() as u64 * cfg.tile_c as u64 * 4;
+    per_lane <= partition_budget(cfg) as u64
+}
+
+fn map_ffcs(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
+    let pp = op.prec.pp();
+    let cc = conv_c_chunk(op, cfg);
+    let fgroups = op.f.div_ceil(cfg.lanes * cfg.tile_c) as u64;
+    let kk = (op.ksize * op.ksize) as u64;
+    let pixel_tiles = (op.oh() as u64) * (op.ow() as u64).div_ceil(cfg.tile_r as u64);
+    let cpasses = op.c.div_ceil(pp) as u64;
+    let mut stages = fgroups * pixel_tiles * cpasses * kk;
+    // Non-overlapped accumulation penalty: with a 1-cycle window walk
+    // (K == 1) every input-channel step's partial-sum round trip through
+    // the VRF cannot hide behind compute (Fig. 9's overlap needs ≥ 2
+    // cycles per stage burst) — Sec. III-B's "frequent VRF accesses ...
+    // dominate the overall computation time" for PWCV under FFCS.
+    if op.ksize == 1 {
+        stages += fgroups * pixel_tiles * cpasses;
+    }
+    Mapping {
+        strat: StrategyKind::Ffcs,
+        chunk: cc,
+        group: cfg.lanes * cfg.tile_c,
+        total_stages: stages,
+        partials_in_vrf: conv_partials_fit(op, cfg),
+    }
+}
+
+fn map_cf(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
+    let pp = op.prec.pp();
+    let cc = conv_c_chunk(op, cfg);
+    let fgroups = op.f.div_ceil(cfg.lanes * cfg.tile_c) as u64;
+    let kk = (op.ksize * op.ksize) as u64;
+    let pixel_tiles = (op.oh() as u64) * (op.ow() as u64).div_ceil(cfg.tile_r as u64);
+    let cpasses = op.c.div_ceil(pp) as u64;
+    // Channel-first: partials live in the PE across the whole C traversal —
+    // no accumulation stages, ever.
+    Mapping {
+        strat: StrategyKind::Cf,
+        chunk: cc,
+        group: cfg.lanes * cfg.tile_c,
+        total_stages: fgroups * pixel_tiles * cpasses * kk,
+        partials_in_vrf: true,
+    }
+}
+
+fn map_ff(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
+    let pp = op.prec.pp();
+    let kk = (op.ksize * op.ksize) as u64;
+    if op.kind == OpKind::Dwcv {
+        // Channels decoupled: lanes × PP channels per group; POI × POW both
+        // cover feature-map pixels.
+        let cgroups = op.c.div_ceil(cfg.lanes * pp) as u64;
+        let pixel_tiles =
+            (op.oh() as u64) * (op.ow() as u64).div_ceil((cfg.tile_r * cfg.tile_c) as u64);
+        Mapping {
+            strat: StrategyKind::Ff,
+            chunk: pp,
+            group: cfg.lanes * pp,
+            total_stages: cgroups * pixel_tiles * kk,
+            partials_in_vrf: true, // no cross-channel accumulation at all
+        }
+    } else {
+        // FF applied to CONV/PWCV (ablation arm of Figs. 10/11): inputs and
+        // weights are streamed exactly once (all output channels' weights
+        // resident per channel chunk), but like FFCS the K == 1 case cannot
+        // hide the per-channel-pass partial round trip.
+        let cc = ff_c_chunk(op, cfg);
+        let fgroups = op.f.div_ceil(cfg.lanes * cfg.tile_c) as u64;
+        let pixel_tiles = (op.oh() as u64) * (op.ow() as u64).div_ceil(cfg.tile_r as u64);
+        let cpasses = op.c.div_ceil(pp) as u64;
+        let mut stages = fgroups * pixel_tiles * cpasses * kk;
+        if op.ksize == 1 {
+            stages += fgroups * pixel_tiles * cpasses;
+        }
+        Mapping {
+            strat: StrategyKind::Ff,
+            chunk: cc,
+            group: cfg.lanes * cfg.tile_c,
+            total_stages: stages,
+            partials_in_vrf: conv_partials_fit(op, cfg),
+        }
+    }
+}
+
+/// Kseg decomposition (Sec. II-B): kernels larger than 15 are split into
+/// sub-kernels no larger than 15, each a separate CONV whose partial sums
+/// compose. Returns the sub-kernel sizes along one axis.
+pub fn kseg_decompose(ksize: u32) -> Vec<u32> {
+    if ksize <= 15 {
+        return vec![ksize];
+    }
+    let mut rest = ksize;
+    let mut out = Vec::new();
+    while rest > 15 {
+        out.push(15);
+        rest -= 15;
+    }
+    out.push(rest);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+
+    fn cfg() -> SpeedConfig {
+        SpeedConfig::reference()
+    }
+
+    #[test]
+    fn applicability_matrix_matches_paper() {
+        let conv = OpDesc::conv(8, 16, 12, 12, 3, 1, 1, Precision::Int16);
+        let pwcv = OpDesc::pwcv(16, 32, 8, 8, Precision::Int16);
+        let dwcv = OpDesc::dwcv(8, 13, 13, 3, 2, 1, Precision::Int16);
+        let mm = OpDesc::mm(4, 8, 8, Precision::Int16);
+        // FFCS/CF not applicable to DWCV (Fig. 10 caption).
+        assert!(!applicable(StrategyKind::Ffcs, &dwcv));
+        assert!(!applicable(StrategyKind::Cf, &dwcv));
+        assert!(applicable(StrategyKind::Ff, &dwcv));
+        // All three conv strategies apply to CONV / PWCV.
+        for s in [StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff] {
+            assert!(applicable(s, &conv));
+            assert!(applicable(s, &pwcv));
+        }
+        // MM only for MM.
+        assert!(applicable(StrategyKind::Mm, &mm));
+        assert!(!applicable(StrategyKind::Ffcs, &mm));
+        assert!(!applicable(StrategyKind::Mm, &conv));
+    }
+
+    #[test]
+    fn mm_stage_count_exact_small() {
+        // Fig. 2 workload: 4x8 MM @16b on 2 lanes of 2x2 tiles:
+        // row_blocks = ceil(4/4)=1, col_tiles = ceil(8/2)=4, K=8 PP=1.
+        let c = SpeedConfig { lanes: 2, ..cfg() };
+        let op = OpDesc::mm(4, 8, 8, Precision::Int16);
+        let m = map_op(&op, &c, StrategyKind::Mm);
+        assert_eq!(m.total_stages, 1 * 4 * 8);
+        assert!(m.partials_in_vrf);
+    }
+
+    #[test]
+    fn mm_stages_scale_with_pp() {
+        let op16 = OpDesc::mm(16, 64, 16, Precision::Int16);
+        let op4 = OpDesc::mm(16, 64, 16, Precision::Int4);
+        let s16 = map_op(&op16, &cfg(), StrategyKind::Mm).total_stages;
+        let s4 = map_op(&op4, &cfg(), StrategyKind::Mm).total_stages;
+        // 4-bit packs 16 MACs/PE/cycle vs 1 at 16-bit: 16x fewer stages.
+        assert_eq!(s16, 16 * s4);
+    }
+
+    #[test]
+    fn ffcs_pwcv_pays_accumulation_penalty_cf_does_not() {
+        let op = OpDesc::pwcv(64, 64, 12, 12, Precision::Int16);
+        let ffcs = map_op(&op, &cfg(), StrategyKind::Ffcs);
+        let cf = map_op(&op, &cfg(), StrategyKind::Cf);
+        assert!(ffcs.total_stages > cf.total_stages,
+                "FFCS {} vs CF {}", ffcs.total_stages, cf.total_stages);
+    }
+
+    #[test]
+    fn cf_and_ffcs_equal_on_k3(){
+        let op = OpDesc::conv(16, 16, 12, 12, 3, 1, 1, Precision::Int16);
+        let ffcs = map_op(&op, &cfg(), StrategyKind::Ffcs);
+        let cf = map_op(&op, &cfg(), StrategyKind::Cf);
+        assert_eq!(ffcs.total_stages, cf.total_stages);
+    }
+
+    #[test]
+    fn dwcv_ff_uses_both_tile_dims_for_pixels() {
+        let op = OpDesc::dwcv(8, 13, 13, 3, 2, 1, Precision::Int16);
+        let m = map_op(&op, &cfg(), StrategyKind::Ff);
+        // cgroups = ceil(8/(4*1)) = 2; pixel tiles = 7 * ceil(7/4) = 14; k²=9
+        assert_eq!(m.total_stages, 2 * 14 * 9);
+    }
+
+    #[test]
+    fn chunks_respect_vrf_and_pp() {
+        for prec in Precision::ALL {
+            let op = OpDesc::conv(256, 256, 56, 56, 3, 1, 1, prec);
+            let cc = conv_c_chunk(&op, &cfg());
+            assert_eq!(cc % prec.pp(), 0);
+            let per_lane_weight_bits =
+                cfg().tile_c * cc * 9 * prec.bits();
+            assert!(per_lane_weight_bits / 8 <= vreg_region(&cfg()),
+                    "{prec}: weight slice {} B > region", per_lane_weight_bits / 8);
+            let mm = OpDesc::mm(64, 4096, 64, prec);
+            let kc = mm_k_chunk(&mm, &cfg());
+            assert_eq!(kc % prec.pp(), 0);
+        }
+    }
+
+    #[test]
+    fn kseg_splits_large_kernels() {
+        assert_eq!(kseg_decompose(3), vec![3]);
+        assert_eq!(kseg_decompose(15), vec![15]);
+        assert_eq!(kseg_decompose(16), vec![15, 1]);
+        assert_eq!(kseg_decompose(31), vec![15, 15, 1]);
+        assert_eq!(kseg_decompose(45).iter().sum::<u32>(), 45);
+    }
+
+    #[test]
+    fn big_fmap_spills_partials_small_does_not() {
+        let small = OpDesc::conv(8, 16, 12, 12, 3, 1, 1, Precision::Int16);
+        let big = OpDesc::conv(64, 64, 112, 112, 3, 1, 1, Precision::Int16);
+        assert!(map_op(&small, &cfg(), StrategyKind::Ffcs).partials_in_vrf);
+        assert!(!map_op(&big, &cfg(), StrategyKind::Ffcs).partials_in_vrf);
+    }
+}

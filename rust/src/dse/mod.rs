@@ -1,0 +1,92 @@
+//! Design-space exploration (Fig. 14): lanes ∈ {2,4,8} × TILE_{R,C} ∈
+//! {2,4,8}², evaluated on the CONV3×3 16-bit workload, reporting achieved
+//! throughput (GOPS) and area efficiency (GOPS/mm²).
+
+use crate::compiler::{execute_op, MemLayout};
+use crate::config::{Precision, SpeedConfig};
+use crate::coordinator::runner::{default_workers, run_parallel};
+use crate::isa::StrategyKind;
+use crate::metrics::speed_area;
+use crate::models::ops::OpDesc;
+use crate::sim::Processor;
+
+/// One evaluated DSE point.
+#[derive(Debug, Clone, Copy)]
+pub struct DsePoint {
+    pub cfg: SpeedConfig,
+    pub gops: f64,
+    pub area_mm2: f64,
+}
+
+impl DsePoint {
+    pub fn area_eff(&self) -> f64 {
+        self.gops / self.area_mm2
+    }
+}
+
+/// The Fig. 14 workload: a representative 16-bit CONV3×3 layer.
+pub fn dse_workload() -> OpDesc {
+    OpDesc::conv(64, 64, 32, 32, 3, 1, 1, Precision::Int16)
+}
+
+/// Evaluate one configuration on the DSE workload.
+pub fn eval_point(cfg: &SpeedConfig, op: &OpDesc) -> Result<DsePoint, String> {
+    let mut proc = Processor::new(*cfg, 1 << 24);
+    let layout = MemLayout::for_op(op, 1 << 24)?;
+    let (stats, _) = execute_op(&mut proc, op, StrategyKind::Ffcs, layout, false)?;
+    Ok(DsePoint {
+        cfg: *cfg,
+        gops: stats.gops(cfg.freq_ghz),
+        area_mm2: speed_area(cfg).total(),
+    })
+}
+
+/// The full 27-point sweep (3 lane counts × 3 × 3 tile geometries).
+pub fn sweep() -> Vec<DsePoint> {
+    let mut cfgs = Vec::new();
+    for lanes in [2u32, 4, 8] {
+        for tr in [2u32, 4, 8] {
+            for tc in [2u32, 4, 8] {
+                cfgs.push(SpeedConfig::dse(lanes, tr, tc));
+            }
+        }
+    }
+    let op = dse_workload();
+    run_parallel(cfgs, default_workers(), |cfg| {
+        eval_point(cfg, &op).expect("DSE point failed")
+    })
+}
+
+/// Peak-area-efficiency point of a sweep.
+pub fn peak_area_eff(points: &[DsePoint]) -> DsePoint {
+    *points
+        .iter()
+        .max_by(|a, b| a.area_eff().partial_cmp(&b.area_eff()).unwrap())
+        .expect("empty sweep")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_grows_with_lanes() {
+        let op = dse_workload();
+        let small = eval_point(&SpeedConfig::dse(2, 2, 2), &op).unwrap();
+        let big = eval_point(&SpeedConfig::dse(8, 4, 4), &op).unwrap();
+        assert!(big.gops > small.gops, "{} !> {}", big.gops, small.gops);
+        assert!(big.area_mm2 > small.area_mm2);
+    }
+
+    #[test]
+    fn gops_within_theoretical_peak() {
+        let op = dse_workload();
+        for lanes in [2u32, 4] {
+            let cfg = SpeedConfig::dse(lanes, 2, 2);
+            let p = eval_point(&cfg, &op).unwrap();
+            assert!(p.gops <= cfg.peak_gops(Precision::Int16) + 1e-9,
+                    "{} > peak {}", p.gops, cfg.peak_gops(Precision::Int16));
+            assert!(p.gops > 0.2 * cfg.peak_gops(Precision::Int16));
+        }
+    }
+}

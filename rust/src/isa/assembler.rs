@@ -1,0 +1,347 @@
+//! Text assembler for the SPEED instruction subset.
+//!
+//! Mirrors the inline-assembly programming model of Sec. II-B: programs are
+//! written as vector-instruction sequences (plus scalar `li`/`addi` for
+//! address setup) and assembled to 32-bit words. Syntax follows standard
+//! RISC-V conventions with the custom mnemonics used throughout the paper:
+//!
+//! ```text
+//! li        x1, 0x1000
+//! vsetvli   x0, x2, e16
+//! vsacfg    x3, prec=16, k=3, strat=ffcs
+//! vsacfg.dim x0, x4, dim=m
+//! vsald     v0, (x1), bcast, w=cfg
+//! vle16.v   v4, (x2)
+//! vsam      v8, v0, v4, stages=4
+//! vse16.v   v8, (x3)
+//! ```
+//!
+//! `#`/`//` comments and blank lines are ignored.
+
+use super::insn::{Dim, Insn, LdMode, StrategyKind, Vtype, WidthSel};
+use crate::config::Precision;
+
+/// Assembly error with 1-based line information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+/// Assemble a full program (one instruction per line).
+pub fn assemble(src: &str) -> Result<Vec<Insn>, AsmError> {
+    let mut out = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let line = idx + 1;
+        let text = raw.split('#').next().unwrap_or("");
+        let text = text.split("//").next().unwrap_or("").trim();
+        if text.is_empty() {
+            continue;
+        }
+        out.push(assemble_line(text).map_err(|msg| AsmError { line, msg })?);
+    }
+    Ok(out)
+}
+
+/// Assemble a single instruction (no comments / blank input).
+pub fn assemble_line(text: &str) -> Result<Insn, String> {
+    let (mnemonic, rest) = match text.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r.trim()),
+        None => (text, ""),
+    };
+    let args: Vec<&str> = if rest.is_empty() {
+        vec![]
+    } else {
+        rest.split(',').map(|a| a.trim()).collect()
+    };
+    let nargs = args.len();
+    let wrong = |want: usize| format!("{mnemonic}: expected {want} operands, got {nargs}");
+
+    match mnemonic {
+        "li" => {
+            if nargs != 2 {
+                return Err(wrong(2));
+            }
+            Ok(Insn::Addi { rd: xreg(args[0])?, rs1: 0, imm: imm12(args[1])? })
+        }
+        "addi" => {
+            if nargs != 3 {
+                return Err(wrong(3));
+            }
+            Ok(Insn::Addi { rd: xreg(args[0])?, rs1: xreg(args[1])?, imm: imm12(args[2])? })
+        }
+        "vsetvli" => {
+            if nargs != 3 {
+                return Err(wrong(3));
+            }
+            let sew = args[2]
+                .strip_prefix('e')
+                .and_then(|s| s.parse::<u32>().ok())
+                .ok_or_else(|| format!("bad sew spec '{}'", args[2]))?;
+            Ok(Insn::Vsetvli { rd: xreg(args[0])?, rs1: xreg(args[1])?, vtype: Vtype::new(sew) })
+        }
+        m if m.starts_with("vle") && m.ends_with(".v") => {
+            if nargs != 2 {
+                return Err(wrong(2));
+            }
+            let eew = eew_of(m, "vle")?;
+            Ok(Insn::Vle { vd: vreg(args[0])?, rs1: memop(args[1])?, eew })
+        }
+        m if m.starts_with("vse") && m.ends_with(".v") && m != "vsetvli" => {
+            if nargs != 2 {
+                return Err(wrong(2));
+            }
+            let eew = eew_of(m, "vse")?;
+            Ok(Insn::Vse { vs3: vreg(args[0])?, rs1: memop(args[1])?, eew })
+        }
+        "vmacc.vv" => triple(args, |vd, vs1, vs2| Insn::Vmacc { vd, vs1, vs2 }),
+        "vmul.vv" => triple(args, |vd, vs1, vs2| Insn::Vmul { vd, vs1, vs2 }),
+        "vadd.vv" => triple(args, |vd, vs1, vs2| Insn::Vadd { vd, vs1, vs2 }),
+        "vsub.vv" => triple(args, |vd, vs1, vs2| Insn::Vsub { vd, vs1, vs2 }),
+        "vmax.vv" => triple(args, |vd, vs1, vs2| Insn::Vmax { vd, vs1, vs2 }),
+        "vmin.vv" => triple(args, |vd, vs1, vs2| Insn::Vmin { vd, vs1, vs2 }),
+        "vsra.vv" => triple(args, |vd, vs1, vs2| Insn::Vsra { vd, vs1, vs2 }),
+        "vmv.v.x" => {
+            if nargs != 2 {
+                return Err(wrong(2));
+            }
+            Ok(Insn::Vmv { vd: vreg(args[0])?, rs1: xreg(args[1])? })
+        }
+        "vsacfg" => {
+            if nargs < 2 {
+                return Err("vsacfg: expected rd plus prec=/k=/strat= fields".into());
+            }
+            let rd = xreg(args[0])?;
+            let mut prec = Precision::Int8;
+            let mut k = 1u32;
+            let mut strat = StrategyKind::Mm;
+            let mut uimm = 0u8;
+            for a in &args[1..] {
+                if let Some(v) = a.strip_prefix("prec=") {
+                    let bits: u32 = v.parse().map_err(|_| format!("bad prec '{v}'"))?;
+                    prec = Precision::from_bits(bits).ok_or(format!("bad prec '{v}'"))?;
+                } else if let Some(v) = a.strip_prefix("k=") {
+                    k = v.parse().map_err(|_| format!("bad k '{v}'"))?;
+                    if k > 15 {
+                        return Err(format!("k={k} exceeds 15; apply Kseg decomposition"));
+                    }
+                } else if let Some(v) = a.strip_prefix("strat=") {
+                    strat = strat_of(v)?;
+                } else if let Some(v) = a.strip_prefix("uimm=") {
+                    uimm = v.parse().map_err(|_| format!("bad uimm '{v}'"))?;
+                } else {
+                    return Err(format!("vsacfg: unknown field '{a}'"));
+                }
+            }
+            Ok(Insn::Vsacfg { rd, zimm: Insn::pack_cfg(prec, k, strat), uimm })
+        }
+        "vsacfg.dim" => {
+            if nargs != 3 {
+                return Err(wrong(3));
+            }
+            let dim = args[2]
+                .strip_prefix("dim=")
+                .ok_or_else(|| format!("expected dim=<name>, got '{}'", args[2]))?;
+            Ok(Insn::VsacfgDim { rd: xreg(args[0])?, rs1: xreg(args[1])?, dim: dim_of(dim)? })
+        }
+        "vsald" => {
+            if nargs < 2 {
+                return Err("vsald: expected vd, (rs1) [, bcast|seq] [, w=...]".into());
+            }
+            let vd = vreg(args[0])?;
+            let rs1 = memop(args[1])?;
+            let mut mode = LdMode::Sequential;
+            let mut width = WidthSel::FromCfg;
+            for a in &args[2..] {
+                match *a {
+                    "bcast" | "broadcast" => mode = LdMode::Broadcast,
+                    "seq" | "sequential" => mode = LdMode::Sequential,
+                    _ => {
+                        if let Some(v) = a.strip_prefix("w=") {
+                            width = match v {
+                                "cfg" => WidthSel::FromCfg,
+                                "4" => WidthSel::Explicit(Precision::Int4),
+                                "8" => WidthSel::Explicit(Precision::Int8),
+                                "16" => WidthSel::Explicit(Precision::Int16),
+                                _ => return Err(format!("bad width '{v}'")),
+                            };
+                        } else {
+                            return Err(format!("vsald: unknown field '{a}'"));
+                        }
+                    }
+                }
+            }
+            Ok(Insn::Vsald { vd, rs1, mode, width })
+        }
+        "vsam" | "vsac" => {
+            if nargs != 4 {
+                return Err(wrong(4));
+            }
+            let stages: u8 = args[3]
+                .strip_prefix("stages=")
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("expected stages=<n>, got '{}'", args[3]))?;
+            let (vd, vs1, vs2) = (vreg(args[0])?, vreg(args[1])?, vreg(args[2])?);
+            if mnemonic == "vsam" {
+                Ok(Insn::Vsam { vd, vs1, vs2, stages })
+            } else {
+                Ok(Insn::Vsac { vd, vs1, vs2, stages })
+            }
+        }
+        _ => Err(format!("unknown mnemonic '{mnemonic}'")),
+    }
+}
+
+fn triple(args: Vec<&str>, f: impl Fn(u8, u8, u8) -> Insn) -> Result<Insn, String> {
+    if args.len() != 3 {
+        return Err(format!("expected 3 operands, got {}", args.len()));
+    }
+    Ok(f(vreg(args[0])?, vreg(args[1])?, vreg(args[2])?))
+}
+
+fn eew_of(m: &str, prefix: &str) -> Result<u32, String> {
+    m.strip_prefix(prefix)
+        .and_then(|s| s.strip_suffix(".v"))
+        .and_then(|s| s.parse::<u32>().ok())
+        .filter(|e| [8, 16, 32, 64].contains(e))
+        .ok_or_else(|| format!("bad element width in '{m}'"))
+}
+
+fn strat_of(s: &str) -> Result<StrategyKind, String> {
+    match s {
+        "mm" => Ok(StrategyKind::Mm),
+        "ffcs" => Ok(StrategyKind::Ffcs),
+        "cf" => Ok(StrategyKind::Cf),
+        "ff" => Ok(StrategyKind::Ff),
+        _ => Err(format!("unknown strategy '{s}'")),
+    }
+}
+
+fn dim_of(s: &str) -> Result<Dim, String> {
+    match s {
+        "m" => Ok(Dim::M),
+        "k" => Ok(Dim::K),
+        "n" => Ok(Dim::N),
+        "c" => Ok(Dim::C),
+        "f" => Ok(Dim::F),
+        "h" => Ok(Dim::H),
+        "w" => Ok(Dim::W),
+        "stride" => Ok(Dim::Stride),
+        "nstages" => Ok(Dim::NStages),
+        _ => Err(format!("unknown dim '{s}'")),
+    }
+}
+
+fn xreg(s: &str) -> Result<u8, String> {
+    reg(s, 'x')
+}
+
+fn vreg(s: &str) -> Result<u8, String> {
+    reg(s, 'v')
+}
+
+fn reg(s: &str, kind: char) -> Result<u8, String> {
+    let body = s
+        .strip_prefix(kind)
+        .ok_or_else(|| format!("expected {kind}-register, got '{s}'"))?;
+    let n: u8 = body.parse().map_err(|_| format!("bad register '{s}'"))?;
+    if n > 31 {
+        return Err(format!("register index out of range: '{s}'"));
+    }
+    Ok(n)
+}
+
+fn memop(s: &str) -> Result<u8, String> {
+    let inner = s
+        .strip_prefix('(')
+        .and_then(|t| t.strip_suffix(')'))
+        .ok_or_else(|| format!("expected (xN) memory operand, got '{s}'"))?;
+    xreg(inner)
+}
+
+fn imm12(s: &str) -> Result<i32, String> {
+    let v = if let Some(hex) = s.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16).map_err(|_| format!("bad immediate '{s}'"))?
+    } else if let Some(hex) = s.strip_prefix("-0x") {
+        -i64::from_str_radix(hex, 16).map_err(|_| format!("bad immediate '{s}'"))?
+    } else {
+        s.parse::<i64>().map_err(|_| format!("bad immediate '{s}'"))?
+    };
+    if !(-2048..=2047).contains(&v) {
+        return Err(format!("immediate {v} out of 12-bit range"));
+    }
+    Ok(v as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encoding::{decode, encode};
+
+    #[test]
+    fn assemble_fig2_style_program() {
+        let src = r#"
+            # Fig. 2 — SPEED instruction stream for an INT16 MM
+            li         x1, 0x100
+            li         x2, 0x200
+            li         x3, 0x300
+            vsetvli    x0, x2, e16
+            vsacfg     x4, prec=16, k=1, strat=mm
+            vsald      v0, (x1), bcast, w=cfg
+            vsald      v4, (x2), seq, w=16
+            vsam       v8, v0, v4, stages=4
+            vse16.v    v8, (x3)
+        "#;
+        let prog = assemble(src).unwrap();
+        assert_eq!(prog.len(), 9);
+        assert!(matches!(prog[4], Insn::Vsacfg { .. }));
+        assert!(matches!(
+            prog[5],
+            Insn::Vsald { mode: LdMode::Broadcast, width: WidthSel::FromCfg, .. }
+        ));
+        assert!(matches!(prog[7], Insn::Vsam { stages: 4, .. }));
+    }
+
+    #[test]
+    fn asm_encode_decode_roundtrip() {
+        let src = "vsacfg.dim x0, x5, dim=k\nvmacc.vv v8, v0, v4\nvle8.v v1, (x7)\naddi x3, x3, -16";
+        for insn in assemble(src).unwrap() {
+            assert_eq!(decode(encode(&insn)).unwrap(), insn);
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = assemble("li x1, 5\nbogus x1").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("bogus"));
+    }
+
+    #[test]
+    fn rejects_oversize_kernel() {
+        let e = assemble_line("vsacfg x1, prec=8, k=16, strat=ffcs").unwrap_err();
+        assert!(e.contains("Kseg"));
+    }
+
+    #[test]
+    fn rejects_bad_regs() {
+        assert!(assemble_line("vmacc.vv v32, v0, v1").is_err());
+        assert!(assemble_line("li v1, 5").is_err());
+        assert!(assemble_line("vle16.v v1, x3").is_err());
+        assert!(assemble_line("li x1, 99999").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let prog = assemble("\n# full comment\nli x1, 1 // trailing\n\n").unwrap();
+        assert_eq!(prog.len(), 1);
+    }
+}

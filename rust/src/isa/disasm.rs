@@ -1,0 +1,106 @@
+//! Disassembler: decoded instructions back to the assembler's text syntax.
+//!
+//! `assemble(disassemble(i)) == i` for every supported instruction — the
+//! round-trip property is enforced by tests here and by the proptest suite.
+
+use super::insn::{Insn, LdMode, WidthSel};
+use crate::config::Precision;
+
+/// Render one instruction in the assembler's syntax.
+pub fn disassemble(insn: &Insn) -> String {
+    match *insn {
+        Insn::Addi { rd, rs1, imm } => {
+            if rs1 == 0 {
+                format!("li x{rd}, {imm}")
+            } else {
+                format!("addi x{rd}, x{rs1}, {imm}")
+            }
+        }
+        Insn::Vsetvli { rd, rs1, vtype } => format!("vsetvli x{rd}, x{rs1}, e{}", vtype.sew),
+        Insn::Vle { vd, rs1, eew } => format!("vle{eew}.v v{vd}, (x{rs1})"),
+        Insn::Vse { vs3, rs1, eew } => format!("vse{eew}.v v{vs3}, (x{rs1})"),
+        Insn::Vmacc { vd, vs1, vs2 } => format!("vmacc.vv v{vd}, v{vs1}, v{vs2}"),
+        Insn::Vmul { vd, vs1, vs2 } => format!("vmul.vv v{vd}, v{vs1}, v{vs2}"),
+        Insn::Vadd { vd, vs1, vs2 } => format!("vadd.vv v{vd}, v{vs1}, v{vs2}"),
+        Insn::Vsub { vd, vs1, vs2 } => format!("vsub.vv v{vd}, v{vs1}, v{vs2}"),
+        Insn::Vmax { vd, vs1, vs2 } => format!("vmax.vv v{vd}, v{vs1}, v{vs2}"),
+        Insn::Vmin { vd, vs1, vs2 } => format!("vmin.vv v{vd}, v{vs1}, v{vs2}"),
+        Insn::Vsra { vd, vs1, vs2 } => format!("vsra.vv v{vd}, v{vs1}, v{vs2}"),
+        Insn::Vmv { vd, rs1 } => format!("vmv.v.x v{vd}, x{rs1}"),
+        Insn::Vsacfg { rd, zimm, uimm } => match Insn::unpack_cfg(zimm) {
+            Some((prec, k, strat)) => {
+                if uimm == 0 {
+                    format!("vsacfg x{rd}, prec={}, k={k}, strat={strat}", prec.bits())
+                } else {
+                    format!("vsacfg x{rd}, prec={}, k={k}, strat={strat}, uimm={uimm}", prec.bits())
+                }
+            }
+            None => format!("vsacfg x{rd}, uimm={uimm} # raw zimm={zimm:#x}"),
+        },
+        Insn::VsacfgDim { rd, rs1, dim } => format!("vsacfg.dim x{rd}, x{rs1}, dim={dim}"),
+        Insn::Vsald { vd, rs1, mode, width } => {
+            let m = match mode {
+                LdMode::Sequential => "seq",
+                LdMode::Broadcast => "bcast",
+            };
+            let w = match width {
+                WidthSel::FromCfg => "cfg".to_string(),
+                WidthSel::Explicit(Precision::Int4) => "4".to_string(),
+                WidthSel::Explicit(Precision::Int8) => "8".to_string(),
+                WidthSel::Explicit(Precision::Int16) => "16".to_string(),
+            };
+            format!("vsald v{vd}, (x{rs1}), {m}, w={w}")
+        }
+        Insn::Vsam { vd, vs1, vs2, stages } => {
+            format!("vsam v{vd}, v{vs1}, v{vs2}, stages={stages}")
+        }
+        Insn::Vsac { vd, vs1, vs2, stages } => {
+            format!("vsac v{vd}, v{vs1}, v{vs2}, stages={stages}")
+        }
+    }
+}
+
+/// Render a whole program, one instruction per line.
+pub fn disassemble_program(prog: &[Insn]) -> String {
+    prog.iter().map(disassemble).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assembler::{assemble, assemble_line};
+    use crate::isa::insn::{Dim, StrategyKind, Vtype};
+
+    fn roundtrip(i: Insn) {
+        let text = disassemble(&i);
+        let back = assemble_line(&text).unwrap_or_else(|e| panic!("'{text}': {e}"));
+        assert_eq!(back, i, "text was '{text}'");
+    }
+
+    #[test]
+    fn text_roundtrip_all_forms() {
+        roundtrip(Insn::Addi { rd: 1, rs1: 0, imm: 64 });
+        roundtrip(Insn::Addi { rd: 1, rs1: 2, imm: -64 });
+        roundtrip(Insn::Vsetvli { rd: 0, rs1: 2, vtype: Vtype::new(16) });
+        roundtrip(Insn::Vle { vd: 3, rs1: 4, eew: 8 });
+        roundtrip(Insn::Vse { vs3: 3, rs1: 4, eew: 64 });
+        roundtrip(Insn::Vmacc { vd: 1, vs1: 2, vs2: 3 });
+        roundtrip(Insn::Vmv { vd: 1, rs1: 2 });
+        roundtrip(Insn::Vsacfg {
+            rd: 2,
+            zimm: Insn::pack_cfg(crate::config::Precision::Int4, 5, StrategyKind::Cf),
+            uimm: 3,
+        });
+        roundtrip(Insn::VsacfgDim { rd: 0, rs1: 9, dim: Dim::NStages });
+        roundtrip(Insn::Vsam { vd: 4, vs1: 5, vs2: 6, stages: 12 });
+        roundtrip(Insn::Vsac { vd: 4, vs1: 5, vs2: 6, stages: 1 });
+    }
+
+    #[test]
+    fn program_roundtrip() {
+        let src = "li x1, 16\nvsetvli x0, x1, e8\nvmacc.vv v2, v0, v1";
+        let prog = assemble(src).unwrap();
+        let text = disassemble_program(&prog);
+        assert_eq!(assemble(&text).unwrap(), prog);
+    }
+}

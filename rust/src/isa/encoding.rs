@@ -1,0 +1,353 @@
+//! Exact 32-bit encodings of the SPEED instruction subset.
+//!
+//! Official instructions follow the RISC-V / RVV v1.0 formats; customized
+//! instructions occupy the reserved user-defined major opcodes:
+//!
+//! * `custom-0` (0b0001011) — `VSACFG` (funct3 000) and `VSACFG.DIM`
+//!   (funct3 001);
+//! * `custom-1` (0b0101011) — `VSALD` (funct3 000), `VSAM` (funct3 001),
+//!   `VSAC` (funct3 010).
+//!
+//! Bit layouts of the custom space (documented here once, asserted by the
+//! round-trip tests):
+//!
+//! ```text
+//! VSACFG      |  zimm[8:0] 31:23 | uimm[4:0] 22:18 | 0 17:15 | 000 | rd | 0001011
+//! VSACFG.DIM  |  dim[3:0]  31:28 | 0 27:20 | rs1 19:15       | 001 | rd | 0001011
+//! VSALD       |  mode 31:30 | width 29:28 | 0 27:20 | rs1    | 000 | vd | 0101011
+//! VSAM        |  stages[6:0] 31:25 | vs2 24:20 | vs1 19:15   | 001 | vd | 0101011
+//! VSAC        |  stages[6:0] 31:25 | vs2 24:20 | vs1 19:15   | 010 | vd | 0101011
+//! ```
+
+use super::insn::{Dim, Insn, LdMode, Vtype, WidthSel};
+use crate::config::Precision;
+
+pub const OPC_OP_V: u32 = 0b1010111;
+pub const OPC_LOAD_FP: u32 = 0b0000111;
+pub const OPC_STORE_FP: u32 = 0b0100111;
+pub const OPC_OP_IMM: u32 = 0b0010011;
+pub const OPC_CUSTOM0: u32 = 0b0001011;
+pub const OPC_CUSTOM1: u32 = 0b0101011;
+
+const F3_OPIVV: u32 = 0b000;
+const F3_OPMVV: u32 = 0b010;
+const F3_VSETVLI: u32 = 0b111;
+const F6_VADD: u32 = 0b000000;
+const F6_VSUB: u32 = 0b000010;
+const F6_VMIN: u32 = 0b000101;
+const F6_VMAX: u32 = 0b000111;
+const F6_VSRA: u32 = 0b101011;
+const F6_VMUL: u32 = 0b100101;
+const F6_VMACC: u32 = 0b101101;
+const F6_VMV: u32 = 0b010111;
+
+/// Errors produced when decoding a 32-bit word.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    UnknownOpcode(u32),
+    UnknownFunct { opcode: u32, funct3: u32, funct6: u32 },
+    BadField { what: &'static str, value: u32 },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::UnknownOpcode(op) => write!(f, "unknown opcode {op:#09b}"),
+            DecodeError::UnknownFunct { opcode, funct3, funct6 } => {
+                write!(f, "unknown funct3={funct3:#05b}/funct6={funct6:#08b} for opcode {opcode:#09b}")
+            }
+            DecodeError::BadField { what, value } => write!(f, "bad {what} field: {value}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+fn eew_to_width_bits(eew: u32) -> u32 {
+    // RVV mew=0 width encodings: 8 -> 000, 16 -> 101, 32 -> 110, 64 -> 111.
+    match eew {
+        8 => 0b000,
+        16 => 0b101,
+        32 => 0b110,
+        64 => 0b111,
+        _ => 0b101,
+    }
+}
+
+fn width_bits_to_eew(w: u32) -> Option<u32> {
+    match w {
+        0b000 => Some(8),
+        0b101 => Some(16),
+        0b110 => Some(32),
+        0b111 => Some(64),
+        _ => None,
+    }
+}
+
+fn widthsel_to_bits(w: WidthSel) -> u32 {
+    match w {
+        WidthSel::FromCfg => 0,
+        WidthSel::Explicit(Precision::Int4) => 1,
+        WidthSel::Explicit(Precision::Int8) => 2,
+        WidthSel::Explicit(Precision::Int16) => 3,
+    }
+}
+
+fn bits_to_widthsel(b: u32) -> WidthSel {
+    match b {
+        1 => WidthSel::Explicit(Precision::Int4),
+        2 => WidthSel::Explicit(Precision::Int8),
+        3 => WidthSel::Explicit(Precision::Int16),
+        _ => WidthSel::FromCfg,
+    }
+}
+
+/// Encode a decoded instruction into its 32-bit word.
+pub fn encode(insn: &Insn) -> u32 {
+    match *insn {
+        Insn::Addi { rd, rs1, imm } => {
+            ((imm as u32 & 0xFFF) << 20)
+                | ((rs1 as u32 & 0x1F) << 15)
+                | ((rd as u32 & 0x1F) << 7)
+                | OPC_OP_IMM
+        }
+        Insn::Vsetvli { rd, rs1, vtype } => {
+            // zimm[10:0] in [30:20]; bit 31 = 0 distinguishes vsetvli.
+            ((vtype.to_bits() & 0x7FF) << 20)
+                | ((rs1 as u32 & 0x1F) << 15)
+                | (F3_VSETVLI << 12)
+                | ((rd as u32 & 0x1F) << 7)
+                | OPC_OP_V
+        }
+        Insn::Vle { vd, rs1, eew } => {
+            // nf=0 mew=0 mop=00 vm=1 lumop=00000
+            (1 << 25)
+                | ((rs1 as u32 & 0x1F) << 15)
+                | (eew_to_width_bits(eew) << 12)
+                | ((vd as u32 & 0x1F) << 7)
+                | OPC_LOAD_FP
+        }
+        Insn::Vse { vs3, rs1, eew } => {
+            (1 << 25)
+                | ((rs1 as u32 & 0x1F) << 15)
+                | (eew_to_width_bits(eew) << 12)
+                | ((vs3 as u32 & 0x1F) << 7)
+                | OPC_STORE_FP
+        }
+        Insn::Vmacc { vd, vs1, vs2 } => rvv_arith(F6_VMACC, F3_OPMVV, vd, vs1, vs2),
+        Insn::Vmul { vd, vs1, vs2 } => rvv_arith(F6_VMUL, F3_OPMVV, vd, vs1, vs2),
+        Insn::Vadd { vd, vs1, vs2 } => rvv_arith(F6_VADD, F3_OPIVV, vd, vs1, vs2),
+        Insn::Vsub { vd, vs1, vs2 } => rvv_arith(F6_VSUB, F3_OPIVV, vd, vs1, vs2),
+        Insn::Vmax { vd, vs1, vs2 } => rvv_arith(F6_VMAX, F3_OPIVV, vd, vs1, vs2),
+        Insn::Vmin { vd, vs1, vs2 } => rvv_arith(F6_VMIN, F3_OPIVV, vd, vs1, vs2),
+        Insn::Vsra { vd, vs1, vs2 } => rvv_arith(F6_VSRA, F3_OPIVV, vd, vs1, vs2),
+        Insn::Vmv { vd, rs1 } => {
+            // vmv.v.x: funct6=010111, vm=1, vs2=0, OPIVX funct3=100
+            (F6_VMV << 26) | (1 << 25) | ((rs1 as u32 & 0x1F) << 15) | (0b100 << 12)
+                | ((vd as u32 & 0x1F) << 7)
+                | OPC_OP_V
+        }
+        Insn::Vsacfg { rd, zimm, uimm } => {
+            ((zimm as u32 & 0x1FF) << 23)
+                | ((uimm as u32 & 0x1F) << 18)
+                | (0b000 << 12)
+                | ((rd as u32 & 0x1F) << 7)
+                | OPC_CUSTOM0
+        }
+        Insn::VsacfgDim { rd, rs1, dim } => {
+            ((dim.code() & 0xF) << 28)
+                | ((rs1 as u32 & 0x1F) << 15)
+                | (0b001 << 12)
+                | ((rd as u32 & 0x1F) << 7)
+                | OPC_CUSTOM0
+        }
+        Insn::Vsald { vd, rs1, mode, width } => {
+            let m = match mode {
+                LdMode::Sequential => 0,
+                LdMode::Broadcast => 1,
+            };
+            (m << 30)
+                | (widthsel_to_bits(width) << 28)
+                | ((rs1 as u32 & 0x1F) << 15)
+                | (0b000 << 12)
+                | ((vd as u32 & 0x1F) << 7)
+                | OPC_CUSTOM1
+        }
+        Insn::Vsam { vd, vs1, vs2, stages } => custom1_arith(0b001, vd, vs1, vs2, stages),
+        Insn::Vsac { vd, vs1, vs2, stages } => custom1_arith(0b010, vd, vs1, vs2, stages),
+    }
+}
+
+fn rvv_arith(funct6: u32, funct3: u32, vd: u8, vs1: u8, vs2: u8) -> u32 {
+    (funct6 << 26)
+        | (1 << 25) // vm = 1 (unmasked)
+        | ((vs2 as u32 & 0x1F) << 20)
+        | ((vs1 as u32 & 0x1F) << 15)
+        | (funct3 << 12)
+        | ((vd as u32 & 0x1F) << 7)
+        | OPC_OP_V
+}
+
+fn custom1_arith(funct3: u32, vd: u8, vs1: u8, vs2: u8, stages: u8) -> u32 {
+    ((stages as u32 & 0x7F) << 25)
+        | ((vs2 as u32 & 0x1F) << 20)
+        | ((vs1 as u32 & 0x1F) << 15)
+        | (funct3 << 12)
+        | ((vd as u32 & 0x1F) << 7)
+        | OPC_CUSTOM1
+}
+
+/// Decode a 32-bit word back into an instruction.
+pub fn decode(word: u32) -> Result<Insn, DecodeError> {
+    let opcode = word & 0x7F;
+    let rd = ((word >> 7) & 0x1F) as u8;
+    let funct3 = (word >> 12) & 0x7;
+    let rs1 = ((word >> 15) & 0x1F) as u8;
+    match opcode {
+        OPC_OP_IMM => {
+            let imm = ((word as i32) >> 20) as i32;
+            Ok(Insn::Addi { rd, rs1, imm })
+        }
+        OPC_OP_V => {
+            if funct3 == F3_VSETVLI {
+                let vtype = Vtype::from_bits((word >> 20) & 0x7FF);
+                return Ok(Insn::Vsetvli { rd, rs1, vtype });
+            }
+            let funct6 = word >> 26;
+            let vs2 = ((word >> 20) & 0x1F) as u8;
+            let vs1 = rs1;
+            match (funct6, funct3) {
+                (F6_VMACC, F3_OPMVV) => Ok(Insn::Vmacc { vd: rd, vs1, vs2 }),
+                (F6_VMUL, F3_OPMVV) => Ok(Insn::Vmul { vd: rd, vs1, vs2 }),
+                (F6_VADD, F3_OPIVV) => Ok(Insn::Vadd { vd: rd, vs1, vs2 }),
+                (F6_VSUB, F3_OPIVV) => Ok(Insn::Vsub { vd: rd, vs1, vs2 }),
+                (F6_VMAX, F3_OPIVV) => Ok(Insn::Vmax { vd: rd, vs1, vs2 }),
+                (F6_VMIN, F3_OPIVV) => Ok(Insn::Vmin { vd: rd, vs1, vs2 }),
+                (F6_VSRA, F3_OPIVV) => Ok(Insn::Vsra { vd: rd, vs1, vs2 }),
+                (F6_VMV, 0b100) => Ok(Insn::Vmv { vd: rd, rs1 }),
+                _ => Err(DecodeError::UnknownFunct { opcode, funct3, funct6 }),
+            }
+        }
+        OPC_LOAD_FP => {
+            let eew = width_bits_to_eew(funct3)
+                .ok_or(DecodeError::BadField { what: "eew", value: funct3 })?;
+            Ok(Insn::Vle { vd: rd, rs1, eew })
+        }
+        OPC_STORE_FP => {
+            let eew = width_bits_to_eew(funct3)
+                .ok_or(DecodeError::BadField { what: "eew", value: funct3 })?;
+            Ok(Insn::Vse { vs3: rd, rs1, eew })
+        }
+        OPC_CUSTOM0 => match funct3 {
+            0b000 => {
+                let zimm = ((word >> 23) & 0x1FF) as u16;
+                let uimm = ((word >> 18) & 0x1F) as u8;
+                Ok(Insn::Vsacfg { rd, zimm, uimm })
+            }
+            0b001 => {
+                let dimc = (word >> 28) & 0xF;
+                let dim = Dim::from_code(dimc)
+                    .ok_or(DecodeError::BadField { what: "dim", value: dimc })?;
+                Ok(Insn::VsacfgDim { rd, rs1, dim })
+            }
+            _ => Err(DecodeError::UnknownFunct { opcode, funct3, funct6: 0 }),
+        },
+        OPC_CUSTOM1 => {
+            let vs2 = ((word >> 20) & 0x1F) as u8;
+            let stages = ((word >> 25) & 0x7F) as u8;
+            match funct3 {
+                0b000 => {
+                    let mode = if (word >> 30) & 0x1 == 1 {
+                        LdMode::Broadcast
+                    } else {
+                        LdMode::Sequential
+                    };
+                    let width = bits_to_widthsel((word >> 28) & 0x3);
+                    Ok(Insn::Vsald { vd: rd, rs1, mode, width })
+                }
+                0b001 => Ok(Insn::Vsam { vd: rd, vs1: rs1, vs2, stages }),
+                0b010 => Ok(Insn::Vsac { vd: rd, vs1: rs1, vs2, stages }),
+                _ => Err(DecodeError::UnknownFunct { opcode, funct3, funct6: 0 }),
+            }
+        }
+        _ => Err(DecodeError::UnknownOpcode(opcode)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::insn::StrategyKind;
+
+    fn roundtrip(i: Insn) {
+        let w = encode(&i);
+        let back = decode(w).unwrap_or_else(|e| panic!("decode failed for {i:?}: {e}"));
+        assert_eq!(back, i, "word {w:#010x}");
+    }
+
+    #[test]
+    fn roundtrip_official() {
+        roundtrip(Insn::Addi { rd: 5, rs1: 0, imm: 1024 });
+        roundtrip(Insn::Addi { rd: 5, rs1: 3, imm: -4 });
+        roundtrip(Insn::Vsetvli { rd: 0, rs1: 2, vtype: Vtype::new(16) });
+        roundtrip(Insn::Vle { vd: 4, rs1: 1, eew: 16 });
+        roundtrip(Insn::Vle { vd: 31, rs1: 31, eew: 8 });
+        roundtrip(Insn::Vse { vs3: 8, rs1: 3, eew: 32 });
+        roundtrip(Insn::Vmacc { vd: 8, vs1: 0, vs2: 4 });
+        roundtrip(Insn::Vmul { vd: 1, vs1: 2, vs2: 3 });
+        roundtrip(Insn::Vadd { vd: 1, vs1: 2, vs2: 3 });
+        roundtrip(Insn::Vsub { vd: 1, vs1: 2, vs2: 3 });
+        roundtrip(Insn::Vmax { vd: 4, vs1: 5, vs2: 6 });
+        roundtrip(Insn::Vmin { vd: 4, vs1: 5, vs2: 6 });
+        roundtrip(Insn::Vsra { vd: 7, vs1: 8, vs2: 9 });
+        roundtrip(Insn::Vmv { vd: 7, rs1: 9 });
+    }
+
+    #[test]
+    fn roundtrip_custom() {
+        let zimm = Insn::pack_cfg(crate::config::Precision::Int8, 3, StrategyKind::Ffcs);
+        roundtrip(Insn::Vsacfg { rd: 3, zimm, uimm: 0 });
+        for dim in Dim::ALL {
+            roundtrip(Insn::VsacfgDim { rd: 0, rs1: 7, dim });
+        }
+        for mode in [LdMode::Sequential, LdMode::Broadcast] {
+            for width in [
+                WidthSel::FromCfg,
+                WidthSel::Explicit(crate::config::Precision::Int4),
+                WidthSel::Explicit(crate::config::Precision::Int8),
+                WidthSel::Explicit(crate::config::Precision::Int16),
+            ] {
+                roundtrip(Insn::Vsald { vd: 2, rs1: 10, mode, width });
+            }
+        }
+        roundtrip(Insn::Vsam { vd: 8, vs1: 0, vs2: 4, stages: 4 });
+        roundtrip(Insn::Vsam { vd: 31, vs1: 31, vs2: 31, stages: 127 });
+        roundtrip(Insn::Vsac { vd: 1, vs1: 2, vs2: 3, stages: 1 });
+    }
+
+    #[test]
+    fn custom_opcodes_in_user_space() {
+        // The encodings must stay inside custom-0 / custom-1 major opcodes.
+        let w = encode(&Insn::Vsacfg { rd: 1, zimm: 0, uimm: 0 });
+        assert_eq!(w & 0x7F, OPC_CUSTOM0);
+        let w = encode(&Insn::Vsam { vd: 1, vs1: 2, vs2: 3, stages: 1 });
+        assert_eq!(w & 0x7F, OPC_CUSTOM1);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(0xFFFF_FFFF).is_err());
+        assert!(decode(0x0000_0000).is_err());
+        // custom-0 with unused funct3.
+        assert!(decode((0b111 << 12) | OPC_CUSTOM0).is_err());
+    }
+
+    #[test]
+    fn negative_imm_sign_extends() {
+        let w = encode(&Insn::Addi { rd: 1, rs1: 0, imm: -1 });
+        match decode(w).unwrap() {
+            Insn::Addi { imm, .. } => assert_eq!(imm, -1),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,407 @@
+//! Decoded instruction forms and the small enums they carry.
+
+
+
+use crate::config::Precision;
+
+/// Dataflow mapping strategy selector carried in `VSACFG.zimm[8:6]`
+/// (Sec. III): MM for matrix multiplication, FFCS for CONV, CF for PWCV,
+/// FF for DWCV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    Mm,
+    Ffcs,
+    Cf,
+    Ff,
+}
+
+impl StrategyKind {
+    pub fn code(self) -> u32 {
+        match self {
+            StrategyKind::Mm => 0,
+            StrategyKind::Ffcs => 1,
+            StrategyKind::Cf => 2,
+            StrategyKind::Ff => 3,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<Self> {
+        match c {
+            0 => Some(StrategyKind::Mm),
+            1 => Some(StrategyKind::Ffcs),
+            2 => Some(StrategyKind::Cf),
+            3 => Some(StrategyKind::Ff),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [StrategyKind; 4] =
+        [StrategyKind::Mm, StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff];
+}
+
+impl std::fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            StrategyKind::Mm => "mm",
+            StrategyKind::Ffcs => "ffcs",
+            StrategyKind::Cf => "cf",
+            StrategyKind::Ff => "ff",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Transfer mode of `VSALD` (Sec. II-B): sequential allocation like the
+/// official `VLE`, or multi-broadcast of the same data to every lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LdMode {
+    Sequential,
+    Broadcast,
+}
+
+/// Element width selector of `VSALD`: an explicit width or "whatever the
+/// control register currently says" (the common case after `VSACFG`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WidthSel {
+    FromCfg,
+    Explicit(Precision),
+}
+
+/// Operator-dimension registers latched by `VSACFG.DIM`.
+///
+/// MM uses M/K/N; convolutions use C (input channels), F (output channels),
+/// H/W (input feature map), Stride. `NStages` sets the FFCS revisit depth N.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    M,
+    K,
+    N,
+    C,
+    F,
+    H,
+    W,
+    Stride,
+    NStages,
+}
+
+impl Dim {
+    pub fn code(self) -> u32 {
+        match self {
+            Dim::M => 0,
+            Dim::K => 1,
+            Dim::N => 2,
+            Dim::C => 3,
+            Dim::F => 4,
+            Dim::H => 5,
+            Dim::W => 6,
+            Dim::Stride => 7,
+            Dim::NStages => 8,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<Self> {
+        Some(match c {
+            0 => Dim::M,
+            1 => Dim::K,
+            2 => Dim::N,
+            3 => Dim::C,
+            4 => Dim::F,
+            5 => Dim::H,
+            6 => Dim::W,
+            7 => Dim::Stride,
+            8 => Dim::NStages,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [Dim; 9] =
+        [Dim::M, Dim::K, Dim::N, Dim::C, Dim::F, Dim::H, Dim::W, Dim::Stride, Dim::NStages];
+}
+
+impl std::fmt::Display for Dim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+impl Dim {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dim::M => "m",
+            Dim::K => "k",
+            Dim::N => "n",
+            Dim::C => "c",
+            Dim::F => "f",
+            Dim::H => "h",
+            Dim::W => "w",
+            Dim::Stride => "stride",
+            Dim::NStages => "nstages",
+        }
+    }
+}
+
+/// A tiny allocation-free set of vector-register indices (≤ 3 per insn).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegSet {
+    regs: [u8; 3],
+    len: u8,
+}
+
+impl RegSet {
+    pub fn new(rs: &[u8]) -> Self {
+        let mut regs = [0u8; 3];
+        regs[..rs.len()].copy_from_slice(rs);
+        RegSet { regs, len: rs.len() as u8 }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.regs[..self.len as usize]
+    }
+
+    pub fn contains(&self, r: u8) -> bool {
+        self.as_slice().contains(&r)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl<'a> IntoIterator for &'a RegSet {
+    type Item = &'a u8;
+    type IntoIter = std::slice::Iter<'a, u8>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl IntoIterator for RegSet {
+    type Item = u8;
+    type IntoIter = std::iter::Take<std::array::IntoIter<u8, 3>>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.regs.into_iter().take(self.len as usize)
+    }
+}
+
+impl std::ops::Deref for RegSet {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+/// The `vtype` payload of `VSETVLI` — we model the SEW field (and keep
+/// LMUL=1, the paper's configuration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Vtype {
+    /// Selected element width in bits (8 / 16 / 32 / 64).
+    pub sew: u32,
+}
+
+impl Vtype {
+    pub fn new(sew: u32) -> Self {
+        Vtype { sew }
+    }
+
+    /// vtype encoding: vsew is bits [5:3] with sew = 8 << vsew.
+    pub fn to_bits(self) -> u32 {
+        let vsew = match self.sew {
+            8 => 0,
+            16 => 1,
+            32 => 2,
+            64 => 3,
+            _ => 1,
+        };
+        vsew << 3
+    }
+
+    pub fn from_bits(bits: u32) -> Self {
+        let vsew = (bits >> 3) & 0x7;
+        Vtype { sew: 8 << vsew }
+    }
+}
+
+/// A decoded SPEED instruction.
+///
+/// The subset covers every instruction appearing in the paper's program
+/// examples (Figs. 2, 5, 9): the official RVV configuration / memory /
+/// arithmetic instructions, the scalar `ADDI` (for address setup by the
+/// tightly-coupled scalar core), and the four customized instructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Insn {
+    // ----- scalar support (the tightly-coupled scalar core) -------------
+    /// `addi rd, rs1, imm` — scalar address/length setup; `li` is the
+    /// assembler pseudo for `addi rd, x0, imm`.
+    Addi { rd: u8, rs1: u8, imm: i32 },
+
+    // ----- official RVV subset ------------------------------------------
+    /// `vsetvli rd, rs1, vtype` — set application vector length.
+    Vsetvli { rd: u8, rs1: u8, vtype: Vtype },
+    /// `vle<eew>.v vd, (rs1)` — unit-stride vector load.
+    Vle { vd: u8, rs1: u8, eew: u32 },
+    /// `vse<eew>.v vs3, (rs1)` — unit-stride vector store.
+    Vse { vs3: u8, rs1: u8, eew: u32 },
+    /// `vmacc.vv vd, vs1, vs2` — vd += vs1 * vs2 (elementwise MAC).
+    Vmacc { vd: u8, vs1: u8, vs2: u8 },
+    /// `vmul.vv vd, vs1, vs2`.
+    Vmul { vd: u8, vs1: u8, vs2: u8 },
+    /// `vadd.vv vd, vs1, vs2`.
+    Vadd { vd: u8, vs1: u8, vs2: u8 },
+    /// `vsub.vv vd, vs1, vs2` (vs1 - vs2 element-wise).
+    Vsub { vd: u8, vs1: u8, vs2: u8 },
+    /// `vmax.vv vd, vs1, vs2` — signed max (requantization clip).
+    Vmax { vd: u8, vs1: u8, vs2: u8 },
+    /// `vmin.vv vd, vs1, vs2` — signed min (requantization clip).
+    Vmin { vd: u8, vs1: u8, vs2: u8 },
+    /// `vsra.vv vd, vs1, vs2` — arithmetic right shift (requant scaling).
+    Vsra { vd: u8, vs1: u8, vs2: u8 },
+    /// `vmv.v.x vd, rs1` — splat scalar into a vector register.
+    Vmv { vd: u8, rs1: u8 },
+
+    // ----- customized instructions (custom-0 / custom-1 space) ----------
+    /// `vsacfg rd, zimm, uimm` — precision / kernel-size / strategy.
+    Vsacfg { rd: u8, zimm: u16, uimm: u8 },
+    /// `vsacfg.dim rd, rs1, dim` — latch an operator dimension.
+    VsacfgDim { rd: u8, rs1: u8, dim: Dim },
+    /// `vsald vd, (rs1), mode, width` — sequential / broadcast DMA load.
+    Vsald { vd: u8, rs1: u8, mode: LdMode, width: WidthSel },
+    /// `vsam vd, vs1, vs2, stages` — matrix–matrix tensor op.
+    Vsam { vd: u8, vs1: u8, vs2: u8, stages: u8 },
+    /// `vsac vd, vs1, vs2, stages` — matrix–vector tensor op.
+    Vsac { vd: u8, vs1: u8, vs2: u8, stages: u8 },
+}
+
+impl Insn {
+    /// Is this one of the four customized SPEED instructions?
+    pub fn is_custom(&self) -> bool {
+        matches!(
+            self,
+            Insn::Vsacfg { .. }
+                | Insn::VsacfgDim { .. }
+                | Insn::Vsald { .. }
+                | Insn::Vsam { .. }
+                | Insn::Vsac { .. }
+        )
+    }
+
+    /// Is this a vector instruction (executed by SPEED rather than the
+    /// scalar core)?
+    pub fn is_vector(&self) -> bool {
+        !matches!(self, Insn::Addi { .. })
+    }
+
+    /// Vector registers read by this instruction (hazard tracking in VIS).
+    /// Allocation-free: returns a fixed-size buffer + count (this sits on
+    /// the simulator's per-instruction hot path — see EXPERIMENTS.md §Perf).
+    pub fn vregs_read(&self) -> RegSet {
+        match *self {
+            Insn::Vmacc { vd, vs1, vs2 } => RegSet::new(&[vd, vs1, vs2]),
+            Insn::Vmul { vs1, vs2, .. }
+            | Insn::Vadd { vs1, vs2, .. }
+            | Insn::Vsub { vs1, vs2, .. }
+            | Insn::Vmax { vs1, vs2, .. }
+            | Insn::Vmin { vs1, vs2, .. }
+            | Insn::Vsra { vs1, vs2, .. } => RegSet::new(&[vs1, vs2]),
+            Insn::Vsam { vs1, vs2, .. } | Insn::Vsac { vs1, vs2, .. } => {
+                RegSet::new(&[vs1, vs2])
+            }
+            Insn::Vse { vs3, .. } => RegSet::new(&[vs3]),
+            _ => RegSet::new(&[]),
+        }
+    }
+
+    /// Vector registers written by this instruction.
+    pub fn vregs_written(&self) -> RegSet {
+        match *self {
+            Insn::Vle { vd, .. }
+            | Insn::Vmacc { vd, .. }
+            | Insn::Vmul { vd, .. }
+            | Insn::Vadd { vd, .. }
+            | Insn::Vsub { vd, .. }
+            | Insn::Vmax { vd, .. }
+            | Insn::Vmin { vd, .. }
+            | Insn::Vsra { vd, .. }
+            | Insn::Vmv { vd, .. }
+            | Insn::Vsald { vd, .. }
+            | Insn::Vsam { vd, .. }
+            | Insn::Vsac { vd, .. } => RegSet::new(&[vd]),
+            _ => RegSet::new(&[]),
+        }
+    }
+
+    /// Build the main `VSACFG` zimm payload from its fields.
+    /// zimm[1:0] = precision code, zimm[5:2] = kernel size, zimm[8:6] =
+    /// strategy code.
+    pub fn pack_cfg(prec: Precision, ksize: u32, strat: StrategyKind) -> u16 {
+        let pcode = match prec {
+            Precision::Int16 => 0u16,
+            Precision::Int8 => 1,
+            Precision::Int4 => 2,
+        };
+        debug_assert!(ksize <= 15, "kernel size must be Kseg-decomposed below 16");
+        pcode | ((ksize as u16 & 0xF) << 2) | ((strat.code() as u16 & 0x7) << 6)
+    }
+
+    /// Inverse of [`Insn::pack_cfg`].
+    pub fn unpack_cfg(zimm: u16) -> Option<(Precision, u32, StrategyKind)> {
+        let prec = match zimm & 0x3 {
+            0 => Precision::Int16,
+            1 => Precision::Int8,
+            2 => Precision::Int4,
+            _ => return None,
+        };
+        let ksize = ((zimm >> 2) & 0xF) as u32;
+        let strat = StrategyKind::from_code(((zimm >> 6) & 0x7) as u32)?;
+        Some((prec, ksize, strat))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_roundtrip() {
+        for prec in Precision::ALL {
+            for k in [1u32, 3, 5, 7, 15] {
+                for strat in StrategyKind::ALL {
+                    let z = Insn::pack_cfg(prec, k, strat);
+                    assert_eq!(Insn::unpack_cfg(z), Some((prec, k, strat)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vtype_roundtrip() {
+        for sew in [8, 16, 32, 64] {
+            assert_eq!(Vtype::from_bits(Vtype::new(sew).to_bits()).sew, sew);
+        }
+    }
+
+    #[test]
+    fn dim_roundtrip() {
+        for d in Dim::ALL {
+            assert_eq!(Dim::from_code(d.code()), Some(d));
+        }
+    }
+
+    #[test]
+    fn hazard_sets() {
+        let i = Insn::Vsam { vd: 8, vs1: 0, vs2: 4, stages: 4 };
+        assert_eq!(i.vregs_read().as_slice(), &[0, 4]);
+        assert_eq!(i.vregs_written().as_slice(), &[8]);
+        assert!(i.is_custom());
+        assert!(i.is_vector());
+        let a = Insn::Addi { rd: 1, rs1: 0, imm: 64 };
+        assert!(!a.is_vector());
+    }
+
+    #[test]
+    fn vmacc_reads_vd() {
+        // vmacc vd += vs1*vs2 — vd is both read and written.
+        let i = Insn::Vmacc { vd: 2, vs1: 3, vs2: 4 };
+        assert!(i.vregs_read().contains(2));
+        assert!(i.vregs_written().contains(2));
+    }
+}

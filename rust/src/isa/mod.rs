@@ -1,0 +1,31 @@
+//! The SPEED instruction set: the official RVV v1.0 subset the paper's
+//! programs use plus the four customized instructions (Sec. II-B).
+//!
+//! Customized instructions live in the reserved user-defined encoding space
+//! (RISC-V custom-0 / custom-1 major opcodes):
+//!
+//! * `VSACFG`  — configuration-setting: precision (4/8/16-bit), convolution
+//!   kernel size (1–15, Kseg-decomposed above that), dataflow strategy.
+//!   A second minor form (`VSACFG.DIM`) latches operator dimensions
+//!   (M/K/N or C/F/H/W/stride) from a scalar register.
+//! * `VSALD`   — vector load with sequential *or multi-broadcast* transfer
+//!   from external memory to the scalable modules.
+//! * `VSAM`    — matrix–matrix tensor arithmetic across all three
+//!   parallelism dimensions (PP, POI, POW), executing multiple dataflow
+//!   stages per instruction.
+//! * `VSAC`    — matrix–vector variant of `VSAM`.
+//!
+//! The module provides exact 32-bit encodings ([`encoding`]), a decoded
+//! instruction form ([`insn`]), a text assembler ([`assembler`]) and a
+//! disassembler ([`disasm`]) so every experiment can express its kernel as
+//! the same instruction stream the paper shows (Figs. 2 and 9).
+
+pub mod assembler;
+pub mod disasm;
+pub mod encoding;
+pub mod insn;
+
+pub use assembler::{assemble, assemble_line, AsmError};
+pub use disasm::disassemble;
+pub use encoding::{decode, encode, DecodeError};
+pub use insn::{Dim, Insn, LdMode, StrategyKind, Vtype, WidthSel};

@@ -1,0 +1,46 @@
+//! # speed-rvv — full-system reproduction of SPEED (TVLSI 2024)
+//!
+//! SPEED is a scalable RISC-V vector (RVV) processor for multi-precision
+//! (4/8/16-bit) DNN inference. This crate reproduces the complete system as
+//! described in the paper, substituting the paper's RTL + QuestaSim + TSMC
+//! 28 nm flow with:
+//!
+//! * a **cycle-level microarchitectural simulator** ([`sim`]) of the SPEED
+//!   pipeline — VIDU, VIS, VLDU, lanes with banked VRFs, and the
+//!   multi-precision tensor unit (MPTU);
+//! * an **Ara baseline model** ([`ara`]) executing official-RVV instruction
+//!   schedules with Ara's published pipeline behaviour;
+//! * the four **customized instructions** (VSACFG, VSALD, VSAM, VSAC) plus
+//!   the official RVV subset, with a full assembler/disassembler ([`isa`]);
+//! * the **mixed dataflow mapping** (MM, FFCS, CF, FF) and the operator
+//!   compiler that lowers DNN layers to instruction streams ([`dataflow`],
+//!   [`compiler`]);
+//! * **analytical area/power models** calibrated to the paper's synthesis
+//!   results, with the technology-projection rules of Table III
+//!   ([`metrics`]);
+//! * a **PJRT runtime** ([`runtime`]) that loads the JAX/Pallas-lowered HLO
+//!   artifacts (the golden numerics of the machine) and cross-checks the
+//!   simulator's functional output — Python never runs on the request path;
+//! * the **inference coordinator** ([`coordinator`]) scheduling whole
+//!   networks with runtime precision switching and per-operator strategy
+//!   selection;
+//! * a **report harness** ([`report`]) regenerating every table and figure
+//!   of the paper's evaluation (Fig. 2, Fig. 10–14, Tables I–III).
+//!
+//! See `DESIGN.md` for the substitution rationale and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod ara;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dse;
+pub mod isa;
+pub mod metrics;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+
+pub use config::{Precision, SpeedConfig};

@@ -1,0 +1,234 @@
+//! `repro` — the SPEED reproduction CLI (leader entrypoint).
+//!
+//! Subcommands map one-to-one onto the paper's evaluation:
+//!
+//! ```text
+//! repro report <fig2|fig10|fig11|fig12|table1|table2|fig13|fig14|table3|all> [--quick]
+//! repro golden [--artifacts DIR]        three-way golden checks via PJRT
+//! repro run-model <name> [--prec N] [--policy mixed|ffcs|cf|ff] [--quick]
+//! repro dse                              Fig. 14 sweep
+//! repro asm <file.s>                     assemble / encode / disassemble
+//! repro info                             configuration + artifact summary
+//! ```
+//!
+//! (The deployment image vendors no argument-parsing crate; the parser is
+//! a small hand-rolled positional/flag scanner — see DESIGN.md.)
+
+use std::process::ExitCode;
+
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::coordinator::{run_model, run_model_ara, Policy};
+use speed_rvv::isa::{self, StrategyKind};
+use speed_rvv::models::zoo::{model_by_name, MODELS};
+use speed_rvv::report;
+use speed_rvv::runtime::{golden_check_all, Engine};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn dispatch(args: &[String]) -> Result<(), String> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    match cmd {
+        "report" => cmd_report(rest),
+        "golden" => cmd_golden(rest),
+        "run-model" => cmd_run_model(rest),
+        "dse" => {
+            let (text, _) = report::fig14();
+            println!("{text}");
+            Ok(())
+        }
+        "asm" => cmd_asm(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try `repro help`)")),
+    }
+}
+
+const HELP: &str = "repro — SPEED (TVLSI'24) full-system reproduction
+commands:
+  report <id|all> [--quick]   regenerate a paper table/figure
+                              ids: fig2 fig10 fig11 fig12 table1 table2
+                                   fig13 fig14 table3
+  golden [--artifacts DIR]    three-way golden checks (JAX == PJRT == sim)
+  run-model <name> [--prec N] [--policy mixed|ffcs|cf|ff] [--quick]
+                              names: vgg16 resnet18 googlenet mobilenetv2
+                                     vit_tiny vit_b16
+  dse                         Fig. 14 design-space sweep
+  asm <file.s>                assemble, encode, and disassemble a program
+  info                        configuration + artifact summary";
+
+fn cmd_report(args: &[String]) -> Result<(), String> {
+    let id = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let quick = flag(args, "--quick");
+    let cfg = SpeedConfig::reference();
+    let emit = |name: &str| -> Result<(), String> {
+        let text = match name {
+            "fig2" => report::fig2(),
+            "fig10" => report::fig10(&cfg),
+            "fig11" => report::fig11(&cfg, &report::fig11::DEFAULT_SIZES),
+            "fig12" => report::fig12(&cfg, quick),
+            "table1" => report::table1(&cfg, quick),
+            "table2" => report::table2(),
+            "fig13" => report::fig13(),
+            "fig14" => report::fig14().0,
+            "table3" => report::table3(),
+            other => return Err(format!("unknown report id '{other}'")),
+        };
+        println!("{text}");
+        Ok(())
+    };
+    if id == "all" {
+        for name in
+            ["fig2", "fig10", "fig11", "fig12", "table1", "table2", "fig13", "fig14", "table3"]
+        {
+            emit(name)?;
+        }
+        Ok(())
+    } else {
+        emit(id)
+    }
+}
+
+fn cmd_golden(args: &[String]) -> Result<(), String> {
+    let dir = std::path::PathBuf::from(opt(args, "--artifacts").unwrap_or("artifacts"));
+    let mut engine = Engine::open(&dir).map_err(|e| e.to_string())?;
+    let reports = golden_check_all(&mut engine, &dir).map_err(|e| e.to_string())?;
+    let mut failed = 0;
+    for r in &reports {
+        let sim = match r.sim_ok {
+            Some(true) => "sim ok",
+            Some(false) => "sim FAIL",
+            None => "sim n/a",
+        };
+        println!(
+            "{:18} pjrt {} | {} ({} elems)",
+            r.name,
+            if r.pjrt_ok { "ok" } else { "FAIL" },
+            sim,
+            r.elems
+        );
+        if !r.ok() {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        return Err(format!("{failed} golden check(s) failed"));
+    }
+    println!("all {} golden checks passed", reports.len());
+    Ok(())
+}
+
+fn cmd_run_model(args: &[String]) -> Result<(), String> {
+    let name = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .ok_or_else(|| format!("run-model needs a model name (one of {MODELS:?})"))?;
+    let prec = match opt(args, "--prec").unwrap_or("8") {
+        "16" => Precision::Int16,
+        "8" => Precision::Int8,
+        "4" => Precision::Int4,
+        other => return Err(format!("bad precision '{other}'")),
+    };
+    let policy = match opt(args, "--policy").unwrap_or("mixed") {
+        "mixed" => Policy::Mixed,
+        "ffcs" => Policy::Fixed(StrategyKind::Ffcs),
+        "cf" => Policy::Fixed(StrategyKind::Cf),
+        "ff" => Policy::Fixed(StrategyKind::Ff),
+        other => return Err(format!("bad policy '{other}'")),
+    };
+    let mut model =
+        model_by_name(name).ok_or_else(|| format!("unknown model '{name}' ({MODELS:?})"))?;
+    if flag(args, "--quick") {
+        model = report::fig12::downscale(&model, 4);
+    }
+    let cfg = SpeedConfig::reference();
+    let r = run_model(&model, prec, &cfg, policy)?;
+    let ara = run_model_ara(&model, prec, &Default::default());
+    println!("model {name} @ {prec} ({} vector ops)", r.layers.len());
+    println!(
+        "  SPEED: {} cycles ({:.2} ops/cycle, {:.1} GOPS @ {:.2} GHz)",
+        r.vector_cycles(),
+        r.ops_per_cycle(),
+        r.gops(cfg.freq_ghz),
+        cfg.freq_ghz
+    );
+    println!("  complete application: {} cycles", r.complete_cycles());
+    println!(
+        "  Ara: {} cycles  ->  speedup {:.2}x",
+        ara.cycles,
+        ara.cycles as f64 / r.vector_cycles() as f64
+    );
+    println!(
+        "  DRAM traffic: SPEED {:.1} MiB vs Ara {:.1} MiB",
+        r.total.traffic.total() as f64 / (1 << 20) as f64,
+        ara.dram_bytes as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}
+
+fn cmd_asm(args: &[String]) -> Result<(), String> {
+    let path = args.first().ok_or("asm needs a file path")?;
+    let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let prog = isa::assemble(&src).map_err(|e| e.to_string())?;
+    for insn in &prog {
+        let word = isa::encode(insn);
+        println!("{word:08x}  {}", isa::disasm::disassemble(insn));
+    }
+    println!("# {} instructions", prog.len());
+    Ok(())
+}
+
+fn cmd_info(_args: &[String]) -> Result<(), String> {
+    let cfg = SpeedConfig::reference();
+    let t3 = SpeedConfig::table3();
+    println!("SPEED reference instance (Sec. IV-A):");
+    println!(
+        "  {} lanes x {}x{} MPTU, {} KiB VRF/lane, {:.2} GHz",
+        cfg.lanes, cfg.tile_r, cfg.tile_c, cfg.vrf_kib, cfg.freq_ghz
+    );
+    for p in Precision::ALL {
+        println!("  {p}: PP={} -> peak {:.1} GOPS", p.pp(), cfg.peak_gops(p));
+    }
+    println!(
+        "Table III instance: {}x{} tiles -> peak {:.1} GOPS @4b",
+        t3.tile_r,
+        t3.tile_c,
+        t3.peak_gops(Precision::Int4)
+    );
+    let area = speed_rvv::metrics::speed_area(&cfg);
+    println!(
+        "  area {:.2} mm² (lanes {:.0}%), power {:.0} mW",
+        area.total(),
+        100.0 * area.lane_fraction(),
+        speed_rvv::metrics::speed_power(&cfg) * 1e3
+    );
+    if let Ok(engine) = Engine::open("artifacts") {
+        println!("artifacts: {} compiled computations available", engine.manifest().len());
+    } else {
+        println!("artifacts: not built (run `make artifacts`)");
+    }
+    Ok(())
+}

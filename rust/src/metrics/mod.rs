@@ -1,0 +1,11 @@
+//! Metrics: analytical area/power models calibrated to the paper's
+//! synthesis results (Tables II/III, Fig. 13) and the technology-node
+//! projection rules used in the state-of-the-art comparison.
+
+pub mod area;
+pub mod power;
+pub mod scaling;
+
+pub use area::{lane_area, speed_area, AreaBreakdown, LaneArea};
+pub use power::{energy_eff, inference_energy_mj, lane_power, speed_power};
+pub use scaling::{project_area, project_frequency, project_power, ReportedMetrics};

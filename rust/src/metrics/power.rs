@@ -1,0 +1,105 @@
+//! Analytical power model, calibrated to the paper's synthesis results.
+//!
+//! Calibration points (28 nm, TT 0.9 V, 1.05 GHz):
+//! * Table II — one reference lane (16 KiB VRF, 2×2 MPTU) draws 71 mW
+//!   (vs 229 mW for an Ara lane — the FPU removal + MPTU efficiency).
+//! * Table III — the 4-lane, 8×4-tile instance draws 533 mW total, which
+//!   with four 2×2-reference lanes at 71 mW fixes the per-PE increment
+//!   (~1.5 mW/PE) and the front-end share (~80 mW).
+
+use crate::config::{Precision, SpeedConfig};
+
+/// Reference lane power (W) at 1.05 GHz and its decomposition.
+const LANE_REF_W: f64 = 0.071;
+const REF_PES: f64 = 4.0;
+/// Incremental power per additional PE (W at 1.05 GHz).
+const PE_W: f64 = 0.0015;
+/// Front-end power (VIDU/VIS/VLDU/scalar core), per instance.
+const FRONTEND_W: f64 = 0.080;
+/// Reference frequency the constants were solved at.
+const REF_GHZ: f64 = 1.05;
+
+/// Lane power at full MPTU activity (W).
+pub fn lane_power(cfg: &SpeedConfig) -> f64 {
+    let pes = cfg.pes_per_lane() as f64;
+    let base = LANE_REF_W - REF_PES * PE_W;
+    (base + pes * PE_W) * (cfg.freq_ghz / REF_GHZ)
+        * (cfg.vrf_kib as f64 / 16.0).sqrt().max(1.0)
+}
+
+/// Full-instance power at full activity (W).
+pub fn speed_power(cfg: &SpeedConfig) -> f64 {
+    FRONTEND_W * (cfg.freq_ghz / REF_GHZ) + cfg.lanes as f64 * lane_power(cfg)
+}
+
+/// Energy efficiency (GOPS/W) at an achieved throughput.
+pub fn energy_eff(cfg: &SpeedConfig, gops: f64) -> f64 {
+    gops / speed_power(cfg)
+}
+
+/// Energy per external-memory byte (pJ/B) — DRAM access energy used to
+/// translate Fig. 10's traffic savings into energy (LPDDR4-class, the
+/// standard edge assumption).
+pub const DRAM_PJ_PER_BYTE: f64 = 40.0;
+
+/// Energy of one inference: core energy (power × time) + DRAM traffic.
+pub fn inference_energy_mj(cfg: &SpeedConfig, cycles: u64, dram_bytes: u64) -> f64 {
+    let seconds = cycles as f64 / (cfg.freq_ghz * 1e9);
+    let core_j = speed_power(cfg) * seconds;
+    let dram_j = dram_bytes as f64 * DRAM_PJ_PER_BYTE * 1e-12;
+    (core_j + dram_j) * 1e3
+}
+
+/// Peak-efficiency summary for Table III style reporting.
+pub fn peak_summary(cfg: &SpeedConfig, prec: Precision, achieved_gops: f64) -> (f64, f64, f64) {
+    let area = super::area::speed_area(cfg).total();
+    let power = speed_power(cfg);
+    let _ = prec;
+    (achieved_gops, achieved_gops / area, achieved_gops / power)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_lane_matches_table2() {
+        let p = lane_power(&SpeedConfig::reference());
+        assert!((p - 0.071).abs() < 1e-6, "{p}");
+    }
+
+    #[test]
+    fn table3_instance_power_matches_published() {
+        // 4 lanes x 8x4 tiles at 1.05 GHz should land near 533 mW.
+        let p = speed_power(&SpeedConfig::table3());
+        assert!((0.45..0.62).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn energy_eff_matches_published_arithmetic() {
+        // Table III: 343.1 GOPS at ~533 mW -> ~643 GOPS/W.
+        let cfg = SpeedConfig::table3();
+        let ee = energy_eff(&cfg, 343.1);
+        assert!((550.0..750.0).contains(&ee), "{ee}");
+    }
+
+    #[test]
+    fn power_scales_with_pes_and_freq() {
+        let base = speed_power(&SpeedConfig::reference());
+        let more_pes = speed_power(&SpeedConfig::dse(4, 8, 8));
+        assert!(more_pes > base);
+        let slower = speed_power(&SpeedConfig {
+            freq_ghz: 0.5,
+            ..SpeedConfig::reference()
+        });
+        assert!(slower < base);
+    }
+
+    #[test]
+    fn inference_energy_accounts_for_dram() {
+        let cfg = SpeedConfig::reference();
+        let no_dram = inference_energy_mj(&cfg, 1_000_000, 0);
+        let with_dram = inference_energy_mj(&cfg, 1_000_000, 100 << 20);
+        assert!(with_dram > no_dram);
+    }
+}

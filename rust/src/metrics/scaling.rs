@@ -1,0 +1,115 @@
+//! Technology-node projection rules (Table II / Table III footnotes).
+//!
+//! The paper projects prior-art numbers to 28 nm "assuming linear frequency
+//! scaling, quadratic area scaling, and constant power scaling (since Vdd
+//! does not scale)" — the same methodology as EIE (Han et al., ISCA'16).
+
+/// Project a frequency from `from_nm` to `to_nm` (linear in 1/node).
+pub fn project_frequency(freq: f64, from_nm: f64, to_nm: f64) -> f64 {
+    freq * from_nm / to_nm
+}
+
+/// Project an area from `from_nm` to `to_nm` (quadratic in node).
+pub fn project_area(area: f64, from_nm: f64, to_nm: f64) -> f64 {
+    area * (to_nm / from_nm).powi(2)
+}
+
+/// Project power across nodes (constant — Vdd does not scale).
+pub fn project_power(power: f64, _from_nm: f64, _to_nm: f64) -> f64 {
+    power
+}
+
+/// A performance point reported at some node, projectable to another.
+#[derive(Debug, Clone, Copy)]
+pub struct ReportedMetrics {
+    pub node_nm: f64,
+    pub freq_ghz: f64,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    pub gops: f64,
+}
+
+impl ReportedMetrics {
+    /// Project everything to `to_nm`: throughput scales with frequency
+    /// (linear), area quadratic, power constant.
+    pub fn project(&self, to_nm: f64) -> ReportedMetrics {
+        let f = project_frequency(self.freq_ghz, self.node_nm, to_nm);
+        ReportedMetrics {
+            node_nm: to_nm,
+            freq_ghz: f,
+            area_mm2: project_area(self.area_mm2, self.node_nm, to_nm),
+            power_w: project_power(self.power_w, self.node_nm, to_nm),
+            gops: self.gops * f / self.freq_ghz,
+        }
+    }
+
+    pub fn area_eff(&self) -> f64 {
+        self.gops / self.area_mm2
+    }
+
+    pub fn energy_eff(&self) -> f64 {
+        self.gops / self.power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ara_projection_matches_table2() {
+        // Table II: Ara reported at 22 nm (1.05 GHz, 1.20 mm², 229 mW)
+        // projects to 28 nm as 0.825 GHz, 1.94 mm², 229 mW.
+        let f = project_frequency(1.05, 22.0, 28.0);
+        assert!((f - 0.825).abs() < 0.001, "{f}");
+        let a = project_area(1.20, 22.0, 28.0);
+        assert!((a - 1.94).abs() < 0.01, "{a}");
+        assert_eq!(project_power(0.229, 22.0, 28.0), 0.229);
+    }
+
+    #[test]
+    fn xpulpnn_projection_matches_table3() {
+        // Table III: XPULPNN 22nm 23 GOPS @8b -> 18.1 projected to 28nm;
+        // area eff 21.9 -> 10.6 GOPS/mm².
+        let m = ReportedMetrics {
+            node_nm: 22.0,
+            freq_ghz: 0.4,
+            area_mm2: 1.05,
+            power_w: 0.0207,
+            gops: 23.0,
+        };
+        let p = m.project(28.0);
+        assert!((p.gops - 18.07).abs() < 0.1, "{}", p.gops);
+        assert!((p.area_eff() - 10.6).abs() < 0.3, "{}", p.area_eff());
+    }
+
+    #[test]
+    fn yun_65nm_projection_matches_table3() {
+        // Yun reported at 65 nm: 22.9 GOPS -> 53.2 projected; area eff
+        // 3.8 -> 48.3 GOPS/mm² (projection *improves* both at 28 nm).
+        let m = ReportedMetrics {
+            node_nm: 65.0,
+            freq_ghz: 0.28,
+            area_mm2: 6.0,
+            power_w: 0.228,
+            gops: 22.9,
+        };
+        let p = m.project(28.0);
+        assert!((p.gops - 53.17).abs() < 0.2, "{}", p.gops);
+        assert!((p.area_eff() - 47.8).abs() < 1.0, "{}", p.area_eff());
+    }
+
+    #[test]
+    fn projection_roundtrip_identity() {
+        let m = ReportedMetrics {
+            node_nm: 28.0,
+            freq_ghz: 1.0,
+            area_mm2: 2.0,
+            power_w: 0.5,
+            gops: 100.0,
+        };
+        let p = m.project(65.0).project(28.0);
+        assert!((p.gops - m.gops).abs() < 1e-9);
+        assert!((p.area_mm2 - m.area_mm2).abs() < 1e-9);
+    }
+}

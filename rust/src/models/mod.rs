@@ -1,0 +1,8 @@
+//! DNN workload descriptions: operator descriptors and the benchmark
+//! network zoo of the paper's evaluation (Sec. IV-A).
+
+pub mod ops;
+pub mod zoo;
+
+pub use ops::{OpDesc, OpKind};
+pub use zoo::{model_by_name, Model, MODELS};

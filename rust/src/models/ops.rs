@@ -1,0 +1,288 @@
+//! DNN operator descriptors — the workload vocabulary of the paper.
+//!
+//! Every benchmark in Sec. IV is a sequence of these four operator kinds:
+//! standard convolution (CONV), point-wise convolution (PWCV), depth-wise
+//! convolution (DWCV) and matrix multiplication (MM). An [`OpDesc`] fully
+//! determines the arithmetic (MAC count), the tensor footprints, and — via
+//! the dataflow strategies — the cycle cost and memory traffic.
+
+use crate::config::Precision;
+use crate::isa::StrategyKind;
+
+/// Operator class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Matrix multiplication `A(M×K) @ B(K×N)`.
+    Mm,
+    /// Standard convolution `F×C×K×K` over `C×H×W`.
+    Conv,
+    /// Point-wise (1×1) convolution `F×C` over `C×H×W`.
+    Pwcv,
+    /// Depth-wise convolution `C×K×K` over `C×H×W`.
+    Dwcv,
+}
+
+impl std::fmt::Display for OpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            OpKind::Mm => "MM",
+            OpKind::Conv => "CONV",
+            OpKind::Pwcv => "PWCV",
+            OpKind::Dwcv => "DWCV",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A fully-specified DNN operator instance.
+///
+/// MM uses `m/k/n`; convolutions use `c/f/h/w/ksize/stride/pad` (PWCV has
+/// `ksize == 1`; DWCV has `f == c`). Unused fields are zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OpDesc {
+    pub kind: OpKind,
+    pub prec: Precision,
+    // --- MM dims ---
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+    // --- convolution dims ---
+    pub c: u32,
+    pub f: u32,
+    pub h: u32,
+    pub w: u32,
+    pub ksize: u32,
+    pub stride: u32,
+    pub pad: u32,
+}
+
+impl OpDesc {
+    pub fn mm(m: u32, k: u32, n: u32, prec: Precision) -> Self {
+        OpDesc {
+            kind: OpKind::Mm,
+            prec,
+            m,
+            k,
+            n,
+            c: 0,
+            f: 0,
+            h: 0,
+            w: 0,
+            ksize: 0,
+            stride: 0,
+            pad: 0,
+        }
+    }
+
+    pub fn conv(c: u32, f: u32, h: u32, w: u32, ksize: u32, stride: u32, pad: u32,
+                prec: Precision) -> Self {
+        OpDesc { kind: OpKind::Conv, prec, m: 0, k: 0, n: 0, c, f, h, w, ksize, stride, pad }
+    }
+
+    pub fn pwcv(c: u32, f: u32, h: u32, w: u32, prec: Precision) -> Self {
+        OpDesc { kind: OpKind::Pwcv, prec, m: 0, k: 0, n: 0, c, f, h, w, ksize: 1, stride: 1, pad: 0 }
+    }
+
+    pub fn dwcv(c: u32, h: u32, w: u32, ksize: u32, stride: u32, pad: u32,
+                prec: Precision) -> Self {
+        OpDesc { kind: OpKind::Dwcv, prec, m: 0, k: 0, n: 0, c, f: c, h, w, ksize, stride, pad }
+    }
+
+    /// Output spatial height (convolutions).
+    pub fn oh(&self) -> u32 {
+        (self.h + 2 * self.pad - self.ksize) / self.stride + 1
+    }
+
+    /// Output spatial width (convolutions).
+    pub fn ow(&self) -> u32 {
+        (self.w + 2 * self.pad - self.ksize) / self.stride + 1
+    }
+
+    /// The dataflow strategy the paper's mixed mapping assigns (Sec. III):
+    /// MM for MM, FFCS for CONV, CF for PWCV, FF for DWCV.
+    pub fn preferred_strategy(&self) -> StrategyKind {
+        match self.kind {
+            OpKind::Mm => StrategyKind::Mm,
+            OpKind::Conv => StrategyKind::Ffcs,
+            OpKind::Pwcv => StrategyKind::Cf,
+            OpKind::Dwcv => StrategyKind::Ff,
+        }
+    }
+
+    /// Total multiply-accumulates of the operator.
+    pub fn total_macs(&self) -> u64 {
+        match self.kind {
+            OpKind::Mm => self.m as u64 * self.k as u64 * self.n as u64,
+            OpKind::Conv => {
+                self.f as u64
+                    * self.oh() as u64
+                    * self.ow() as u64
+                    * self.c as u64
+                    * (self.ksize as u64).pow(2)
+            }
+            OpKind::Pwcv => {
+                self.f as u64 * self.oh() as u64 * self.ow() as u64 * self.c as u64
+            }
+            OpKind::Dwcv => {
+                self.c as u64 * self.oh() as u64 * self.ow() as u64
+                    * (self.ksize as u64).pow(2)
+            }
+        }
+    }
+
+    /// Total arithmetic operations (1 MAC = 2 ops), the paper's "ops".
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+
+    /// Input tensor element count.
+    pub fn input_elems(&self) -> u64 {
+        match self.kind {
+            OpKind::Mm => self.m as u64 * self.k as u64,
+            _ => self.c as u64 * self.h as u64 * self.w as u64,
+        }
+    }
+
+    /// Weight tensor element count.
+    pub fn weight_elems(&self) -> u64 {
+        match self.kind {
+            OpKind::Mm => self.k as u64 * self.n as u64,
+            OpKind::Conv => self.f as u64 * self.c as u64 * (self.ksize as u64).pow(2),
+            OpKind::Pwcv => self.f as u64 * self.c as u64,
+            OpKind::Dwcv => self.c as u64 * (self.ksize as u64).pow(2),
+        }
+    }
+
+    /// Output element count (32-bit accumulators before requantization).
+    pub fn output_elems(&self) -> u64 {
+        match self.kind {
+            OpKind::Mm => self.m as u64 * self.n as u64,
+            OpKind::Dwcv => self.c as u64 * self.oh() as u64 * self.ow() as u64,
+            _ => self.f as u64 * self.oh() as u64 * self.ow() as u64,
+        }
+    }
+
+    /// Input tensor bytes at the operand precision (nibble-packed for 4-bit).
+    pub fn input_bytes(&self) -> u64 {
+        self.prec.bytes_for(self.input_elems())
+    }
+
+    /// Weight tensor bytes at the operand precision.
+    pub fn weight_bytes(&self) -> u64 {
+        self.prec.bytes_for(self.weight_elems())
+    }
+
+    /// Output bytes (int32 accumulators).
+    pub fn output_bytes(&self) -> u64 {
+        self.output_elems() * 4
+    }
+
+    /// Output rows as stored by `VSE` (MM: M rows of N; conv: F·OH rows of
+    /// OW; DWCV: C·OH rows of OW).
+    pub fn output_rows(&self) -> u64 {
+        match self.kind {
+            OpKind::Mm => self.m as u64,
+            OpKind::Dwcv => self.c as u64 * self.oh() as u64,
+            _ => self.f as u64 * self.oh() as u64,
+        }
+    }
+
+    /// Elements per output row.
+    pub fn output_row_elems(&self) -> u64 {
+        match self.kind {
+            OpKind::Mm => self.n as u64,
+            _ => self.ow() as u64,
+        }
+    }
+
+    /// Validate dimension consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.kind {
+            OpKind::Mm => {
+                if self.m == 0 || self.k == 0 || self.n == 0 {
+                    return Err(format!("MM dims must be nonzero: {self:?}"));
+                }
+            }
+            _ => {
+                if self.c == 0 || self.h == 0 || self.w == 0 || self.ksize == 0 {
+                    return Err(format!("conv dims must be nonzero: {self:?}"));
+                }
+                if self.kind != OpKind::Dwcv && self.f == 0 {
+                    return Err("output channels must be nonzero".into());
+                }
+                if self.kind == OpKind::Dwcv && self.f != self.c {
+                    return Err("DWCV requires f == c".into());
+                }
+                if self.kind == OpKind::Pwcv && self.ksize != 1 {
+                    return Err("PWCV requires ksize == 1".into());
+                }
+                if self.stride == 0 {
+                    return Err("stride must be nonzero".into());
+                }
+                if self.h + 2 * self.pad < self.ksize || self.w + 2 * self.pad < self.ksize {
+                    return Err("kernel larger than padded input".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm_counts() {
+        let op = OpDesc::mm(4, 8, 8, Precision::Int16);
+        assert_eq!(op.total_macs(), 256);
+        assert_eq!(op.total_ops(), 512);
+        assert_eq!(op.input_bytes(), 64);
+        assert_eq!(op.weight_bytes(), 128);
+        assert_eq!(op.output_bytes(), 128);
+        assert_eq!(op.output_rows(), 4);
+        assert!(op.validate().is_ok());
+    }
+
+    #[test]
+    fn conv_counts() {
+        let op = OpDesc::conv(8, 16, 12, 12, 3, 1, 1, Precision::Int8);
+        assert_eq!((op.oh(), op.ow()), (12, 12));
+        assert_eq!(op.total_macs(), 16 * 144 * 8 * 9);
+        assert_eq!(op.weight_elems(), 16 * 8 * 9);
+        assert!(op.validate().is_ok());
+    }
+
+    #[test]
+    fn dwcv_stride2() {
+        let op = OpDesc::dwcv(8, 13, 13, 3, 2, 1, Precision::Int8);
+        assert_eq!((op.oh(), op.ow()), (7, 7));
+        assert_eq!(op.output_elems(), 8 * 49);
+        assert_eq!(op.preferred_strategy(), StrategyKind::Ff);
+        assert!(op.validate().is_ok());
+    }
+
+    #[test]
+    fn pwcv_prefers_cf() {
+        let op = OpDesc::pwcv(16, 32, 8, 8, Precision::Int8);
+        assert_eq!(op.preferred_strategy(), StrategyKind::Cf);
+        assert_eq!(op.total_macs(), 32 * 64 * 16);
+        assert!(op.validate().is_ok());
+    }
+
+    #[test]
+    fn int4_nibble_footprints() {
+        let op = OpDesc::mm(3, 5, 7, Precision::Int4);
+        assert_eq!(op.input_bytes(), 8); // 15 nibbles -> 8 bytes
+        assert_eq!(op.weight_bytes(), 18); // 35 nibbles -> 18 bytes
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        assert!(OpDesc::mm(0, 1, 1, Precision::Int8).validate().is_err());
+        assert!(OpDesc::conv(3, 4, 2, 2, 5, 1, 0, Precision::Int8).validate().is_err());
+        let mut dw = OpDesc::dwcv(8, 8, 8, 3, 1, 1, Precision::Int8);
+        dw.f = 4;
+        assert!(dw.validate().is_err());
+    }
+}

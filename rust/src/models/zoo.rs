@@ -1,0 +1,276 @@
+//! The benchmark network zoo of Sec. IV: VGG16, ResNet18, GoogLeNet,
+//! MobileNetV2, ViT-Tiny and ViT-B/16, expressed as operator sequences.
+//!
+//! Layer tables follow the published architectures at 224×224 (CNNs) /
+//! 197 tokens (ViTs), batch 1. Weight values are synthetic (shapes are what
+//! determine cycles and traffic — see DESIGN.md "Substitutions"), and the
+//! scalar-core share of the complete application (pooling, normalization,
+//! non-vectorizable glue) is modeled per Table I's complete-application
+//! evaluation.
+
+use crate::config::Precision;
+use crate::models::ops::OpDesc;
+
+/// A benchmark network: a name plus its vectorizable operator sequence.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: &'static str,
+    /// Vector-processor operators (CONV/PWCV/DWCV/MM) in execution order.
+    pub ops: Vec<OpDesc>,
+    /// Fraction of complete-application time spent in scalar-core work
+    /// (max-pool, normalization, softmax, ...) relative to the *vector*
+    /// time on SPEED — used for Table I's complete-application rows.
+    /// Lightweight networks (MobileNetV2) have a much larger share.
+    pub scalar_fraction: f64,
+}
+
+impl Model {
+    /// Total MACs over all vector operators.
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.total_macs()).sum()
+    }
+
+    /// Re-type every operator to a new precision.
+    pub fn at_precision(&self, prec: Precision) -> Model {
+        Model {
+            name: self.name,
+            ops: self.ops.iter().map(|o| OpDesc { prec, ..*o }).collect(),
+            scalar_fraction: self.scalar_fraction,
+        }
+    }
+}
+
+/// All six benchmark models (constructed at INT8; use [`Model::at_precision`]
+/// to re-type).
+pub const MODELS: [&str; 6] =
+    ["vgg16", "resnet18", "googlenet", "mobilenetv2", "vit_tiny", "vit_b16"];
+
+/// Look up a benchmark model by name.
+pub fn model_by_name(name: &str) -> Option<Model> {
+    let p = Precision::Int8;
+    match name {
+        "vgg16" => Some(vgg16(p)),
+        "resnet18" => Some(resnet18(p)),
+        "googlenet" => Some(googlenet(p)),
+        "mobilenetv2" => Some(mobilenetv2(p)),
+        "vit_tiny" => Some(vit(p, "vit_tiny", 192, 768, 197, 12)),
+        "vit_b16" => Some(vit(p, "vit_b16", 768, 3072, 197, 12)),
+        _ => None,
+    }
+}
+
+/// VGG16: thirteen 3×3 CONV layers + three FC layers.
+pub fn vgg16(p: Precision) -> Model {
+    let mut ops = Vec::new();
+    // (in_ch, out_ch, spatial)
+    let convs: [(u32, u32, u32); 13] = [
+        (3, 64, 224),
+        (64, 64, 224),
+        (64, 128, 112),
+        (128, 128, 112),
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 256, 56),
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+    ];
+    for (c, f, s) in convs {
+        ops.push(OpDesc::conv(c, f, s, s, 3, 1, 1, p));
+    }
+    // FC layers as MM (batch-1 GEMV-style MMs).
+    ops.push(OpDesc::mm(1, 512 * 7 * 7, 4096, p));
+    ops.push(OpDesc::mm(1, 4096, 4096, p));
+    ops.push(OpDesc::mm(1, 4096, 1000, p));
+    Model { name: "vgg16", ops, scalar_fraction: 0.015 }
+}
+
+/// ResNet18: 7×7 stem + 8 basic blocks (+1×1 downsamples) + FC.
+pub fn resnet18(p: Precision) -> Model {
+    let mut ops = Vec::new();
+    ops.push(OpDesc::conv(3, 64, 224, 224, 7, 2, 3, p));
+    // (channels, spatial, first_stride)
+    let stages: [(u32, u32, u32, u32); 4] =
+        [(64, 64, 56, 1), (64, 128, 56, 2), (128, 256, 28, 2), (256, 512, 14, 2)];
+    for (cin, cout, s_in, stride1) in stages {
+        // block 1 (possibly strided, with PWCV downsample shortcut)
+        ops.push(OpDesc::conv(cin, cout, s_in, s_in, 3, stride1, 1, p));
+        let s_out = s_in / stride1;
+        ops.push(OpDesc::conv(cout, cout, s_out, s_out, 3, 1, 1, p));
+        if stride1 != 1 || cin != cout {
+            ops.push(OpDesc::pwcv(cin, cout, s_out, s_out, p));
+        }
+        // block 2
+        ops.push(OpDesc::conv(cout, cout, s_out, s_out, 3, 1, 1, p));
+        ops.push(OpDesc::conv(cout, cout, s_out, s_out, 3, 1, 1, p));
+    }
+    ops.push(OpDesc::mm(1, 512, 1000, p));
+    Model { name: "resnet18", ops, scalar_fraction: 0.03 }
+}
+
+/// GoogLeNet (Inception v1): stem + 9 inception modules + FC.
+pub fn googlenet(p: Precision) -> Model {
+    let mut ops = Vec::new();
+    ops.push(OpDesc::conv(3, 64, 224, 224, 7, 2, 3, p));
+    ops.push(OpDesc::pwcv(64, 64, 56, 56, p));
+    ops.push(OpDesc::conv(64, 192, 56, 56, 3, 1, 1, p));
+    // (cin, #1x1, #3x3red, #3x3, #5x5red, #5x5, pool_proj, spatial)
+    let inception: [(u32, u32, u32, u32, u32, u32, u32, u32); 9] = [
+        (192, 64, 96, 128, 16, 32, 32, 28),   // 3a
+        (256, 128, 128, 192, 32, 96, 64, 28), // 3b
+        (480, 192, 96, 208, 16, 48, 64, 14),  // 4a
+        (512, 160, 112, 224, 24, 64, 64, 14), // 4b
+        (512, 128, 128, 256, 24, 64, 64, 14), // 4c
+        (512, 112, 144, 288, 32, 64, 64, 14), // 4d
+        (528, 256, 160, 320, 32, 128, 128, 14), // 4e
+        (832, 256, 160, 320, 32, 128, 128, 7), // 5a
+        (832, 384, 192, 384, 48, 128, 128, 7), // 5b
+    ];
+    for (cin, n1, n3r, n3, n5r, n5, pp, s) in inception {
+        ops.push(OpDesc::pwcv(cin, n1, s, s, p));
+        ops.push(OpDesc::pwcv(cin, n3r, s, s, p));
+        ops.push(OpDesc::conv(n3r, n3, s, s, 3, 1, 1, p));
+        ops.push(OpDesc::pwcv(cin, n5r, s, s, p));
+        ops.push(OpDesc::conv(n5r, n5, s, s, 5, 1, 2, p));
+        ops.push(OpDesc::pwcv(cin, pp, s, s, p));
+    }
+    ops.push(OpDesc::mm(1, 1024, 1000, p));
+    Model { name: "googlenet", ops, scalar_fraction: 0.05 }
+}
+
+/// MobileNetV2: stem + 17 inverted-residual blocks + head.
+pub fn mobilenetv2(p: Precision) -> Model {
+    let mut ops = Vec::new();
+    ops.push(OpDesc::conv(3, 32, 224, 224, 3, 2, 1, p));
+    // Inverted residual: expand (PWCV) -> DWCV 3x3 -> project (PWCV).
+    // (expansion t, cout, repeats n, stride s), input starts 32ch @112.
+    let cfg: [(u32, u32, u32, u32); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32u32;
+    let mut s = 112u32;
+    for (t, cout, n, stride) in cfg {
+        for i in 0..n {
+            let st = if i == 0 { stride } else { 1 };
+            let e = cin * t;
+            if t != 1 {
+                ops.push(OpDesc::pwcv(cin, e, s, s, p));
+            }
+            ops.push(OpDesc::dwcv(e, s, s, 3, st, 1, p));
+            let s_out = s / st;
+            ops.push(OpDesc::pwcv(e, cout, s_out, s_out, p));
+            cin = cout;
+            s = s_out;
+        }
+    }
+    ops.push(OpDesc::pwcv(320, 1280, 7, 7, p));
+    ops.push(OpDesc::mm(1, 1280, 1000, p));
+    // Lightweight network: non-linear / scalar ops are a visibly larger
+    // share of end-to-end time (Table I's MobileNetV2 discussion).
+    Model { name: "mobilenetv2", ops, scalar_fraction: 0.30 }
+}
+
+/// ViT family: `depth` transformer blocks over `tokens` tokens of width
+/// `dim` with MLP hidden size `mlp`.
+pub fn vit(p: Precision, name: &'static str, dim: u32, mlp: u32, tokens: u32,
+           depth: u32) -> Model {
+    let mut ops = Vec::new();
+    // Patch embedding: the 16x16/s16 convolution is exactly a matrix
+    // multiply of the 196 flattened patches by the (3*16*16, dim) weight —
+    // the standard deployment form (and a kernel this size would need
+    // Kseg decomposition as a convolution).
+    ops.push(OpDesc::mm(196, 3 * 16 * 16, dim, p));
+    for _ in 0..depth {
+        // QKV projection.
+        ops.push(OpDesc::mm(tokens, dim, 3 * dim, p));
+        // Attention scores + weighted values (per-head MMs fused as full-dim
+        // MMs — identical MAC count).
+        ops.push(OpDesc::mm(tokens, dim, tokens, p));
+        ops.push(OpDesc::mm(tokens, tokens, dim, p));
+        // Output projection.
+        ops.push(OpDesc::mm(tokens, dim, dim, p));
+        // MLP.
+        ops.push(OpDesc::mm(tokens, dim, mlp, p));
+        ops.push(OpDesc::mm(tokens, mlp, dim, p));
+    }
+    ops.push(OpDesc::mm(1, dim, 1000, p));
+    let scalar_fraction = 0.08; // softmax + layernorm share
+    Model { name, ops, scalar_fraction }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_resolve_and_validate() {
+        for name in MODELS {
+            let m = model_by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert!(!m.ops.is_empty());
+            for op in &m.ops {
+                op.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn vgg16_macs_match_published_scale() {
+        // VGG16 is ~15.5 GMACs at 224x224.
+        let m = vgg16(Precision::Int8);
+        let g = m.total_macs() as f64 / 1e9;
+        assert!((15.0..16.0).contains(&g), "VGG16 GMACs = {g}");
+    }
+
+    #[test]
+    fn resnet18_macs_match_published_scale() {
+        // ResNet18 is ~1.8 GMACs.
+        let m = resnet18(Precision::Int8);
+        let g = m.total_macs() as f64 / 1e9;
+        assert!((1.6..2.0).contains(&g), "ResNet18 GMACs = {g}");
+    }
+
+    #[test]
+    fn mobilenetv2_macs_match_published_scale() {
+        // MobileNetV2 is ~0.3 GMACs.
+        let m = mobilenetv2(Precision::Int8);
+        let g = m.total_macs() as f64 / 1e9;
+        assert!((0.25..0.40).contains(&g), "MobileNetV2 GMACs = {g}");
+    }
+
+    #[test]
+    fn vit_b16_macs_match_published_scale() {
+        // ViT-B/16 is ~16-17 GMACs at 224x224 with 197 tokens.
+        let m = model_by_name("vit_b16").unwrap();
+        let g = m.total_macs() as f64 / 1e9;
+        assert!((14.0..19.0).contains(&g), "ViT-B/16 GMACs = {g}");
+    }
+
+    #[test]
+    fn mobilenet_is_dw_pw_dominated() {
+        use crate::models::ops::OpKind;
+        let m = mobilenetv2(Precision::Int8);
+        let pw_dw: u64 = m
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Pwcv | OpKind::Dwcv))
+            .map(|o| o.total_macs())
+            .sum();
+        assert!(pw_dw as f64 / m.total_macs() as f64 > 0.8);
+    }
+
+    #[test]
+    fn precision_retype_preserves_shape() {
+        let m = vgg16(Precision::Int8).at_precision(Precision::Int4);
+        assert!(m.ops.iter().all(|o| o.prec == Precision::Int4));
+        assert_eq!(m.total_macs(), vgg16(Precision::Int8).total_macs());
+    }
+}

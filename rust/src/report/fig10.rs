@@ -1,0 +1,126 @@
+//! Fig. 10 — external-memory access size of SPEED's dataflow strategies
+//! relative to Ara, per benchmark operator.
+//!
+//! Paper values (SPEED traffic as % of Ara's): PWCV — FFCS 12.12 %, CF
+//! 47.12 %, FF 9.81 %; DWCV3×3(s=2) — FF 15.92 %; FF saves 70.22–90.19 %
+//! across operators; FFCS saves 35.11–87.88 % (excluding DWCV).
+
+use crate::ara::{ara_cost, AraParams};
+use crate::compiler::{execute_op, MemLayout};
+use crate::config::SpeedConfig;
+use crate::dataflow::applicable;
+use crate::isa::StrategyKind;
+use crate::models::OpDesc;
+use crate::sim::Processor;
+
+/// Traffic of one (operator, strategy) cell, in bytes.
+#[derive(Debug, Clone)]
+pub struct Fig10Cell {
+    pub operator: &'static str,
+    pub strat: StrategyKind,
+    pub speed_bytes: u64,
+    pub ara_bytes: u64,
+}
+
+impl Fig10Cell {
+    /// SPEED's traffic as a percentage of Ara's (the paper's metric).
+    pub fn percent_of_ara(&self) -> f64 {
+        100.0 * self.speed_bytes as f64 / self.ara_bytes as f64
+    }
+}
+
+/// Measure SPEED traffic for one (op, strategy) by running the compiled
+/// instruction stream (byte-accurate, from the memory model's counters).
+pub fn speed_traffic(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> u64 {
+    let mut p = Processor::new(*cfg, 1 << 24);
+    let layout = MemLayout::for_op(op, 1 << 24).unwrap();
+    let (stats, _) = execute_op(&mut p, op, strat, layout, false).unwrap();
+    stats.traffic.total()
+}
+
+/// All Fig. 10 cells.
+pub fn fig10_data(cfg: &SpeedConfig) -> Vec<Fig10Cell> {
+    let params = AraParams::default();
+    let mut cells = Vec::new();
+    for (name, op) in super::benchmark_ops() {
+        let ara = ara_cost(&op, &params).dram_total();
+        for strat in [StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff] {
+            if !applicable(strat, &op) {
+                continue;
+            }
+            cells.push(Fig10Cell {
+                operator: name,
+                strat,
+                speed_bytes: speed_traffic(&op, cfg, strat),
+                ara_bytes: ara,
+            });
+        }
+    }
+    cells
+}
+
+/// Text report.
+pub fn fig10(cfg: &SpeedConfig) -> String {
+    let cells = fig10_data(cfg);
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.operator.to_string(),
+                c.strat.to_string().to_uppercase(),
+                format!("{:.1}", c.speed_bytes as f64 / 1024.0),
+                format!("{:.1}", c.ara_bytes as f64 / 1024.0),
+                format!("{:.2}%", c.percent_of_ara()),
+            ]
+        })
+        .collect();
+    let mut out =
+        String::from("Fig. 10 — external memory access size vs Ara (16-bit operators)\n");
+    out.push_str(&super::render_table(
+        &["operator", "strategy", "SPEED KiB", "Ara KiB", "SPEED % of Ara"],
+        &rows,
+    ));
+    out.push_str(
+        "\npaper: PWCV FFCS 12.12% / CF 47.12% / FF 9.81%; DWCV FF 15.92%;\n\
+         FF saves 70.22-90.19% across ops; FFCS saves 35.11-87.88% (excl. DWCV)\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_shape_holds() {
+        let cells = fig10_data(&SpeedConfig::reference());
+        // 3 strategies x PWCV/CONV3/CONV5 + FF on DWCV = 10 cells.
+        assert_eq!(cells.len(), 10);
+        for c in &cells {
+            // Every SPEED strategy beats Ara on traffic...
+            assert!(
+                c.speed_bytes < c.ara_bytes,
+                "{} {}: {} !< {}",
+                c.operator,
+                c.strat,
+                c.speed_bytes,
+                c.ara_bytes
+            );
+        }
+        // ...and the PWCV ordering matches the paper: FF < FFCS < CF.
+        let pw: Vec<&Fig10Cell> = cells.iter().filter(|c| c.operator == "PWCV").collect();
+        let pct = |s: StrategyKind| {
+            pw.iter().find(|c| c.strat == s).unwrap().percent_of_ara()
+        };
+        assert!(pct(StrategyKind::Ff) < pct(StrategyKind::Ffcs));
+        assert!(pct(StrategyKind::Ffcs) < pct(StrategyKind::Cf));
+        // CF is the traffic-heavy arm on every operator it applies to.
+        for opname in ["CONV3x3", "CONV5x5"] {
+            let row: Vec<&Fig10Cell> =
+                cells.iter().filter(|c| c.operator == opname).collect();
+            let cf = row.iter().find(|c| c.strat == StrategyKind::Cf).unwrap();
+            let ff = row.iter().find(|c| c.strat == StrategyKind::Ff).unwrap();
+            assert!(cf.speed_bytes > ff.speed_bytes);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Fig. 11 — performance (ops/cycle) of SPEED's strategies vs Ara across
+//! input tensor sizes, 16-bit precision.
+//!
+//! Paper ranges (SPEED best strategy over Ara): PWCV 5.21–88.56×,
+//! DWCV3×3 1.06–11.27×, CONV3×3 1.38–15.29×, CONV5×5 1.21–22.94× — with
+//! Ara collapsing on small tensors while SPEED stays flat.
+
+use crate::ara::{ara_cost, AraParams};
+use crate::compiler::{execute_op, MemLayout};
+use crate::config::{Precision, SpeedConfig};
+use crate::dataflow::applicable;
+use crate::isa::StrategyKind;
+use crate::models::{OpDesc, OpKind};
+use crate::sim::Processor;
+
+/// One point of the Fig. 11 sweep.
+#[derive(Debug, Clone)]
+pub struct Fig11Point {
+    pub operator: &'static str,
+    pub fmap: u32,
+    pub strat: StrategyKind,
+    pub speed_ops_per_cycle: f64,
+    pub ara_ops_per_cycle: f64,
+}
+
+impl Fig11Point {
+    pub fn speedup(&self) -> f64 {
+        self.speed_ops_per_cycle / self.ara_ops_per_cycle
+    }
+}
+
+fn op_at(kind: OpKind, fmap: u32) -> OpDesc {
+    let p = Precision::Int16;
+    match kind {
+        OpKind::Pwcv => OpDesc::pwcv(64, 64, fmap, fmap, p),
+        OpKind::Conv => OpDesc::conv(32, 32, fmap, fmap, 3, 1, 1, p),
+        OpKind::Dwcv => OpDesc::dwcv(32, fmap.max(3), fmap.max(3), 3, 2, 1, p),
+        OpKind::Mm => OpDesc::mm(fmap, fmap, fmap, p),
+    }
+}
+
+fn conv5_at(fmap: u32) -> OpDesc {
+    OpDesc::conv(32, 32, fmap.max(5), fmap.max(5), 5, 1, 2, Precision::Int16)
+}
+
+/// Evaluate one (operator, size, strategy).
+pub fn eval(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> f64 {
+    let mut p = Processor::new(*cfg, 1 << 26);
+    let layout = MemLayout::for_op(op, 1 << 26).unwrap();
+    let (stats, _) = execute_op(&mut p, op, strat, layout, false).unwrap();
+    stats.ops_per_cycle()
+}
+
+/// The full sweep: operators × feature-map sizes × applicable strategies.
+pub fn fig11_data(cfg: &SpeedConfig, sizes: &[u32]) -> Vec<Fig11Point> {
+    let params = AraParams::default();
+    let mut out = Vec::new();
+    let mut cases: Vec<(&'static str, OpDesc)> = Vec::new();
+    for &s in sizes {
+        cases.push(("PWCV", op_at(OpKind::Pwcv, s)));
+        cases.push(("CONV3x3", op_at(OpKind::Conv, s)));
+        cases.push(("DWCV3x3(s=2)", op_at(OpKind::Dwcv, s)));
+        cases.push(("CONV5x5", conv5_at(s)));
+    }
+    for (name, op) in cases {
+        let ara = ara_cost(&op, &params).ops_per_cycle(&op);
+        for strat in [StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff] {
+            if !applicable(strat, &op) {
+                continue;
+            }
+            out.push(Fig11Point {
+                operator: name,
+                fmap: op.h,
+                strat,
+                speed_ops_per_cycle: eval(&op, cfg, strat),
+                ara_ops_per_cycle: ara,
+            });
+        }
+    }
+    out
+}
+
+/// Default sizes for the sweep (paper sweeps "various input tensor sizes").
+pub const DEFAULT_SIZES: [u32; 4] = [8, 16, 32, 64];
+
+/// Text report.
+pub fn fig11(cfg: &SpeedConfig, sizes: &[u32]) -> String {
+    let pts = fig11_data(cfg, sizes);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                p.operator.to_string(),
+                format!("{}x{}", p.fmap, p.fmap),
+                p.strat.to_string().to_uppercase(),
+                format!("{:.2}", p.speed_ops_per_cycle),
+                format!("{:.2}", p.ara_ops_per_cycle),
+                format!("{:.2}x", p.speedup()),
+            ]
+        })
+        .collect();
+    let mut out = String::from("Fig. 11 — performance vs Ara across tensor sizes (16-bit)\n");
+    out.push_str(&super::render_table(
+        &["operator", "fmap", "strategy", "SPEED ops/cyc", "Ara ops/cyc", "speedup"],
+        &rows,
+    ));
+    out.push_str(
+        "\npaper speedups (best strategy): PWCV 5.21-88.56x, DWCV3x3 1.06-11.27x,\n\
+         CONV3x3 1.38-15.29x, CONV5x5 1.21-22.94x; Ara collapses on small tensors\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_shape_holds() {
+        let cfg = SpeedConfig::reference();
+        let pts = fig11_data(&cfg, &[8, 32]);
+        // Best SPEED strategy beats Ara on every operator/size.
+        for opname in ["PWCV", "CONV3x3", "DWCV3x3(s=2)", "CONV5x5"] {
+            for &s in &[8u32, 32] {
+                let best = pts
+                    .iter()
+                    .filter(|p| p.operator == opname && p.fmap >= s && p.fmap <= s.max(5))
+                    .map(|p| p.speedup())
+                    .fold(0.0f64, f64::max);
+                assert!(best > 1.0, "{opname}@{s}: best speedup {best}");
+            }
+        }
+        // Ara collapse: the PWCV speedup grows as tensors shrink.
+        let su = |s: u32| {
+            pts.iter()
+                .filter(|p| p.operator == "PWCV" && p.fmap == s)
+                .map(|p| p.speedup())
+                .fold(0.0f64, f64::max)
+        };
+        assert!(su(8) > su(32), "small {} !> large {}", su(8), su(32));
+    }
+
+    #[test]
+    fn cf_wins_pwcv_performance() {
+        let cfg = SpeedConfig::reference();
+        let pts = fig11_data(&cfg, &[16]);
+        let get = |s: StrategyKind| {
+            pts.iter()
+                .find(|p| p.operator == "PWCV" && p.strat == s)
+                .unwrap()
+                .speed_ops_per_cycle
+        };
+        assert!(get(StrategyKind::Cf) > get(StrategyKind::Ffcs));
+    }
+}

@@ -1,0 +1,106 @@
+//! Fig. 13 — area breakdown; Fig. 14 — design-space exploration.
+
+use crate::config::SpeedConfig;
+use crate::dse::{peak_area_eff, sweep, DsePoint};
+use crate::metrics::{lane_area, speed_area};
+
+/// Fig. 13 text report: processor- and lane-level area breakdown of the
+/// reference instance. Paper: lanes 59 % of the processor; lane = VRF 33 %,
+/// OP queues 21 %, OP requester 16 %, ALU 13 %, MPTU 12 %.
+pub fn fig13() -> String {
+    let cfg = SpeedConfig::reference();
+    let b = speed_area(&cfg);
+    let lane = lane_area(&cfg);
+    let lt = lane.total();
+    let rows = vec![
+        vec!["VRF".to_string(), format!("{:.4}", lane.vrf), format!("{:.0}%", 100.0 * lane.vrf / lt), "33%".into()],
+        vec!["OP queues".into(), format!("{:.4}", lane.queues), format!("{:.0}%", 100.0 * lane.queues / lt), "21%".into()],
+        vec!["OP requester".into(), format!("{:.4}", lane.requester), format!("{:.0}%", 100.0 * lane.requester / lt), "16%".into()],
+        vec!["ALU".into(), format!("{:.4}", lane.alu), format!("{:.0}%", 100.0 * lane.alu / lt), "13%".into()],
+        vec!["MPTU".into(), format!("{:.4}", lane.mptu), format!("{:.0}%", 100.0 * lane.mptu / lt), "12%".into()],
+        vec!["misc".into(), format!("{:.4}", lane.misc), format!("{:.0}%", 100.0 * lane.misc / lt), "5%".into()],
+    ];
+    let mut out = String::from("Fig. 13 — area breakdown (TSMC 28 nm analytical model)\n");
+    out.push_str(&format!(
+        "processor: total {:.2} mm², lanes {:.2} mm² ({:.0}%, paper 59%), \
+         front-end {:.2} mm² ({:.0}%, paper 41%)\n\nlane breakdown:\n",
+        b.total(),
+        b.lanes_total,
+        100.0 * b.lane_fraction(),
+        b.frontend,
+        100.0 * (1.0 - b.lane_fraction()),
+    ));
+    out.push_str(&super::render_table(&["component", "mm²", "share", "paper"], &rows));
+    out.push_str(&format!(
+        "\none MPTU = {:.1}% of the whole processor (paper 1.7%) while \
+         delivering the multi-precision throughput\n",
+        100.0 * lane.mptu / b.total()
+    ));
+    out
+}
+
+/// Fig. 14 text report: throughput / area efficiency across the 27-point
+/// design space. Paper: 8.5–161.3 GOPS on CONV3×3 @16-bit; peak
+/// 80.3 GOPS/mm² at 96.4 GOPS; 4-lane instances peak area efficiency.
+pub fn fig14() -> (String, Vec<DsePoint>) {
+    let points = sweep();
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{}L {}x{}", p.cfg.lanes, p.cfg.tile_r, p.cfg.tile_c),
+                format!("{:.1}", p.gops),
+                format!("{:.2}", p.area_mm2),
+                format!("{:.1}", p.area_eff()),
+            ]
+        })
+        .collect();
+    let peak = peak_area_eff(&points);
+    let lo = points.iter().map(|p| p.gops).fold(f64::MAX, f64::min);
+    let hi = points.iter().map(|p| p.gops).fold(0.0f64, f64::max);
+    let mut out = String::from(
+        "Fig. 14 — DSE: CONV3x3 @16-bit across lanes x tile geometry\n",
+    );
+    out.push_str(&super::render_table(
+        &["config", "GOPS", "area mm²", "GOPS/mm²"],
+        &rows,
+    ));
+    out.push_str(&format!(
+        "\nthroughput range {lo:.1}-{hi:.1} GOPS (paper 8.5-161.3); peak area \
+         efficiency {:.1} GOPS/mm² at {:.1} GOPS on {}L {}x{} (paper 80.3 at 96.4, \
+         4-lane peak)\n",
+        peak.area_eff(),
+        peak.gops,
+        peak.cfg.lanes,
+        peak.cfg.tile_r,
+        peak.cfg.tile_c
+    ));
+    (out, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_reports_reference_breakdown() {
+        let r = fig13();
+        assert!(r.contains("VRF"));
+        assert!(r.contains("MPTU"));
+        assert!(r.contains("59%") || r.contains("58%") || r.contains("60%"));
+    }
+
+    #[test]
+    fn fig14_peak_is_mid_size_config() {
+        let (_, points) = fig14();
+        assert_eq!(points.len(), 27);
+        let peak = peak_area_eff(&points);
+        // The paper's conclusion: 4-lane instances balance throughput and
+        // area; the extreme corners must not win.
+        assert_eq!(peak.cfg.lanes, 4, "peak at {:?}", peak.cfg);
+        // Wide dynamic range across the space.
+        let lo = points.iter().map(|p| p.gops).fold(f64::MAX, f64::min);
+        let hi = points.iter().map(|p| p.gops).fold(0.0f64, f64::max);
+        assert!(hi / lo > 3.0, "range {lo}..{hi}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation (Sec. IV) from this repository's models and simulators.
+//!
+//! Each `figNN`/`tableN` function returns the same rows/series the paper
+//! reports, as plain text plus structured data for the benches. Paper
+//! values are printed side-by-side where the paper states them so
+//! EXPERIMENTS.md can record paper-vs-measured directly.
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig2;
+pub mod fig1314;
+pub mod table1;
+pub mod table23;
+
+pub use fig10::fig10;
+pub use fig11::fig11;
+pub use fig12::fig12;
+pub use fig1314::{fig13, fig14};
+pub use fig2::fig2;
+pub use table1::table1;
+pub use table23::{table2, table3};
+
+/// Render a text table with aligned columns.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    line(
+        &mut out,
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// The standard operator benchmark set of Figs. 10/11 (16-bit precision,
+/// shapes representative of the paper's operator-level evaluation).
+pub fn benchmark_ops() -> Vec<(&'static str, crate::models::OpDesc)> {
+    use crate::config::Precision::Int16;
+    use crate::models::OpDesc;
+    vec![
+        ("PWCV", OpDesc::pwcv(64, 64, 12, 12, Int16)),
+        ("CONV3x3", OpDesc::conv(32, 32, 16, 16, 3, 1, 1, Int16)),
+        ("DWCV3x3(s=2)", OpDesc::dwcv(32, 17, 17, 3, 2, 1, Int16)),
+        ("CONV5x5", OpDesc::conv(32, 32, 16, 16, 5, 1, 2, Int16)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let t = render_table(
+            &["a", "long-header"],
+            &[vec!["x".into(), "y".into()], vec!["wide-cell".into(), "z".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("long-header"));
+        assert!(lines[1].starts_with("---"));
+    }
+
+    #[test]
+    fn benchmark_set_matches_paper() {
+        let ops = benchmark_ops();
+        assert_eq!(ops.len(), 4);
+        assert!(ops.iter().all(|(_, o)| o.validate().is_ok()));
+    }
+}

@@ -1,0 +1,127 @@
+//! Table I — complete-application inference: VGG16 and MobileNetV2 at
+//! INT8, convolution-layers-only vs complete application (scalar core
+//! handles pooling / normalization / non-vectorizable glue).
+//!
+//! Paper: VGG16 6.11× (conv-only) / 5.84× (complete); MobileNetV2
+//! 144.25× (conv-only) / 100.81× (complete) — the gap narrows on the
+//! lightweight network because non-linear scalar work is a larger share.
+
+use crate::ara::AraParams;
+use crate::config::{Precision, SpeedConfig};
+use crate::coordinator::{ara_complete_cycles, run_model, run_model_ara, Policy};
+use crate::models::zoo::model_by_name;
+use crate::report::fig12::downscale;
+
+/// One Table I row.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub model: String,
+    pub speed_conv_cycles: u64,
+    pub speed_complete_cycles: u64,
+    pub ara_conv_cycles: u64,
+    pub ara_complete_cycles: u64,
+}
+
+impl Table1Row {
+    pub fn conv_speedup(&self) -> f64 {
+        self.ara_conv_cycles as f64 / self.speed_conv_cycles as f64
+    }
+
+    pub fn complete_speedup(&self) -> f64 {
+        self.ara_complete_cycles as f64 / self.speed_complete_cycles as f64
+    }
+}
+
+/// Evaluate both Table I networks at INT8.
+pub fn table1_data(cfg: &SpeedConfig, quick: bool) -> Vec<Table1Row> {
+    let params = AraParams::default();
+    ["vgg16", "mobilenetv2"]
+        .iter()
+        .map(|name| {
+            let mut model = model_by_name(name).unwrap();
+            if quick {
+                model = downscale(&model, 4);
+            }
+            let s = run_model(&model, Precision::Int8, cfg, Policy::Mixed).unwrap();
+            let a = run_model_ara(&model, Precision::Int8, &params);
+            Table1Row {
+                model: name.to_string(),
+                speed_conv_cycles: s.vector_cycles(),
+                speed_complete_cycles: s.complete_cycles(),
+                ara_conv_cycles: a.cycles,
+                ara_complete_cycles: ara_complete_cycles(&a, &s),
+            }
+        })
+        .collect()
+}
+
+/// Text report.
+pub fn table1(cfg: &SpeedConfig, quick: bool) -> String {
+    let rows = table1_data(cfg, quick);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .flat_map(|r| {
+            vec![
+                vec![
+                    r.model.clone(),
+                    "conv-only".into(),
+                    r.speed_conv_cycles.to_string(),
+                    r.ara_conv_cycles.to_string(),
+                    format!("{:.2}x", r.conv_speedup()),
+                ],
+                vec![
+                    r.model.clone(),
+                    "complete".into(),
+                    r.speed_complete_cycles.to_string(),
+                    r.ara_complete_cycles.to_string(),
+                    format!("{:.2}x", r.complete_speedup()),
+                ],
+            ]
+        })
+        .collect();
+    let mut out = format!(
+        "Table I — INT8 inference cycles, SPEED vs Ara{}\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+    out.push_str(&super::render_table(
+        &["model", "scope", "SPEED cycles", "Ara cycles", "speedup"],
+        &table,
+    ));
+    out.push_str(
+        "\npaper: VGG16 6.11x conv-only / 5.84x complete \
+         (622,010,560 vs 3,677,525,600 cycles);\n\
+         MobileNetV2 144.25x conv-only / 100.81x complete \
+         (13,395,597 vs 1,932,019,408 cycles)\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_holds() {
+        let rows = table1_data(&SpeedConfig::reference(), true);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.conv_speedup() > 1.0, "{}: {}", r.model, r.conv_speedup());
+            // Scalar share narrows the complete-application speedup.
+            assert!(
+                r.complete_speedup() < r.conv_speedup(),
+                "{}: complete {} !< conv {}",
+                r.model,
+                r.complete_speedup(),
+                r.conv_speedup()
+            );
+        }
+        // MobileNetV2's PWCV/DWCV dominance gives it the (much) larger
+        // speedup, and its scalar share the larger conv->complete drop.
+        let vgg = &rows[0];
+        let mnv2 = &rows[1];
+        assert!(mnv2.conv_speedup() > vgg.conv_speedup());
+        let vgg_drop = vgg.conv_speedup() / vgg.complete_speedup();
+        let mnv2_drop = mnv2.conv_speedup() / mnv2.complete_speedup();
+        assert!(mnv2_drop > vgg_drop, "{mnv2_drop} !> {vgg_drop}");
+    }
+}

@@ -1,0 +1,244 @@
+//! Table II — synthesis comparison vs Ara; Table III — comparison with
+//! state-of-the-art RISC-V DNN processors under the 28 nm projection.
+
+use crate::compiler::{execute_op, MemLayout};
+use crate::config::{Precision, SpeedConfig};
+use crate::isa::StrategyKind;
+use crate::metrics::{lane_area, speed_area, speed_power, ReportedMetrics};
+use crate::models::OpDesc;
+use crate::sim::Processor;
+
+/// Table II text report. Paper: SPEED lane 1.08 mm² / 71 mW at 28 nm
+/// 1.05 GHz; Ara lane 1.20 mm² / 229 mW at 22 nm, projected to 1.94 mm² /
+/// 229 mW at 0.825 GHz — a 45 % area and 69 % power reduction.
+pub fn table2() -> String {
+    let cfg = SpeedConfig::reference();
+    let speed_lane = lane_area(&cfg).total();
+    let speed_power_w = crate::metrics::lane_power(&cfg);
+    let ara22 = ReportedMetrics {
+        node_nm: 22.0,
+        freq_ghz: 1.05,
+        area_mm2: 1.20,
+        power_w: 0.229,
+        gops: 0.0,
+    };
+    let ara28 = ara22.project(28.0);
+    let rows = vec![
+        vec!["technology [nm]".to_string(), "22".into(), "28".into(), "28".into()],
+        vec!["lanes".into(), "4".into(), "4".into(), "4".into()],
+        vec!["VRF [KiB]".into(), "16".into(), "16".into(), "16".into()],
+        vec![
+            "TT frequency [GHz]".into(),
+            format!("{:.2}", ara22.freq_ghz),
+            format!("{:.3}", ara28.freq_ghz),
+            format!("{:.2}", cfg.freq_ghz),
+        ],
+        vec![
+            "lane area [mm²]".into(),
+            format!("{:.2}", ara22.area_mm2),
+            format!("{:.2}", ara28.area_mm2),
+            format!("{:.2}", speed_lane),
+        ],
+        vec![
+            "lane power [mW]".into(),
+            format!("{:.0}", ara22.power_w * 1e3),
+            format!("{:.0}", ara28.power_w * 1e3),
+            format!("{:.0}", speed_power_w * 1e3),
+        ],
+    ];
+    let mut out = String::from("Table II — synthesis results, Ara vs SPEED\n");
+    out.push_str(&super::render_table(
+        &["parameter", "Ara reported", "Ara projected*", "SPEED"],
+        &rows,
+    ));
+    out.push_str(&format!(
+        "\n* 22→28 nm: linear frequency, quadratic area, constant power\n\
+         area reduction {:.0}% (paper 45%), power reduction {:.0}% (paper 69%)\n",
+        100.0 * (1.0 - speed_lane / ara28.area_mm2),
+        100.0 * (1.0 - speed_power_w / ara28.power_w),
+    ));
+    out
+}
+
+/// Measure SPEED's achieved throughput (GOPS) at a precision on the
+/// Table III instance, using a high-utilization CONV3×3 workload.
+pub fn measured_peak_gops(cfg: &SpeedConfig, prec: Precision) -> f64 {
+    let op = OpDesc::conv(128, 128, 28, 28, 3, 1, 1, prec);
+    let mut p = Processor::new(*cfg, 1 << 26);
+    let layout = MemLayout::for_op(&op, 1 << 26).unwrap();
+    let (stats, _) = execute_op(&mut p, &op, StrategyKind::Ffcs, layout, false).unwrap();
+    stats.gops(cfg.freq_ghz)
+}
+
+/// A Table III competitor row as reported by its own paper.
+#[derive(Debug, Clone)]
+pub struct Competitor {
+    pub name: &'static str,
+    pub node_nm: f64,
+    pub area_mm2: f64,
+    pub freq_ghz: f64,
+    pub power_w: f64,
+    /// (GOPS @INT8, GOPS at best integer precision, best precision label)
+    pub int8_gops: f64,
+    pub best_gops: f64,
+    pub best_label: &'static str,
+}
+
+/// Reported rows of Table III (Yun, Vega, XPULPNN, DARKSIDE, Dustin).
+pub fn competitors() -> Vec<Competitor> {
+    vec![
+        Competitor { name: "Yun", node_nm: 65.0, area_mm2: 6.0, freq_ghz: 0.28,
+            power_w: 0.228, int8_gops: 22.9, best_gops: 22.9, best_label: "8b" },
+        Competitor { name: "Vega", node_nm: 22.0, area_mm2: 12.0, freq_ghz: 0.45,
+            power_w: 0.0254, int8_gops: 15.6, best_gops: 15.6, best_label: "8b" },
+        Competitor { name: "XPULPNN", node_nm: 22.0, area_mm2: 1.05, freq_ghz: 0.4,
+            power_w: 0.0207, int8_gops: 23.0, best_gops: 72.0, best_label: "2b" },
+        Competitor { name: "DARKSIDE", node_nm: 65.0, area_mm2: 12.0, freq_ghz: 0.29,
+            power_w: 0.213, int8_gops: 17.0, best_gops: 65.0, best_label: "2b" },
+        Competitor { name: "Dustin", node_nm: 65.0, area_mm2: 10.0, freq_ghz: 0.205,
+            power_w: 0.156, int8_gops: 15.0, best_gops: 58.0, best_label: "2b" },
+    ]
+}
+
+/// One output row of the Table III comparison.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub name: String,
+    pub gops_8b: f64,
+    pub area_eff_8b: f64,
+    pub energy_eff_8b: f64,
+    pub gops_best: f64,
+    pub area_eff_best: f64,
+    pub energy_eff_best: f64,
+    pub best_label: String,
+}
+
+/// The full Table III data at 28 nm.
+pub fn table3_data() -> Vec<Table3Row> {
+    let mut rows = Vec::new();
+    for c in competitors() {
+        let m8 = ReportedMetrics {
+            node_nm: c.node_nm,
+            freq_ghz: c.freq_ghz,
+            area_mm2: c.area_mm2,
+            power_w: c.power_w,
+            gops: c.int8_gops,
+        }
+        .project(28.0);
+        let mb = ReportedMetrics {
+            node_nm: c.node_nm,
+            freq_ghz: c.freq_ghz,
+            area_mm2: c.area_mm2,
+            power_w: c.power_w,
+            gops: c.best_gops,
+        }
+        .project(28.0);
+        rows.push(Table3Row {
+            name: c.name.to_string(),
+            gops_8b: m8.gops,
+            area_eff_8b: m8.area_eff(),
+            energy_eff_8b: m8.energy_eff(),
+            gops_best: mb.gops,
+            area_eff_best: mb.area_eff(),
+            energy_eff_best: mb.energy_eff(),
+            best_label: c.best_label.to_string(),
+        });
+    }
+    // SPEED: the Table III instance (4 lanes, 8x4 tiles), measured.
+    let cfg = SpeedConfig::table3();
+    let area = speed_area(&cfg).total();
+    let power = speed_power(&cfg);
+    let g8 = measured_peak_gops(&cfg, Precision::Int8);
+    let g4 = measured_peak_gops(&cfg, Precision::Int4);
+    rows.push(Table3Row {
+        name: "SPEED (ours)".to_string(),
+        gops_8b: g8,
+        area_eff_8b: g8 / area,
+        energy_eff_8b: g8 / power,
+        gops_best: g4,
+        area_eff_best: g4 / area,
+        energy_eff_best: g4 / power,
+        best_label: "4b".to_string(),
+    });
+    rows
+}
+
+/// Text report.
+pub fn table3() -> String {
+    let rows = table3_data();
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{:.1}", r.gops_8b),
+                format!("{:.1}", r.area_eff_8b),
+                format!("{:.0}", r.energy_eff_8b),
+                format!("{:.1} ({})", r.gops_best, r.best_label),
+                format!("{:.1}", r.area_eff_best),
+                format!("{:.0}", r.energy_eff_best),
+            ]
+        })
+        .collect();
+    let mut out = String::from(
+        "Table III — comparison with state-of-the-art RISC-V processors \
+         (projected to 28 nm: linear freq / quadratic area / constant power)\n",
+    );
+    out.push_str(&super::render_table(
+        &[
+            "processor",
+            "INT8 GOPS",
+            "INT8 GOPS/mm²",
+            "INT8 GOPS/W",
+            "best GOPS",
+            "best GOPS/mm²",
+            "best GOPS/W",
+        ],
+        &table,
+    ));
+    out.push_str(
+        "\npaper SPEED row: 343.1 GOPS / 285.8 GOPS/mm² / 643 GOPS/W @8b;\n\
+         737.9 GOPS / 614.6 GOPS/mm² / 1383.4 GOPS/W @4b (4 lanes, 8x4 tiles)\n\
+         note: the paper reports a 1.20 mm² area for this instance; our\n\
+         analytical model (calibrated to Table II / Fig. 13) yields the full-\n\
+         processor area, so GOPS/mm² differs by that convention (see\n\
+         EXPERIMENTS.md).\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_report_shape() {
+        let r = table2();
+        assert!(r.contains("1.94"));
+        assert!(r.contains("SPEED"));
+    }
+
+    #[test]
+    fn table3_speed_dominates_throughput_and_area_eff() {
+        let rows = table3_data();
+        let speed = rows.last().unwrap().clone();
+        assert_eq!(speed.name, "SPEED (ours)");
+        for r in &rows[..rows.len() - 1] {
+            assert!(speed.gops_8b > r.gops_8b, "{}: {} !> {}", r.name, speed.gops_8b, r.gops_8b);
+            assert!(speed.gops_best > r.gops_best);
+        }
+        // 4-bit beats 8-bit on SPEED.
+        assert!(speed.gops_best > speed.gops_8b);
+    }
+
+    #[test]
+    fn competitor_projections_match_paper() {
+        let rows = table3_data();
+        let find = |n: &str| rows.iter().find(|r| r.name == n).unwrap().clone();
+        // Paper's projected values (reported | projected columns).
+        assert!((find("Yun").gops_8b - 53.2).abs() < 1.0);
+        assert!((find("XPULPNN").gops_8b - 18.1).abs() < 0.5);
+        assert!((find("Dustin").gops_best - 134.6).abs() < 2.0);
+        assert!((find("DARKSIDE").gops_best - 150.8).abs() < 2.0);
+    }
+}

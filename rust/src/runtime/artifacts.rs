@@ -1,0 +1,193 @@
+//! Artifact manifest: the contract `python/compile/aot.py` writes and the
+//! Rust runtime consumes.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::json::{parse, Json};
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub hlo_file: String,
+    pub golden_file: String,
+    pub input_shapes: Vec<Vec<i64>>,
+    pub output_shape: Vec<i64>,
+    /// Operator metadata (op kind, bits, stride, ...) as parsed JSON.
+    pub meta: Json,
+}
+
+impl Artifact {
+    /// Precision in bits from the metadata (defaults to 8).
+    pub fn bits(&self) -> u32 {
+        self.meta.get("bits").and_then(|j| j.as_i64()).unwrap_or(8) as u32
+    }
+
+    pub fn op_kind(&self) -> &str {
+        self.meta.get("op").and_then(|j| j.as_str()).unwrap_or("?")
+    }
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        if doc.get("format").and_then(|j| j.as_str()) != Some("hlo-text") {
+            return Err(anyhow!("manifest format must be 'hlo-text'"));
+        }
+        let arts = doc
+            .get("artifacts")
+            .and_then(|j| j.as_obj())
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in arts {
+            let input_shapes = a
+                .get("inputs")
+                .and_then(|j| j.as_arr())
+                .context("artifact missing inputs")?
+                .iter()
+                .map(|i| i.get("shape").and_then(|s| s.as_i64_vec()).context("bad shape"))
+                .collect::<Result<Vec<_>>>()?;
+            let output_shape = a
+                .get("output")
+                .and_then(|o| o.get("shape"))
+                .and_then(|s| s.as_i64_vec())
+                .context("artifact missing output shape")?;
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name: name.clone(),
+                    hlo_file: a
+                        .get("hlo")
+                        .and_then(|j| j.as_str())
+                        .context("missing hlo file")?
+                        .to_string(),
+                    golden_file: a
+                        .get("golden")
+                        .and_then(|j| j.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    input_shapes,
+                    output_shape,
+                    meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+/// Golden vectors for one artifact (inputs + expected output).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub inputs: Vec<Vec<i32>>,
+    pub output: Vec<i32>,
+    pub output_shape: Vec<i64>,
+}
+
+impl Golden {
+    pub fn load(dir: &Path, art: &Artifact) -> Result<Self> {
+        let path = dir.join(&art.golden_file);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = parse(&text).map_err(|e| anyhow!("golden: {e}"))?;
+        let inputs = doc
+            .get("inputs")
+            .and_then(|j| j.as_arr())
+            .context("golden missing inputs")?
+            .iter()
+            .map(|i| {
+                i.get("data")
+                    .and_then(|d| d.as_i64_vec())
+                    .map(|v| v.into_iter().map(|x| x as i32).collect())
+                    .context("bad golden input data")
+            })
+            .collect::<Result<Vec<Vec<i32>>>>()?;
+        let out = doc.get("output").context("golden missing output")?;
+        let output = out
+            .get("data")
+            .and_then(|d| d.as_i64_vec())
+            .context("bad golden output")?
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        let output_shape = out
+            .get("shape")
+            .and_then(|s| s.as_i64_vec())
+            .context("bad golden output shape")?;
+        Ok(Golden { inputs, output, output_shape })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{"format": "hlo-text", "artifacts": {
+        "mm_i8": {"hlo": "mm_i8.hlo.txt", "golden": "mm_i8.golden.json",
+                  "inputs": [{"shape": [4, 8], "dtype": "i32"},
+                             {"shape": [8, 4], "dtype": "i32"}],
+                  "output": {"shape": [4, 4], "dtype": "i32"},
+                  "meta": {"op": "mm", "bits": 8}, "sha256": "x"}}}"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.artifact("mm_i8").unwrap();
+        assert_eq!(a.input_shapes, vec![vec![4, 8], vec![8, 4]]);
+        assert_eq!(a.output_shape, vec![4, 4]);
+        assert_eq!(a.bits(), 8);
+        assert_eq!(a.op_kind(), "mm");
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = DOC.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // Integration sanity: if `make artifacts` has run, the real
+        // manifest must parse and contain the expected artifact set.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["mm_i8", "mm_i16", "mm_i4", "conv3x3_i8", "dwconv3x3_s2_i8"] {
+                assert!(m.artifact(name).is_some(), "{name} missing");
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Golden-model verification: the three-way agreement at the heart of the
+//! reproduction.
+//!
+//! For every artifact the AOT pipeline exports, three values must agree
+//! bit-exactly:
+//!
+//! 1. the **golden vector** computed by JAX at build time (itself pytest-
+//!    verified against the pure-jnp oracle and the Pallas kernels);
+//! 2. the **PJRT execution** of the lowered HLO from Rust (the request
+//!    path);
+//! 3. where the artifact is a single operator, the **cycle simulator's
+//!    functional output** for the equivalent instruction stream.
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use crate::compiler::{compile_op, MemLayout};
+use crate::config::Precision;
+use crate::models::ops::OpDesc;
+use crate::sim::Processor;
+
+use super::artifacts::{Artifact, Golden};
+use super::Engine;
+
+/// Outcome of one artifact's golden check.
+#[derive(Debug, Clone)]
+pub struct GoldenReport {
+    pub name: String,
+    /// PJRT output == build-time golden vector.
+    pub pjrt_ok: bool,
+    /// Simulator output == PJRT output (None = artifact is not a single
+    /// operator the simulator executes).
+    pub sim_ok: Option<bool>,
+    pub elems: usize,
+}
+
+impl GoldenReport {
+    pub fn ok(&self) -> bool {
+        self.pjrt_ok && self.sim_ok.unwrap_or(true)
+    }
+}
+
+/// Build the simulator operator equivalent of an artifact, if it is one.
+pub fn op_for_artifact(art: &Artifact) -> Option<OpDesc> {
+    let prec = Precision::from_bits(art.bits())?;
+    let meta = &art.meta;
+    let dim = |j: &super::json::Json, k: usize| -> u32 {
+        j.as_i64_vec().map(|v| v.get(k).copied().unwrap_or(0) as u32).unwrap_or(0)
+    };
+    match art.op_kind() {
+        "mm" => {
+            let m = meta.get("m")?.as_i64()? as u32;
+            let k = meta.get("k")?.as_i64()? as u32;
+            let n = meta.get("n")?.as_i64()? as u32;
+            Some(OpDesc::mm(m, k, n, prec))
+        }
+        "conv" => {
+            let i = meta.get("in")?;
+            let (c, h, w) = (dim(i, 1), dim(i, 2), dim(i, 3));
+            let f = dim(meta.get("out")?, 1);
+            let k = meta.get("k")?.as_i64()? as u32;
+            let s = meta.get("stride")?.as_i64()? as u32;
+            let p = meta.get("pad")?.as_i64()? as u32;
+            Some(OpDesc::conv(c, f, h, w, k, s, p, prec))
+        }
+        "pwcv" => {
+            let i = meta.get("in")?;
+            let (c, h, w) = (dim(i, 1), dim(i, 2), dim(i, 3));
+            let f = dim(meta.get("out")?, 1);
+            Some(OpDesc::pwcv(c, f, h, w, prec))
+        }
+        "dwcv" => {
+            let i = meta.get("in")?;
+            let (c, h, w) = (dim(i, 1), dim(i, 2), dim(i, 3));
+            let k = meta.get("k")?.as_i64()? as u32;
+            let s = meta.get("stride")?.as_i64()? as u32;
+            let p = meta.get("pad")?.as_i64()? as u32;
+            Some(OpDesc::dwcv(c, h, w, k, s, p, prec))
+        }
+        _ => None,
+    }
+}
+
+/// Run the simulator's compiled instruction stream for `op` on the golden
+/// inputs and return its DRAM output image.
+pub fn simulate_op(op: &OpDesc, inputs: &[Vec<i32>]) -> Result<Vec<i32>> {
+    let mem = 1 << 24;
+    let layout = MemLayout::for_op(op, mem).map_err(|e| anyhow!(e))?;
+    let mut p = Processor::new(crate::config::SpeedConfig::reference(), mem);
+    p.mem.preload_packed(layout.in_addr, &inputs[0], op.prec);
+    p.mem.preload_packed(layout.w_addr, &inputs[1], op.prec);
+    let strat = op.preferred_strategy();
+    let compiled = compile_op(op, &p.cfg, strat, layout, true).map_err(|e| anyhow!(e))?;
+    p.set_plan(compiled.plan);
+    for seg in &compiled.segments {
+        p.run(seg).map_err(|e| anyhow!("sim: {e}"))?;
+    }
+    Ok(p.mem.inspect_i32(layout.out_addr, op.output_elems() as usize))
+}
+
+/// Check one artifact: PJRT vs golden, and simulator vs PJRT when the
+/// artifact maps to a single operator.
+pub fn golden_check(engine: &mut Engine, dir: &Path, name: &str) -> Result<GoldenReport> {
+    let art = engine
+        .manifest()
+        .artifact(name)
+        .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+        .clone();
+    let golden = Golden::load(dir, &art)?;
+    let out = engine.execute(name, &golden.inputs)?;
+    let pjrt_ok = out == golden.output;
+
+    let sim_ok = match op_for_artifact(&art) {
+        Some(op) if golden.inputs.len() == 2 => {
+            let sim = simulate_op(&op, &golden.inputs)?;
+            Some(sim == out)
+        }
+        _ => None,
+    };
+    Ok(GoldenReport { name: name.to_string(), pjrt_ok, sim_ok, elems: out.len() })
+}
+
+/// Check every artifact in the manifest.
+pub fn golden_check_all(engine: &mut Engine, dir: &Path) -> Result<Vec<GoldenReport>> {
+    let names: Vec<String> = engine.manifest().names().map(|s| s.to_string()).collect();
+    names.iter().map(|n| golden_check(engine, dir, n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::json::parse;
+
+    fn fake_artifact(meta: &str, shapes: &str) -> Artifact {
+        Artifact {
+            name: "t".into(),
+            hlo_file: String::new(),
+            golden_file: String::new(),
+            input_shapes: parse(shapes)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|s| s.as_i64_vec().unwrap())
+                .collect(),
+            output_shape: vec![],
+            meta: parse(meta).unwrap(),
+        }
+    }
+
+    #[test]
+    fn op_mapping_mm() {
+        let a = fake_artifact(
+            r#"{"op": "mm", "bits": 16, "m": 4, "k": 8, "n": 8}"#,
+            "[[4, 8], [8, 8]]",
+        );
+        let op = op_for_artifact(&a).unwrap();
+        assert_eq!((op.m, op.k, op.n), (4, 8, 8));
+        assert_eq!(op.prec, Precision::Int16);
+    }
+
+    #[test]
+    fn op_mapping_conv_and_dwcv() {
+        let a = fake_artifact(
+            r#"{"op": "conv", "bits": 8, "k": 3, "stride": 1, "pad": 1,
+                "in": [1, 8, 12, 12], "out": [1, 16, 12, 12]}"#,
+            "[[1, 8, 12, 12], [16, 8, 3, 3]]",
+        );
+        let op = op_for_artifact(&a).unwrap();
+        assert_eq!((op.c, op.f, op.h, op.ksize), (8, 16, 12, 3));
+        let d = fake_artifact(
+            r#"{"op": "dwcv", "bits": 8, "k": 3, "stride": 2, "pad": 1,
+                "in": [1, 8, 13, 13], "out": [1, 8, 7, 7]}"#,
+            "[[1, 8, 13, 13], [8, 3, 3]]",
+        );
+        let op = op_for_artifact(&d).unwrap();
+        assert_eq!((op.c, op.stride, op.oh()), (8, 2, 7));
+    }
+
+    #[test]
+    fn composite_artifacts_have_no_sim_op() {
+        let a = fake_artifact(r#"{"op": "mnv2_block", "bits": 8}"#, "[[1,8,8,8]]");
+        assert!(op_for_artifact(&a).is_none());
+    }
+
+    #[test]
+    fn simulate_op_matches_known_product() {
+        let op = OpDesc::mm(2, 2, 2, Precision::Int8);
+        let out = simulate_op(&op, &[vec![1, 2, 3, 4], vec![1, 0, 0, 1]]).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,111 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (the JAX/Pallas
+//! golden numerics of the machine) and executes them from Rust.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only consumer of its outputs and is entirely self-contained at runtime:
+//! HLO **text** (never serialized protos — the vendored xla_extension
+//! 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids) is parsed, compiled
+//! on the PJRT CPU client, and executed with int32 operands.
+
+pub mod artifacts;
+pub mod golden;
+pub mod json;
+
+pub use artifacts::{Artifact, Manifest};
+pub use golden::{golden_check, golden_check_all, GoldenReport};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT engine holding the CPU client and a compiled-executable cache —
+/// one compiled executable per model variant, loaded once and reused on
+/// the hot path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e:?}"))?;
+        Ok(Engine { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let art = self
+                .manifest
+                .artifact(name)
+                .with_context(|| format!("unknown artifact '{name}'"))?;
+            let path = self.dir.join(&art.hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("bad path")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on int32 inputs (shapes validated against the
+    /// manifest). Returns the flattened int32 output.
+    pub fn execute(&mut self, name: &str, inputs: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let art = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != art.input_shapes.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                art.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&art.input_shapes).enumerate() {
+            let n: i64 = shape.iter().product();
+            if n as usize != data.len() {
+                return Err(anyhow!(
+                    "{name}: input {i} has {} elements, shape {:?} wants {n}",
+                    data.len(),
+                    shape
+                ));
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}

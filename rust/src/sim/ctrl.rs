@@ -1,0 +1,173 @@
+//! Architectural control state driven by configuration instructions.
+//!
+//! `VSACFG` latches precision / kernel size / strategy into the VIDU's
+//! internal `rd` register within a single cycle (Sec. II-E), enabling the
+//! paper's runtime precision reconfigurability; `VSACFG.DIM` latches the
+//! operator dimensions; `VSETVLI` sets the application vector length.
+
+use crate::config::Precision;
+use crate::isa::{Dim, Insn, StrategyKind, Vtype};
+
+/// Operator dimensions latched via `VSACFG.DIM`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Dims {
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+    pub c: u32,
+    pub f: u32,
+    pub h: u32,
+    pub w: u32,
+    pub stride: u32,
+    pub nstages: u32,
+}
+
+impl Dims {
+    pub fn set(&mut self, dim: Dim, v: u32) {
+        match dim {
+            Dim::M => self.m = v,
+            Dim::K => self.k = v,
+            Dim::N => self.n = v,
+            Dim::C => self.c = v,
+            Dim::F => self.f = v,
+            Dim::H => self.h = v,
+            Dim::W => self.w = v,
+            Dim::Stride => self.stride = v,
+            Dim::NStages => self.nstages = v,
+        }
+    }
+
+    pub fn get(&self, dim: Dim) -> u32 {
+        match dim {
+            Dim::M => self.m,
+            Dim::K => self.k,
+            Dim::N => self.n,
+            Dim::C => self.c,
+            Dim::F => self.f,
+            Dim::H => self.h,
+            Dim::W => self.w,
+            Dim::Stride => self.stride,
+            Dim::NStages => self.nstages,
+        }
+    }
+}
+
+/// The full control state visible to the functional units.
+#[derive(Debug, Clone, Copy)]
+pub struct CtrlState {
+    /// Active operand precision (from `VSACFG`).
+    pub prec: Precision,
+    /// Convolution kernel size (1–15; larger kernels are Kseg-decomposed).
+    pub ksize: u32,
+    /// Active dataflow strategy.
+    pub strat: StrategyKind,
+    /// Application vector length (elements), from `VSETVLI`.
+    pub vl: u32,
+    /// Selected element width from `VSETVLI` (bits).
+    pub sew: u32,
+    /// Operator dimensions.
+    pub dims: Dims,
+    /// Count of precision switches (each costs one `VSACFG`, Sec. II-E).
+    pub precision_switches: u64,
+}
+
+impl Default for CtrlState {
+    fn default() -> Self {
+        CtrlState {
+            prec: Precision::Int8,
+            ksize: 1,
+            strat: StrategyKind::Mm,
+            vl: 0,
+            sew: 8,
+            dims: Dims::default(),
+            precision_switches: 0,
+        }
+    }
+}
+
+impl CtrlState {
+    /// Apply a configuration instruction; returns true if it was one.
+    pub fn apply(&mut self, insn: &Insn, xreg: impl Fn(u8) -> i64) -> bool {
+        match *insn {
+            Insn::Vsacfg { zimm, .. } => {
+                if let Some((prec, ksize, strat)) = Insn::unpack_cfg(zimm) {
+                    if prec != self.prec {
+                        self.precision_switches += 1;
+                    }
+                    self.prec = prec;
+                    if ksize > 0 {
+                        self.ksize = ksize;
+                    }
+                    self.strat = strat;
+                }
+                true
+            }
+            Insn::VsacfgDim { rs1, dim, .. } => {
+                self.dims.set(dim, xreg(rs1) as u32);
+                true
+            }
+            Insn::Vsetvli { rs1, vtype, .. } => {
+                let Vtype { sew } = vtype;
+                self.sew = sew;
+                let req = xreg(rs1) as u32;
+                if rs1 != 0 {
+                    self.vl = req;
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vsacfg_switches_precision_and_counts() {
+        let mut c = CtrlState::default();
+        let z16 = Insn::pack_cfg(Precision::Int16, 3, StrategyKind::Ffcs);
+        let z8 = Insn::pack_cfg(Precision::Int8, 3, StrategyKind::Ffcs);
+        assert!(c.apply(&Insn::Vsacfg { rd: 1, zimm: z16, uimm: 0 }, |_| 0));
+        assert_eq!(c.prec, Precision::Int16);
+        assert_eq!(c.strat, StrategyKind::Ffcs);
+        assert_eq!(c.ksize, 3);
+        assert_eq!(c.precision_switches, 1);
+        // Same precision again — no switch counted.
+        assert!(c.apply(&Insn::Vsacfg { rd: 1, zimm: z16, uimm: 0 }, |_| 0));
+        assert_eq!(c.precision_switches, 1);
+        assert!(c.apply(&Insn::Vsacfg { rd: 1, zimm: z8, uimm: 0 }, |_| 0));
+        assert_eq!(c.precision_switches, 2);
+    }
+
+    #[test]
+    fn dims_latch_from_scalar_regs() {
+        let mut c = CtrlState::default();
+        let regs = |r: u8| if r == 5 { 128 } else { 0 };
+        c.apply(&Insn::VsacfgDim { rd: 0, rs1: 5, dim: Dim::K }, regs);
+        assert_eq!(c.dims.k, 128);
+        assert_eq!(c.dims.get(Dim::K), 128);
+    }
+
+    #[test]
+    fn vsetvli_sets_vl_and_sew() {
+        let mut c = CtrlState::default();
+        c.apply(
+            &Insn::Vsetvli { rd: 0, rs1: 3, vtype: Vtype::new(16) },
+            |r| if r == 3 { 64 } else { 0 },
+        );
+        assert_eq!(c.vl, 64);
+        assert_eq!(c.sew, 16);
+        // rs1 = x0 keeps vl.
+        c.apply(&Insn::Vsetvli { rd: 0, rs1: 0, vtype: Vtype::new(8) }, |_| 0);
+        assert_eq!(c.vl, 64);
+        assert_eq!(c.sew, 8);
+    }
+
+    #[test]
+    fn non_cfg_insns_ignored() {
+        let mut c = CtrlState::default();
+        assert!(!c.apply(&Insn::Vmacc { vd: 0, vs1: 1, vs2: 2 }, |_| 0));
+    }
+}

@@ -1,0 +1,114 @@
+//! Element packing helpers for the multi-precision datapath.
+//!
+//! External memory and the VRFs store operands at their native width:
+//! 16-bit little-endian, 8-bit, or nibble-packed 4-bit (two operands per
+//! byte, low nibble first). Accumulators are 32-bit little-endian.
+
+use crate::config::Precision;
+
+/// Read element `idx` of a packed buffer at precision `p` (sign-extended).
+pub fn read_elem(buf: &[u8], idx: usize, p: Precision) -> i32 {
+    match p {
+        Precision::Int16 => {
+            let b = 2 * idx;
+            i16::from_le_bytes([buf[b], buf[b + 1]]) as i32
+        }
+        Precision::Int8 => buf[idx] as i8 as i32,
+        Precision::Int4 => {
+            let byte = buf[idx / 2];
+            let nib = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            // sign-extend 4-bit
+            ((nib as i32) << 28) >> 28
+        }
+    }
+}
+
+/// Write element `idx` of a packed buffer at precision `p`.
+/// The value is truncated to the precision's width (callers clamp first).
+pub fn write_elem(buf: &mut [u8], idx: usize, p: Precision, v: i32) {
+    match p {
+        Precision::Int16 => {
+            let b = 2 * idx;
+            buf[b..b + 2].copy_from_slice(&(v as i16).to_le_bytes());
+        }
+        Precision::Int8 => buf[idx] = v as i8 as u8,
+        Precision::Int4 => {
+            let b = idx / 2;
+            let nib = (v as u8) & 0x0F;
+            if idx % 2 == 0 {
+                buf[b] = (buf[b] & 0xF0) | nib;
+            } else {
+                buf[b] = (buf[b] & 0x0F) | (nib << 4);
+            }
+        }
+    }
+}
+
+/// Read a 32-bit accumulator at element index `idx`.
+pub fn read_i32(buf: &[u8], idx: usize) -> i32 {
+    let b = 4 * idx;
+    i32::from_le_bytes([buf[b], buf[b + 1], buf[b + 2], buf[b + 3]])
+}
+
+/// Write a 32-bit accumulator at element index `idx`.
+pub fn write_i32(buf: &mut [u8], idx: usize, v: i32) {
+    let b = 4 * idx;
+    buf[b..b + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Pack a slice of values into a fresh buffer at precision `p`.
+pub fn pack(values: &[i32], p: Precision) -> Vec<u8> {
+    let mut buf = vec![0u8; p.bytes_for(values.len() as u64) as usize];
+    for (i, &v) in values.iter().enumerate() {
+        debug_assert!(
+            v >= p.range().0 && v <= p.range().1,
+            "value {v} out of {p} range"
+        );
+        write_elem(&mut buf, i, p, v);
+    }
+    buf
+}
+
+/// Unpack `n` values from a packed buffer at precision `p`.
+pub fn unpack(buf: &[u8], n: usize, p: Precision) -> Vec<i32> {
+    (0..n).map(|i| read_elem(buf, i, p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_precisions() {
+        for p in Precision::ALL {
+            let (lo, hi) = p.range();
+            let vals: Vec<i32> = vec![lo, hi, 0, 1, -1, lo / 2, hi / 2, 3];
+            let buf = pack(&vals, p);
+            assert_eq!(unpack(&buf, vals.len(), p), vals, "{p}");
+        }
+    }
+
+    #[test]
+    fn nibble_layout_low_first() {
+        let buf = pack(&[1, -2], Precision::Int4);
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf[0] & 0x0F, 0x1);
+        assert_eq!(buf[0] >> 4, 0xE); // -2 as nibble
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let mut buf = vec![0u8; 8];
+        write_i32(&mut buf, 0, -123456);
+        write_i32(&mut buf, 1, i32::MAX);
+        assert_eq!(read_i32(&buf, 0), -123456);
+        assert_eq!(read_i32(&buf, 1), i32::MAX);
+    }
+
+    #[test]
+    fn odd_nibble_count_fits() {
+        let buf = pack(&[7, -8, 3], Precision::Int4);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(unpack(&buf, 3, Precision::Int4), vec![7, -8, 3]);
+    }
+}

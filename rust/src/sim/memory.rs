@@ -1,0 +1,156 @@
+//! External (off-chip) memory model with byte-accurate traffic accounting.
+//!
+//! External-memory access size is the key energy/efficiency metric of the
+//! paper's Fig. 10; every read and write through this model is counted, and
+//! the breakdown (inputs / weights / partial sums / outputs) is preserved so
+//! the report harness can regenerate the figure's per-strategy bars.
+
+use crate::config::Precision;
+
+use super::elem;
+
+/// What a transfer moves — used for the Fig. 10 traffic breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    Input,
+    Weight,
+    Partial,
+    Output,
+}
+
+/// Byte counters per traffic class.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficStats {
+    pub input_read: u64,
+    pub weight_read: u64,
+    pub partial_read: u64,
+    pub partial_write: u64,
+    pub output_write: u64,
+}
+
+impl TrafficStats {
+    /// Total bytes moved over the external-memory interface.
+    pub fn total(&self) -> u64 {
+        self.input_read + self.weight_read + self.partial_read + self.partial_write
+            + self.output_write
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.input_read + self.weight_read + self.partial_read
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.partial_write + self.output_write
+    }
+
+    pub fn add_read(&mut self, class: TrafficClass, bytes: u64) {
+        match class {
+            TrafficClass::Input => self.input_read += bytes,
+            TrafficClass::Weight => self.weight_read += bytes,
+            TrafficClass::Partial => self.partial_read += bytes,
+            TrafficClass::Output => self.partial_read += bytes, // outputs are not re-read
+        }
+    }
+
+    pub fn add_write(&mut self, class: TrafficClass, bytes: u64) {
+        match class {
+            TrafficClass::Partial => self.partial_write += bytes,
+            _ => self.output_write += bytes,
+        }
+    }
+}
+
+/// Flat external memory with traffic accounting.
+pub struct ExtMem {
+    data: Vec<u8>,
+    pub traffic: TrafficStats,
+}
+
+impl ExtMem {
+    /// Allocate `bytes` of zeroed external memory.
+    pub fn new(bytes: usize) -> Self {
+        ExtMem { data: vec![0; bytes], traffic: TrafficStats::default() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Counted read of a byte range.
+    pub fn read(&mut self, addr: u64, len: usize, class: TrafficClass) -> &[u8] {
+        self.traffic.add_read(class, len as u64);
+        &self.data[addr as usize..addr as usize + len]
+    }
+
+    /// Counted write of a byte slice.
+    pub fn write(&mut self, addr: u64, bytes: &[u8], class: TrafficClass) {
+        self.traffic.add_write(class, bytes.len() as u64);
+        self.data[addr as usize..addr as usize + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Uncounted initialization (test-bench preload, not DUT traffic).
+    pub fn preload(&mut self, addr: u64, bytes: &[u8]) {
+        self.data[addr as usize..addr as usize + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Uncounted inspection (test-bench readback, not DUT traffic).
+    pub fn inspect(&self, addr: u64, len: usize) -> &[u8] {
+        &self.data[addr as usize..addr as usize + len]
+    }
+
+    /// Preload packed operand values at a precision.
+    pub fn preload_packed(&mut self, addr: u64, values: &[i32], p: Precision) {
+        let buf = elem::pack(values, p);
+        self.preload(addr, &buf);
+    }
+
+    /// Inspect `n` i32 accumulators at `addr` (test-bench readback).
+    pub fn inspect_i32(&self, addr: u64, n: usize) -> Vec<i32> {
+        let buf = self.inspect(addr, 4 * n);
+        (0..n).map(|i| elem::read_i32(buf, i)).collect()
+    }
+
+    /// Reset traffic counters (e.g. between operators).
+    pub fn reset_traffic(&mut self) {
+        self.traffic = TrafficStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_is_counted_by_class() {
+        let mut m = ExtMem::new(1024);
+        m.preload(0, &[1, 2, 3, 4]); // uncounted
+        let _ = m.read(0, 4, TrafficClass::Input);
+        let _ = m.read(0, 2, TrafficClass::Weight);
+        m.write(8, &[9; 8], TrafficClass::Output);
+        m.write(16, &[7; 4], TrafficClass::Partial);
+        let _ = m.read(16, 4, TrafficClass::Partial);
+        assert_eq!(m.traffic.input_read, 4);
+        assert_eq!(m.traffic.weight_read, 2);
+        assert_eq!(m.traffic.output_write, 8);
+        assert_eq!(m.traffic.partial_write, 4);
+        assert_eq!(m.traffic.partial_read, 4);
+        assert_eq!(m.traffic.total(), 22);
+    }
+
+    #[test]
+    fn packed_preload_roundtrip() {
+        let mut m = ExtMem::new(64);
+        m.preload_packed(0, &[1, -2, 3], Precision::Int4);
+        let buf = m.inspect(0, 2).to_vec();
+        assert_eq!(elem::unpack(&buf, 3, Precision::Int4), vec![1, -2, 3]);
+    }
+
+    #[test]
+    fn inspect_does_not_count() {
+        let mut m = ExtMem::new(16);
+        m.preload(0, &[5; 16]);
+        let _ = m.inspect(0, 16);
+        let _ = m.inspect_i32(0, 2);
+        assert_eq!(m.traffic.total(), 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Cycle-level simulator of the SPEED microarchitecture (Sec. II).
+//!
+//! Structure mirrors Fig. 3: the VIDU/VIS front-end and hazard tracking,
+//! the VLDU's sequential/broadcast transfers, per-lane VRFs, and the MPTU
+//! tensor core live in [`processor`]; the golden arithmetic in [`mptu`];
+//! external memory with byte-accurate traffic accounting in [`memory`].
+
+pub mod ctrl;
+pub mod elem;
+pub mod memory;
+pub mod mptu;
+pub mod plan;
+pub mod processor;
+pub mod stats;
+
+pub use ctrl::{CtrlState, Dims};
+pub use memory::{ExtMem, TrafficClass, TrafficStats};
+pub use plan::OpPlan;
+pub use processor::{Processor, SimError};
+pub use stats::{Fu, SimStats};

@@ -1,0 +1,207 @@
+//! MPTU functional engine: the golden arithmetic of the tensor core.
+//!
+//! The PE array's arithmetic is exact 32-bit accumulation of sign-extended
+//! 4/8/16-bit products (wrapping on overflow, like the RTL's 32-bit adders
+//! and like XLA's int32 semantics — this is what makes the simulator output
+//! bit-exact against the AOT-lowered JAX/Pallas artifacts).
+//!
+//! Numerics are computed at operator granularity from the DRAM images (the
+//! schedule determines *when* bytes move — counted at the instruction level
+//! — while this module determines *what* the machine computes).
+
+use crate::config::Precision;
+use crate::models::ops::{OpDesc, OpKind};
+
+use super::elem;
+use super::memory::ExtMem;
+use super::plan::OpPlan;
+
+/// MPTU pipeline timing constants (Fig. 9): the request → compute →
+/// write-back stages overlap across dataflow stages, so a `VSAM` of S
+/// stages costs `PIPE_FILL + S` cycles in EX.
+pub const PIPE_FILL: u64 = 3;
+
+/// Compute the operator's full output (row-major rows of i32 accumulators)
+/// from the DRAM images referenced by the plan. Reads are *uncounted*
+/// (traffic is attributed to the VSALD/VLE instructions of the schedule).
+pub fn compute_output_rows(mem: &ExtMem, plan: &OpPlan) -> Vec<Vec<i32>> {
+    let d = &plan.desc;
+    match d.kind {
+        OpKind::Mm => mm_rows(mem, d, plan),
+        OpKind::Conv => conv_rows(mem, d, plan, false),
+        OpKind::Pwcv => conv_rows(mem, d, plan, false),
+        OpKind::Dwcv => conv_rows(mem, d, plan, true),
+    }
+}
+
+fn load_packed(mem: &ExtMem, addr: u64, n: u64, p: Precision) -> Vec<i32> {
+    let bytes = mem.inspect(addr, p.bytes_for(n) as usize);
+    elem::unpack(bytes, n as usize, p)
+}
+
+fn mm_rows(mem: &ExtMem, d: &OpDesc, plan: &OpPlan) -> Vec<Vec<i32>> {
+    let (m, k, n) = (d.m as usize, d.k as usize, d.n as usize);
+    let a = load_packed(mem, plan.in_addr, (m * k) as u64, d.prec);
+    let b = load_packed(mem, plan.w_addr, (k * n) as u64, d.prec);
+    let mut rows = Vec::with_capacity(m);
+    for i in 0..m {
+        let mut row = vec![0i32; n];
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let boff = kk * n;
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = r.wrapping_add(av.wrapping_mul(b[boff + j]));
+            }
+        }
+        rows.push(row);
+    }
+    rows
+}
+
+/// CONV / PWCV / DWCV share one walker; `depthwise` selects per-channel
+/// weights. Input layout: C×H×W; weights: F×C×K×K (or C×K×K); output rows:
+/// (f, oy) → OW elements.
+fn conv_rows(mem: &ExtMem, d: &OpDesc, plan: &OpPlan, depthwise: bool) -> Vec<Vec<i32>> {
+    let (c, h, w) = (d.c as usize, d.h as usize, d.w as usize);
+    let f = d.f as usize;
+    let k = d.ksize as usize;
+    let (oh, ow) = (d.oh() as usize, d.ow() as usize);
+    let (stride, pad) = (d.stride as isize, d.pad as isize);
+
+    let x = load_packed(mem, plan.in_addr, (c * h * w) as u64, d.prec);
+    let welems = if depthwise { c * k * k } else { f * c * k * k };
+    let wt = load_packed(mem, plan.w_addr, welems as u64, d.prec);
+
+    let mut rows = Vec::with_capacity(f * oh);
+    for fo in 0..f {
+        for oy in 0..oh {
+            let mut row = vec![0i32; ow];
+            for (ox, acc) in row.iter_mut().enumerate() {
+                let mut sum = 0i32;
+                let cs: Box<dyn Iterator<Item = usize>> =
+                    if depthwise { Box::new(std::iter::once(fo)) } else { Box::new(0..c) };
+                for ci in cs {
+                    for ky in 0..k {
+                        let iy = oy as isize * stride + ky as isize - pad;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = ox as isize * stride + kx as isize - pad;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xv = x[ci * h * w + iy as usize * w + ix as usize];
+                            let wv = if depthwise {
+                                wt[fo * k * k + ky * k + kx]
+                            } else {
+                                wt[fo * c * k * k + ci * k * k + ky * k + kx]
+                            };
+                            sum = sum.wrapping_add(xv.wrapping_mul(wv));
+                        }
+                    }
+                }
+                *acc = sum;
+            }
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+
+    fn plan_for(desc: OpDesc) -> (ExtMem, OpPlan) {
+        let mem = ExtMem::new(1 << 20);
+        let plan = OpPlan {
+            desc,
+            strat: desc.preferred_strategy(),
+            in_addr: 0,
+            w_addr: 0x4000,
+            out_addr: 0x8000,
+            partial_addr: u64::MAX,
+            total_stages: 1,
+            functional: true,
+        };
+        (mem, plan)
+    }
+
+    #[test]
+    fn mm_identity() {
+        let d = OpDesc::mm(2, 2, 2, Precision::Int8);
+        let (mut mem, plan) = plan_for(d);
+        mem.preload_packed(plan.in_addr, &[1, 2, 3, 4], d.prec);
+        mem.preload_packed(plan.w_addr, &[1, 0, 0, 1], d.prec); // identity
+        let rows = compute_output_rows(&mem, &plan);
+        assert_eq!(rows, vec![vec![1, 2], vec![3, 4]]);
+    }
+
+    #[test]
+    fn mm_known_product() {
+        let d = OpDesc::mm(2, 2, 2, Precision::Int16);
+        let (mut mem, plan) = plan_for(d);
+        mem.preload_packed(plan.in_addr, &[1, 2, 3, 4], d.prec);
+        mem.preload_packed(plan.w_addr, &[1, 1, 1, 1], d.prec);
+        let rows = compute_output_rows(&mem, &plan);
+        assert_eq!(rows, vec![vec![3, 3], vec![7, 7]]);
+    }
+
+    #[test]
+    fn conv_1x1_matches_pwcv() {
+        // 1x1 conv == pwcv: out[f][p] = sum_c x[c][p] * w[f][c]
+        let dp = OpDesc::pwcv(2, 2, 2, 2, Precision::Int8);
+        let (mut mem, plan) = plan_for(dp);
+        mem.preload_packed(plan.in_addr, &[1, 2, 3, 4, 5, 6, 7, 8], dp.prec);
+        mem.preload_packed(plan.w_addr, &[1, 2, 3, 4], dp.prec);
+        let rows = compute_output_rows(&mem, &plan);
+        // f0: x_c0*1 + x_c1*2, rows (oy) of OW elements
+        assert_eq!(rows[0], vec![1 + 10, 2 + 12]);
+        assert_eq!(rows[1], vec![3 + 14, 4 + 16]);
+        // f1: x_c0*3 + x_c1*4
+        assert_eq!(rows[2], vec![3 + 20, 6 + 24]);
+        assert_eq!(rows[3], vec![9 + 28, 12 + 32]);
+    }
+
+    #[test]
+    fn conv_3x3_padded_center() {
+        // Single channel, single filter of all-ones: output at center of a
+        // padded 3x3 input = sum of all inputs.
+        let d = OpDesc::conv(1, 1, 3, 3, 3, 1, 1, Precision::Int8);
+        let (mut mem, plan) = plan_for(d);
+        mem.preload_packed(plan.in_addr, &[1, 2, 3, 4, 5, 6, 7, 8, 9], d.prec);
+        mem.preload_packed(plan.w_addr, &[1; 9], d.prec);
+        let rows = compute_output_rows(&mem, &plan);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1][1], 45);
+        // corner: only 2x2 window valid
+        assert_eq!(rows[0][0], 1 + 2 + 4 + 5);
+    }
+
+    #[test]
+    fn dwcv_channels_independent() {
+        let d = OpDesc::dwcv(2, 3, 3, 3, 1, 0, Precision::Int8);
+        let (mut mem, plan) = plan_for(d);
+        let mut x = vec![0i32; 18];
+        x[..9].copy_from_slice(&[1; 9]);
+        x[9..].copy_from_slice(&[2; 9]);
+        mem.preload_packed(plan.in_addr, &x, d.prec);
+        mem.preload_packed(plan.w_addr, &[1; 18], d.prec);
+        let rows = compute_output_rows(&mem, &plan);
+        assert_eq!(rows, vec![vec![9], vec![18]]);
+    }
+
+    #[test]
+    fn wrapping_accumulation_matches_hw() {
+        // Products that overflow i32 must wrap (like the RTL adder & XLA).
+        let d = OpDesc::mm(1, 2, 1, Precision::Int16);
+        let (mut mem, plan) = plan_for(d);
+        mem.preload_packed(plan.in_addr, &[32767, 32767], d.prec);
+        mem.preload_packed(plan.w_addr, &[32767, 32767], d.prec);
+        let rows = compute_output_rows(&mem, &plan);
+        let expect = (32767i32.wrapping_mul(32767)).wrapping_mul(2);
+        assert_eq!(rows[0][0], expect);
+    }
+}

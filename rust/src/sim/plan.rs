@@ -1,0 +1,42 @@
+//! Operator plans: the contract between the operator compiler and the MPTU.
+//!
+//! A plan corresponds to what the hardware derives from the `VSACFG` /
+//! `VSACFG.DIM` configuration: the operator geometry, the DRAM placement of
+//! its tensors, and the total number of dataflow stages the `VSAM`/`VSAC`
+//! instructions will walk. The operand requester's address generation is a
+//! deterministic function of this state — the simulator walks it the same
+//! way the RTL would.
+
+use crate::isa::StrategyKind;
+use crate::models::ops::OpDesc;
+
+/// DRAM placement + schedule extent for one operator execution.
+#[derive(Debug, Clone, Copy)]
+pub struct OpPlan {
+    /// The operator being executed.
+    pub desc: OpDesc,
+    /// Strategy actually used (may differ from `desc.preferred_strategy()`
+    /// in ablation runs, e.g. Fig. 10/11 evaluate all strategies per op).
+    pub strat: StrategyKind,
+    /// DRAM base of the input tensor (precision-packed).
+    pub in_addr: u64,
+    /// DRAM base of the weight tensor (precision-packed).
+    pub w_addr: u64,
+    /// DRAM base of the output tensor (int32 accumulators).
+    pub out_addr: u64,
+    /// DRAM base of the partial-sum spill region (used only when the
+    /// schedule spills partials off-chip; `u64::MAX` = no spill region).
+    pub partial_addr: u64,
+    /// Total dataflow stages the full operator needs (from the mapper).
+    pub total_stages: u64,
+    /// Whether the functional engine computes real numerics (golden-checked
+    /// runs) or only timing/traffic are simulated (large sweeps).
+    pub functional: bool,
+}
+
+impl OpPlan {
+    /// Is `addr` inside the partial-sum spill region?
+    pub fn is_partial_addr(&self, addr: u64) -> bool {
+        self.partial_addr != u64::MAX && addr >= self.partial_addr
+    }
+}

@@ -1,0 +1,804 @@
+//! The SPEED processor model: a 4-stage (ID/IS/EX/CO) vector pipeline with
+//! an event-driven scoreboard.
+//!
+//! Timing model
+//! ------------
+//! * **ID** — the VIDU decodes one instruction per cycle (in order).
+//! * **IS** — the VIS issues an instruction to its functional unit when the
+//!   unit is free and no vector-register hazard (RAW/WAW/WAR) is
+//!   outstanding; the VIS hazard table is exactly `Insn::vregs_read/written`.
+//! * **EX** — duration depends on the unit:
+//!   - VLDU (`VLE`/`VSALD`): memory latency + bytes / port bandwidth; the
+//!     external port is shared with the store unit and serializes.
+//!   - MPTU (`VSAM`/`VSAC`): `PIPE_FILL + stages` — one dataflow stage per
+//!     cycle in steady state, with request/compute/write-back overlapped
+//!     (Fig. 9).
+//!   - VALU: `vl` elements at `lanes × 64/SEW` per cycle + a 2-cycle ALU
+//!     pipeline.
+//!   - scalar/config: 1 cycle (`VSACFG` switches precision in a single
+//!     cycle — Sec. II-E).
+//! * **CO** — 1 cycle, overlapped; total cycles = last completion + 1.
+//!
+//! Functional model
+//! ----------------
+//! Instructions move real bytes: loads copy DRAM → per-lane VRF regions
+//! (capacity-checked), stores pop completed output rows from the MPTU
+//! result path and write them to DRAM. Operator numerics are computed by
+//! [`super::mptu`] at operator granularity (bit-exact vs the JAX/Pallas
+//! artifacts); *when* bytes move — and therefore every cycle and traffic
+//! statistic — is decided by the instruction stream the operator compiler
+//! emits.
+
+
+use crate::config::SpeedConfig;
+use crate::isa::{Insn, LdMode, WidthSel};
+
+use super::ctrl::CtrlState;
+use super::memory::{ExtMem, TrafficClass};
+use super::mptu;
+use super::plan::OpPlan;
+use super::stats::{Fu, SimStats};
+
+/// Simulation error (structural violation — the compiler emitted a stream
+/// the hardware could not execute).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// A load does not fit the target vector register region.
+    VrfOverflow { vd: u8, need: usize, have: usize },
+    /// A store targeted an address that is not a valid output/partial row.
+    StoreUnderflow,
+    /// Memory access out of range.
+    MemOutOfRange { addr: u64, len: usize, size: usize },
+    /// VSAM/VSAC executed without an installed operator plan.
+    NoPlan,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::VrfOverflow { vd, need, have } => {
+                write!(f, "VRF overflow: v{vd} needs {need} B, region holds {have} B")
+            }
+            SimError::StoreUnderflow => {
+                write!(f, "VSE address does not map to an output row of the plan")
+            }
+            SimError::MemOutOfRange { addr, len, size } => {
+                write!(f, "memory access [{addr:#x}..+{len}) outside {size} B")
+            }
+            SimError::NoPlan => write!(f, "VSAM/VSAC executed with no operator plan installed"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// The SPEED machine.
+pub struct Processor {
+    pub cfg: SpeedConfig,
+    pub ctrl: CtrlState,
+    pub mem: ExtMem,
+    xregs: [i64; 32],
+    /// Per-lane VRF byte arrays.
+    vrf: Vec<Vec<u8>>,
+    /// Installed operator plan (VSACFG-derived state).
+    plan: Option<OpPlan>,
+    /// Computed output rows, indexed by row number (the result-queue path;
+    /// `VSE` maps its address back to the row it drains).
+    computed_rows: Vec<Vec<i32>>,
+    /// Stage cursor into the plan's schedule.
+    stage_cursor: u64,
+    /// Whether the functional engine has produced the operator's output.
+    computed: bool,
+
+    // ---- scoreboard state (all times in cycles) ----
+    t_decode: u64,
+    fu_free: [u64; 5],
+    mem_port_free: u64,
+    vreg_write_done: [u64; 32],
+    vreg_read_done: [u64; 32],
+    /// Completion time of the last MPTU burst (chained VSAMs keep the
+    /// request/compute/write-back pipeline primed — Fig. 9).
+    last_mptu_complete: u64,
+    last_complete: u64,
+
+    stats: SimStats,
+    vregs_touched: [bool; 32],
+    /// Reusable transfer buffer (keeps the hot loop allocation-free).
+    scratch: Vec<u8>,
+}
+
+impl Processor {
+    /// Create a machine with `mem_bytes` of external memory.
+    pub fn new(cfg: SpeedConfig, mem_bytes: usize) -> Self {
+        let lanes = cfg.lanes as usize;
+        let vrf_bytes = cfg.vrf_bytes() as usize;
+        Processor {
+            cfg,
+            ctrl: CtrlState::default(),
+            mem: ExtMem::new(mem_bytes),
+            xregs: [0; 32],
+            vrf: vec![vec![0u8; vrf_bytes]; lanes],
+            plan: None,
+            computed_rows: Vec::new(),
+            stage_cursor: 0,
+            computed: false,
+            t_decode: 0,
+            fu_free: [0; 5],
+            mem_port_free: 0,
+            vreg_write_done: [0; 32],
+            vreg_read_done: [0; 32],
+            last_mptu_complete: u64::MAX,
+            last_complete: 0,
+            stats: SimStats::default(),
+            vregs_touched: [false; 32],
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Bytes one vector register occupies per lane (VRF / 32 registers).
+    pub fn vreg_region_bytes(&self) -> usize {
+        self.cfg.vrf_bytes() as usize / 32
+    }
+
+    /// Install the operator plan the subsequent VSAM/VSAC stream executes.
+    /// (Models the state the hardware accumulates from VSACFG/VSACFG.DIM.)
+    pub fn set_plan(&mut self, plan: OpPlan) {
+        self.plan = Some(plan);
+        self.stage_cursor = 0;
+        self.computed = false;
+        self.computed_rows.clear();
+    }
+
+    pub fn plan(&self) -> Option<&OpPlan> {
+        self.plan.as_ref()
+    }
+
+    fn xreg(&self, r: u8) -> i64 {
+        if r == 0 {
+            0
+        } else {
+            self.xregs[r as usize]
+        }
+    }
+
+    /// Run a program to completion; returns the stats of this run.
+    /// The machine state (memory, VRF, control) persists across runs so a
+    /// network can be executed as a sequence of operator programs.
+    pub fn run(&mut self, prog: &[Insn]) -> Result<SimStats, SimError> {
+        let start_traffic = self.mem.traffic;
+        let mut run_stats = SimStats::default();
+        // Clock at entry: cycles of this run are the advance of the machine
+        // clock (last completion), so back-to-back runs telescope correctly.
+        let run_begin = self.last_complete;
+
+        for insn in prog {
+            self.step(insn, &mut run_stats)?;
+        }
+
+        // Total cycles: last completion + 1 (CO stage), relative to run start.
+        run_stats.cycles = (self.last_complete + 1).saturating_sub(run_begin + 1).max(1);
+        run_stats.vregs_used = self.vregs_touched.iter().filter(|&&b| b).count() as u32;
+        run_stats.precision_switches = self.ctrl.precision_switches;
+        // Traffic delta for this run.
+        let t = self.mem.traffic;
+        run_stats.traffic.input_read = t.input_read - start_traffic.input_read;
+        run_stats.traffic.weight_read = t.weight_read - start_traffic.weight_read;
+        run_stats.traffic.partial_read = t.partial_read - start_traffic.partial_read;
+        run_stats.traffic.partial_write = t.partial_write - start_traffic.partial_write;
+        run_stats.traffic.output_write = t.output_write - start_traffic.output_write;
+
+        self.stats.merge(&run_stats);
+        Ok(run_stats)
+    }
+
+    /// Lifetime stats across all runs.
+    pub fn lifetime_stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    fn step(&mut self, insn: &Insn, st: &mut SimStats) -> Result<(), SimError> {
+        // ---- ID stage: one decode per cycle. ----
+        let decode_t = self.t_decode;
+        self.t_decode += 1;
+        st.insns_total += 1;
+        if insn.is_custom() {
+            st.insns_custom += 1;
+        }
+        if insn.is_vector() {
+            st.insns_vector += 1;
+        } else {
+            st.insns_scalar += 1;
+        }
+        let reads = insn.vregs_read();
+        let writes = insn.vregs_written();
+        for r in reads.iter().chain(writes.iter()) {
+            self.vregs_touched[*r as usize] = true;
+        }
+
+        // ---- classify: FU, EX duration, memory-port bytes. ----
+        let (fu, ex_cycles, port_bytes) = self.cost_of(insn)?;
+
+        // ---- IS stage: FU + hazards. ----
+        let ready = decode_t + 1; // IS takes one cycle after ID
+        let mut issue = ready.max(self.fu_free[fu.index()]);
+        if self.fu_free[fu.index()] > ready {
+            st.stall_fu_busy += self.fu_free[fu.index()] - ready;
+        }
+        let mut hazard_until = 0u64;
+        for &r in reads.iter() {
+            hazard_until = hazard_until.max(self.vreg_write_done[r as usize]); // RAW
+        }
+        for &r in writes.iter() {
+            hazard_until = hazard_until.max(self.vreg_write_done[r as usize]); // WAW
+            hazard_until = hazard_until.max(self.vreg_read_done[r as usize]); // WAR
+        }
+        if hazard_until > issue {
+            st.stall_hazard += hazard_until - issue;
+            issue = hazard_until;
+        }
+        // Chained MPTU bursts: when a VSAM issues exactly as the previous
+        // one drains, the request/compute/write-back pipeline stays primed
+        // and the refill cost is not paid again (Fig. 9's overlap).
+        let mut ex_cycles = ex_cycles;
+        if fu == Fu::Mptu {
+            if issue <= self.last_mptu_complete {
+                ex_cycles = ex_cycles.saturating_sub(mptu::PIPE_FILL).max(1);
+            }
+            self.last_mptu_complete = issue.max(self.fu_free[fu.index()]) + ex_cycles;
+        }
+        // Shared external-memory port (VLDU + VSU serialize).
+        let mut start = issue;
+        if port_bytes > 0 {
+            if self.mem_port_free > start {
+                st.stall_mem_port += self.mem_port_free - start;
+                start = self.mem_port_free;
+            }
+            self.mem_port_free = start + ex_cycles;
+        }
+
+        let complete = start + ex_cycles;
+        if std::env::var_os("SPEED_TRACE").is_some() {
+            eprintln!("dec={decode_t} rdy={ready} iss={issue} start={start} done={complete} ex={ex_cycles} {insn:?}");
+        }
+        self.fu_free[fu.index()] = complete;
+        for &r in writes.iter() {
+            self.vreg_write_done[r as usize] = complete;
+        }
+        for &r in reads.iter() {
+            self.vreg_read_done[r as usize] = self.vreg_read_done[r as usize].max(complete);
+        }
+        st.fu_busy[fu.index()] += ex_cycles;
+        self.last_complete = self.last_complete.max(complete);
+
+        // ---- functional execution (program order). ----
+        self.execute(insn, st)
+    }
+
+    /// (FU, EX cycles, external-memory bytes) of an instruction under the
+    /// current control state.
+    fn cost_of(&self, insn: &Insn) -> Result<(Fu, u64, u64), SimError> {
+        let cfg = &self.cfg;
+        let bw = cfg.mem_bw_bytes_per_cycle as u64;
+        let lat = cfg.mem_latency as u64;
+        Ok(match *insn {
+            Insn::Addi { .. } | Insn::Vsetvli { .. } | Insn::Vsacfg { .. }
+            | Insn::VsacfgDim { .. } => (Fu::Scalar, 1, 0),
+            Insn::Vle { eew, .. } => {
+                let bytes = self.ctrl.vl as u64 * (eew as u64 / 8);
+                (Fu::Vldu, lat + bytes.div_ceil(bw).max(1), bytes)
+            }
+            Insn::Vsald { width, .. } => {
+                let prec = match width {
+                    WidthSel::FromCfg => self.ctrl.prec,
+                    WidthSel::Explicit(p) => p,
+                };
+                let bytes = prec.bytes_for(self.ctrl.vl as u64);
+                (Fu::Vldu, lat + bytes.div_ceil(bw).max(1), bytes)
+            }
+            Insn::Vse { rs1, .. } => {
+                // Stores drain completed i32 rows (result-queue path) or,
+                // without a plan, vl elements at SEW.
+                let addr = self.xreg(rs1) as u64;
+                let bytes = match &self.plan {
+                    Some(p) if !p.is_partial_addr(addr) => p.desc.output_row_elems() * 4,
+                    _ => self.ctrl.vl as u64 * (self.ctrl.sew as u64 / 8),
+                };
+                (Fu::Vsu, bytes.div_ceil(bw).max(1), bytes)
+            }
+            Insn::Vmacc { .. }
+            | Insn::Vmul { .. }
+            | Insn::Vadd { .. }
+            | Insn::Vsub { .. }
+            | Insn::Vmax { .. }
+            | Insn::Vmin { .. }
+            | Insn::Vsra { .. } => {
+                let per_cycle = cfg.lanes as u64 * (64 / self.ctrl.sew as u64).max(1);
+                (Fu::Valu, 2 + (self.ctrl.vl as u64).div_ceil(per_cycle), 0)
+            }
+            Insn::Vmv { .. } => (Fu::Valu, 1, 0),
+            Insn::Vsam { stages, .. } | Insn::Vsac { stages, .. } => {
+                (Fu::Mptu, mptu::PIPE_FILL + stages as u64, 0)
+            }
+        })
+    }
+
+    fn check_mem(&self, addr: u64, len: usize) -> Result<(), SimError> {
+        if addr as usize + len > self.mem.size() {
+            return Err(SimError::MemOutOfRange { addr, len, size: self.mem.size() });
+        }
+        Ok(())
+    }
+
+    fn execute(&mut self, insn: &Insn, st: &mut SimStats) -> Result<(), SimError> {
+        match *insn {
+            Insn::Addi { rd, rs1, imm } => {
+                if rd != 0 {
+                    self.xregs[rd as usize] = self.xreg(rs1) + imm as i64;
+                }
+            }
+            Insn::Vsetvli { .. } | Insn::Vsacfg { .. } | Insn::VsacfgDim { .. } => {
+                let regs = self.xregs;
+                self.ctrl.apply(insn, |r| if r == 0 { 0 } else { regs[r as usize] });
+            }
+            Insn::Vle { vd, rs1, eew } => {
+                let addr = self.xreg(rs1) as u64;
+                let total = self.ctrl.vl as usize * (eew as usize / 8);
+                self.load_to_vrf(vd, addr, total, /*broadcast=*/ false)?;
+            }
+            Insn::Vsald { vd, rs1, mode, width } => {
+                let prec = match width {
+                    WidthSel::FromCfg => self.ctrl.prec,
+                    WidthSel::Explicit(p) => p,
+                };
+                let addr = self.xreg(rs1) as u64;
+                let total = prec.bytes_for(self.ctrl.vl as u64) as usize;
+                self.load_to_vrf(vd, addr, total, mode == LdMode::Broadcast)?;
+            }
+            Insn::Vse { vs3, rs1, .. } => {
+                let addr = self.xreg(rs1) as u64;
+                if self.plan.is_some() {
+                    self.drain_row(addr)?;
+                } else {
+                    // Raw store: vl elements at SEW from the named vector
+                    // register (the ALU epilogue path writes real data).
+                    let bytes = self.ctrl.vl as usize * (self.ctrl.sew as usize / 8);
+                    self.check_mem(addr, bytes)?;
+                    let data = self.vreg_bytes(vs3, bytes);
+                    self.mem.write(addr, &data, TrafficClass::Output);
+                }
+            }
+            Insn::Vmv { vd, rs1 } => {
+                // Splat a scalar into the vector register (epilogue
+                // constants: rounding bias, shift amount, clip bounds).
+                let v = self.xreg(rs1);
+                let n = self.ctrl.vl as usize;
+                let mut out = vec![0u8; n * (self.ctrl.sew as usize / 8)];
+                for i in 0..n {
+                    self.write_sew(&mut out, i, v);
+                }
+                self.vreg_write(vd, &out);
+            }
+            Insn::Vadd { vd, vs1, vs2 } => self.alu_op(vd, vs1, vs2, |a, b| a.wrapping_add(b)),
+            Insn::Vsub { vd, vs1, vs2 } => self.alu_op(vd, vs1, vs2, |a, b| a.wrapping_sub(b)),
+            Insn::Vmul { vd, vs1, vs2 } => self.alu_op(vd, vs1, vs2, |a, b| a.wrapping_mul(b)),
+            Insn::Vmax { vd, vs1, vs2 } => self.alu_op(vd, vs1, vs2, |a, b| a.max(b)),
+            Insn::Vmin { vd, vs1, vs2 } => self.alu_op(vd, vs1, vs2, |a, b| a.min(b)),
+            Insn::Vsra { vd, vs1, vs2 } => {
+                self.alu_op(vd, vs1, vs2, |a, b| a >> (b & 0x3F).max(0))
+            }
+            Insn::Vmacc { vd, vs1, vs2 } => {
+                // vd += vs1 * vs2 (three-operand read).
+                let bytes = self.ctrl.vl as usize * (self.ctrl.sew as usize / 8);
+                let acc = self.vreg_bytes(vd, bytes);
+                let a = self.vreg_bytes(vs1, bytes);
+                let b = self.vreg_bytes(vs2, bytes);
+                let mut out = vec![0u8; bytes];
+                for i in 0..self.ctrl.vl as usize {
+                    let v = self
+                        .read_sew(&acc, i)
+                        .wrapping_add(self.read_sew(&a, i).wrapping_mul(self.read_sew(&b, i)));
+                    self.write_sew(&mut out, i, v);
+                }
+                self.vreg_write(vd, &out);
+            }
+            Insn::Vsam { stages, .. } | Insn::Vsac { stages, .. } => {
+                let plan = self.plan.as_ref().ok_or(SimError::NoPlan)?;
+                let slots = self.cfg.peak_macs_per_cycle(plan.desc.prec);
+                st.mac_slots += stages as u64 * slots;
+                // Advance the stage cursor; attribute the covered MACs.
+                let total = plan.total_stages.max(1);
+                let before =
+                    (plan.desc.total_macs() as u128 * self.stage_cursor as u128 / total as u128) as u64;
+                self.stage_cursor = (self.stage_cursor + stages as u64).min(total);
+                let after =
+                    (plan.desc.total_macs() as u128 * self.stage_cursor as u128 / total as u128) as u64;
+                st.macs += after - before;
+                // When the schedule completes, the functional engine
+                // produces the output rows for the result queue. (Stores
+                // may also demand rows earlier — see `drain_row` — timing
+                // correctness is enforced by the vreg scoreboard either
+                // way.)
+                if self.stage_cursor >= total {
+                    self.ensure_computed();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read an element at the active SEW from a flat byte image.
+    fn read_sew(&self, buf: &[u8], idx: usize) -> i64 {
+        match self.ctrl.sew {
+            8 => super::elem::read_elem(buf, idx, crate::config::Precision::Int8) as i64,
+            16 => super::elem::read_elem(buf, idx, crate::config::Precision::Int16) as i64,
+            _ => super::elem::read_i32(buf, idx) as i64,
+        }
+    }
+
+    /// Write an element at the active SEW into a flat byte image.
+    fn write_sew(&self, buf: &mut [u8], idx: usize, v: i64) {
+        match self.ctrl.sew {
+            8 => super::elem::write_elem(buf, idx, crate::config::Precision::Int8, v as i32),
+            16 => super::elem::write_elem(buf, idx, crate::config::Precision::Int16, v as i32),
+            _ => super::elem::write_i32(buf, idx, v as i32),
+        }
+    }
+
+    /// Flat byte image of a vector register (concatenated lane stripes, the
+    /// same order sequential loads/stores use).
+    fn vreg_bytes(&self, v: u8, total: usize) -> Vec<u8> {
+        let region = self.vreg_region_bytes();
+        let lanes = self.cfg.lanes as usize;
+        let per_lane = total.div_ceil(lanes);
+        let mut out = vec![0u8; total];
+        for (l, lane) in self.vrf.iter().enumerate() {
+            let lo = (l * per_lane).min(total);
+            let hi = ((l + 1) * per_lane).min(total);
+            if lo < hi {
+                let take = (hi - lo).min(region);
+                let off = v as usize * region;
+                out[lo..lo + take].copy_from_slice(&lane[off..off + take]);
+            }
+        }
+        out
+    }
+
+    /// Write a flat byte image back into a vector register (lane-striped).
+    fn vreg_write(&mut self, v: u8, data: &[u8]) {
+        let region = self.vreg_region_bytes();
+        let lanes = self.cfg.lanes as usize;
+        let total = data.len();
+        let per_lane = total.div_ceil(lanes);
+        for (l, lane) in self.vrf.iter_mut().enumerate() {
+            let lo = (l * per_lane).min(total);
+            let hi = ((l + 1) * per_lane).min(total);
+            if lo < hi {
+                let take = (hi - lo).min(region);
+                let off = v as usize * region;
+                lane[off..off + take].copy_from_slice(&data[lo..lo + take]);
+            }
+        }
+    }
+
+    /// Element-wise two-operand vector-ALU operation over `vl` elements at
+    /// the active SEW.
+    fn alu_op(&mut self, vd: u8, vs1: u8, vs2: u8, f: impl Fn(i64, i64) -> i64) {
+        let bytes = self.ctrl.vl as usize * (self.ctrl.sew as usize / 8);
+        let a = self.vreg_bytes(vs1, bytes);
+        let b = self.vreg_bytes(vs2, bytes);
+        let mut out = vec![0u8; bytes];
+        for i in 0..self.ctrl.vl as usize {
+            let v = f(self.read_sew(&a, i), self.read_sew(&b, i));
+            self.write_sew(&mut out, i, v);
+        }
+        self.vreg_write(vd, &out);
+    }
+
+    fn load_to_vrf(
+        &mut self,
+        vd: u8,
+        addr: u64,
+        total_bytes: usize,
+        broadcast: bool,
+    ) -> Result<(), SimError> {
+        self.check_mem(addr, total_bytes)?;
+        let region = self.vreg_region_bytes();
+        let lanes = self.cfg.lanes as usize;
+        let class = self.classify_load(addr);
+        self.scratch.clear();
+        self.scratch.extend_from_slice(self.mem.read(addr, total_bytes, class));
+        let data = std::mem::take(&mut self.scratch);
+        if broadcast {
+            // Same bytes delivered to every lane (multi-broadcast): one
+            // DRAM fetch, `lanes` VRF writes.
+            if total_bytes > region {
+                return Err(SimError::VrfOverflow { vd, need: total_bytes, have: region });
+            }
+            for lane in self.vrf.iter_mut() {
+                let off = vd as usize * region;
+                lane[off..off + total_bytes].copy_from_slice(&data);
+            }
+        } else {
+            // Sequential allocation: the transfer is striped across lanes.
+            let per_lane = total_bytes.div_ceil(lanes);
+            if per_lane > region {
+                return Err(SimError::VrfOverflow { vd, need: per_lane, have: region });
+            }
+            for (l, lane) in self.vrf.iter_mut().enumerate() {
+                let lo = (l * per_lane).min(total_bytes);
+                let hi = ((l + 1) * per_lane).min(total_bytes);
+                if lo < hi {
+                    let off = vd as usize * region;
+                    lane[off..off + (hi - lo)].copy_from_slice(&data[lo..hi]);
+                }
+            }
+        }
+        self.scratch = data;
+        Ok(())
+    }
+
+    fn classify_load(&self, addr: u64) -> TrafficClass {
+        match &self.plan {
+            Some(p) if p.is_partial_addr(addr) => TrafficClass::Partial,
+            Some(p) if addr >= p.w_addr && p.w_addr > p.in_addr => TrafficClass::Weight,
+            Some(p) if addr >= p.in_addr && addr < p.w_addr => TrafficClass::Input,
+            Some(_) => TrafficClass::Input,
+            None => TrafficClass::Input,
+        }
+    }
+
+    /// Produce the operator's rows if not done yet (demand-driven: the
+    /// result path may be drained block-by-block while later blocks are
+    /// still scheduled).
+    fn ensure_computed(&mut self) {
+        if self.computed {
+            return;
+        }
+        self.computed = true;
+        if let Some(plan) = &self.plan {
+            if plan.functional {
+                self.computed_rows = mptu::compute_output_rows(&self.mem, plan);
+            }
+        }
+    }
+
+    fn drain_row(&mut self, addr: u64) -> Result<(), SimError> {
+        let plan = *self.plan.as_ref().ok_or(SimError::NoPlan)?;
+        if plan.is_partial_addr(addr) {
+            // Partial spill: numerics are carried inside the functional
+            // engine; the store contributes (byte-accurate) traffic.
+            let bytes = (self.ctrl.vl as usize * 4).max(4);
+            self.check_mem(addr, bytes)?;
+            self.scratch.clear();
+            self.scratch.resize(bytes, 0);
+            let zeros = std::mem::take(&mut self.scratch);
+            self.mem.write(addr, &zeros, TrafficClass::Partial);
+            self.scratch = zeros;
+            return Ok(());
+        }
+        let row_bytes = plan.desc.output_row_elems() * 4;
+        if !plan.functional {
+            // Timing-only run: count the bytes of one output row.
+            self.check_mem(addr, row_bytes as usize)?;
+            self.scratch.clear();
+            self.scratch.resize(row_bytes as usize, 0);
+            let zeros = std::mem::take(&mut self.scratch);
+            self.mem.write(addr, &zeros, TrafficClass::Output);
+            self.scratch = zeros;
+            return Ok(());
+        }
+        self.ensure_computed();
+        // Map the address back to the output row it drains.
+        if addr < plan.out_addr || (addr - plan.out_addr) % row_bytes != 0 {
+            return Err(SimError::StoreUnderflow);
+        }
+        let idx = ((addr - plan.out_addr) / row_bytes) as usize;
+        let row = self.computed_rows.get(idx).ok_or(SimError::StoreUnderflow)?;
+        let mut bytes = Vec::with_capacity(row.len() * 4);
+        for v in row {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.check_mem(addr, bytes.len())?;
+        self.mem.write(addr, &bytes, TrafficClass::Output);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::isa::{assemble, StrategyKind};
+    use crate::models::ops::OpDesc;
+
+    fn machine() -> Processor {
+        Processor::new(SpeedConfig::reference(), 1 << 20)
+    }
+
+    #[test]
+    fn scalar_program_counts_cycles() {
+        let mut p = machine();
+        let prog = assemble("li x1, 4\nli x2, 8\naddi x3, x1, 2").unwrap();
+        let st = p.run(&prog).unwrap();
+        assert_eq!(st.insns_total, 3);
+        assert_eq!(st.insns_scalar, 3);
+        // 3 decodes (1/cycle), each 1-cycle EX overlapped: ~5 cycles total.
+        assert!(st.cycles >= 3 && st.cycles <= 6, "{}", st.cycles);
+        assert_eq!(p.xreg(3), 6);
+    }
+
+    #[test]
+    fn vle_moves_bytes_and_counts_traffic() {
+        let mut p = machine();
+        p.mem.preload(0x100, &[7u8; 64]);
+        let prog = assemble(
+            "li x1, 32\nvsetvli x0, x1, e16\nli x2, 0x100\nvle16.v v1, (x2)",
+        )
+        .unwrap();
+        let st = p.run(&prog).unwrap();
+        assert_eq!(st.traffic.input_read, 64);
+        // Striped across 4 lanes: 16 bytes each at reg offset of v1.
+        let region = p.vreg_region_bytes();
+        assert_eq!(&p.vrf[0][region..region + 16], &[7u8; 16]);
+        assert_eq!(&p.vrf[3][region..region + 16], &[7u8; 16]);
+    }
+
+    #[test]
+    fn vsald_broadcast_copies_to_all_lanes() {
+        let mut p = machine();
+        p.mem.preload(0x200, &[9u8; 16]);
+        let prog = assemble(
+            "li x1, 16\nvsetvli x0, x1, e8\nli x2, 0x200\nvsald v2, (x2), bcast, w=8",
+        )
+        .unwrap();
+        let st = p.run(&prog).unwrap();
+        // One DRAM fetch of 16 bytes regardless of lane count.
+        assert_eq!(st.traffic.input_read, 16);
+        let region = p.vreg_region_bytes();
+        for lane in 0..4 {
+            assert_eq!(&p.vrf[lane][2 * region..2 * region + 16], &[9u8; 16]);
+        }
+    }
+
+    #[test]
+    fn mm_program_end_to_end_numerics() {
+        // Full instruction-driven 2x2 INT8 MM: A @ I = A.
+        let mut p = machine();
+        let d = OpDesc::mm(2, 2, 2, Precision::Int8);
+        let plan = OpPlan {
+            desc: d,
+            strat: StrategyKind::Mm,
+            in_addr: 0x000,
+            w_addr: 0x100,
+            out_addr: 0x200,
+            partial_addr: u64::MAX,
+            total_stages: 2,
+            functional: true,
+        };
+        p.mem.preload_packed(plan.in_addr, &[1, 2, 3, 4], d.prec);
+        p.mem.preload_packed(plan.w_addr, &[1, 0, 0, 1], d.prec);
+        p.set_plan(plan);
+        let prog = assemble(
+            "li x1, 4\n\
+             vsetvli x0, x1, e8\n\
+             vsacfg x3, prec=8, k=1, strat=mm\n\
+             li x4, 0\n\
+             vsald v0, (x4), seq, w=cfg\n\
+             li x5, 0x100\n\
+             vsald v4, (x5), bcast, w=cfg\n\
+             vsam v8, v0, v4, stages=2\n\
+             li x6, 0x200\n\
+             vse32.v v8, (x6)\n\
+             addi x6, x6, 8\n\
+             vse32.v v8, (x6)",
+        )
+        .unwrap();
+        let st = p.run(&prog).unwrap();
+        assert_eq!(p.mem.inspect_i32(0x200, 4), vec![1, 2, 3, 4]);
+        assert_eq!(st.macs, d.total_macs());
+        assert_eq!(st.traffic.output_write, 16);
+        assert!(st.cycles > 0);
+    }
+
+    #[test]
+    fn vsam_without_plan_errors() {
+        let mut p = machine();
+        let prog = assemble("vsam v8, v0, v4, stages=1").unwrap();
+        assert_eq!(p.run(&prog).unwrap_err(), SimError::NoPlan);
+    }
+
+    #[test]
+    fn store_to_unmapped_row_detected() {
+        let mut p = machine();
+        let d = OpDesc::mm(1, 1, 1, Precision::Int8);
+        p.set_plan(OpPlan {
+            desc: d,
+            strat: StrategyKind::Mm,
+            in_addr: 0,
+            w_addr: 0x10,
+            out_addr: 0x20,
+            partial_addr: u64::MAX,
+            total_stages: 1,
+            functional: true,
+        });
+        // Misaligned output address (0x21 is not a row boundary).
+        let prog = assemble("li x1, 0x21\nvse32.v v8, (x1)").unwrap();
+        assert_eq!(p.run(&prog).unwrap_err(), SimError::StoreUnderflow);
+        // Row index past the output tensor (row 5 of a 1x1 output).
+        let prog = assemble("li x1, 0x34\nvse32.v v8, (x1)").unwrap();
+        assert_eq!(p.run(&prog).unwrap_err(), SimError::StoreUnderflow);
+    }
+
+    #[test]
+    fn vrf_overflow_detected() {
+        let mut p = machine();
+        // 16 KiB VRF / 32 regs = 512 B per lane-region; broadcast of 1024 B
+        // cannot fit one register.
+        p.mem.preload(0, &[0u8; 2048]);
+        let prog = assemble(
+            "li x1, 1024\nvsetvli x0, x1, e8\nli x2, 0\nvsald v1, (x2), bcast, w=8",
+        )
+        .unwrap();
+        match p.run(&prog).unwrap_err() {
+            SimError::VrfOverflow { need, have, .. } => {
+                assert_eq!(need, 1024);
+                assert_eq!(have, 512);
+            }
+            e => panic!("unexpected {e:?}"),
+        }
+    }
+
+    #[test]
+    fn mem_out_of_range_detected() {
+        let mut p = Processor::new(SpeedConfig::reference(), 256);
+        let prog =
+            assemble("li x1, 16\nvsetvli x0, x1, e8\nli x2, 250\nvle8.v v1, (x2)").unwrap();
+        assert!(matches!(p.run(&prog).unwrap_err(), SimError::MemOutOfRange { .. }));
+    }
+
+    #[test]
+    fn hazards_serialize_dependent_ops() {
+        // vsam writes v8; vse reads v8 — must not complete before vsam.
+        let mut p = machine();
+        let d = OpDesc::mm(2, 2, 2, Precision::Int8);
+        p.mem.preload_packed(0, &[1, 1, 1, 1], d.prec);
+        p.mem.preload_packed(0x100, &[1, 1, 1, 1], d.prec);
+        p.set_plan(OpPlan {
+            desc: d,
+            strat: StrategyKind::Mm,
+            in_addr: 0,
+            w_addr: 0x100,
+            out_addr: 0x200,
+            partial_addr: u64::MAX,
+            total_stages: 64,
+            functional: true,
+        });
+        let prog = assemble(
+            "li x1, 4\nvsetvli x0, x1, e8\nli x2, 0\nvsald v0, (x2), seq, w=8\n\
+             li x3, 0x100\nvsald v4, (x3), bcast, w=8\n\
+             vsam v8, v0, v4, stages=64\nli x6, 0x200\nvse32.v v8, (x6)",
+        )
+        .unwrap();
+        let st = p.run(&prog).unwrap();
+        // The 64-stage VSAM dominates: cycles must exceed its EX time.
+        assert!(st.cycles > 64, "cycles {}", st.cycles);
+        assert!(st.stall_hazard > 0, "expected RAW stall on v8");
+    }
+
+    #[test]
+    fn independent_load_and_compute_overlap() {
+        // Two independent VSALDs to different registers overlap with MPTU
+        // work only via the shared decode; FU busy sums may exceed cycles.
+        let mut p = machine();
+        p.mem.preload(0, &[0u8; 4096]);
+        let prog = assemble(
+            "li x1, 256\nvsetvli x0, x1, e8\nli x2, 0\n\
+             vsald v0, (x2), seq, w=8\nli x3, 1024\nvsald v1, (x3), seq, w=8",
+        )
+        .unwrap();
+        let st = p.run(&prog).unwrap();
+        // Both loads contend for VLDU + mem port: serialized EX.
+        assert!(st.stall_fu_busy > 0 || st.stall_mem_port > 0 || st.cycles > 0);
+        assert_eq!(st.traffic.input_read, 512);
+    }
+}

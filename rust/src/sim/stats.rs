@@ -1,0 +1,161 @@
+//! Simulation statistics: cycles, utilization, stalls, instruction mix.
+
+use super::memory::TrafficStats;
+
+/// Functional-unit identifiers for occupancy accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fu {
+    /// Vector load unit (VLE / VSALD).
+    Vldu,
+    /// Vector store unit (VSE).
+    Vsu,
+    /// Multi-precision tensor unit (VSAM / VSAC).
+    Mptu,
+    /// Vector ALU (VMACC / VMUL / VADD / VMV).
+    Valu,
+    /// Scalar core + config path (ADDI / VSETVLI / VSACFG).
+    Scalar,
+}
+
+impl Fu {
+    pub const ALL: [Fu; 5] = [Fu::Vldu, Fu::Vsu, Fu::Mptu, Fu::Valu, Fu::Scalar];
+
+    pub fn index(self) -> usize {
+        match self {
+            Fu::Vldu => 0,
+            Fu::Vsu => 1,
+            Fu::Mptu => 2,
+            Fu::Valu => 3,
+            Fu::Scalar => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Fu::Vldu => "VLDU",
+            Fu::Vsu => "VSU",
+            Fu::Mptu => "MPTU",
+            Fu::Valu => "VALU",
+            Fu::Scalar => "SCALAR",
+        }
+    }
+}
+
+/// Aggregate statistics of one simulation run.
+#[derive(Debug, Default, Clone)]
+pub struct SimStats {
+    /// Total cycles from first decode to last retire.
+    pub cycles: u64,
+    /// Instructions decoded, by class.
+    pub insns_total: u64,
+    pub insns_custom: u64,
+    pub insns_vector: u64,
+    pub insns_scalar: u64,
+    /// Per-FU busy cycles.
+    pub fu_busy: [u64; 5],
+    /// Issue stalls: cycles lost waiting on a busy FU.
+    pub stall_fu_busy: u64,
+    /// Issue stalls: cycles lost on register hazards (RAW/WAW/WAR).
+    pub stall_hazard: u64,
+    /// Issue stalls: cycles lost on the shared external-memory port.
+    pub stall_mem_port: u64,
+    /// MACs actually performed by the MPTU.
+    pub macs: u64,
+    /// MAC slots available while the MPTU was busy (utilization denom).
+    pub mac_slots: u64,
+    /// Peak number of distinct vector registers concurrently live.
+    pub vregs_used: u32,
+    /// External-memory traffic (byte-accurate, by class).
+    pub traffic: TrafficStats,
+    /// Precision switches performed (VSACFG with a new precision).
+    pub precision_switches: u64,
+}
+
+impl SimStats {
+    /// Effective performance in ops/cycle (1 MAC = 2 ops) — the paper's
+    /// primary operator-level metric (Fig. 11).
+    pub fn ops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        (2 * self.macs) as f64 / self.cycles as f64
+    }
+
+    /// MPTU utilization: MACs performed / MAC slots offered while busy.
+    pub fn mptu_utilization(&self) -> f64 {
+        if self.mac_slots == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / self.mac_slots as f64
+    }
+
+    /// FU occupancy fraction over the whole run.
+    pub fn fu_occupancy(&self, fu: Fu) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.fu_busy[fu.index()] as f64 / self.cycles as f64
+    }
+
+    /// Throughput in GOPS at a clock frequency.
+    pub fn gops(&self, freq_ghz: f64) -> f64 {
+        self.ops_per_cycle() * freq_ghz
+    }
+
+    /// Merge another run's stats (sequential composition, e.g. layers of a
+    /// network).
+    pub fn merge(&mut self, other: &SimStats) {
+        self.cycles += other.cycles;
+        self.insns_total += other.insns_total;
+        self.insns_custom += other.insns_custom;
+        self.insns_vector += other.insns_vector;
+        self.insns_scalar += other.insns_scalar;
+        for i in 0..self.fu_busy.len() {
+            self.fu_busy[i] += other.fu_busy[i];
+        }
+        self.stall_fu_busy += other.stall_fu_busy;
+        self.stall_hazard += other.stall_hazard;
+        self.stall_mem_port += other.stall_mem_port;
+        self.macs += other.macs;
+        self.mac_slots += other.mac_slots;
+        self.vregs_used = self.vregs_used.max(other.vregs_used);
+        self.precision_switches += other.precision_switches;
+        let t = &mut self.traffic;
+        let o = &other.traffic;
+        t.input_read += o.input_read;
+        t.weight_read += o.weight_read;
+        t.partial_read += o.partial_read;
+        t.partial_write += o.partial_write;
+        t.output_write += o.output_write;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_per_cycle() {
+        let s = SimStats { cycles: 100, macs: 400, ..Default::default() };
+        assert!((s.ops_per_cycle() - 8.0).abs() < 1e-12);
+        assert!((s.gops(1.05) - 8.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_cycles_is_zero_not_nan() {
+        let s = SimStats::default();
+        assert_eq!(s.ops_per_cycle(), 0.0);
+        assert_eq!(s.mptu_utilization(), 0.0);
+        assert_eq!(s.fu_occupancy(Fu::Mptu), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = SimStats { cycles: 10, macs: 5, vregs_used: 4, ..Default::default() };
+        let b = SimStats { cycles: 7, macs: 3, vregs_used: 9, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 17);
+        assert_eq!(a.macs, 8);
+        assert_eq!(a.vregs_used, 9);
+    }
+}

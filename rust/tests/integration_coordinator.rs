@@ -1,0 +1,120 @@
+//! Integration: the coordinator scheduling whole (downscaled) benchmark
+//! networks across policies, precisions and configurations.
+
+use speed_rvv::ara::AraParams;
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::coordinator::runner::run_parallel;
+use speed_rvv::coordinator::{run_model, run_model_ara, Policy};
+use speed_rvv::isa::StrategyKind;
+use speed_rvv::models::zoo::{model_by_name, MODELS};
+use speed_rvv::models::OpKind;
+use speed_rvv::report::fig12::downscale;
+
+#[test]
+fn every_zoo_model_runs_under_mixed_policy() {
+    let cfg = SpeedConfig::reference();
+    for name in MODELS {
+        let model = downscale(&model_by_name(name).unwrap(), 8);
+        let r = run_model(&model, Precision::Int8, &cfg, Policy::Mixed)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(r.layers.len(), model.ops.len(), "{name}");
+        assert_eq!(
+            r.total.macs,
+            model.ops.iter().map(|o| o.total_macs()).sum::<u64>(),
+            "{name}"
+        );
+        // Mixed policy used the matched strategy per operator kind.
+        for l in &r.layers {
+            let want = match l.op.kind {
+                OpKind::Mm => StrategyKind::Mm,
+                OpKind::Conv => StrategyKind::Ffcs,
+                OpKind::Pwcv => StrategyKind::Cf,
+                OpKind::Dwcv => StrategyKind::Ff,
+            };
+            assert_eq!(l.strat, want, "{name} {:?}", l.op.kind);
+        }
+    }
+}
+
+#[test]
+fn mixed_policy_beats_or_matches_fixed_policies() {
+    // The paper's claim for the mixed dataflow: it leverages the strengths
+    // of each strategy. On a PWCV+DWCV-heavy model the mixed policy must
+    // not lose to forcing FFCS everywhere it applies.
+    let cfg = SpeedConfig::reference();
+    let model = downscale(&model_by_name("mobilenetv2").unwrap(), 4);
+    let mixed = run_model(&model, Precision::Int8, &cfg, Policy::Mixed).unwrap();
+    let ffcs =
+        run_model(&model, Precision::Int8, &cfg, Policy::Fixed(StrategyKind::Ffcs)).unwrap();
+    // Compare on the layers FFCS can run (PWCV + CONV).
+    let mixed_sub: u64 = mixed
+        .layers
+        .iter()
+        .filter(|l| matches!(l.op.kind, OpKind::Pwcv | OpKind::Conv))
+        .map(|l| l.stats.cycles)
+        .sum();
+    let ffcs_sub: u64 = ffcs.layers.iter().map(|l| l.stats.cycles).sum();
+    assert!(
+        mixed_sub <= ffcs_sub,
+        "mixed {mixed_sub} cycles > all-FFCS {ffcs_sub} on its own subset"
+    );
+}
+
+#[test]
+fn speedup_over_ara_holds_for_all_models_and_precisions() {
+    let cfg = SpeedConfig::reference();
+    let params = AraParams::default();
+    for name in MODELS {
+        let model = downscale(&model_by_name(name).unwrap(), 8);
+        for prec in [Precision::Int16, Precision::Int8, Precision::Int4] {
+            let s = run_model(&model, prec, &cfg, Policy::Mixed).unwrap();
+            let a = run_model_ara(&model, prec, &params);
+            assert!(
+                a.cycles > s.vector_cycles(),
+                "{name}@{prec}: Ara {} !> SPEED {}",
+                a.cycles,
+                s.vector_cycles()
+            );
+        }
+    }
+}
+
+#[test]
+fn bigger_configs_are_not_slower() {
+    let model = downscale(&model_by_name("resnet18").unwrap(), 8);
+    let small = run_model(&model, Precision::Int8, &SpeedConfig::dse(2, 2, 2), Policy::Mixed)
+        .unwrap();
+    let big = run_model(&model, Precision::Int8, &SpeedConfig::dse(8, 4, 4), Policy::Mixed)
+        .unwrap();
+    assert!(
+        big.vector_cycles() < small.vector_cycles(),
+        "8L4x4 {} !< 2L2x2 {}",
+        big.vector_cycles(),
+        small.vector_cycles()
+    );
+}
+
+#[test]
+fn parallel_sweep_matches_serial() {
+    let cfg = SpeedConfig::reference();
+    let model = downscale(&model_by_name("vit_tiny").unwrap(), 8);
+    let precs = vec![Precision::Int16, Precision::Int8, Precision::Int4];
+    let serial: Vec<u64> = precs
+        .iter()
+        .map(|&p| run_model(&model, p, &cfg, Policy::Mixed).unwrap().vector_cycles())
+        .collect();
+    let parallel = run_parallel(precs, 3, |&p| {
+        run_model(&model, p, &cfg, Policy::Mixed).unwrap().vector_cycles()
+    });
+    assert_eq!(serial, parallel, "simulation must be deterministic");
+}
+
+#[test]
+fn scalar_fraction_propagates_to_complete_cycles() {
+    let cfg = SpeedConfig::reference();
+    let model = downscale(&model_by_name("mobilenetv2").unwrap(), 8);
+    let r = run_model(&model, Precision::Int8, &cfg, Policy::Mixed).unwrap();
+    let expect = (r.vector_cycles() as f64 * model.scalar_fraction) as u64;
+    assert_eq!(r.complete_cycles() - r.vector_cycles(), expect);
+    assert_eq!(r.scalar_cycles, expect);
+}

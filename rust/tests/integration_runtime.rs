@@ -1,0 +1,106 @@
+//! Integration: the Rust PJRT runtime executes every AOT artifact and the
+//! three-way golden agreement holds (JAX golden == PJRT == cycle sim).
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise so unit
+//! CI without Python still passes).
+
+use std::path::PathBuf;
+
+use speed_rvv::runtime::{golden_check, golden_check_all, Engine};
+use speed_rvv::runtime::artifacts::Golden;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn engine_opens_and_lists_artifacts() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::open(&dir).expect("open engine");
+    assert!(engine.manifest().len() >= 10, "expected full artifact set");
+    for name in ["mm_i4", "mm_i8", "mm_i16", "conv3x3_i8", "mnv2_block_i8", "vit_mlp_i8"] {
+        assert!(engine.manifest().artifact(name).is_some(), "{name}");
+    }
+}
+
+#[test]
+fn every_artifact_passes_golden_check() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut engine = Engine::open(&dir).expect("open engine");
+    let reports = golden_check_all(&mut engine, &dir).expect("golden checks");
+    assert!(!reports.is_empty());
+    for r in &reports {
+        assert!(r.pjrt_ok, "{}: PJRT output != JAX golden", r.name);
+        if let Some(ok) = r.sim_ok {
+            assert!(ok, "{}: simulator output != PJRT output", r.name);
+        }
+        assert!(r.elems > 0);
+    }
+    // The single-operator artifacts must have exercised the simulator path.
+    let sim_checked = reports.iter().filter(|r| r.sim_ok.is_some()).count();
+    assert!(sim_checked >= 7, "only {sim_checked} sim cross-checks ran");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut engine = Engine::open(&dir).expect("open engine");
+    assert_eq!(engine.cached(), 0);
+    golden_check(&mut engine, &dir, "mm_i8").unwrap();
+    assert_eq!(engine.cached(), 1);
+    golden_check(&mut engine, &dir, "mm_i8").unwrap();
+    assert_eq!(engine.cached(), 1);
+}
+
+#[test]
+fn execute_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut engine = Engine::open(&dir).expect("open engine");
+    // mm_i8 wants (32,64) x (64,32); feed wrong sizes.
+    assert!(engine.execute("mm_i8", &[vec![0; 4], vec![0; 4]]).is_err());
+    assert!(engine.execute("mm_i8", &[vec![0; 32 * 64]]).is_err());
+    assert!(engine.execute("definitely_not_there", &[]).is_err());
+}
+
+#[test]
+fn requant_epilogue_matches_pjrt_artifact() {
+    // Fourth leg of the golden agreement: the vector-ALU requantization
+    // program (VADD/VSRA/VMIN/VMAX on the cycle simulator) must reproduce
+    // the AOT-compiled requant_s7_i8 artifact bit-exactly.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut engine = Engine::open(&dir).expect("open engine");
+    let art = engine.manifest().artifact("requant_s7_i8").expect("artifact").clone();
+    let golden = Golden::load(&dir, &art).expect("golden");
+    let pjrt_out = engine.execute("requant_s7_i8", &golden.inputs).expect("execute");
+
+    use speed_rvv::config::SpeedConfig;
+    use speed_rvv::coordinator::epilogue::requant_program;
+    use speed_rvv::sim::Processor;
+    let cfg = SpeedConfig::reference();
+    let mut p = Processor::new(cfg, 1 << 20);
+    let acc = &golden.inputs[0];
+    for (i, &v) in acc.iter().enumerate() {
+        p.mem.preload(0x100 + 4 * i as u64, &v.to_le_bytes());
+    }
+    let prog = requant_program(&cfg, acc.len() as u64, 7, 8, 0x100, 0x8000);
+    p.run(&prog).expect("sim");
+    let sim_out = p.mem.inspect_i32(0x8000, acc.len());
+    assert_eq!(sim_out, pjrt_out, "vector-ALU epilogue != PJRT artifact");
+    assert_eq!(sim_out, golden.output, "vector-ALU epilogue != JAX golden");
+}

@@ -1,0 +1,184 @@
+//! Integration: the simulator executing hand-written assembly programs,
+//! multi-operator sequences, runtime precision switching, and failure
+//! injection across module boundaries (assembler → decoder → pipeline →
+//! memory system).
+
+use speed_rvv::compiler::{compile_op, execute_op, MemLayout};
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::isa::{assemble, encode, decode, StrategyKind};
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::sim::{Processor, SimError};
+
+#[test]
+fn assembled_text_runs_through_binary_encoding() {
+    // Full toolchain path: text -> Insn -> 32-bit word -> Insn -> simulate.
+    let src = r#"
+        li       x1, 64
+        vsetvli  x0, x1, e8
+        li       x2, 0
+        vle8.v   v1, (x2)
+        vadd.vv  v2, v1, v1
+        li       x3, 256
+        vse8.v   v2, (x3)
+    "#;
+    let prog = assemble(src).unwrap();
+    let words: Vec<u32> = prog.iter().map(encode).collect();
+    let decoded: Vec<_> = words.iter().map(|w| decode(*w).unwrap()).collect();
+    assert_eq!(decoded, prog);
+
+    let mut p = Processor::new(SpeedConfig::reference(), 4096);
+    p.mem.preload(0, &[3u8; 64]);
+    let st = p.run(&decoded).unwrap();
+    assert_eq!(st.insns_total, 7);
+    assert!(st.cycles > 0);
+    assert_eq!(st.traffic.input_read, 64);
+}
+
+#[test]
+fn back_to_back_operators_share_the_machine() {
+    // Two MMs on one processor: the clock telescopes, stats accumulate,
+    // and the second operator's numerics are unaffected by the first.
+    let cfg = SpeedConfig::reference();
+    let mut p = Processor::new(cfg, 1 << 22);
+    let op1 = OpDesc::mm(8, 8, 8, Precision::Int8);
+    let op2 = OpDesc::mm(4, 4, 4, Precision::Int16);
+
+    let lay1 = MemLayout::for_op(&op1, 1 << 20).unwrap();
+    let a1: Vec<i32> = (0..64).map(|i| (i % 7) - 3).collect();
+    let b1: Vec<i32> = (0..64).map(|i| (i % 5) - 2).collect();
+    p.mem.preload_packed(lay1.in_addr, &a1, op1.prec);
+    p.mem.preload_packed(lay1.w_addr, &b1, op1.prec);
+    let c1 = compile_op(&op1, &cfg, StrategyKind::Mm, lay1, true).unwrap();
+    p.set_plan(c1.plan);
+    let mut st1 = speed_rvv::sim::SimStats::default();
+    for seg in &c1.segments {
+        st1.merge(&p.run(seg).unwrap());
+    }
+
+    // Second operator at a different precision (runtime VSACFG switch) and
+    // a different memory region.
+    let lay2 = MemLayout {
+        in_addr: 0x100000,
+        w_addr: 0x110000,
+        out_addr: 0x120000,
+        partial_addr: 0x130000,
+    };
+    let a2: Vec<i32> = (0..16).map(|i| i - 8).collect();
+    let b2: Vec<i32> = (0..16).map(|i| 8 - i).collect();
+    p.mem.preload_packed(lay2.in_addr, &a2, op2.prec);
+    p.mem.preload_packed(lay2.w_addr, &b2, op2.prec);
+    let c2 = compile_op(&op2, &cfg, StrategyKind::Mm, lay2, true).unwrap();
+    p.set_plan(c2.plan);
+    let mut st2 = speed_rvv::sim::SimStats::default();
+    for seg in &c2.segments {
+        st2.merge(&p.run(seg).unwrap());
+    }
+
+    assert_eq!(st1.macs, op1.total_macs());
+    assert_eq!(st2.macs, op2.total_macs());
+    // The precision switch was counted (8b -> 16b via VSACFG; the first
+    // VSACFG matches the reset default and is not a switch).
+    assert_eq!(p.ctrl.precision_switches, 1);
+    // Lifetime stats accumulate both runs.
+    assert_eq!(p.lifetime_stats().macs, op1.total_macs() + op2.total_macs());
+
+    // Verify op2's numerics independently.
+    let got = p.mem.inspect_i32(lay2.out_addr, 16);
+    let mut want = vec![0i32; 16];
+    for i in 0..4 {
+        for k in 0..4 {
+            for j in 0..4 {
+                want[i * 4 + j] += a2[i * 4 + k] * b2[k * 4 + j];
+            }
+        }
+    }
+    assert_eq!(got, want);
+}
+
+#[test]
+fn failure_injection_vrf_overflow() {
+    let mut p = Processor::new(SpeedConfig::reference(), 1 << 16);
+    // Broadcast 1024 bytes into a 512-byte register region.
+    let prog = assemble(
+        "li x1, 1024\nvsetvli x0, x1, e8\nli x2, 0\nvsald v1, (x2), bcast, w=8",
+    )
+    .unwrap();
+    assert!(matches!(p.run(&prog).unwrap_err(), SimError::VrfOverflow { .. }));
+}
+
+#[test]
+fn failure_injection_memory_bounds() {
+    let mut p = Processor::new(SpeedConfig::reference(), 128);
+    let prog =
+        assemble("li x1, 64\nvsetvli x0, x1, e16\nli x2, 96\nvle16.v v1, (x2)").unwrap();
+    assert!(matches!(p.run(&prog).unwrap_err(), SimError::MemOutOfRange { .. }));
+}
+
+#[test]
+fn failure_injection_compute_without_plan() {
+    let mut p = Processor::new(SpeedConfig::reference(), 4096);
+    let prog = assemble("vsam v8, v0, v4, stages=5").unwrap();
+    assert_eq!(p.run(&prog).unwrap_err(), SimError::NoPlan);
+    let prog = assemble("vsac v8, v0, v4, stages=5").unwrap();
+    assert_eq!(p.run(&prog).unwrap_err(), SimError::NoPlan);
+}
+
+#[test]
+fn oversized_operator_rejected_at_layout() {
+    let op = OpDesc::conv(512, 512, 224, 224, 3, 1, 1, Precision::Int16);
+    assert!(MemLayout::for_op(&op, 1 << 20).is_err());
+}
+
+#[test]
+fn dwcv_stride2_geometry_end_to_end() {
+    // DWCV with stride 2 through the whole stack (the Fig. 10/11 operator).
+    let cfg = SpeedConfig::reference();
+    let op = OpDesc::dwcv(8, 13, 13, 3, 2, 1, Precision::Int8);
+    let mut p = Processor::new(cfg, 1 << 22);
+    let layout = MemLayout::for_op(&op, 1 << 22).unwrap();
+    let x: Vec<i32> = (0..op.input_elems() as i32).map(|i| (i % 11) - 5).collect();
+    let w: Vec<i32> = (0..op.weight_elems() as i32).map(|i| (i % 5) - 2).collect();
+    p.mem.preload_packed(layout.in_addr, &x, op.prec);
+    p.mem.preload_packed(layout.w_addr, &w, op.prec);
+    let c = compile_op(&op, &cfg, StrategyKind::Ff, layout, true).unwrap();
+    p.set_plan(c.plan);
+    for seg in &c.segments {
+        p.run(seg).unwrap();
+    }
+    // 13x13 stride-2 pad-1 -> 7x7 outputs per channel.
+    assert_eq!(op.output_elems(), 8 * 7 * 7);
+    let out = p.mem.inspect_i32(layout.out_addr, op.output_elems() as usize);
+    // Spot-check one interior output against a hand computation.
+    // out[c=0][oy=1][ox=1] covers input rows 1..4, cols 1..4 of channel 0.
+    let mut want = 0i32;
+    for ky in 0..3usize {
+        for kx in 0..3usize {
+            let iy = 2 * 1 + ky as i32 - 1;
+            let ix = 2 * 1 + kx as i32 - 1;
+            let xv = x[(iy * 13 + ix) as usize];
+            want += xv * w[ky * 3 + kx];
+        }
+    }
+    assert_eq!(out[7 + 1], want);
+}
+
+#[test]
+fn timing_only_and_functional_agree_on_cycles() {
+    // functional=true adds numerics but must not change the clock.
+    let cfg = SpeedConfig::reference();
+    let op = OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8);
+    let layout = MemLayout::for_op(&op, 1 << 22).unwrap();
+
+    let mut p1 = Processor::new(cfg, 1 << 22);
+    let (t_timing, _) = execute_op(&mut p1, &op, StrategyKind::Ffcs, layout, false).unwrap();
+
+    let mut p2 = Processor::new(cfg, 1 << 22);
+    let x: Vec<i32> = vec![1; op.input_elems() as usize];
+    let w: Vec<i32> = vec![1; op.weight_elems() as usize];
+    p2.mem.preload_packed(layout.in_addr, &x, op.prec);
+    p2.mem.preload_packed(layout.w_addr, &w, op.prec);
+    let (t_func, _) = execute_op(&mut p2, &op, StrategyKind::Ffcs, layout, true).unwrap();
+
+    assert_eq!(t_timing.cycles, t_func.cycles);
+    assert_eq!(t_timing.traffic.total(), t_func.traffic.total());
+}

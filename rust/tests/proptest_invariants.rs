@@ -1,0 +1,330 @@
+//! Property-based invariants over randomized inputs.
+//!
+//! The deployment image vendors no proptest, so properties are exercised
+//! with a deterministic xorshift generator over a few hundred cases each —
+//! same spirit: every case is a *universal* statement about the system,
+//! not an example.
+
+use speed_rvv::compiler::{compile_op, execute_op, MemLayout};
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::dataflow;
+use speed_rvv::isa::{self, Dim, Insn, LdMode, StrategyKind, Vtype, WidthSel};
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::sim::{elem, Processor};
+
+/// Deterministic xorshift64* stream.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next() % xs.len() as u64) as usize]
+    }
+
+    fn operand(&mut self, p: Precision) -> i32 {
+        let (lo, hi) = p.range();
+        lo + (self.next() % (hi - lo + 1) as u64) as i32
+    }
+}
+
+fn random_insn(rng: &mut Rng) -> Insn {
+    let v = |rng: &mut Rng| rng.range(0, 31) as u8;
+    match rng.range(0, 12) {
+        0 => Insn::Addi { rd: v(rng), rs1: v(rng), imm: rng.range(0, 4094) as i32 - 2047 },
+        1 => Insn::Vsetvli {
+            rd: v(rng),
+            rs1: v(rng),
+            vtype: Vtype::new(*rng.pick(&[8, 16, 32, 64])),
+        },
+        2 => Insn::Vle { vd: v(rng), rs1: v(rng), eew: *rng.pick(&[8, 16, 32, 64]) },
+        3 => Insn::Vse { vs3: v(rng), rs1: v(rng), eew: *rng.pick(&[8, 16, 32, 64]) },
+        4 => Insn::Vmacc { vd: v(rng), vs1: v(rng), vs2: v(rng) },
+        5 => Insn::Vmul { vd: v(rng), vs1: v(rng), vs2: v(rng) },
+        6 => Insn::Vadd { vd: v(rng), vs1: v(rng), vs2: v(rng) },
+        7 => Insn::Vmv { vd: v(rng), rs1: v(rng) },
+        8 => {
+            let prec = *rng.pick(&Precision::ALL);
+            let k = rng.range(1, 15) as u32;
+            let strat = *rng.pick(&StrategyKind::ALL);
+            Insn::Vsacfg { rd: v(rng), zimm: Insn::pack_cfg(prec, k, strat), uimm: v(rng) & 0x1F }
+        }
+        9 => Insn::VsacfgDim { rd: v(rng), rs1: v(rng), dim: *rng.pick(&Dim::ALL) },
+        10 => Insn::Vsald {
+            vd: v(rng),
+            rs1: v(rng),
+            mode: *rng.pick(&[LdMode::Sequential, LdMode::Broadcast]),
+            width: *rng.pick(&[
+                WidthSel::FromCfg,
+                WidthSel::Explicit(Precision::Int4),
+                WidthSel::Explicit(Precision::Int8),
+                WidthSel::Explicit(Precision::Int16),
+            ]),
+        },
+        11 => Insn::Vsam { vd: v(rng), vs1: v(rng), vs2: v(rng), stages: rng.range(1, 127) as u8 },
+        _ => Insn::Vsac { vd: v(rng), vs1: v(rng), vs2: v(rng), stages: rng.range(1, 127) as u8 },
+    }
+}
+
+#[test]
+fn prop_isa_binary_roundtrip() {
+    let mut rng = Rng::new(42);
+    for _ in 0..2000 {
+        let i = random_insn(&mut rng);
+        let back = isa::decode(isa::encode(&i)).unwrap_or_else(|e| panic!("{i:?}: {e}"));
+        assert_eq!(back, i);
+    }
+}
+
+#[test]
+fn prop_isa_text_roundtrip() {
+    let mut rng = Rng::new(7);
+    for _ in 0..2000 {
+        let i = random_insn(&mut rng);
+        let text = isa::disasm::disassemble(&i);
+        let back = isa::assemble_line(&text).unwrap_or_else(|e| panic!("'{text}': {e}"));
+        assert_eq!(back, i, "via '{text}'");
+    }
+}
+
+#[test]
+fn prop_elem_pack_roundtrip() {
+    let mut rng = Rng::new(9);
+    for _ in 0..300 {
+        let p = *rng.pick(&Precision::ALL);
+        let n = rng.range(1, 100) as usize;
+        let vals: Vec<i32> = (0..n).map(|_| rng.operand(p)).collect();
+        let buf = elem::pack(&vals, p);
+        assert_eq!(elem::unpack(&buf, n, p), vals);
+        assert_eq!(buf.len() as u64, p.bytes_for(n as u64));
+    }
+}
+
+fn random_op(rng: &mut Rng) -> OpDesc {
+    let prec = *rng.pick(&Precision::ALL);
+    match rng.range(0, 3) {
+        0 => OpDesc::mm(
+            rng.range(1, 24) as u32,
+            rng.range(1, 48) as u32,
+            rng.range(1, 24) as u32,
+            prec,
+        ),
+        1 => {
+            let k = *rng.pick(&[1u32, 3, 5]);
+            OpDesc::conv(
+                rng.range(1, 12) as u32,
+                rng.range(1, 16) as u32,
+                rng.range(k as u64, 14) as u32,
+                rng.range(k as u64, 14) as u32,
+                k,
+                rng.range(1, 2) as u32,
+                k / 2,
+                prec,
+            )
+        }
+        2 => OpDesc::pwcv(
+            rng.range(1, 16) as u32,
+            rng.range(1, 16) as u32,
+            rng.range(1, 12) as u32,
+            rng.range(1, 12) as u32,
+            prec,
+        ),
+        _ => OpDesc::dwcv(
+            rng.range(1, 12) as u32,
+            rng.range(3, 14) as u32,
+            rng.range(3, 14) as u32,
+            3,
+            rng.range(1, 2) as u32,
+            1,
+            prec,
+        ),
+    }
+}
+
+/// Every compiled operator, on every applicable strategy, accounts exactly
+/// its MAC count, stays within structural limits, and moves at least the
+/// obligatory traffic.
+#[test]
+fn prop_compiled_ops_account_macs_and_traffic() {
+    let mut rng = Rng::new(1234);
+    let cfg = SpeedConfig::reference();
+    for case in 0..120 {
+        let op = random_op(&mut rng);
+        op.validate().unwrap();
+        for strat in StrategyKind::ALL {
+            if !dataflow::applicable(strat, &op) {
+                continue;
+            }
+            let mut p = Processor::new(cfg, 1 << 24);
+            let layout = MemLayout::for_op(&op, 1 << 24).unwrap();
+            let (st, summary) = execute_op(&mut p, &op, strat, layout, false)
+                .unwrap_or_else(|e| panic!("case {case} {op:?} {strat}: {e}"));
+            assert_eq!(st.macs, op.total_macs(), "case {case} {op:?} {strat}");
+            // MPTU busy time is bounded by the schedule size.
+            assert!(
+                st.fu_busy[2] <= summary.total_stages + 3 * summary.vsam,
+                "case {case}: MPTU busy {} vs stages {}",
+                st.fu_busy[2],
+                summary.total_stages
+            );
+            // Obligatory traffic: outputs written once, something read.
+            assert!(
+                st.traffic.output_write >= op.output_bytes(),
+                "case {case} {op:?} {strat}: outputs {}",
+                st.traffic.output_write
+            );
+            assert!(st.traffic.reads() > 0, "case {case} {op:?} {strat}");
+            // ops/cycle can never exceed the configuration's peak.
+            assert!(
+                st.ops_per_cycle() <= 2.0 * cfg.peak_macs_per_cycle(op.prec) as f64 + 1e-9,
+                "case {case}: {} ops/cycle",
+                st.ops_per_cycle()
+            );
+        }
+    }
+}
+
+/// Functional property: the compiled MM stream computes exactly A·B for
+/// random shapes, precisions and seeds.
+#[test]
+fn prop_mm_functional_correctness() {
+    let mut rng = Rng::new(77);
+    let cfg = SpeedConfig::reference();
+    for _ in 0..40 {
+        let prec = *rng.pick(&Precision::ALL);
+        let (m, k, n) =
+            (rng.range(1, 20) as usize, rng.range(1, 32) as usize, rng.range(1, 20) as usize);
+        let op = OpDesc::mm(m as u32, k as u32, n as u32, prec);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.operand(prec)).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.operand(prec)).collect();
+
+        let mut p = Processor::new(cfg, 1 << 22);
+        let layout = MemLayout::for_op(&op, 1 << 22).unwrap();
+        p.mem.preload_packed(layout.in_addr, &a, prec);
+        p.mem.preload_packed(layout.w_addr, &b, prec);
+        let c = compile_op(&op, &cfg, StrategyKind::Mm, layout, true).unwrap();
+        p.set_plan(c.plan);
+        for seg in &c.segments {
+            p.run(seg).unwrap();
+        }
+        let got = p.mem.inspect_i32(layout.out_addr, m * n);
+        let mut want = vec![0i32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    want[i * n + j] =
+                        want[i * n + j].wrapping_add(a[i * k + kk].wrapping_mul(b[kk * n + j]));
+                }
+            }
+        }
+        assert_eq!(got, want, "mm {m}x{k}x{n} @{prec}");
+    }
+}
+
+/// Functional property: all applicable strategies produce identical
+/// numerics for the same convolution (the dataflow changes *when* bytes
+/// move, never *what* is computed).
+#[test]
+fn prop_strategies_agree_functionally() {
+    let mut rng = Rng::new(555);
+    let cfg = SpeedConfig::reference();
+    for _ in 0..25 {
+        let op = loop {
+            let op = random_op(&mut rng);
+            if op.kind != speed_rvv::models::OpKind::Mm {
+                break op;
+            }
+        };
+        let x: Vec<i32> = (0..op.input_elems()).map(|_| rng.operand(op.prec)).collect();
+        let w: Vec<i32> = (0..op.weight_elems()).map(|_| rng.operand(op.prec)).collect();
+        let mut outs = Vec::new();
+        for strat in StrategyKind::ALL {
+            if !dataflow::applicable(strat, &op) {
+                continue;
+            }
+            let mut p = Processor::new(cfg, 1 << 24);
+            let layout = MemLayout::for_op(&op, 1 << 24).unwrap();
+            p.mem.preload_packed(layout.in_addr, &x, op.prec);
+            p.mem.preload_packed(layout.w_addr, &w, op.prec);
+            let c = compile_op(&op, &cfg, strat, layout, true).unwrap();
+            p.set_plan(c.plan);
+            for seg in &c.segments {
+                p.run(seg).unwrap();
+            }
+            outs.push((strat, p.mem.inspect_i32(layout.out_addr, op.output_elems() as usize)));
+        }
+        for pair in outs.windows(2) {
+            assert_eq!(pair[0].1, pair[1].1, "{:?} vs {:?} on {op:?}", pair[0].0, pair[1].0);
+        }
+    }
+}
+
+/// Precision monotonicity: for any operator, lower precision never costs
+/// more cycles (PP only grows) on SPEED.
+#[test]
+fn prop_precision_monotonicity() {
+    let mut rng = Rng::new(31337);
+    let cfg = SpeedConfig::reference();
+    for _ in 0..40 {
+        let base = random_op(&mut rng);
+        let cycles = |prec: Precision| {
+            let op = OpDesc { prec, ..base };
+            let mut p = Processor::new(cfg, 1 << 24);
+            let layout = MemLayout::for_op(&op, 1 << 24).unwrap();
+            let (st, _) =
+                execute_op(&mut p, &op, op.preferred_strategy(), layout, false).unwrap();
+            st.cycles
+        };
+        let c16 = cycles(Precision::Int16);
+        let c8 = cycles(Precision::Int8);
+        let c4 = cycles(Precision::Int4);
+        assert!(c8 <= c16, "{base:?}: 8b {c8} > 16b {c16}");
+        assert!(c4 <= c8, "{base:?}: 4b {c4} > 8b {c8}");
+    }
+}
+
+/// Kseg decomposition invariants: covers the kernel exactly, every piece
+/// legal.
+#[test]
+fn prop_kseg_partition() {
+    for k in 1..200u32 {
+        let parts = dataflow::kseg_decompose(k);
+        assert_eq!(parts.iter().sum::<u32>(), k);
+        assert!(parts.iter().all(|&p| (1..=15).contains(&p)), "{k}: {parts:?}");
+    }
+}
+
+/// Ara cost monotonicity in every dimension that only adds work.
+#[test]
+fn prop_ara_monotone() {
+    use speed_rvv::ara::{ara_cost, AraParams};
+    let mut rng = Rng::new(2024);
+    let params = AraParams::default();
+    for _ in 0..60 {
+        let op = random_op(&mut rng);
+        let base = ara_cost(&op, &params);
+        assert!(base.cycles > 0 && base.insns > 0);
+        // Doubling output channels (or M for MM) cannot reduce cost.
+        let bigger = match op.kind {
+            speed_rvv::models::OpKind::Mm => OpDesc { m: op.m * 2, ..op },
+            speed_rvv::models::OpKind::Dwcv => OpDesc { c: op.c * 2, f: op.f * 2, ..op },
+            _ => OpDesc { f: op.f * 2, ..op },
+        };
+        let b = ara_cost(&bigger, &params);
+        assert!(b.cycles >= base.cycles, "{op:?}");
+        assert!(b.dram_total() >= base.dram_total(), "{op:?}");
+    }
+}
