@@ -1,14 +1,17 @@
 //! DSE explorer: walk the Fig. 14 design space interactively and print the
 //! throughput / area-efficiency frontier, plus what the analytical models
 //! say about each point's area, power and peak efficiency at all three
-//! precisions.
+//! precisions. Each point is evaluated through its own `Engine` (see
+//! `speed_rvv::dse::eval_point`).
 //!
 //! ```sh
 //! cargo run --release --example dse_explorer [-- <lanes> <tile_r> <tile_c>]
+//! cargo run --release --example dse_explorer -- --quick --workers 4
 //! ```
 
 use speed_rvv::config::{Precision, SpeedConfig};
-use speed_rvv::dse::{dse_workload, eval_point, peak_area_eff, sweep};
+use speed_rvv::coordinator::runner::default_workers;
+use speed_rvv::dse::{dse_workload, eval_point, peak_area_eff, sweep_with};
 use speed_rvv::metrics::{speed_area, speed_power};
 
 fn describe(cfg: &SpeedConfig) {
@@ -43,9 +46,35 @@ fn describe(cfg: &SpeedConfig) {
 }
 
 fn main() {
-    let args: Vec<u32> =
-        std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
-    if args.len() == 3 {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let quick = raw.iter().any(|a| a == "--quick");
+    let workers = raw
+        .iter()
+        .position(|a| a == "--workers")
+        .and_then(|i| raw.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(default_workers);
+    // Positional lanes/tile_r/tile_c — with flag tokens (and the value
+    // following --workers) stripped so they cannot leak into the triple.
+    let mut args: Vec<u32> = Vec::new();
+    let mut skip_value = false;
+    for a in &raw {
+        if skip_value {
+            skip_value = false;
+            continue;
+        }
+        if a == "--workers" {
+            skip_value = true;
+            continue;
+        }
+        if a.starts_with("--") {
+            continue;
+        }
+        if let Ok(v) = a.parse() {
+            args.push(v);
+        }
+    }
+    if args.len() == 3 && !quick {
         let cfg = SpeedConfig::dse(args[0], args[1], args[2]);
         if let Err(e) = cfg.validate() {
             eprintln!("invalid configuration: {e}");
@@ -56,7 +85,7 @@ fn main() {
     }
 
     println!("Fig. 14 design space: lanes x TILE_R x TILE_C in {{2,4,8}}³\n");
-    let points = sweep();
+    let points = sweep_with(workers, quick);
     println!("{:<10} {:>8} {:>9} {:>10}", "config", "GOPS", "area mm²", "GOPS/mm²");
     for p in &points {
         println!(

@@ -1,11 +1,13 @@
 //! End-to-end driver: full MobileNetV2 INT8 inference on SPEED.
 //!
 //! Exercises every layer of the stack on a real workload:
-//!  1. the operator compiler lowers all 52 MobileNetV2 operators to
-//!     instruction streams under the mixed dataflow policy (CF for PWCV,
-//!     FF for DWCV, FFCS for the stem CONV, MM for the classifier);
-//!  2. the cycle simulator executes them (timing + byte-accurate traffic),
-//!     with runtime precision switching demonstrated across 16/8/4-bit;
+//!  1. a warm [`Engine`] lowers all 52 MobileNetV2 operators once through
+//!     the operator compiler under the mixed dataflow policy (CF for PWCV,
+//!     FF for DWCV, FFCS for the stem CONV, MM for the classifier) — the
+//!     16/8/4-bit passes share one `Session`, so precision switches cost a
+//!     single-cycle `VSACFG` each and repeat passes recompile nothing;
+//!  2. the cycle simulator executes the cached programs (timing +
+//!     byte-accurate traffic);
 //!  3. the functional path is verified end-to-end: a quantized
 //!     inverted-residual block (PWCV→DWCV→PWCV with requantization) is run
 //!     operator-by-operator through the simulator and compared bit-exactly
@@ -17,13 +19,15 @@
 //! ```
 
 use speed_rvv::ara::AraParams;
-use speed_rvv::config::{Precision, SpeedConfig};
-use speed_rvv::coordinator::{ara_complete_cycles, run_model, run_model_ara, Policy};
+use speed_rvv::config::Precision;
+use speed_rvv::coordinator::{ara_complete_cycles, run_model_ara};
+use speed_rvv::engine::Engine;
 use speed_rvv::metrics::{inference_energy_mj, speed_area, speed_power};
 use speed_rvv::models::zoo::model_by_name;
-use speed_rvv::runtime::{golden_check, Engine};
+use speed_rvv::runtime::{golden_check, Engine as PjrtEngine};
+use speed_rvv::{SpeedConfig, SpeedError};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), SpeedError> {
     let cfg = SpeedConfig::reference();
     let model = model_by_name("mobilenetv2").expect("zoo");
     println!(
@@ -36,11 +40,14 @@ fn main() -> anyhow::Result<()> {
         model.total_macs() as f64 / 1e9
     );
 
-    // ---- full-network inference at all three precisions -----------------
+    // ---- full-network inference at all three precisions through one
+    //      warm engine ----------------------------------------------------
     println!("=== multi-precision inference (runtime VSACFG switching) ===");
+    let mut engine = Engine::new(cfg)?;
+    let mut session = engine.session();
     let mut int8_result = None;
     for prec in [Precision::Int16, Precision::Int8, Precision::Int4] {
-        let r = run_model(&model, prec, &cfg, Policy::Mixed).map_err(anyhow::Error::msg)?;
+        let r = session.run_model(&model, prec)?;
         let ms = r.vector_cycles() as f64 / (cfg.freq_ghz * 1e9) * 1e3;
         println!(
             "{prec}: {:>11} cycles ({:6.2} ms @ {:.2} GHz) | {:6.2} ops/cycle \
@@ -57,6 +64,16 @@ fn main() -> anyhow::Result<()> {
             int8_result = Some(r);
         }
     }
+    let switches = session.precision_switches();
+    drop(session);
+    let cache = engine.cache_stats();
+    println!(
+        "engine: {} programs compiled once, {} cache hits, {} datapath \
+         precision switches across the three passes",
+        engine.compiled_programs(),
+        cache.hits,
+        switches
+    );
     let int8 = int8_result.unwrap();
 
     // ---- per-strategy layer breakdown -----------------------------------
@@ -102,19 +119,25 @@ fn main() -> anyhow::Result<()> {
 
     // ---- functional verification against the JAX/Pallas golden model ----
     println!("\n=== functional verification (inverted-residual block) ===");
-    match Engine::open("artifacts") {
-        Ok(mut engine) => {
+    match PjrtEngine::open("artifacts") {
+        Ok(mut pjrt) => {
             // The composite block (PWCV -> DWCV -> PWCV with requantization)
             // against the build-time golden vector...
-            let r = golden_check(&mut engine, std::path::Path::new("artifacts"),
+            let r = golden_check(&mut pjrt, std::path::Path::new("artifacts"),
                                  "mnv2_block_i8")?;
-            anyhow::ensure!(r.pjrt_ok, "PJRT output != JAX golden for mnv2_block_i8");
+            if !r.pjrt_ok {
+                return Err(SpeedError::Artifact(
+                    "PJRT output != JAX golden for mnv2_block_i8".into(),
+                ));
+            }
             println!("  mnv2_block_i8: PJRT == JAX golden ({} elems) ✔", r.elems);
             // ...and the individual operator classes three ways (golden ==
             // PJRT == cycle simulator).
             for name in ["pwconv_i8", "dwconv3x3_s2_i8", "conv3x3_i8"] {
-                let r = golden_check(&mut engine, std::path::Path::new("artifacts"), name)?;
-                anyhow::ensure!(r.ok(), "{name} failed");
+                let r = golden_check(&mut pjrt, std::path::Path::new("artifacts"), name)?;
+                if !r.ok() {
+                    return Err(SpeedError::Artifact(format!("{name} failed")));
+                }
                 println!(
                     "  {name}: JAX golden == PJRT == simulator ({} elems) ✔",
                     r.elems

@@ -1,20 +1,22 @@
-//! Quickstart: assemble a SPEED program, run it on the cycle simulator,
-//! and verify the numerics against the AOT-compiled JAX artifact via PJRT.
+//! Quickstart: assemble a SPEED program, run an operator through the
+//! Engine/Session API, and verify the numerics against the AOT-compiled
+//! JAX artifact via PJRT.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use speed_rvv::compiler::{compile_op, MemLayout};
-use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::config::Precision;
+use speed_rvv::engine::Engine;
 use speed_rvv::isa::{assemble, StrategyKind};
 use speed_rvv::models::ops::OpDesc;
-use speed_rvv::runtime::Engine;
-use speed_rvv::sim::Processor;
+use speed_rvv::runtime::Engine as PjrtEngine;
+use speed_rvv::{SpeedConfig, SpeedError};
 
-fn main() -> anyhow::Result<()> {
-    // ---- 1. The hardware: the paper's reference instance. --------------
-    let cfg = SpeedConfig::reference();
+fn main() -> Result<(), SpeedError> {
+    // ---- 1. The hardware: the paper's reference instance, via the
+    //         validated builder. --------------------------------------
+    let cfg = SpeedConfig::builder().lanes(4).tile(2, 2).vrf_kib(16).build()?;
     println!(
         "SPEED: {} lanes x {}x{} MPTU @ {:.2} GHz (peak {:.1} GOPS @INT8)\n",
         cfg.lanes,
@@ -35,50 +37,50 @@ fn main() -> anyhow::Result<()> {
         vsald      v4, (x4), bcast, w=cfg   # weights, multi-broadcast
         vsam       v8, v0, v4, stages=4
     "#;
-    let prog = assemble(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let prog = assemble(src)?;
     println!("assembled {} instructions (Fig. 2 style stream)", prog.len());
 
-    // ---- 3. A real operator through the operator compiler. -------------
+    // ---- 3. A real operator through the engine's program cache. --------
     // 32x64 @ 64x32 INT8 matrix multiply — the same computation as the
     // `mm_i8` AOT artifact.
     let op = OpDesc::mm(32, 64, 32, Precision::Int8);
-    let mem = 1 << 22;
-    let layout = MemLayout::for_op(&op, mem).map_err(anyhow::Error::msg)?;
-    let compiled =
-        compile_op(&op, &cfg, StrategyKind::Mm, layout, true).map_err(anyhow::Error::msg)?;
+    let mut engine = Engine::new(cfg)?;
+    let program = engine.program(&op, StrategyKind::Mm)?;
+    let layout = *program.layout();
     println!(
         "compiled MM operator: {} insns ({} VSAM bursts, {} stages, {} vregs)",
-        compiled.summary.total_insns,
-        compiled.summary.vsam,
-        compiled.summary.total_stages,
-        compiled.summary.vregs_used
+        program.summary().total_insns,
+        program.summary().vsam,
+        program.summary().total_stages,
+        program.summary().vregs_used
     );
 
     // Deterministic INT8 operands.
     let a: Vec<i32> = (0..32 * 64).map(|i| (i % 17) - 8).collect();
     let b: Vec<i32> = (0..64 * 32).map(|i| (i % 13) - 6).collect();
+    engine.preload_packed(layout.in_addr, &a, op.prec);
+    engine.preload_packed(layout.w_addr, &b, op.prec);
 
-    let mut proc = Processor::new(cfg, mem);
-    proc.mem.preload_packed(layout.in_addr, &a, op.prec);
-    proc.mem.preload_packed(layout.w_addr, &b, op.prec);
-    proc.set_plan(compiled.plan);
-    let mut stats = speed_rvv::sim::SimStats::default();
-    for seg in &compiled.segments {
-        stats.merge(&proc.run(seg).map_err(|e| anyhow::anyhow!("{e}"))?);
-    }
-    let sim_out = proc.mem.inspect_i32(layout.out_addr, op.output_elems() as usize);
+    // The session re-requests the same program: a cache hit, zero recompile.
+    let layer = engine.session().with_functional(true).run_op(&op, StrategyKind::Mm)?;
+    let sim_out = engine.inspect_i32(layout.out_addr, op.output_elems() as usize);
     println!(
         "simulated: {} cycles, {:.2} ops/cycle ({:.1} GOPS), {:.1} KiB DRAM traffic",
-        stats.cycles,
-        stats.ops_per_cycle(),
-        stats.gops(cfg.freq_ghz),
-        stats.traffic.total() as f64 / 1024.0
+        layer.stats.cycles,
+        layer.stats.ops_per_cycle(),
+        layer.stats.gops(cfg.freq_ghz),
+        layer.stats.traffic.total() as f64 / 1024.0
+    );
+    let cache = engine.cache_stats();
+    println!(
+        "program cache: {} hit(s), {} miss(es) — the session reused the compile",
+        cache.hits, cache.misses
     );
 
     // ---- 4. Golden check against the JAX/Pallas artifact via PJRT. -----
-    match Engine::open("artifacts") {
-        Ok(mut engine) => {
-            let hlo_out = engine.execute("mm_i8", &[a, b])?;
+    match PjrtEngine::open("artifacts") {
+        Ok(mut pjrt) => {
+            let hlo_out = pjrt.execute("mm_i8", &[a, b])?;
             assert_eq!(sim_out, hlo_out, "simulator disagrees with the HLO artifact!");
             println!("golden check: simulator == AOT HLO artifact ({} elems) ✔", hlo_out.len());
         }

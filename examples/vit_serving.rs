@@ -1,11 +1,12 @@
 //! Transformer serving: batched ViT MLP blocks through the PJRT hot path.
 //!
 //! Demonstrates the production runtime topology: Python never runs — the
-//! coordinator loads the AOT-compiled `vit_mlp_i8` artifact once, then
-//! serves a stream of requests against it while the cycle simulator
-//! predicts what the same workload costs on SPEED silicon. Reports
-//! functional throughput/latency of the PJRT path and the projected
-//! on-silicon numbers.
+//! server loads the AOT-compiled `vit_mlp_i8` artifact once, then serves a
+//! stream of requests against it, while a warm SPEED [`Engine`] predicts
+//! what the same workload costs on silicon. Both sides are compile-once /
+//! execute-many: the PJRT executable cache on the functional path, the
+//! engine's program cache on the simulated path (the second and later
+//! blocks replay cached instruction streams — zero recompilation).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example vit_serving
@@ -13,24 +14,24 @@
 
 use std::time::Instant;
 
-use speed_rvv::compiler::{execute_op, MemLayout};
-use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::config::Precision;
+use speed_rvv::engine::Engine;
 use speed_rvv::isa::StrategyKind;
 use speed_rvv::models::ops::OpDesc;
-use speed_rvv::runtime::Engine;
-use speed_rvv::sim::Processor;
+use speed_rvv::runtime::Engine as PjrtEngine;
+use speed_rvv::{SpeedConfig, SpeedError};
 
 const REQUESTS: usize = 64;
 
-fn main() -> anyhow::Result<()> {
-    let mut engine = match Engine::open("artifacts") {
+fn main() -> Result<(), SpeedError> {
+    let mut pjrt = match PjrtEngine::open("artifacts") {
         Ok(e) => e,
         Err(e) => {
             eprintln!("artifacts not built ({e}); run `make artifacts`");
             return Ok(());
         }
     };
-    let art = engine
+    let art = pjrt
         .manifest()
         .artifact("vit_mlp_i8")
         .expect("vit_mlp_i8 in manifest")
@@ -48,7 +49,7 @@ fn main() -> anyhow::Result<()> {
 
     // Warm the executable cache (compile once).
     let x0: Vec<i32> = vec![1; n_of(&art.input_shapes[0])];
-    let _ = engine.execute("vit_mlp_i8", &[x0.clone(), w1.clone(), w2.clone()])?;
+    let _ = pjrt.execute("vit_mlp_i8", &[x0.clone(), w1.clone(), w2.clone()])?;
 
     let t0 = Instant::now();
     let mut checksum = 0i64;
@@ -56,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         let x: Vec<i32> = (0..n_of(&art.input_shapes[0]))
             .map(|i| (((i + req * 31) % 23) as i32) - 11)
             .collect();
-        let y = engine.execute("vit_mlp_i8", &[x, w1.clone(), w2.clone()])?;
+        let y = pjrt.execute("vit_mlp_i8", &[x, w1.clone(), w2.clone()])?;
         checksum = checksum.wrapping_add(y.iter().map(|&v| v as i64).sum::<i64>());
     }
     let dt = t0.elapsed();
@@ -75,14 +76,23 @@ fn main() -> anyhow::Result<()> {
     let hidden = art.input_shapes[1][1] as u32;
     let mm1 = OpDesc::mm(tokens, d, hidden, Precision::Int8);
     let mm2 = OpDesc::mm(tokens, hidden, d, Precision::Int8);
-    let mut proc = Processor::new(cfg, 1 << 24);
+    let mut engine = Engine::new(cfg)?;
+    let mut session = engine.session();
+    // First block compiles both MMs; every subsequent block is pure cache
+    // hits — the serving steady state.
     let mut cycles = 0u64;
-    for op in [mm1, mm2] {
-        let layout = MemLayout::for_op(&op, 1 << 24).map_err(anyhow::Error::msg)?;
-        let (st, _) =
-            execute_op(&mut proc, &op, StrategyKind::Mm, layout, false)
-                .map_err(anyhow::Error::msg)?;
-        cycles += st.cycles;
+    for blk in 0..3 {
+        cycles = 0;
+        for op in [mm1, mm2] {
+            cycles += session.run_op(&op, StrategyKind::Mm)?.stats.cycles;
+        }
+        let cache = session.engine().cache_stats();
+        println!(
+            "block {blk}: {cycles} cycles ({} compiled programs, {} hits / {} misses)",
+            session.engine().compiled_programs(),
+            cache.hits,
+            cache.misses
+        );
     }
     println!(
         "SPEED silicon estimate: {cycles} cycles/block ({:.2} µs @ {:.2} GHz, \

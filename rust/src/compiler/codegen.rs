@@ -2,9 +2,20 @@
 
 use crate::config::{Precision, SpeedConfig};
 use crate::dataflow::{self, partition_budget, vreg_region};
+use crate::error::SpeedError;
 use crate::isa::{Dim, Insn, LdMode, StrategyKind, Vtype, WidthSel};
 use crate::models::ops::{OpDesc, OpKind};
 use crate::sim::OpPlan;
+
+/// DRAM region alignment (and the base offset of the first region). The
+/// coordinator's memory sizing shares these constants via
+/// [`MemLayout::required_bytes`], so placement and sizing cannot drift.
+pub const MEM_ALIGN: u64 = 64;
+/// Guard bytes past the last region.
+pub const MEM_GUARD: u64 = 64;
+/// Floor on a processor's external-memory size: room for small operators,
+/// epilogue scratch, and test programs without per-op sizing.
+pub const MEM_MIN_BYTES: u64 = 1 << 20;
 
 /// DRAM placement of one operator's tensors.
 #[derive(Debug, Clone, Copy)]
@@ -17,21 +28,34 @@ pub struct MemLayout {
 }
 
 impl MemLayout {
-    /// A default layout with generous region spacing for `op` inside a
-    /// memory of `mem_bytes`.
-    pub fn for_op(op: &OpDesc, mem_bytes: usize) -> Result<Self, String> {
-        let align = |x: u64| (x + 63) & !63;
-        let in_addr = 64u64;
+    /// The canonical placement for `op` and the total bytes it spans
+    /// (including the trailing guard). Placement is a pure function of the
+    /// operator — it does not depend on how much memory is present.
+    pub fn place(op: &OpDesc) -> (Self, u64) {
+        let align = |x: u64| (x + (MEM_ALIGN - 1)) & !(MEM_ALIGN - 1);
+        let in_addr = MEM_ALIGN;
         let w_addr = align(in_addr + op.input_bytes());
         let out_addr = align(w_addr + op.weight_bytes());
         let partial_addr = align(out_addr + op.output_bytes());
-        let end = partial_addr + op.output_bytes() + 64;
+        let end = partial_addr + op.output_bytes() + MEM_GUARD;
+        (MemLayout { in_addr, w_addr, out_addr, partial_addr }, end)
+    }
+
+    /// External-memory bytes `op` needs under the canonical placement.
+    pub fn required_bytes(op: &OpDesc) -> u64 {
+        Self::place(op).1
+    }
+
+    /// A default layout with generous region spacing for `op` inside a
+    /// memory of `mem_bytes`.
+    pub fn for_op(op: &OpDesc, mem_bytes: usize) -> Result<Self, SpeedError> {
+        let (layout, end) = Self::place(op);
         if end > mem_bytes as u64 {
-            return Err(format!(
+            return Err(SpeedError::Layout(format!(
                 "operator needs {end} B of external memory, have {mem_bytes}"
-            ));
+            )));
         }
-        Ok(MemLayout { in_addr, w_addr, out_addr, partial_addr })
+        Ok(layout)
     }
 }
 
@@ -80,7 +104,7 @@ const SEG_LIMIT: usize = 8192;
 /// wasteful), or discarded after counting (the sizing pre-pass).
 enum Sink<'a> {
     Collect(Vec<Vec<Insn>>),
-    Stream(&'a mut dyn FnMut(Vec<Insn>) -> Result<(), String>),
+    Stream(&'a mut dyn FnMut(Vec<Insn>) -> Result<(), SpeedError>),
     CountOnly,
 }
 
@@ -93,7 +117,7 @@ struct Emitter<'a> {
     w_flip: usize,
     summary: CodegenSummary,
     used: [bool; 32],
-    err: Option<String>,
+    err: Option<SpeedError>,
 }
 
 impl<'a> Emitter<'a> {
@@ -272,7 +296,7 @@ impl<'a> Emitter<'a> {
         self.summary.vle += 1;
     }
 
-    fn finish(mut self) -> Result<(Vec<Vec<Insn>>, CodegenSummary), String> {
+    fn finish(mut self) -> Result<(Vec<Vec<Insn>>, CodegenSummary), SpeedError> {
         self.cut();
         if let Some(e) = self.err {
             return Err(e);
@@ -292,7 +316,7 @@ fn generate<'a>(
     strat: StrategyKind,
     layout: &MemLayout,
     sink: Sink<'a>,
-) -> Result<(Vec<Vec<Insn>>, CodegenSummary), String> {
+) -> Result<(Vec<Vec<Insn>>, CodegenSummary), SpeedError> {
     let mut e = Emitter::new(op.prec, sink);
     // Prologue: configuration-setting instructions (Fig. 9 step ①).
     e.vsacfg(op.ksize.max(1), strat);
@@ -319,11 +343,14 @@ fn generate<'a>(
     e.finish()
 }
 
-fn check(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Result<(), String> {
+fn check(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Result<(), SpeedError> {
     op.validate()?;
     cfg.validate()?;
     if !dataflow::applicable(strat, op) {
-        return Err(format!("strategy {strat} not applicable to {}", op.kind));
+        return Err(SpeedError::Compile(format!(
+            "strategy {strat} not applicable to {}",
+            op.kind
+        )));
     }
     Ok(())
 }
@@ -335,7 +362,7 @@ pub fn compile_op(
     strat: StrategyKind,
     layout: MemLayout,
     functional: bool,
-) -> Result<CompiledOp, String> {
+) -> Result<CompiledOp, SpeedError> {
     check(op, cfg, strat)?;
     let (segments, summary) = generate(op, cfg, strat, &layout, Sink::Collect(Vec::new()))?;
     let plan = OpPlan {
@@ -357,9 +384,24 @@ pub fn summarize_op(
     cfg: &SpeedConfig,
     strat: StrategyKind,
     layout: &MemLayout,
-) -> Result<CodegenSummary, String> {
+) -> Result<CodegenSummary, SpeedError> {
     check(op, cfg, strat)?;
     let (_, summary) = generate(op, cfg, strat, layout, Sink::CountOnly)?;
+    Ok(summary)
+}
+
+/// Generate the instruction stream segment-by-segment into `feed` without
+/// materializing it (the execute-many path of a cached program whose
+/// stream is too large to keep resident). Returns the emission summary.
+pub fn stream_op(
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    strat: StrategyKind,
+    layout: &MemLayout,
+    feed: &mut dyn FnMut(Vec<Insn>) -> Result<(), SpeedError>,
+) -> Result<CodegenSummary, SpeedError> {
+    check(op, cfg, strat)?;
+    let (_, summary) = generate(op, cfg, strat, layout, Sink::Stream(feed))?;
     Ok(summary)
 }
 
@@ -372,7 +414,7 @@ pub fn execute_op(
     strat: StrategyKind,
     layout: MemLayout,
     functional: bool,
-) -> Result<(crate::sim::SimStats, CodegenSummary), String> {
+) -> Result<(crate::sim::SimStats, CodegenSummary), SpeedError> {
     let cfg = proc.cfg;
     check(op, &cfg, strat)?;
     let sized = generate(op, &cfg, strat, &layout, Sink::CountOnly)?.1;
@@ -388,8 +430,8 @@ pub fn execute_op(
     });
     let mut stats = crate::sim::SimStats::default();
     {
-        let mut feed = |seg: Vec<Insn>| -> Result<(), String> {
-            let st = proc.run(&seg).map_err(|e| e.to_string())?;
+        let mut feed = |seg: Vec<Insn>| -> Result<(), SpeedError> {
+            let st = proc.run(&seg)?;
             stats.merge(&st);
             Ok(())
         };

@@ -24,4 +24,7 @@
 
 pub mod codegen;
 
-pub use codegen::{compile_op, execute_op, summarize_op, CodegenSummary, CompiledOp, MemLayout};
+pub use codegen::{
+    compile_op, execute_op, stream_op, summarize_op, CodegenSummary, CompiledOp, MemLayout,
+    MEM_ALIGN, MEM_GUARD, MEM_MIN_BYTES,
+};

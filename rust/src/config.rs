@@ -5,7 +5,12 @@
 //! `#TILE_C`), a per-lane VRF capacity, and an operating frequency. The
 //! reference evaluation instance (Sec. IV-A) is 4 lanes, 2×2 tiles, 16 KiB
 //! VRF at 1.05 GHz; the Table III instance is 4 lanes with 8×4 tiles.
+//!
+//! Custom instances are assembled with [`SpeedConfig::builder`], which
+//! validates the structural constraints before the configuration can reach
+//! an [`Engine`](crate::engine::Engine).
 
+use crate::error::SpeedError;
 
 
 /// Operand precision of the datapath. SPEED supports runtime switching
@@ -166,25 +171,91 @@ impl SpeedConfig {
     }
 
     /// Validate structural constraints (powers of two, supported ranges).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), SpeedError> {
+        let bad = |m: String| Err(SpeedError::Config(m));
         if !self.lanes.is_power_of_two() || self.lanes == 0 || self.lanes > 16 {
-            return Err(format!("lanes must be a power of two in 1..=16, got {}", self.lanes));
+            return bad(format!("lanes must be a power of two in 1..=16, got {}", self.lanes));
         }
         for (name, v) in [("tile_r", self.tile_r), ("tile_c", self.tile_c)] {
             if !v.is_power_of_two() || v == 0 || v > 16 {
-                return Err(format!("{name} must be a power of two in 1..=16, got {v}"));
+                return bad(format!("{name} must be a power of two in 1..=16, got {v}"));
             }
         }
         if self.vrf_kib == 0 {
-            return Err("vrf_kib must be nonzero".into());
+            return bad("vrf_kib must be nonzero".into());
         }
         if self.freq_ghz <= 0.0 {
-            return Err("freq_ghz must be positive".into());
+            return bad("freq_ghz must be positive".into());
         }
         if self.mem_bw_bytes_per_cycle == 0 {
-            return Err("mem_bw_bytes_per_cycle must be nonzero".into());
+            return bad("mem_bw_bytes_per_cycle must be nonzero".into());
         }
         Ok(())
+    }
+
+    /// Start a builder seeded from the reference instance.
+    pub fn builder() -> SpeedConfigBuilder {
+        SpeedConfigBuilder { cfg: Self::reference() }
+    }
+}
+
+/// Builder for a validated [`SpeedConfig`] — every field defaults to the
+/// paper's reference instance, so a builder chain only states what differs.
+///
+/// ```
+/// use speed_rvv::SpeedConfig;
+/// let cfg = SpeedConfig::builder().lanes(8).tile(4, 4).build().unwrap();
+/// assert_eq!(cfg.total_pes(), 128);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SpeedConfigBuilder {
+    cfg: SpeedConfig,
+}
+
+impl SpeedConfigBuilder {
+    pub fn lanes(mut self, lanes: u32) -> Self {
+        self.cfg.lanes = lanes;
+        self
+    }
+
+    /// MPTU tensor-core geometry (`#TILE_R` × `#TILE_C`).
+    pub fn tile(mut self, tile_r: u32, tile_c: u32) -> Self {
+        self.cfg.tile_r = tile_r;
+        self.cfg.tile_c = tile_c;
+        self
+    }
+
+    pub fn vrf_kib(mut self, kib: u32) -> Self {
+        self.cfg.vrf_kib = kib;
+        self
+    }
+
+    pub fn freq_ghz(mut self, ghz: f64) -> Self {
+        self.cfg.freq_ghz = ghz;
+        self
+    }
+
+    pub fn mem_bw_bytes_per_cycle(mut self, bytes: u32) -> Self {
+        self.cfg.mem_bw_bytes_per_cycle = bytes;
+        self
+    }
+
+    pub fn mem_latency(mut self, cycles: u32) -> Self {
+        self.cfg.mem_latency = cycles;
+        self
+    }
+
+    /// Scale the external-memory bandwidth with the lane count, as the
+    /// DSE instances do (one VLDU port per scalable module).
+    pub fn bw_per_lane(mut self) -> Self {
+        self.cfg.mem_bw_bytes_per_cycle = 4 * self.cfg.lanes;
+        self
+    }
+
+    /// Validate and produce the configuration.
+    pub fn build(self) -> Result<SpeedConfig, SpeedError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -247,6 +318,18 @@ mod tests {
         assert!(SpeedConfig { freq_ghz: 0.0, ..SpeedConfig::reference() }.validate().is_err());
         assert!(SpeedConfig::reference().validate().is_ok());
         assert!(SpeedConfig::table3().validate().is_ok());
+    }
+
+    #[test]
+    fn builder_defaults_to_reference_and_validates() {
+        let cfg = SpeedConfig::builder().build().unwrap();
+        assert_eq!(cfg, SpeedConfig::reference());
+        let cfg = SpeedConfig::builder().lanes(8).tile(8, 4).bw_per_lane().build().unwrap();
+        assert_eq!(cfg.lanes, 8);
+        assert_eq!((cfg.tile_r, cfg.tile_c), (8, 4));
+        assert_eq!(cfg.mem_bw_bytes_per_cycle, 32);
+        let err = SpeedConfig::builder().lanes(3).build().unwrap_err();
+        assert!(matches!(err, crate::error::SpeedError::Config(_)), "{err}");
     }
 
     #[test]

@@ -8,17 +8,23 @@
 //! and accounts the scalar-core share of the complete application
 //! (Table I). A thread-based sweep runner evaluates many (model,
 //! precision, config) points in parallel.
+//!
+//! Execution itself is delegated to [`crate::engine`]: `run_model` here is
+//! the one-shot wrapper; hold an [`Engine`] directly to amortize
+//! compilation across repeated runs.
 
 pub mod epilogue;
 pub mod runner;
 
 use crate::ara::{ara_cost, AraParams};
-use crate::compiler::{execute_op, MemLayout};
+use crate::compiler::{MemLayout, MEM_MIN_BYTES};
 use crate::config::{Precision, SpeedConfig};
+use crate::engine::Engine;
+use crate::error::SpeedError;
 use crate::isa::StrategyKind;
 use crate::models::zoo::Model;
 use crate::models::OpDesc;
-use crate::sim::{Processor, SimStats};
+use crate::sim::SimStats;
 
 /// Strategy selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,21 +87,23 @@ impl ModelResult {
     }
 }
 
-/// External-memory bytes a model execution needs (largest operator).
+/// External-memory bytes a model execution needs (largest operator under
+/// the compiler's canonical placement — shared with [`MemLayout::place`],
+/// so sizing and placement cannot drift).
 pub fn mem_requirement(model: &Model) -> usize {
-    let mut need = 1u64 << 20;
-    for op in &model.ops {
-        let end = 256
-            + op.input_bytes()
-            + op.weight_bytes()
-            + 2 * op.output_bytes()
-            + 4096;
-        need = need.max(end);
-    }
-    need as usize
+    model
+        .ops
+        .iter()
+        .map(MemLayout::required_bytes)
+        .fold(MEM_MIN_BYTES, u64::max) as usize
 }
 
 /// Run a model at a precision on a SPEED configuration.
+///
+/// One-shot convenience kept for the report harness and tests: builds a
+/// throwaway [`Engine`] and runs a single session against it. Serving-style
+/// repeated execution should hold an [`Engine`] instead — its program cache
+/// makes the second and later passes compile nothing.
 ///
 /// Timing/traffic simulation only (`functional = false`): numerics of every
 /// operator class are certified separately against the AOT-compiled JAX
@@ -105,28 +113,10 @@ pub fn run_model(
     prec: Precision,
     cfg: &SpeedConfig,
     policy: Policy,
-) -> Result<ModelResult, String> {
+) -> Result<ModelResult, SpeedError> {
     let m = model.at_precision(prec);
-    let mut proc = Processor::new(*cfg, mem_requirement(&m));
-    let mut layers = Vec::with_capacity(m.ops.len());
-    let mut total = SimStats::default();
-    for op in &m.ops {
-        let Some(strat) = policy.strategy_for(op) else {
-            continue;
-        };
-        let layout = MemLayout::for_op(op, proc.mem.size())?;
-        let (stats, _) = execute_op(&mut proc, op, strat, layout, false)?;
-        total.merge(&stats);
-        layers.push(LayerResult { op: *op, strat, stats });
-    }
-    let scalar_cycles = (total.cycles as f64 * m.scalar_fraction) as u64;
-    Ok(ModelResult {
-        name: m.name.to_string(),
-        prec,
-        layers,
-        total,
-        scalar_cycles,
-    })
+    let mut engine = Engine::with_memory(*cfg, mem_requirement(&m))?;
+    engine.session().with_policy(policy).run_model(model, prec)
 }
 
 /// Ara cost of the same model (official RVV baseline). 4-bit runs at

@@ -7,10 +7,16 @@
 //! is vendored — so the runner uses `std::thread` scoped threads; see
 //! DESIGN.md "Substitutions".)
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::thread;
 
 /// Run `jobs` across up to `workers` threads, preserving input order.
+///
+/// A panicking job does not poison the pool: the panic payload is captured
+/// on the worker, the remaining jobs still run, and the first payload is
+/// re-raised on the calling thread (so the caller sees the *original*
+/// panic message, not a channel/join artifact).
 pub fn run_parallel<T, R, F>(jobs: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send + Sync,
@@ -22,7 +28,7 @@ where
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
-    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
     let jobs: Vec<(usize, T)> = jobs.into_iter().enumerate().collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
     thread::scope(|s| {
@@ -37,7 +43,7 @@ where
                     break;
                 }
                 let (idx, job) = &jobs[i];
-                let r = f(job);
+                let r = catch_unwind(AssertUnwindSafe(|| f(job)));
                 if tx.send((*idx, r)).is_err() {
                     break;
                 }
@@ -45,8 +51,19 @@ where
         }
         drop(tx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic_payload = None;
         for (idx, r) in rx {
-            out[idx] = Some(r);
+            match r {
+                Ok(v) => out[idx] = Some(v),
+                Err(payload) => {
+                    // Keep the first panic; later ones are typically
+                    // knock-on failures of the same root cause.
+                    panic_payload.get_or_insert(payload);
+                }
+            }
+        }
+        if let Some(payload) = panic_payload {
+            resume_unwind(payload);
         }
         out.into_iter().map(|o| o.expect("worker dropped a job")).collect()
     })
@@ -80,6 +97,42 @@ mod tests {
     fn more_workers_than_jobs_is_fine() {
         let out = run_parallel(vec![1, 2, 3], 64, |&x| x * 10);
         assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn worker_panic_resurfaces_with_original_payload() {
+        let jobs: Vec<u32> = (0..16).collect();
+        let caught = std::panic::catch_unwind(|| {
+            run_parallel(jobs, 4, |&x| {
+                if x == 7 {
+                    panic!("job 7 exploded");
+                }
+                x
+            })
+        })
+        .expect_err("panic must propagate to the caller");
+        let msg = caught
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| caught.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("job 7 exploded"), "payload was '{msg}'");
+    }
+
+    #[test]
+    fn surviving_jobs_complete_despite_a_panic() {
+        // With one worker the panicking job must not starve the rest.
+        let jobs: Vec<u32> = (0..8).collect();
+        let caught = std::panic::catch_unwind(|| {
+            run_parallel(jobs, 1, |&x| {
+                if x == 0 {
+                    panic!("first job dies");
+                }
+                x * 2
+            })
+        });
+        assert!(caught.is_err(), "panic must still propagate");
     }
 
     #[test]

@@ -2,13 +2,13 @@
 //! {2,4,8}², evaluated on the CONV3×3 16-bit workload, reporting achieved
 //! throughput (GOPS) and area efficiency (GOPS/mm²).
 
-use crate::compiler::{execute_op, MemLayout};
 use crate::config::{Precision, SpeedConfig};
 use crate::coordinator::runner::{default_workers, run_parallel};
+use crate::engine::Engine;
+use crate::error::SpeedError;
 use crate::isa::StrategyKind;
 use crate::metrics::speed_area;
 use crate::models::ops::OpDesc;
-use crate::sim::Processor;
 
 /// One evaluated DSE point.
 #[derive(Debug, Clone, Copy)]
@@ -29,11 +29,17 @@ pub fn dse_workload() -> OpDesc {
     OpDesc::conv(64, 64, 32, 32, 3, 1, 1, Precision::Int16)
 }
 
+/// Quick-mode workload: identical operator shape class at 1/4-scale
+/// feature maps — the relative ordering of the design points holds, at a
+/// fraction of the simulation time.
+pub fn dse_workload_quick() -> OpDesc {
+    OpDesc::conv(64, 64, 8, 8, 3, 1, 1, Precision::Int16)
+}
+
 /// Evaluate one configuration on the DSE workload.
-pub fn eval_point(cfg: &SpeedConfig, op: &OpDesc) -> Result<DsePoint, String> {
-    let mut proc = Processor::new(*cfg, 1 << 24);
-    let layout = MemLayout::for_op(op, 1 << 24)?;
-    let (stats, _) = execute_op(&mut proc, op, StrategyKind::Ffcs, layout, false)?;
+pub fn eval_point(cfg: &SpeedConfig, op: &OpDesc) -> Result<DsePoint, SpeedError> {
+    let mut engine = Engine::new(*cfg)?;
+    let (stats, _) = engine.run_op(op, StrategyKind::Ffcs, false)?;
     Ok(DsePoint {
         cfg: *cfg,
         gops: stats.gops(cfg.freq_ghz),
@@ -41,8 +47,14 @@ pub fn eval_point(cfg: &SpeedConfig, op: &OpDesc) -> Result<DsePoint, String> {
     })
 }
 
-/// The full 27-point sweep (3 lane counts × 3 × 3 tile geometries).
+/// The full 27-point sweep (3 lane counts × 3 × 3 tile geometries) with
+/// the default worker count, full-size workload.
 pub fn sweep() -> Vec<DsePoint> {
+    sweep_with(default_workers(), false)
+}
+
+/// The 27-point sweep on `workers` threads; `quick` shrinks the workload.
+pub fn sweep_with(workers: usize, quick: bool) -> Vec<DsePoint> {
     let mut cfgs = Vec::new();
     for lanes in [2u32, 4, 8] {
         for tr in [2u32, 4, 8] {
@@ -51,10 +63,8 @@ pub fn sweep() -> Vec<DsePoint> {
             }
         }
     }
-    let op = dse_workload();
-    run_parallel(cfgs, default_workers(), |cfg| {
-        eval_point(cfg, &op).expect("DSE point failed")
-    })
+    let op = if quick { dse_workload_quick() } else { dse_workload() };
+    run_parallel(cfgs, workers, |cfg| eval_point(cfg, &op).expect("DSE point failed"))
 }
 
 /// Peak-area-efficiency point of a sweep.
@@ -76,6 +86,17 @@ mod tests {
         let big = eval_point(&SpeedConfig::dse(8, 4, 4), &op).unwrap();
         assert!(big.gops > small.gops, "{} !> {}", big.gops, small.gops);
         assert!(big.area_mm2 > small.area_mm2);
+    }
+
+    #[test]
+    fn quick_sweep_preserves_lane_scaling() {
+        let pts = sweep_with(2, true);
+        assert_eq!(pts.len(), 27);
+        let small = pts.iter().find(|p| (p.cfg.lanes, p.cfg.tile_r, p.cfg.tile_c) == (2, 2, 2))
+            .unwrap();
+        let big = pts.iter().find(|p| (p.cfg.lanes, p.cfg.tile_r, p.cfg.tile_c) == (8, 4, 4))
+            .unwrap();
+        assert!(big.gops > small.gops, "{} !> {}", big.gops, small.gops);
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! The execution engine: the compile-once / execute-many API of the crate.
+//!
+//! [`coordinator::run_model`](crate::coordinator::run_model) is a one-shot
+//! convenience: it builds a fresh [`Processor`], re-lowers every operator
+//! through the dataflow compiler, and re-derives every [`MemLayout`] on
+//! each call. A serving deployment amortizes all of that across a network
+//! and across requests — the whole premise of SPEED's single-cycle `VSACFG`
+//! reconfiguration (Sec. II-E) is that the expensive state (compiled
+//! operator programs, tensor placements, datapath precision) persists while
+//! only the operands change. This module provides that surface:
+//!
+//! * [`Engine`] — owns a warm [`Processor`] plus a **program cache** keyed
+//!   on `(operator, strategy, precision, configuration)`. A cache hit
+//!   reuses the lowered instruction stream, the DRAM placement, and the
+//!   sized operator plan; a miss pays compilation exactly once. Hit/miss
+//!   counters are exposed via [`Engine::cache_stats`].
+//! * [`Session`] — a run handle over an engine: executes whole models or
+//!   single operators, returns per-layer and aggregate [`SimStats`], and
+//!   tracks precision switches. Because the processor's control state is
+//!   warm, the `VSACFG` in each program prologue performs (and the
+//!   hardware counts) a precision *switch* only when the operand precision
+//!   actually changes — consecutive same-precision layers, or a repeat run
+//!   of a whole model, pay zero switches.
+//!
+//! Programs whose instruction streams are too large to keep resident
+//! (above [`MATERIALIZE_LIMIT`]) cache their plan, layout, and sizing
+//! summary, and re-stream generation on each execution — a hit still skips
+//! the sizing pre-pass and all layout/validation work.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::compiler::{self, CodegenSummary, MemLayout, MEM_MIN_BYTES};
+use crate::config::{Precision, SpeedConfig};
+use crate::coordinator::{LayerResult, ModelResult, Policy};
+use crate::error::{Result, SpeedError};
+use crate::isa::{Insn, StrategyKind};
+use crate::models::zoo::Model;
+use crate::models::OpDesc;
+use crate::sim::{OpPlan, Processor, SimStats};
+
+/// Largest instruction count a cached program keeps resident. Streams above
+/// this are regenerated on each execution (their plan/layout/summary are
+/// still cached, so repeat executions skip the sizing pre-pass).
+pub const MATERIALIZE_LIMIT: u64 = 1 << 20;
+
+/// The configuration fields that shape generated code (tile geometry and
+/// VRF capacity drive chunking; frequency and memory timing do not).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct CfgSig {
+    lanes: u32,
+    tile_r: u32,
+    tile_c: u32,
+    vrf_kib: u32,
+}
+
+impl CfgSig {
+    fn of(cfg: &SpeedConfig) -> Self {
+        CfgSig { lanes: cfg.lanes, tile_r: cfg.tile_r, tile_c: cfg.tile_c, vrf_kib: cfg.vrf_kib }
+    }
+}
+
+/// Program-cache key: operator (which carries its precision), dataflow
+/// strategy, and the code-shaping configuration signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ProgramKey {
+    pub op: OpDesc,
+    pub strat: StrategyKind,
+    cfg: CfgSig,
+}
+
+/// A compiled operator program resident in an engine's cache.
+#[derive(Debug)]
+pub struct Program {
+    plan: OpPlan,
+    layout: MemLayout,
+    required_bytes: u64,
+    summary: CodegenSummary,
+    /// `None` when the stream exceeds [`MATERIALIZE_LIMIT`].
+    segments: Option<Vec<Vec<Insn>>>,
+}
+
+impl Program {
+    pub fn summary(&self) -> &CodegenSummary {
+        &self.summary
+    }
+
+    pub fn layout(&self) -> &MemLayout {
+        &self.layout
+    }
+
+    /// External-memory bytes the program's placement spans.
+    pub fn required_bytes(&self) -> u64 {
+        self.required_bytes
+    }
+
+    /// Whether the instruction stream is kept resident.
+    pub fn is_materialized(&self) -> bool {
+        self.segments.is_some()
+    }
+}
+
+/// Program-cache hit/miss counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups() as f64
+    }
+}
+
+/// A warm SPEED instance plus its compiled-program cache.
+pub struct Engine {
+    cfg: SpeedConfig,
+    proc: Processor,
+    programs: HashMap<ProgramKey, Arc<Program>>,
+    cache: CacheStats,
+}
+
+impl Engine {
+    /// Build an engine from a validated configuration with the default
+    /// external-memory floor (memory grows lazily as operators demand).
+    pub fn new(cfg: SpeedConfig) -> Result<Self> {
+        Self::with_memory(cfg, MEM_MIN_BYTES as usize)
+    }
+
+    /// Build an engine with at least `mem_bytes` of external memory.
+    pub fn with_memory(cfg: SpeedConfig, mem_bytes: usize) -> Result<Self> {
+        cfg.validate()?;
+        let mem = mem_bytes.max(MEM_MIN_BYTES as usize);
+        Ok(Engine {
+            cfg,
+            proc: Processor::new(cfg, mem),
+            programs: HashMap::new(),
+            cache: CacheStats::default(),
+        })
+    }
+
+    pub fn config(&self) -> &SpeedConfig {
+        &self.cfg
+    }
+
+    /// The warm processor (its clock, control state, and memory persist
+    /// across every program this engine runs).
+    pub fn processor(&self) -> &Processor {
+        &self.proc
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache
+    }
+
+    /// Number of distinct compiled programs resident in the cache.
+    pub fn compiled_programs(&self) -> usize {
+        self.programs.len()
+    }
+
+    /// Lifetime count of actual datapath precision switches (a `VSACFG`
+    /// naming the already-active precision does not count — Sec. II-E).
+    pub fn precision_switches(&self) -> u64 {
+        self.proc.ctrl.precision_switches
+    }
+
+    /// Open a run handle. Sessions borrow the engine mutably; state
+    /// (cache, clock, precision) persists across sessions.
+    pub fn session(&mut self) -> Session<'_> {
+        let switch_base = self.precision_switches();
+        Session {
+            engine: self,
+            policy: Policy::Mixed,
+            functional: false,
+            total: SimStats::default(),
+            switch_base,
+        }
+    }
+
+    /// Preload packed operand values into external memory at `addr`
+    /// (uncounted test-bench/golden-path initialization; memory grows to
+    /// fit). Use a program's [`Program::layout`] for the addresses.
+    pub fn preload_packed(&mut self, addr: u64, values: &[i32], prec: Precision) {
+        let end = addr + prec.bytes_for(values.len() as u64);
+        self.proc.grow_memory(end as usize);
+        self.proc.mem.preload_packed(addr, values, prec);
+    }
+
+    /// Inspect `n` i32 accumulators at `addr` (uncounted readback of a
+    /// functional run's output region).
+    pub fn inspect_i32(&self, addr: u64, n: usize) -> Vec<i32> {
+        self.proc.mem.inspect_i32(addr, n)
+    }
+
+    /// Fetch the compiled program for `(op, strat)`, compiling on miss.
+    pub fn program(&mut self, op: &OpDesc, strat: StrategyKind) -> Result<Arc<Program>> {
+        let key = ProgramKey { op: *op, strat, cfg: CfgSig::of(&self.cfg) };
+        if let Some(p) = self.programs.get(&key) {
+            self.cache.hits += 1;
+            return Ok(p.clone());
+        }
+        self.cache.misses += 1;
+        let (layout, required_bytes) = MemLayout::place(op);
+        // Sizing pass first: `Sink::Collect` would materialize the *whole*
+        // stream, so the only memory-safe way to decide materialization is
+        // to count before collecting. Small programs therefore generate
+        // twice on their one-and-only miss; every hit replays for free.
+        let summary = compiler::summarize_op(op, &self.cfg, strat, &layout)?;
+        let segments = if summary.total_insns <= MATERIALIZE_LIMIT {
+            Some(compiler::compile_op(op, &self.cfg, strat, layout, false)?.segments)
+        } else {
+            None
+        };
+        let plan = OpPlan {
+            desc: *op,
+            strat,
+            in_addr: layout.in_addr,
+            w_addr: layout.w_addr,
+            out_addr: layout.out_addr,
+            partial_addr: layout.partial_addr,
+            total_stages: summary.total_stages.max(1),
+            functional: false,
+        };
+        let prog = Arc::new(Program { plan, layout, required_bytes, summary, segments });
+        self.programs.insert(key, prog.clone());
+        Ok(prog)
+    }
+
+    /// Execute one operator program on the warm processor. Returns the
+    /// run's stats plus the (cached) program that produced them.
+    pub fn run_op(
+        &mut self,
+        op: &OpDesc,
+        strat: StrategyKind,
+        functional: bool,
+    ) -> Result<(SimStats, Arc<Program>)> {
+        let prog = self.program(op, strat)?;
+        self.proc.grow_memory(prog.required_bytes as usize);
+        let mut plan = prog.plan;
+        plan.functional = functional;
+        self.proc.set_plan(plan);
+        let mut stats = SimStats::default();
+        match &prog.segments {
+            Some(segs) => {
+                for seg in segs {
+                    stats.merge(&self.proc.run(seg)?);
+                }
+            }
+            None => {
+                let cfg = self.cfg;
+                let proc = &mut self.proc;
+                let mut feed = |seg: Vec<Insn>| -> Result<(), SpeedError> {
+                    stats.merge(&proc.run(&seg)?);
+                    Ok(())
+                };
+                compiler::stream_op(op, &cfg, strat, &prog.layout, &mut feed)?;
+            }
+        }
+        Ok((stats, prog))
+    }
+}
+
+/// A run handle over an [`Engine`]: executes models/operators and
+/// aggregates their statistics.
+pub struct Session<'e> {
+    engine: &'e mut Engine,
+    policy: Policy,
+    functional: bool,
+    total: SimStats,
+    switch_base: u64,
+}
+
+impl<'e> Session<'e> {
+    /// Strategy-selection policy for [`Session::run_model`] (default:
+    /// the paper's mixed dataflow).
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Enable functional simulation (real numerics, golden-checkable) in
+    /// addition to timing/traffic.
+    pub fn with_functional(mut self, on: bool) -> Self {
+        self.functional = on;
+        self
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Execute a single operator under an explicit strategy.
+    pub fn run_op(&mut self, op: &OpDesc, strat: StrategyKind) -> Result<LayerResult> {
+        let (stats, _) = self.engine.run_op(op, strat, self.functional)?;
+        self.total.merge(&stats);
+        Ok(LayerResult { op: *op, strat, stats })
+    }
+
+    /// Execute a whole model at a precision; the engine's program cache
+    /// makes repeat runs compile nothing, and the warm datapath makes the
+    /// per-layer `VSACFG` switch precision only when it actually changes.
+    pub fn run_model(&mut self, model: &Model, prec: Precision) -> Result<ModelResult> {
+        let m = model.at_precision(prec);
+        let mut layers = Vec::with_capacity(m.ops.len());
+        let mut total = SimStats::default();
+        for op in &m.ops {
+            let Some(strat) = self.policy.strategy_for(op) else {
+                continue;
+            };
+            let (stats, _) = self.engine.run_op(op, strat, self.functional)?;
+            self.total.merge(&stats);
+            total.merge(&stats);
+            layers.push(LayerResult { op: *op, strat, stats });
+        }
+        let scalar_cycles = (total.cycles as f64 * m.scalar_fraction) as u64;
+        Ok(ModelResult { name: m.name.to_string(), prec, layers, total, scalar_cycles })
+    }
+
+    /// Aggregate stats over everything this session has run.
+    pub fn stats(&self) -> &SimStats {
+        &self.total
+    }
+
+    /// Datapath precision switches performed since this session opened.
+    pub fn precision_switches(&self) -> u64 {
+        self.engine.precision_switches() - self.switch_base
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator;
+    use crate::models::zoo::Model;
+
+    fn tiny_model() -> Model {
+        Model {
+            name: "tiny",
+            ops: vec![
+                OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int8),
+                OpDesc::pwcv(8, 8, 10, 10, Precision::Int8),
+                OpDesc::dwcv(8, 10, 10, 3, 1, 1, Precision::Int8),
+                OpDesc::mm(10, 8, 12, Precision::Int8),
+            ],
+            scalar_fraction: 0.1,
+        }
+    }
+
+    #[test]
+    fn second_pass_compiles_zero_new_programs() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let model = tiny_model();
+        let mut session = engine.session();
+        let first = session.run_model(&model, Precision::Int8).unwrap();
+        drop(session);
+        let after_first = engine.cache_stats();
+        assert_eq!(after_first.misses, 4, "each layer compiles once");
+        assert_eq!(engine.compiled_programs(), 4);
+
+        let mut session = engine.session();
+        let second = session.run_model(&model, Precision::Int8).unwrap();
+        drop(session);
+        let after_second = engine.cache_stats();
+        // The acceptance bar: zero recompilations on the second pass.
+        assert_eq!(after_second.misses, after_first.misses);
+        assert_eq!(after_second.hits, after_first.hits + 4);
+        assert_eq!(engine.compiled_programs(), 4);
+        // Cached programs replay the identical stream: identical work.
+        assert_eq!(first.total.macs, second.total.macs);
+        assert_eq!(first.total.insns_total, second.total.insns_total);
+        assert_eq!(first.total.traffic, second.total.traffic);
+    }
+
+    #[test]
+    fn precision_switch_only_when_it_changes() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let model = tiny_model();
+        // The datapath resets to INT8; an all-INT16 model switches once
+        // (first layer), then every later VSACFG names the active precision.
+        let mut session = engine.session();
+        session.run_model(&model, Precision::Int16).unwrap();
+        assert_eq!(session.precision_switches(), 1);
+        // Second pass at the same precision: the datapath is already there.
+        session.run_model(&model, Precision::Int16).unwrap();
+        assert_eq!(session.precision_switches(), 1);
+        drop(session);
+        // Changing precision costs exactly one switch per transition.
+        let mut session = engine.session();
+        session.run_model(&model, Precision::Int4).unwrap();
+        session.run_model(&model, Precision::Int16).unwrap();
+        session.run_model(&model, Precision::Int16).unwrap();
+        assert_eq!(session.precision_switches(), 2);
+    }
+
+    #[test]
+    fn distinct_precisions_cache_distinct_programs() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let model = tiny_model();
+        let mut session = engine.session();
+        session.run_model(&model, Precision::Int16).unwrap();
+        session.run_model(&model, Precision::Int8).unwrap();
+        session.run_model(&model, Precision::Int4).unwrap();
+        drop(session);
+        assert_eq!(engine.compiled_programs(), 12, "4 ops x 3 precisions");
+        assert_eq!(engine.cache_stats().misses, 12);
+    }
+
+    #[test]
+    fn session_matches_one_shot_run_model() {
+        // The Engine path must reproduce the legacy one-shot numbers: same
+        // streams, same warm-processor composition, same cycles.
+        let model = tiny_model();
+        let cfg = SpeedConfig::reference();
+        let legacy =
+            coordinator::run_model(&model, Precision::Int8, &cfg, Policy::Mixed).unwrap();
+        let mut engine = Engine::new(cfg).unwrap();
+        let result = engine.session().run_model(&model, Precision::Int8).unwrap();
+        assert_eq!(result.total.cycles, legacy.total.cycles);
+        assert_eq!(result.total.macs, legacy.total.macs);
+        assert_eq!(result.total.traffic, legacy.total.traffic);
+        assert_eq!(result.layers.len(), legacy.layers.len());
+        assert_eq!(result.scalar_cycles, legacy.scalar_cycles);
+    }
+
+    #[test]
+    fn run_op_grows_memory_on_demand() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        // Needs far more than the 1 MiB floor.
+        let op = OpDesc::conv(64, 64, 64, 64, 3, 1, 1, Precision::Int8);
+        assert!(MemLayout::required_bytes(&op) > MEM_MIN_BYTES);
+        let layer = engine.session().run_op(&op, StrategyKind::Ffcs).unwrap();
+        assert_eq!(layer.stats.macs, op.total_macs());
+        assert!(engine.processor().mem.size() as u64 >= MemLayout::required_bytes(&op));
+    }
+
+    #[test]
+    fn session_aggregates_across_runs() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let model = tiny_model();
+        let mut session = engine.session();
+        let a = session.run_model(&model, Precision::Int8).unwrap();
+        let b = session.run_model(&model, Precision::Int4).unwrap();
+        assert_eq!(session.stats().macs, a.total.macs + b.total.macs);
+        assert_eq!(session.stats().cycles, a.total.cycles + b.total.cycles);
+    }
+
+    #[test]
+    fn invalid_config_is_rejected_at_engine_construction() {
+        let bad = SpeedConfig { lanes: 3, ..SpeedConfig::reference() };
+        let err = Engine::new(bad).map(|_| ()).unwrap_err();
+        assert!(matches!(err, SpeedError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn fixed_policy_session_skips_inapplicable_layers() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let model = tiny_model();
+        let r = engine
+            .session()
+            .with_policy(Policy::Fixed(StrategyKind::Cf))
+            .run_model(&model, Precision::Int8)
+            .unwrap();
+        // CF applies to CONV and PWCV only.
+        assert_eq!(r.layers.len(), 2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Typed errors for every fallible path in the crate.
+//!
+//! Callers match on the failure class instead of parsing strings: a serving
+//! loop retries a [`SpeedError::Artifact`] (missing/corrupt AOT outputs),
+//! rejects a [`SpeedError::Config`] at admission time, and treats
+//! [`SpeedError::Sim`] as a compiler bug (the operator compiler emitted a
+//! stream the hardware could not execute). Hand-rolled in the `thiserror`
+//! style — the deployment image vendors no proc-macro crates.
+
+use crate::sim::SimError;
+
+/// Crate-wide result alias; the error defaults to [`SpeedError`].
+pub type Result<T, E = SpeedError> = std::result::Result<T, E>;
+
+/// Every way a SPEED API can fail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpeedError {
+    /// Invalid hardware configuration or request parameter.
+    Config(String),
+    /// Operator compilation failure: malformed operator descriptor or a
+    /// dataflow strategy that does not apply to the operator kind.
+    Compile(String),
+    /// DRAM placement failure: the operator's tensors do not fit the
+    /// configured external memory.
+    Layout(String),
+    /// The cycle simulator rejected an instruction stream (structural
+    /// violation — carries the simulator's own error as `source`).
+    Sim(SimError),
+    /// AOT-artifact problem: missing/corrupt manifest, golden vectors, or
+    /// a PJRT compile/execute failure.
+    Artifact(String),
+    /// Text parsing failure (assembly source, JSON documents).
+    Parse(String),
+}
+
+impl SpeedError {
+    /// Stable, matchable class name (also the `Display` prefix).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SpeedError::Config(_) => "config",
+            SpeedError::Compile(_) => "compile",
+            SpeedError::Layout(_) => "layout",
+            SpeedError::Sim(_) => "sim",
+            SpeedError::Artifact(_) => "artifact",
+            SpeedError::Parse(_) => "parse",
+        }
+    }
+
+    /// The human-readable detail without the class prefix.
+    pub fn detail(&self) -> String {
+        match self {
+            SpeedError::Config(m)
+            | SpeedError::Compile(m)
+            | SpeedError::Layout(m)
+            | SpeedError::Artifact(m)
+            | SpeedError::Parse(m) => m.clone(),
+            SpeedError::Sim(e) => e.to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for SpeedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} error: {}", self.kind(), self.detail())
+    }
+}
+
+impl std::error::Error for SpeedError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SpeedError::Sim(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SimError> for SpeedError {
+    fn from(e: SimError) -> Self {
+        SpeedError::Sim(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::error::Error;
+
+    #[test]
+    fn display_carries_kind_and_detail() {
+        let e = SpeedError::Config("lanes must be a power of two".into());
+        assert_eq!(e.kind(), "config");
+        assert_eq!(e.to_string(), "config error: lanes must be a power of two");
+        let e = SpeedError::Layout("needs 4096 B, have 256".into());
+        assert!(e.to_string().starts_with("layout error: "));
+        assert!(e.to_string().contains("4096"));
+    }
+
+    #[test]
+    fn sim_errors_roundtrip_through_source() {
+        let sim = SimError::NoPlan;
+        let e: SpeedError = sim.clone().into();
+        assert_eq!(e.kind(), "sim");
+        // The original simulator error is recoverable via `source()`.
+        let src = e.source().expect("sim errors carry a source");
+        assert_eq!(src.to_string(), sim.to_string());
+        let down = src.downcast_ref::<SimError>().expect("downcast");
+        assert_eq!(*down, SimError::NoPlan);
+    }
+
+    #[test]
+    fn non_sim_errors_have_no_source() {
+        for e in [
+            SpeedError::Config("x".into()),
+            SpeedError::Compile("x".into()),
+            SpeedError::Layout("x".into()),
+            SpeedError::Artifact("x".into()),
+            SpeedError::Parse("x".into()),
+        ] {
+            assert!(e.source().is_none(), "{e}");
+        }
+    }
+
+    #[test]
+    fn every_kind_displays_distinctly() {
+        let kinds: Vec<&str> = [
+            SpeedError::Config("m".into()),
+            SpeedError::Compile("m".into()),
+            SpeedError::Layout("m".into()),
+            SpeedError::Sim(SimError::StoreUnderflow),
+            SpeedError::Artifact("m".into()),
+            SpeedError::Parse("m".into()),
+        ]
+        .iter()
+        .map(|e| e.kind())
+        .collect();
+        let mut dedup = kinds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), kinds.len());
+    }
+}

@@ -20,6 +20,12 @@
 
 use super::insn::{Dim, Insn, LdMode, StrategyKind, Vtype, WidthSel};
 use crate::config::Precision;
+use crate::error::SpeedError;
+
+/// Shorthand: a parse-class [`SpeedError`].
+fn perr(m: impl Into<String>) -> SpeedError {
+    SpeedError::Parse(m.into())
+}
 
 /// Assembly error with 1-based line information.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -36,6 +42,12 @@ impl std::fmt::Display for AsmError {
 
 impl std::error::Error for AsmError {}
 
+impl From<AsmError> for SpeedError {
+    fn from(e: AsmError) -> Self {
+        SpeedError::Parse(e.to_string())
+    }
+}
+
 /// Assemble a full program (one instruction per line).
 pub fn assemble(src: &str) -> Result<Vec<Insn>, AsmError> {
     let mut out = Vec::new();
@@ -46,13 +58,13 @@ pub fn assemble(src: &str) -> Result<Vec<Insn>, AsmError> {
         if text.is_empty() {
             continue;
         }
-        out.push(assemble_line(text).map_err(|msg| AsmError { line, msg })?);
+        out.push(assemble_line(text).map_err(|e| AsmError { line, msg: e.detail() })?);
     }
     Ok(out)
 }
 
 /// Assemble a single instruction (no comments / blank input).
-pub fn assemble_line(text: &str) -> Result<Insn, String> {
+pub fn assemble_line(text: &str) -> Result<Insn, SpeedError> {
     let (mnemonic, rest) = match text.split_once(char::is_whitespace) {
         Some((m, r)) => (m, r.trim()),
         None => (text, ""),
@@ -63,7 +75,8 @@ pub fn assemble_line(text: &str) -> Result<Insn, String> {
         rest.split(',').map(|a| a.trim()).collect()
     };
     let nargs = args.len();
-    let wrong = |want: usize| format!("{mnemonic}: expected {want} operands, got {nargs}");
+    let wrong =
+        |want: usize| perr(format!("{mnemonic}: expected {want} operands, got {nargs}"));
 
     match mnemonic {
         "li" => {
@@ -85,7 +98,7 @@ pub fn assemble_line(text: &str) -> Result<Insn, String> {
             let sew = args[2]
                 .strip_prefix('e')
                 .and_then(|s| s.parse::<u32>().ok())
-                .ok_or_else(|| format!("bad sew spec '{}'", args[2]))?;
+                .ok_or_else(|| perr(format!("bad sew spec '{}'", args[2])))?;
             Ok(Insn::Vsetvli { rd: xreg(args[0])?, rs1: xreg(args[1])?, vtype: Vtype::new(sew) })
         }
         m if m.starts_with("vle") && m.ends_with(".v") => {
@@ -117,7 +130,7 @@ pub fn assemble_line(text: &str) -> Result<Insn, String> {
         }
         "vsacfg" => {
             if nargs < 2 {
-                return Err("vsacfg: expected rd plus prec=/k=/strat= fields".into());
+                return Err(perr("vsacfg: expected rd plus prec=/k=/strat= fields"));
             }
             let rd = xreg(args[0])?;
             let mut prec = Precision::Int8;
@@ -126,19 +139,19 @@ pub fn assemble_line(text: &str) -> Result<Insn, String> {
             let mut uimm = 0u8;
             for a in &args[1..] {
                 if let Some(v) = a.strip_prefix("prec=") {
-                    let bits: u32 = v.parse().map_err(|_| format!("bad prec '{v}'"))?;
-                    prec = Precision::from_bits(bits).ok_or(format!("bad prec '{v}'"))?;
+                    let bits: u32 = v.parse().map_err(|_| perr(format!("bad prec '{v}'")))?;
+                    prec = Precision::from_bits(bits).ok_or_else(|| perr(format!("bad prec '{v}'")))?;
                 } else if let Some(v) = a.strip_prefix("k=") {
-                    k = v.parse().map_err(|_| format!("bad k '{v}'"))?;
+                    k = v.parse().map_err(|_| perr(format!("bad k '{v}'")))?;
                     if k > 15 {
-                        return Err(format!("k={k} exceeds 15; apply Kseg decomposition"));
+                        return Err(perr(format!("k={k} exceeds 15; apply Kseg decomposition")));
                     }
                 } else if let Some(v) = a.strip_prefix("strat=") {
                     strat = strat_of(v)?;
                 } else if let Some(v) = a.strip_prefix("uimm=") {
-                    uimm = v.parse().map_err(|_| format!("bad uimm '{v}'"))?;
+                    uimm = v.parse().map_err(|_| perr(format!("bad uimm '{v}'")))?;
                 } else {
-                    return Err(format!("vsacfg: unknown field '{a}'"));
+                    return Err(perr(format!("vsacfg: unknown field '{a}'")));
                 }
             }
             Ok(Insn::Vsacfg { rd, zimm: Insn::pack_cfg(prec, k, strat), uimm })
@@ -149,12 +162,12 @@ pub fn assemble_line(text: &str) -> Result<Insn, String> {
             }
             let dim = args[2]
                 .strip_prefix("dim=")
-                .ok_or_else(|| format!("expected dim=<name>, got '{}'", args[2]))?;
+                .ok_or_else(|| perr(format!("expected dim=<name>, got '{}'", args[2])))?;
             Ok(Insn::VsacfgDim { rd: xreg(args[0])?, rs1: xreg(args[1])?, dim: dim_of(dim)? })
         }
         "vsald" => {
             if nargs < 2 {
-                return Err("vsald: expected vd, (rs1) [, bcast|seq] [, w=...]".into());
+                return Err(perr("vsald: expected vd, (rs1) [, bcast|seq] [, w=...]"));
             }
             let vd = vreg(args[0])?;
             let rs1 = memop(args[1])?;
@@ -171,10 +184,10 @@ pub fn assemble_line(text: &str) -> Result<Insn, String> {
                                 "4" => WidthSel::Explicit(Precision::Int4),
                                 "8" => WidthSel::Explicit(Precision::Int8),
                                 "16" => WidthSel::Explicit(Precision::Int16),
-                                _ => return Err(format!("bad width '{v}'")),
+                                _ => return Err(perr(format!("bad width '{v}'"))),
                             };
                         } else {
-                            return Err(format!("vsald: unknown field '{a}'"));
+                            return Err(perr(format!("vsald: unknown field '{a}'")));
                         }
                     }
                 }
@@ -188,7 +201,7 @@ pub fn assemble_line(text: &str) -> Result<Insn, String> {
             let stages: u8 = args[3]
                 .strip_prefix("stages=")
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| format!("expected stages=<n>, got '{}'", args[3]))?;
+                .ok_or_else(|| perr(format!("expected stages=<n>, got '{}'", args[3])))?;
             let (vd, vs1, vs2) = (vreg(args[0])?, vreg(args[1])?, vreg(args[2])?);
             if mnemonic == "vsam" {
                 Ok(Insn::Vsam { vd, vs1, vs2, stages })
@@ -196,36 +209,36 @@ pub fn assemble_line(text: &str) -> Result<Insn, String> {
                 Ok(Insn::Vsac { vd, vs1, vs2, stages })
             }
         }
-        _ => Err(format!("unknown mnemonic '{mnemonic}'")),
+        _ => Err(perr(format!("unknown mnemonic '{mnemonic}'"))),
     }
 }
 
-fn triple(args: Vec<&str>, f: impl Fn(u8, u8, u8) -> Insn) -> Result<Insn, String> {
+fn triple(args: Vec<&str>, f: impl Fn(u8, u8, u8) -> Insn) -> Result<Insn, SpeedError> {
     if args.len() != 3 {
-        return Err(format!("expected 3 operands, got {}", args.len()));
+        return Err(perr(format!("expected 3 operands, got {}", args.len())));
     }
     Ok(f(vreg(args[0])?, vreg(args[1])?, vreg(args[2])?))
 }
 
-fn eew_of(m: &str, prefix: &str) -> Result<u32, String> {
+fn eew_of(m: &str, prefix: &str) -> Result<u32, SpeedError> {
     m.strip_prefix(prefix)
         .and_then(|s| s.strip_suffix(".v"))
         .and_then(|s| s.parse::<u32>().ok())
         .filter(|e| [8, 16, 32, 64].contains(e))
-        .ok_or_else(|| format!("bad element width in '{m}'"))
+        .ok_or_else(|| perr(format!("bad element width in '{m}'")))
 }
 
-fn strat_of(s: &str) -> Result<StrategyKind, String> {
+fn strat_of(s: &str) -> Result<StrategyKind, SpeedError> {
     match s {
         "mm" => Ok(StrategyKind::Mm),
         "ffcs" => Ok(StrategyKind::Ffcs),
         "cf" => Ok(StrategyKind::Cf),
         "ff" => Ok(StrategyKind::Ff),
-        _ => Err(format!("unknown strategy '{s}'")),
+        _ => Err(perr(format!("unknown strategy '{s}'"))),
     }
 }
 
-fn dim_of(s: &str) -> Result<Dim, String> {
+fn dim_of(s: &str) -> Result<Dim, SpeedError> {
     match s {
         "m" => Ok(Dim::M),
         "k" => Ok(Dim::K),
@@ -236,47 +249,47 @@ fn dim_of(s: &str) -> Result<Dim, String> {
         "w" => Ok(Dim::W),
         "stride" => Ok(Dim::Stride),
         "nstages" => Ok(Dim::NStages),
-        _ => Err(format!("unknown dim '{s}'")),
+        _ => Err(perr(format!("unknown dim '{s}'"))),
     }
 }
 
-fn xreg(s: &str) -> Result<u8, String> {
+fn xreg(s: &str) -> Result<u8, SpeedError> {
     reg(s, 'x')
 }
 
-fn vreg(s: &str) -> Result<u8, String> {
+fn vreg(s: &str) -> Result<u8, SpeedError> {
     reg(s, 'v')
 }
 
-fn reg(s: &str, kind: char) -> Result<u8, String> {
+fn reg(s: &str, kind: char) -> Result<u8, SpeedError> {
     let body = s
         .strip_prefix(kind)
-        .ok_or_else(|| format!("expected {kind}-register, got '{s}'"))?;
-    let n: u8 = body.parse().map_err(|_| format!("bad register '{s}'"))?;
+        .ok_or_else(|| perr(format!("expected {kind}-register, got '{s}'")))?;
+    let n: u8 = body.parse().map_err(|_| perr(format!("bad register '{s}'")))?;
     if n > 31 {
-        return Err(format!("register index out of range: '{s}'"));
+        return Err(perr(format!("register index out of range: '{s}'")));
     }
     Ok(n)
 }
 
-fn memop(s: &str) -> Result<u8, String> {
+fn memop(s: &str) -> Result<u8, SpeedError> {
     let inner = s
         .strip_prefix('(')
         .and_then(|t| t.strip_suffix(')'))
-        .ok_or_else(|| format!("expected (xN) memory operand, got '{s}'"))?;
+        .ok_or_else(|| perr(format!("expected (xN) memory operand, got '{s}'")))?;
     xreg(inner)
 }
 
-fn imm12(s: &str) -> Result<i32, String> {
+fn imm12(s: &str) -> Result<i32, SpeedError> {
     let v = if let Some(hex) = s.strip_prefix("0x") {
-        i64::from_str_radix(hex, 16).map_err(|_| format!("bad immediate '{s}'"))?
+        i64::from_str_radix(hex, 16).map_err(|_| perr(format!("bad immediate '{s}'")))?
     } else if let Some(hex) = s.strip_prefix("-0x") {
-        -i64::from_str_radix(hex, 16).map_err(|_| format!("bad immediate '{s}'"))?
+        -i64::from_str_radix(hex, 16).map_err(|_| perr(format!("bad immediate '{s}'")))?
     } else {
-        s.parse::<i64>().map_err(|_| format!("bad immediate '{s}'"))?
+        s.parse::<i64>().map_err(|_| perr(format!("bad immediate '{s}'")))?
     };
     if !(-2048..=2047).contains(&v) {
-        return Err(format!("immediate {v} out of 12-bit range"));
+        return Err(perr(format!("immediate {v} out of 12-bit range")));
     }
     Ok(v as i32)
 }
@@ -328,7 +341,7 @@ mod tests {
     #[test]
     fn rejects_oversize_kernel() {
         let e = assemble_line("vsacfg x1, prec=8, k=16, strat=ffcs").unwrap_err();
-        assert!(e.contains("Kseg"));
+        assert!(e.to_string().contains("Kseg"));
     }
 
     #[test]

@@ -3,7 +3,38 @@
 //! SPEED is a scalable RISC-V vector (RVV) processor for multi-precision
 //! (4/8/16-bit) DNN inference. This crate reproduces the complete system as
 //! described in the paper, substituting the paper's RTL + QuestaSim + TSMC
-//! 28 nm flow with:
+//! 28 nm flow with a cycle-level simulator and analytical models.
+//!
+//! ## Primary API: [`engine`]
+//!
+//! The crate's execution surface is the compile-once / execute-many
+//! [`Engine`]/[`Session`] pair:
+//!
+//! ```no_run
+//! use speed_rvv::{Engine, Precision, SpeedConfig};
+//! use speed_rvv::models::zoo::model_by_name;
+//!
+//! # fn main() -> Result<(), speed_rvv::SpeedError> {
+//! let cfg = SpeedConfig::builder().lanes(4).tile(2, 2).build()?;
+//! let mut engine = Engine::new(cfg)?;          // warm processor + program cache
+//! let model = model_by_name("mobilenetv2").unwrap();
+//! let mut session = engine.session();
+//! let r8 = session.run_model(&model, Precision::Int8)?;   // compiles each layer once
+//! let r4 = session.run_model(&model, Precision::Int4)?;   // single-cycle VSACFG switch
+//! let again = session.run_model(&model, Precision::Int8)?; // zero recompilation
+//! # let _ = (r8, r4, again);
+//! assert_eq!(engine.cache_stats().misses, engine.compiled_programs() as u64);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! An [`Engine`] owns a warm [`sim::Processor`] plus a program cache keyed
+//! on `(operator, strategy, precision, configuration)`; a [`Session`] runs
+//! whole models or single operators against it, returning per-layer and
+//! aggregate [`sim::SimStats`]. Every fallible path in the crate returns a
+//! typed [`SpeedError`] ([`error`]).
+//!
+//! ## Subsystems
 //!
 //! * a **cycle-level microarchitectural simulator** ([`sim`]) of the SPEED
 //!   pipeline — VIDU, VIS, VLDU, lanes with banked VRFs, and the
@@ -21,9 +52,8 @@
 //! * a **PJRT runtime** ([`runtime`]) that loads the JAX/Pallas-lowered HLO
 //!   artifacts (the golden numerics of the machine) and cross-checks the
 //!   simulator's functional output — Python never runs on the request path;
-//! * the **inference coordinator** ([`coordinator`]) scheduling whole
-//!   networks with runtime precision switching and per-operator strategy
-//!   selection;
+//! * the **inference coordinator** ([`coordinator`]): one-shot wrappers,
+//!   strategy policies, and the thread-based sweep runner;
 //! * a **report harness** ([`report`]) regenerating every table and figure
 //!   of the paper's evaluation (Fig. 2, Fig. 10–14, Tables I–III).
 //!
@@ -36,6 +66,8 @@ pub mod config;
 pub mod coordinator;
 pub mod dataflow;
 pub mod dse;
+pub mod engine;
+pub mod error;
 pub mod isa;
 pub mod metrics;
 pub mod models;
@@ -43,4 +75,6 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 
-pub use config::{Precision, SpeedConfig};
+pub use config::{Precision, SpeedConfig, SpeedConfigBuilder};
+pub use engine::{CacheStats, Engine, Session};
+pub use error::SpeedError;

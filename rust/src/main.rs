@@ -3,13 +3,23 @@
 //! Subcommands map one-to-one onto the paper's evaluation:
 //!
 //! ```text
-//! repro report <fig2|fig10|fig11|fig12|table1|table2|fig13|fig14|table3|all> [--quick]
+//! repro report <fig2|fig10|fig11|fig12|table1|table2|fig13|fig14|table3|all>
+//!              [--quick] [--workers N]
 //! repro golden [--artifacts DIR]        three-way golden checks via PJRT
-//! repro run-model <name> [--prec N] [--policy mixed|ffcs|cf|ff] [--quick]
-//! repro dse                              Fig. 14 sweep
-//! repro asm <file.s>                     assemble / encode / disassemble
-//! repro info                             configuration + artifact summary
+//! repro run-model <name> [--prec 16|8|4|all] [--policy mixed|ffcs|cf|ff]
+//!                 [--quick] [--workers N]
+//! repro dse [--quick] [--workers N]     Fig. 14 sweep
+//! repro asm <file.s>                    assemble / encode / disassemble
+//! repro info                            configuration + artifact summary
 //! ```
+//!
+//! `run-model` executes through the [`speed_rvv::engine`] API: one warm
+//! `Engine` whose program cache persists across precisions, so `--prec all`
+//! compiles each layer once per precision and switches the datapath with a
+//! single-cycle `VSACFG`. `--workers N` feeds the sweep runner behind
+//! `report`/`dse`, and with `run-model --prec all` it evaluates the
+//! precisions concurrently (one engine per worker) instead of sharing the
+//! warm cache (default: all cores but one).
 //!
 //! (The deployment image vendors no argument-parsing crate; the parser is
 //! a small hand-rolled positional/flag scanner — see DESIGN.md.)
@@ -17,11 +27,14 @@
 use std::process::ExitCode;
 
 use speed_rvv::config::{Precision, SpeedConfig};
-use speed_rvv::coordinator::{run_model, run_model_ara, Policy};
+use speed_rvv::coordinator::runner::{default_workers, run_parallel};
+use speed_rvv::coordinator::{run_model, run_model_ara, ModelResult, Policy};
+use speed_rvv::engine::Engine;
+use speed_rvv::error::SpeedError;
 use speed_rvv::isa::{self, StrategyKind};
 use speed_rvv::models::zoo::{model_by_name, MODELS};
 use speed_rvv::report;
-use speed_rvv::runtime::{golden_check_all, Engine};
+use speed_rvv::runtime::{golden_check_all, Engine as PjrtEngine};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,7 +58,19 @@ fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
-fn dispatch(args: &[String]) -> Result<(), String> {
+/// `--workers N` (default: physical parallelism minus one).
+fn workers_opt(args: &[String]) -> Result<usize, SpeedError> {
+    match opt(args, "--workers") {
+        None => Ok(default_workers()),
+        Some(v) => v
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| SpeedError::Config(format!("bad --workers '{v}' (want N >= 1)"))),
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<(), SpeedError> {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     let rest = &args[1.min(args.len())..];
     match cmd {
@@ -53,7 +78,8 @@ fn dispatch(args: &[String]) -> Result<(), String> {
         "golden" => cmd_golden(rest),
         "run-model" => cmd_run_model(rest),
         "dse" => {
-            let (text, _) = report::fig14();
+            let workers = workers_opt(rest)?;
+            let (text, _) = report::fig14_with(workers, flag(rest, "--quick"));
             println!("{text}");
             Ok(())
         }
@@ -63,39 +89,47 @@ fn dispatch(args: &[String]) -> Result<(), String> {
             println!("{HELP}");
             Ok(())
         }
-        other => Err(format!("unknown command '{other}' (try `repro help`)")),
+        other => Err(SpeedError::Config(format!(
+            "unknown command '{other}' (try `repro help`)"
+        ))),
     }
 }
 
 const HELP: &str = "repro — SPEED (TVLSI'24) full-system reproduction
 commands:
-  report <id|all> [--quick]   regenerate a paper table/figure
+  report <id|all> [--quick] [--workers N]
+                              regenerate a paper table/figure
                               ids: fig2 fig10 fig11 fig12 table1 table2
                                    fig13 fig14 table3
   golden [--artifacts DIR]    three-way golden checks (JAX == PJRT == sim)
-  run-model <name> [--prec N] [--policy mixed|ffcs|cf|ff] [--quick]
+  run-model <name> [--prec 16|8|4|all] [--policy mixed|ffcs|cf|ff]
+            [--quick] [--workers N]
+                              run through the Engine/Session API
                               names: vgg16 resnet18 googlenet mobilenetv2
                                      vit_tiny vit_b16
-  dse                         Fig. 14 design-space sweep
+  dse [--quick] [--workers N] Fig. 14 design-space sweep
   asm <file.s>                assemble, encode, and disassemble a program
   info                        configuration + artifact summary";
 
-fn cmd_report(args: &[String]) -> Result<(), String> {
+fn cmd_report(args: &[String]) -> Result<(), SpeedError> {
     let id = args.first().map(|s| s.as_str()).unwrap_or("all");
     let quick = flag(args, "--quick");
+    let workers = workers_opt(args)?;
     let cfg = SpeedConfig::reference();
-    let emit = |name: &str| -> Result<(), String> {
+    let emit = |name: &str| -> Result<(), SpeedError> {
         let text = match name {
             "fig2" => report::fig2(),
             "fig10" => report::fig10(&cfg),
             "fig11" => report::fig11(&cfg, &report::fig11::DEFAULT_SIZES),
-            "fig12" => report::fig12(&cfg, quick),
-            "table1" => report::table1(&cfg, quick),
+            "fig12" => report::fig12_with(&cfg, quick, workers),
+            "table1" => report::table1_with(&cfg, quick, workers),
             "table2" => report::table2(),
             "fig13" => report::fig13(),
-            "fig14" => report::fig14().0,
+            "fig14" => report::fig14_with(workers, quick).0,
             "table3" => report::table3(),
-            other => return Err(format!("unknown report id '{other}'")),
+            other => {
+                return Err(SpeedError::Config(format!("unknown report id '{other}'")))
+            }
         };
         println!("{text}");
         Ok(())
@@ -112,10 +146,10 @@ fn cmd_report(args: &[String]) -> Result<(), String> {
     }
 }
 
-fn cmd_golden(args: &[String]) -> Result<(), String> {
+fn cmd_golden(args: &[String]) -> Result<(), SpeedError> {
     let dir = std::path::PathBuf::from(opt(args, "--artifacts").unwrap_or("artifacts"));
-    let mut engine = Engine::open(&dir).map_err(|e| e.to_string())?;
-    let reports = golden_check_all(&mut engine, &dir).map_err(|e| e.to_string())?;
+    let mut engine = PjrtEngine::open(&dir)?;
+    let reports = golden_check_all(&mut engine, &dir)?;
     let mut failed = 0;
     for r in &reports {
         let sim = match r.sim_ok {
@@ -135,64 +169,104 @@ fn cmd_golden(args: &[String]) -> Result<(), String> {
         }
     }
     if failed > 0 {
-        return Err(format!("{failed} golden check(s) failed"));
+        return Err(SpeedError::Artifact(format!("{failed} golden check(s) failed")));
     }
     println!("all {} golden checks passed", reports.len());
     Ok(())
 }
 
-fn cmd_run_model(args: &[String]) -> Result<(), String> {
-    let name = args
-        .first()
-        .filter(|a| !a.starts_with("--"))
-        .ok_or_else(|| format!("run-model needs a model name (one of {MODELS:?})"))?;
-    let prec = match opt(args, "--prec").unwrap_or("8") {
-        "16" => Precision::Int16,
-        "8" => Precision::Int8,
-        "4" => Precision::Int4,
-        other => return Err(format!("bad precision '{other}'")),
+fn cmd_run_model(args: &[String]) -> Result<(), SpeedError> {
+    let name = args.first().filter(|a| !a.starts_with("--")).ok_or_else(|| {
+        SpeedError::Config(format!("run-model needs a model name (one of {MODELS:?})"))
+    })?;
+    let precs: Vec<Precision> = match opt(args, "--prec").unwrap_or("8") {
+        "16" => vec![Precision::Int16],
+        "8" => vec![Precision::Int8],
+        "4" => vec![Precision::Int4],
+        "all" => vec![Precision::Int16, Precision::Int8, Precision::Int4],
+        other => return Err(SpeedError::Config(format!("bad precision '{other}'"))),
     };
     let policy = match opt(args, "--policy").unwrap_or("mixed") {
         "mixed" => Policy::Mixed,
         "ffcs" => Policy::Fixed(StrategyKind::Ffcs),
         "cf" => Policy::Fixed(StrategyKind::Cf),
         "ff" => Policy::Fixed(StrategyKind::Ff),
-        other => return Err(format!("bad policy '{other}'")),
+        other => return Err(SpeedError::Config(format!("bad policy '{other}'"))),
     };
-    let mut model =
-        model_by_name(name).ok_or_else(|| format!("unknown model '{name}' ({MODELS:?})"))?;
+    let mut model = model_by_name(name).ok_or_else(|| {
+        SpeedError::Config(format!("unknown model '{name}' ({MODELS:?})"))
+    })?;
     if flag(args, "--quick") {
         model = report::fig12::downscale(&model, 4);
     }
+    let workers = workers_opt(args)?;
     let cfg = SpeedConfig::reference();
-    let r = run_model(&model, prec, &cfg, policy)?;
-    let ara = run_model_ara(&model, prec, &Default::default());
-    println!("model {name} @ {prec} ({} vector ops)", r.layers.len());
+    let print_result = |prec: Precision, r: &ModelResult| {
+        let ara = run_model_ara(&model, prec, &Default::default());
+        println!("model {name} @ {prec} ({} vector ops)", r.layers.len());
+        println!(
+            "  SPEED: {} cycles ({:.2} ops/cycle, {:.1} GOPS @ {:.2} GHz)",
+            r.vector_cycles(),
+            r.ops_per_cycle(),
+            r.gops(cfg.freq_ghz),
+            cfg.freq_ghz
+        );
+        println!("  complete application: {} cycles", r.complete_cycles());
+        println!(
+            "  Ara: {} cycles  ->  speedup {:.2}x",
+            ara.cycles,
+            ara.cycles as f64 / r.vector_cycles() as f64
+        );
+        println!(
+            "  DRAM traffic: SPEED {:.1} MiB vs Ara {:.1} MiB",
+            r.total.traffic.total() as f64 / (1 << 20) as f64,
+            ara.dram_bytes as f64 / (1 << 20) as f64
+        );
+    };
+    if precs.len() > 1 && workers > 1 {
+        // Parallel sweep: one throwaway engine per precision on the sweep
+        // runner (trades the shared warm cache for wall-clock time).
+        let results = run_parallel(precs.clone(), workers, |&prec| {
+            run_model(&model, prec, &cfg, policy).map(|r| (prec, r))
+        });
+        for res in results {
+            let (prec, r) = res?;
+            print_result(prec, &r);
+        }
+        println!("(parallel sweep: {workers} workers, one engine per precision)");
+        return Ok(());
+    }
+    // One warm engine for every precision: layers compile once, the
+    // datapath re-precisions with a single-cycle VSACFG per transition.
+    let mut engine = Engine::new(cfg)?;
+    let mut session = engine.session().with_policy(policy);
+    let mut results = Vec::new();
+    for &prec in &precs {
+        results.push((prec, session.run_model(&model, prec)?));
+    }
+    let switches = session.precision_switches();
+    drop(session);
+    for (prec, r) in &results {
+        print_result(*prec, r);
+    }
+    let cache = engine.cache_stats();
     println!(
-        "  SPEED: {} cycles ({:.2} ops/cycle, {:.1} GOPS @ {:.2} GHz)",
-        r.vector_cycles(),
-        r.ops_per_cycle(),
-        r.gops(cfg.freq_ghz),
-        cfg.freq_ghz
-    );
-    println!("  complete application: {} cycles", r.complete_cycles());
-    println!(
-        "  Ara: {} cycles  ->  speedup {:.2}x",
-        ara.cycles,
-        ara.cycles as f64 / r.vector_cycles() as f64
-    );
-    println!(
-        "  DRAM traffic: SPEED {:.1} MiB vs Ara {:.1} MiB",
-        r.total.traffic.total() as f64 / (1 << 20) as f64,
-        ara.dram_bytes as f64 / (1 << 20) as f64
+        "engine: {} compiled programs, {} cache hits / {} misses, \
+         {switches} precision switch(es)",
+        engine.compiled_programs(),
+        cache.hits,
+        cache.misses
     );
     Ok(())
 }
 
-fn cmd_asm(args: &[String]) -> Result<(), String> {
-    let path = args.first().ok_or("asm needs a file path")?;
-    let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-    let prog = isa::assemble(&src).map_err(|e| e.to_string())?;
+fn cmd_asm(args: &[String]) -> Result<(), SpeedError> {
+    let path = args
+        .first()
+        .ok_or_else(|| SpeedError::Config("asm needs a file path".into()))?;
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| SpeedError::Parse(format!("{path}: {e}")))?;
+    let prog = isa::assemble(&src)?;
     for insn in &prog {
         let word = isa::encode(insn);
         println!("{word:08x}  {}", isa::disasm::disassemble(insn));
@@ -201,7 +275,7 @@ fn cmd_asm(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_info(_args: &[String]) -> Result<(), String> {
+fn cmd_info(_args: &[String]) -> Result<(), SpeedError> {
     let cfg = SpeedConfig::reference();
     let t3 = SpeedConfig::table3();
     println!("SPEED reference instance (Sec. IV-A):");
@@ -225,7 +299,7 @@ fn cmd_info(_args: &[String]) -> Result<(), String> {
         100.0 * area.lane_fraction(),
         speed_rvv::metrics::speed_power(&cfg) * 1e3
     );
-    if let Ok(engine) = Engine::open("artifacts") {
+    if let Ok(engine) = PjrtEngine::open("artifacts") {
         println!("artifacts: {} compiled computations available", engine.manifest().len());
     } else {
         println!("artifacts: not built (run `make artifacts`)");

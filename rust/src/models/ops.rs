@@ -7,6 +7,7 @@
 //! the dataflow strategies — the cycle cost and memory traffic.
 
 use crate::config::Precision;
+use crate::error::SpeedError;
 use crate::isa::StrategyKind;
 
 /// Operator class.
@@ -196,31 +197,32 @@ impl OpDesc {
     }
 
     /// Validate dimension consistency.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), SpeedError> {
+        let bad = |m: String| Err(SpeedError::Compile(m));
         match self.kind {
             OpKind::Mm => {
                 if self.m == 0 || self.k == 0 || self.n == 0 {
-                    return Err(format!("MM dims must be nonzero: {self:?}"));
+                    return bad(format!("MM dims must be nonzero: {self:?}"));
                 }
             }
             _ => {
                 if self.c == 0 || self.h == 0 || self.w == 0 || self.ksize == 0 {
-                    return Err(format!("conv dims must be nonzero: {self:?}"));
+                    return bad(format!("conv dims must be nonzero: {self:?}"));
                 }
                 if self.kind != OpKind::Dwcv && self.f == 0 {
-                    return Err("output channels must be nonzero".into());
+                    return bad("output channels must be nonzero".into());
                 }
                 if self.kind == OpKind::Dwcv && self.f != self.c {
-                    return Err("DWCV requires f == c".into());
+                    return bad("DWCV requires f == c".into());
                 }
                 if self.kind == OpKind::Pwcv && self.ksize != 1 {
-                    return Err("PWCV requires ksize == 1".into());
+                    return bad("PWCV requires ksize == 1".into());
                 }
                 if self.stride == 0 {
-                    return Err("stride must be nonzero".into());
+                    return bad("stride must be nonzero".into());
                 }
                 if self.h + 2 * self.pad < self.ksize || self.w + 2 * self.pad < self.ksize {
-                    return Err("kernel larger than padded input".into());
+                    return bad("kernel larger than padded input".into());
                 }
             }
         }

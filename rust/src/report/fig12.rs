@@ -46,8 +46,14 @@ pub fn downscale(model: &Model, factor: u32) -> Model {
     m
 }
 
-/// Evaluate every (model, precision) pair in parallel.
+/// Evaluate every (model, precision) pair in parallel with the default
+/// worker count.
 pub fn fig12_data(cfg: &SpeedConfig, quick: bool) -> Vec<Fig12Point> {
+    fig12_data_with(cfg, quick, default_workers())
+}
+
+/// Evaluate every (model, precision) pair on `workers` threads.
+pub fn fig12_data_with(cfg: &SpeedConfig, quick: bool, workers: usize) -> Vec<Fig12Point> {
     let params = AraParams::default();
     let mut jobs = Vec::new();
     for name in MODELS {
@@ -59,7 +65,7 @@ pub fn fig12_data(cfg: &SpeedConfig, quick: bool) -> Vec<Fig12Point> {
             jobs.push((model.clone(), prec));
         }
     }
-    run_parallel(jobs, default_workers(), |(model, prec)| {
+    run_parallel(jobs, workers, |(model, prec)| {
         let s = run_model(model, *prec, cfg, Policy::Mixed).expect("model run");
         let a = run_model_ara(model, *prec, &params);
         let total_ops: u64 = model.ops.iter().map(|o| o.total_ops()).sum();
@@ -93,7 +99,12 @@ pub fn avg_ops_per_cycle(points: &[Fig12Point], prec: Precision) -> f64 {
 
 /// Text report.
 pub fn fig12(cfg: &SpeedConfig, quick: bool) -> String {
-    let pts = fig12_data(cfg, quick);
+    fig12_with(cfg, quick, default_workers())
+}
+
+/// Text report with an explicit sweep worker count.
+pub fn fig12_with(cfg: &SpeedConfig, quick: bool, workers: usize) -> String {
+    let pts = fig12_data_with(cfg, quick, workers);
     let rows: Vec<Vec<String>> = pts
         .iter()
         .map(|p| {

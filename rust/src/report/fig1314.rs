@@ -1,7 +1,8 @@
 //! Fig. 13 — area breakdown; Fig. 14 — design-space exploration.
 
 use crate::config::SpeedConfig;
-use crate::dse::{peak_area_eff, sweep, DsePoint};
+use crate::coordinator::runner::default_workers;
+use crate::dse::{peak_area_eff, sweep_with, DsePoint};
 use crate::metrics::{lane_area, speed_area};
 
 /// Fig. 13 text report: processor- and lane-level area breakdown of the
@@ -43,7 +44,13 @@ pub fn fig13() -> String {
 /// design space. Paper: 8.5–161.3 GOPS on CONV3×3 @16-bit; peak
 /// 80.3 GOPS/mm² at 96.4 GOPS; 4-lane instances peak area efficiency.
 pub fn fig14() -> (String, Vec<DsePoint>) {
-    let points = sweep();
+    fig14_with(default_workers(), false)
+}
+
+/// Fig. 14 with an explicit sweep worker count and optional quick mode
+/// (1/4-scale workload).
+pub fn fig14_with(workers: usize, quick: bool) -> (String, Vec<DsePoint>) {
+    let points = sweep_with(workers, quick);
     let rows: Vec<Vec<String>> = points
         .iter()
         .map(|p| {

@@ -8,6 +8,7 @@
 
 use crate::ara::AraParams;
 use crate::config::{Precision, SpeedConfig};
+use crate::coordinator::runner::{default_workers, run_parallel};
 use crate::coordinator::{ara_complete_cycles, run_model, run_model_ara, Policy};
 use crate::models::zoo::model_by_name;
 use crate::report::fig12::downscale;
@@ -32,32 +33,40 @@ impl Table1Row {
     }
 }
 
-/// Evaluate both Table I networks at INT8.
+/// Evaluate both Table I networks at INT8 with the default worker count.
 pub fn table1_data(cfg: &SpeedConfig, quick: bool) -> Vec<Table1Row> {
+    table1_data_with(cfg, quick, default_workers())
+}
+
+/// Evaluate both Table I networks at INT8 on `workers` threads.
+pub fn table1_data_with(cfg: &SpeedConfig, quick: bool, workers: usize) -> Vec<Table1Row> {
     let params = AraParams::default();
-    ["vgg16", "mobilenetv2"]
-        .iter()
-        .map(|name| {
-            let mut model = model_by_name(name).unwrap();
-            if quick {
-                model = downscale(&model, 4);
-            }
-            let s = run_model(&model, Precision::Int8, cfg, Policy::Mixed).unwrap();
-            let a = run_model_ara(&model, Precision::Int8, &params);
-            Table1Row {
-                model: name.to_string(),
-                speed_conv_cycles: s.vector_cycles(),
-                speed_complete_cycles: s.complete_cycles(),
-                ara_conv_cycles: a.cycles,
-                ara_complete_cycles: ara_complete_cycles(&a, &s),
-            }
-        })
-        .collect()
+    let jobs: Vec<&str> = vec!["vgg16", "mobilenetv2"];
+    run_parallel(jobs, workers, |name| {
+        let mut model = model_by_name(name).unwrap();
+        if quick {
+            model = downscale(&model, 4);
+        }
+        let s = run_model(&model, Precision::Int8, cfg, Policy::Mixed).unwrap();
+        let a = run_model_ara(&model, Precision::Int8, &params);
+        Table1Row {
+            model: name.to_string(),
+            speed_conv_cycles: s.vector_cycles(),
+            speed_complete_cycles: s.complete_cycles(),
+            ara_conv_cycles: a.cycles,
+            ara_complete_cycles: ara_complete_cycles(&a, &s),
+        }
+    })
 }
 
 /// Text report.
 pub fn table1(cfg: &SpeedConfig, quick: bool) -> String {
-    let rows = table1_data(cfg, quick);
+    table1_with(cfg, quick, default_workers())
+}
+
+/// Text report with an explicit sweep worker count.
+pub fn table1_with(cfg: &SpeedConfig, quick: bool, workers: usize) -> String {
+    let rows = table1_data_with(cfg, quick, workers);
     let table: Vec<Vec<String>> = rows
         .iter()
         .flat_map(|r| {

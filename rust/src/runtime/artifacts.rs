@@ -1,11 +1,12 @@
 //! Artifact manifest: the contract `python/compile/aot.py` writes and the
 //! Rust runtime consumes.
 
-use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use super::aerr;
 use super::json::{parse, Json};
+use crate::error::Result;
 
 /// One AOT-compiled computation.
 #[derive(Debug, Clone)]
@@ -39,34 +40,39 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            aerr(format!("reading {} (run `make artifacts`): {e}", path.display()))
+        })?;
         Self::parse(&text)
     }
 
     pub fn parse(text: &str) -> Result<Self> {
-        let doc = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let doc = parse(text).map_err(|e| aerr(format!("manifest: {e}")))?;
         if doc.get("format").and_then(|j| j.as_str()) != Some("hlo-text") {
-            return Err(anyhow!("manifest format must be 'hlo-text'"));
+            return Err(aerr("manifest format must be 'hlo-text'"));
         }
         let arts = doc
             .get("artifacts")
             .and_then(|j| j.as_obj())
-            .context("manifest missing 'artifacts'")?;
+            .ok_or_else(|| aerr("manifest missing 'artifacts'"))?;
         let mut artifacts = BTreeMap::new();
         for (name, a) in arts {
             let input_shapes = a
                 .get("inputs")
                 .and_then(|j| j.as_arr())
-                .context("artifact missing inputs")?
+                .ok_or_else(|| aerr("artifact missing inputs"))?
                 .iter()
-                .map(|i| i.get("shape").and_then(|s| s.as_i64_vec()).context("bad shape"))
+                .map(|i| {
+                    i.get("shape")
+                        .and_then(|s| s.as_i64_vec())
+                        .ok_or_else(|| aerr("bad shape"))
+                })
                 .collect::<Result<Vec<_>>>()?;
             let output_shape = a
                 .get("output")
                 .and_then(|o| o.get("shape"))
                 .and_then(|s| s.as_i64_vec())
-                .context("artifact missing output shape")?;
+                .ok_or_else(|| aerr("artifact missing output shape"))?;
             artifacts.insert(
                 name.clone(),
                 Artifact {
@@ -74,7 +80,7 @@ impl Manifest {
                     hlo_file: a
                         .get("hlo")
                         .and_then(|j| j.as_str())
-                        .context("missing hlo file")?
+                        .ok_or_else(|| aerr("missing hlo file"))?
                         .to_string(),
                     golden_file: a
                         .get("golden")
@@ -119,32 +125,32 @@ impl Golden {
     pub fn load(dir: &Path, art: &Artifact) -> Result<Self> {
         let path = dir.join(&art.golden_file);
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let doc = parse(&text).map_err(|e| anyhow!("golden: {e}"))?;
+            .map_err(|e| aerr(format!("reading {}: {e}", path.display())))?;
+        let doc = parse(&text).map_err(|e| aerr(format!("golden: {e}")))?;
         let inputs = doc
             .get("inputs")
             .and_then(|j| j.as_arr())
-            .context("golden missing inputs")?
+            .ok_or_else(|| aerr("golden missing inputs"))?
             .iter()
             .map(|i| {
                 i.get("data")
                     .and_then(|d| d.as_i64_vec())
                     .map(|v| v.into_iter().map(|x| x as i32).collect())
-                    .context("bad golden input data")
+                    .ok_or_else(|| aerr("bad golden input data"))
             })
             .collect::<Result<Vec<Vec<i32>>>>()?;
-        let out = doc.get("output").context("golden missing output")?;
+        let out = doc.get("output").ok_or_else(|| aerr("golden missing output"))?;
         let output = out
             .get("data")
             .and_then(|d| d.as_i64_vec())
-            .context("bad golden output")?
+            .ok_or_else(|| aerr("bad golden output"))?
             .into_iter()
             .map(|x| x as i32)
             .collect();
         let output_shape = out
             .get("shape")
             .and_then(|s| s.as_i64_vec())
-            .context("bad golden output shape")?;
+            .ok_or_else(|| aerr("bad golden output shape"))?;
         Ok(Golden { inputs, output, output_shape })
     }
 }

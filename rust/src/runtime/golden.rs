@@ -11,16 +11,16 @@
 //! 3. where the artifact is a single operator, the **cycle simulator's
 //!    functional output** for the equivalent instruction stream.
 
-use anyhow::{anyhow, Result};
 use std::path::Path;
 
 use crate::compiler::{compile_op, MemLayout};
 use crate::config::Precision;
+use crate::error::Result;
 use crate::models::ops::OpDesc;
 use crate::sim::Processor;
 
 use super::artifacts::{Artifact, Golden};
-use super::Engine;
+use super::{aerr, Engine};
 
 /// Outcome of one artifact's golden check.
 #[derive(Debug, Clone)]
@@ -85,15 +85,15 @@ pub fn op_for_artifact(art: &Artifact) -> Option<OpDesc> {
 /// inputs and return its DRAM output image.
 pub fn simulate_op(op: &OpDesc, inputs: &[Vec<i32>]) -> Result<Vec<i32>> {
     let mem = 1 << 24;
-    let layout = MemLayout::for_op(op, mem).map_err(|e| anyhow!(e))?;
+    let layout = MemLayout::for_op(op, mem)?;
     let mut p = Processor::new(crate::config::SpeedConfig::reference(), mem);
     p.mem.preload_packed(layout.in_addr, &inputs[0], op.prec);
     p.mem.preload_packed(layout.w_addr, &inputs[1], op.prec);
     let strat = op.preferred_strategy();
-    let compiled = compile_op(op, &p.cfg, strat, layout, true).map_err(|e| anyhow!(e))?;
+    let compiled = compile_op(op, &p.cfg, strat, layout, true)?;
     p.set_plan(compiled.plan);
     for seg in &compiled.segments {
-        p.run(seg).map_err(|e| anyhow!("sim: {e}"))?;
+        p.run(seg)?;
     }
     Ok(p.mem.inspect_i32(layout.out_addr, op.output_elems() as usize))
 }
@@ -104,7 +104,7 @@ pub fn golden_check(engine: &mut Engine, dir: &Path, name: &str) -> Result<Golde
     let art = engine
         .manifest()
         .artifact(name)
-        .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+        .ok_or_else(|| aerr(format!("unknown artifact '{name}'")))?
         .clone();
     let golden = Golden::load(dir, &art)?;
     let out = engine.execute(name, &golden.inputs)?;

@@ -6,6 +6,13 @@
 
 use std::collections::BTreeMap;
 
+use crate::error::SpeedError;
+
+/// Shorthand: a parse-class [`SpeedError`].
+fn perr(m: impl Into<String>) -> SpeedError {
+    SpeedError::Parse(m.into())
+}
+
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -64,12 +71,12 @@ impl Json {
 }
 
 /// Parse a JSON document.
-pub fn parse(src: &str) -> Result<Json, String> {
+pub fn parse(src: &str) -> Result<Json, SpeedError> {
     let mut p = Parser { b: src.as_bytes(), i: 0 };
     let v = p.value()?;
     p.ws();
     if p.i != p.b.len() {
-        return Err(format!("trailing bytes at {}", p.i));
+        return Err(perr(format!("trailing bytes at {}", p.i)));
     }
     Ok(v)
 }
@@ -86,21 +93,21 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn peek(&mut self) -> Result<u8, String> {
+    fn peek(&mut self) -> Result<u8, SpeedError> {
         self.ws();
-        self.b.get(self.i).copied().ok_or_else(|| "unexpected end".into())
+        self.b.get(self.i).copied().ok_or_else(|| perr("unexpected end"))
     }
 
-    fn eat(&mut self, c: u8) -> Result<(), String> {
+    fn eat(&mut self, c: u8) -> Result<(), SpeedError> {
         if self.peek()? == c {
             self.i += 1;
             Ok(())
         } else {
-            Err(format!("expected '{}' at {}", c as char, self.i))
+            Err(perr(format!("expected '{}' at {}", c as char, self.i)))
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json, SpeedError> {
         match self.peek()? {
             b'{' => self.object(),
             b'[' => self.array(),
@@ -112,16 +119,16 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, SpeedError> {
         if self.b[self.i..].starts_with(s.as_bytes()) {
             self.i += s.len();
             Ok(v)
         } else {
-            Err(format!("bad literal at {}", self.i))
+            Err(perr(format!("bad literal at {}", self.i)))
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json, SpeedError> {
         let start = self.i;
         while self.i < self.b.len()
             && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
@@ -132,19 +139,19 @@ impl<'a> Parser<'a> {
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
             .map(Json::Num)
-            .ok_or_else(|| format!("bad number at {start}"))
+            .ok_or_else(|| perr(format!("bad number at {start}")))
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String, SpeedError> {
         self.eat(b'"')?;
         let mut out = String::new();
         loop {
-            let c = *self.b.get(self.i).ok_or("unterminated string")?;
+            let c = *self.b.get(self.i).ok_or_else(|| perr("unterminated string"))?;
             self.i += 1;
             match c {
                 b'"' => return Ok(out),
                 b'\\' => {
-                    let e = *self.b.get(self.i).ok_or("bad escape")?;
+                    let e = *self.b.get(self.i).ok_or_else(|| perr("bad escape"))?;
                     self.i += 1;
                     match e {
                         b'"' => out.push('"'),
@@ -159,11 +166,11 @@ impl<'a> Parser<'a> {
                                 .get(self.i..self.i + 4)
                                 .and_then(|h| std::str::from_utf8(h).ok())
                                 .and_then(|h| u32::from_str_radix(h, 16).ok())
-                                .ok_or("bad \\u escape")?;
+                                .ok_or_else(|| perr("bad \\u escape"))?;
                             self.i += 4;
                             out.push(char::from_u32(hex).unwrap_or('\u{FFFD}'));
                         }
-                        _ => return Err(format!("bad escape '\\{}'", e as char)),
+                        _ => return Err(perr(format!("bad escape '\\{}'", e as char))),
                     }
                 }
                 _ => out.push(c as char),
@@ -171,7 +178,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json, SpeedError> {
         self.eat(b'[')?;
         let mut v = Vec::new();
         if self.peek()? == b']' {
@@ -186,12 +193,12 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(v));
                 }
-                c => return Err(format!("expected , or ] got '{}'", c as char)),
+                c => return Err(perr(format!("expected , or ] got '{}'", c as char))),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json, SpeedError> {
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         if self.peek()? == b'}' {
@@ -209,7 +216,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                c => return Err(format!("expected , or }} got '{}'", c as char)),
+                c => return Err(perr(format!("expected , or }} got '{}'", c as char))),
             }
         }
     }

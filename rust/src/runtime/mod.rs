@@ -14,9 +14,15 @@ pub mod json;
 pub use artifacts::{Artifact, Manifest};
 pub use golden::{golden_check, golden_check_all, GoldenReport};
 
-use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+
+use crate::error::{Result, SpeedError};
+
+/// Shorthand: an artifact-class [`SpeedError`].
+pub(crate) fn aerr(m: impl Into<String>) -> SpeedError {
+    SpeedError::Artifact(m.into())
+}
 
 /// A PJRT engine holding the CPU client and a compiled-executable cache —
 /// one compiled executable per model variant, loaded once and reused on
@@ -33,7 +39,7 @@ impl Engine {
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| aerr(format!("PJRT: {e:?}")))?;
         Ok(Engine { client, dir, manifest, cache: HashMap::new() })
     }
 
@@ -47,17 +53,17 @@ impl Engine {
             let art = self
                 .manifest
                 .artifact(name)
-                .with_context(|| format!("unknown artifact '{name}'"))?;
+                .ok_or_else(|| aerr(format!("unknown artifact '{name}'")))?;
             let path = self.dir.join(&art.hlo_file);
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("bad path")?,
+                path.to_str().ok_or_else(|| aerr("bad path"))?,
             )
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            .map_err(|e| aerr(format!("parse {}: {e:?}", path.display())))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                .map_err(|e| aerr(format!("compile {name}: {e:?}")))?;
             self.cache.insert(name.to_string(), exe);
         }
         Ok(&self.cache[name])
@@ -69,39 +75,39 @@ impl Engine {
         let art = self
             .manifest
             .artifact(name)
-            .with_context(|| format!("unknown artifact '{name}'"))?
+            .ok_or_else(|| aerr(format!("unknown artifact '{name}'")))?
             .clone();
         if inputs.len() != art.input_shapes.len() {
-            return Err(anyhow!(
+            return Err(aerr(format!(
                 "{name}: expected {} inputs, got {}",
                 art.input_shapes.len(),
                 inputs.len()
-            ));
+            )));
         }
         let mut literals = Vec::with_capacity(inputs.len());
         for (i, (data, shape)) in inputs.iter().zip(&art.input_shapes).enumerate() {
             let n: i64 = shape.iter().product();
             if n as usize != data.len() {
-                return Err(anyhow!(
+                return Err(aerr(format!(
                     "{name}: input {i} has {} elements, shape {:?} wants {n}",
                     data.len(),
                     shape
-                ));
+                )));
             }
             let lit = xla::Literal::vec1(data)
                 .reshape(shape)
-                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+                .map_err(|e| aerr(format!("reshape input {i}: {e:?}")))?;
             literals.push(lit);
         }
         let exe = self.load(name)?;
         let result = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .map_err(|e| aerr(format!("execute {name}: {e:?}")))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+            .map_err(|e| aerr(format!("sync {name}: {e:?}")))?;
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
-        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+        let out = result.to_tuple1().map_err(|e| aerr(format!("untuple {name}: {e:?}")))?;
+        out.to_vec::<i32>().map_err(|e| aerr(format!("to_vec {name}: {e:?}")))
     }
 
     /// Number of compiled executables currently cached.

@@ -76,6 +76,15 @@ impl ExtMem {
         self.data.len()
     }
 
+    /// Grow the memory to at least `bytes` (contents and traffic counters
+    /// are preserved; shrinking is never performed — live layouts assume
+    /// their regions stay mapped).
+    pub fn grow(&mut self, bytes: usize) {
+        if bytes > self.data.len() {
+            self.data.resize(bytes, 0);
+        }
+    }
+
     /// Counted read of a byte range.
     pub fn read(&mut self, addr: u64, len: usize, class: TrafficClass) -> &[u8] {
         self.traffic.add_read(class, len as u64);

@@ -153,6 +153,13 @@ impl Processor {
         self.plan.as_ref()
     }
 
+    /// Grow external memory to at least `bytes`, preserving contents and
+    /// warm pipeline/control state (the engine's execute-many path sizes
+    /// memory up lazily as larger operators arrive).
+    pub fn grow_memory(&mut self, bytes: usize) {
+        self.mem.grow(bytes);
+    }
+
     fn xreg(&self, r: u8) -> i64 {
         if r == 0 {
             0
@@ -166,6 +173,7 @@ impl Processor {
     /// network can be executed as a sequence of operator programs.
     pub fn run(&mut self, prog: &[Insn]) -> Result<SimStats, SimError> {
         let start_traffic = self.mem.traffic;
+        let start_switches = self.ctrl.precision_switches;
         let mut run_stats = SimStats::default();
         // Clock at entry: cycles of this run are the advance of the machine
         // clock (last completion), so back-to-back runs telescope correctly.
@@ -178,7 +186,8 @@ impl Processor {
         // Total cycles: last completion + 1 (CO stage), relative to run start.
         run_stats.cycles = (self.last_complete + 1).saturating_sub(run_begin + 1).max(1);
         run_stats.vregs_used = self.vregs_touched.iter().filter(|&&b| b).count() as u32;
-        run_stats.precision_switches = self.ctrl.precision_switches;
+        // Switches performed by *this* run (the ctrl counter is lifetime).
+        run_stats.precision_switches = self.ctrl.precision_switches - start_switches;
         // Traffic delta for this run.
         let t = self.mem.traffic;
         run_stats.traffic.input_read = t.input_read - start_traffic.input_read;

@@ -1,0 +1,123 @@
+//! Integration: the Engine/Session execution API — compiled-program
+//! caching, precision-switch elision, typed errors, and parity with the
+//! one-shot coordinator path.
+
+use speed_rvv::compiler::MemLayout;
+use speed_rvv::coordinator::{mem_requirement, run_model, Policy};
+use speed_rvv::engine::Engine;
+use speed_rvv::isa::StrategyKind;
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::models::zoo::{model_by_name, Model};
+use speed_rvv::report::fig12::downscale;
+use speed_rvv::{Precision, SpeedConfig, SpeedError};
+
+/// Quick-mode copy of a zoo model (1/4-scale feature maps).
+fn downscaled(name: &str) -> Model {
+    downscale(&model_by_name(name).unwrap(), 4)
+}
+
+#[test]
+fn serving_loop_compiles_each_layer_exactly_once() {
+    // The acceptance scenario: a model served repeatedly through one
+    // engine compiles every (op, strategy, precision) program exactly once.
+    let model = downscaled("mobilenetv2");
+    let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+    let mut session = engine.session();
+    let first = session.run_model(&model, Precision::Int8).unwrap();
+    drop(session);
+    let misses_after_first = engine.cache_stats().misses;
+    let programs_after_first = engine.compiled_programs();
+    assert!(misses_after_first > 0);
+
+    // Five more "requests" for the same network.
+    let mut session = engine.session();
+    for _ in 0..5 {
+        let r = session.run_model(&model, Precision::Int8).unwrap();
+        // Cached replays stream the identical program: identical work and
+        // traffic. (Cycles may differ by pipeline overlap at the pass
+        // boundary, so they are not compared bit-exactly.)
+        assert_eq!(r.total.macs, first.total.macs);
+        assert_eq!(r.total.traffic, first.total.traffic);
+        assert_eq!(r.total.insns_total, first.total.insns_total);
+    }
+    drop(session);
+    let stats = engine.cache_stats();
+    assert_eq!(stats.misses, misses_after_first, "zero recompilations while serving");
+    assert_eq!(engine.compiled_programs(), programs_after_first);
+    assert_eq!(stats.hits, 5 * misses_after_first, "every layer of every rerun was a hit");
+    assert!(stats.hit_rate() > 0.8);
+}
+
+#[test]
+fn precision_switches_are_elided_within_a_precision() {
+    let model = downscaled("resnet18");
+    let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+    let mut session = engine.session();
+    // Datapath resets to INT8; an INT8 pass performs zero switches.
+    session.run_model(&model, Precision::Int8).unwrap();
+    assert_eq!(session.precision_switches(), 0);
+    // 16-bit pass: one switch at the first layer, none after.
+    session.run_model(&model, Precision::Int16).unwrap();
+    assert_eq!(session.precision_switches(), 1);
+    // Back-to-back 16-bit pass: still one.
+    session.run_model(&model, Precision::Int16).unwrap();
+    assert_eq!(session.precision_switches(), 1);
+    // Per-layer stats carry the same information.
+    let r = session.run_model(&model, Precision::Int4).unwrap();
+    let layer_switches: u64 = r.layers.iter().map(|l| l.stats.precision_switches).sum();
+    assert_eq!(layer_switches, 1, "only the first INT4 layer switches");
+    assert_eq!(r.total.precision_switches, 1);
+}
+
+#[test]
+fn engine_path_matches_one_shot_coordinator() {
+    let model = downscaled("vit_tiny");
+    let cfg = SpeedConfig::reference();
+    for prec in [Precision::Int16, Precision::Int8] {
+        let legacy = run_model(&model, prec, &cfg, Policy::Mixed).unwrap();
+        let mut engine = Engine::with_memory(cfg, mem_requirement(&model)).unwrap();
+        let fresh = engine.session().run_model(&model, prec).unwrap();
+        assert_eq!(fresh.total.cycles, legacy.total.cycles, "{prec}");
+        assert_eq!(fresh.total.traffic, legacy.total.traffic, "{prec}");
+        assert_eq!(fresh.total.insns_total, legacy.total.insns_total, "{prec}");
+    }
+}
+
+#[test]
+fn typed_errors_are_matchable() {
+    // Config class: invalid geometry is rejected before any simulation.
+    let bad_cfg = SpeedConfig { tile_r: 3, ..SpeedConfig::reference() };
+    assert!(matches!(Engine::new(bad_cfg), Err(SpeedError::Config(_))));
+
+    // Compile class: strategy not applicable to the operator kind.
+    let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+    let dw = OpDesc::dwcv(8, 8, 8, 3, 1, 1, Precision::Int8);
+    match engine.session().run_op(&dw, StrategyKind::Cf) {
+        Err(SpeedError::Compile(msg)) => assert!(msg.contains("not applicable"), "{msg}"),
+        other => panic!("expected Compile error, got {other:?}"),
+    }
+
+    // Layout class: operator larger than the provided memory.
+    let big = OpDesc::conv(512, 512, 112, 112, 3, 1, 1, Precision::Int16);
+    match MemLayout::for_op(&big, 1 << 20) {
+        Err(e @ SpeedError::Layout(_)) => {
+            assert_eq!(e.kind(), "layout");
+            assert!(std::error::Error::source(&e).is_none());
+        }
+        other => panic!("expected Layout error, got {other:?}"),
+    }
+}
+
+#[test]
+fn mem_requirement_covers_every_benchmark_model() {
+    // The sizing function and the placement function share constants; the
+    // requirement must always admit every operator of the model.
+    for name in speed_rvv::models::zoo::MODELS {
+        let m = model_by_name(name).unwrap();
+        let need = mem_requirement(&m);
+        for op in &m.ops {
+            assert!(MemLayout::for_op(op, need).is_ok(), "{name} {op:?}");
+            assert!(MemLayout::required_bytes(op) <= need as u64, "{name} {op:?}");
+        }
+    }
+}
