@@ -1,20 +1,22 @@
 //! Bench: the simulator hot path itself (the L3 performance deliverable).
 //!
 //! Measures simulated-stages-per-second on a large CONV3×3 stream — the
-//! metric the EXPERIMENTS.md §Perf log tracks — plus instruction-stream
-//! generation throughput and the PJRT execute path when artifacts exist.
+//! metric `speed-bench` records into `BENCH_sim.json` — in both execution
+//! modes (exact per-instruction stepping vs the stream-run batch fast
+//! path), plus instruction-stream generation throughput and the PJRT
+//! execute path when artifacts exist.
 
 use std::time::Instant;
 
-use speed_rvv::compiler::{execute_op, summarize_op, MemLayout};
-use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::bench::{hotpath_op, measure_hotpath};
+use speed_rvv::compiler::{summarize_op, MemLayout};
+use speed_rvv::config::SpeedConfig;
 use speed_rvv::isa::StrategyKind;
-use speed_rvv::models::ops::OpDesc;
-use speed_rvv::sim::Processor;
+use speed_rvv::sim::ExecMode;
 
 fn main() {
     let cfg = SpeedConfig::reference();
-    let op = OpDesc::conv(64, 64, 56, 56, 3, 1, 1, Precision::Int16);
+    let op = hotpath_op(false);
     let layout = MemLayout::for_op(&op, 1 << 26).unwrap();
 
     // --- instruction-stream generation only (codegen throughput) --------
@@ -33,24 +35,17 @@ fn main() {
         s.total_insns as f64 / gen_per / 1e6
     );
 
-    // --- full simulation (codegen + scoreboard + traffic) ---------------
-    let t0 = Instant::now();
-    let mut stats = None;
-    for _ in 0..reps {
-        let mut p = Processor::new(cfg, 1 << 26);
-        let (st, _) = execute_op(&mut p, &op, StrategyKind::Ffcs, layout, false).unwrap();
-        stats = Some(st);
+    // --- full simulation, both execution modes ---------------------------
+    for (label, mode) in [("exact", ExecMode::Exact), ("batch", ExecMode::Batch)] {
+        let (wall, stages) = measure_hotpath(&op, mode, 3).unwrap();
+        println!(
+            "simulate[{label}]: {:.1} ms for {} stages ({:.2} M stages/s, {:.1} M insns/s)",
+            wall * 1e3,
+            stages,
+            stages as f64 / wall / 1e6,
+            s.total_insns as f64 / wall / 1e6
+        );
     }
-    let st = stats.unwrap();
-    let sim_per = t0.elapsed().as_secs_f64() / reps as f64;
-    println!(
-        "simulate: {:.1} ms for {} cycles / {} stages ({:.1} M insns/s, {:.1} M simcycles/s)",
-        sim_per * 1e3,
-        st.cycles,
-        s.total_stages,
-        s.total_insns as f64 / sim_per / 1e6,
-        st.cycles as f64 / sim_per / 1e6
-    );
 
     // --- PJRT execute hot path (if artifacts built) ----------------------
     if let Ok(mut engine) = speed_rvv::runtime::Engine::open("artifacts") {

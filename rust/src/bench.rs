@@ -1,0 +1,571 @@
+//! `speed-bench` — the machine-readable performance harness.
+//!
+//! The paper's headline numbers are throughput claims, so the reproduction
+//! tracks its own throughput the same way: this module runs the Fig. 11
+//! operator sweep, the Fig. 12 model sweep, and the simulator hot-path
+//! micro-bench (`sim_hotpath`) through one warm [`Engine`], and emits a
+//! machine-readable `BENCH_sim.json` with host-side throughput (ops/s,
+//! simulated-stages/s), per-bench wall time, and program-cache hit rates.
+//!
+//! The hot-path bench runs twice — [`ExecMode::Exact`] (per-instruction
+//! stepping) and [`ExecMode::Batch`] (the stream-run fast path) — so every
+//! `BENCH_sim.json` records both numbers and the speedup between them.
+//!
+//! CI gates on a committed `bench/baseline.json`: every metric listed
+//! there is **higher-is-better**, and a measured value below
+//! `baseline × (1 − tolerance)` fails the run ([`check_baseline`]).
+
+use std::time::Instant;
+
+use crate::config::{Precision, SpeedConfig};
+use crate::engine::Engine;
+use crate::error::{Result, SpeedError};
+use crate::isa::StrategyKind;
+use crate::models::zoo::{model_by_name, MODELS};
+use crate::models::OpDesc;
+use crate::runtime::json::{parse, Json};
+use crate::sim::ExecMode;
+
+/// What to run and how hard.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOptions {
+    /// Downscaled models, fewer operator sizes, fewer hot-path reps —
+    /// the CI `bench-smoke` configuration.
+    pub quick: bool,
+    /// Skip the batch fast path everywhere (escape hatch): the hot-path
+    /// section then reports exact-mode numbers for both entries.
+    pub exact_only: bool,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { quick: true, exact_only: false }
+    }
+}
+
+/// One timed benchmark entry (operator or model × precision).
+#[derive(Debug, Clone)]
+pub struct BenchEntry {
+    pub name: String,
+    pub prec: Precision,
+    pub strategy: String,
+    pub wall_s: f64,
+    pub sim_cycles: u64,
+    pub macs: u64,
+    /// Simulated throughput of the modeled hardware (GOPS at the
+    /// reference clock) — the paper-facing number.
+    pub gops_simulated: f64,
+    /// Host-side simulation throughput: simulated MAC-ops per second of
+    /// wall time — the reproduction-facing number this harness tracks.
+    pub mops_per_s_host: f64,
+    pub cache_hit_rate: f64,
+}
+
+/// The `sim_hotpath` section: one stage-heavy CONV3×3 stream measured in
+/// both execution modes.
+#[derive(Debug, Clone)]
+pub struct HotpathResult {
+    pub op: String,
+    pub stages: u64,
+    pub exact_wall_s: f64,
+    pub fast_wall_s: f64,
+    pub exact_stages_per_s: f64,
+    pub fast_stages_per_s: f64,
+    /// fast / exact simulated-stages-per-second.
+    pub speedup: f64,
+}
+
+/// Everything one `speed-bench` invocation measured.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub quick: bool,
+    /// The run skipped the batch fast path (`--exact` / `SPEED_EXACT`):
+    /// the hotpath "fast" leg is exact-mode data, so the fast-path metrics
+    /// are not emitted (and not gated).
+    pub exact_only: bool,
+    pub hotpath: HotpathResult,
+    pub operators: Vec<BenchEntry>,
+    pub models: Vec<BenchEntry>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub total_wall_s: f64,
+}
+
+impl BenchReport {
+    /// The flat, gateable metric map (all higher-is-better).
+    pub fn metrics(&self) -> Vec<(String, f64)> {
+        let op_wall: f64 = self.operators.iter().map(|e| e.wall_s).sum();
+        let op_macs: u64 = self.operators.iter().map(|e| e.macs).sum();
+        let model_wall: f64 = self.models.iter().map(|e| e.wall_s).sum();
+        let model_macs: u64 = self.models.iter().map(|e| e.macs).sum();
+        let lookups = self.cache_hits + self.cache_misses;
+        let mut m =
+            vec![("sim_hotpath_exact_stages_per_s".into(), self.hotpath.exact_stages_per_s)];
+        if !self.exact_only {
+            m.push(("sim_hotpath_fast_stages_per_s".into(), self.hotpath.fast_stages_per_s));
+            m.push(("sim_hotpath_speedup".into(), self.hotpath.speedup));
+        }
+        if op_wall > 0.0 {
+            m.push(("operators_host_mops_per_s".into(), 2.0 * op_macs as f64 / op_wall / 1e6));
+        }
+        if model_wall > 0.0 {
+            m.push(("models_host_mops_per_s".into(), 2.0 * model_macs as f64 / model_wall / 1e6));
+        }
+        if lookups > 0 {
+            m.push(("engine_cache_hit_rate".into(), self.cache_hits as f64 / lookups as f64));
+        }
+        m
+    }
+
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics().into_iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// Serialize as the `BENCH_sim.json` document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": 1,\n  \"bench\": \"speed-bench\",\n");
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"exact_only\": {},\n", self.exact_only));
+        s.push_str("  \"sim_hotpath\": {\n");
+        s.push_str(&format!("    \"op\": {},\n", jstr(&self.hotpath.op)));
+        s.push_str(&format!("    \"stages\": {},\n", self.hotpath.stages));
+        s.push_str(&format!(
+            "    \"exact\": {{ \"wall_s\": {}, \"stages_per_s\": {} }},\n",
+            jf(self.hotpath.exact_wall_s),
+            jf(self.hotpath.exact_stages_per_s)
+        ));
+        s.push_str(&format!(
+            "    \"fast\": {{ \"wall_s\": {}, \"stages_per_s\": {} }},\n",
+            jf(self.hotpath.fast_wall_s),
+            jf(self.hotpath.fast_stages_per_s)
+        ));
+        s.push_str(&format!("    \"speedup\": {}\n  }},\n", jf(self.hotpath.speedup)));
+        for (key, entries) in [("operators", &self.operators), ("models", &self.models)] {
+            s.push_str(&format!("  \"{key}\": [\n"));
+            for (i, e) in entries.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {{ \"name\": {}, \"prec\": {}, \"strategy\": {}, \"wall_s\": {}, \
+                     \"sim_cycles\": {}, \"macs\": {}, \"gops_simulated\": {}, \
+                     \"mops_per_s_host\": {}, \"cache_hit_rate\": {} }}{}\n",
+                    jstr(&e.name),
+                    jstr(&e.prec.to_string()),
+                    jstr(&e.strategy),
+                    jf(e.wall_s),
+                    e.sim_cycles,
+                    e.macs,
+                    jf(e.gops_simulated),
+                    jf(e.mops_per_s_host),
+                    jf(e.cache_hit_rate),
+                    if i + 1 < entries.len() { "," } else { "" }
+                ));
+            }
+            s.push_str("  ],\n");
+        }
+        s.push_str(&format!(
+            "  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n",
+            self.cache_hits, self.cache_misses
+        ));
+        s.push_str("  \"metrics\": {\n");
+        let metrics = self.metrics();
+        for (i, (n, v)) in metrics.iter().enumerate() {
+            s.push_str(&format!(
+                "    {}: {}{}\n",
+                jstr(n),
+                jf(*v),
+                if i + 1 < metrics.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  },\n");
+        s.push_str(&format!("  \"total_wall_s\": {}\n}}\n", jf(self.total_wall_s)));
+        s
+    }
+
+    /// A `bench/baseline.json` seeded from this run's metrics, derated by
+    /// `headroom` (e.g. 0.5 commits floors at half the measured values so
+    /// slower CI runners don't flap).
+    pub fn baseline_json(&self, tolerance: f64, headroom: f64) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"tolerance\": {},\n", jf(tolerance)));
+        s.push_str("  \"metrics\": {\n");
+        let metrics = self.metrics();
+        for (i, (n, v)) in metrics.iter().enumerate() {
+            s.push_str(&format!(
+                "    {}: {}{}\n",
+                jstr(n),
+                jf(v * headroom),
+                if i + 1 < metrics.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Human-readable one-screen summary.
+    pub fn summary_text(&self) -> String {
+        let h = &self.hotpath;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "sim_hotpath ({}): {} stages\n  exact: {:>10.0} stages/s ({:.1} ms)\n  \
+             fast:  {:>10.0} stages/s ({:.1} ms)  => {:.2}x\n",
+            h.op,
+            h.stages,
+            h.exact_stages_per_s,
+            h.exact_wall_s * 1e3,
+            h.fast_stages_per_s,
+            h.fast_wall_s * 1e3,
+            h.speedup
+        ));
+        for (title, entries) in [("operators", &self.operators), ("models", &self.models)] {
+            s.push_str(&format!("{title}: {} benches\n", entries.len()));
+            for e in entries {
+                s.push_str(&format!(
+                    "  {:32} {:5} {:5} {:8.1} ms  {:8.1} Mops/s (sim {:.1} GOPS)\n",
+                    e.name,
+                    e.prec.to_string(),
+                    e.strategy,
+                    e.wall_s * 1e3,
+                    e.mops_per_s_host,
+                    e.gops_simulated
+                ));
+            }
+        }
+        s.push_str(&format!(
+            "program cache: {} hits / {} misses; total wall {:.2} s\n",
+            self.cache_hits, self.cache_misses, self.total_wall_s
+        ));
+        s
+    }
+}
+
+fn jf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0".into()
+    }
+}
+
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// The `sim_hotpath` workload: the stage-heavy CONV3×3 stream the
+/// EXPERIMENTS perf log has always tracked.
+pub fn hotpath_op(quick: bool) -> OpDesc {
+    if quick {
+        OpDesc::conv(32, 32, 28, 28, 3, 1, 1, Precision::Int16)
+    } else {
+        OpDesc::conv(64, 64, 56, 56, 3, 1, 1, Precision::Int16)
+    }
+}
+
+/// Measure simulated-stages-per-second of `op` under one execution mode on
+/// a warm engine (the program compiles once; timed reps replay the cached
+/// stream). Returns (wall seconds per rep, total stages per rep).
+pub fn measure_hotpath(op: &OpDesc, mode: ExecMode, reps: u32) -> Result<(f64, u64)> {
+    let mut engine = Engine::new(SpeedConfig::reference())?;
+    engine.set_exec_mode(mode);
+    // Warm: compile + first execution.
+    let (_, prog) = engine.run_op(op, StrategyKind::Ffcs, false)?;
+    let stages = prog.summary().total_stages;
+    let reps = reps.max(1);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        engine.run_op(op, StrategyKind::Ffcs, false)?;
+    }
+    Ok((t0.elapsed().as_secs_f64() / reps as f64, stages))
+}
+
+fn operator_cases(quick: bool) -> Vec<(&'static str, OpDesc)> {
+    let sizes: &[u32] = if quick { &[8, 16] } else { &[8, 16, 32, 56] };
+    let mut out = Vec::new();
+    for &s in sizes {
+        out.push(("pwcv_64x64", OpDesc::pwcv(64, 64, s, s, Precision::Int16)));
+        out.push(("conv3x3_32x32", OpDesc::conv(32, 32, s, s, 3, 1, 1, Precision::Int16)));
+        out.push((
+            "dwcv3x3s2_32",
+            OpDesc::dwcv(32, s.max(3), s.max(3), 3, 2, 1, Precision::Int16),
+        ));
+        out.push(("mm_sxsxs", OpDesc::mm(s, s, s, Precision::Int16)));
+    }
+    out
+}
+
+/// Run the full harness. One warm [`Engine`] serves the whole operator
+/// sweep (each program compiles on its first pass and replays from cache
+/// on the timed pass); each model gets its own engine so per-model cache
+/// hit rates stay interpretable.
+pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
+    let t_all = Instant::now();
+    let cfg = SpeedConfig::reference();
+    // `SPEED_EXACT=1` is the documented global escape hatch — honor it
+    // here too (Processor::new reads it, but the harness sets modes
+    // explicitly and would otherwise override it).
+    let exact_only = opts.exact_only || std::env::var_os("SPEED_EXACT").is_some();
+    let mode = if exact_only { ExecMode::Exact } else { ExecMode::Batch };
+
+    // ---- sim_hotpath: exact vs fast ----
+    let op = hotpath_op(opts.quick);
+    let reps = if opts.quick { 2 } else { 3 };
+    let (exact_wall, stages) = measure_hotpath(&op, ExecMode::Exact, reps)?;
+    let (fast_wall, _) = measure_hotpath(&op, mode, reps)?;
+    let hotpath = HotpathResult {
+        op: format!(
+            "conv3x3 {}x{}x{}x{} INT16 ffcs",
+            op.c, op.f, op.h, op.w
+        ),
+        stages,
+        exact_wall_s: exact_wall,
+        fast_wall_s: fast_wall,
+        exact_stages_per_s: stages as f64 / exact_wall.max(1e-12),
+        fast_stages_per_s: stages as f64 / fast_wall.max(1e-12),
+        speedup: exact_wall / fast_wall.max(1e-12),
+    };
+
+    // ---- Fig. 11-style operator sweep (one warm engine) ----
+    let mut engine = Engine::new(cfg)?;
+    engine.set_exec_mode(mode);
+    let mut operators = Vec::new();
+    let cases = operator_cases(opts.quick);
+    for prec in Precision::ALL {
+        for (name, base) in &cases {
+            let op = OpDesc { prec, ..*base };
+            let strat = op.preferred_strategy();
+            // Warm pass compiles; the timed pass replays the cached program.
+            engine.run_op(&op, strat, false)?;
+            let t0 = Instant::now();
+            let (st, _) = engine.run_op(&op, strat, false)?;
+            let wall = t0.elapsed().as_secs_f64();
+            operators.push(BenchEntry {
+                name: format!("{name}_{}x{}", op.h.max(op.m), op.w.max(op.k)),
+                prec,
+                strategy: strat.to_string(),
+                wall_s: wall,
+                sim_cycles: st.cycles,
+                macs: st.macs,
+                gops_simulated: st.gops(cfg.freq_ghz),
+                mops_per_s_host: 2.0 * st.macs as f64 / wall.max(1e-12) / 1e6,
+                cache_hit_rate: engine.cache_stats().hit_rate(),
+            });
+        }
+    }
+    let cache = engine.cache_stats();
+
+    // ---- Fig. 12-style model sweep ----
+    let names: Vec<&str> = if opts.quick {
+        vec!["mobilenetv2", "resnet18", "vit_tiny"]
+    } else {
+        MODELS.to_vec()
+    };
+    let precs: &[Precision] =
+        if opts.quick { &[Precision::Int8] } else { &Precision::ALL };
+    let mut models = Vec::new();
+    for name in names {
+        let mut model = model_by_name(name)
+            .ok_or_else(|| SpeedError::Bench(format!("unknown model '{name}'")))?;
+        if opts.quick {
+            model = crate::report::fig12::downscale(&model, 4);
+        }
+        let mut engine = Engine::new(cfg)?;
+        engine.set_exec_mode(mode);
+        for &prec in precs {
+            let t0 = Instant::now();
+            let r = engine.session().run_model(&model, prec)?;
+            let wall = t0.elapsed().as_secs_f64();
+            models.push(BenchEntry {
+                name: name.to_string(),
+                prec,
+                strategy: "mixed".into(),
+                wall_s: wall,
+                sim_cycles: r.total.cycles,
+                macs: r.total.macs,
+                gops_simulated: r.total.gops(cfg.freq_ghz),
+                mops_per_s_host: 2.0 * r.total.macs as f64 / wall.max(1e-12) / 1e6,
+                cache_hit_rate: engine.cache_stats().hit_rate(),
+            });
+        }
+    }
+
+    Ok(BenchReport {
+        quick: opts.quick,
+        exact_only,
+        hotpath,
+        operators,
+        models,
+        cache_hits: cache.hits,
+        cache_misses: cache.misses,
+        total_wall_s: t_all.elapsed().as_secs_f64(),
+    })
+}
+
+/// Gate a report against a `bench/baseline.json` document. Every metric in
+/// the baseline is higher-is-better; a measured value below
+/// `baseline × (1 − tolerance)` (or a metric missing from the run) is a
+/// regression and returns [`SpeedError::Bench`].
+///
+/// Tolerance precedence: an explicit `cli_tolerance` (the `--tolerance`
+/// flag) wins over the baseline file's embedded `"tolerance"`, which wins
+/// over the 20% default. Fast-path metrics absent from an `--exact` run
+/// are skipped rather than failed — exact mode exists to diagnose
+/// fast-path regressions, so it cannot itself be gated on them.
+pub fn check_baseline(
+    report: &BenchReport,
+    baseline_src: &str,
+    cli_tolerance: Option<f64>,
+) -> Result<()> {
+    let doc = parse(baseline_src)?;
+    let tol = cli_tolerance
+        .or_else(|| doc.get("tolerance").and_then(Json::as_f64))
+        .unwrap_or(0.2);
+    let metrics = doc
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| SpeedError::Bench("baseline has no \"metrics\" object".into()))?;
+    let mut fails = Vec::new();
+    for (name, v) in metrics {
+        let Some(base) = v.as_f64() else { continue };
+        match report.metric(name) {
+            None if report.exact_only => {} // fast-path metric, exact run
+            None => fails.push(format!("metric '{name}' missing from this run")),
+            Some(got) if got < base * (1.0 - tol) => fails.push(format!(
+                "{name}: measured {got:.3} < floor {:.3} (baseline {base:.3}, tolerance {:.0}%)",
+                base * (1.0 - tol),
+                tol * 100.0
+            )),
+            _ => {}
+        }
+    }
+    if fails.is_empty() {
+        Ok(())
+    } else {
+        Err(SpeedError::Bench(fails.join("; ")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_report() -> BenchReport {
+        BenchReport {
+            quick: true,
+            exact_only: false,
+            hotpath: HotpathResult {
+                op: "conv3x3 test".into(),
+                stages: 1000,
+                exact_wall_s: 0.01,
+                fast_wall_s: 0.002,
+                exact_stages_per_s: 100_000.0,
+                fast_stages_per_s: 500_000.0,
+                speedup: 5.0,
+            },
+            operators: vec![BenchEntry {
+                name: "mm_8x8".into(),
+                prec: Precision::Int8,
+                strategy: "mm".into(),
+                wall_s: 0.001,
+                sim_cycles: 1234,
+                macs: 512,
+                gops_simulated: 10.0,
+                mops_per_s_host: 1.0,
+                cache_hit_rate: 0.5,
+            }],
+            models: vec![],
+            cache_hits: 1,
+            cache_misses: 1,
+            total_wall_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn json_is_parseable_and_carries_metrics() {
+        let r = fake_report();
+        let doc = parse(&r.to_json()).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(1));
+        let m = doc.get("metrics").and_then(Json::as_obj).unwrap();
+        assert_eq!(
+            m.get("sim_hotpath_fast_stages_per_s").and_then(Json::as_f64),
+            Some(500_000.0)
+        );
+        assert!(doc.get("sim_hotpath").is_some());
+        assert_eq!(
+            doc.get("operators").and_then(Json::as_arr).map(|a| a.len()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn baseline_gate_passes_within_tolerance_and_fails_past_it() {
+        let r = fake_report();
+        // Baseline below measured: passes.
+        let ok = r.baseline_json(0.2, 0.5);
+        check_baseline(&r, &ok, None).unwrap();
+        // Baseline far above measured: regression.
+        let bad = r#"{ "tolerance": 0.2,
+            "metrics": { "sim_hotpath_fast_stages_per_s": 10000000.0 } }"#;
+        let err = check_baseline(&r, bad, None).unwrap_err();
+        assert!(matches!(err, SpeedError::Bench(_)), "{err}");
+        assert!(err.to_string().contains("sim_hotpath_fast_stages_per_s"));
+        // Unknown metric in the baseline: reported as missing.
+        let missing = r#"{ "metrics": { "no_such_metric": 1.0 } }"#;
+        assert!(check_baseline(&r, missing, None).is_err());
+        // Within tolerance (measured 500k vs baseline 600k, file tol 20% =>
+        // floor 480k): passes.
+        let close = r#"{ "tolerance": 0.2,
+            "metrics": { "sim_hotpath_fast_stages_per_s": 600000.0 } }"#;
+        check_baseline(&r, close, None).unwrap();
+        // An explicit CLI tolerance overrides the file's: 5% => floor 570k
+        // > measured 500k => regression.
+        assert!(check_baseline(&r, close, Some(0.05)).is_err());
+    }
+
+    #[test]
+    fn exact_only_runs_skip_fastpath_metrics_in_gate() {
+        let mut r = fake_report();
+        r.exact_only = true;
+        // Fast-path metrics are not emitted...
+        assert!(r.metric("sim_hotpath_fast_stages_per_s").is_none());
+        assert!(r.metric("sim_hotpath_speedup").is_none());
+        assert!(r.metric("sim_hotpath_exact_stages_per_s").is_some());
+        // ...and a baseline listing them does not spuriously fail the run.
+        let base = r#"{ "tolerance": 0.2, "metrics": {
+            "sim_hotpath_fast_stages_per_s": 1000000.0,
+            "sim_hotpath_speedup": 2.0,
+            "sim_hotpath_exact_stages_per_s": 50000.0 } }"#;
+        check_baseline(&r, base, None).unwrap();
+    }
+
+    #[test]
+    fn json_string_escaping() {
+        assert_eq!(jstr("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(jf(f64::NAN), "0");
+        assert_eq!(jf(1.5), "1.500000");
+    }
+
+    #[test]
+    fn hotpath_measurement_runs_on_a_tiny_op() {
+        // A tiny stand-in op keeps this test fast while exercising the
+        // warm-engine measurement path end to end in both modes.
+        let op = OpDesc::conv(4, 4, 8, 8, 3, 1, 1, Precision::Int8);
+        let (we, s1) = measure_hotpath(&op, ExecMode::Exact, 1).unwrap();
+        let (wf, s2) = measure_hotpath(&op, ExecMode::Batch, 1).unwrap();
+        assert_eq!(s1, s2);
+        assert!(s1 > 0);
+        assert!(we > 0.0 && wf > 0.0);
+    }
+}

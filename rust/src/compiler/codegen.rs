@@ -3,7 +3,7 @@
 use crate::config::{Precision, SpeedConfig};
 use crate::dataflow::{self, partition_budget, vreg_region};
 use crate::error::SpeedError;
-use crate::isa::{Dim, Insn, LdMode, StrategyKind, Vtype, WidthSel};
+use crate::isa::{Dim, Insn, LdMode, RunKind, Segment, StrategyKind, StreamRun, Vtype, WidthSel};
 use crate::models::ops::{OpDesc, OpKind};
 use crate::sim::OpPlan;
 
@@ -73,11 +73,13 @@ pub struct CodegenSummary {
 }
 
 /// A compiled operator: the plan to install plus the program segments to
-/// run in order.
+/// run in order. Each [`Segment`] carries the emitter's [`StreamRun`]
+/// metadata marking its homogeneous load/tensor/store runs, which the
+/// simulator's batch fast path consumes (`Processor::run_segment`).
 #[derive(Debug, Clone)]
 pub struct CompiledOp {
     pub plan: OpPlan,
-    pub segments: Vec<Vec<Insn>>,
+    pub segments: Vec<Segment>,
     pub summary: CodegenSummary,
 }
 
@@ -103,9 +105,31 @@ const SEG_LIMIT: usize = 8192;
 /// evaluation, where materializing millions of instructions would be
 /// wasteful), or discarded after counting (the sizing pre-pass).
 enum Sink<'a> {
-    Collect(Vec<Vec<Insn>>),
-    Stream(&'a mut dyn FnMut(Vec<Insn>) -> Result<(), SpeedError>),
+    Collect(Vec<Segment>),
+    Stream(&'a mut dyn FnMut(Segment) -> Result<(), SpeedError>),
     CountOnly,
+}
+
+/// A homogeneous stream run the emitter is currently extending.
+struct OpenRun {
+    kind: RunKind,
+    start: usize,
+    len: usize,
+    /// Pattern key: the run's body instruction with its per-item fields
+    /// (destination register / address) normalized — see [`run_key`].
+    key: Insn,
+}
+
+/// Normalize a run body instruction to its pattern key: per-item fields
+/// (destination/source vector register) are zeroed, uniform fields
+/// (mode, width, eew, scalar address register) are kept.
+fn run_key(i: &Insn) -> Insn {
+    match *i {
+        Insn::Vsald { rs1, mode, width, .. } => Insn::Vsald { vd: 0, rs1, mode, width },
+        Insn::Vle { rs1, eew, .. } => Insn::Vle { vd: 0, rs1, eew },
+        Insn::Vse { rs1, eew, .. } => Insn::Vse { vs3: 0, rs1, eew },
+        other => other,
+    }
 }
 
 struct Emitter<'a> {
@@ -118,6 +142,9 @@ struct Emitter<'a> {
     summary: CodegenSummary,
     used: [bool; 32],
     err: Option<SpeedError>,
+    /// Stream runs of the current segment (closed runs, ascending start).
+    runs: Vec<StreamRun>,
+    open_run: Option<OpenRun>,
 }
 
 impl<'a> Emitter<'a> {
@@ -132,15 +159,28 @@ impl<'a> Emitter<'a> {
             summary: CodegenSummary::default(),
             used: [false; 32],
             err: None,
+            runs: Vec::new(),
+            open_run: None,
         }
     }
 
-    fn push(&mut self, i: Insn) {
+    fn count(&mut self, i: &Insn) {
         self.summary.total_insns += 1;
         for r in i.vregs_read().iter().chain(i.vregs_written().iter()) {
             self.used[*r as usize] = true;
         }
-        if matches!(self.sink, Sink::CountOnly) {
+    }
+
+    fn count_only(&self) -> bool {
+        matches!(self.sink, Sink::CountOnly)
+    }
+
+    /// Append an instruction that is not part of a homogeneous run
+    /// (prologue/config code). Breaks any open run.
+    fn push(&mut self, i: Insn) {
+        self.close_run();
+        self.count(&i);
+        if self.count_only() {
             return;
         }
         self.cur.push(i);
@@ -149,13 +189,88 @@ impl<'a> Emitter<'a> {
         }
     }
 
+    /// Append a `(scalar address setup, transfer)` pair, extending the
+    /// open run when the transfer matches its pattern key.
+    fn push_pair(&mut self, kind: RunKind, setup: Insn, body: Insn) {
+        self.count(&setup);
+        self.count(&body);
+        if self.count_only() {
+            return;
+        }
+        if self.cur.len() + 2 > SEG_LIMIT {
+            self.cut();
+        }
+        let key = run_key(&body);
+        let extend =
+            matches!(&self.open_run, Some(r) if r.kind == kind && r.key == key);
+        if !extend {
+            self.close_run();
+            self.open_run = Some(OpenRun { kind, start: self.cur.len(), len: 0, key });
+        }
+        self.cur.push(setup);
+        self.cur.push(body);
+        if let Some(r) = &mut self.open_run {
+            r.len += 2;
+        }
+        if self.cur.len() >= SEG_LIMIT {
+            self.cut();
+        }
+    }
+
+    /// Append one tensor burst, extending a run of identical bursts.
+    fn push_tensor(&mut self, i: Insn) {
+        self.count(&i);
+        if self.count_only() {
+            return;
+        }
+        if self.cur.len() >= SEG_LIMIT {
+            self.cut();
+        }
+        let extend =
+            matches!(&self.open_run, Some(r) if r.kind == RunKind::Tensor && r.key == i);
+        if !extend {
+            self.close_run();
+            self.open_run =
+                Some(OpenRun { kind: RunKind::Tensor, start: self.cur.len(), len: 0, key: i });
+        }
+        self.cur.push(i);
+        if let Some(r) = &mut self.open_run {
+            r.len += 1;
+        }
+        if self.cur.len() >= SEG_LIMIT {
+            self.cut();
+        }
+    }
+
+    /// Close the open run, recording it when long enough to be worth a
+    /// batched dispatch.
+    fn close_run(&mut self) {
+        if let Some(r) = self.open_run.take() {
+            let keep = match r.kind {
+                RunKind::Tensor => r.len >= 2,
+                _ => r.len >= 4,
+            };
+            if keep {
+                self.runs.push(StreamRun {
+                    start: r.start as u32,
+                    len: r.len as u32,
+                    kind: r.kind,
+                });
+            }
+        }
+    }
+
     /// Close the current segment (hazards still carry across segments —
     /// the simulator's clock persists between runs).
     fn cut(&mut self) {
+        self.close_run();
         if self.cur.is_empty() || self.err.is_some() {
             return;
         }
-        let seg = std::mem::take(&mut self.cur);
+        let seg = Segment {
+            insns: std::mem::take(&mut self.cur),
+            runs: std::mem::take(&mut self.runs),
+        };
         match &mut self.sink {
             Sink::Collect(v) => v.push(seg),
             Sink::Stream(f) => {
@@ -233,11 +348,14 @@ impl<'a> Emitter<'a> {
             let n = per.min(elems - off) as u32;
             self.set_vl(n, self.prec.bits().max(8));
             let a = addr + self.prec.bytes_for(off);
-            self.li(X_IN, a as i64);
             let flip = if is_input { &mut self.in_flip } else { &mut self.w_flip };
             let vd = regs[*flip % regs.len()];
             *flip += 1;
-            self.push(Insn::Vsald { vd, rs1: X_IN, mode, width: WidthSel::FromCfg });
+            self.push_pair(
+                RunKind::Load,
+                Insn::Addi { rd: X_IN, rs1: 0, imm: (a as i64) as i32 },
+                Insn::Vsald { vd, rs1: X_IN, mode, width: WidthSel::FromCfg },
+            );
             self.summary.vsald += 1;
             off += n as u64;
         }
@@ -266,7 +384,7 @@ impl<'a> Emitter<'a> {
             } else {
                 Insn::Vsam { vd: V_OUT, vs1: vin, vs2: vw, stages: burst }
             };
-            self.push(insn);
+            self.push_tensor(insn);
             self.summary.vsam += 1;
             stages -= burst as u64;
         }
@@ -275,28 +393,37 @@ impl<'a> Emitter<'a> {
     /// Store one output row of `elems` i32 accumulators at `addr`.
     fn store_row(&mut self, addr: u64, elems: u64) {
         self.set_vl(elems as u32, 32);
-        self.li(X_OUT, addr as i64);
-        self.push(Insn::Vse { vs3: V_OUT, rs1: X_OUT, eew: 32 });
+        self.push_pair(
+            RunKind::Store,
+            Insn::Addi { rd: X_OUT, rs1: 0, imm: (addr as i64) as i32 },
+            Insn::Vse { vs3: V_OUT, rs1: X_OUT, eew: 32 },
+        );
         self.summary.vse += 1;
     }
 
     /// Spill `elems` i32 partials to the partial region at `addr`.
     fn spill_partial(&mut self, addr: u64, elems: u64) {
         self.set_vl(elems as u32, 32);
-        self.li(X_PART, addr as i64);
-        self.push(Insn::Vse { vs3: V_PART, rs1: X_PART, eew: 32 });
+        self.push_pair(
+            RunKind::Store,
+            Insn::Addi { rd: X_PART, rs1: 0, imm: (addr as i64) as i32 },
+            Insn::Vse { vs3: V_PART, rs1: X_PART, eew: 32 },
+        );
         self.summary.vse += 1;
     }
 
     /// Reload `elems` i32 partials from the partial region.
     fn reload_partial(&mut self, addr: u64, elems: u64) {
         self.set_vl(elems as u32, 32);
-        self.li(X_PART, addr as i64);
-        self.push(Insn::Vle { vd: V_PART, rs1: X_PART, eew: 32 });
+        self.push_pair(
+            RunKind::Load,
+            Insn::Addi { rd: X_PART, rs1: 0, imm: (addr as i64) as i32 },
+            Insn::Vle { vd: V_PART, rs1: X_PART, eew: 32 },
+        );
         self.summary.vle += 1;
     }
 
-    fn finish(mut self) -> Result<(Vec<Vec<Insn>>, CodegenSummary), SpeedError> {
+    fn finish(mut self) -> Result<(Vec<Segment>, CodegenSummary), SpeedError> {
         self.cut();
         if let Some(e) = self.err {
             return Err(e);
@@ -316,7 +443,7 @@ fn generate<'a>(
     strat: StrategyKind,
     layout: &MemLayout,
     sink: Sink<'a>,
-) -> Result<(Vec<Vec<Insn>>, CodegenSummary), SpeedError> {
+) -> Result<(Vec<Segment>, CodegenSummary), SpeedError> {
     let mut e = Emitter::new(op.prec, sink);
     // Prologue: configuration-setting instructions (Fig. 9 step ①).
     e.vsacfg(op.ksize.max(1), strat);
@@ -392,13 +519,14 @@ pub fn summarize_op(
 
 /// Generate the instruction stream segment-by-segment into `feed` without
 /// materializing it (the execute-many path of a cached program whose
-/// stream is too large to keep resident). Returns the emission summary.
+/// stream is too large to keep resident). Each fed [`Segment`] carries its
+/// stream-run metadata. Returns the emission summary.
 pub fn stream_op(
     op: &OpDesc,
     cfg: &SpeedConfig,
     strat: StrategyKind,
     layout: &MemLayout,
-    feed: &mut dyn FnMut(Vec<Insn>) -> Result<(), SpeedError>,
+    feed: &mut dyn FnMut(Segment) -> Result<(), SpeedError>,
 ) -> Result<CodegenSummary, SpeedError> {
     check(op, cfg, strat)?;
     let (_, summary) = generate(op, cfg, strat, layout, Sink::Stream(feed))?;
@@ -430,8 +558,8 @@ pub fn execute_op(
     });
     let mut stats = crate::sim::SimStats::default();
     {
-        let mut feed = |seg: Vec<Insn>| -> Result<(), SpeedError> {
-            let st = proc.run(&seg)?;
+        let mut feed = |seg: Segment| -> Result<(), SpeedError> {
+            let st = proc.run_segment(&seg)?;
             stats.merge(&st);
             Ok(())
         };
@@ -731,7 +859,7 @@ mod tests {
         p.set_plan(compiled.plan);
         let mut total = crate::sim::SimStats::default();
         for seg in &compiled.segments {
-            let st = p.run(seg).unwrap();
+            let st = p.run_segment(seg).unwrap();
             total.merge(&st);
         }
         let out = p.mem.inspect_i32(layout.out_addr, op.output_elems() as usize);
@@ -820,7 +948,7 @@ mod tests {
             functional: true,
         };
         let rows = crate::sim::mptu::compute_output_rows(&mem, &plan);
-        let want: Vec<i32> = rows.into_iter().flatten().collect();
+        let want = rows.into_flat();
         assert_eq!(out, want);
         assert_eq!(st.macs, op.total_macs());
     }
@@ -852,6 +980,55 @@ mod tests {
         assert!(c.summary.vsam > 0 && c.summary.vsald > 0 && c.summary.vse > 0);
         // SPEED's register economy (Fig. 2): small vreg footprint.
         assert!(c.summary.vregs_used <= 8, "{}", c.summary.vregs_used);
+    }
+
+    #[test]
+    fn stream_runs_are_well_formed_and_cover_hot_insns() {
+        use crate::isa::RunKind;
+        let cfg = SpeedConfig::reference();
+        for (op, strat) in [
+            (OpDesc::mm(16, 48, 16, Precision::Int8), StrategyKind::Mm),
+            (OpDesc::conv(8, 8, 12, 12, 3, 1, 1, Precision::Int16), StrategyKind::Ffcs),
+            (OpDesc::pwcv(16, 16, 10, 10, Precision::Int4), StrategyKind::Cf),
+        ] {
+            let layout = MemLayout::for_op(&op, 1 << 24).unwrap();
+            let c = compile_op(&op, &cfg, strat, layout, false).unwrap();
+            let mut covered = 0u64;
+            for seg in &c.segments {
+                let mut last_end = 0u32;
+                for r in &seg.runs {
+                    assert!(r.start >= last_end, "overlapping runs");
+                    assert!((r.start + r.len) as usize <= seg.len(), "run past segment");
+                    last_end = r.start + r.len;
+                    covered += r.len as u64;
+                    match r.kind {
+                        RunKind::Tensor => {
+                            let first = seg.insns[r.start as usize];
+                            assert!(seg.insns
+                                [r.start as usize..(r.start + r.len) as usize]
+                                .iter()
+                                .all(|i| *i == first));
+                        }
+                        RunKind::Load | RunKind::Store => {
+                            assert_eq!(r.len % 2, 0, "pair runs have even length");
+                        }
+                    }
+                }
+            }
+            // Stage-heavy conv streams are dominated by VSAM burst chains
+            // and row-drain sequences — the bulk must be marked as runs.
+            // (MM interleaves single B-tile loads with single VSAMs, so
+            // only its store sequences form runs; no coverage bound there.)
+            if strat == StrategyKind::Ffcs {
+                assert!(
+                    covered * 2 >= c.summary.total_insns,
+                    "{op:?} {strat}: only {covered} of {} insns in runs",
+                    c.summary.total_insns
+                );
+            } else {
+                assert!(covered > 0, "{op:?} {strat}: no runs marked");
+            }
+        }
     }
 
     #[test]

@@ -34,10 +34,10 @@ use crate::compiler::{self, CodegenSummary, MemLayout, MEM_MIN_BYTES};
 use crate::config::{Precision, SpeedConfig};
 use crate::coordinator::{LayerResult, ModelResult, Policy};
 use crate::error::{Result, SpeedError};
-use crate::isa::{Insn, StrategyKind};
+use crate::isa::{Segment, StrategyKind};
 use crate::models::zoo::Model;
 use crate::models::OpDesc;
-use crate::sim::{OpPlan, Processor, SimStats};
+use crate::sim::{ExecMode, OpPlan, Processor, SimStats};
 
 /// Largest instruction count a cached program keeps resident. Streams above
 /// this are regenerated on each execution (their plan/layout/summary are
@@ -77,7 +77,7 @@ pub struct Program {
     required_bytes: u64,
     summary: CodegenSummary,
     /// `None` when the stream exceeds [`MATERIALIZE_LIMIT`].
-    segments: Option<Vec<Vec<Insn>>>,
+    segments: Option<Vec<Segment>>,
 }
 
 impl Program {
@@ -172,6 +172,18 @@ impl Engine {
         self.proc.ctrl.precision_switches
     }
 
+    /// Select batch (default) vs exact per-instruction simulation. Batch
+    /// mode consumes the compiler's stream-run metadata and is bit-exact
+    /// against [`ExecMode::Exact`] — the exact mode exists as the
+    /// `--exact` escape hatch and as the parity oracle in tests.
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        self.proc.set_exec_mode(mode);
+    }
+
+    pub fn exec_mode(&self) -> ExecMode {
+        self.proc.exec_mode()
+    }
+
     /// Open a run handle. Sessions borrow the engine mutably; state
     /// (cache, clock, precision) persists across sessions.
     pub fn session(&mut self) -> Session<'_> {
@@ -251,14 +263,14 @@ impl Engine {
         match &prog.segments {
             Some(segs) => {
                 for seg in segs {
-                    stats.merge(&self.proc.run(seg)?);
+                    stats.merge(&self.proc.run_segment(seg)?);
                 }
             }
             None => {
                 let cfg = self.cfg;
                 let proc = &mut self.proc;
-                let mut feed = |seg: Vec<Insn>| -> Result<(), SpeedError> {
-                    stats.merge(&proc.run(&seg)?);
+                let mut feed = |seg: Segment| -> Result<(), SpeedError> {
+                    stats.merge(&proc.run_segment(&seg)?);
                     Ok(())
                 };
                 compiler::stream_op(op, &cfg, strat, &prog.layout, &mut feed)?;

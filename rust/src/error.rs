@@ -31,6 +31,9 @@ pub enum SpeedError {
     Artifact(String),
     /// Text parsing failure (assembly source, JSON documents).
     Parse(String),
+    /// Benchmark-harness failure: unreadable baseline, or a measured
+    /// metric regressed past the gate (`speed-bench --baseline`).
+    Bench(String),
 }
 
 impl SpeedError {
@@ -43,6 +46,7 @@ impl SpeedError {
             SpeedError::Sim(_) => "sim",
             SpeedError::Artifact(_) => "artifact",
             SpeedError::Parse(_) => "parse",
+            SpeedError::Bench(_) => "bench",
         }
     }
 
@@ -53,7 +57,8 @@ impl SpeedError {
             | SpeedError::Compile(m)
             | SpeedError::Layout(m)
             | SpeedError::Artifact(m)
-            | SpeedError::Parse(m) => m.clone(),
+            | SpeedError::Parse(m)
+            | SpeedError::Bench(m) => m.clone(),
             SpeedError::Sim(e) => e.to_string(),
         }
     }
@@ -115,6 +120,7 @@ mod tests {
             SpeedError::Layout("x".into()),
             SpeedError::Artifact("x".into()),
             SpeedError::Parse("x".into()),
+            SpeedError::Bench("x".into()),
         ] {
             assert!(e.source().is_none(), "{e}");
         }
@@ -129,6 +135,7 @@ mod tests {
             SpeedError::Sim(SimError::StoreUnderflow),
             SpeedError::Artifact("m".into()),
             SpeedError::Parse("m".into()),
+            SpeedError::Bench("m".into()),
         ]
         .iter()
         .map(|e| e.kind())

@@ -24,8 +24,10 @@ pub mod assembler;
 pub mod disasm;
 pub mod encoding;
 pub mod insn;
+pub mod stream;
 
 pub use assembler::{assemble, assemble_line, AsmError};
 pub use disasm::disassemble;
 pub use encoding::{decode, encode, DecodeError};
 pub use insn::{Dim, Insn, LdMode, StrategyKind, Vtype, WidthSel};
+pub use stream::{RunKind, Segment, StreamRun};

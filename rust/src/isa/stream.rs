@@ -1,0 +1,108 @@
+//! Compiled instruction-stream containers: a [`Segment`] of instructions
+//! plus the [`StreamRun`] metadata the operator compiler attaches to it.
+//!
+//! The compiler's generated code is dominated by three homogeneous
+//! patterns — `(li ; vsald/vle)` transfer pairs, chains of identical
+//! `VSAM`/`VSAC` bursts, and `(li ; vse)` row drains. A `StreamRun` marks
+//! one such maximal run by index range so the simulator's batch fast path
+//! can advance it per block instead of per instruction. The metadata is
+//! purely advisory: the simulator re-validates each run against the
+//! instructions before using it and falls back to per-instruction stepping
+//! on any mismatch, so a `Segment` with empty (or wrong) `runs` is always
+//! executable.
+
+use super::Insn;
+
+/// The homogeneous pattern a [`StreamRun`] marks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunKind {
+    /// `(li xN, addr ; vsald/vle vX, (xN))` pairs with uniform
+    /// vl/width/eew (addresses and destination registers may vary).
+    Load,
+    /// Identical `VSAM`/`VSAC` bursts (same operands, same stage count).
+    Tensor,
+    /// `(li xN, addr ; vse.v vS, (xN))` row drains under an installed plan.
+    Store,
+}
+
+/// One maximal homogeneous run inside a segment: instructions
+/// `[start, start + len)` all belong to the pattern `kind`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamRun {
+    /// Index of the first instruction of the run within its segment.
+    pub start: u32,
+    /// Number of instructions covered (pairs count as 2).
+    pub len: u32,
+    /// Pattern of the run.
+    pub kind: RunKind,
+}
+
+/// A compiled program segment: the instructions plus the stream-run
+/// metadata of the emitter that produced them. Derefs to `[Insn]`, so all
+/// instruction-level consumers (`Processor::run`, trace printers, counts)
+/// keep working on it unchanged.
+#[derive(Debug, Clone, Default)]
+pub struct Segment {
+    pub insns: Vec<Insn>,
+    /// Non-overlapping, in ascending `start` order.
+    pub runs: Vec<StreamRun>,
+}
+
+impl Segment {
+    /// A segment with no run metadata (always executes per-instruction).
+    pub fn new(insns: Vec<Insn>) -> Self {
+        Segment { insns, runs: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.insns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insns.is_empty()
+    }
+}
+
+impl From<Vec<Insn>> for Segment {
+    fn from(insns: Vec<Insn>) -> Self {
+        Segment::new(insns)
+    }
+}
+
+impl std::ops::Deref for Segment {
+    type Target = [Insn];
+
+    fn deref(&self) -> &[Insn] {
+        &self.insns
+    }
+}
+
+impl<'a> IntoIterator for &'a Segment {
+    type Item = &'a Insn;
+    type IntoIter = std::slice::Iter<'a, Insn>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.insns.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_derefs_to_insns() {
+        let seg = Segment::new(vec![
+            Insn::Addi { rd: 1, rs1: 0, imm: 4 },
+            Insn::Addi { rd: 2, rs1: 0, imm: 8 },
+        ]);
+        assert_eq!(seg.len(), 2);
+        assert!(!seg.is_empty());
+        // Deref: slice ops and iteration work directly.
+        assert!(matches!(seg[1], Insn::Addi { rd: 2, .. }));
+        assert_eq!(seg.iter().count(), 2);
+        assert_eq!((&seg).into_iter().count(), 2);
+        let from: Segment = vec![Insn::Addi { rd: 1, rs1: 0, imm: 0 }].into();
+        assert!(from.runs.is_empty());
+    }
+}

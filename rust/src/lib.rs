@@ -55,12 +55,17 @@
 //! * the **inference coordinator** ([`coordinator`]): one-shot wrappers,
 //!   strategy policies, and the thread-based sweep runner;
 //! * a **report harness** ([`report`]) regenerating every table and figure
-//!   of the paper's evaluation (Fig. 2, Fig. 10–14, Tables I–III).
+//!   of the paper's evaluation (Fig. 2, Fig. 10–14, Tables I–III);
+//! * a **perf harness** ([`bench`], CLI `speed-bench`) measuring the
+//!   simulator's own throughput (ops/s, simulated-stages/s, cache hit
+//!   rates) into a machine-readable `BENCH_sim.json`, gated in CI against
+//!   `bench/baseline.json`.
 //!
 //! See `DESIGN.md` for the substitution rationale and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod ara;
+pub mod bench;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;
@@ -78,3 +83,4 @@ pub mod sim;
 pub use config::{Precision, SpeedConfig, SpeedConfigBuilder};
 pub use engine::{CacheStats, Engine, Session};
 pub use error::SpeedError;
+pub use sim::ExecMode;

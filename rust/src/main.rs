@@ -9,6 +9,9 @@
 //! repro run-model <name> [--prec 16|8|4|all] [--policy mixed|ffcs|cf|ff]
 //!                 [--quick] [--workers N]
 //! repro dse [--quick] [--workers N]     Fig. 14 sweep
+//! repro speed-bench [--quick] [--exact] [--out FILE] [--baseline FILE]
+//!                   [--write-baseline FILE] [--tolerance F]
+//!                                       perf harness -> BENCH_sim.json
 //! repro asm <file.s>                    assemble / encode / disassemble
 //! repro info                            configuration + artifact summary
 //! ```
@@ -26,6 +29,7 @@
 
 use std::process::ExitCode;
 
+use speed_rvv::bench;
 use speed_rvv::config::{Precision, SpeedConfig};
 use speed_rvv::coordinator::runner::{default_workers, run_parallel};
 use speed_rvv::coordinator::{run_model, run_model_ara, ModelResult, Policy};
@@ -35,6 +39,7 @@ use speed_rvv::isa::{self, StrategyKind};
 use speed_rvv::models::zoo::{model_by_name, MODELS};
 use speed_rvv::report;
 use speed_rvv::runtime::{golden_check_all, Engine as PjrtEngine};
+use speed_rvv::sim::ExecMode;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -83,6 +88,7 @@ fn dispatch(args: &[String]) -> Result<(), SpeedError> {
             println!("{text}");
             Ok(())
         }
+        "speed-bench" => cmd_speed_bench(rest),
         "asm" => cmd_asm(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -108,8 +114,16 @@ commands:
                               names: vgg16 resnet18 googlenet mobilenetv2
                                      vit_tiny vit_b16
   dse [--quick] [--workers N] Fig. 14 design-space sweep
+  speed-bench [--quick] [--exact] [--out FILE] [--baseline FILE]
+              [--write-baseline FILE] [--tolerance F]
+                              run the perf harness; writes BENCH_sim.json
+                              (ops/s, simulated-stages/s, wall time, cache
+                              hit rates) and optionally gates against a
+                              committed baseline (exit 1 on regression)
   asm <file.s>                assemble, encode, and disassemble a program
-  info                        configuration + artifact summary";
+  info                        configuration + artifact summary
+run-model also accepts --exact (per-instruction simulation; the default
+batch fast path is bit-exact, this is the escape hatch / parity oracle)";
 
 fn cmd_report(args: &[String]) -> Result<(), SpeedError> {
     let id = args.first().map(|s| s.as_str()).unwrap_or("all");
@@ -223,9 +237,11 @@ fn cmd_run_model(args: &[String]) -> Result<(), SpeedError> {
             ara.dram_bytes as f64 / (1 << 20) as f64
         );
     };
-    if precs.len() > 1 && workers > 1 {
+    if precs.len() > 1 && workers > 1 && !flag(args, "--exact") {
         // Parallel sweep: one throwaway engine per precision on the sweep
         // runner (trades the shared warm cache for wall-clock time).
+        // (--exact forces the single warm engine below, which owns the
+        // execution-mode switch.)
         let results = run_parallel(precs.clone(), workers, |&prec| {
             run_model(&model, prec, &cfg, policy).map(|r| (prec, r))
         });
@@ -239,6 +255,9 @@ fn cmd_run_model(args: &[String]) -> Result<(), SpeedError> {
     // One warm engine for every precision: layers compile once, the
     // datapath re-precisions with a single-cycle VSACFG per transition.
     let mut engine = Engine::new(cfg)?;
+    if flag(args, "--exact") {
+        engine.set_exec_mode(ExecMode::Exact);
+    }
     let mut session = engine.session().with_policy(policy);
     let mut results = Vec::new();
     for &prec in &precs {
@@ -257,6 +276,49 @@ fn cmd_run_model(args: &[String]) -> Result<(), SpeedError> {
         cache.hits,
         cache.misses
     );
+    Ok(())
+}
+
+fn cmd_speed_bench(args: &[String]) -> Result<(), SpeedError> {
+    let opts = bench::BenchOptions {
+        quick: flag(args, "--quick"),
+        exact_only: flag(args, "--exact"),
+    };
+    // None = flag absent; an explicit flag overrides the baseline file's
+    // embedded tolerance in `check_baseline`.
+    let tolerance: Option<f64> = match opt(args, "--tolerance") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<f64>()
+                .ok()
+                .filter(|t| (0.0..1.0).contains(t))
+                .ok_or_else(|| {
+                    SpeedError::Config(format!("bad --tolerance '{v}' (want 0.0 <= F < 1.0)"))
+                })?,
+        ),
+    };
+    let report = bench::run_bench(&opts)?;
+    print!("{}", report.summary_text());
+
+    let out = opt(args, "--out").unwrap_or("BENCH_sim.json");
+    std::fs::write(out, report.to_json())
+        .map_err(|e| SpeedError::Bench(format!("writing {out}: {e}")))?;
+    println!("wrote {out}");
+
+    if let Some(path) = opt(args, "--write-baseline") {
+        // Commit floors at half the measured throughput so slower CI
+        // runners don't flap the gate.
+        std::fs::write(path, report.baseline_json(tolerance.unwrap_or(0.2), 0.5))
+            .map_err(|e| SpeedError::Bench(format!("writing {path}: {e}")))?;
+        println!("wrote baseline {path}");
+    }
+
+    if let Some(path) = opt(args, "--baseline") {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| SpeedError::Bench(format!("reading {path}: {e}")))?;
+        bench::check_baseline(&report, &src, tolerance)?;
+        println!("baseline check passed ({path})");
+    }
     Ok(())
 }
 

@@ -93,7 +93,9 @@ pub fn simulate_op(op: &OpDesc, inputs: &[Vec<i32>]) -> Result<Vec<i32>> {
     let compiled = compile_op(op, &p.cfg, strat, layout, true)?;
     p.set_plan(compiled.plan);
     for seg in &compiled.segments {
-        p.run(seg)?;
+        // Batch-aware execution: the golden three-way check therefore also
+        // cross-checks the simulator's fast path against PJRT numerics.
+        p.run_segment(seg)?;
     }
     Ok(p.mem.inspect_i32(layout.out_addr, op.output_elems() as usize))
 }

@@ -71,7 +71,44 @@ pub fn pack(values: &[i32], p: Precision) -> Vec<u8> {
 
 /// Unpack `n` values from a packed buffer at precision `p`.
 pub fn unpack(buf: &[u8], n: usize, p: Precision) -> Vec<i32> {
-    (0..n).map(|i| read_elem(buf, i, p)).collect()
+    let mut out = Vec::new();
+    unpack_into(buf, n, p, &mut out);
+    out
+}
+
+/// Unpack `n` values into a caller-owned buffer (cleared first).
+///
+/// This is the bulk form the MPTU functional engine uses: one
+/// precision dispatch per *operand tensor* instead of one per element,
+/// with branch-free inner loops the compiler can vectorize. Equivalent
+/// to `n` calls of [`read_elem`].
+pub fn unpack_into(buf: &[u8], n: usize, p: Precision, out: &mut Vec<i32>) {
+    out.clear();
+    out.reserve(n);
+    match p {
+        Precision::Int16 => {
+            out.extend(
+                buf.chunks_exact(2).take(n).map(|c| i16::from_le_bytes([c[0], c[1]]) as i32),
+            );
+        }
+        Precision::Int8 => {
+            out.extend(buf[..n].iter().map(|&b| b as i8 as i32));
+        }
+        Precision::Int4 => {
+            // Two operands per byte, low nibble first; sign-extend via
+            // shift pairs (bits [3:0] and [7:4] moved to the top, then
+            // arithmetic-shifted back down).
+            for &b in &buf[..n / 2] {
+                out.push(((b as i32) << 28) >> 28);
+                out.push(((b as i32) << 24) >> 28);
+            }
+            if n % 2 == 1 {
+                let b = buf[n / 2];
+                out.push(((b as i32) << 28) >> 28);
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), n);
 }
 
 #[cfg(test)]
@@ -103,6 +140,25 @@ mod tests {
         write_i32(&mut buf, 1, i32::MAX);
         assert_eq!(read_i32(&buf, 0), -123456);
         assert_eq!(read_i32(&buf, 1), i32::MAX);
+    }
+
+    #[test]
+    fn unpack_into_matches_per_element_reads() {
+        // The bulk unpack must agree with read_elem for every precision,
+        // count parity, and value pattern (including sign extremes).
+        for p in Precision::ALL {
+            let (lo, hi) = p.range();
+            for n in [1usize, 2, 3, 7, 8, 33] {
+                let vals: Vec<i32> =
+                    (0..n).map(|i| [lo, hi, 0, -1, 1, lo / 3][i % 6]).collect();
+                let buf = pack(&vals, p);
+                let mut out = Vec::new();
+                unpack_into(&buf, n, p, &mut out);
+                let want: Vec<i32> = (0..n).map(|i| read_elem(&buf, i, p)).collect();
+                assert_eq!(out, want, "{p} n={n}");
+                assert_eq!(out, vals, "{p} n={n}");
+            }
+        }
     }
 
     #[test]

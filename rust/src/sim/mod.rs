@@ -15,6 +15,7 @@ pub mod stats;
 
 pub use ctrl::{CtrlState, Dims};
 pub use memory::{ExtMem, TrafficClass, TrafficStats};
+pub use mptu::OutputRows;
 pub use plan::OpPlan;
-pub use processor::{Processor, SimError};
+pub use processor::{ExecMode, Processor, SimError};
 pub use stats::{Fu, SimStats};

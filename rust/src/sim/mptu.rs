@@ -8,6 +8,13 @@
 //! Numerics are computed at operator granularity from the DRAM images (the
 //! schedule determines *when* bytes move — counted at the instruction level
 //! — while this module determines *what* the machine computes).
+//!
+//! All operator outputs land in a single flat row-major [`OutputRows`]
+//! buffer. Because the accumulation is integer arithmetic mod 2³², the
+//! summation order is free, so the kernels below use blocked,
+//! allocation-free inner loops over contiguous row slices — the result is
+//! bit-identical to the naive triple loop while streaming through the
+//! caches instead of chasing per-row heap allocations.
 
 use crate::config::Precision;
 use crate::models::ops::{OpDesc, OpKind};
@@ -21,10 +28,86 @@ use super::plan::OpPlan;
 /// stages costs `PIPE_FILL + S` cycles in EX.
 pub const PIPE_FILL: u64 = 3;
 
+/// The operator's full output as one flat row-major `i32` buffer with row
+/// views — the result-queue image the store path drains row by row.
+///
+/// Replaces the former `Vec<Vec<i32>>`: one allocation per operator
+/// instead of one per output row, and rows stay contiguous so draining a
+/// block of rows is a single memcpy-shaped walk.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OutputRows {
+    data: Vec<i32>,
+    row_elems: usize,
+}
+
+impl OutputRows {
+    /// A zeroed buffer of `num_rows` rows of `row_elems` elements.
+    pub fn new(num_rows: usize, row_elems: usize) -> Self {
+        OutputRows { data: vec![0i32; num_rows * row_elems], row_elems }
+    }
+
+    /// Wrap an existing flat row-major buffer.
+    pub fn from_flat(data: Vec<i32>, row_elems: usize) -> Self {
+        debug_assert!(row_elems == 0 || data.len() % row_elems == 0);
+        OutputRows { data, row_elems }
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
+    pub fn num_rows(&self) -> usize {
+        if self.row_elems == 0 {
+            0
+        } else {
+            self.data.len() / self.row_elems
+        }
+    }
+
+    /// Row `i` as a contiguous slice.
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.data[i * self.row_elems..(i + 1) * self.row_elems]
+    }
+
+    /// Row `i` if it exists.
+    pub fn get_row(&self, i: usize) -> Option<&[i32]> {
+        if i < self.num_rows() {
+            Some(self.row(i))
+        } else {
+            None
+        }
+    }
+
+    /// Iterate rows in order.
+    pub fn rows(&self) -> impl Iterator<Item = &[i32]> {
+        self.data.chunks(self.row_elems.max(1))
+    }
+
+    /// The whole output, row-major.
+    pub fn as_flat(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// Consume into the flat row-major vector.
+    pub fn into_flat(self) -> Vec<i32> {
+        self.data
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Drop all rows (plan reinstall), keeping the allocation.
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.row_elems = 0;
+    }
+}
+
 /// Compute the operator's full output (row-major rows of i32 accumulators)
 /// from the DRAM images referenced by the plan. Reads are *uncounted*
 /// (traffic is attributed to the VSALD/VLE instructions of the schedule).
-pub fn compute_output_rows(mem: &ExtMem, plan: &OpPlan) -> Vec<Vec<i32>> {
+pub fn compute_output_rows(mem: &ExtMem, plan: &OpPlan) -> OutputRows {
     let d = &plan.desc;
     match d.kind {
         OpKind::Mm => mm_rows(mem, d, plan),
@@ -36,77 +119,122 @@ pub fn compute_output_rows(mem: &ExtMem, plan: &OpPlan) -> Vec<Vec<i32>> {
 
 fn load_packed(mem: &ExtMem, addr: u64, n: u64, p: Precision) -> Vec<i32> {
     let bytes = mem.inspect(addr, p.bytes_for(n) as usize);
-    elem::unpack(bytes, n as usize, p)
+    let mut out = Vec::new();
+    elem::unpack_into(bytes, n as usize, p, &mut out);
+    out
 }
 
-fn mm_rows(mem: &ExtMem, d: &OpDesc, plan: &OpPlan) -> Vec<Vec<i32>> {
+// Cache blocking for the MM kernel: a KB×JB tile of B (≤ 128 KiB at i32)
+// stays hot across the whole M loop.
+const MM_JB: usize = 256;
+const MM_KB: usize = 128;
+
+fn mm_rows(mem: &ExtMem, d: &OpDesc, plan: &OpPlan) -> OutputRows {
     let (m, k, n) = (d.m as usize, d.k as usize, d.n as usize);
     let a = load_packed(mem, plan.in_addr, (m * k) as u64, d.prec);
     let b = load_packed(mem, plan.w_addr, (k * n) as u64, d.prec);
-    let mut rows = Vec::with_capacity(m);
-    for i in 0..m {
-        let mut row = vec![0i32; n];
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            let boff = kk * n;
-            for (j, r) in row.iter_mut().enumerate() {
-                *r = r.wrapping_add(av.wrapping_mul(b[boff + j]));
+    let mut data = vec![0i32; m * n];
+    let mut jb = 0;
+    while jb < n {
+        let je = (jb + MM_JB).min(n);
+        let mut kb = 0;
+        while kb < k {
+            let ke = (kb + MM_KB).min(k);
+            for i in 0..m {
+                let arow = &a[i * k + kb..i * k + ke];
+                let orow = &mut data[i * n + jb..i * n + je];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0 {
+                        continue;
+                    }
+                    let boff = (kb + kk) * n;
+                    let brow = &b[boff + jb..boff + je];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o = o.wrapping_add(av.wrapping_mul(bv));
+                    }
+                }
             }
+            kb = ke;
         }
-        rows.push(row);
+        jb = je;
     }
-    rows
+    OutputRows::from_flat(data, n)
 }
 
 /// CONV / PWCV / DWCV share one walker; `depthwise` selects per-channel
 /// weights. Input layout: C×H×W; weights: F×C×K×K (or C×K×K); output rows:
-/// (f, oy) → OW elements.
-fn conv_rows(mem: &ExtMem, d: &OpDesc, plan: &OpPlan, depthwise: bool) -> Vec<Vec<i32>> {
+/// (f, oy) → OW elements. The kernel hoists the weight scalar out of the
+/// spatial loop and accumulates along contiguous row slices, clipping the
+/// padded window bounds once per (ky, kx) instead of per output pixel.
+fn conv_rows(mem: &ExtMem, d: &OpDesc, plan: &OpPlan, depthwise: bool) -> OutputRows {
     let (c, h, w) = (d.c as usize, d.h as usize, d.w as usize);
     let f = d.f as usize;
     let k = d.ksize as usize;
     let (oh, ow) = (d.oh() as usize, d.ow() as usize);
-    let (stride, pad) = (d.stride as isize, d.pad as isize);
+    let stride = d.stride as usize;
+    let pad = d.pad as i64;
 
     let x = load_packed(mem, plan.in_addr, (c * h * w) as u64, d.prec);
     let welems = if depthwise { c * k * k } else { f * c * k * k };
     let wt = load_packed(mem, plan.w_addr, welems as u64, d.prec);
 
-    let mut rows = Vec::with_capacity(f * oh);
+    let mut data = vec![0i32; f * oh * ow];
     for fo in 0..f {
+        let (c0, c1) = if depthwise { (fo, fo + 1) } else { (0, c) };
         for oy in 0..oh {
-            let mut row = vec![0i32; ow];
-            for (ox, acc) in row.iter_mut().enumerate() {
-                let mut sum = 0i32;
-                let cs: Box<dyn Iterator<Item = usize>> =
-                    if depthwise { Box::new(std::iter::once(fo)) } else { Box::new(0..c) };
-                for ci in cs {
-                    for ky in 0..k {
-                        let iy = oy as isize * stride + ky as isize - pad;
-                        if iy < 0 || iy >= h as isize {
+            let rbase = (fo * oh + oy) * ow;
+            let row = &mut data[rbase..rbase + ow];
+            for ci in c0..c1 {
+                for ky in 0..k {
+                    let iy = (oy * stride) as i64 + ky as i64 - pad;
+                    if iy < 0 || iy >= h as i64 {
+                        continue;
+                    }
+                    let xbase = (ci * h + iy as usize) * w;
+                    let xrow = &x[xbase..xbase + w];
+                    let wbase = if depthwise {
+                        (fo * k + ky) * k
+                    } else {
+                        ((fo * c + ci) * k + ky) * k
+                    };
+                    for kx in 0..k {
+                        let wv = wt[wbase + kx];
+                        if wv == 0 {
                             continue;
                         }
-                        for kx in 0..k {
-                            let ix = ox as isize * stride + kx as isize - pad;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
+                        // Valid output range: 0 <= ox*stride + kx - pad < w.
+                        let off = kx as i64 - pad;
+                        let lo = if off >= 0 {
+                            0usize
+                        } else {
+                            ((-off) as usize).div_ceil(stride)
+                        };
+                        let hi_num = w as i64 - 1 - off;
+                        if hi_num < 0 {
+                            continue;
+                        }
+                        let hi = (hi_num as usize / stride).min(ow - 1);
+                        if lo > hi {
+                            continue;
+                        }
+                        if stride == 1 {
+                            let x0 = (lo as i64 + off) as usize;
+                            let xs = &xrow[x0..x0 + (hi - lo + 1)];
+                            for (o, &xv) in row[lo..=hi].iter_mut().zip(xs) {
+                                *o = o.wrapping_add(xv.wrapping_mul(wv));
                             }
-                            let xv = x[ci * h * w + iy as usize * w + ix as usize];
-                            let wv = if depthwise {
-                                wt[fo * k * k + ky * k + kx]
-                            } else {
-                                wt[fo * c * k * k + ci * k * k + ky * k + kx]
-                            };
-                            sum = sum.wrapping_add(xv.wrapping_mul(wv));
+                        } else {
+                            for (o, ox) in row[lo..=hi].iter_mut().zip(lo..) {
+                                let ix = (ox * stride) as i64 + off;
+                                *o = o.wrapping_add(xrow[ix as usize].wrapping_mul(wv));
+                            }
                         }
                     }
                 }
-                *acc = sum;
             }
-            rows.push(row);
         }
     }
-    rows
+    OutputRows::from_flat(data, ow)
 }
 
 #[cfg(test)]
@@ -129,6 +257,11 @@ mod tests {
         (mem, plan)
     }
 
+    /// Nested-vec view for test assertions.
+    fn nested(rows: &OutputRows) -> Vec<Vec<i32>> {
+        rows.rows().map(|r| r.to_vec()).collect()
+    }
+
     #[test]
     fn mm_identity() {
         let d = OpDesc::mm(2, 2, 2, Precision::Int8);
@@ -136,7 +269,10 @@ mod tests {
         mem.preload_packed(plan.in_addr, &[1, 2, 3, 4], d.prec);
         mem.preload_packed(plan.w_addr, &[1, 0, 0, 1], d.prec); // identity
         let rows = compute_output_rows(&mem, &plan);
-        assert_eq!(rows, vec![vec![1, 2], vec![3, 4]]);
+        assert_eq!(rows.num_rows(), 2);
+        assert_eq!(rows.row_elems(), 2);
+        assert_eq!(nested(&rows), vec![vec![1, 2], vec![3, 4]]);
+        assert_eq!(rows.as_flat(), &[1, 2, 3, 4]);
     }
 
     #[test]
@@ -146,7 +282,43 @@ mod tests {
         mem.preload_packed(plan.in_addr, &[1, 2, 3, 4], d.prec);
         mem.preload_packed(plan.w_addr, &[1, 1, 1, 1], d.prec);
         let rows = compute_output_rows(&mem, &plan);
-        assert_eq!(rows, vec![vec![3, 3], vec![7, 7]]);
+        assert_eq!(nested(&rows), vec![vec![3, 3], vec![7, 7]]);
+    }
+
+    #[test]
+    fn mm_blocked_loop_matches_naive_reference() {
+        // Shapes straddling the JB/KB block boundaries must agree with the
+        // naive triple loop (mod-2^32 accumulation is order-free).
+        for (m, k, n) in [(3, MM_KB as u32 + 5, MM_JB as u32 + 3), (7, 130, 257), (1, 300, 1)] {
+            let d = OpDesc::mm(m, k, n, Precision::Int8);
+            let mut mem = ExtMem::new(1 << 20);
+            let a: Vec<i32> = (0..m * k).map(|i| (i % 251) as i32 - 125).collect();
+            let b: Vec<i32> = (0..k * n).map(|i| (i % 127) as i32 - 63).collect();
+            let plan = OpPlan {
+                desc: d,
+                strat: d.preferred_strategy(),
+                in_addr: 0,
+                w_addr: 0x40000,
+                out_addr: 0x80000,
+                partial_addr: u64::MAX,
+                total_stages: 1,
+                functional: true,
+            };
+            mem.preload_packed(plan.in_addr, &a, d.prec);
+            mem.preload_packed(plan.w_addr, &b, d.prec);
+            let rows = compute_output_rows(&mem, &plan);
+            let (m, k, n) = (m as usize, k as usize, n as usize);
+            let mut want = vec![0i32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    for j in 0..n {
+                        want[i * n + j] = want[i * n + j]
+                            .wrapping_add(a[i * k + kk].wrapping_mul(b[kk * n + j]));
+                    }
+                }
+            }
+            assert_eq!(rows.as_flat(), &want[..], "{m}x{k}x{n}");
+        }
     }
 
     #[test]
@@ -158,11 +330,11 @@ mod tests {
         mem.preload_packed(plan.w_addr, &[1, 2, 3, 4], dp.prec);
         let rows = compute_output_rows(&mem, &plan);
         // f0: x_c0*1 + x_c1*2, rows (oy) of OW elements
-        assert_eq!(rows[0], vec![1 + 10, 2 + 12]);
-        assert_eq!(rows[1], vec![3 + 14, 4 + 16]);
+        assert_eq!(rows.row(0), vec![1 + 10, 2 + 12]);
+        assert_eq!(rows.row(1), vec![3 + 14, 4 + 16]);
         // f1: x_c0*3 + x_c1*4
-        assert_eq!(rows[2], vec![3 + 20, 6 + 24]);
-        assert_eq!(rows[3], vec![9 + 28, 12 + 32]);
+        assert_eq!(rows.row(2), vec![3 + 20, 6 + 24]);
+        assert_eq!(rows.row(3), vec![9 + 28, 12 + 32]);
     }
 
     #[test]
@@ -174,10 +346,49 @@ mod tests {
         mem.preload_packed(plan.in_addr, &[1, 2, 3, 4, 5, 6, 7, 8, 9], d.prec);
         mem.preload_packed(plan.w_addr, &[1; 9], d.prec);
         let rows = compute_output_rows(&mem, &plan);
-        assert_eq!(rows.len(), 3);
-        assert_eq!(rows[1][1], 45);
+        assert_eq!(rows.num_rows(), 3);
+        assert_eq!(rows.row(1)[1], 45);
         // corner: only 2x2 window valid
-        assert_eq!(rows[0][0], 1 + 2 + 4 + 5);
+        assert_eq!(rows.row(0)[0], 1 + 2 + 4 + 5);
+    }
+
+    #[test]
+    fn strided_conv_matches_naive_reference() {
+        // Stride-2 with padding exercises the hoisted window-bound clipping.
+        let d = OpDesc::conv(3, 4, 9, 11, 3, 2, 1, Precision::Int8);
+        let (mut mem, plan) = plan_for(d);
+        let x: Vec<i32> = (0..d.input_elems()).map(|i| (i % 17) as i32 - 8).collect();
+        let w: Vec<i32> = (0..d.weight_elems()).map(|i| (i % 13) as i32 - 6).collect();
+        mem.preload_packed(plan.in_addr, &x, d.prec);
+        mem.preload_packed(plan.w_addr, &w, d.prec);
+        let rows = compute_output_rows(&mem, &plan);
+        let (c, h, wd, f, k) = (3usize, 9usize, 11usize, 4usize, 3usize);
+        let (oh, ow) = (d.oh() as usize, d.ow() as usize);
+        for fo in 0..f {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut sum = 0i32;
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            let iy = oy as isize * 2 + ky as isize - 1;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = ox as isize * 2 + kx as isize - 1;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                let xv = x[ci * h * wd + iy as usize * wd + ix as usize];
+                                let wv = w[fo * c * k * k + ci * k * k + ky * k + kx];
+                                sum = sum.wrapping_add(xv.wrapping_mul(wv));
+                            }
+                        }
+                    }
+                    assert_eq!(rows.row(fo * oh + oy)[ox], sum, "f{fo} oy{oy} ox{ox}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -190,7 +401,7 @@ mod tests {
         mem.preload_packed(plan.in_addr, &x, d.prec);
         mem.preload_packed(plan.w_addr, &[1; 18], d.prec);
         let rows = compute_output_rows(&mem, &plan);
-        assert_eq!(rows, vec![vec![9], vec![18]]);
+        assert_eq!(nested(&rows), vec![vec![9], vec![18]]);
     }
 
     #[test]
@@ -202,6 +413,18 @@ mod tests {
         mem.preload_packed(plan.w_addr, &[32767, 32767], d.prec);
         let rows = compute_output_rows(&mem, &plan);
         let expect = (32767i32.wrapping_mul(32767)).wrapping_mul(2);
-        assert_eq!(rows[0][0], expect);
+        assert_eq!(rows.row(0)[0], expect);
+    }
+
+    #[test]
+    fn output_rows_views() {
+        let mut r = OutputRows::from_flat(vec![1, 2, 3, 4, 5, 6], 3);
+        assert_eq!(r.num_rows(), 2);
+        assert_eq!(r.row(1), &[4, 5, 6]);
+        assert_eq!(r.get_row(2), None);
+        assert_eq!(r.rows().count(), 2);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.num_rows(), 0);
     }
 }

@@ -19,23 +19,36 @@
 //!     cycle — Sec. II-E).
 //! * **CO** — 1 cycle, overlapped; total cycles = last completion + 1.
 //!
+//! Execution modes
+//! ---------------
+//! The scoreboard recurrence above is deterministic, so long homogeneous
+//! instruction runs (the compiler's `VSALD` streams, `VSAM` burst chains,
+//! and row-store sequences) do not need per-instruction dispatch. In
+//! [`ExecMode::Batch`] (the default), [`Processor::run_segment`] consumes
+//! the [`StreamRun`] metadata the operator compiler attaches to each
+//! [`Segment`] and advances whole blocks at once — `VSAM` chains in closed
+//! form, load/store runs through a specialized loop that shares the exact
+//! path's [`Processor::schedule`] core. Statistics, traffic, and memory
+//! contents are bit-identical to [`ExecMode::Exact`] (per-instruction
+//! `step`), which remains available as an escape hatch via
+//! `repro ... --exact` or `SPEED_EXACT=1`.
+//!
 //! Functional model
 //! ----------------
 //! Instructions move real bytes: loads copy DRAM → per-lane VRF regions
 //! (capacity-checked), stores pop completed output rows from the MPTU
 //! result path and write them to DRAM. Operator numerics are computed by
 //! [`super::mptu`] at operator granularity (bit-exact vs the JAX/Pallas
-//! artifacts); *when* bytes move — and therefore every cycle and traffic
-//! statistic — is decided by the instruction stream the operator compiler
-//! emits.
-
+//! artifacts) into one flat [`OutputRows`] buffer; *when* bytes move — and
+//! therefore every cycle and traffic statistic — is decided by the
+//! instruction stream the operator compiler emits.
 
 use crate::config::SpeedConfig;
-use crate::isa::{Insn, LdMode, WidthSel};
+use crate::isa::{Insn, LdMode, RunKind, Segment, StreamRun, WidthSel};
 
 use super::ctrl::CtrlState;
 use super::memory::{ExtMem, TrafficClass};
-use super::mptu;
+use super::mptu::{self, OutputRows};
 use super::plan::OpPlan;
 use super::stats::{Fu, SimStats};
 
@@ -72,6 +85,17 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// How [`Processor::run_segment`] consumes a program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Per-instruction `step` dispatch — the reference semantics.
+    Exact,
+    /// Recognize the compiler's homogeneous `VSALD`/`VSAM`/`VLE`/`VSE`
+    /// stream runs and advance them per block (bit-exact vs `Exact`).
+    #[default]
+    Batch,
+}
+
 /// The SPEED machine.
 pub struct Processor {
     pub cfg: SpeedConfig,
@@ -82,13 +106,19 @@ pub struct Processor {
     vrf: Vec<Vec<u8>>,
     /// Installed operator plan (VSACFG-derived state).
     plan: Option<OpPlan>,
-    /// Computed output rows, indexed by row number (the result-queue path;
+    /// Computed output rows (flat row-major; the result-queue path —
     /// `VSE` maps its address back to the row it drains).
-    computed_rows: Vec<Vec<i32>>,
+    computed_rows: OutputRows,
     /// Stage cursor into the plan's schedule.
     stage_cursor: u64,
     /// Whether the functional engine has produced the operator's output.
     computed: bool,
+    /// Batch vs exact consumption of segment run metadata.
+    mode: ExecMode,
+    /// `SPEED_TRACE` captured once at construction (reading the
+    /// environment on every `step` dominated the old per-instruction
+    /// cost); tracing forces the exact path so every instruction prints.
+    trace: bool,
 
     // ---- scoreboard state (all times in cycles) ----
     t_decode: u64,
@@ -119,9 +149,15 @@ impl Processor {
             xregs: [0; 32],
             vrf: vec![vec![0u8; vrf_bytes]; lanes],
             plan: None,
-            computed_rows: Vec::new(),
+            computed_rows: OutputRows::default(),
             stage_cursor: 0,
             computed: false,
+            mode: if std::env::var_os("SPEED_EXACT").is_some() {
+                ExecMode::Exact
+            } else {
+                ExecMode::Batch
+            },
+            trace: std::env::var_os("SPEED_TRACE").is_some(),
             t_decode: 0,
             fu_free: [0; 5],
             mem_port_free: 0,
@@ -153,6 +189,15 @@ impl Processor {
         self.plan.as_ref()
     }
 
+    /// Select batch vs exact consumption of segment run metadata.
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+    }
+
+    pub fn exec_mode(&self) -> ExecMode {
+        self.mode
+    }
+
     /// Grow external memory to at least `bytes`, preserving contents and
     /// warm pipeline/control state (the engine's execute-many path sizes
     /// memory up lazily as larger operators arrive).
@@ -171,7 +216,23 @@ impl Processor {
     /// Run a program to completion; returns the stats of this run.
     /// The machine state (memory, VRF, control) persists across runs so a
     /// network can be executed as a sequence of operator programs.
+    ///
+    /// This is the exact per-instruction path; [`Processor::run_segment`]
+    /// additionally consumes the compiler's stream-run metadata.
     pub fn run(&mut self, prog: &[Insn]) -> Result<SimStats, SimError> {
+        self.run_insns(prog, &[])
+    }
+
+    /// Run one compiled segment, honoring the processor's [`ExecMode`].
+    pub fn run_segment(&mut self, seg: &Segment) -> Result<SimStats, SimError> {
+        if self.mode == ExecMode::Exact || self.trace {
+            self.run_insns(&seg.insns, &[])
+        } else {
+            self.run_insns(&seg.insns, &seg.runs)
+        }
+    }
+
+    fn run_insns(&mut self, prog: &[Insn], runs: &[StreamRun]) -> Result<SimStats, SimError> {
         let start_traffic = self.mem.traffic;
         let start_switches = self.ctrl.precision_switches;
         let mut run_stats = SimStats::default();
@@ -179,8 +240,25 @@ impl Processor {
         // clock (last completion), so back-to-back runs telescope correctly.
         let run_begin = self.last_complete;
 
-        for insn in prog {
-            self.step(insn, &mut run_stats)?;
+        let mut ri = 0usize;
+        let mut i = 0usize;
+        'outer: while i < prog.len() {
+            while let Some(r) = runs.get(ri) {
+                if (r.start as usize) < i {
+                    // Overlapped/stale metadata (e.g. after a fallback) —
+                    // skip it; the instructions execute via `step`.
+                    ri += 1;
+                    continue;
+                }
+                if r.start as usize == i && self.exec_run(prog, r, &mut run_stats)? {
+                    i += r.len as usize;
+                    ri += 1;
+                    continue 'outer;
+                }
+                break;
+            }
+            self.step(&prog[i], &mut run_stats)?;
+            i += 1;
         }
 
         // Total cycles: last completion + 1 (CO stage), relative to run start.
@@ -227,17 +305,41 @@ impl Processor {
         // ---- classify: FU, EX duration, memory-port bytes. ----
         let (fu, ex_cycles, port_bytes) = self.cost_of(insn)?;
 
-        // ---- IS stage: FU + hazards. ----
+        // ---- IS/EX scheduling (shared with the batch path). ----
+        self.schedule(insn, decode_t, fu, ex_cycles, port_bytes, &reads, &writes, st);
+
+        // ---- functional execution (program order). ----
+        self.execute(insn, st)
+    }
+
+    /// IS/EX scoreboard advance of one classified instruction: FU + hazard
+    /// gating, MPTU chaining, shared-memory-port serialization, and all
+    /// stall/busy accounting. Returns the completion time.
+    ///
+    /// Both execution paths go through this one function so the batch
+    /// executors cannot drift from `step`'s timing semantics.
+    #[allow(clippy::too_many_arguments)]
+    fn schedule(
+        &mut self,
+        insn: &Insn,
+        decode_t: u64,
+        fu: Fu,
+        mut ex_cycles: u64,
+        port_bytes: u64,
+        reads: &[u8],
+        writes: &[u8],
+        st: &mut SimStats,
+    ) -> u64 {
         let ready = decode_t + 1; // IS takes one cycle after ID
         let mut issue = ready.max(self.fu_free[fu.index()]);
         if self.fu_free[fu.index()] > ready {
             st.stall_fu_busy += self.fu_free[fu.index()] - ready;
         }
         let mut hazard_until = 0u64;
-        for &r in reads.iter() {
+        for &r in reads {
             hazard_until = hazard_until.max(self.vreg_write_done[r as usize]); // RAW
         }
-        for &r in writes.iter() {
+        for &r in writes {
             hazard_until = hazard_until.max(self.vreg_write_done[r as usize]); // WAW
             hazard_until = hazard_until.max(self.vreg_read_done[r as usize]); // WAR
         }
@@ -248,7 +350,6 @@ impl Processor {
         // Chained MPTU bursts: when a VSAM issues exactly as the previous
         // one drains, the request/compute/write-back pipeline stays primed
         // and the refill cost is not paid again (Fig. 9's overlap).
-        let mut ex_cycles = ex_cycles;
         if fu == Fu::Mptu {
             if issue <= self.last_mptu_complete {
                 ex_cycles = ex_cycles.saturating_sub(mptu::PIPE_FILL).max(1);
@@ -266,22 +367,258 @@ impl Processor {
         }
 
         let complete = start + ex_cycles;
-        if std::env::var_os("SPEED_TRACE").is_some() {
+        if self.trace {
             eprintln!("dec={decode_t} rdy={ready} iss={issue} start={start} done={complete} ex={ex_cycles} {insn:?}");
         }
         self.fu_free[fu.index()] = complete;
-        for &r in writes.iter() {
+        for &r in writes {
             self.vreg_write_done[r as usize] = complete;
         }
-        for &r in reads.iter() {
+        for &r in reads {
             self.vreg_read_done[r as usize] = self.vreg_read_done[r as usize].max(complete);
         }
         st.fu_busy[fu.index()] += ex_cycles;
         self.last_complete = self.last_complete.max(complete);
-
-        // ---- functional execution (program order). ----
-        self.execute(insn, st)
+        complete
     }
+
+    // ================= batch fast path =================
+
+    /// Execute one recognized stream run. Returns `Ok(false)` when the
+    /// metadata does not match the instructions (the caller then falls
+    /// back to per-instruction stepping — validation happens *before* any
+    /// state is mutated, so a fallback is always safe).
+    fn exec_run(
+        &mut self,
+        prog: &[Insn],
+        run: &StreamRun,
+        st: &mut SimStats,
+    ) -> Result<bool, SimError> {
+        let s = run.start as usize;
+        let l = run.len as usize;
+        if l == 0 || s + l > prog.len() {
+            return Ok(false);
+        }
+        let body = &prog[s..s + l];
+        match run.kind {
+            RunKind::Tensor => {
+                let first = body[0];
+                // No installed plan: fall back so the per-instruction path
+                // raises NoPlan with exactly the exact-mode state (counters
+                // and the first burst's scheduling happen before the error).
+                if self.plan.is_none()
+                    || !matches!(first, Insn::Vsam { .. } | Insn::Vsac { .. })
+                    || !body.iter().all(|i| *i == first)
+                {
+                    return Ok(false);
+                }
+                self.run_tensor(first, l as u64, st)?;
+                Ok(true)
+            }
+            RunKind::Load => {
+                if l % 2 != 0 || !Self::valid_load_pairs(body) {
+                    return Ok(false);
+                }
+                self.run_load_pairs(body, st)?;
+                Ok(true)
+            }
+            RunKind::Store => {
+                if l % 2 != 0 || self.plan.is_none() || !Self::valid_store_pairs(body) {
+                    return Ok(false);
+                }
+                self.run_store_pairs(body, st)?;
+                Ok(true)
+            }
+        }
+    }
+
+    /// `(li xN, addr ; vsald/vle vX, (xN))` pairs with uniform mode/width.
+    fn valid_load_pairs(body: &[Insn]) -> bool {
+        let key = body[1];
+        body.chunks_exact(2).all(|p| match (p[0], p[1]) {
+            (Insn::Addi { rd, rs1: 0, .. }, Insn::Vsald { rs1, mode, width, .. }) => {
+                rd != 0
+                    && rs1 == rd
+                    && matches!(key, Insn::Vsald { mode: km, width: kw, .. }
+                        if km == mode && kw == width)
+            }
+            (Insn::Addi { rd, rs1: 0, .. }, Insn::Vle { rs1, eew, .. }) => {
+                rd != 0
+                    && rs1 == rd
+                    && matches!(key, Insn::Vle { eew: ke, .. } if ke == eew)
+            }
+            _ => false,
+        })
+    }
+
+    /// `(li xN, addr ; vse32.v vS, (xN))` pairs.
+    fn valid_store_pairs(body: &[Insn]) -> bool {
+        body.chunks_exact(2).all(|p| match (p[0], p[1]) {
+            (Insn::Addi { rd, rs1: 0, .. }, Insn::Vse { rs1, .. }) => rd != 0 && rs1 == rd,
+            _ => false,
+        })
+    }
+
+    /// A chain of identical `VSAM`/`VSAC` bursts. The first burst (and any
+    /// prefix still gated by pre-run hazards or the decoder) goes through
+    /// [`Processor::schedule`]; once the FU gate dominates, the scoreboard
+    /// recurrence is linear and the rest of the chain advances in closed
+    /// form: completion grows by the chained EX time per burst and the
+    /// FU-busy stall grows arithmetically.
+    fn run_tensor(&mut self, insn: Insn, k: u64, st: &mut SimStats) -> Result<(), SimError> {
+        let (vd, vs1, vs2, stages) = match insn {
+            Insn::Vsam { vd, vs1, vs2, stages } | Insn::Vsac { vd, vs1, vs2, stages } => {
+                (vd, vs1, vs2, stages as u64)
+            }
+            _ => unreachable!("validated tensor run"),
+        };
+        let plan = *self.plan.as_ref().ok_or(SimError::NoPlan)?;
+        let ex_full = mptu::PIPE_FILL + stages;
+        let exc = ex_full.saturating_sub(mptu::PIPE_FILL).max(1); // chained EX
+        let reads = [vs1, vs2];
+        let writes = [vd];
+        for r in [vd, vs1, vs2] {
+            self.vregs_touched[r as usize] = true;
+        }
+        st.insns_total += k;
+        st.insns_custom += k;
+        st.insns_vector += k;
+        let mi = Fu::Mptu.index();
+
+        let mut done = 0u64;
+        while done < k {
+            if done >= 1 {
+                let c = self.fu_free[mi];
+                let ready_next = self.t_decode + 1;
+                // Latest pre-run event that could still hazard-gate a burst
+                // (vs1/vs2 RAW against their loads, vd WAR against earlier
+                // drains). All are constants during the run.
+                let h = self.vreg_read_done[vd as usize]
+                    .max(self.vreg_write_done[vs1 as usize])
+                    .max(self.vreg_write_done[vs2 as usize]);
+                if c >= ready_next && h <= c && self.last_mptu_complete == c {
+                    // Steady state: burst j of the remainder issues at
+                    // C + (j-1)·exc, stalls (C - ready) + (j-1)·(exc - 1)
+                    // on the busy FU, and chains (EX = exc).
+                    let r = k - done;
+                    let base = c - ready_next;
+                    st.stall_fu_busy += r * base + (exc - 1) * (r * (r - 1) / 2);
+                    st.fu_busy[mi] += r * exc;
+                    let cf = c + r * exc;
+                    self.t_decode += r;
+                    self.fu_free[mi] = cf;
+                    self.last_mptu_complete = cf;
+                    self.vreg_write_done[vd as usize] = cf;
+                    self.vreg_read_done[vs1 as usize] =
+                        self.vreg_read_done[vs1 as usize].max(cf);
+                    self.vreg_read_done[vs2 as usize] =
+                        self.vreg_read_done[vs2 as usize].max(cf);
+                    self.last_complete = self.last_complete.max(cf);
+                    break;
+                }
+            }
+            let d = self.t_decode;
+            self.t_decode += 1;
+            self.schedule(&insn, d, Fu::Mptu, ex_full, 0, &reads, &writes, st);
+            done += 1;
+        }
+
+        // Functional accounting telescopes across the whole chain: the
+        // per-burst MAC attribution is a difference of the same cursor
+        // formula, so k bursts sum to one endpoint difference.
+        let slots = self.cfg.peak_macs_per_cycle(plan.desc.prec);
+        st.mac_slots += k * stages * slots;
+        let total = plan.total_stages.max(1);
+        let before =
+            (plan.desc.total_macs() as u128 * self.stage_cursor as u128 / total as u128) as u64;
+        self.stage_cursor = (self.stage_cursor + k * stages).min(total);
+        let after =
+            (plan.desc.total_macs() as u128 * self.stage_cursor as u128 / total as u128) as u64;
+        st.macs += after - before;
+        if self.stage_cursor >= total {
+            self.ensure_computed();
+        }
+        Ok(())
+    }
+
+    /// A run of `(li ; vsald/vle)` pairs: uniform transfer cost computed
+    /// once, per-pair scheduling through the shared core, bulk instruction
+    /// counters, real byte movement per transfer.
+    fn run_load_pairs(&mut self, body: &[Insn], st: &mut SimStats) -> Result<(), SimError> {
+        let k = (body.len() / 2) as u64;
+        let bw = self.cfg.mem_bw_bytes_per_cycle as u64;
+        let lat = self.cfg.mem_latency as u64;
+        let (bytes, custom) = match body[1] {
+            Insn::Vsald { width, .. } => {
+                let prec = match width {
+                    WidthSel::FromCfg => self.ctrl.prec,
+                    WidthSel::Explicit(p) => p,
+                };
+                (prec.bytes_for(self.ctrl.vl as u64), true)
+            }
+            Insn::Vle { eew, .. } => (self.ctrl.vl as u64 * (eew as u64 / 8), false),
+            _ => unreachable!("validated load run"),
+        };
+        let ex = lat + bytes.div_ceil(bw).max(1);
+        for pair in body.chunks_exact(2) {
+            let Insn::Addi { rd, imm, .. } = pair[0] else { unreachable!() };
+            let d0 = self.t_decode;
+            self.t_decode += 1;
+            self.schedule(&pair[0], d0, Fu::Scalar, 1, 0, &[], &[], st);
+            self.xregs[rd as usize] = imm as i64;
+            let addr = (imm as i64) as u64;
+            let d1 = self.t_decode;
+            self.t_decode += 1;
+            let (vd, broadcast) = match pair[1] {
+                Insn::Vsald { vd, mode, .. } => (vd, mode == LdMode::Broadcast),
+                Insn::Vle { vd, .. } => (vd, false),
+                _ => unreachable!(),
+            };
+            self.vregs_touched[vd as usize] = true;
+            self.schedule(&pair[1], d1, Fu::Vldu, ex, bytes, &[], &[vd], st);
+            self.load_to_vrf(vd, addr, bytes as usize, broadcast)?;
+        }
+        st.insns_total += 2 * k;
+        st.insns_scalar += k;
+        st.insns_vector += k;
+        if custom {
+            st.insns_custom += k;
+        }
+        Ok(())
+    }
+
+    /// A run of `(li ; vse32.v)` row drains under an installed plan.
+    fn run_store_pairs(&mut self, body: &[Insn], st: &mut SimStats) -> Result<(), SimError> {
+        let k = (body.len() / 2) as u64;
+        let bw = self.cfg.mem_bw_bytes_per_cycle as u64;
+        let plan = *self.plan.as_ref().expect("validated store run");
+        for pair in body.chunks_exact(2) {
+            let Insn::Addi { rd, imm, .. } = pair[0] else { unreachable!() };
+            let d0 = self.t_decode;
+            self.t_decode += 1;
+            self.schedule(&pair[0], d0, Fu::Scalar, 1, 0, &[], &[], st);
+            self.xregs[rd as usize] = imm as i64;
+            let addr = (imm as i64) as u64;
+            let Insn::Vse { vs3, .. } = pair[1] else { unreachable!() };
+            let bytes = if !plan.is_partial_addr(addr) {
+                plan.desc.output_row_elems() * 4
+            } else {
+                self.ctrl.vl as u64 * (self.ctrl.sew as u64 / 8)
+            };
+            let ex = bytes.div_ceil(bw).max(1);
+            let d1 = self.t_decode;
+            self.t_decode += 1;
+            self.vregs_touched[vs3 as usize] = true;
+            self.schedule(&pair[1], d1, Fu::Vsu, ex, bytes, &[vs3], &[], st);
+            self.drain_row(addr)?;
+        }
+        st.insns_total += 2 * k;
+        st.insns_scalar += k;
+        st.insns_vector += k;
+        Ok(())
+    }
+
+    // ================= exact path =================
 
     /// (FU, EX cycles, external-memory bytes) of an instruction under the
     /// current control state.
@@ -521,6 +858,7 @@ impl Processor {
             // Same bytes delivered to every lane (multi-broadcast): one
             // DRAM fetch, `lanes` VRF writes.
             if total_bytes > region {
+                self.scratch = data;
                 return Err(SimError::VrfOverflow { vd, need: total_bytes, have: region });
             }
             for lane in self.vrf.iter_mut() {
@@ -531,6 +869,7 @@ impl Processor {
             // Sequential allocation: the transfer is striped across lanes.
             let per_lane = total_bytes.div_ceil(lanes);
             if per_lane > region {
+                self.scratch = data;
                 return Err(SimError::VrfOverflow { vd, need: per_lane, have: region });
             }
             for (l, lane) in self.vrf.iter_mut().enumerate() {
@@ -602,13 +941,20 @@ impl Processor {
             return Err(SimError::StoreUnderflow);
         }
         let idx = ((addr - plan.out_addr) / row_bytes) as usize;
-        let row = self.computed_rows.get(idx).ok_or(SimError::StoreUnderflow)?;
-        let mut bytes = Vec::with_capacity(row.len() * 4);
-        for v in row {
-            bytes.extend_from_slice(&v.to_le_bytes());
+        if idx >= self.computed_rows.num_rows() {
+            return Err(SimError::StoreUnderflow);
         }
-        self.check_mem(addr, bytes.len())?;
-        self.mem.write(addr, &bytes, TrafficClass::Output);
+        self.check_mem(addr, row_bytes as usize)?;
+        // Serialize the flat row view through the reusable scratch buffer
+        // (no per-row allocation on the drain path).
+        let mut buf = std::mem::take(&mut self.scratch);
+        buf.clear();
+        buf.resize(row_bytes as usize, 0);
+        for (chunk, v) in buf.chunks_exact_mut(4).zip(self.computed_rows.row(idx)) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+        self.mem.write(addr, &buf, TrafficClass::Output);
+        self.scratch = buf;
         Ok(())
     }
 }
@@ -616,6 +962,7 @@ impl Processor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::{compile_op, MemLayout};
     use crate::config::Precision;
     use crate::isa::{assemble, StrategyKind};
     use crate::models::ops::OpDesc;
@@ -809,5 +1156,134 @@ mod tests {
         // Both loads contend for VLDU + mem port: serialized EX.
         assert!(st.stall_fu_busy > 0 || st.stall_mem_port > 0 || st.cycles > 0);
         assert_eq!(st.traffic.input_read, 512);
+    }
+
+    // ---- batch fast path ----
+
+    /// Run a compiled operator in the given mode on a fresh machine and
+    /// return (aggregate stats, full memory image).
+    fn run_compiled(
+        op: &OpDesc,
+        strat: StrategyKind,
+        functional: bool,
+        mode: ExecMode,
+    ) -> (SimStats, Vec<u8>) {
+        let cfg = SpeedConfig::reference();
+        let mem = 1 << 22;
+        let mut p = Processor::new(cfg, mem);
+        p.set_exec_mode(mode);
+        let layout = MemLayout::for_op(op, mem).unwrap();
+        let x: Vec<i32> = (0..op.input_elems())
+            .map(|i| ((i % 11) as i32) - 5)
+            .collect();
+        let w: Vec<i32> = (0..op.weight_elems())
+            .map(|i| ((i % 7) as i32) - 3)
+            .collect();
+        p.mem.preload_packed(layout.in_addr, &x, op.prec);
+        p.mem.preload_packed(layout.w_addr, &w, op.prec);
+        let c = compile_op(op, &cfg, strat, layout, functional).unwrap();
+        p.set_plan(c.plan);
+        let mut total = SimStats::default();
+        for seg in &c.segments {
+            total.merge(&p.run_segment(seg).unwrap());
+        }
+        let image = p.mem.inspect(0, MemLayout::required_bytes(op) as usize).to_vec();
+        (total, image)
+    }
+
+    #[test]
+    fn batch_mode_bit_exact_vs_exact_mode() {
+        for (op, strat) in [
+            (OpDesc::mm(12, 40, 10, Precision::Int8), StrategyKind::Mm),
+            (OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int16), StrategyKind::Ffcs),
+            (OpDesc::pwcv(16, 16, 8, 8, Precision::Int4), StrategyKind::Cf),
+            (OpDesc::dwcv(6, 9, 9, 3, 2, 1, Precision::Int8), StrategyKind::Ff),
+        ] {
+            for functional in [true, false] {
+                let (se, me) = run_compiled(&op, strat, functional, ExecMode::Exact);
+                let (sb, mb) = run_compiled(&op, strat, functional, ExecMode::Batch);
+                assert_eq!(se, sb, "{op:?} {strat} functional={functional}");
+                assert_eq!(me, mb, "{op:?} {strat} functional={functional}");
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_run_closed_form_matches_exact() {
+        // A long homogeneous VSAM chain behind loads (which set up the
+        // pre-run hazard state the closed form must respect).
+        let d = OpDesc::mm(8, 64, 8, Precision::Int8);
+        let build = || {
+            let mut p = machine();
+            p.mem.preload_packed(0, &vec![1; 8 * 64], d.prec);
+            p.mem.preload_packed(0x400, &vec![1; 64 * 8], d.prec);
+            p.set_plan(OpPlan {
+                desc: d,
+                strat: StrategyKind::Mm,
+                in_addr: 0,
+                w_addr: 0x400,
+                out_addr: 0x800,
+                partial_addr: u64::MAX,
+                total_stages: 40,
+                functional: false,
+            });
+            p
+        };
+        let prologue = assemble(
+            "li x1, 64\nvsetvli x0, x1, e8\nli x2, 0\nvsald v0, (x2), seq, w=8\n\
+             li x3, 0x400\nvsald v4, (x3), bcast, w=8",
+        )
+        .unwrap();
+        let mut insns = prologue.clone();
+        for _ in 0..40 {
+            insns.push(Insn::Vsam { vd: 8, vs1: 0, vs2: 4, stages: 1 });
+        }
+        let runs = vec![StreamRun {
+            start: prologue.len() as u32,
+            len: 40,
+            kind: RunKind::Tensor,
+        }];
+        let seg = Segment { insns, runs };
+
+        let mut exact = build();
+        exact.set_exec_mode(ExecMode::Exact);
+        let se = exact.run_segment(&seg).unwrap();
+        let mut batch = build();
+        batch.set_exec_mode(ExecMode::Batch);
+        let sb = batch.run_segment(&seg).unwrap();
+        assert_eq!(se, sb);
+        assert_eq!(exact.t_decode, batch.t_decode);
+        assert_eq!(exact.fu_free, batch.fu_free);
+        assert_eq!(exact.vreg_write_done, batch.vreg_write_done);
+        assert_eq!(exact.vreg_read_done, batch.vreg_read_done);
+        assert_eq!(exact.last_mptu_complete, batch.last_mptu_complete);
+        assert_eq!(exact.last_complete, batch.last_complete);
+    }
+
+    #[test]
+    fn bogus_run_metadata_falls_back_to_exact() {
+        // Metadata claiming a scalar prologue is a tensor run must be
+        // rejected by validation and produce identical results anyway.
+        let prog = assemble("li x1, 4\nvsetvli x0, x1, e8\nli x2, 8\nli x3, 9").unwrap();
+        let seg = Segment {
+            insns: prog.clone(),
+            runs: vec![StreamRun { start: 0, len: 4, kind: RunKind::Tensor }],
+        };
+        let mut a = machine();
+        let sa = a.run(&prog).unwrap();
+        let mut b = machine();
+        b.set_exec_mode(ExecMode::Batch);
+        let sb = b.run_segment(&seg).unwrap();
+        assert_eq!(sa, sb);
+        assert_eq!(a.xreg(3), b.xreg(3));
+    }
+
+    #[test]
+    fn exec_mode_accessors() {
+        let mut p = machine();
+        p.set_exec_mode(ExecMode::Exact);
+        assert_eq!(p.exec_mode(), ExecMode::Exact);
+        p.set_exec_mode(ExecMode::Batch);
+        assert_eq!(p.exec_mode(), ExecMode::Batch);
     }
 }

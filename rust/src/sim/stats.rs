@@ -42,7 +42,10 @@ impl Fu {
 }
 
 /// Aggregate statistics of one simulation run.
-#[derive(Debug, Default, Clone)]
+///
+/// `PartialEq`/`Eq` support the fast-path parity contract: batch-mode
+/// execution must produce a bit-identical `SimStats` to exact mode.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct SimStats {
     /// Total cycles from first decode to last retire.
     pub cycles: u64,

@@ -1,0 +1,214 @@
+//! Property-based parity contract of the batch fast path.
+//!
+//! Batch-mode execution (`ExecMode::Batch`, consuming the compiler's
+//! stream-run metadata) must be **bit-exact** against per-instruction
+//! exact mode: identical `SimStats` (cycles, stalls, per-FU busy time,
+//! instruction mix, MAC accounting, traffic by class) and identical
+//! external-memory bytes, across random operator shapes, all three
+//! precisions, every applicable strategy, and both functional and
+//! timing-only runs.
+//!
+//! The deployment image vendors no proptest; properties are exercised with
+//! a deterministic xorshift generator (same convention as
+//! `proptest_invariants.rs`).
+
+use speed_rvv::compiler::{compile_op, MemLayout};
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::dataflow;
+use speed_rvv::isa::StrategyKind;
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::sim::{ExecMode, Processor, SimStats};
+
+/// Deterministic xorshift64* stream.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next() % xs.len() as u64) as usize]
+    }
+
+    fn operand(&mut self, p: Precision) -> i32 {
+        let (lo, hi) = p.range();
+        lo + (self.next() % (hi - lo + 1) as u64) as i32
+    }
+}
+
+fn random_op(rng: &mut Rng) -> OpDesc {
+    let prec = *rng.pick(&Precision::ALL);
+    match rng.range(0, 3) {
+        0 => OpDesc::mm(
+            rng.range(1, 24) as u32,
+            rng.range(1, 48) as u32,
+            rng.range(1, 24) as u32,
+            prec,
+        ),
+        1 => {
+            let k = *rng.pick(&[1u32, 3, 5]);
+            OpDesc::conv(
+                rng.range(1, 12) as u32,
+                rng.range(1, 16) as u32,
+                rng.range(k as u64, 14) as u32,
+                rng.range(k as u64, 14) as u32,
+                k,
+                rng.range(1, 2) as u32,
+                k / 2,
+                prec,
+            )
+        }
+        2 => OpDesc::pwcv(
+            rng.range(1, 16) as u32,
+            rng.range(1, 16) as u32,
+            rng.range(1, 12) as u32,
+            rng.range(1, 12) as u32,
+            prec,
+        ),
+        _ => OpDesc::dwcv(
+            rng.range(1, 12) as u32,
+            rng.range(3, 14) as u32,
+            rng.range(3, 14) as u32,
+            3,
+            rng.range(1, 2) as u32,
+            1,
+            prec,
+        ),
+    }
+}
+
+/// Compile `op` once, execute the identical segments on a fresh machine in
+/// `mode`, and return (per-run stats merged, lifetime stats, memory image
+/// over the whole layout span).
+fn run_mode(
+    op: &OpDesc,
+    strat: StrategyKind,
+    functional: bool,
+    mode: ExecMode,
+    x: &[i32],
+    w: &[i32],
+) -> (SimStats, SimStats, Vec<u8>) {
+    let cfg = SpeedConfig::reference();
+    let span = MemLayout::required_bytes(op).max(1 << 16) as usize;
+    let mut p = Processor::new(cfg, span);
+    p.set_exec_mode(mode);
+    let layout = MemLayout::for_op(op, span).unwrap();
+    p.mem.preload_packed(layout.in_addr, x, op.prec);
+    p.mem.preload_packed(layout.w_addr, w, op.prec);
+    let c = compile_op(op, &cfg, strat, layout, functional).unwrap();
+    p.set_plan(c.plan);
+    let mut total = SimStats::default();
+    for seg in &c.segments {
+        total.merge(&p.run_segment(seg).unwrap());
+    }
+    // Fast-path sanity: the batch counters must account every instruction
+    // the compiler emitted, exactly.
+    assert_eq!(total.insns_total, c.summary.total_insns, "{op:?} {strat} {mode:?}");
+    let image = p.mem.inspect(0, span).to_vec();
+    (total, p.lifetime_stats().clone(), image)
+}
+
+/// Batch mode is bit-exact vs exact mode: stats, lifetime stats, and every
+/// byte of external memory (outputs, partial spills, untouched regions).
+#[test]
+fn prop_batch_parity_stats_and_memory() {
+    let mut rng = Rng::new(0xFA57);
+    for case in 0..60 {
+        let op = random_op(&mut rng);
+        let x: Vec<i32> =
+            (0..op.input_elems()).map(|_| rng.operand(op.prec)).collect();
+        let w: Vec<i32> =
+            (0..op.weight_elems()).map(|_| rng.operand(op.prec)).collect();
+        let functional = case % 2 == 0;
+        for strat in StrategyKind::ALL {
+            if !dataflow::applicable(strat, &op) {
+                continue;
+            }
+            let (se, le, me) = run_mode(&op, strat, functional, ExecMode::Exact, &x, &w);
+            let (sb, lb, mb) = run_mode(&op, strat, functional, ExecMode::Batch, &x, &w);
+            assert_eq!(se, sb, "case {case} {op:?} {strat} functional={functional}");
+            assert_eq!(le, lb, "case {case} {op:?} {strat} lifetime");
+            assert_eq!(me, mb, "case {case} {op:?} {strat} memory image");
+        }
+    }
+}
+
+/// The warm-engine path (program cache, persistent clock) is also
+/// mode-invariant: a whole model run produces identical aggregate stats.
+#[test]
+fn prop_engine_model_runs_mode_invariant() {
+    use speed_rvv::models::zoo::Model;
+    use speed_rvv::{Engine, Precision};
+
+    let model = Model {
+        name: "parity",
+        ops: vec![
+            OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int8),
+            OpDesc::pwcv(8, 8, 10, 10, Precision::Int8),
+            OpDesc::dwcv(8, 10, 10, 3, 1, 1, Precision::Int8),
+            OpDesc::mm(10, 8, 12, Precision::Int8),
+        ],
+        scalar_fraction: 0.1,
+    };
+    let run = |mode: ExecMode| {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        engine.set_exec_mode(mode);
+        let mut session = engine.session();
+        let mut results = Vec::new();
+        for prec in Precision::ALL {
+            // Two passes per precision: the second replays cached programs.
+            results.push(session.run_model(&model, prec).unwrap().total);
+            results.push(session.run_model(&model, prec).unwrap().total);
+        }
+        results
+    };
+    let exact = run(ExecMode::Exact);
+    let batch = run(ExecMode::Batch);
+    assert_eq!(exact.len(), batch.len());
+    for (i, (e, b)) in exact.iter().zip(&batch).enumerate() {
+        assert_eq!(e, b, "pass {i}");
+    }
+}
+
+/// The partial-spill schedule (FFCS when a block's all-F partials exceed
+/// the VRF partial partition: `f/lanes × 4 × ow > vrf/3`, i.e. wide
+/// feature maps at F=64) also survives the fast path bit-exactly — this
+/// exercises the `VLE` reload runs and the partial-region `VSE` runs.
+#[test]
+fn prop_partial_spill_paths_agree() {
+    let mut rng = Rng::new(2718);
+    for (c, functional) in [(16u32, false), (20, true)] {
+        // Spill needs both: 64 output channels × ow=90 → 5760 B of
+        // partials per output row per lane > the 5461 B partition budget,
+        // AND c > conv_c_chunk (14 at INT16/K=3) so the channel loop
+        // revisits blocks and round-trips partials through DRAM.
+        let op = OpDesc::conv(c, 64, 90, 90, 3, 1, 1, Precision::Int16);
+        let x: Vec<i32> =
+            (0..op.input_elems()).map(|_| rng.operand(op.prec)).collect();
+        let w: Vec<i32> =
+            (0..op.weight_elems()).map(|_| rng.operand(op.prec)).collect();
+        let (se, _, me) =
+            run_mode(&op, StrategyKind::Ffcs, functional, ExecMode::Exact, &x, &w);
+        let (sb, _, mb) =
+            run_mode(&op, StrategyKind::Ffcs, functional, ExecMode::Batch, &x, &w);
+        assert!(
+            se.traffic.partial_write > 0 && se.traffic.partial_read > 0,
+            "case must actually spill partials ({op:?}): {:?}",
+            se.traffic
+        );
+        assert_eq!(se, sb, "{op:?}");
+        assert_eq!(me, mb, "{op:?}");
+    }
+}
