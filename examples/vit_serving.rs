@@ -1,12 +1,15 @@
-//! Transformer serving: batched ViT MLP blocks through the PJRT hot path.
+//! Transformer serving: batched ViT MLP blocks through the PJRT hot path
+//! and the `speed_rvv::serve` pool — the canonical serving demo.
 //!
 //! Demonstrates the production runtime topology: Python never runs — the
 //! server loads the AOT-compiled `vit_mlp_i8` artifact once, then serves a
-//! stream of requests against it, while a warm SPEED [`Engine`] predicts
-//! what the same workload costs on silicon. Both sides are compile-once /
-//! execute-many: the PJRT executable cache on the functional path, the
-//! engine's program cache on the simulated path (the second and later
-//! blocks replay cached instruction streams — zero recompilation).
+//! stream of requests against it, while a [`ServePool`] of warm SPEED
+//! engines predicts what the same concurrent workload costs on silicon.
+//! Both sides are compile-once / execute-many: the PJRT executable cache
+//! on the functional path, the pool-shared program cache on the simulated
+//! path. The weights are loaded once and passed by reference on every
+//! request (`execute_slices`) — cloning them per request would distort
+//! the serving measurement.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example vit_serving
@@ -15,88 +18,118 @@
 use std::time::Instant;
 
 use speed_rvv::config::Precision;
-use speed_rvv::engine::Engine;
-use speed_rvv::isa::StrategyKind;
+use speed_rvv::coordinator::Policy;
 use speed_rvv::models::ops::OpDesc;
+use speed_rvv::models::zoo::Model;
 use speed_rvv::runtime::Engine as PjrtEngine;
-use speed_rvv::{SpeedConfig, SpeedError};
+use speed_rvv::serve::{RequestKind, ServeOptions};
+use speed_rvv::{ServePool, SpeedConfig, SpeedError};
 
 const REQUESTS: usize = 64;
 
 fn main() -> Result<(), SpeedError> {
-    let mut pjrt = match PjrtEngine::open("artifacts") {
-        Ok(e) => e,
+    // ViT-Tiny MLP dimensions; overwritten by the artifact manifest when
+    // the AOT outputs are present.
+    let (mut tokens, mut d, mut hidden) = (197u32, 192u32, 768u32);
+    match PjrtEngine::open("artifacts") {
+        Ok(mut pjrt) => {
+            let art = pjrt
+                .manifest()
+                .artifact("vit_mlp_i8")
+                .expect("vit_mlp_i8 in manifest")
+                .clone();
+            println!(
+                "serving vit_mlp_i8: x{:?} @ w1{:?} / w2{:?} (INT8, requantized)",
+                art.input_shapes[0], art.input_shapes[1], art.input_shapes[2]
+            );
+            tokens = art.input_shapes[0][0] as u32;
+            d = art.input_shapes[0][1] as u32;
+            hidden = art.input_shapes[1][1] as u32;
+
+            // Fixed weights: loaded once, like a deployed model, and
+            // passed by slice on every request. Only the activations are
+            // per-request.
+            let n_of = |s: &[i64]| s.iter().product::<i64>() as usize;
+            let w1: Vec<i32> =
+                (0..n_of(&art.input_shapes[1])).map(|i| (i as i32 % 11) - 5).collect();
+            let w2: Vec<i32> =
+                (0..n_of(&art.input_shapes[2])).map(|i| (i as i32 % 7) - 3).collect();
+
+            // Warm the executable cache (compile once).
+            let x0: Vec<i32> = vec![1; n_of(&art.input_shapes[0])];
+            let _ = pjrt.execute_slices("vit_mlp_i8", &[&x0, &w1, &w2])?;
+
+            let t0 = Instant::now();
+            let mut checksum = 0i64;
+            for req in 0..REQUESTS {
+                let x: Vec<i32> = (0..n_of(&art.input_shapes[0]))
+                    .map(|i| (((i + req * 31) % 23) as i32) - 11)
+                    .collect();
+                let y = pjrt.execute_slices("vit_mlp_i8", &[&x, &w1, &w2])?;
+                checksum = checksum.wrapping_add(y.iter().map(|&v| v as i64).sum::<i64>());
+            }
+            let dt = t0.elapsed();
+            println!(
+                "PJRT hot path: {REQUESTS} requests in {:.1} ms -> {:.0} req/s \
+                 (p50 latency {:.2} ms/batch, checksum {checksum})",
+                dt.as_secs_f64() * 1e3,
+                REQUESTS as f64 / dt.as_secs_f64(),
+                dt.as_secs_f64() * 1e3 / REQUESTS as f64
+            );
+        }
         Err(e) => {
-            eprintln!("artifacts not built ({e}); run `make artifacts`");
-            return Ok(());
+            eprintln!(
+                "artifacts not built ({e}); run `make artifacts` — \
+                 serving the SPEED simulation side only"
+            );
         }
-    };
-    let art = pjrt
-        .manifest()
-        .artifact("vit_mlp_i8")
-        .expect("vit_mlp_i8 in manifest")
-        .clone();
-    println!(
-        "serving vit_mlp_i8: x{:?} @ w1{:?} / w2{:?} (INT8, requantized)",
-        art.input_shapes[0], art.input_shapes[1], art.input_shapes[2]
-    );
-
-    // Fixed weights (loaded once, like a deployed model) + per-request
-    // activations.
-    let n_of = |s: &[i64]| s.iter().product::<i64>() as usize;
-    let w1: Vec<i32> = (0..n_of(&art.input_shapes[1])).map(|i| (i as i32 % 11) - 5).collect();
-    let w2: Vec<i32> = (0..n_of(&art.input_shapes[2])).map(|i| (i as i32 % 7) - 3).collect();
-
-    // Warm the executable cache (compile once).
-    let x0: Vec<i32> = vec![1; n_of(&art.input_shapes[0])];
-    let _ = pjrt.execute("vit_mlp_i8", &[x0.clone(), w1.clone(), w2.clone()])?;
-
-    let t0 = Instant::now();
-    let mut checksum = 0i64;
-    for req in 0..REQUESTS {
-        let x: Vec<i32> = (0..n_of(&art.input_shapes[0]))
-            .map(|i| (((i + req * 31) % 23) as i32) - 11)
-            .collect();
-        let y = pjrt.execute("vit_mlp_i8", &[x, w1.clone(), w2.clone()])?;
-        checksum = checksum.wrapping_add(y.iter().map(|&v| v as i64).sum::<i64>());
     }
-    let dt = t0.elapsed();
-    println!(
-        "PJRT hot path: {REQUESTS} requests in {:.1} ms -> {:.0} req/s \
-         (p50 latency {:.2} ms/batch, checksum {checksum})",
-        dt.as_secs_f64() * 1e3,
-        REQUESTS as f64 / dt.as_secs_f64(),
-        dt.as_secs_f64() * 1e3 / REQUESTS as f64
-    );
 
-    // ---- what the same block costs on SPEED silicon ----------------------
+    // ---- what the same serving workload costs on SPEED silicon ----------
+    // The MLP block as a two-layer model, served through a pool of warm
+    // engines: the first request compiles both MMs (shared pool-wide),
+    // every later one replays from cache, and identical concurrent
+    // requests coalesce into micro-batches.
     let cfg = SpeedConfig::reference();
-    let tokens = art.input_shapes[0][0] as u32;
-    let d = art.input_shapes[0][1] as u32;
-    let hidden = art.input_shapes[1][1] as u32;
-    let mm1 = OpDesc::mm(tokens, d, hidden, Precision::Int8);
-    let mm2 = OpDesc::mm(tokens, hidden, d, Precision::Int8);
-    let mut engine = Engine::new(cfg)?;
-    let mut session = engine.session();
-    // First block compiles both MMs; every subsequent block is pure cache
-    // hits — the serving steady state.
-    let mut cycles = 0u64;
-    for blk in 0..3 {
-        cycles = 0;
-        for op in [mm1, mm2] {
-            cycles += session.run_op(&op, StrategyKind::Mm)?.stats.cycles;
-        }
-        let cache = session.engine().cache_stats();
-        println!(
-            "block {blk}: {cycles} cycles ({} compiled programs, {} hits / {} misses)",
-            session.engine().compiled_programs(),
-            cache.hits,
-            cache.misses
-        );
-    }
+    let block = Model {
+        name: "vit_mlp",
+        ops: vec![
+            OpDesc::mm(tokens, d, hidden, Precision::Int8),
+            OpDesc::mm(tokens, hidden, d, Precision::Int8),
+        ],
+        scalar_fraction: 0.0,
+    };
+    let pool = ServePool::new(
+        cfg,
+        ServeOptions { workers: 2, capacity: 32, ..Default::default() },
+    )?;
+    let results = pool.run_all((0..REQUESTS).map(|_| RequestKind::Model {
+        model: block.clone(),
+        prec: Precision::Int8,
+        policy: Policy::Mixed,
+    }))?;
+    let metrics = pool.shutdown();
+
+    let cycles = results[0].stats.cycles;
+    println!(
+        "ServePool: {} requests on {} workers -> {:.0} req/s host-side \
+         ({} batches, {} coalesced, cache {:.0}% hit)",
+        metrics.completed,
+        metrics.workers,
+        metrics.throughput_rps,
+        metrics.batches,
+        metrics.coalesced,
+        100.0 * metrics.cache.hit_rate()
+    );
+    println!(
+        "  latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+        metrics.p50_us as f64 / 1e3,
+        metrics.p95_us as f64 / 1e3,
+        metrics.p99_us as f64 / 1e3
+    );
     println!(
         "SPEED silicon estimate: {cycles} cycles/block ({:.2} µs @ {:.2} GHz, \
-         {:.0}k blocks/s)",
+         {:.0}k blocks/s/instance)",
         cycles as f64 / (cfg.freq_ghz * 1e9) * 1e6,
         cfg.freq_ghz,
         cfg.freq_ghz * 1e9 / cycles as f64 / 1e3

@@ -27,7 +27,7 @@ use crate::models::OpDesc;
 use crate::sim::SimStats;
 
 /// Strategy selection policy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Policy {
     /// The paper's mixed dataflow: each operator uses its matched strategy.
     Mixed,

@@ -28,7 +28,7 @@
 //! the sizing pre-pass and all layout/validation work.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::compiler::{self, CodegenSummary, MemLayout, MEM_MIN_BYTES};
 use crate::config::{Precision, SpeedConfig};
@@ -105,6 +105,9 @@ impl Program {
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Subset of `hits` that were satisfied by a [`SharedPrograms`] cache
+    /// (another engine in the pool compiled the program first).
+    pub shared_hits: u64,
 }
 
 impl CacheStats {
@@ -120,11 +123,50 @@ impl CacheStats {
     }
 }
 
+/// A compiled-program cache shared by every engine of a pool: cloning is
+/// cheap (one `Arc`), and a program any member compiles becomes a cache
+/// hit for all of them. Engines consult their private map first (no lock
+/// on the steady-state hot path) and fall back to the shared map before
+/// compiling.
+#[derive(Clone, Default)]
+pub struct SharedPrograms {
+    map: Arc<Mutex<HashMap<ProgramKey, Arc<Program>>>>,
+}
+
+impl SharedPrograms {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of distinct compiled programs in the shared cache.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get(&self, key: &ProgramKey) -> Option<Arc<Program>> {
+        self.map.lock().unwrap_or_else(|e| e.into_inner()).get(key).cloned()
+    }
+
+    fn insert(&self, key: ProgramKey, prog: Arc<Program>) {
+        self.map
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(key)
+            .or_insert(prog);
+    }
+}
+
 /// A warm SPEED instance plus its compiled-program cache.
 pub struct Engine {
     cfg: SpeedConfig,
     proc: Processor,
     programs: HashMap<ProgramKey, Arc<Program>>,
+    /// Pool-wide second-level cache (see [`SharedPrograms`]).
+    shared: Option<SharedPrograms>,
     cache: CacheStats,
 }
 
@@ -143,8 +185,23 @@ impl Engine {
             cfg,
             proc: Processor::new(cfg, mem),
             programs: HashMap::new(),
+            shared: None,
             cache: CacheStats::default(),
         })
+    }
+
+    /// Build a pool-member engine: compilation results are exchanged with
+    /// every other engine attached to the same [`SharedPrograms`], so the
+    /// pool compiles each distinct `(op, strategy, precision, config)`
+    /// program once rather than once per worker.
+    pub fn with_shared(
+        cfg: SpeedConfig,
+        mem_bytes: usize,
+        shared: SharedPrograms,
+    ) -> Result<Self> {
+        let mut engine = Self::with_memory(cfg, mem_bytes)?;
+        engine.shared = Some(shared);
+        Ok(engine)
     }
 
     pub fn config(&self) -> &SpeedConfig {
@@ -184,6 +241,17 @@ impl Engine {
         self.proc.exec_mode()
     }
 
+    /// Drain the warm processor's pipeline back to its fresh-construction
+    /// timing state (see [`Processor::reset_pipeline`]). The program
+    /// cache, external memory, and datapath control state all persist —
+    /// after a quiesce, a cached program replays with exactly the
+    /// [`SimStats`] it would report on a brand-new engine. The serving
+    /// layer quiesces at request boundaries so per-request statistics do
+    /// not depend on what the worker ran before.
+    pub fn quiesce(&mut self) {
+        self.proc.reset_pipeline();
+    }
+
     /// Open a run handle. Sessions borrow the engine mutably; state
     /// (cache, clock, precision) persists across sessions.
     pub fn session(&mut self) -> Session<'_> {
@@ -219,6 +287,14 @@ impl Engine {
             self.cache.hits += 1;
             return Ok(p.clone());
         }
+        if let Some(shared) = &self.shared {
+            if let Some(p) = shared.get(&key) {
+                self.cache.hits += 1;
+                self.cache.shared_hits += 1;
+                self.programs.insert(key, p.clone());
+                return Ok(p);
+            }
+        }
         self.cache.misses += 1;
         let (layout, required_bytes) = MemLayout::place(op);
         // Sizing pass first: `Sink::Collect` would materialize the *whole*
@@ -243,6 +319,9 @@ impl Engine {
         };
         let prog = Arc::new(Program { plan, layout, required_bytes, summary, segments });
         self.programs.insert(key, prog.clone());
+        if let Some(shared) = &self.shared {
+            shared.insert(key, prog.clone());
+        }
         Ok(prog)
     }
 
@@ -473,6 +552,53 @@ mod tests {
         let bad = SpeedConfig { lanes: 3, ..SpeedConfig::reference() };
         let err = Engine::new(bad).map(|_| ()).unwrap_err();
         assert!(matches!(err, SpeedError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn quiesce_reproduces_fresh_engine_stats() {
+        // After arbitrary prior work plus a quiesce, a model run reports
+        // per-run stats bit-identical to a brand-new engine's first run —
+        // the serving layer's per-request determinism contract.
+        let model = tiny_model();
+        let mut fresh = Engine::new(SpeedConfig::reference()).unwrap();
+        let baseline = fresh.session().run_model(&model, Precision::Int8).unwrap();
+
+        let mut warm = Engine::new(SpeedConfig::reference()).unwrap();
+        let mut session = warm.session();
+        session.run_model(&model, Precision::Int16).unwrap();
+        session.run_model(&model, Precision::Int8).unwrap();
+        drop(session);
+        warm.quiesce();
+        let replay = warm.session().run_model(&model, Precision::Int8).unwrap();
+        assert_eq!(baseline.total, replay.total);
+        for (a, b) in baseline.layers.iter().zip(&replay.layers) {
+            assert_eq!(a.stats, b.stats);
+        }
+    }
+
+    #[test]
+    fn shared_programs_compile_once_across_engines() {
+        let shared = SharedPrograms::new();
+        let cfg = SpeedConfig::reference();
+        let model = tiny_model();
+        let mut a = Engine::with_shared(cfg, 0, shared.clone()).unwrap();
+        a.session().run_model(&model, Precision::Int8).unwrap();
+        assert_eq!(a.cache_stats().misses, 4);
+        assert_eq!(shared.len(), 4);
+
+        // A second pool member finds every program already compiled.
+        let mut b = Engine::with_shared(cfg, 0, shared.clone()).unwrap();
+        b.session().run_model(&model, Precision::Int8).unwrap();
+        let stats = b.cache_stats();
+        assert_eq!(stats.misses, 0);
+        assert_eq!(stats.hits, 4);
+        assert_eq!(stats.shared_hits, 4);
+        // ...and its private map now holds them: a repeat pass hits
+        // without touching the shared lock's counters again.
+        b.session().run_model(&model, Precision::Int8).unwrap();
+        assert_eq!(b.cache_stats().shared_hits, 4);
+        assert_eq!(b.cache_stats().hits, 8);
+        assert!(!shared.is_empty());
     }
 
     #[test]

@@ -34,6 +34,10 @@ pub enum SpeedError {
     /// Benchmark-harness failure: unreadable baseline, or a measured
     /// metric regressed past the gate (`speed-bench --baseline`).
     Bench(String),
+    /// Serving-subsystem failure: request queue overflow under
+    /// backpressure, submission to a shut-down pool, or a worker that
+    /// died while holding a request.
+    Serve(String),
 }
 
 impl SpeedError {
@@ -47,6 +51,7 @@ impl SpeedError {
             SpeedError::Artifact(_) => "artifact",
             SpeedError::Parse(_) => "parse",
             SpeedError::Bench(_) => "bench",
+            SpeedError::Serve(_) => "serve",
         }
     }
 
@@ -58,7 +63,8 @@ impl SpeedError {
             | SpeedError::Layout(m)
             | SpeedError::Artifact(m)
             | SpeedError::Parse(m)
-            | SpeedError::Bench(m) => m.clone(),
+            | SpeedError::Bench(m)
+            | SpeedError::Serve(m) => m.clone(),
             SpeedError::Sim(e) => e.to_string(),
         }
     }
@@ -121,6 +127,7 @@ mod tests {
             SpeedError::Artifact("x".into()),
             SpeedError::Parse("x".into()),
             SpeedError::Bench("x".into()),
+            SpeedError::Serve("x".into()),
         ] {
             assert!(e.source().is_none(), "{e}");
         }
@@ -136,6 +143,7 @@ mod tests {
             SpeedError::Artifact("m".into()),
             SpeedError::Parse("m".into()),
             SpeedError::Bench("m".into()),
+            SpeedError::Serve("m".into()),
         ]
         .iter()
         .map(|e| e.kind())

@@ -59,7 +59,13 @@
 //! * a **perf harness** ([`bench`], CLI `speed-bench`) measuring the
 //!   simulator's own throughput (ops/s, simulated-stages/s, cache hit
 //!   rates) into a machine-readable `BENCH_sim.json`, gated in CI against
-//!   `bench/baseline.json`.
+//!   `bench/baseline.json`;
+//! * a **multi-tenant serving subsystem** ([`serve`], CLI `serve-bench`):
+//!   a [`serve::ServePool`] of warm engines behind a bounded queue with
+//!   backpressure, precision-affinity scheduling with work stealing,
+//!   dynamic micro-batching of identical requests, JSON scenario files
+//!   (`bench/scenarios/`), and a deterministic per-request statistics
+//!   contract (`SERVE_bench.json`).
 //!
 //! See `DESIGN.md` for the substitution rationale and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -78,9 +84,11 @@ pub mod metrics;
 pub mod models;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 
 pub use config::{Precision, SpeedConfig, SpeedConfigBuilder};
-pub use engine::{CacheStats, Engine, Session};
+pub use engine::{CacheStats, Engine, Session, SharedPrograms};
 pub use error::SpeedError;
+pub use serve::{ServePool, Ticket};
 pub use sim::ExecMode;

@@ -12,6 +12,9 @@
 //! repro speed-bench [--quick] [--exact] [--out FILE] [--baseline FILE]
 //!                   [--write-baseline FILE] [--tolerance F]
 //!                                       perf harness -> BENCH_sim.json
+//! repro serve-bench --scenario FILE [--workers N] [--quick] [--exact]
+//!                   [--max-batch K] [--out FILE]
+//!                                       serving harness -> SERVE_bench.json
 //! repro asm <file.s>                    assemble / encode / disassemble
 //! repro info                            configuration + artifact summary
 //! ```
@@ -39,6 +42,7 @@ use speed_rvv::isa::{self, StrategyKind};
 use speed_rvv::models::zoo::{model_by_name, MODELS};
 use speed_rvv::report;
 use speed_rvv::runtime::{golden_check_all, Engine as PjrtEngine};
+use speed_rvv::serve;
 use speed_rvv::sim::ExecMode;
 
 fn main() -> ExitCode {
@@ -89,6 +93,7 @@ fn dispatch(args: &[String]) -> Result<(), SpeedError> {
             Ok(())
         }
         "speed-bench" => cmd_speed_bench(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         "asm" => cmd_asm(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -120,6 +125,14 @@ commands:
                               (ops/s, simulated-stages/s, wall time, cache
                               hit rates) and optionally gates against a
                               committed baseline (exit 1 on regression)
+  serve-bench --scenario FILE [--workers N] [--quick] [--exact]
+              [--max-batch K] [--out FILE]
+                              run a serving scenario (bench/scenarios/*.json)
+                              through a ServePool; writes SERVE_bench.json
+                              (throughput, p50/p95/p99 latency, queue depth,
+                              cache hit rate, precision switches) and prints a
+                              per-request stats digest that is identical for
+                              any worker count / batching / --exact choice
   asm <file.s>                assemble, encode, and disassemble a program
   info                        configuration + artifact summary
 run-model also accepts --exact (per-instruction simulation; the default
@@ -319,6 +332,45 @@ fn cmd_speed_bench(args: &[String]) -> Result<(), SpeedError> {
         bench::check_baseline(&report, &src, tolerance)?;
         println!("baseline check passed ({path})");
     }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &[String]) -> Result<(), SpeedError> {
+    let scenario_path = opt(args, "--scenario").ok_or_else(|| {
+        SpeedError::Config(
+            "serve-bench needs --scenario FILE (see bench/scenarios/)".into(),
+        )
+    })?;
+    let scenario = serve::Scenario::load(scenario_path)?;
+    // Defaults (worker count included) live in ServeBenchOptions::default;
+    // the CLI only overrides what was passed.
+    let mut opts = serve::ServeBenchOptions {
+        quick: flag(args, "--quick"),
+        exact: flag(args, "--exact"),
+        ..Default::default()
+    };
+    if let Some(v) = opt(args, "--workers") {
+        opts.workers = v
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| SpeedError::Config(format!("bad --workers '{v}' (want N >= 1)")))?;
+    }
+    if let Some(v) = opt(args, "--max-batch") {
+        opts.max_batch = Some(
+            v.parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| {
+                SpeedError::Config(format!("bad --max-batch '{v}' (want K >= 1)"))
+            })?,
+        );
+    }
+    let report = serve::run_serve_bench(&scenario, &opts)?;
+    print!("{}", report.summary_text());
+    let out = opt(args, "--out").unwrap_or("SERVE_bench.json");
+    // Bench-harness failure class, matching cmd_speed_bench: an unwritable
+    // report path is not a serving overload.
+    std::fs::write(out, report.to_json())
+        .map_err(|e| SpeedError::Bench(format!("writing {out}: {e}")))?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -223,6 +223,56 @@ mod tests {
     }
 
     #[test]
+    fn every_model_validates_at_every_precision() {
+        // The serving scenarios draw (model, precision) pairs freely; every
+        // combination must be structurally valid.
+        for name in MODELS {
+            let m = model_by_name(name).unwrap();
+            for prec in Precision::ALL {
+                let mp = m.at_precision(prec);
+                assert_eq!(mp.ops.len(), m.ops.len());
+                for op in &mp.ops {
+                    assert_eq!(op.prec, prec);
+                    op.validate().unwrap_or_else(|e| panic!("{name}@{prec}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mem_requirement_fits_or_yields_typed_layout_error() {
+        use crate::compiler::{MemLayout, MEM_MIN_BYTES};
+        use crate::coordinator::mem_requirement;
+        use crate::error::SpeedError;
+        for name in MODELS {
+            let m = model_by_name(name).unwrap();
+            for prec in Precision::ALL {
+                let mp = m.at_precision(prec);
+                let need = mem_requirement(&mp);
+                assert!(need >= MEM_MIN_BYTES as usize, "{name}@{prec}");
+                for op in &mp.ops {
+                    // The model's own requirement covers every layer...
+                    MemLayout::for_op(op, need)
+                        .unwrap_or_else(|e| panic!("{name}@{prec}: {e}"));
+                    // ...the engine's default memory floor either fits the
+                    // layer or yields a typed Layout error — never a panic
+                    // (the engine grows memory lazily off this signal)...
+                    match MemLayout::for_op(op, MEM_MIN_BYTES as usize) {
+                        Ok(_) | Err(SpeedError::Layout(_)) => {}
+                        Err(other) => panic!("{name}@{prec}: wrong class {other}"),
+                    }
+                    // ...and a hopeless memory is always the typed error.
+                    match MemLayout::for_op(op, 64) {
+                        Err(SpeedError::Layout(_)) => {}
+                        Ok(_) => panic!("{name}@{prec}: {op:?} fit 64 B"),
+                        Err(other) => panic!("{name}@{prec}: wrong class {other}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn vgg16_macs_match_published_scale() {
         // VGG16 is ~15.5 GMACs at 224x224.
         let m = vgg16(Precision::Int8);

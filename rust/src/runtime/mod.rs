@@ -72,6 +72,14 @@ impl Engine {
     /// Execute an artifact on int32 inputs (shapes validated against the
     /// manifest). Returns the flattened int32 output.
     pub fn execute(&mut self, name: &str, inputs: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let views: Vec<&[i32]> = inputs.iter().map(Vec::as_slice).collect();
+        self.execute_slices(name, &views)
+    }
+
+    /// Borrowing variant of [`Engine::execute`]: a serving hot loop keeps
+    /// its weights loaded once and passes them by reference on every
+    /// request, instead of cloning megabytes of operands per call.
+    pub fn execute_slices(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<i32>> {
         let art = self
             .manifest
             .artifact(name)
@@ -94,7 +102,7 @@ impl Engine {
                     shape
                 )));
             }
-            let lit = xla::Literal::vec1(data)
+            let lit = xla::Literal::vec1(*data)
                 .reshape(shape)
                 .map_err(|e| aerr(format!("reshape input {i}: {e:?}")))?;
             literals.push(lit);

@@ -1,0 +1,208 @@
+//! Dynamic micro-batching: coalescing identical requests into one replay.
+//!
+//! The simulator is deterministic and the pool quiesces the pipeline at
+//! request boundaries, so two requests with the same [`BatchKey`] are
+//! guaranteed to produce bit-identical [`SimStats`]. The scheduler
+//! exploits that: when a worker pops a lane it also takes every same-key
+//! request waiting there (up to the configured cap), runs the compiled
+//! programs **once**, and fulfills the whole batch with the one result —
+//! `k` queued inferences for the cost of one simulation, with no change
+//! to any request's reported statistics (`tests/serve_parity.rs` holds
+//! batched and unbatched runs bit-equal).
+
+use std::hash::{Hash, Hasher};
+
+use crate::config::Precision;
+use crate::coordinator::Policy;
+use crate::engine::Engine;
+use crate::error::Result;
+use crate::isa::StrategyKind;
+use crate::models::OpDesc;
+use crate::sim::SimStats;
+
+use super::RequestKind;
+
+/// Coalescing key: requests compare equal exactly when they replay the
+/// same compiled-program sequence — same workload, same precision, same
+/// strategy selection.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum BatchKey {
+    /// A model request: zoo name, requested precision, policy, and an
+    /// FNV-64 digest over the full operator list (downscaled variants of
+    /// the same zoo model must not coalesce with full-size ones).
+    Model { name: &'static str, prec: Precision, policy: Policy, ops_hash: u64 },
+    /// A single-operator request (the descriptor is its own key).
+    Op { op: OpDesc, strat: StrategyKind },
+}
+
+impl BatchKey {
+    pub fn of(kind: &RequestKind) -> BatchKey {
+        match kind {
+            RequestKind::Model { model, prec, policy } => {
+                let mut h = Fnv64::new();
+                for op in &model.ops {
+                    op.hash(&mut h);
+                }
+                BatchKey::Model {
+                    name: model.name,
+                    prec: *prec,
+                    policy: *policy,
+                    ops_hash: h.finish(),
+                }
+            }
+            RequestKind::Op { op, strat } => BatchKey::Op { op: *op, strat: *strat },
+        }
+    }
+}
+
+/// Execute one request (or the representative of a micro-batch) on a
+/// quiesced worker engine. Returns the deterministic per-request stats
+/// plus the number of vector operators executed.
+///
+/// `stats.precision_switches` is rewritten to the request's *internal*
+/// switch count (see the `serve` module docs): the boundary switch a
+/// worker may pay when its datapath was left at another precision is
+/// schedule-dependent and is accounted at pool level instead.
+pub(crate) fn execute_request(
+    engine: &mut Engine,
+    kind: &RequestKind,
+) -> Result<(SimStats, usize)> {
+    engine.quiesce();
+    match kind {
+        RequestKind::Model { model, prec, policy } => {
+            let mut session = engine.session().with_policy(*policy);
+            let r = session.run_model(model, *prec)?;
+            let mut stats = r.total.clone();
+            stats.precision_switches =
+                intra_request_switches(r.layers.iter().map(|l| l.op.prec));
+            Ok((stats, r.layers.len()))
+        }
+        RequestKind::Op { op, strat } => {
+            let (mut stats, _) = engine.run_op(op, *strat, false)?;
+            stats.precision_switches = 0;
+            Ok((stats, 1))
+        }
+    }
+}
+
+/// Precision transitions *within* one request's executed operator
+/// sequence (independent of what the worker ran before).
+fn intra_request_switches(mut precs: impl Iterator<Item = Precision>) -> u64 {
+    let Some(mut cur) = precs.next() else {
+        return 0;
+    };
+    let mut switches = 0;
+    for p in precs {
+        if p != cur {
+            switches += 1;
+            cur = p;
+        }
+    }
+    switches
+}
+
+/// FNV-1a, 64-bit: a tiny deterministic hasher (the std `DefaultHasher`
+/// is not guaranteed stable across releases, and batching keys plus the
+/// serve-bench digest must be reproducible).
+pub(crate) struct Fnv64(u64);
+
+impl Fnv64 {
+    pub(crate) fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Hasher for Fnv64 {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedConfig;
+    use crate::models::zoo::model_by_name;
+    use crate::report::fig12::downscale;
+
+    #[test]
+    fn op_requests_key_on_descriptor_and_strategy() {
+        let a = RequestKind::Op {
+            op: OpDesc::mm(4, 4, 4, Precision::Int8),
+            strat: StrategyKind::Mm,
+        };
+        let b = RequestKind::Op {
+            op: OpDesc::mm(4, 4, 4, Precision::Int8),
+            strat: StrategyKind::Mm,
+        };
+        let c = RequestKind::Op {
+            op: OpDesc::mm(4, 4, 4, Precision::Int4),
+            strat: StrategyKind::Mm,
+        };
+        assert_eq!(BatchKey::of(&a), BatchKey::of(&b));
+        assert_ne!(BatchKey::of(&a), BatchKey::of(&c));
+    }
+
+    #[test]
+    fn model_requests_distinguish_shape_variants() {
+        let full = model_by_name("mobilenetv2").unwrap();
+        let small = downscale(&full, 4);
+        let k_full = BatchKey::of(&RequestKind::Model {
+            model: full.clone(),
+            prec: Precision::Int8,
+            policy: Policy::Mixed,
+        });
+        let k_small = BatchKey::of(&RequestKind::Model {
+            model: small.clone(),
+            prec: Precision::Int8,
+            policy: Policy::Mixed,
+        });
+        let k_small2 = BatchKey::of(&RequestKind::Model {
+            model: small.clone(),
+            prec: Precision::Int8,
+            policy: Policy::Mixed,
+        });
+        assert_ne!(k_full, k_small, "downscaled variant must not coalesce");
+        assert_eq!(k_small, k_small2);
+        let k_prec = BatchKey::of(&RequestKind::Model {
+            model: small,
+            prec: Precision::Int4,
+            policy: Policy::Mixed,
+        });
+        assert_ne!(k_small, k_prec);
+    }
+
+    #[test]
+    fn intra_switches_count_transitions_only() {
+        use Precision::*;
+        assert_eq!(intra_request_switches(std::iter::empty::<Precision>()), 0);
+        assert_eq!(intra_request_switches([Int8, Int8, Int8].into_iter()), 0);
+        assert_eq!(intra_request_switches([Int8, Int4, Int4, Int16].into_iter()), 2);
+    }
+
+    #[test]
+    fn execute_request_is_repeatable_on_one_engine() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let kind = RequestKind::Op {
+            op: OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int8),
+            strat: StrategyKind::Ffcs,
+        };
+        let (a, la) = execute_request(&mut engine, &kind).unwrap();
+        // Interleave unrelated work at another precision, then repeat.
+        let other = RequestKind::Op {
+            op: OpDesc::mm(6, 12, 6, Precision::Int16),
+            strat: StrategyKind::Mm,
+        };
+        execute_request(&mut engine, &other).unwrap();
+        let (b, lb) = execute_request(&mut engine, &kind).unwrap();
+        assert_eq!(a, b, "quiesce + switch normalization make replays bit-identical");
+        assert_eq!(la, lb);
+    }
+}

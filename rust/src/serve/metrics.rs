@@ -1,0 +1,415 @@
+//! The serving metrics layer: per-request latency accounting and the
+//! aggregate snapshot (`SERVE_bench.json`'s `metrics` object).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::engine::CacheStats;
+
+use super::scenario::XorShift64;
+
+/// Counters harvested from the scheduler under its lock.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct SchedCounters {
+    pub steals: u64,
+    pub affinity_hits: u64,
+    pub affinity_misses: u64,
+    pub max_depth: usize,
+    pub avg_depth: f64,
+}
+
+/// Exact per-request latencies are kept up to this many samples; past it
+/// the vector stops growing and reservoir replacement keeps a uniform
+/// sample of the whole stream (a long-lived pool must not accumulate one
+/// `u64` per request forever). `mean`/`max` stay exact regardless.
+const LATENCY_SAMPLE_CAP: usize = 1 << 16;
+
+#[derive(Default)]
+struct Core {
+    submitted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    /// Requests that shared a batch with at least one other request.
+    coalesced: u64,
+    /// Bounded latency sample (see [`LATENCY_SAMPLE_CAP`]).
+    lat_us: Vec<u64>,
+    /// Total finished requests observed (reservoir denominator).
+    lat_seen: u64,
+    /// Exact running sum and max over *all* latencies.
+    lat_sum: u64,
+    lat_max: u64,
+    /// Deterministic generator for reservoir replacement.
+    rng: XorShift64,
+}
+
+/// Live pool counters (one mutex, touched once per request event).
+pub(crate) struct ServeMetrics {
+    core: Mutex<Core>,
+    started: Instant,
+}
+
+impl ServeMetrics {
+    pub(crate) fn new() -> Self {
+        ServeMetrics { core: Mutex::new(Core::default()), started: Instant::now() }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Core> {
+        self.core.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub(crate) fn record_submitted(&self) {
+        self.lock().submitted += 1;
+    }
+
+    pub(crate) fn record_rejected(&self) {
+        self.lock().rejected += 1;
+    }
+
+    pub(crate) fn record_batch(&self, size: u64) {
+        let mut c = self.lock();
+        c.batches += 1;
+        if size > 1 {
+            c.coalesced += size;
+        }
+    }
+
+    pub(crate) fn record_finished(&self, ok: bool, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        let mut c = self.lock();
+        if ok {
+            c.completed += 1;
+        } else {
+            c.failed += 1;
+        }
+        c.lat_seen += 1;
+        c.lat_sum += us;
+        c.lat_max = c.lat_max.max(us);
+        if c.lat_us.len() < LATENCY_SAMPLE_CAP {
+            c.lat_us.push(us);
+        } else {
+            // Algorithm R: replace a uniformly drawn slot with probability
+            // cap / seen, keeping the sample uniform over the stream.
+            let seen = c.lat_seen;
+            let idx = c.rng.below(seen) as usize;
+            if idx < LATENCY_SAMPLE_CAP {
+                c.lat_us[idx] = us;
+            }
+        }
+    }
+
+    pub(crate) fn snapshot(
+        &self,
+        workers: usize,
+        sched: SchedCounters,
+        cache: CacheStats,
+        precision_switches: u64,
+        compiled_programs: usize,
+    ) -> MetricsSnapshot {
+        let wall_s = self.started.elapsed().as_secs_f64();
+        // Copy out under the lock; the O(n log n) sort happens outside it
+        // so the completion hot path is never stalled behind a snapshot.
+        struct Scalars {
+            submitted: u64,
+            rejected: u64,
+            completed: u64,
+            failed: u64,
+            batches: u64,
+            coalesced: u64,
+            lat_seen: u64,
+            lat_sum: u64,
+            lat_max: u64,
+        }
+        let (c, mut sorted) = {
+            let c = self.lock();
+            (
+                Scalars {
+                    submitted: c.submitted,
+                    rejected: c.rejected,
+                    completed: c.completed,
+                    failed: c.failed,
+                    batches: c.batches,
+                    coalesced: c.coalesced,
+                    lat_seen: c.lat_seen,
+                    lat_sum: c.lat_sum,
+                    lat_max: c.lat_max,
+                },
+                c.lat_us.clone(),
+            )
+        };
+        sorted.sort_unstable();
+        let mean_us = if c.lat_seen == 0 {
+            0.0
+        } else {
+            c.lat_sum as f64 / c.lat_seen as f64
+        };
+        MetricsSnapshot {
+            workers,
+            submitted: c.submitted,
+            rejected: c.rejected,
+            completed: c.completed,
+            failed: c.failed,
+            in_flight: c.submitted.saturating_sub(c.completed + c.failed),
+            batches: c.batches,
+            coalesced: c.coalesced,
+            wall_s,
+            throughput_rps: if wall_s > 0.0 {
+                (c.completed + c.failed) as f64 / wall_s
+            } else {
+                0.0
+            },
+            p50_us: percentile_us(&sorted, 0.50),
+            p95_us: percentile_us(&sorted, 0.95),
+            p99_us: percentile_us(&sorted, 0.99),
+            max_us: c.lat_max,
+            mean_us,
+            queue_max_depth: sched.max_depth,
+            queue_avg_depth: sched.avg_depth,
+            steals: sched.steals,
+            affinity_hits: sched.affinity_hits,
+            affinity_misses: sched.affinity_misses,
+            cache,
+            compiled_programs,
+            precision_switches,
+        }
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted latency vector.
+pub fn percentile_us(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// A point-in-time aggregate view of a pool.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub workers: usize,
+    pub submitted: u64,
+    /// `try_submit` calls refused for lack of queue space.
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Admitted but not yet finished.
+    pub in_flight: u64,
+    /// Micro-batches executed (a lone request is a batch of one).
+    pub batches: u64,
+    /// Requests that shared a batch with at least one other request.
+    pub coalesced: u64,
+    /// Seconds since the pool started.
+    pub wall_s: f64,
+    /// Finished requests per second of pool lifetime.
+    pub throughput_rps: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub mean_us: f64,
+    /// Deepest total queue observed at routing time.
+    pub queue_max_depth: usize,
+    /// Mean total queue depth observed at routing time.
+    pub queue_avg_depth: f64,
+    pub steals: u64,
+    /// Requests routed to a lane already at their precision.
+    pub affinity_hits: u64,
+    pub affinity_misses: u64,
+    /// Pool-wide program-cache counters (summed over workers).
+    pub cache: CacheStats,
+    /// Distinct compiled programs resident across workers (sum of private
+    /// caches; shared-cache reuse makes this ≥ the distinct-key count).
+    pub compiled_programs: usize,
+    /// Aggregate *datapath* precision switches across all workers —
+    /// including the request-boundary switches the affinity scheduler
+    /// exists to minimize (per-request stats exclude them; see the
+    /// `serve` module docs).
+    pub precision_switches: u64,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of routed requests that landed on a precision-matched lane.
+    pub fn affinity_rate(&self) -> f64 {
+        let n = self.affinity_hits + self.affinity_misses;
+        if n == 0 {
+            return 0.0;
+        }
+        self.affinity_hits as f64 / n as f64
+    }
+
+    /// Serialize as a JSON object (embedded in `SERVE_bench.json` under
+    /// `"metrics"`). `indent` is prepended to every inner line.
+    pub fn json_object(&self, indent: &str) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n");
+        let mut field = |k: &str, v: String, last: bool| {
+            s.push_str(&format!("{indent}  {}: {}{}\n", jstr(k), v, if last { "" } else { "," }));
+        };
+        field("workers", self.workers.to_string(), false);
+        field("submitted", self.submitted.to_string(), false);
+        field("rejected", self.rejected.to_string(), false);
+        field("completed", self.completed.to_string(), false);
+        field("failed", self.failed.to_string(), false);
+        field("in_flight", self.in_flight.to_string(), false);
+        field("batches", self.batches.to_string(), false);
+        field("coalesced", self.coalesced.to_string(), false);
+        field("wall_s", jf(self.wall_s), false);
+        field("throughput_rps", jf(self.throughput_rps), false);
+        field(
+            "latency_us",
+            format!(
+                "{{ \"p50\": {}, \"p95\": {}, \"p99\": {}, \"max\": {}, \"mean\": {} }}",
+                self.p50_us,
+                self.p95_us,
+                self.p99_us,
+                self.max_us,
+                jf(self.mean_us)
+            ),
+            false,
+        );
+        field(
+            "queue",
+            format!(
+                "{{ \"max_depth\": {}, \"avg_depth\": {} }}",
+                self.queue_max_depth,
+                jf(self.queue_avg_depth)
+            ),
+            false,
+        );
+        field("steals", self.steals.to_string(), false);
+        field("affinity_hits", self.affinity_hits.to_string(), false);
+        field("affinity_misses", self.affinity_misses.to_string(), false);
+        field("affinity_rate", jf(self.affinity_rate()), false);
+        field(
+            "cache",
+            format!(
+                "{{ \"hits\": {}, \"misses\": {}, \"shared_hits\": {}, \"hit_rate\": {} }}",
+                self.cache.hits,
+                self.cache.misses,
+                self.cache.shared_hits,
+                jf(self.cache.hit_rate())
+            ),
+            false,
+        );
+        field("compiled_programs", self.compiled_programs.to_string(), false);
+        field("precision_switches", self.precision_switches.to_string(), true);
+        s.push_str(&format!("{indent}}}"));
+        s
+    }
+}
+
+/// Format a finite float for JSON (non-finite values serialize as 0).
+pub(crate) fn jf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0".into()
+    }
+}
+
+/// JSON-escape a string.
+pub(crate) fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::json::{parse, Json};
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        assert_eq!(percentile_us(&[], 0.5), 0);
+        assert_eq!(percentile_us(&[7], 0.99), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&v, 0.0), 1);
+        assert_eq!(percentile_us(&v, 0.50), 51); // round(99*0.5)=50 -> v[50]
+        assert_eq!(percentile_us(&v, 0.95), 95);
+        assert_eq!(percentile_us(&v, 1.0), 100);
+    }
+
+    #[test]
+    fn latency_sample_is_bounded_but_mean_max_exact() {
+        let m = ServeMetrics::new();
+        let n = LATENCY_SAMPLE_CAP as u64 + 8_192;
+        for i in 0..n {
+            m.record_finished(true, Duration::from_micros(i + 1));
+        }
+        let snap = m.snapshot(1, SchedCounters::default(), CacheStats::default(), 0, 0);
+        assert_eq!(snap.completed, n);
+        // Exact even past the sample cap.
+        assert_eq!(snap.max_us, n);
+        assert!((snap.mean_us - (n + 1) as f64 / 2.0).abs() < 1.0);
+        // Percentiles come from the bounded uniform sample: ordered and
+        // inside the observed range.
+        assert!(snap.p50_us >= 1 && snap.p50_us <= n);
+        assert!(snap.p50_us <= snap.p95_us);
+        assert!(snap.p95_us <= snap.p99_us);
+        assert!(snap.p99_us <= snap.max_us);
+    }
+
+    #[test]
+    fn snapshot_counts_and_json_parse() {
+        let m = ServeMetrics::new();
+        for _ in 0..5 {
+            m.record_submitted();
+        }
+        m.record_rejected();
+        m.record_batch(3);
+        m.record_batch(1);
+        for i in 0..4 {
+            m.record_finished(true, Duration::from_micros(100 * (i + 1)));
+        }
+        m.record_finished(false, Duration::from_micros(900));
+        let snap = m.snapshot(
+            2,
+            SchedCounters {
+                steals: 1,
+                affinity_hits: 3,
+                affinity_misses: 2,
+                max_depth: 4,
+                avg_depth: 2.0,
+            },
+            CacheStats { hits: 8, misses: 2, shared_hits: 4 },
+            7,
+            2,
+        );
+        assert_eq!(snap.submitted, 5);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.in_flight, 0);
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.coalesced, 3);
+        assert_eq!(snap.p50_us, 300);
+        assert_eq!(snap.max_us, 900);
+        assert!((snap.affinity_rate() - 0.6).abs() < 1e-12);
+        assert!(snap.throughput_rps > 0.0);
+
+        let doc = parse(&snap.json_object("")).unwrap();
+        assert_eq!(doc.get("completed").and_then(Json::as_i64), Some(4));
+        assert_eq!(
+            doc.get("latency_us").and_then(|l| l.get("p99")).and_then(Json::as_i64),
+            Some(900)
+        );
+        assert_eq!(
+            doc.get("cache").and_then(|c| c.get("shared_hits")).and_then(Json::as_i64),
+            Some(4)
+        );
+        assert_eq!(doc.get("precision_switches").and_then(Json::as_i64), Some(7));
+    }
+}

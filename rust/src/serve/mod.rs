@@ -1,0 +1,448 @@
+//! `speed_rvv::serve` — the multi-tenant serving subsystem.
+//!
+//! The [`Engine`](crate::engine::Engine) API is compile-once /
+//! execute-many for *one* caller; a deployment multiplexes many
+//! concurrent request streams — different models, different precisions —
+//! over a pool of warm engines. This module is that layer:
+//!
+//! * [`ServePool`] — N worker threads, each owning a warm engine, behind
+//!   a **bounded** MPMC request queue. Submission past the bound either
+//!   blocks ([`ServePool::submit`], backpressure) or fails with a typed
+//!   [`SpeedError::Serve`](crate::error::SpeedError::Serve)
+//!   ([`ServePool::try_submit`]). Workers share one
+//!   [`SharedPrograms`](crate::engine::SharedPrograms) cache, so each
+//!   distinct `(op, strategy, precision, config)` program is compiled
+//!   once pool-wide.
+//! * **Precision-affinity scheduling** (`scheduler`) — a request is
+//!   steered to the lane of the worker last configured at its precision,
+//!   so the per-layer `VSACFG` names the already-active precision and the
+//!   datapath switch is elided (Sec. II-E); an idle worker steals from
+//!   the most backed-up lane once it exceeds a threshold.
+//! * **Dynamic micro-batching** (`batch`) — same-[`BatchKey`] requests
+//!   waiting in a lane are coalesced and served by a single replay of the
+//!   cached compiled programs; every member of the batch receives the
+//!   same (deterministic) statistics at a fraction of the simulation
+//!   cost.
+//! * **Metrics** ([`MetricsSnapshot`]) — throughput, queue depth,
+//!   p50/p95/p99 latency, pool-wide program-cache hit rate, steal and
+//!   affinity counters, and aggregate datapath precision switches.
+//! * **Scenario files** ([`Scenario`]) — JSON workload descriptions
+//!   (model mix, precision mix, deterministic arrival pattern + seed)
+//!   under `bench/scenarios/`, driven by `repro serve-bench`.
+//!
+//! # Determinism contract
+//!
+//! Scheduling is semantics-preserving: the pool quiesces the worker's
+//! pipeline at every request boundary
+//! ([`Engine::quiesce`](crate::engine::Engine::quiesce)), so a request's
+//! [`SimStats`] are a pure function of the request itself and the
+//! hardware configuration — bit-identical no matter how many workers the
+//! pool has, whether the request was micro-batched or served alone,
+//! whether its programs were cache hits, and whether the simulator ran in
+//! batch or `--exact` mode (`tests/serve_parity.rs` enforces all four).
+//! One field needs care: a *datapath* precision switch at a request
+//! boundary depends on what the worker ran before, which is exactly the
+//! scheduling the contract must hide. Per-request
+//! [`SimStats::precision_switches`] therefore counts only switches
+//! *within* the request (zero for single-precision requests), while
+//! boundary switches are accounted in the aggregate
+//! [`MetricsSnapshot::precision_switches`] — the number the
+//! precision-affinity scheduler exists to minimize.
+
+pub mod batch;
+pub mod metrics;
+pub mod pool;
+pub mod scenario;
+mod scheduler;
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::{Precision, SpeedConfig};
+use crate::coordinator::runner::default_workers;
+use crate::coordinator::Policy;
+use crate::error::Result;
+use crate::isa::StrategyKind;
+use crate::models::zoo::Model;
+use crate::models::OpDesc;
+use crate::sim::{ExecMode, SimStats};
+
+pub use batch::BatchKey;
+pub use metrics::MetricsSnapshot;
+pub use pool::{ServeOptions, ServePool, Ticket};
+pub use scenario::{Arrival, MixEntry, Scenario, Workload, XorShift64};
+
+use batch::Fnv64;
+use metrics::{jf, jstr};
+
+/// What one request asks the pool to run (timing/traffic simulation; the
+/// functional path is certified separately by the golden checks).
+#[derive(Debug, Clone)]
+pub enum RequestKind {
+    /// A whole-model inference at a precision under a strategy policy.
+    Model { model: Model, prec: Precision, policy: Policy },
+    /// A single operator under an explicit dataflow strategy.
+    Op { op: OpDesc, strat: StrategyKind },
+}
+
+impl RequestKind {
+    /// The operand precision the request runs at — the affinity key the
+    /// scheduler routes on.
+    pub fn precision(&self) -> Precision {
+        match self {
+            RequestKind::Model { prec, .. } => *prec,
+            RequestKind::Op { op, .. } => op.prec,
+        }
+    }
+
+    /// Short human-readable tag (`mobilenetv2@INT8`, `MM@INT4`).
+    pub fn label(&self) -> String {
+        match self {
+            RequestKind::Model { model, prec, .. } => format!("{}@{prec}", model.name),
+            RequestKind::Op { op, .. } => format!("{}@{}", op.kind, op.prec),
+        }
+    }
+}
+
+/// A request admitted into the pool.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Pool-assigned id, ascending in submission order.
+    pub id: u64,
+    pub kind: RequestKind,
+}
+
+/// The outcome of one served request.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    /// Deterministic per-request simulation statistics (see the module
+    /// docs for the determinism contract).
+    pub stats: SimStats,
+    /// Vector operators executed.
+    pub layers: usize,
+    /// Worker that executed the request (informational; which worker a
+    /// request lands on is schedule-dependent, its stats are not).
+    pub worker: usize,
+    /// Number of requests coalesced into the micro-batch this rode in
+    /// (1 = served alone).
+    pub batch_size: usize,
+    /// Submit-to-completion wall time (measured, host-side).
+    pub latency: Duration,
+}
+
+/// One-shot completion slot a worker fulfills and a [`Ticket`] waits on.
+#[derive(Default)]
+pub(crate) struct Completion {
+    slot: Mutex<Option<Result<RequestResult>>>,
+    ready: Condvar,
+}
+
+impl Completion {
+    pub(crate) fn fulfill(&self, result: Result<RequestResult>) {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(result);
+        }
+        drop(slot);
+        self.ready.notify_all();
+    }
+
+    pub(crate) fn wait(&self) -> Result<RequestResult> {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.ready.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// How `serve-bench` runs a [`Scenario`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeBenchOptions {
+    /// Pool worker count.
+    pub workers: usize,
+    /// Downscaled models and a capped request count (the CI `serve-smoke`
+    /// configuration).
+    pub quick: bool,
+    /// Per-instruction simulation (the escape hatch / parity oracle).
+    pub exact: bool,
+    /// Override the scenario's micro-batch cap (1 disables coalescing).
+    pub max_batch: Option<usize>,
+}
+
+impl Default for ServeBenchOptions {
+    fn default() -> Self {
+        ServeBenchOptions {
+            workers: default_workers().min(4),
+            quick: true,
+            exact: false,
+            max_batch: None,
+        }
+    }
+}
+
+/// Everything one `serve-bench` invocation measured — serialized as
+/// `SERVE_bench.json`.
+#[derive(Debug, Clone)]
+pub struct ServeBenchReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub quick: bool,
+    pub exact: bool,
+    pub workers: usize,
+    pub requests: usize,
+    /// Simulated cycles summed over every request.
+    pub total_cycles: u64,
+    /// Simulated MACs summed over every request.
+    pub total_macs: u64,
+    /// External-memory traffic summed over every request (bytes).
+    pub total_traffic_bytes: u64,
+    /// FNV-64 digest over the ordered per-request [`SimStats`]: identical
+    /// for a fixed scenario seed regardless of worker count, micro-batch
+    /// cap, and batch-vs-exact simulation mode — the determinism witness
+    /// `serve-bench` prints so any two runs can be compared at a glance.
+    pub stats_digest: u64,
+    /// Wall time of the submit-to-last-completion window.
+    pub wall_s: f64,
+    pub snapshot: MetricsSnapshot,
+}
+
+impl ServeBenchReport {
+    /// Serialize as the `SERVE_bench.json` document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(2048);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": 1,\n  \"bench\": \"serve-bench\",\n");
+        s.push_str(&format!("  \"scenario\": {},\n", jstr(&self.scenario)));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"exact\": {},\n", self.exact));
+        s.push_str(&format!("  \"workers\": {},\n", self.workers));
+        s.push_str(&format!("  \"requests\": {},\n", self.requests));
+        s.push_str(&format!("  \"wall_s\": {},\n", jf(self.wall_s)));
+        s.push_str(&format!(
+            "  \"sim\": {{ \"cycles\": {}, \"macs\": {}, \"traffic_bytes\": {} }},\n",
+            self.total_cycles, self.total_macs, self.total_traffic_bytes
+        ));
+        s.push_str(&format!(
+            "  \"stats_digest\": {},\n",
+            jstr(&format!("{:016x}", self.stats_digest))
+        ));
+        s.push_str("  \"metrics\": ");
+        s.push_str(&self.snapshot.json_object("  "));
+        s.push_str("\n}\n");
+        s
+    }
+
+    /// Human-readable one-screen summary.
+    pub fn summary_text(&self) -> String {
+        let m = &self.snapshot;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "serve-bench '{}' (seed {}): {} requests on {} workers{}{}\n",
+            self.scenario,
+            self.seed,
+            self.requests,
+            self.workers,
+            if self.quick { ", quick" } else { "" },
+            if self.exact { ", exact" } else { "" },
+        ));
+        s.push_str(&format!(
+            "  throughput: {:.1} req/s ({:.2} s wall)\n",
+            m.throughput_rps, self.wall_s
+        ));
+        s.push_str(&format!(
+            "  latency:    p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms\n",
+            m.p50_us as f64 / 1e3,
+            m.p95_us as f64 / 1e3,
+            m.p99_us as f64 / 1e3,
+            m.max_us as f64 / 1e3
+        ));
+        s.push_str(&format!(
+            "  queue:      max depth {}, avg {:.1}; {} steals\n",
+            m.queue_max_depth, m.queue_avg_depth, m.steals
+        ));
+        s.push_str(&format!(
+            "  batching:   {} batches, {} requests coalesced\n",
+            m.batches, m.coalesced
+        ));
+        s.push_str(&format!(
+            "  affinity:   {:.0}% ({} hits / {} misses), {} datapath precision switch(es)\n",
+            100.0 * m.affinity_rate(),
+            m.affinity_hits,
+            m.affinity_misses,
+            m.precision_switches
+        ));
+        s.push_str(&format!(
+            "  programs:   {} compiled, cache {:.0}% hit ({} shared)\n",
+            m.compiled_programs,
+            100.0 * m.cache.hit_rate(),
+            m.cache.shared_hits
+        ));
+        s.push_str(&format!(
+            "  sim totals: {} cycles, {} MACs, {:.1} MiB traffic\n",
+            self.total_cycles,
+            self.total_macs,
+            self.total_traffic_bytes as f64 / (1 << 20) as f64
+        ));
+        s.push_str(&format!("  stats digest: {:016x}\n", self.stats_digest));
+        s
+    }
+}
+
+/// Run a [`Scenario`] through a fresh [`ServePool`] on the reference
+/// configuration and collect the report. The generated request stream and
+/// every per-request statistic are deterministic in the scenario seed;
+/// the throughput/latency numbers are measured host wall time.
+pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeBenchReport> {
+    let kinds = sc.generate(opts.quick)?;
+    let defaults = ServeOptions::default();
+    let pool = ServePool::new(
+        SpeedConfig::reference(),
+        ServeOptions {
+            workers: opts.workers.max(1),
+            capacity: sc.capacity.unwrap_or(defaults.capacity),
+            max_batch: opts.max_batch.or(sc.max_batch).unwrap_or(defaults.max_batch),
+            exec_mode: if opts.exact { ExecMode::Exact } else { ExecMode::Batch },
+            ..defaults
+        },
+    )?;
+
+    // Virtual-tick pacing: the arrival pattern decides where the
+    // submitter yields the CPU, not any wall-clock sleep — runs are
+    // reproducible and as fast as the machine allows.
+    let mut rng = XorShift64::new(sc.seed ^ 0xA5A5_5A5A_C0FF_EE00);
+    let requests = kinds.len();
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(requests);
+    for (i, kind) in kinds.into_iter().enumerate() {
+        tickets.push(pool.submit(kind)?);
+        for _ in 0..sc.arrival.yields_after(i, &mut rng) {
+            std::thread::yield_now();
+        }
+    }
+    let mut results = Vec::with_capacity(requests);
+    for t in tickets {
+        results.push(t.wait()?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snapshot = pool.shutdown();
+
+    let mut total_cycles = 0u64;
+    let mut total_macs = 0u64;
+    let mut total_traffic = 0u64;
+    for r in &results {
+        total_cycles += r.stats.cycles;
+        total_macs += r.stats.macs;
+        total_traffic += r.stats.traffic.total();
+    }
+    Ok(ServeBenchReport {
+        scenario: sc.name.clone(),
+        seed: sc.seed,
+        quick: opts.quick,
+        exact: opts.exact,
+        workers: opts.workers.max(1),
+        requests,
+        total_cycles,
+        total_macs,
+        total_traffic_bytes: total_traffic,
+        stats_digest: stats_digest(&results),
+        wall_s,
+        snapshot,
+    })
+}
+
+/// Order-sensitive FNV-64 digest over per-request statistics (results are
+/// in request-id order). Two serve runs of the same scenario seed agree on
+/// this digest exactly when their per-request `SimStats` agree.
+pub fn stats_digest(results: &[RequestResult]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = Fnv64::new();
+    for r in results {
+        let t = &r.stats.traffic;
+        for v in [
+            r.id,
+            r.stats.cycles,
+            r.stats.insns_total,
+            r.stats.insns_custom,
+            r.stats.insns_vector,
+            r.stats.insns_scalar,
+            r.stats.stall_fu_busy,
+            r.stats.stall_hazard,
+            r.stats.stall_mem_port,
+            r.stats.macs,
+            r.stats.mac_slots,
+            r.stats.vregs_used as u64,
+            r.stats.precision_switches,
+            t.input_read,
+            t.weight_read,
+            t.partial_read,
+            t.partial_write,
+            t.output_write,
+            r.layers as u64,
+        ] {
+            h.write(&v.to_le_bytes());
+        }
+        for b in r.stats.fu_busy {
+            h.write(&b.to_le_bytes());
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::SpeedError;
+
+    #[test]
+    fn request_kind_precision_and_label() {
+        let op = OpDesc::mm(4, 4, 4, Precision::Int4);
+        let kind = RequestKind::Op { op, strat: StrategyKind::Mm };
+        assert_eq!(kind.precision(), Precision::Int4);
+        assert_eq!(kind.label(), "MM@INT4");
+        let model = crate::models::zoo::model_by_name("mobilenetv2").unwrap();
+        let kind = RequestKind::Model { model, prec: Precision::Int8, policy: Policy::Mixed };
+        assert_eq!(kind.precision(), Precision::Int8);
+        assert_eq!(kind.label(), "mobilenetv2@INT8");
+    }
+
+    #[test]
+    fn completion_roundtrip() {
+        let c = Completion::default();
+        c.fulfill(Err(SpeedError::Serve("gone".into())));
+        // A second fulfill must not clobber the first outcome.
+        c.fulfill(Err(SpeedError::Serve("later".into())));
+        match c.wait() {
+            Err(SpeedError::Serve(m)) => assert_eq!(m, "gone"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn digest_is_sensitive_to_stats() {
+        let base = RequestResult {
+            id: 0,
+            stats: SimStats { cycles: 100, macs: 7, ..Default::default() },
+            layers: 1,
+            worker: 0,
+            batch_size: 1,
+            latency: Duration::from_micros(5),
+        };
+        let mut other = base.clone();
+        other.stats.cycles = 101;
+        let a = stats_digest(std::slice::from_ref(&base));
+        let b = stats_digest(std::slice::from_ref(&other));
+        assert_ne!(a, b);
+        // Worker / batch placement and latency are schedule-dependent and
+        // deliberately excluded.
+        let mut placed = base.clone();
+        placed.worker = 3;
+        placed.batch_size = 8;
+        placed.latency = Duration::from_micros(99);
+        assert_eq!(a, stats_digest(std::slice::from_ref(&placed)));
+    }
+}

@@ -1,0 +1,617 @@
+//! The engine pool: worker threads, the bounded queue, and completion
+//! tickets.
+//!
+//! Topology: `ServePool::new` spawns N workers, each owning a warm
+//! [`Engine`] attached to one pool-wide [`SharedPrograms`] cache. The
+//! scheduler state (per-worker lanes, bound, counters) lives behind a
+//! single mutex with two condvars — `work` (workers wait for jobs) and
+//! `space` (blocking submitters wait for queue room). Shutdown is
+//! graceful: workers drain every admitted request before exiting, so a
+//! [`Ticket`] obtained from a successful submit always resolves.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::SpeedConfig;
+use crate::coordinator::runner::default_workers;
+use crate::engine::{CacheStats, Engine, SharedPrograms};
+use crate::error::{Result, SpeedError};
+use crate::sim::ExecMode;
+
+use super::batch::{execute_request, BatchKey};
+use super::metrics::{SchedCounters, ServeMetrics};
+use super::scheduler::{Job, SchedState};
+use super::{Completion, MetricsSnapshot, Request, RequestKind, RequestResult};
+
+/// Pool construction parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Worker threads (= warm engines).
+    pub workers: usize,
+    /// Bound on admitted-but-unstarted requests across all lanes;
+    /// [`ServePool::submit`] blocks and [`ServePool::try_submit`] fails
+    /// once it is reached.
+    pub capacity: usize,
+    /// Micro-batch cap: how many same-key requests one program replay may
+    /// serve (1 disables coalescing).
+    pub max_batch: usize,
+    /// An idle worker steals from another lane only once that lane holds
+    /// at least this many requests.
+    pub steal_threshold: usize,
+    /// Simulator execution mode for every worker (bit-exact either way).
+    pub exec_mode: ExecMode,
+    /// Initial external-memory bytes per engine (grows lazily; 0 = the
+    /// engine floor).
+    pub mem_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: default_workers().min(4),
+            capacity: 256,
+            max_batch: 8,
+            steal_threshold: 2,
+            exec_mode: ExecMode::Batch,
+            mem_bytes: 0,
+        }
+    }
+}
+
+/// Per-worker engine counters, harvested after every batch.
+#[derive(Debug, Default, Clone, Copy)]
+struct EngineCounters {
+    cache: CacheStats,
+    switches: u64,
+    programs: usize,
+}
+
+struct PoolShared {
+    cfg: SpeedConfig,
+    opts: ServeOptions,
+    sched: Mutex<SchedState>,
+    work_cv: Condvar,
+    space_cv: Condvar,
+    metrics: ServeMetrics,
+    programs: SharedPrograms,
+    engines: Mutex<Vec<EngineCounters>>,
+    next_id: AtomicU64,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A handle for one submitted request; [`Ticket::wait`] blocks until a
+/// worker fulfills it (shutdown drains the queue first, so every admitted
+/// ticket resolves).
+pub struct Ticket {
+    id: u64,
+    done: Arc<Completion>,
+}
+
+impl Ticket {
+    /// The pool-assigned request id (ascending in submission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request finishes; returns its result.
+    pub fn wait(self) -> Result<RequestResult> {
+        self.done.wait()
+    }
+}
+
+/// A pool of warm engines serving concurrent request streams.
+pub struct ServePool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ServePool {
+    /// Validate the configuration and spawn the workers.
+    pub fn new(cfg: SpeedConfig, opts: ServeOptions) -> Result<ServePool> {
+        cfg.validate()?;
+        if opts.workers == 0 {
+            return Err(SpeedError::Config("serve pool needs at least 1 worker".into()));
+        }
+        if opts.capacity == 0 {
+            return Err(SpeedError::Config("serve queue capacity must be >= 1".into()));
+        }
+        if opts.max_batch == 0 {
+            return Err(SpeedError::Config("serve max_batch must be >= 1".into()));
+        }
+        let shared = Arc::new(PoolShared {
+            cfg,
+            opts,
+            sched: Mutex::new(SchedState::new(
+                opts.workers,
+                opts.capacity,
+                opts.max_batch,
+                opts.steal_threshold,
+            )),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            metrics: ServeMetrics::new(),
+            programs: SharedPrograms::new(),
+            engines: Mutex::new(vec![EngineCounters::default(); opts.workers]),
+            next_id: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(opts.workers);
+        for w in 0..opts.workers {
+            let sh = shared.clone();
+            match std::thread::Builder::new()
+                .name(format!("speed-serve-{w}"))
+                .spawn(move || worker_loop(sh, w))
+            {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // Partial spawn: shut down and join the workers that
+                    // did start, or they would block on `work_cv` forever.
+                    let mut partial = ServePool { shared, handles };
+                    partial.signal_and_join();
+                    return Err(SpeedError::Serve(format!("spawning worker {w}: {e}")));
+                }
+            }
+        }
+        Ok(ServePool { shared, handles })
+    }
+
+    /// Submit a request, blocking while the queue is at capacity
+    /// (backpressure). Fails with [`SpeedError::Serve`] once the pool is
+    /// shut down.
+    pub fn submit(&self, kind: RequestKind) -> Result<Ticket> {
+        self.enqueue(kind, true)
+    }
+
+    /// Submit without blocking: a full queue is an immediate typed
+    /// [`SpeedError::Serve`] overflow (counted in the metrics).
+    pub fn try_submit(&self, kind: RequestKind) -> Result<Ticket> {
+        self.enqueue(kind, false)
+    }
+
+    fn enqueue(&self, kind: RequestKind, block: bool) -> Result<Ticket> {
+        let prec = kind.precision();
+        let key = BatchKey::of(&kind);
+        let mut s = lock(&self.shared.sched);
+        loop {
+            if s.shutdown {
+                return Err(SpeedError::Serve("submit to a shut-down pool".into()));
+            }
+            if s.has_space() {
+                break;
+            }
+            if !block {
+                self.shared.metrics.record_rejected();
+                return Err(SpeedError::Serve(format!(
+                    "request queue full ({} queued, capacity {})",
+                    s.queued(),
+                    s.capacity()
+                )));
+            }
+            s = self.shared.space_cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let done = Arc::new(Completion::default());
+        let job = Job {
+            req: Request { id, kind },
+            key,
+            prec,
+            enqueued: Instant::now(),
+            done: done.clone(),
+        };
+        if s.route(job).is_err() {
+            // Unreachable: `has_space` held under the same lock.
+            return Err(SpeedError::Serve("queue full".into()));
+        }
+        drop(s);
+        self.shared.metrics.record_submitted();
+        self.shared.work_cv.notify_all();
+        Ok(Ticket { id, done })
+    }
+
+    /// Submit a stream of requests (blocking, in order) and wait for all
+    /// results; results come back in submission order.
+    pub fn run_all(
+        &self,
+        kinds: impl IntoIterator<Item = RequestKind>,
+    ) -> Result<Vec<RequestResult>> {
+        let tickets: Result<Vec<Ticket>> =
+            kinds.into_iter().map(|k| self.submit(k)).collect();
+        tickets?.into_iter().map(Ticket::wait).collect()
+    }
+
+    /// Point-in-time aggregate metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let sched = {
+            let s = lock(&self.shared.sched);
+            SchedCounters {
+                steals: s.steals,
+                affinity_hits: s.affinity_hits,
+                affinity_misses: s.affinity_misses,
+                max_depth: s.max_depth,
+                avg_depth: s.avg_depth(),
+            }
+        };
+        let engines = lock(&self.shared.engines);
+        let mut cache = CacheStats::default();
+        let mut switches = 0u64;
+        let mut programs = 0usize;
+        for e in engines.iter() {
+            cache.hits += e.cache.hits;
+            cache.misses += e.cache.misses;
+            cache.shared_hits += e.cache.shared_hits;
+            switches += e.switches;
+            programs += e.programs;
+        }
+        drop(engines);
+        self.shared.metrics.snapshot(
+            self.shared.opts.workers,
+            sched,
+            cache,
+            switches,
+            programs,
+        )
+    }
+
+    /// Number of distinct compiled programs in the pool-wide shared cache.
+    pub fn shared_programs(&self) -> usize {
+        self.shared.programs.len()
+    }
+
+    fn signal_and_join(&mut self) {
+        {
+            let mut s = lock(&self.shared.sched);
+            s.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful shutdown: every admitted request is drained and fulfilled
+    /// first; returns the final metrics snapshot.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.signal_and_join();
+        self.metrics()
+    }
+}
+
+impl Drop for ServePool {
+    fn drop(&mut self) {
+        if !self.handles.is_empty() {
+            self.signal_and_join();
+        }
+    }
+}
+
+fn build_engine(shared: &PoolShared) -> Engine {
+    let mut engine =
+        Engine::with_shared(shared.cfg, shared.opts.mem_bytes, shared.programs.clone())
+            .expect("pool configuration was validated at construction");
+    engine.set_exec_mode(shared.opts.exec_mode);
+    engine
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic".into())
+}
+
+fn worker_loop(shared: Arc<PoolShared>, w: usize) {
+    let mut engine = build_engine(&shared);
+    // Counters accumulated by engines discarded after a panic — added back
+    // at every harvest so pool metrics never lose prior accounting.
+    let mut lost = EngineCounters::default();
+    loop {
+        let batch = {
+            let mut s = lock(&shared.sched);
+            loop {
+                if let Some(b) = s.next_batch(w) {
+                    break Some(b);
+                }
+                if s.shutdown {
+                    break None;
+                }
+                s = shared.work_cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(batch) = batch else { return };
+        shared.space_cv.notify_all();
+
+        let kind = batch[0].req.kind.clone();
+        let executed =
+            match catch_unwind(AssertUnwindSafe(|| execute_request(&mut engine, &kind))) {
+                Ok(r) => r,
+                Err(payload) => {
+                    // The engine's internal state is unknowable after a
+                    // panic: preserve its accounting, rebuild it (the
+                    // shared cache keeps every compilation), and fail the
+                    // batch with a typed error.
+                    let cache = engine.cache_stats();
+                    lost.cache.hits += cache.hits;
+                    lost.cache.misses += cache.misses;
+                    lost.cache.shared_hits += cache.shared_hits;
+                    lost.switches += engine.precision_switches();
+                    lost.programs += engine.compiled_programs();
+                    engine = build_engine(&shared);
+                    Err(SpeedError::Serve(format!(
+                        "worker {w} panicked serving {}: {}",
+                        kind.label(),
+                        panic_msg(payload.as_ref())
+                    )))
+                }
+            };
+
+        let n = batch.len();
+        shared.metrics.record_batch(n as u64);
+        for job in batch {
+            let latency = job.enqueued.elapsed();
+            let result = executed.clone().map(|(stats, layers)| RequestResult {
+                id: job.req.id,
+                stats,
+                layers,
+                worker: w,
+                batch_size: n,
+                latency,
+            });
+            shared.metrics.record_finished(result.is_ok(), latency);
+            job.done.fulfill(result);
+        }
+        let cache = engine.cache_stats();
+        lock(&shared.engines)[w] = EngineCounters {
+            cache: CacheStats {
+                hits: lost.cache.hits + cache.hits,
+                misses: lost.cache.misses + cache.misses,
+                shared_hits: lost.cache.shared_hits + cache.shared_hits,
+            },
+            switches: lost.switches + engine.precision_switches(),
+            programs: lost.programs + engine.compiled_programs(),
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::coordinator::Policy;
+    use crate::isa::StrategyKind;
+    use crate::models::zoo::Model;
+    use crate::models::OpDesc;
+
+    fn tiny_op(prec: Precision) -> RequestKind {
+        RequestKind::Op {
+            op: OpDesc::mm(4, 8, 4, prec),
+            strat: StrategyKind::Mm,
+        }
+    }
+
+    fn tiny_model_kind(prec: Precision) -> RequestKind {
+        RequestKind::Model {
+            model: Model {
+                name: "tiny",
+                ops: vec![
+                    OpDesc::conv(4, 8, 10, 10, 3, 1, 1, prec),
+                    OpDesc::mm(10, 8, 12, prec),
+                ],
+                scalar_fraction: 0.1,
+            },
+            prec,
+            policy: Policy::Mixed,
+        }
+    }
+
+    fn pool(workers: usize, capacity: usize, max_batch: usize) -> ServePool {
+        ServePool::new(
+            SpeedConfig::reference(),
+            ServeOptions { workers, capacity, max_batch, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_and_preserves_order() {
+        let p = pool(2, 64, 4);
+        let kinds: Vec<RequestKind> = (0..10)
+            .map(|i| {
+                tiny_op(if i % 2 == 0 { Precision::Int8 } else { Precision::Int4 })
+            })
+            .collect();
+        let results = p.run_all(kinds).unwrap();
+        assert_eq!(results.len(), 10);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.stats.cycles > 0);
+            assert!(r.stats.macs > 0);
+        }
+        // Same-key requests report identical deterministic stats.
+        assert_eq!(results[0].stats, results[2].stats);
+        assert_eq!(results[1].stats, results[3].stats);
+        let snap = p.shutdown();
+        assert_eq!(snap.completed, 10);
+        assert_eq!(snap.failed, 0);
+        assert_eq!(snap.in_flight, 0);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_stats() {
+        let kinds: Vec<RequestKind> = vec![
+            tiny_op(Precision::Int8),
+            tiny_model_kind(Precision::Int4),
+            tiny_op(Precision::Int16),
+            tiny_op(Precision::Int8),
+            tiny_model_kind(Precision::Int4),
+        ];
+        let a = pool(1, 64, 1).run_all(kinds.clone()).unwrap();
+        let b = pool(3, 64, 8).run_all(kinds).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.stats, y.stats, "request {}", x.id);
+            assert_eq!(x.layers, y.layers);
+        }
+    }
+
+    #[test]
+    fn micro_batching_coalesces_identical_requests() {
+        // One worker pinned on a slow model request while a burst of
+        // identical light requests queues up behind it — the burst
+        // coalesces into (almost certainly one) replay batch.
+        let p = pool(1, 64, 16);
+        let mut kinds: Vec<RequestKind> = vec![tiny_model_kind(Precision::Int8)];
+        kinds.extend((0..11).map(|_| tiny_op(Precision::Int8)));
+        let results = p.run_all(kinds).unwrap();
+        let snap = p.shutdown();
+        // All twelve completed, in strictly fewer batches than requests.
+        assert_eq!(snap.completed, 12);
+        assert!(snap.batches < 12, "expected coalescing, got {} batches", snap.batches);
+        assert!(snap.coalesced >= 2);
+        // Batched or not, the identical requests report identical stats.
+        for r in &results[1..] {
+            assert_eq!(r.stats, results[1].stats);
+        }
+    }
+
+    #[test]
+    fn try_submit_overflows_with_typed_error() {
+        // Pool whose single worker is kept busy: fill the queue, then
+        // overflow it.
+        let p = pool(1, 2, 1);
+        let mut tickets = Vec::new();
+        // Admit until the bound trips (the worker may drain a few).
+        let mut overflowed = false;
+        for _ in 0..64 {
+            match p.try_submit(tiny_model_kind(Precision::Int8)) {
+                Ok(t) => tickets.push(t),
+                Err(SpeedError::Serve(m)) => {
+                    assert!(m.contains("queue full"), "{m}");
+                    overflowed = true;
+                    break;
+                }
+                Err(other) => panic!("unexpected {other}"),
+            }
+        }
+        assert!(overflowed, "capacity-2 queue never overflowed");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let snap = p.shutdown();
+        assert!(snap.rejected >= 1);
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_requests_then_rejects() {
+        let p = pool(2, 64, 4);
+        let tickets: Vec<Ticket> =
+            (0..6).map(|_| p.submit(tiny_op(Precision::Int8)).unwrap()).collect();
+        let snap = p.shutdown();
+        assert_eq!(snap.completed + snap.failed, 6);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_a_typed_error() {
+        let mut p = pool(1, 4, 1);
+        p.signal_and_join();
+        match p.submit(tiny_op(Precision::Int8)) {
+            Err(SpeedError::Serve(m)) => assert!(m.contains("shut-down"), "{m}"),
+            Err(other) => panic!("unexpected {other}"),
+            Ok(_) => panic!("submit succeeded after shutdown"),
+        }
+    }
+
+    #[test]
+    fn pool_rejects_bad_options() {
+        let cfg = SpeedConfig::reference();
+        assert!(matches!(
+            ServePool::new(cfg, ServeOptions { workers: 0, ..Default::default() }),
+            Err(SpeedError::Config(_))
+        ));
+        assert!(matches!(
+            ServePool::new(cfg, ServeOptions { capacity: 0, ..Default::default() }),
+            Err(SpeedError::Config(_))
+        ));
+        assert!(matches!(
+            ServePool::new(cfg, ServeOptions { max_batch: 0, ..Default::default() }),
+            Err(SpeedError::Config(_))
+        ));
+        let bad = SpeedConfig { lanes: 3, ..cfg };
+        assert!(matches!(
+            ServePool::new(bad, ServeOptions::default()),
+            Err(SpeedError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn shared_cache_serves_the_whole_pool() {
+        let p = pool(3, 64, 1);
+        let kinds: Vec<RequestKind> =
+            (0..9).map(|_| tiny_op(Precision::Int8)).collect();
+        p.run_all(kinds).unwrap();
+        // One distinct program pool-wide (or_insert keeps the first copy
+        // even if two workers raced to compile it).
+        assert_eq!(p.shared_programs(), 1);
+        let snap = p.shutdown();
+        assert_eq!(snap.cache.hits + snap.cache.misses, 9, "one lookup per request");
+        assert!(
+            snap.cache.misses <= 3,
+            "at most one racing compile per worker: {}",
+            snap.cache.misses
+        );
+        assert!(snap.cache.hits >= 6);
+    }
+
+    #[test]
+    fn failing_request_reports_typed_error_and_pool_survives() {
+        let p = pool(1, 8, 1);
+        // An invalid operator: MM with zero K fails validation inside the
+        // compiler. Build it directly (constructors allow it; validate()
+        // is the compile-time gate).
+        let bad = RequestKind::Op {
+            op: OpDesc::mm(4, 0, 4, Precision::Int8),
+            strat: StrategyKind::Mm,
+        };
+        let err = p.submit(bad).unwrap().wait().unwrap_err();
+        // Typed, not a panic — and the pool still serves afterwards.
+        let _ = err.kind();
+        let ok = p.submit(tiny_op(Precision::Int8)).unwrap().wait().unwrap();
+        assert!(ok.stats.cycles > 0);
+        let snap = p.shutdown();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn results_exclude_boundary_precision_switches() {
+        // One worker alternating precisions: per-request stats must stay
+        // schedule-independent (0 internal switches), while the aggregate
+        // counter sees the datapath flips.
+        let p = pool(1, 64, 1);
+        let kinds = vec![
+            tiny_op(Precision::Int16),
+            tiny_op(Precision::Int4),
+            tiny_op(Precision::Int16),
+            tiny_op(Precision::Int4),
+        ];
+        let results = p.run_all(kinds).unwrap();
+        for r in &results {
+            assert_eq!(r.stats.precision_switches, 0);
+        }
+        let snap = p.shutdown();
+        assert!(
+            snap.precision_switches >= 3,
+            "datapath flipped at request boundaries: {}",
+            snap.precision_switches
+        );
+    }
+}

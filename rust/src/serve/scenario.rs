@@ -1,0 +1,562 @@
+//! JSON scenario files: reproducible serving workloads.
+//!
+//! A scenario describes a request stream — model mix, precision mix, and
+//! a deterministic arrival pattern — with **no wall-clock dependence**:
+//! the request sequence is a pure function of the scenario seed, and the
+//! arrival pattern is expressed in virtual ticks (the submitter yields
+//! the CPU between ticks instead of sleeping), so any two runs of the
+//! same file replay the identical workload. Committed scenarios live in
+//! `bench/scenarios/*.json` and drive `repro serve-bench`.
+//!
+//! ```json
+//! {
+//!   "name": "mixed_edge",
+//!   "seed": 42,
+//!   "requests": 64,
+//!   "capacity": 32,
+//!   "max_batch": 8,
+//!   "arrival": { "pattern": "burst", "size": 8 },
+//!   "mix": [
+//!     { "model": "mobilenetv2", "prec": 8, "weight": 3, "downscale": 2 },
+//!     { "model": "vit_tiny", "prec": 4, "weight": 2, "downscale": 2 },
+//!     { "op": "mm", "m": 64, "k": 64, "n": 64, "prec": 16, "weight": 2 }
+//!   ]
+//! }
+//! ```
+//!
+//! Mix entries are drawn per request with probability proportional to
+//! `weight`. Model entries accept `downscale` (spatial/token reduction
+//! via the Fig. 12 harness) and `policy` (`mixed|ffcs|cf|ff`); operator
+//! entries accept the dimensions of their kind (`mm`: `m,k,n`; `conv`:
+//! `c,f,h,w,ksize[,stride,pad]`; `pwcv`: `c,f,h,w`; `dwcv`:
+//! `c,h,w,ksize[,stride,pad]`) and an optional explicit `strat`.
+
+use std::path::Path;
+
+use crate::config::Precision;
+use crate::coordinator::Policy;
+use crate::dataflow;
+use crate::error::{Result, SpeedError};
+use crate::isa::StrategyKind;
+use crate::models::zoo::{model_by_name, MODELS};
+use crate::models::OpDesc;
+use crate::report::fig12::downscale;
+use crate::runtime::json::{parse, Json};
+
+use super::RequestKind;
+
+/// Quick mode caps the generated request count at this many.
+pub const QUICK_REQUEST_CAP: usize = 24;
+/// Quick mode multiplies every model entry's downscale factor by this.
+pub const QUICK_DOWNSCALE: u32 = 4;
+
+fn perr(m: impl Into<String>) -> SpeedError {
+    SpeedError::Parse(m.into())
+}
+
+/// xorshift64* — the tiny deterministic generator behind scenario
+/// request streams (seed-stable across platforms and releases).
+#[derive(Debug, Clone)]
+pub struct XorShift64(u64);
+
+impl Default for XorShift64 {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        // Splitmix-style scramble keeps low-entropy seeds (0, 1, 2...)
+        // from producing correlated streams; `| 1` keeps the state
+        // nonzero.
+        XorShift64(
+            seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(0x2545_F491_4F6C_DD1D)
+                | 1,
+        )
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform draw in `0..n` (n = 0 yields 0).
+    pub fn below(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.next_u64() % n
+    }
+}
+
+/// Deterministic arrival pattern, in virtual ticks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// A steady trickle: `per_tick` requests, then one quiet tick.
+    Steady { per_tick: u32 },
+    /// Bursty traffic: `size` back-to-back requests, then a quiet period
+    /// of `size` ticks (the deeper gap is what distinguishes a burst from
+    /// a steady trickle at the same average rate).
+    Burst { size: u32 },
+    /// Seeded random gaps of `0..=max_gap` empty ticks between requests.
+    Random { max_gap: u32 },
+}
+
+impl Arrival {
+    /// How many virtual ticks (submitter yields) follow request `i`.
+    pub fn yields_after(&self, i: usize, rng: &mut XorShift64) -> u32 {
+        match *self {
+            Arrival::Steady { per_tick } => {
+                u32::from((i as u64 + 1) % per_tick.max(1) as u64 == 0)
+            }
+            Arrival::Burst { size } => {
+                let size = size.max(1);
+                if (i as u64 + 1) % size as u64 == 0 {
+                    size
+                } else {
+                    0
+                }
+            }
+            Arrival::Random { max_gap } => rng.below(max_gap as u64 + 1) as u32,
+        }
+    }
+}
+
+/// What a mix entry instantiates.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// A zoo model by name, optionally downscaled (Fig. 12 harness).
+    Model { name: String, downscale: u32 },
+    /// A single operator (stored at its scenario precision).
+    Op(OpDesc),
+}
+
+/// One weighted line of the workload mix.
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    pub workload: Workload,
+    pub prec: Precision,
+    pub weight: u32,
+    pub policy: Policy,
+    /// Explicit dataflow strategy for operator entries (default: the
+    /// operator's preferred strategy).
+    pub strat: Option<StrategyKind>,
+}
+
+impl MixEntry {
+    /// Materialize one request from this entry.
+    fn instantiate(&self, quick: bool) -> Result<RequestKind> {
+        match &self.workload {
+            Workload::Model { name, downscale: d } => {
+                let model = model_by_name(name).ok_or_else(|| {
+                    perr(format!("unknown model '{name}' in scenario ({MODELS:?})"))
+                })?;
+                let f = (*d).max(1) * if quick { QUICK_DOWNSCALE } else { 1 };
+                let model = if f > 1 { downscale(&model, f) } else { model };
+                Ok(RequestKind::Model { model, prec: self.prec, policy: self.policy })
+            }
+            Workload::Op(op) => {
+                let op = OpDesc { prec: self.prec, ..*op };
+                let strat = self.strat.unwrap_or_else(|| op.preferred_strategy());
+                Ok(RequestKind::Op { op, strat })
+            }
+        }
+    }
+}
+
+/// A parsed scenario file.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    /// Requests to generate (capped at [`QUICK_REQUEST_CAP`] in quick
+    /// mode).
+    pub requests: usize,
+    /// Pool queue bound override (None = the pool default).
+    pub capacity: Option<usize>,
+    /// Micro-batch cap override (None = the pool default).
+    pub max_batch: Option<usize>,
+    pub arrival: Arrival,
+    pub mix: Vec<MixEntry>,
+}
+
+impl Scenario {
+    /// Parse a scenario document, failing fast on unknown models, invalid
+    /// operators, or inapplicable strategies.
+    pub fn from_json(src: &str) -> Result<Scenario> {
+        let doc = parse(src)?;
+        if doc.as_obj().is_none() {
+            return Err(perr("scenario must be a JSON object"));
+        }
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("unnamed")
+            .to_string();
+        let seed = doc.get("seed").and_then(Json::as_i64).unwrap_or(1) as u64;
+        let requests = doc
+            .get("requests")
+            .and_then(Json::as_i64)
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| perr("scenario needs a positive integer \"requests\""))?
+            as usize;
+        let capacity = opt_pos(&doc, "capacity")?;
+        let max_batch = opt_pos(&doc, "max_batch")?;
+        let arrival = parse_arrival(doc.get("arrival"))?;
+        let mix_json = doc
+            .get("mix")
+            .and_then(Json::as_arr)
+            .filter(|a| !a.is_empty())
+            .ok_or_else(|| perr("scenario needs a non-empty \"mix\" array"))?;
+        let mut mix = Vec::with_capacity(mix_json.len());
+        for entry in mix_json {
+            mix.push(parse_mix_entry(entry)?);
+        }
+        let sc = Scenario { name, seed, requests, capacity, max_batch, arrival, mix };
+        // Fail at parse time, not mid-bench: every entry must instantiate.
+        for e in &sc.mix {
+            e.instantiate(false)?;
+        }
+        Ok(sc)
+    }
+
+    /// Load a scenario file from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<Scenario> {
+        let path = path.as_ref();
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| perr(format!("reading scenario {}: {e}", path.display())))?;
+        Self::from_json(&src)
+    }
+
+    /// Generate the deterministic request stream: same seed, same stream,
+    /// on every platform and every run.
+    pub fn generate(&self, quick: bool) -> Result<Vec<RequestKind>> {
+        let total_weight: u64 = self.mix.iter().map(|e| e.weight as u64).sum();
+        let n = if quick { self.requests.min(QUICK_REQUEST_CAP) } else { self.requests };
+        let mut rng = XorShift64::new(self.seed);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut pick = rng.below(total_weight);
+            let entry = self
+                .mix
+                .iter()
+                .find(|e| {
+                    if pick < e.weight as u64 {
+                        true
+                    } else {
+                        pick -= e.weight as u64;
+                        false
+                    }
+                })
+                .expect("weights are positive and sum over the mix");
+            out.push(entry.instantiate(quick)?);
+        }
+        Ok(out)
+    }
+}
+
+fn opt_pos(doc: &Json, key: &str) -> Result<Option<usize>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_i64()
+            .filter(|&n| n >= 1)
+            .map(|n| Some(n as usize))
+            .ok_or_else(|| perr(format!("\"{key}\" must be a positive integer"))),
+    }
+}
+
+fn parse_arrival(j: Option<&Json>) -> Result<Arrival> {
+    let Some(a) = j else {
+        return Ok(Arrival::Steady { per_tick: 1 });
+    };
+    let pattern = a
+        .get("pattern")
+        .and_then(Json::as_str)
+        .ok_or_else(|| perr("\"arrival\" needs a \"pattern\" string"))?;
+    let field = |k: &str, default: u32| -> Result<u32> {
+        match a.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .as_i64()
+                .filter(|&n| n >= 1 && n <= u32::MAX as i64)
+                .map(|n| n as u32)
+                .ok_or_else(|| {
+                    perr(format!("arrival \"{k}\" must be a positive 32-bit integer"))
+                }),
+        }
+    };
+    match pattern {
+        "steady" => Ok(Arrival::Steady { per_tick: field("per_tick", 1)? }),
+        "burst" => Ok(Arrival::Burst { size: field("size", 8)? }),
+        "random" => Ok(Arrival::Random { max_gap: field("max_gap", 3)? }),
+        other => Err(perr(format!(
+            "unknown arrival pattern '{other}' (steady|burst|random)"
+        ))),
+    }
+}
+
+fn parse_policy(s: &str) -> Result<Policy> {
+    match s {
+        "mixed" => Ok(Policy::Mixed),
+        "ffcs" => Ok(Policy::Fixed(StrategyKind::Ffcs)),
+        "cf" => Ok(Policy::Fixed(StrategyKind::Cf)),
+        "ff" => Ok(Policy::Fixed(StrategyKind::Ff)),
+        other => Err(perr(format!("unknown policy '{other}' (mixed|ffcs|cf|ff)"))),
+    }
+}
+
+fn parse_strat(s: &str) -> Result<StrategyKind> {
+    match s {
+        "mm" => Ok(StrategyKind::Mm),
+        "ffcs" => Ok(StrategyKind::Ffcs),
+        "cf" => Ok(StrategyKind::Cf),
+        "ff" => Ok(StrategyKind::Ff),
+        other => Err(perr(format!("unknown strategy '{other}' (mm|ffcs|cf|ff)"))),
+    }
+}
+
+fn parse_mix_entry(e: &Json) -> Result<MixEntry> {
+    let prec_bits = e
+        .get("prec")
+        .and_then(Json::as_i64)
+        .ok_or_else(|| perr("mix entry needs integer \"prec\" (16|8|4)"))?;
+    let prec = Precision::from_bits(prec_bits as u32)
+        .ok_or_else(|| perr(format!("bad precision {prec_bits} (16|8|4)")))?;
+    let weight = match e.get("weight") {
+        None => 1,
+        Some(v) => v
+            .as_i64()
+            .filter(|&n| n >= 1 && n <= u32::MAX as i64)
+            .map(|n| n as u32)
+            .ok_or_else(|| perr("mix \"weight\" must be a positive 32-bit integer"))?,
+    };
+    let policy = match e.get("policy").and_then(Json::as_str) {
+        None => Policy::Mixed,
+        Some(p) => parse_policy(p)?,
+    };
+
+    if let Some(name) = e.get("model").and_then(Json::as_str) {
+        if model_by_name(name).is_none() {
+            return Err(perr(format!("unknown model '{name}' ({MODELS:?})")));
+        }
+        let ds = match e.get("downscale") {
+            None => 1,
+            Some(v) => v
+                .as_i64()
+                .filter(|&n| n >= 1 && n <= u32::MAX as i64)
+                .map(|n| n as u32)
+                .ok_or_else(|| perr("\"downscale\" must be a positive 32-bit integer"))?,
+        };
+        return Ok(MixEntry {
+            workload: Workload::Model { name: name.to_string(), downscale: ds },
+            prec,
+            weight,
+            policy,
+            strat: None,
+        });
+    }
+
+    let Some(kind) = e.get("op").and_then(Json::as_str) else {
+        return Err(perr("mix entry needs \"model\" or \"op\""));
+    };
+    let dim = |k: &str| -> Result<u32> {
+        e.get(k)
+            .and_then(Json::as_i64)
+            .filter(|&n| n >= 1 && n <= u32::MAX as i64)
+            .map(|n| n as u32)
+            .ok_or_else(|| perr(format!("op \"{kind}\" needs positive integer \"{k}\"")))
+    };
+    let opt_dim = |k: &str, default: u32| -> Result<u32> {
+        match e.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .as_i64()
+                .filter(|&n| n >= 0 && n <= u32::MAX as i64)
+                .map(|n| n as u32)
+                .ok_or_else(|| perr(format!("op \"{k}\" must be a non-negative integer"))),
+        }
+    };
+    let op = match kind {
+        "mm" => OpDesc::mm(dim("m")?, dim("k")?, dim("n")?, prec),
+        "conv" => OpDesc::conv(
+            dim("c")?,
+            dim("f")?,
+            dim("h")?,
+            dim("w")?,
+            dim("ksize")?,
+            opt_dim("stride", 1)?.max(1),
+            opt_dim("pad", 0)?,
+            prec,
+        ),
+        "pwcv" => OpDesc::pwcv(dim("c")?, dim("f")?, dim("h")?, dim("w")?, prec),
+        "dwcv" => OpDesc::dwcv(
+            dim("c")?,
+            dim("h")?,
+            dim("w")?,
+            dim("ksize")?,
+            opt_dim("stride", 1)?.max(1),
+            opt_dim("pad", 0)?,
+            prec,
+        ),
+        other => return Err(perr(format!("unknown op kind '{other}' (mm|conv|pwcv|dwcv)"))),
+    };
+    op.validate()?;
+    let strat = match e.get("strat").and_then(Json::as_str) {
+        None => None,
+        Some(s) => {
+            let strat = parse_strat(s)?;
+            if !dataflow::applicable(strat, &op) {
+                return Err(perr(format!(
+                    "strategy '{s}' not applicable to op '{kind}'"
+                )));
+            }
+            Some(strat)
+        }
+    };
+    Ok(MixEntry { workload: Workload::Op(op), prec, weight, policy, strat })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::SpeedError;
+
+    const SC: &str = r#"{
+        "name": "unit",
+        "seed": 7,
+        "requests": 12,
+        "capacity": 8,
+        "max_batch": 4,
+        "arrival": { "pattern": "burst", "size": 4 },
+        "mix": [
+            { "model": "mobilenetv2", "prec": 8, "weight": 2, "downscale": 4 },
+            { "op": "mm", "m": 16, "k": 16, "n": 16, "prec": 4, "weight": 1 },
+            { "op": "dwcv", "c": 8, "h": 12, "w": 12, "ksize": 3, "prec": 16,
+              "weight": 1, "strat": "ff" }
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_generates_deterministically() {
+        let sc = Scenario::from_json(SC).unwrap();
+        assert_eq!(sc.name, "unit");
+        assert_eq!(sc.requests, 12);
+        assert_eq!(sc.capacity, Some(8));
+        assert_eq!(sc.max_batch, Some(4));
+        assert_eq!(sc.arrival, Arrival::Burst { size: 4 });
+        assert_eq!(sc.mix.len(), 3);
+        let a = sc.generate(false).unwrap();
+        let b = sc.generate(false).unwrap();
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label(), y.label());
+            assert_eq!(x.precision(), y.precision());
+        }
+        // All three entries appear across a 12-request draw with these
+        // weights and this seed (a fixed-stream regression canary).
+        let labels: Vec<String> = a.iter().map(RequestKind::label).collect();
+        assert!(labels.iter().any(|l| l == "mobilenetv2@INT8"), "{labels:?}");
+        assert!(labels.iter().any(|l| l == "MM@INT4"), "{labels:?}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let sc = Scenario::from_json(SC).unwrap();
+        let mut other = sc.clone();
+        other.seed = 8;
+        let a: Vec<String> =
+            sc.generate(false).unwrap().iter().map(RequestKind::label).collect();
+        let b: Vec<String> =
+            other.generate(false).unwrap().iter().map(RequestKind::label).collect();
+        assert_ne!(a, b, "seed must shape the stream");
+    }
+
+    #[test]
+    fn quick_caps_requests_and_downscales() {
+        let mut sc = Scenario::from_json(SC).unwrap();
+        sc.requests = 500;
+        let quick = sc.generate(true).unwrap();
+        assert_eq!(quick.len(), QUICK_REQUEST_CAP);
+        // A quick-mode model request is smaller than the full-mode one.
+        let full = sc.generate(false).unwrap();
+        let macs_of = |ks: &[RequestKind]| -> Option<u64> {
+            ks.iter().find_map(|k| match k {
+                RequestKind::Model { model, .. } => Some(model.total_macs()),
+                _ => None,
+            })
+        };
+        let (fq, ff) = (macs_of(&quick).unwrap(), macs_of(&full).unwrap());
+        assert!(fq < ff, "quick {fq} !< full {ff}");
+    }
+
+    #[test]
+    fn rejects_malformed_scenarios() {
+        assert!(Scenario::from_json("[]").is_err());
+        assert!(Scenario::from_json(r#"{ "requests": 4 }"#).is_err());
+        let bad_model = r#"{ "requests": 1,
+            "mix": [ { "model": "nope", "prec": 8 } ] }"#;
+        assert!(matches!(
+            Scenario::from_json(bad_model),
+            Err(SpeedError::Parse(_))
+        ));
+        let bad_prec = r#"{ "requests": 1,
+            "mix": [ { "op": "mm", "m": 2, "k": 2, "n": 2, "prec": 7 } ] }"#;
+        assert!(Scenario::from_json(bad_prec).is_err());
+        let bad_strat = r#"{ "requests": 1,
+            "mix": [ { "op": "mm", "m": 2, "k": 2, "n": 2, "prec": 8,
+                       "strat": "ff" } ] }"#;
+        assert!(Scenario::from_json(bad_strat).is_err());
+        let bad_op = r#"{ "requests": 1,
+            "mix": [ { "op": "conv", "c": 2, "f": 2, "h": 2, "w": 2,
+                       "ksize": 5, "prec": 8 } ] }"#;
+        assert!(Scenario::from_json(bad_op).is_err(), "kernel > padded input");
+        let bad_arrival = r#"{ "requests": 1,
+            "arrival": { "pattern": "warp" },
+            "mix": [ { "op": "mm", "m": 2, "k": 2, "n": 2, "prec": 8 } ] }"#;
+        assert!(Scenario::from_json(bad_arrival).is_err());
+    }
+
+    #[test]
+    fn arrival_yields() {
+        let mut rng = XorShift64::new(3);
+        let steady = Arrival::Steady { per_tick: 1 };
+        assert_eq!(steady.yields_after(0, &mut rng), 1);
+        assert_eq!(steady.yields_after(1, &mut rng), 1);
+        let burst = Arrival::Burst { size: 4 };
+        assert_eq!(burst.yields_after(2, &mut rng), 0);
+        // A burst boundary opens a quiet period as deep as the burst.
+        assert_eq!(burst.yields_after(3, &mut rng), 4);
+        let random = Arrival::Random { max_gap: 2 };
+        for i in 0..32 {
+            assert!(random.yields_after(i, &mut rng) <= 2);
+        }
+    }
+
+    #[test]
+    fn xorshift_is_deterministic_and_spread() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_eq!(va, vb);
+        // Zero seed still produces a live stream.
+        let mut z = XorShift64::new(0);
+        let vz: Vec<u64> = (0..8).map(|_| z.next_u64()).collect();
+        assert!(vz.iter().any(|&v| v != 0));
+        let mut counts = [0usize; 4];
+        let mut r = XorShift64::new(9);
+        for _ in 0..4000 {
+            counts[r.below(4) as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 700, "skewed draw: {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Precision-affinity scheduling state (pure logic, no threads).
+//!
+//! Every worker owns a lane. A request is routed to the least-loaded lane
+//! whose worker was last configured at the request's precision — keeping
+//! same-precision streams on the same datapath so the per-request
+//! `VSACFG` elides the precision switch (Sec. II-E) and the worker's
+//! private program cache stays hot. When no lane has the right affinity,
+//! the shortest lane takes the request (and adopts the new affinity).
+//! When a lane backs up past `steal_threshold`, an idle worker steals a
+//! micro-batch from its tail. The whole structure lives behind one mutex
+//! owned by the pool; all methods here are called with that lock held.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::Precision;
+
+use super::batch::BatchKey;
+use super::{Completion, Request};
+
+/// A routed request waiting in a lane.
+pub(crate) struct Job {
+    pub req: Request,
+    pub key: BatchKey,
+    pub prec: Precision,
+    pub enqueued: Instant,
+    pub done: Arc<Completion>,
+}
+
+struct Lane {
+    queue: VecDeque<Job>,
+    /// Precision of the last request routed to / popped by this lane's
+    /// worker — the proxy for "what the datapath is configured at".
+    affinity: Option<Precision>,
+}
+
+/// Scheduler state: per-worker lanes plus the shared queue bound.
+pub(crate) struct SchedState {
+    lanes: Vec<Lane>,
+    queued: usize,
+    capacity: usize,
+    max_batch: usize,
+    steal_threshold: usize,
+    pub shutdown: bool,
+    // ---- counters (harvested into MetricsSnapshot) ----
+    pub affinity_hits: u64,
+    pub affinity_misses: u64,
+    pub steals: u64,
+    pub max_depth: usize,
+    pub depth_sum: u64,
+    pub depth_samples: u64,
+}
+
+impl SchedState {
+    pub fn new(
+        workers: usize,
+        capacity: usize,
+        max_batch: usize,
+        steal_threshold: usize,
+    ) -> Self {
+        SchedState {
+            lanes: (0..workers.max(1))
+                .map(|_| Lane { queue: VecDeque::new(), affinity: None })
+                .collect(),
+            queued: 0,
+            capacity: capacity.max(1),
+            max_batch: max_batch.max(1),
+            steal_threshold: steal_threshold.max(1),
+            shutdown: false,
+            affinity_hits: 0,
+            affinity_misses: 0,
+            steals: 0,
+            max_depth: 0,
+            depth_sum: 0,
+            depth_samples: 0,
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn has_space(&self) -> bool {
+        self.queued < self.capacity
+    }
+
+    /// Route a job to a lane (affinity first, then least-loaded). Returns
+    /// the chosen lane index, or the job back when the queue is full.
+    pub fn route(&mut self, job: Job) -> Result<usize, Job> {
+        if !self.has_space() {
+            return Err(job);
+        }
+        // Pass 1: among lanes whose worker is at the request's precision,
+        // the shortest queue (lowest index on ties).
+        let mut chosen: Option<usize> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if lane.affinity == Some(job.prec)
+                && chosen.map_or(true, |c| lane.queue.len() < self.lanes[c].queue.len())
+            {
+                chosen = Some(i);
+            }
+        }
+        let hit = chosen.is_some();
+        // Pass 2: no affinity match — least-loaded lane overall.
+        let w = chosen.unwrap_or_else(|| {
+            let mut best = 0;
+            for (i, lane) in self.lanes.iter().enumerate() {
+                if lane.queue.len() < self.lanes[best].queue.len() {
+                    best = i;
+                }
+            }
+            best
+        });
+        if hit {
+            self.affinity_hits += 1;
+        } else {
+            self.affinity_misses += 1;
+        }
+        let lane = &mut self.lanes[w];
+        lane.affinity = Some(job.prec);
+        lane.queue.push_back(job);
+        self.queued += 1;
+        self.max_depth = self.max_depth.max(self.queued);
+        self.depth_sum += self.queued as u64;
+        self.depth_samples += 1;
+        Ok(w)
+    }
+
+    /// Next micro-batch for worker `w`: the head of its own lane plus
+    /// every same-key job waiting there (up to `max_batch`); if the lane
+    /// is empty, a batch stolen from the tail of the most backed-up lane.
+    /// `None` = nothing runnable for this worker right now.
+    pub fn next_batch(&mut self, w: usize) -> Option<Vec<Job>> {
+        if let Some(head) = self.lanes[w].queue.pop_front() {
+            let key = head.key.clone();
+            let prec = head.prec;
+            let mut batch = vec![head];
+            let lane = &mut self.lanes[w].queue;
+            let mut i = 0;
+            while i < lane.len() && batch.len() < self.max_batch {
+                if lane[i].key == key {
+                    batch.push(lane.remove(i).expect("index checked"));
+                } else {
+                    i += 1;
+                }
+            }
+            self.lanes[w].affinity = Some(prec);
+            self.queued -= batch.len();
+            return Some(batch);
+        }
+        // Work-stealing: only from a lane that has actually backed up —
+        // below the threshold the owning worker keeps its affinity run.
+        let victim = (0..self.lanes.len())
+            .filter(|&i| i != w)
+            .max_by_key(|&i| self.lanes[i].queue.len())?;
+        if self.lanes[victim].queue.len() < self.steal_threshold {
+            return None;
+        }
+        let tail = self.lanes[victim].queue.pop_back().expect("length checked");
+        let key = tail.key.clone();
+        let prec = tail.prec;
+        let mut batch = vec![tail];
+        // Take the contiguous same-key run at the tail (the victim's FIFO
+        // front — its worker's next work — stays untouched).
+        while batch.len() < self.max_batch {
+            let same = matches!(self.lanes[victim].queue.back(), Some(j) if j.key == key);
+            if !same {
+                break;
+            }
+            batch.push(self.lanes[victim].queue.pop_back().expect("just peeked"));
+        }
+        batch.reverse(); // restore submission order within the batch
+        self.steals += 1;
+        self.lanes[w].affinity = Some(prec);
+        self.queued -= batch.len();
+        Some(batch)
+    }
+
+    /// Average queue depth observed at routing time.
+    pub fn avg_depth(&self) -> f64 {
+        if self.depth_samples == 0 {
+            return 0.0;
+        }
+        self.depth_sum as f64 / self.depth_samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::isa::StrategyKind;
+    use crate::models::OpDesc;
+    use crate::serve::RequestKind;
+
+    fn job(id: u64, m: u32, prec: Precision) -> Job {
+        let kind = RequestKind::Op {
+            op: OpDesc::mm(m, 2, 2, prec),
+            strat: StrategyKind::Mm,
+        };
+        Job {
+            key: BatchKey::of(&kind),
+            prec,
+            req: Request { id, kind },
+            enqueued: Instant::now(),
+            done: Arc::new(Completion::default()),
+        }
+    }
+
+    #[test]
+    fn affinity_routes_same_precision_to_same_lane() {
+        let mut s = SchedState::new(3, 64, 1, 2);
+        let a = s.route(job(0, 2, Precision::Int8)).unwrap_or_else(|_| panic!());
+        let b = s.route(job(1, 3, Precision::Int8)).unwrap_or_else(|_| panic!());
+        assert_eq!(a, b, "same precision sticks to one lane");
+        let c = s.route(job(2, 2, Precision::Int4)).unwrap_or_else(|_| panic!());
+        assert_ne!(a, c, "new precision takes an empty lane");
+        assert_eq!(s.affinity_hits, 1);
+        assert_eq!(s.affinity_misses, 2);
+        assert_eq!(s.queued(), 3);
+    }
+
+    #[test]
+    fn overflow_returns_the_job() {
+        let mut s = SchedState::new(1, 2, 1, 2);
+        assert!(s.route(job(0, 2, Precision::Int8)).is_ok());
+        assert!(s.route(job(1, 2, Precision::Int8)).is_ok());
+        let back = s.route(job(2, 2, Precision::Int8));
+        assert!(back.is_err());
+        assert_eq!(back.err().map(|j| j.req.id), Some(2));
+        assert!(!s.has_space());
+        assert_eq!(s.max_depth, 2);
+    }
+
+    #[test]
+    fn micro_batch_takes_same_key_jobs_up_to_cap() {
+        let mut s = SchedState::new(1, 64, 3, 2);
+        // Keys: A A B A A — batch pops [A,A,A] (cap 3), leaves [B,A].
+        for (id, m) in [(0, 2), (1, 2), (2, 9), (3, 2), (4, 2)] {
+            s.route(job(id, m, Precision::Int8)).unwrap_or_else(|_| panic!());
+        }
+        let batch = s.next_batch(0).unwrap();
+        assert_eq!(batch.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![0, 1, 3]);
+        assert_eq!(s.queued(), 2);
+        let batch = s.next_batch(0).unwrap();
+        assert_eq!(batch[0].req.id, 2, "skipped jobs keep FIFO order");
+        assert_eq!(batch.len(), 1);
+        let batch = s.next_batch(0).unwrap();
+        assert_eq!(batch[0].req.id, 4);
+        assert!(s.next_batch(0).is_none());
+        assert_eq!(s.queued(), 0);
+    }
+
+    #[test]
+    fn stealing_only_from_backed_up_lanes() {
+        let mut s = SchedState::new(2, 64, 8, 2);
+        // Everything lands on lane 0 (same precision).
+        s.route(job(0, 2, Precision::Int8)).unwrap_or_else(|_| panic!());
+        // One queued job is below the threshold: worker 1 must not steal.
+        assert!(s.next_batch(1).is_none());
+        s.route(job(1, 3, Precision::Int8)).unwrap_or_else(|_| panic!());
+        s.route(job(2, 3, Precision::Int8)).unwrap_or_else(|_| panic!());
+        // Lane 0 is backed up now; worker 1 steals the same-key tail run
+        // in submission order.
+        let batch = s.next_batch(1).unwrap();
+        assert_eq!(batch.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(s.steals, 1);
+        // The victim's head job is untouched.
+        let own = s.next_batch(0).unwrap();
+        assert_eq!(own[0].req.id, 0);
+        assert_eq!(s.queued(), 0);
+    }
+
+    #[test]
+    fn depth_accounting() {
+        let mut s = SchedState::new(1, 8, 1, 2);
+        for id in 0..4 {
+            s.route(job(id, 2, Precision::Int8)).unwrap_or_else(|_| panic!());
+        }
+        assert_eq!(s.max_depth, 4);
+        assert!((s.avg_depth() - 2.5).abs() < 1e-9, "{}", s.avg_depth());
+    }
+}

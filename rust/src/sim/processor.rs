@@ -205,6 +205,29 @@ impl Processor {
         self.mem.grow(bytes);
     }
 
+    /// Drain the pipeline: return the issue/execute scoreboard (decode
+    /// clock, FU and memory-port free times, vector-register hazard
+    /// tables, MPTU chain state) to exactly its fresh-construction values.
+    ///
+    /// Control state (`VSACFG` precision, `vl`/`sew`), external-memory
+    /// contents, and lifetime counters all persist — only the *timing*
+    /// state is quiesced. A program executed after `reset_pipeline`
+    /// therefore reports the same per-run [`SimStats`] as on a
+    /// newly-constructed machine (modulo the control-state-dependent
+    /// precision-switch counter), no matter what ran before. The serving
+    /// layer resets at request boundaries so per-request statistics are
+    /// independent of how requests were scheduled across a pool.
+    pub fn reset_pipeline(&mut self) {
+        self.t_decode = 0;
+        self.fu_free = [0; 5];
+        self.mem_port_free = 0;
+        self.vreg_write_done = [0; 32];
+        self.vreg_read_done = [0; 32];
+        self.last_mptu_complete = u64::MAX;
+        self.last_complete = 0;
+        self.vregs_touched = [false; 32];
+    }
+
     fn xreg(&self, r: u8) -> i64 {
         if r == 0 {
             0
@@ -1276,6 +1299,51 @@ mod tests {
         let sb = b.run_segment(&seg).unwrap();
         assert_eq!(sa, sb);
         assert_eq!(a.xreg(3), b.xreg(3));
+    }
+
+    #[test]
+    fn reset_pipeline_restores_fresh_run_stats() {
+        // The same compiled operator replayed after `reset_pipeline` must
+        // report stats bit-identical to its very first run on a fresh
+        // machine — the contract the serving layer's per-request
+        // determinism is built on.
+        let cfg = SpeedConfig::reference();
+        let op = OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int8);
+        let layout = MemLayout::for_op(&op, 1 << 20).unwrap();
+        let c = compile_op(&op, &cfg, StrategyKind::Ffcs, layout, false).unwrap();
+        let run_once = |p: &mut Processor| {
+            p.set_plan(c.plan);
+            let mut st = SimStats::default();
+            for seg in &c.segments {
+                st.merge(&p.run_segment(seg).unwrap());
+            }
+            st
+        };
+        let mut p = machine();
+        let first = run_once(&mut p);
+        // Without a reset the warm scoreboard may shift the run's timing.
+        let _warm = run_once(&mut p);
+        p.reset_pipeline();
+        let replay = run_once(&mut p);
+        assert_eq!(first, replay);
+        // A different machine that ran other work first agrees too.
+        let mut q = machine();
+        let other = OpDesc::mm(6, 16, 6, Precision::Int16);
+        let lo = MemLayout::for_op(&other, 1 << 20).unwrap();
+        let co = compile_op(&other, &cfg, StrategyKind::Mm, lo, false).unwrap();
+        q.set_plan(co.plan);
+        for seg in &co.segments {
+            q.run_segment(seg).unwrap();
+        }
+        q.reset_pipeline();
+        let mut cross = run_once(&mut q);
+        // Control state persists across the reset by design: q's datapath
+        // is at INT16 from the MM program, so the conv's VSACFG performs a
+        // switch that p (already at INT8) did not. Everything else — the
+        // timing, traffic, and instruction statistics — must agree.
+        assert_eq!(cross.precision_switches, 1);
+        cross.precision_switches = first.precision_switches;
+        assert_eq!(first, cross);
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Serving determinism contract (ISSUE 3 acceptance bar): for a fixed
+//! scenario seed, per-request `SimStats` are bit-identical regardless of
+//! `--workers`, of the micro-batch cap, and of batch-vs-`--exact`
+//! simulation mode — scheduling is semantics-preserving.
+
+use speed_rvv::config::SpeedConfig;
+use speed_rvv::serve::{
+    stats_digest, RequestKind, RequestResult, Scenario, ServeOptions, ServePool,
+};
+use speed_rvv::sim::ExecMode;
+use speed_rvv::Engine;
+
+/// A small fixed scenario: cheap enough for the exact-mode leg, rich
+/// enough to mix models, operators, and all three precisions.
+const PARITY_SCENARIO: &str = r#"{
+    "name": "parity",
+    "seed": 20240917,
+    "requests": 10,
+    "arrival": { "pattern": "burst", "size": 4 },
+    "mix": [
+        { "model": "mobilenetv2", "prec": 8, "weight": 2, "downscale": 8 },
+        { "model": "vit_tiny", "prec": 4, "weight": 2, "downscale": 8 },
+        { "op": "mm", "m": 24, "k": 32, "n": 24, "prec": 16, "weight": 2 },
+        { "op": "dwcv", "c": 8, "h": 12, "w": 12, "ksize": 3, "prec": 8,
+          "weight": 1 }
+    ]
+}"#;
+
+fn run_pool(
+    kinds: &[RequestKind],
+    workers: usize,
+    max_batch: usize,
+    mode: ExecMode,
+) -> Vec<RequestResult> {
+    let pool = ServePool::new(
+        SpeedConfig::reference(),
+        ServeOptions {
+            workers,
+            capacity: 64,
+            max_batch,
+            exec_mode: mode,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    pool.run_all(kinds.to_vec()).unwrap()
+}
+
+fn assert_same_stats(a: &[RequestResult], b: &[RequestResult], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{what}");
+        assert_eq!(x.stats, y.stats, "{what}: request {} ({})", x.id, x.layers);
+        assert_eq!(x.layers, y.layers, "{what}: request {}", x.id);
+    }
+    assert_eq!(stats_digest(a), stats_digest(b), "{what}: digest");
+}
+
+#[test]
+fn per_request_stats_are_schedule_invariant() {
+    let sc = Scenario::from_json(PARITY_SCENARIO).unwrap();
+    let kinds = sc.generate(false).unwrap();
+    assert_eq!(kinds.len(), 10);
+
+    // Reference: one worker, no coalescing, batch-mode simulator.
+    let reference = run_pool(&kinds, 1, 1, ExecMode::Batch);
+
+    // More workers (work stealing + affinity routing engaged).
+    let wide = run_pool(&kinds, 4, 1, ExecMode::Batch);
+    assert_same_stats(&reference, &wide, "workers 1 vs 4");
+
+    // Micro-batching on.
+    let batched = run_pool(&kinds, 2, 8, ExecMode::Batch);
+    assert_same_stats(&reference, &batched, "batched vs unbatched");
+
+    // The per-instruction simulator (--exact) with everything else varied.
+    let exact = run_pool(&kinds, 3, 4, ExecMode::Exact);
+    assert_same_stats(&reference, &exact, "batch vs exact mode");
+}
+
+#[test]
+fn pool_results_match_a_dedicated_fresh_engine() {
+    // Semantics preservation against the strongest baseline: each request
+    // run alone on its own brand-new engine. Only the precision-switch
+    // field needs the documented normalization (the pool reports
+    // intra-request switches; a fresh engine additionally counts the
+    // warm-up switch its default INT8 datapath may pay on entry).
+    let sc = Scenario::from_json(PARITY_SCENARIO).unwrap();
+    let kinds = sc.generate(false).unwrap();
+    let served = run_pool(&kinds, 2, 4, ExecMode::Batch);
+    for (kind, r) in kinds.iter().zip(&served) {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let mut solo = match kind {
+            RequestKind::Model { model, prec, policy } => {
+                let mut session = engine.session().with_policy(*policy);
+                session.run_model(model, *prec).unwrap().total
+            }
+            RequestKind::Op { op, strat } => {
+                engine.session().run_op(op, *strat).unwrap().stats
+            }
+        };
+        solo.precision_switches = r.stats.precision_switches;
+        assert_eq!(solo, r.stats, "request {} ({})", r.id, kind.label());
+    }
+}
+
+#[test]
+fn committed_mixed_edge_scenario_is_deterministic() {
+    // The CI smoke scenario itself: hermetic (committed file), and its
+    // quick-mode request stream serves identically on 1 and 4 workers.
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../bench/scenarios/mixed_edge.json"
+    );
+    let sc = Scenario::load(path).unwrap();
+    assert_eq!(sc.name, "mixed_edge");
+    let kinds = sc.generate(true).unwrap();
+    assert!(!kinds.is_empty());
+    let narrow = run_pool(&kinds, 1, 1, ExecMode::Batch);
+    let wide = run_pool(&kinds, 4, 8, ExecMode::Batch);
+    assert_same_stats(&narrow, &wide, "mixed_edge quick");
+    // The stream mixes precisions (the scenario's point).
+    let precs: std::collections::HashSet<String> =
+        kinds.iter().map(|k| format!("{}", k.precision())).collect();
+    assert!(precs.len() >= 2, "{precs:?}");
+}
+
+#[test]
+fn other_committed_scenarios_parse_and_generate() {
+    for file in ["steady_vision.json", "vit_burst.json"] {
+        let path =
+            format!("{}/../bench/scenarios/{file}", env!("CARGO_MANIFEST_DIR"));
+        let sc = Scenario::load(&path).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let kinds = sc.generate(true).unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert!(!kinds.is_empty(), "{file}");
+    }
+}
+
+#[test]
+fn serve_bench_report_is_parseable_and_digest_stable() {
+    use speed_rvv::runtime::json::{parse, Json};
+    use speed_rvv::serve::{run_serve_bench, ServeBenchOptions};
+    let sc = Scenario::from_json(PARITY_SCENARIO).unwrap();
+    let a = run_serve_bench(
+        &sc,
+        &ServeBenchOptions { workers: 1, quick: false, exact: false, max_batch: Some(1) },
+    )
+    .unwrap();
+    let b = run_serve_bench(
+        &sc,
+        &ServeBenchOptions { workers: 3, quick: false, exact: false, max_batch: None },
+    )
+    .unwrap();
+    assert_eq!(a.stats_digest, b.stats_digest, "digest is schedule-invariant");
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.total_macs, b.total_macs);
+    assert_eq!(a.total_traffic_bytes, b.total_traffic_bytes);
+
+    let doc = parse(&b.to_json()).unwrap();
+    assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(1));
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve-bench"));
+    assert_eq!(doc.get("requests").and_then(Json::as_i64), Some(10));
+    assert_eq!(
+        doc.get("stats_digest").and_then(Json::as_str),
+        Some(format!("{:016x}", a.stats_digest).as_str())
+    );
+    let metrics = doc.get("metrics").expect("metrics object");
+    assert_eq!(metrics.get("completed").and_then(Json::as_i64), Some(10));
+    assert!(metrics.get("latency_us").and_then(|l| l.get("p99")).is_some());
+    assert!(metrics.get("precision_switches").is_some());
+}
+
+#[test]
+fn backpressure_blocks_then_drains() {
+    // A capacity-2 pool with one worker and a stream of requests: the
+    // blocking submit path must apply backpressure (never drop), and
+    // everything drains to completion.
+    let pool = ServePool::new(
+        SpeedConfig::reference(),
+        ServeOptions {
+            workers: 1,
+            capacity: 2,
+            max_batch: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let kinds: Vec<RequestKind> = Scenario::from_json(PARITY_SCENARIO)
+        .unwrap()
+        .generate(false)
+        .unwrap();
+    let n = kinds.len() as u64;
+    let results = pool.run_all(kinds).unwrap();
+    assert_eq!(results.len() as u64, n);
+    let snap = pool.shutdown();
+    assert_eq!(snap.completed, n);
+    assert_eq!(snap.rejected, 0);
+    assert!(snap.queue_max_depth <= 2);
+}
