@@ -15,9 +15,11 @@
 //! there is **higher-is-better**, and a measured value below
 //! `baseline × (1 − tolerance)` fails the run ([`check_baseline`]).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{Precision, SpeedConfig};
+use crate::coordinator::Policy;
 use crate::engine::Engine;
 use crate::error::{Result, SpeedError};
 use crate::isa::StrategyKind;
@@ -25,6 +27,7 @@ use crate::models::zoo::{model_by_name, MODELS};
 use crate::models::OpDesc;
 use crate::runtime::json::{parse, Json};
 use crate::sim::ExecMode;
+use crate::tune::{self, TuneOptions};
 
 /// What to run and how hard.
 #[derive(Debug, Clone, Copy)]
@@ -75,6 +78,35 @@ pub struct HotpathResult {
     pub speedup: f64,
 }
 
+/// One auto-tuned vs static-mixed model comparison (`tuned` section of
+/// `BENCH_sim.json`). Cycle numbers are *simulated* — bit-identical in
+/// batch and exact mode — so the section gates cleanly in either.
+#[derive(Debug, Clone)]
+pub struct TunedBenchEntry {
+    pub model: String,
+    pub prec: Precision,
+    /// Whole-model simulated cycles under `Policy::Mixed`.
+    pub cycles_static: u64,
+    /// Whole-model simulated cycles under the tuned plan.
+    pub cycles_tuned: u64,
+    /// Distinct operators whose tuned mapping deviates from static.
+    pub improved_ops: usize,
+    /// Distinct operators in the plan.
+    pub tuned_ops: usize,
+    /// Host wall time spent searching (tuning only, not the replays).
+    pub tune_wall_s: f64,
+}
+
+impl TunedBenchEntry {
+    /// static / tuned simulated cycles (>= 1.0 by the tie-to-static rule).
+    pub fn speedup(&self) -> f64 {
+        if self.cycles_tuned == 0 {
+            return 1.0;
+        }
+        self.cycles_static as f64 / self.cycles_tuned as f64
+    }
+}
+
 /// Everything one `speed-bench` invocation measured.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
@@ -86,6 +118,9 @@ pub struct BenchReport {
     pub hotpath: HotpathResult,
     pub operators: Vec<BenchEntry>,
     pub models: Vec<BenchEntry>,
+    /// Auto-tuned vs static-mixed comparisons (`repro tune`'s win,
+    /// re-measured end to end through composed model runs).
+    pub tuned: Vec<TunedBenchEntry>,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub total_wall_s: f64,
@@ -113,6 +148,14 @@ impl BenchReport {
         }
         if lookups > 0 {
             m.push(("engine_cache_hit_rate".into(), self.cache_hits as f64 / lookups as f64));
+        }
+        if !self.tuned.is_empty() {
+            let best = self
+                .tuned
+                .iter()
+                .map(TunedBenchEntry::speedup)
+                .fold(f64::MIN, f64::max);
+            m.push(("tuned_vs_mixed_best_speedup".into(), best));
         }
         m
     }
@@ -163,6 +206,24 @@ impl BenchReport {
             }
             s.push_str("  ],\n");
         }
+        s.push_str("  \"tuned\": [\n");
+        for (i, e) in self.tuned.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{ \"model\": {}, \"prec\": {}, \"cycles_static\": {}, \
+                 \"cycles_tuned\": {}, \"speedup\": {}, \"improved_ops\": {}, \
+                 \"tuned_ops\": {}, \"tune_wall_s\": {} }}{}\n",
+                jstr(&e.model),
+                jstr(&e.prec.to_string()),
+                e.cycles_static,
+                e.cycles_tuned,
+                jf(e.speedup()),
+                e.improved_ops,
+                e.tuned_ops,
+                jf(e.tune_wall_s),
+                if i + 1 < self.tuned.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
         s.push_str(&format!(
             "  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n",
             self.cache_hits, self.cache_misses
@@ -229,6 +290,21 @@ impl BenchReport {
                     e.wall_s * 1e3,
                     e.mops_per_s_host,
                     e.gops_simulated
+                ));
+            }
+        }
+        if !self.tuned.is_empty() {
+            s.push_str(&format!("tuned vs static mixed: {} models\n", self.tuned.len()));
+            for e in &self.tuned {
+                s.push_str(&format!(
+                    "  {:16} {:5} {:>12} -> {:>12} sim cycles ({:.3}x, {}/{} ops retuned)\n",
+                    e.model,
+                    e.prec.to_string(),
+                    e.cycles_static,
+                    e.cycles_tuned,
+                    e.speedup(),
+                    e.improved_ops,
+                    e.tuned_ops
                 ));
             }
         }
@@ -401,12 +477,68 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
         }
     }
 
+    // ---- tuned vs static mixed dataflow ----
+    // The auto-tuner's acceptance measurement: tune a CONV-heavy zoo
+    // model, then replay the *whole model* under both mappings through
+    // fresh engines. Simulated cycles are mode-independent (batch ==
+    // exact bit-for-bit), so the resulting metric gates identically under
+    // --exact. INT4 is where the static table's FFCS choice is furthest
+    // off: PP = 16 shrinks the MPTU schedule 16x while the per-block
+    // weight refetch only halves, so large CONVs go memory-bound and FF's
+    // weight residency wins outright — exactly the precision-dependent
+    // shift the tuner exists to catch.
+    let tuned_points: &[(&str, Precision)] = if opts.quick {
+        &[("vgg16", Precision::Int4)]
+    } else {
+        &[
+            ("vgg16", Precision::Int4),
+            ("vgg16", Precision::Int8),
+            ("resnet18", Precision::Int4),
+        ]
+    };
+    let mut tuned = Vec::new();
+    for &(name, prec) in tuned_points {
+        let mut model = model_by_name(name)
+            .ok_or_else(|| SpeedError::Bench(format!("unknown model '{name}'")))?;
+        if opts.quick {
+            model = crate::report::fig12::downscale(&model, 4);
+        }
+        let topts = TuneOptions { exec_mode: mode, ..Default::default() };
+        let t0 = Instant::now();
+        let plan = tune::tune_model(&cfg, &model, prec, &topts)?;
+        let tune_wall = t0.elapsed().as_secs_f64();
+        let mut static_engine = Engine::new(cfg)?;
+        static_engine.set_exec_mode(mode);
+        let static_run = static_engine
+            .session()
+            .with_policy(Policy::Mixed)
+            .run_model(&model, prec)?;
+        let mut tuned_engine = Engine::new(cfg)?;
+        tuned_engine.set_exec_mode(mode);
+        let improved_ops = plan.improved_ops();
+        let tuned_ops = plan.ops.len();
+        let tuned_run = tuned_engine
+            .session()
+            .with_tuned_plan(Arc::new(plan))
+            .run_model(&model, prec)?;
+        tuned.push(TunedBenchEntry {
+            model: name.to_string(),
+            prec,
+            cycles_static: static_run.total.cycles,
+            cycles_tuned: tuned_run.total.cycles,
+            improved_ops,
+            tuned_ops,
+            tune_wall_s: tune_wall,
+        });
+    }
+
     Ok(BenchReport {
         quick: opts.quick,
         exact_only,
         hotpath,
         operators,
         models,
+        tuned,
         cache_hits: cache.hits,
         cache_misses: cache.misses,
         total_wall_s: t_all.elapsed().as_secs_f64(),
@@ -486,6 +618,15 @@ mod tests {
                 cache_hit_rate: 0.5,
             }],
             models: vec![],
+            tuned: vec![TunedBenchEntry {
+                model: "vgg16".into(),
+                prec: Precision::Int8,
+                cycles_static: 1200,
+                cycles_tuned: 1000,
+                improved_ops: 3,
+                tuned_ops: 10,
+                tune_wall_s: 0.1,
+            }],
             cache_hits: 1,
             cache_misses: 1,
             total_wall_s: 0.5,
@@ -507,6 +648,13 @@ mod tests {
             doc.get("operators").and_then(Json::as_arr).map(|a| a.len()),
             Some(1)
         );
+        // The tuned section carries the static/tuned cycle pair and the
+        // gateable best-speedup metric (1200/1000 = 1.2).
+        let t = doc.get("tuned").and_then(Json::as_arr).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].get("cycles_tuned").and_then(Json::as_i64), Some(1000));
+        let best = m.get("tuned_vs_mixed_best_speedup").and_then(Json::as_f64).unwrap();
+        assert!((best - 1.2).abs() < 1e-9, "{best}");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Instruction-stream generation (see module docs in [`crate::compiler`]).
 
 use crate::config::{Precision, SpeedConfig};
-use crate::dataflow::{self, partition_budget, vreg_region};
+use crate::dataflow::{self, partition_budget, vreg_region, MappingChoice};
 use crate::error::SpeedError;
 use crate::isa::{Dim, Insn, LdMode, RunKind, Segment, StrategyKind, StreamRun, Vtype, WidthSel};
 use crate::models::ops::{OpDesc, OpKind};
@@ -440,10 +440,16 @@ impl<'a> Emitter<'a> {
 fn generate<'a>(
     op: &OpDesc,
     cfg: &SpeedConfig,
-    strat: StrategyKind,
+    choice: MappingChoice,
     layout: &MemLayout,
     sink: Sink<'a>,
 ) -> Result<(Vec<Segment>, CodegenSummary), SpeedError> {
+    let strat = choice.strat;
+    // The chunk is resolved once (clamped to a PP multiple the VRF fits —
+    // see `dataflow::resolve_chunk`) and drives every chunked loop below.
+    // Stage totals are chunk-invariant, so any resolved chunk produces the
+    // same plan sizing and bit-identical outputs.
+    let chunk = dataflow::resolve_chunk(op, cfg, strat, choice.chunk);
     let mut e = Emitter::new(op.prec, sink);
     // Prologue: configuration-setting instructions (Fig. 9 step ①).
     e.vsacfg(op.ksize.max(1), strat);
@@ -462,10 +468,10 @@ fn generate<'a>(
         }
     }
     match strat {
-        StrategyKind::Mm => gen_mm(&mut e, op, cfg, layout),
-        StrategyKind::Ffcs => gen_ffcs(&mut e, op, cfg, layout),
-        StrategyKind::Cf => gen_cf(&mut e, op, cfg, layout),
-        StrategyKind::Ff => gen_ff(&mut e, op, cfg, layout),
+        StrategyKind::Mm => gen_mm(&mut e, op, cfg, layout, chunk),
+        StrategyKind::Ffcs => gen_ffcs(&mut e, op, cfg, layout, chunk),
+        StrategyKind::Cf => gen_cf(&mut e, op, cfg, layout, chunk),
+        StrategyKind::Ff => gen_ff(&mut e, op, cfg, layout, chunk),
     }
     e.finish()
 }
@@ -490,11 +496,25 @@ pub fn compile_op(
     layout: MemLayout,
     functional: bool,
 ) -> Result<CompiledOp, SpeedError> {
-    check(op, cfg, strat)?;
-    let (segments, summary) = generate(op, cfg, strat, &layout, Sink::Collect(Vec::new()))?;
+    compile_op_with(op, cfg, MappingChoice::of(strat), layout, functional)
+}
+
+/// [`compile_op`] with an explicit mapping choice (strategy + optional
+/// chunk override): the auto-tuner's compilation entry point. Chunk
+/// overrides never change plan sizing or outputs — only the load/store
+/// structure of the stream.
+pub fn compile_op_with(
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    choice: MappingChoice,
+    layout: MemLayout,
+    functional: bool,
+) -> Result<CompiledOp, SpeedError> {
+    check(op, cfg, choice.strat)?;
+    let (segments, summary) = generate(op, cfg, choice, &layout, Sink::Collect(Vec::new()))?;
     let plan = OpPlan {
         desc: *op,
-        strat,
+        strat: choice.strat,
         in_addr: layout.in_addr,
         w_addr: layout.w_addr,
         out_addr: layout.out_addr,
@@ -512,8 +532,18 @@ pub fn summarize_op(
     strat: StrategyKind,
     layout: &MemLayout,
 ) -> Result<CodegenSummary, SpeedError> {
-    check(op, cfg, strat)?;
-    let (_, summary) = generate(op, cfg, strat, layout, Sink::CountOnly)?;
+    summarize_op_with(op, cfg, MappingChoice::of(strat), layout)
+}
+
+/// [`summarize_op`] with an explicit mapping choice.
+pub fn summarize_op_with(
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    choice: MappingChoice,
+    layout: &MemLayout,
+) -> Result<CodegenSummary, SpeedError> {
+    check(op, cfg, choice.strat)?;
+    let (_, summary) = generate(op, cfg, choice, layout, Sink::CountOnly)?;
     Ok(summary)
 }
 
@@ -528,8 +558,19 @@ pub fn stream_op(
     layout: &MemLayout,
     feed: &mut dyn FnMut(Segment) -> Result<(), SpeedError>,
 ) -> Result<CodegenSummary, SpeedError> {
-    check(op, cfg, strat)?;
-    let (_, summary) = generate(op, cfg, strat, layout, Sink::Stream(feed))?;
+    stream_op_with(op, cfg, MappingChoice::of(strat), layout, feed)
+}
+
+/// [`stream_op`] with an explicit mapping choice.
+pub fn stream_op_with(
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    choice: MappingChoice,
+    layout: &MemLayout,
+    feed: &mut dyn FnMut(Segment) -> Result<(), SpeedError>,
+) -> Result<CodegenSummary, SpeedError> {
+    check(op, cfg, choice.strat)?;
+    let (_, summary) = generate(op, cfg, choice, layout, Sink::Stream(feed))?;
     Ok(summary)
 }
 
@@ -545,7 +586,8 @@ pub fn execute_op(
 ) -> Result<(crate::sim::SimStats, CodegenSummary), SpeedError> {
     let cfg = proc.cfg;
     check(op, &cfg, strat)?;
-    let sized = generate(op, &cfg, strat, &layout, Sink::CountOnly)?.1;
+    let choice = MappingChoice::of(strat);
+    let sized = generate(op, &cfg, choice, &layout, Sink::CountOnly)?.1;
     proc.set_plan(OpPlan {
         desc: *op,
         strat,
@@ -563,16 +605,16 @@ pub fn execute_op(
             stats.merge(&st);
             Ok(())
         };
-        generate(op, &cfg, strat, &layout, Sink::Stream(&mut feed))?;
+        generate(op, &cfg, choice, &layout, Sink::Stream(&mut feed))?;
     }
     Ok((stats, sized))
 }
 
 /// MM: weights multi-broadcast, inputs reused across stages, PE
-/// output-stationary across K chunks (Fig. 6).
-fn gen_mm(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout) {
+/// output-stationary across K chunks (Fig. 6). `kc` is the resolved
+/// reduction-dim chunk (default: [`dataflow::mm_k_chunk`]).
+fn gen_mm(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, kc: u32) {
     let pp = op.prec.pp();
-    let kc = dataflow::mm_k_chunk(op, cfg);
     let rows_per_block = cfg.lanes * cfg.tile_r;
     let row_blocks = op.m.div_ceil(rows_per_block);
     let col_tiles = op.n.div_ceil(cfg.tile_c);
@@ -633,9 +675,8 @@ fn rows_new(op: &OpDesc, oy: u32) -> u32 {
 
 /// FFCS: feature-map-first, channel-second; inputs stream once, weights
 /// re-fetched per feature-map block, partials for all F in the VRF.
-fn gen_ffcs(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout) {
+fn gen_ffcs(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, cc: u32) {
     let pp = op.prec.pp();
-    let cc = dataflow::conv_c_chunk(op, cfg);
     let cchunks = op.c.div_ceil(cc);
     let fgroup = cfg.lanes * cfg.tile_c;
     let fgroups = op.f.div_ceil(fgroup);
@@ -715,9 +756,8 @@ fn gen_ffcs(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout) {
 
 /// CF: channel-first; PE-internal accumulation across all C, inputs
 /// re-streamed once per output-channel group (Sec. III-B).
-fn gen_cf(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout) {
+fn gen_cf(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, cc: u32) {
     let pp = op.prec.pp();
-    let cc = dataflow::conv_c_chunk(op, cfg);
     let cchunks = op.c.div_ceil(cc);
     let fgroup = cfg.lanes * cfg.tile_c;
     let fgroups = op.f.div_ceil(fgroup);
@@ -756,7 +796,9 @@ fn gen_cf(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout) {
 }
 
 /// FF: feature-map-first per channel (DWCV native; CONV/PWCV ablation).
-fn gen_ff(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout) {
+/// `cc` is the resolved channel chunk for the CONV/PWCV arm (DWCV has no
+/// channel chunking; its chunk resolves to PP and is unused here).
+fn gen_ff(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, cc: u32) {
     let pp = op.prec.pp();
     let (oh, ow) = (op.oh(), op.ow());
     let kk = op.ksize * op.ksize;
@@ -793,7 +835,6 @@ fn gen_ff(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout) {
         // also fetched exactly once — the lowest-traffic arm of Fig. 10.
         // Partials round-trip the result path per channel pass and spill
         // off-chip only when the output image exceeds the VRF.
-        let cc = dataflow::ff_c_chunk(op, cfg);
         let cchunks = op.c.div_ceil(cc);
         let fgroup = cfg.lanes * cfg.tile_c;
         let fgroups = op.f.div_ceil(fgroup);
@@ -844,18 +885,18 @@ mod tests {
     use super::*;
     use crate::sim::Processor;
 
-    fn run_op(
+    fn run_op_choice(
         op: &OpDesc,
         cfg: &SpeedConfig,
-        strat: StrategyKind,
+        choice: MappingChoice,
         inputs: &[i32],
         weights: &[i32],
-    ) -> (Vec<i32>, crate::sim::SimStats) {
+    ) -> (Vec<i32>, crate::sim::SimStats, CodegenSummary) {
         let mut p = Processor::new(*cfg, 1 << 22);
         let layout = MemLayout::for_op(op, 1 << 22).unwrap();
         p.mem.preload_packed(layout.in_addr, inputs, op.prec);
         p.mem.preload_packed(layout.w_addr, weights, op.prec);
-        let compiled = compile_op(op, cfg, strat, layout, true).unwrap();
+        let compiled = compile_op_with(op, cfg, choice, layout, true).unwrap();
         p.set_plan(compiled.plan);
         let mut total = crate::sim::SimStats::default();
         for seg in &compiled.segments {
@@ -863,21 +904,24 @@ mod tests {
             total.merge(&st);
         }
         let out = p.mem.inspect_i32(layout.out_addr, op.output_elems() as usize);
-        (out, total)
+        (out, total, compiled.summary)
+    }
+
+    fn run_op(
+        op: &OpDesc,
+        cfg: &SpeedConfig,
+        strat: StrategyKind,
+        inputs: &[i32],
+        weights: &[i32],
+    ) -> (Vec<i32>, crate::sim::SimStats) {
+        let (out, st, _) = run_op_choice(op, cfg, MappingChoice::of(strat), inputs, weights);
+        (out, st)
     }
 
     fn seeded(n: usize, prec: Precision, seed: u64) -> Vec<i32> {
-        // xorshift64* deterministic operand generator.
-        let (lo, hi) = prec.range();
-        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-        (0..n)
-            .map(|_| {
-                s ^= s << 13;
-                s ^= s >> 7;
-                s ^= s << 17;
-                lo + ((s >> 8) % (hi - lo + 1) as u64) as i32
-            })
-            .collect()
+        // One deterministic operand generator crate-wide: the parity
+        // tests in `tune` must exercise the same value distribution.
+        crate::tune::seeded_operands(n, prec, seed)
     }
 
     fn mm_ref(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
@@ -1027,6 +1071,34 @@ mod tests {
                 );
             } else {
                 assert!(covered > 0, "{op:?} {strat}: no runs marked");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_override_preserves_outputs_and_stages() {
+        // A chunk override reshapes the load/store structure only: the
+        // stage total, MAC count, and output memory must be bit-identical
+        // to the default chunk for every candidate the tuner may try.
+        let cfg = SpeedConfig::reference();
+        for (op, strat) in [
+            (OpDesc::mm(12, 48, 10, Precision::Int8), StrategyKind::Mm),
+            (OpDesc::conv(16, 8, 10, 10, 3, 1, 1, Precision::Int8), StrategyKind::Ffcs),
+            (OpDesc::pwcv(32, 16, 8, 8, Precision::Int16), StrategyKind::Cf),
+            (OpDesc::conv(16, 8, 10, 10, 3, 1, 1, Precision::Int8), StrategyKind::Ff),
+        ] {
+            let x = seeded(op.input_elems() as usize, op.prec, 31);
+            let w = seeded(op.weight_elems() as usize, op.prec, 37);
+            let (base_out, base_st, base_sum) =
+                run_op_choice(&op, &cfg, MappingChoice::of(strat), &x, &w);
+            let cands = dataflow::chunk_candidates(&op, &cfg, strat);
+            assert!(!cands.is_empty(), "{op:?} {strat}: no chunk candidates");
+            for c in cands {
+                let choice = MappingChoice { strat, chunk: Some(c) };
+                let (out, st, sum) = run_op_choice(&op, &cfg, choice, &x, &w);
+                assert_eq!(out, base_out, "{op:?} {choice}");
+                assert_eq!(st.macs, base_st.macs, "{op:?} {choice}");
+                assert_eq!(sum.total_stages, base_sum.total_stages, "{op:?} {choice}");
             }
         }
     }

@@ -25,6 +25,7 @@
 pub mod codegen;
 
 pub use codegen::{
-    compile_op, execute_op, stream_op, summarize_op, CodegenSummary, CompiledOp, MemLayout,
-    MEM_ALIGN, MEM_GUARD, MEM_MIN_BYTES,
+    compile_op, compile_op_with, execute_op, stream_op, stream_op_with, summarize_op,
+    summarize_op_with, CodegenSummary, CompiledOp, MemLayout, MEM_ALIGN, MEM_GUARD,
+    MEM_MIN_BYTES,
 };

@@ -33,14 +33,23 @@ pub enum Policy {
     Mixed,
     /// Force one strategy for every applicable operator (ablation).
     Fixed(StrategyKind),
+    /// Use an empirically tuned per-operator mapping
+    /// ([`crate::tune::TunedPlan`]). The plan itself is attached to the
+    /// executing [`Session`](crate::engine::Session) (or resolved from a
+    /// pool's [`crate::tune::TunedPlans`] registry); operators without a
+    /// tuned entry — and sessions with no plan attached — fall back to the
+    /// static mixed mapping, so `Tuned` is always safe to request.
+    Tuned,
 }
 
 impl Policy {
     /// Strategy for an operator under this policy (None = not applicable,
-    /// the operator is skipped in ablation sweeps).
+    /// the operator is skipped in ablation sweeps). For [`Policy::Tuned`]
+    /// this is the static fallback; the session substitutes the tuned
+    /// choice (strategy + chunk) when a plan is attached.
     pub fn strategy_for(&self, op: &OpDesc) -> Option<StrategyKind> {
         match self {
-            Policy::Mixed => Some(op.preferred_strategy()),
+            Policy::Mixed | Policy::Tuned => Some(op.preferred_strategy()),
             Policy::Fixed(s) => crate::dataflow::applicable(*s, op).then_some(*s),
         }
     }

@@ -23,6 +23,42 @@ use crate::config::{Precision, SpeedConfig};
 use crate::isa::StrategyKind;
 use crate::models::ops::{OpDesc, OpKind};
 
+/// One point of the per-operator mapping space the auto-tuner searches:
+/// a dataflow strategy plus an optional chunk-size override.
+///
+/// `chunk: None` means the analytically-derived maximum that fits the VRF
+/// ([`default_chunk`]) — the value the static mapping has always used. An
+/// explicit chunk is clamped into the valid range by [`resolve_chunk`]
+/// before code generation, so every choice compiles to a stream with the
+/// same stage count and bit-identical outputs; only the load/store
+/// structure (and therefore cycles and traffic) changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MappingChoice {
+    pub strat: StrategyKind,
+    pub chunk: Option<u32>,
+}
+
+impl MappingChoice {
+    /// The strategy with its default (maximal) chunk.
+    pub fn of(strat: StrategyKind) -> Self {
+        MappingChoice { strat, chunk: None }
+    }
+
+    /// The static mixed-dataflow choice for `op` (Sec. III table).
+    pub fn preferred(op: &OpDesc) -> Self {
+        Self::of(op.preferred_strategy())
+    }
+}
+
+impl std::fmt::Display for MappingChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.chunk {
+            None => write!(f, "{}", self.strat),
+            Some(c) => write!(f, "{}/c{}", self.strat, c),
+        }
+    }
+}
+
 /// Geometry of one strategy applied to one operator on one configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct Mapping {
@@ -118,6 +154,66 @@ pub fn ff_c_chunk(op: &OpDesc, cfg: &SpeedConfig) -> u32 {
     let fit = budget / (per_lane_f * kk * pb).max(1);
     let pp = op.prec.pp();
     floor_to(fit.max(pp), pp).min(floor_to(op.c.max(pp), pp))
+}
+
+/// The chunk size the static mapping uses for `strat` over `op`: the
+/// maximal slice that fits the VRF budget (DWCV under FF has no channel
+/// chunking — its "chunk" is the PP packing factor). An inapplicable
+/// `(strat, op)` pair degenerates to the PP floor rather than feeding the
+/// conv chunk math an operator with no kernel (callers that compile go
+/// through [`applicable`] anyway; this keeps the helper total).
+pub fn default_chunk(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> u32 {
+    if !applicable(strat, op) {
+        return op.prec.pp();
+    }
+    match strat {
+        StrategyKind::Mm => mm_k_chunk(op, cfg),
+        StrategyKind::Ffcs | StrategyKind::Cf => conv_c_chunk(op, cfg),
+        StrategyKind::Ff => {
+            if op.kind == OpKind::Dwcv {
+                op.prec.pp()
+            } else {
+                ff_c_chunk(op, cfg)
+            }
+        }
+    }
+}
+
+/// Clamp a requested chunk override into the range code generation can
+/// honor: a multiple of the PP packing factor (so per-chunk stage counts
+/// telescope to the same total), at least PP, and at most the default
+/// (the default is the largest slice the VRF regions fit — anything
+/// bigger would overflow a vector register at load time). `None` is the
+/// default chunk itself.
+pub fn resolve_chunk(
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    strat: StrategyKind,
+    want: Option<u32>,
+) -> u32 {
+    let d = default_chunk(op, cfg, strat);
+    match want {
+        None => d,
+        Some(w) => {
+            let pp = op.prec.pp();
+            floor_to(w.clamp(pp, d.max(pp)), pp).min(d.max(pp))
+        }
+    }
+}
+
+/// Candidate chunk overrides the auto-tuner tries for `strat` over `op`:
+/// power-of-two fractions of the default, deduplicated and excluding the
+/// default itself (which every search already costs as `chunk: None`).
+pub fn chunk_candidates(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Vec<u32> {
+    let d = default_chunk(op, cfg, strat);
+    let mut out = Vec::new();
+    for div in [2u32, 4] {
+        let c = resolve_chunk(op, cfg, strat, Some(d / div));
+        if c < d && !out.contains(&c) {
+            out.push(c);
+        }
+    }
+    out
 }
 
 fn map_mm(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
@@ -231,18 +327,20 @@ fn map_ff(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
 /// Kseg decomposition (Sec. II-B): kernels larger than 15 are split into
 /// sub-kernels no larger than 15, each a separate CONV whose partial sums
 /// compose. Returns the sub-kernel sizes along one axis.
+///
+/// The split is balanced: the minimum number of pieces, with sizes
+/// differing by at most one. The greedy `[15, 15, ..., rest]` split this
+/// function once produced degenerates at boundaries — `kseg_decompose(16)`
+/// was `[15, 1]`, a 1-wide sub-kernel whose CONV pass does almost no work
+/// per input fetch — whereas the balanced split gives `[8, 8]`.
 pub fn kseg_decompose(ksize: u32) -> Vec<u32> {
     if ksize <= 15 {
         return vec![ksize];
     }
-    let mut rest = ksize;
-    let mut out = Vec::new();
-    while rest > 15 {
-        out.push(15);
-        rest -= 15;
-    }
-    out.push(rest);
-    out
+    let pieces = ksize.div_ceil(15);
+    let base = ksize / pieces;
+    let rem = ksize % pieces;
+    (0..pieces).map(|i| base + u32::from(i < rem)).collect()
 }
 
 #[cfg(test)]
@@ -341,9 +439,57 @@ mod tests {
     fn kseg_splits_large_kernels() {
         assert_eq!(kseg_decompose(3), vec![3]);
         assert_eq!(kseg_decompose(15), vec![15]);
-        assert_eq!(kseg_decompose(16), vec![15, 1]);
-        assert_eq!(kseg_decompose(31), vec![15, 15, 1]);
-        assert_eq!(kseg_decompose(45).iter().sum::<u32>(), 45);
+        assert_eq!(kseg_decompose(16), vec![8, 8]);
+        assert_eq!(kseg_decompose(31), vec![11, 10, 10]);
+        assert_eq!(kseg_decompose(45), vec![15, 15, 15]);
+        for ksize in 16..=128u32 {
+            let pieces = kseg_decompose(ksize);
+            assert_eq!(pieces.iter().sum::<u32>(), ksize, "k={ksize}");
+            let max = *pieces.iter().max().unwrap();
+            let min = *pieces.iter().min().unwrap();
+            assert!(max <= 15, "k={ksize}: piece {max} > 15");
+            // Balanced: no degenerate sliver. Pieces differ by at most
+            // one, which also guarantees min >= ksize/2 for the two-piece
+            // range (16..=30) — the [15, 1] regression cannot recur.
+            assert!(max - min <= 1, "k={ksize}: {pieces:?}");
+            assert!(min >= max / 2, "k={ksize}: {pieces:?}");
+            if pieces.len() == 2 {
+                assert!(min >= ksize / 2, "k={ksize}: {pieces:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_resolution_clamps_and_quantizes() {
+        let cfg = cfg();
+        for prec in Precision::ALL {
+            let op = OpDesc::conv(256, 256, 56, 56, 3, 1, 1, prec);
+            let pp = prec.pp();
+            for strat in [StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff] {
+                let d = default_chunk(&op, &cfg, strat);
+                assert_eq!(resolve_chunk(&op, &cfg, strat, None), d);
+                // Oversized requests clamp to the default (VRF safety).
+                assert_eq!(resolve_chunk(&op, &cfg, strat, Some(d * 8)), d);
+                // Undersized requests clamp up to PP.
+                assert_eq!(resolve_chunk(&op, &cfg, strat, Some(1)), pp.min(d.max(pp)));
+                // Every resolved value is a PP multiple within [PP, d].
+                for want in [d / 2, d / 3, d / 4, 7, 1000] {
+                    let c = resolve_chunk(&op, &cfg, strat, Some(want));
+                    assert_eq!(c % pp, 0, "{prec} {strat} want={want}");
+                    assert!(c >= pp && c <= d.max(pp), "{prec} {strat}: {c} vs d={d}");
+                }
+            }
+            // Candidates are strictly smaller than the default, deduped.
+            let cands = chunk_candidates(&op, &cfg, StrategyKind::Ffcs);
+            let d = default_chunk(&op, &cfg, StrategyKind::Ffcs);
+            for c in &cands {
+                assert!(*c < d && *c >= pp && *c % pp == 0);
+            }
+            // DWCV under FF has no channel chunking to vary.
+            let dw = OpDesc::dwcv(32, 14, 14, 3, 1, 1, prec);
+            assert_eq!(default_chunk(&dw, &cfg, StrategyKind::Ff), pp);
+            assert!(chunk_candidates(&dw, &cfg, StrategyKind::Ff).is_empty());
+        }
     }
 
     #[test]

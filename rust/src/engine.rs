@@ -33,11 +33,13 @@ use std::sync::{Arc, Mutex};
 use crate::compiler::{self, CodegenSummary, MemLayout, MEM_MIN_BYTES};
 use crate::config::{Precision, SpeedConfig};
 use crate::coordinator::{LayerResult, ModelResult, Policy};
+use crate::dataflow::MappingChoice;
 use crate::error::{Result, SpeedError};
 use crate::isa::{Segment, StrategyKind};
 use crate::models::zoo::Model;
 use crate::models::OpDesc;
 use crate::sim::{ExecMode, OpPlan, Processor, SimStats};
+use crate::tune::TunedPlan;
 
 /// Largest instruction count a cached program keeps resident. Streams above
 /// this are regenerated on each execution (their plan/layout/summary are
@@ -61,11 +63,15 @@ impl CfgSig {
 }
 
 /// Program-cache key: operator (which carries its precision), dataflow
-/// strategy, and the code-shaping configuration signature.
+/// strategy, chunk override (None = the analytic default), and the
+/// code-shaping configuration signature.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ProgramKey {
     pub op: OpDesc,
     pub strat: StrategyKind,
+    /// Auto-tuner chunk override ([`MappingChoice::chunk`]); distinct
+    /// chunks compile distinct streams and must cache separately.
+    pub chunk: Option<u32>,
     cfg: CfgSig,
 }
 
@@ -73,6 +79,7 @@ pub struct ProgramKey {
 #[derive(Debug)]
 pub struct Program {
     plan: OpPlan,
+    choice: MappingChoice,
     layout: MemLayout,
     required_bytes: u64,
     summary: CodegenSummary,
@@ -83,6 +90,12 @@ pub struct Program {
 impl Program {
     pub fn summary(&self) -> &CodegenSummary {
         &self.summary
+    }
+
+    /// The mapping choice (strategy + chunk override) this program was
+    /// compiled under.
+    pub fn choice(&self) -> MappingChoice {
+        self.choice
     }
 
     pub fn layout(&self) -> &MemLayout {
@@ -259,6 +272,7 @@ impl Engine {
         Session {
             engine: self,
             policy: Policy::Mixed,
+            tuned: None,
             functional: false,
             total: SimStats::default(),
             switch_base,
@@ -280,9 +294,23 @@ impl Engine {
         self.proc.mem.inspect_i32(addr, n)
     }
 
-    /// Fetch the compiled program for `(op, strat)`, compiling on miss.
+    /// Fetch the compiled program for `(op, strat)` at the default chunk,
+    /// compiling on miss.
     pub fn program(&mut self, op: &OpDesc, strat: StrategyKind) -> Result<Arc<Program>> {
-        let key = ProgramKey { op: *op, strat, cfg: CfgSig::of(&self.cfg) };
+        self.program_with(op, MappingChoice::of(strat))
+    }
+
+    /// Fetch the compiled program for an explicit mapping choice
+    /// (strategy + optional chunk override), compiling on miss. Distinct
+    /// chunks are distinct cache entries — a tuned plan and the static
+    /// mapping never collide.
+    pub fn program_with(&mut self, op: &OpDesc, choice: MappingChoice) -> Result<Arc<Program>> {
+        let key = ProgramKey {
+            op: *op,
+            strat: choice.strat,
+            chunk: choice.chunk,
+            cfg: CfgSig::of(&self.cfg),
+        };
         if let Some(p) = self.programs.get(&key) {
             self.cache.hits += 1;
             return Ok(p.clone());
@@ -301,15 +329,15 @@ impl Engine {
         // stream, so the only memory-safe way to decide materialization is
         // to count before collecting. Small programs therefore generate
         // twice on their one-and-only miss; every hit replays for free.
-        let summary = compiler::summarize_op(op, &self.cfg, strat, &layout)?;
+        let summary = compiler::summarize_op_with(op, &self.cfg, choice, &layout)?;
         let segments = if summary.total_insns <= MATERIALIZE_LIMIT {
-            Some(compiler::compile_op(op, &self.cfg, strat, layout, false)?.segments)
+            Some(compiler::compile_op_with(op, &self.cfg, choice, layout, false)?.segments)
         } else {
             None
         };
         let plan = OpPlan {
             desc: *op,
-            strat,
+            strat: choice.strat,
             in_addr: layout.in_addr,
             w_addr: layout.w_addr,
             out_addr: layout.out_addr,
@@ -317,7 +345,14 @@ impl Engine {
             total_stages: summary.total_stages.max(1),
             functional: false,
         };
-        let prog = Arc::new(Program { plan, layout, required_bytes, summary, segments });
+        let prog = Arc::new(Program {
+            plan,
+            choice,
+            layout,
+            required_bytes,
+            summary,
+            segments,
+        });
         self.programs.insert(key, prog.clone());
         if let Some(shared) = &self.shared {
             shared.insert(key, prog.clone());
@@ -333,7 +368,18 @@ impl Engine {
         strat: StrategyKind,
         functional: bool,
     ) -> Result<(SimStats, Arc<Program>)> {
-        let prog = self.program(op, strat)?;
+        self.run_op_with(op, MappingChoice::of(strat), functional)
+    }
+
+    /// [`Engine::run_op`] with an explicit mapping choice — the execution
+    /// entry point for tuned plans.
+    pub fn run_op_with(
+        &mut self,
+        op: &OpDesc,
+        choice: MappingChoice,
+        functional: bool,
+    ) -> Result<(SimStats, Arc<Program>)> {
+        let prog = self.program_with(op, choice)?;
         self.proc.grow_memory(prog.required_bytes as usize);
         let mut plan = prog.plan;
         plan.functional = functional;
@@ -352,7 +398,7 @@ impl Engine {
                     stats.merge(&proc.run_segment(&seg)?);
                     Ok(())
                 };
-                compiler::stream_op(op, &cfg, strat, &prog.layout, &mut feed)?;
+                compiler::stream_op_with(op, &cfg, choice, &prog.layout, &mut feed)?;
             }
         }
         Ok((stats, prog))
@@ -364,6 +410,8 @@ impl Engine {
 pub struct Session<'e> {
     engine: &'e mut Engine,
     policy: Policy,
+    /// Tuned per-operator mapping consulted under [`Policy::Tuned`].
+    tuned: Option<Arc<TunedPlan>>,
     functional: bool,
     total: SimStats,
     switch_base: u64,
@@ -374,6 +422,16 @@ impl<'e> Session<'e> {
     /// the paper's mixed dataflow).
     pub fn with_policy(mut self, policy: Policy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Attach a tuned per-operator mapping and select [`Policy::Tuned`].
+    /// Operators without a tuned entry fall back to the static mixed
+    /// mapping, so a partial plan (e.g. tuned on a downscaled variant) is
+    /// safe.
+    pub fn with_tuned_plan(mut self, plan: Arc<TunedPlan>) -> Self {
+        self.tuned = Some(plan);
+        self.policy = Policy::Tuned;
         self
     }
 
@@ -395,6 +453,21 @@ impl<'e> Session<'e> {
         Ok(LayerResult { op: *op, strat, stats })
     }
 
+    /// The mapping choice this session's policy assigns to `op` (None =
+    /// not applicable under a fixed-strategy ablation policy).
+    fn choice_for(&self, op: &OpDesc) -> Option<MappingChoice> {
+        if self.policy == Policy::Tuned {
+            if let Some(plan) = &self.tuned {
+                if let Some(choice) = plan.choice_for(op) {
+                    return Some(choice);
+                }
+            }
+            // No plan attached / no tuned entry: static mixed fallback.
+            return Some(MappingChoice::preferred(op));
+        }
+        self.policy.strategy_for(op).map(MappingChoice::of)
+    }
+
     /// Execute a whole model at a precision; the engine's program cache
     /// makes repeat runs compile nothing, and the warm datapath makes the
     /// per-layer `VSACFG` switch precision only when it actually changes.
@@ -403,13 +476,13 @@ impl<'e> Session<'e> {
         let mut layers = Vec::with_capacity(m.ops.len());
         let mut total = SimStats::default();
         for op in &m.ops {
-            let Some(strat) = self.policy.strategy_for(op) else {
+            let Some(choice) = self.choice_for(op) else {
                 continue;
             };
-            let (stats, _) = self.engine.run_op(op, strat, self.functional)?;
+            let (stats, _) = self.engine.run_op_with(op, choice, self.functional)?;
             self.total.merge(&stats);
             total.merge(&stats);
-            layers.push(LayerResult { op: *op, strat, stats });
+            layers.push(LayerResult { op: *op, strat: choice.strat, stats });
         }
         let scalar_cycles = (total.cycles as f64 * m.scalar_fraction) as u64;
         Ok(ModelResult { name: m.name.to_string(), prec, layers, total, scalar_cycles })

@@ -65,7 +65,14 @@
 //!   backpressure, precision-affinity scheduling with work stealing,
 //!   dynamic micro-batching of identical requests, JSON scenario files
 //!   (`bench/scenarios/`), and a deterministic per-request statistics
-//!   contract (`SERVE_bench.json`).
+//!   contract (`SERVE_bench.json`);
+//! * an **empirical mixed-dataflow auto-tuner** ([`tune`], CLI `tune`):
+//!   per-operator `(strategy × chunk)` search with the fast-path
+//!   simulator as the cost oracle, semantics-preserving by construction
+//!   (bit-identical outputs, enforced by parity tests), persisted as
+//!   JSON plans (`bench/tuned/`) and served pool-wide through a
+//!   [`tune::TunedPlans`] registry
+//!   ([`coordinator::Policy::Tuned`]).
 //!
 //! See `DESIGN.md` for the substitution rationale and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -86,9 +93,11 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod tune;
 
 pub use config::{Precision, SpeedConfig, SpeedConfigBuilder};
 pub use engine::{CacheStats, Engine, Session, SharedPrograms};
 pub use error::SpeedError;
 pub use serve::{ServePool, Ticket};
 pub use sim::ExecMode;
+pub use tune::{TunedPlan, TunedPlans};

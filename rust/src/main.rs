@@ -31,6 +31,7 @@
 //! a small hand-rolled positional/flag scanner — see DESIGN.md.)
 
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use speed_rvv::bench;
 use speed_rvv::config::{Precision, SpeedConfig};
@@ -44,6 +45,7 @@ use speed_rvv::report;
 use speed_rvv::runtime::{golden_check_all, Engine as PjrtEngine};
 use speed_rvv::serve;
 use speed_rvv::sim::ExecMode;
+use speed_rvv::tune::{self, TuneOptions, TunedPlan};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -94,6 +96,7 @@ fn dispatch(args: &[String]) -> Result<(), SpeedError> {
         }
         "speed-bench" => cmd_speed_bench(rest),
         "serve-bench" => cmd_serve_bench(rest),
+        "tune" => cmd_tune(rest),
         "asm" => cmd_asm(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -126,17 +129,30 @@ commands:
                               hit rates) and optionally gates against a
                               committed baseline (exit 1 on regression)
   serve-bench --scenario FILE [--workers N] [--quick] [--exact]
-              [--max-batch K] [--out FILE]
+              [--max-batch K] [--tuned] [--out FILE]
                               run a serving scenario (bench/scenarios/*.json)
                               through a ServePool; writes SERVE_bench.json
                               (throughput, p50/p95/p99 latency, queue depth,
                               cache hit rate, precision switches) and prints a
                               per-request stats digest that is identical for
                               any worker count / batching / --exact choice
+                              (--tuned pre-tunes every model in the mix and
+                              serves them from the tuned-plan registry)
+  tune [--model M] [--prec 16|8|4] [--quick] [--no-chunks] [--exact]
+       [--cache DIR] [--out FILE] [--no-verify]
+                              empirical mixed-dataflow auto-tuner: search
+                              (strategy x chunk) per operator with the
+                              simulator as cost oracle; writes the plan JSON,
+                              proves the JSON round-trip, bit-verifies parity
+                              vs the static mapping, and exits nonzero if the
+                              tuned plan is slower than static (it never is,
+                              by construction). --cache DIR reuses
+                              bench/tuned/-style plan files across runs
   asm <file.s>                assemble, encode, and disassemble a program
   info                        configuration + artifact summary
 run-model also accepts --exact (per-instruction simulation; the default
-batch fast path is bit-exact, this is the escape hatch / parity oracle)";
+batch fast path is bit-exact, this is the escape hatch / parity oracle)
+and --policy tuned (auto-tune the model per precision before running)";
 
 fn cmd_report(args: &[String]) -> Result<(), SpeedError> {
     let id = args.first().map(|s| s.as_str()).unwrap_or("all");
@@ -218,6 +234,7 @@ fn cmd_run_model(args: &[String]) -> Result<(), SpeedError> {
         "ffcs" => Policy::Fixed(StrategyKind::Ffcs),
         "cf" => Policy::Fixed(StrategyKind::Cf),
         "ff" => Policy::Fixed(StrategyKind::Ff),
+        "tuned" => Policy::Tuned,
         other => return Err(SpeedError::Config(format!("bad policy '{other}'"))),
     };
     let mut model = model_by_name(name).ok_or_else(|| {
@@ -250,7 +267,7 @@ fn cmd_run_model(args: &[String]) -> Result<(), SpeedError> {
             ara.dram_bytes as f64 / (1 << 20) as f64
         );
     };
-    if precs.len() > 1 && workers > 1 && !flag(args, "--exact") {
+    if precs.len() > 1 && workers > 1 && !flag(args, "--exact") && policy != Policy::Tuned {
         // Parallel sweep: one throwaway engine per precision on the sweep
         // runner (trades the shared warm cache for wall-clock time).
         // (--exact forces the single warm engine below, which owns the
@@ -271,13 +288,36 @@ fn cmd_run_model(args: &[String]) -> Result<(), SpeedError> {
     if flag(args, "--exact") {
         engine.set_exec_mode(ExecMode::Exact);
     }
-    let mut session = engine.session().with_policy(policy);
+    let switches_base = engine.precision_switches();
     let mut results = Vec::new();
-    for &prec in &precs {
-        results.push((prec, session.run_model(&model, prec)?));
+    if policy == Policy::Tuned {
+        // Tuned plans are per-precision: tune each point first, then run
+        // the model under its plan on the same warm engine.
+        let topts = TuneOptions {
+            exec_mode: engine.exec_mode(),
+            ..Default::default()
+        };
+        for &prec in &precs {
+            let plan = tune::tune_model(&cfg, &model, prec, &topts)?;
+            println!(
+                "tuned {name} @ {prec}: {}/{} ops retuned, plan speedup {:.3}x",
+                plan.improved_ops(),
+                plan.ops.len(),
+                plan.speedup()
+            );
+            let r = engine
+                .session()
+                .with_tuned_plan(Arc::new(plan))
+                .run_model(&model, prec)?;
+            results.push((prec, r));
+        }
+    } else {
+        let mut session = engine.session().with_policy(policy);
+        for &prec in &precs {
+            results.push((prec, session.run_model(&model, prec)?));
+        }
     }
-    let switches = session.precision_switches();
-    drop(session);
+    let switches = engine.precision_switches() - switches_base;
     for (prec, r) in &results {
         print_result(*prec, r);
     }
@@ -347,6 +387,7 @@ fn cmd_serve_bench(args: &[String]) -> Result<(), SpeedError> {
     let mut opts = serve::ServeBenchOptions {
         quick: flag(args, "--quick"),
         exact: flag(args, "--exact"),
+        tuned: flag(args, "--tuned"),
         ..Default::default()
     };
     if let Some(v) = opt(args, "--workers") {
@@ -369,6 +410,112 @@ fn cmd_serve_bench(args: &[String]) -> Result<(), SpeedError> {
     // Bench-harness failure class, matching cmd_speed_bench: an unwritable
     // report path is not a serving overload.
     std::fs::write(out, report.to_json())
+        .map_err(|e| SpeedError::Bench(format!("writing {out}: {e}")))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Functional parity checks are O(MACs); above this per-operator bound
+/// the CLI reports the check as skipped instead of grinding (downscaled
+/// `--quick` models stay far below it).
+const TUNE_VERIFY_MAC_LIMIT: u64 = 1 << 25;
+
+fn cmd_tune(args: &[String]) -> Result<(), SpeedError> {
+    let name = opt(args, "--model").unwrap_or("mobilenetv2");
+    let prec = match opt(args, "--prec").unwrap_or("8") {
+        "16" => Precision::Int16,
+        "8" => Precision::Int8,
+        "4" => Precision::Int4,
+        other => return Err(SpeedError::Config(format!("bad precision '{other}'"))),
+    };
+    let mut model = model_by_name(name).ok_or_else(|| {
+        SpeedError::Config(format!("unknown model '{name}' ({MODELS:?})"))
+    })?;
+    if flag(args, "--quick") {
+        model = report::fig12::downscale(&model, 4);
+    }
+    let cfg = SpeedConfig::reference();
+    let topts = TuneOptions {
+        chunks: !flag(args, "--no-chunks"),
+        exec_mode: if flag(args, "--exact") { ExecMode::Exact } else { ExecMode::Batch },
+    };
+
+    let t0 = std::time::Instant::now();
+    let (plan, cached) = match opt(args, "--cache") {
+        Some(dir) => tune::tune_model_cached(&cfg, &model, prec, &topts, dir)?,
+        None => (tune::tune_model(&cfg, &model, prec, &topts)?, false),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "tune {name} @ {prec} ({} distinct ops, {} candidates/op max{}, {:.2} s{})",
+        plan.ops.len(),
+        plan.ops.iter().map(|t| t.candidates).max().unwrap_or(0),
+        if topts.chunks { "" } else { ", strategies only" },
+        wall,
+        if cached { ", from cache" } else { "" }
+    );
+    for t in &plan.ops {
+        let marker = if t.improved() { "*" } else { " " };
+        println!(
+            " {marker} {:5} {:28} {:>10} cycles {}  (static {} {} cycles)",
+            t.op.kind.to_string(),
+            format!(
+                "c{} f{} {}x{} k{} / m{} k{} n{}",
+                t.op.c, t.op.f, t.op.h, t.op.w, t.op.ksize, t.op.m, t.op.k, t.op.n
+            ),
+            t.cycles,
+            t.choice,
+            t.static_choice,
+            t.static_cycles,
+        );
+    }
+    println!(
+        "plan: {} of {} ops retuned; sim cycles {} -> {} ({:.3}x)",
+        plan.improved_ops(),
+        plan.ops.len(),
+        plan.static_cycles(),
+        plan.tuned_cycles(),
+        plan.speedup()
+    );
+
+    // Invariant gate: ties resolve to static, so tuned can never be
+    // slower. A violation is a tuner defect and must fail the run (and
+    // the tune-smoke CI job).
+    if plan.tuned_cycles() > plan.static_cycles() {
+        return Err(SpeedError::Bench(format!(
+            "tuned plan slower than static: {} > {} cycles",
+            plan.tuned_cycles(),
+            plan.static_cycles()
+        )));
+    }
+
+    // The JSON representation must round-trip exactly — the plan cache is
+    // only trustworthy if load(save(plan)) == plan.
+    let back = TunedPlan::from_json(&plan.to_json())?;
+    if back != plan {
+        return Err(SpeedError::Bench(
+            "tuned plan JSON round-trip mismatch".into(),
+        ));
+    }
+    println!("plan JSON round-trip ok ({} ops)", back.ops.len());
+
+    if !flag(args, "--no-verify") {
+        let (verified, skipped) =
+            tune::verify_plan(&cfg, &plan, TUNE_VERIFY_MAC_LIMIT)?;
+        println!(
+            "parity: {verified} retuned op(s) bit-identical to static\
+             {}",
+            if skipped > 0 {
+                format!(" ({skipped} skipped above the functional-check MAC bound)")
+            } else {
+                String::new()
+            }
+        );
+    }
+
+    let out = opt(args, "--out").unwrap_or("TUNED_plan.json");
+    std::fs::write(out, plan.to_json())
         .map_err(|e| SpeedError::Bench(format!("writing {out}: {e}")))?;
     println!("wrote {out}");
     Ok(())

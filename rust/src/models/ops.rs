@@ -89,14 +89,27 @@ impl OpDesc {
         OpDesc { kind: OpKind::Dwcv, prec, m: 0, k: 0, n: 0, c, f: c, h, w, ksize, stride, pad }
     }
 
-    /// Output spatial height (convolutions).
-    pub fn oh(&self) -> u32 {
-        (self.h + 2 * self.pad - self.ksize) / self.stride + 1
+    /// Output spatial size along one axis. Computed in u64 (huge pads
+    /// cannot overflow `d + 2·pad`) and total: a kernel larger than the
+    /// padded input yields 0 output pixels instead of a u32 underflow
+    /// (debug panic / release wraparound feeding [`OpDesc::total_macs`]).
+    /// [`OpDesc::validate`] rejects such geometry before compilation.
+    fn out_dim(d: u32, pad: u32, ksize: u32, stride: u32) -> u32 {
+        let padded = d as u64 + 2 * pad as u64;
+        match padded.checked_sub(ksize as u64) {
+            Some(span) => (span / stride.max(1) as u64 + 1).min(u32::MAX as u64) as u32,
+            None => 0,
+        }
     }
 
-    /// Output spatial width (convolutions).
+    /// Output spatial height (convolutions; 0 when the kernel does not fit).
+    pub fn oh(&self) -> u32 {
+        Self::out_dim(self.h, self.pad, self.ksize, self.stride)
+    }
+
+    /// Output spatial width (convolutions; 0 when the kernel does not fit).
     pub fn ow(&self) -> u32 {
-        (self.w + 2 * self.pad - self.ksize) / self.stride + 1
+        Self::out_dim(self.w, self.pad, self.ksize, self.stride)
     }
 
     /// The dataflow strategy the paper's mixed mapping assigns (Sec. III):
@@ -221,8 +234,20 @@ impl OpDesc {
                 if self.stride == 0 {
                     return bad("stride must be nonzero".into());
                 }
-                if self.h + 2 * self.pad < self.ksize || self.w + 2 * self.pad < self.ksize {
-                    return bad("kernel larger than padded input".into());
+                // Degenerate geometry is a request-parameter problem
+                // (`Config`), not a compiler defect: the tuner and the
+                // serving layer reject it at admission, before any sweep
+                // touches `oh()`/`ow()`-derived sizing.
+                if (self.h as u64 + 2 * self.pad as u64) < self.ksize as u64
+                    || (self.w as u64 + 2 * self.pad as u64) < self.ksize as u64
+                {
+                    return Err(SpeedError::Config(format!(
+                        "kernel {k} larger than padded input {h}x{w} (pad {p}): {self:?}",
+                        k = self.ksize,
+                        h = self.h,
+                        w = self.w,
+                        p = self.pad
+                    )));
                 }
             }
         }
@@ -286,5 +311,29 @@ mod tests {
         let mut dw = OpDesc::dwcv(8, 8, 8, 3, 1, 1, Precision::Int8);
         dw.f = 4;
         assert!(dw.validate().is_err());
+    }
+
+    #[test]
+    fn oversized_kernel_no_underflow_and_typed_config_error() {
+        // ksize > h + 2*pad used to underflow u32 in oh()/ow() (debug
+        // panic; release wraparound feeding total_macs). Now the geometry
+        // is well-defined (0 output pixels, 0 MACs) and validate() rejects
+        // it with a typed Config error.
+        let op = OpDesc::conv(3, 4, 2, 2, 5, 1, 0, Precision::Int8);
+        assert_eq!((op.oh(), op.ow()), (0, 0));
+        assert_eq!(op.total_macs(), 0);
+        assert_eq!(op.output_elems(), 0);
+        assert!(matches!(op.validate(), Err(SpeedError::Config(_))));
+        // One pad short of fitting: still rejected, still no underflow.
+        let dw = OpDesc::dwcv(4, 3, 3, 7, 2, 1, Precision::Int16);
+        assert_eq!(dw.oh(), 0);
+        assert!(matches!(dw.validate(), Err(SpeedError::Config(_))));
+        // Exactly fitting geometry stays accepted with 1 output pixel.
+        let fit = OpDesc::conv(3, 4, 3, 3, 5, 1, 1, Precision::Int8);
+        assert_eq!((fit.oh(), fit.ow()), (1, 1));
+        assert!(fit.validate().is_ok());
+        // Huge pads must not overflow h + 2*pad either.
+        let padded = OpDesc::conv(1, 1, 8, 8, 3, 1, u32::MAX / 2, Precision::Int8);
+        let _ = (padded.oh(), padded.ow()); // must not panic
     }
 }

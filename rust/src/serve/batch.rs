@@ -19,6 +19,7 @@ use crate::error::Result;
 use crate::isa::StrategyKind;
 use crate::models::OpDesc;
 use crate::sim::SimStats;
+use crate::tune::TunedPlans;
 
 use super::RequestKind;
 
@@ -63,14 +64,29 @@ impl BatchKey {
 /// switch count (see the `serve` module docs): the boundary switch a
 /// worker may pay when its datapath was left at another precision is
 /// schedule-dependent and is accounted at pool level instead.
+///
+/// A [`Policy::Tuned`] model request resolves its plan from the pool's
+/// shared [`TunedPlans`] registry; a missing or configuration-mismatched
+/// plan degrades to the static mixed mapping (never an error). The
+/// registry is fixed for a pool's lifetime, so same-key requests resolve
+/// the same plan and micro-batching stays semantics-preserving.
 pub(crate) fn execute_request(
     engine: &mut Engine,
     kind: &RequestKind,
+    tuned: &TunedPlans,
 ) -> Result<(SimStats, usize)> {
     engine.quiesce();
     match kind {
         RequestKind::Model { model, prec, policy } => {
+            let plan = if *policy == Policy::Tuned {
+                tuned.get(model.name, *prec, engine.config())
+            } else {
+                None
+            };
             let mut session = engine.session().with_policy(*policy);
+            if let Some(plan) = plan {
+                session = session.with_tuned_plan(plan);
+            }
             let r = session.run_model(model, *prec)?;
             let mut stats = r.total.clone();
             stats.precision_switches =
@@ -189,20 +205,44 @@ mod tests {
 
     #[test]
     fn execute_request_is_repeatable_on_one_engine() {
+        let tuned = TunedPlans::new();
         let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
         let kind = RequestKind::Op {
             op: OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int8),
             strat: StrategyKind::Ffcs,
         };
-        let (a, la) = execute_request(&mut engine, &kind).unwrap();
+        let (a, la) = execute_request(&mut engine, &kind, &tuned).unwrap();
         // Interleave unrelated work at another precision, then repeat.
         let other = RequestKind::Op {
             op: OpDesc::mm(6, 12, 6, Precision::Int16),
             strat: StrategyKind::Mm,
         };
-        execute_request(&mut engine, &other).unwrap();
-        let (b, lb) = execute_request(&mut engine, &kind).unwrap();
+        execute_request(&mut engine, &other, &tuned).unwrap();
+        let (b, lb) = execute_request(&mut engine, &kind, &tuned).unwrap();
         assert_eq!(a, b, "quiesce + switch normalization make replays bit-identical");
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn tuned_policy_without_plan_matches_mixed() {
+        // A Tuned model request with an empty registry must degrade to the
+        // static mixed mapping, bit-identically.
+        let tuned = TunedPlans::new();
+        let model = downscale(&model_by_name("mobilenetv2").unwrap(), 8);
+        let mixed = RequestKind::Model {
+            model: model.clone(),
+            prec: Precision::Int8,
+            policy: Policy::Mixed,
+        };
+        let tuned_kind = RequestKind::Model {
+            model,
+            prec: Precision::Int8,
+            policy: Policy::Tuned,
+        };
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let (a, la) = execute_request(&mut engine, &mixed, &tuned).unwrap();
+        let (b, lb) = execute_request(&mut engine, &tuned_kind, &tuned).unwrap();
+        assert_eq!(a, b);
         assert_eq!(la, lb);
     }
 }

@@ -177,12 +177,17 @@ impl ServeMetrics {
 }
 
 /// Nearest-rank percentile over an already-sorted latency vector.
+///
+/// Uses the textbook nearest-rank definition: the q-th percentile of n
+/// samples is the element at 1-based rank `ceil(q·n)` — e.g. q = 0.5 over
+/// `1..=100` is 50 (not the rounded-linear-interpolation 51 this function
+/// once returned). `q <= 0` returns the minimum, `q >= 1` the maximum.
 pub fn percentile_us(sorted: &[u64], q: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }
-    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
 }
 
 /// A point-in-time aggregate view of a pool.
@@ -337,9 +342,15 @@ mod tests {
         assert_eq!(percentile_us(&[7], 0.99), 7);
         let v: Vec<u64> = (1..=100).collect();
         assert_eq!(percentile_us(&v, 0.0), 1);
-        assert_eq!(percentile_us(&v, 0.50), 51); // round(99*0.5)=50 -> v[50]
+        assert_eq!(percentile_us(&v, 0.50), 50); // ceil(0.5*100)=50 -> v[49]
         assert_eq!(percentile_us(&v, 0.95), 95);
+        assert_eq!(percentile_us(&v, 0.99), 99);
         assert_eq!(percentile_us(&v, 1.0), 100);
+        // Odd-length vector: ceil picks the true median, never past-end.
+        let odd: Vec<u64> = (1..=5).map(|i| i * 100).collect();
+        assert_eq!(percentile_us(&odd, 0.5), 300);
+        assert_eq!(percentile_us(&odd, 0.2), 100);
+        assert_eq!(percentile_us(&odd, 0.21), 200);
     }
 
     #[test]

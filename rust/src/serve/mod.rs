@@ -171,6 +171,12 @@ pub struct ServeBenchOptions {
     pub exact: bool,
     /// Override the scenario's micro-batch cap (1 disables coalescing).
     pub max_batch: Option<usize>,
+    /// Auto-tune every distinct model workload of the mix before the run
+    /// and serve model requests under
+    /// [`Policy::Tuned`](crate::coordinator::Policy::Tuned) from the
+    /// pool's [`TunedPlans`](crate::tune::TunedPlans) registry. Tuning
+    /// wall time is excluded from the measured serving window.
+    pub tuned: bool,
 }
 
 impl Default for ServeBenchOptions {
@@ -180,6 +186,7 @@ impl Default for ServeBenchOptions {
             quick: true,
             exact: false,
             max_batch: None,
+            tuned: false,
         }
     }
 }
@@ -192,6 +199,8 @@ pub struct ServeBenchReport {
     pub seed: u64,
     pub quick: bool,
     pub exact: bool,
+    /// Model requests were served from auto-tuned mapping plans.
+    pub tuned: bool,
     pub workers: usize,
     pub requests: usize,
     /// Simulated cycles summed over every request.
@@ -220,6 +229,7 @@ impl ServeBenchReport {
         s.push_str(&format!("  \"seed\": {},\n", self.seed));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str(&format!("  \"exact\": {},\n", self.exact));
+        s.push_str(&format!("  \"tuned\": {},\n", self.tuned));
         s.push_str(&format!("  \"workers\": {},\n", self.workers));
         s.push_str(&format!("  \"requests\": {},\n", self.requests));
         s.push_str(&format!("  \"wall_s\": {},\n", jf(self.wall_s)));
@@ -250,6 +260,9 @@ impl ServeBenchReport {
             if self.quick { ", quick" } else { "" },
             if self.exact { ", exact" } else { "" },
         ));
+        if self.tuned {
+            s.push_str("  (model requests served from auto-tuned mapping plans)\n");
+        }
         s.push_str(&format!(
             "  throughput: {:.1} req/s ({:.2} s wall)\n",
             m.throughput_rps, self.wall_s
@@ -297,11 +310,58 @@ impl ServeBenchReport {
 /// configuration and collect the report. The generated request stream and
 /// every per-request statistic are deterministic in the scenario seed;
 /// the throughput/latency numbers are measured host wall time.
+///
+/// With [`ServeBenchOptions::tuned`], every model entry of the mix is
+/// first auto-tuned ([`crate::tune::tune_model`], one plan per distinct
+/// `(model, precision)` workload) and model requests are served under
+/// `Policy::Tuned` from the pool's registry. Tuning happens before the
+/// measured window opens.
 pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeBenchReport> {
+    let cfg = SpeedConfig::reference();
+    // Under --tuned, model mix entries are served at Policy::Tuned.
+    let sc_tuned: Option<Scenario> = if opts.tuned {
+        let mut s = sc.clone();
+        for e in &mut s.mix {
+            if matches!(e.workload, Workload::Model { .. }) {
+                e.policy = crate::coordinator::Policy::Tuned;
+            }
+        }
+        Some(s)
+    } else {
+        None
+    };
+    let sc = sc_tuned.as_ref().unwrap_or(sc);
     let kinds = sc.generate(opts.quick)?;
+    let registry = crate::tune::TunedPlans::new();
+    if opts.tuned {
+        // One plan per distinct (model, precision, shape-variant) workload
+        // in the generated stream: two downscale variants of one zoo model
+        // are distinct workloads (their `OpDesc`s differ), so each must be
+        // tuned — the registry merges them under the shared model name and
+        // `choice_for` resolves per operator.
+        let topts = crate::tune::TuneOptions {
+            exec_mode: if opts.exact { ExecMode::Exact } else { ExecMode::Batch },
+            ..Default::default()
+        };
+        let mut done: Vec<(String, u32, u64)> = Vec::new();
+        for kind in &kinds {
+            if let RequestKind::Model { model, prec, .. } = kind {
+                let key = (
+                    model.name.to_string(),
+                    prec.bits(),
+                    crate::tune::ops_digest(model.ops.iter()),
+                );
+                if done.contains(&key) {
+                    continue;
+                }
+                registry.insert(crate::tune::tune_model(&cfg, model, *prec, &topts)?);
+                done.push(key);
+            }
+        }
+    }
     let defaults = ServeOptions::default();
-    let pool = ServePool::new(
-        SpeedConfig::reference(),
+    let pool = ServePool::new_tuned(
+        cfg,
         ServeOptions {
             workers: opts.workers.max(1),
             capacity: sc.capacity.unwrap_or(defaults.capacity),
@@ -309,6 +369,7 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
             exec_mode: if opts.exact { ExecMode::Exact } else { ExecMode::Batch },
             ..defaults
         },
+        registry,
     )?;
 
     // Virtual-tick pacing: the arrival pattern decides where the
@@ -344,6 +405,7 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
         seed: sc.seed,
         quick: opts.quick,
         exact: opts.exact,
+        tuned: opts.tuned,
         workers: opts.workers.max(1),
         requests,
         total_cycles,

@@ -20,6 +20,7 @@ use crate::coordinator::runner::default_workers;
 use crate::engine::{CacheStats, Engine, SharedPrograms};
 use crate::error::{Result, SpeedError};
 use crate::sim::ExecMode;
+use crate::tune::TunedPlans;
 
 use super::batch::{execute_request, BatchKey};
 use super::metrics::{SchedCounters, ServeMetrics};
@@ -77,6 +78,9 @@ struct PoolShared {
     space_cv: Condvar,
     metrics: ServeMetrics,
     programs: SharedPrograms,
+    /// Tuned-plan registry consulted for `Policy::Tuned` model requests
+    /// (empty unless the pool was built with [`ServePool::new_tuned`]).
+    tuned: TunedPlans,
     engines: Mutex<Vec<EngineCounters>>,
     next_id: AtomicU64,
 }
@@ -114,6 +118,19 @@ pub struct ServePool {
 impl ServePool {
     /// Validate the configuration and spawn the workers.
     pub fn new(cfg: SpeedConfig, opts: ServeOptions) -> Result<ServePool> {
+        Self::new_tuned(cfg, opts, TunedPlans::new())
+    }
+
+    /// [`ServePool::new`] with a shared tuned-plan registry: model
+    /// requests submitted under
+    /// [`Policy::Tuned`](crate::coordinator::Policy::Tuned) run the
+    /// registered per-operator mappings (and fall back to the static
+    /// mixed mapping where no plan matches).
+    pub fn new_tuned(
+        cfg: SpeedConfig,
+        opts: ServeOptions,
+        tuned: TunedPlans,
+    ) -> Result<ServePool> {
         cfg.validate()?;
         if opts.workers == 0 {
             return Err(SpeedError::Config("serve pool needs at least 1 worker".into()));
@@ -137,6 +154,7 @@ impl ServePool {
             space_cv: Condvar::new(),
             metrics: ServeMetrics::new(),
             programs: SharedPrograms::new(),
+            tuned,
             engines: Mutex::new(vec![EngineCounters::default(); opts.workers]),
             next_id: AtomicU64::new(0),
         });
@@ -328,8 +346,9 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
         shared.space_cv.notify_all();
 
         let kind = batch[0].req.kind.clone();
-        let executed =
-            match catch_unwind(AssertUnwindSafe(|| execute_request(&mut engine, &kind))) {
+        let executed = match catch_unwind(AssertUnwindSafe(|| {
+            execute_request(&mut engine, &kind, &shared.tuned)
+        })) {
                 Ok(r) => r,
                 Err(payload) => {
                     // The engine's internal state is unknowable after a
@@ -589,6 +608,41 @@ mod tests {
         let snap = p.shutdown();
         assert_eq!(snap.failed, 1);
         assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn tuned_registry_serves_tuned_model_requests() {
+        use crate::models::zoo::model_by_name;
+        use crate::report::fig12::downscale;
+        use crate::tune::{tune_model, TuneOptions, TunedPlans};
+        let cfg = SpeedConfig::reference();
+        let model = downscale(&model_by_name("resnet18").unwrap(), 16);
+        let prec = Precision::Int8;
+        let plan = tune_model(&cfg, &model, prec, &TuneOptions::default()).unwrap();
+        let registry = TunedPlans::new();
+        registry.insert(plan);
+        let p = ServePool::new_tuned(
+            cfg,
+            ServeOptions { workers: 2, capacity: 16, max_batch: 2, ..Default::default() },
+            registry,
+        )
+        .unwrap();
+        let tuned_kind =
+            RequestKind::Model { model: model.clone(), prec, policy: Policy::Tuned };
+        let mixed_kind = RequestKind::Model { model, prec, policy: Policy::Mixed };
+        let results =
+            p.run_all(vec![tuned_kind.clone(), mixed_kind, tuned_kind]).unwrap();
+        // Tuned requests are deterministic, compute the same work, and are
+        // never slower than the static mixed mapping.
+        assert_eq!(results[0].stats, results[2].stats);
+        assert_eq!(results[0].stats.macs, results[1].stats.macs);
+        assert!(
+            results[0].stats.cycles <= results[1].stats.cycles,
+            "tuned {} > mixed {}",
+            results[0].stats.cycles,
+            results[1].stats.cycles
+        );
+        p.shutdown();
     }
 
     #[test]

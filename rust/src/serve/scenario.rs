@@ -219,7 +219,15 @@ impl Scenario {
             mix.push(parse_mix_entry(entry)?);
         }
         let sc = Scenario { name, seed, requests, capacity, max_batch, arrival, mix };
-        // Fail at parse time, not mid-bench: every entry must instantiate.
+        // Fail at parse time, not mid-bench. A weight of 0 disables one
+        // entry; all-zero weights leave the weighted pick with nothing to
+        // draw (`rng.below(0)` degenerates and the pick panics at bench
+        // time), so the sum is rejected here with the fail-fast Parse
+        // error every other malformed field gets.
+        if sc.mix.iter().map(|e| e.weight as u64).sum::<u64>() == 0 {
+            return Err(perr("mix weights sum to zero (no entry can be drawn)"));
+        }
+        // Every entry must instantiate, even zero-weight (disabled) ones.
         for e in &sc.mix {
             e.instantiate(false)?;
         }
@@ -238,6 +246,11 @@ impl Scenario {
     /// on every platform and every run.
     pub fn generate(&self, quick: bool) -> Result<Vec<RequestKind>> {
         let total_weight: u64 = self.mix.iter().map(|e| e.weight as u64).sum();
+        // `from_json` rejects this, but `Scenario` is a plain public
+        // struct: a hand-built instance must fail typed, not panic.
+        if total_weight == 0 {
+            return Err(perr("mix weights sum to zero (no entry can be drawn)"));
+        }
         let n = if quick { self.requests.min(QUICK_REQUEST_CAP) } else { self.requests };
         let mut rng = XorShift64::new(self.seed);
         let mut out = Vec::with_capacity(n);
@@ -308,7 +321,12 @@ fn parse_policy(s: &str) -> Result<Policy> {
         "ffcs" => Ok(Policy::Fixed(StrategyKind::Ffcs)),
         "cf" => Ok(Policy::Fixed(StrategyKind::Cf)),
         "ff" => Ok(Policy::Fixed(StrategyKind::Ff)),
-        other => Err(perr(format!("unknown policy '{other}' (mixed|ffcs|cf|ff)"))),
+        // Serve from the pool's tuned-plan registry (falls back to the
+        // static mixed mapping for operators without a tuned entry).
+        "tuned" => Ok(Policy::Tuned),
+        other => Err(perr(format!(
+            "unknown policy '{other}' (mixed|ffcs|cf|ff|tuned)"
+        ))),
     }
 }
 
@@ -333,9 +351,11 @@ fn parse_mix_entry(e: &Json) -> Result<MixEntry> {
         None => 1,
         Some(v) => v
             .as_i64()
-            .filter(|&n| n >= 1 && n <= u32::MAX as i64)
+            .filter(|&n| n >= 0 && n <= u32::MAX as i64)
             .map(|n| n as u32)
-            .ok_or_else(|| perr("mix \"weight\" must be a positive 32-bit integer"))?,
+            .ok_or_else(|| {
+                perr("mix \"weight\" must be a non-negative 32-bit integer")
+            })?,
     };
     let policy = match e.get("policy").and_then(Json::as_str) {
         None => Policy::Mixed,
@@ -521,6 +541,38 @@ mod tests {
             "arrival": { "pattern": "warp" },
             "mix": [ { "op": "mm", "m": 2, "k": 2, "n": 2, "prec": 8 } ] }"#;
         assert!(Scenario::from_json(bad_arrival).is_err());
+    }
+
+    #[test]
+    fn all_zero_weights_rejected_at_parse() {
+        // Zero total weight used to reach the weighted pick and blow up
+        // mid-bench; now it is a fail-fast typed Parse error at load.
+        let zero = r#"{ "requests": 4, "mix": [
+            { "op": "mm", "m": 2, "k": 2, "n": 2, "prec": 8, "weight": 0 },
+            { "op": "mm", "m": 4, "k": 4, "n": 4, "prec": 8, "weight": 0 } ] }"#;
+        match Scenario::from_json(zero) {
+            Err(SpeedError::Parse(m)) => assert!(m.contains("weights sum to zero"), "{m}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // A hand-built scenario bypassing from_json fails typed too.
+        let mut sc = Scenario::from_json(SC).unwrap();
+        for e in &mut sc.mix {
+            e.weight = 0;
+        }
+        assert!(matches!(sc.generate(false), Err(SpeedError::Parse(_))));
+    }
+
+    #[test]
+    fn zero_weight_entry_is_disabled_not_rejected() {
+        let one_off = r#"{ "requests": 16, "seed": 3, "mix": [
+            { "op": "mm", "m": 2, "k": 2, "n": 2, "prec": 8, "weight": 1 },
+            { "op": "mm", "m": 4, "k": 4, "n": 4, "prec": 4, "weight": 0 } ] }"#;
+        let sc = Scenario::from_json(one_off).unwrap();
+        let reqs = sc.generate(false).unwrap();
+        assert_eq!(reqs.len(), 16);
+        // The zero-weight entry is never drawn.
+        assert!(reqs.iter().all(|r| r.label() == "MM@INT8"), "{:?}",
+                reqs.iter().map(RequestKind::label).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,954 @@
+//! `speed_rvv::tune` — the empirical mixed-dataflow auto-tuner.
+//!
+//! The paper's Sec. III assigns each operator class a fixed strategy (MM /
+//! FFCS / CF / FF — [`OpDesc::preferred_strategy`]). That static table is
+//! right *on average*, but the best mapping shifts with layer shape and
+//! precision: a CONV whose feature map dwarfs the VRF pays FFCS's
+//! per-feature-map-block weight refetch on every block, while FF keeps all
+//! weights resident and streams them exactly once. Instead of extending
+//! the analytic table, this module measures: it enumerates every
+//! applicable `(strategy × chunk-size)` mapping candidate
+//! ([`dataflow::applicable`], [`dataflow::chunk_candidates`]), costs each
+//! one on the fast-path cycle simulator ([`ExecMode::Batch`] — bit-exact
+//! vs per-instruction mode, so the oracle is the machine itself), and
+//! records the winner per operator in a [`TunedPlan`].
+//!
+//! Tuning is **semantics-preserving by construction**: strategies and
+//! chunk sizes only reorder/partition the same arithmetic, so every
+//! candidate produces bit-identical output memory ([`verify_choice`]
+//! checks this end to end; `tests/tune_parity.rs` holds it across random
+//! shapes and every precision). The tuner only ever *re-labels* work — it
+//! never changes what is computed.
+//!
+//! A plan persists as JSON (`bench/tuned/<model>@intN-<digest>.json`,
+//! where the digest identifies the shape variant so quick/downscaled and
+//! full-size plans coexist; [`TunedPlan::save`]/[`TunedPlan::load`]) and
+//! pools share plans through
+//! the [`TunedPlans`] registry the same way engines share compiled
+//! programs through `SharedPrograms`. Selection falls back to the static
+//! mixed mapping for any operator without a tuned entry, so a stale or
+//! partial plan can never make a request fail — at worst it runs at the
+//! static mapping's speed.
+//!
+//! Ties go to the static mapping: a [`TunedPlan`] deviates from Sec. III
+//! only where the simulator shows strictly fewer cycles (then strictly
+//! less DRAM traffic as the tiebreak), which makes "tuned is never slower
+//! than static" an invariant rather than an aspiration.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{Precision, SpeedConfig};
+use crate::dataflow::{self, MappingChoice};
+use crate::engine::Engine;
+use crate::error::{Result, SpeedError};
+use crate::isa::StrategyKind;
+use crate::models::ops::{OpDesc, OpKind};
+use crate::models::zoo::Model;
+use crate::runtime::json::{parse, Json};
+use crate::sim::ExecMode;
+
+fn perr(m: impl Into<String>) -> SpeedError {
+    SpeedError::Parse(m.into())
+}
+
+/// The configuration fields that shape generated code — the part of a
+/// [`SpeedConfig`] a tuned plan is valid for (frequency and memory timing
+/// scale costs uniformly and do not change the argmax).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TunedConfigSig {
+    pub lanes: u32,
+    pub tile_r: u32,
+    pub tile_c: u32,
+    pub vrf_kib: u32,
+}
+
+impl TunedConfigSig {
+    pub fn of(cfg: &SpeedConfig) -> Self {
+        TunedConfigSig {
+            lanes: cfg.lanes,
+            tile_r: cfg.tile_r,
+            tile_c: cfg.tile_c,
+            vrf_kib: cfg.vrf_kib,
+        }
+    }
+}
+
+/// One operator's tuning outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpTuning {
+    /// The operator, at the plan's precision.
+    pub op: OpDesc,
+    /// Occurrences of this exact operator in the tuned model.
+    pub count: u32,
+    /// The winning mapping (== `static_choice` when nothing beat it).
+    pub choice: MappingChoice,
+    /// Simulated cycles of the winning mapping (one quiesced execution).
+    pub cycles: u64,
+    /// The static Sec. III mapping and its simulated cycles.
+    pub static_choice: MappingChoice,
+    pub static_cycles: u64,
+    /// Mapping candidates costed (including the static one).
+    pub candidates: u32,
+}
+
+impl OpTuning {
+    /// Did tuning deviate from the static mapping?
+    pub fn improved(&self) -> bool {
+        self.choice != self.static_choice
+    }
+}
+
+/// An empirically tuned per-operator mapping for one
+/// `(model, precision, configuration)` point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedPlan {
+    /// Zoo model name (or any caller-chosen label for ad-hoc op sets).
+    pub model: String,
+    pub prec: Precision,
+    pub cfg: TunedConfigSig,
+    /// Whether the search that produced this plan included chunk-size
+    /// candidates ([`TuneOptions::chunks`]). The persistent cache refuses
+    /// to satisfy a broader search request with a narrower plan.
+    pub search_chunks: bool,
+    /// One entry per *distinct* operator, in first-occurrence order.
+    pub ops: Vec<OpTuning>,
+}
+
+impl TunedPlan {
+    /// The tuned mapping for `op`, if this plan has one.
+    pub fn choice_for(&self, op: &OpDesc) -> Option<MappingChoice> {
+        self.ops.iter().find(|t| t.op == *op).map(|t| t.choice)
+    }
+
+    /// Whether this plan was tuned for (the code-shaping part of) `cfg`.
+    pub fn matches(&self, cfg: &SpeedConfig) -> bool {
+        self.cfg == TunedConfigSig::of(cfg)
+    }
+
+    /// Occurrence-weighted simulated cycles under the tuned mapping.
+    pub fn tuned_cycles(&self) -> u64 {
+        self.ops.iter().map(|t| t.count as u64 * t.cycles).sum()
+    }
+
+    /// Occurrence-weighted simulated cycles under the static mapping.
+    pub fn static_cycles(&self) -> u64 {
+        self.ops.iter().map(|t| t.count as u64 * t.static_cycles).sum()
+    }
+
+    /// static / tuned cycle ratio (>= 1.0 by the tie-to-static rule).
+    pub fn speedup(&self) -> f64 {
+        if self.tuned_cycles() == 0 {
+            return 1.0;
+        }
+        self.static_cycles() as f64 / self.tuned_cycles() as f64
+    }
+
+    /// Distinct operators whose tuned mapping differs from the static one.
+    pub fn improved_ops(&self) -> usize {
+        self.ops.iter().filter(|t| t.improved()).count()
+    }
+
+    /// Shape-variant digest of this plan: [`ops_digest`] over its distinct
+    /// operators. A downscaled zoo model and its full-size original share
+    /// a name but never a digest, so their cache files coexist.
+    pub fn variant_digest(&self) -> u64 {
+        ops_digest(self.ops.iter().map(|t| &t.op))
+    }
+
+    /// Canonical cache file name: `<model>@int<bits>-<digest>.json`, where
+    /// `digest` is the low 32 bits of the shape-variant digest (quick
+    /// downscaled plans must not clobber expensive full-size ones).
+    pub fn cache_file_name(model: &str, prec: Precision, digest: u64) -> String {
+        format!("{model}@int{}-{:08x}.json", prec.bits(), digest & 0xFFFF_FFFF)
+    }
+
+    /// Serialize as the `bench/tuned/` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n  \"schema\": 1,\n");
+        s.push_str(&format!("  \"model\": {},\n", jstr(&self.model)));
+        s.push_str(&format!("  \"prec\": {},\n", self.prec.bits()));
+        s.push_str(&format!(
+            "  \"config\": {{ \"lanes\": {}, \"tile_r\": {}, \"tile_c\": {}, \"vrf_kib\": {} }},\n",
+            self.cfg.lanes, self.cfg.tile_r, self.cfg.tile_c, self.cfg.vrf_kib
+        ));
+        s.push_str(&format!("  \"search_chunks\": {},\n", self.search_chunks));
+        s.push_str(&format!("  \"cycles_static\": {},\n", self.static_cycles()));
+        s.push_str(&format!("  \"cycles_tuned\": {},\n", self.tuned_cycles()));
+        s.push_str("  \"ops\": [\n");
+        for (i, t) in self.ops.iter().enumerate() {
+            let o = &t.op;
+            s.push_str(&format!(
+                "    {{ \"kind\": {}, \"m\": {}, \"k\": {}, \"n\": {}, \"c\": {}, \
+                 \"f\": {}, \"h\": {}, \"w\": {}, \"ksize\": {}, \"stride\": {}, \
+                 \"pad\": {}, \"count\": {}, \"strat\": {}, \"chunk\": {}, \
+                 \"cycles\": {}, \"static_strat\": {}, \"static_chunk\": {}, \
+                 \"static_cycles\": {}, \"candidates\": {} }}{}\n",
+                jstr(kind_name(o.kind)),
+                o.m,
+                o.k,
+                o.n,
+                o.c,
+                o.f,
+                o.h,
+                o.w,
+                o.ksize,
+                o.stride,
+                o.pad,
+                t.count,
+                // StrategyKind's Display is the canonical lowercase name
+                // strat_from parses back.
+                jstr(&t.choice.strat.to_string()),
+                jopt(t.choice.chunk),
+                t.cycles,
+                jstr(&t.static_choice.strat.to_string()),
+                jopt(t.static_choice.chunk),
+                t.static_cycles,
+                t.candidates,
+                if i + 1 < self.ops.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse a plan document, failing fast (typed `Parse`) on unknown
+    /// strategies, bad precisions, or missing fields.
+    pub fn from_json(src: &str) -> Result<TunedPlan> {
+        let doc = parse(src)?;
+        let model = doc
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| perr("tuned plan needs a \"model\" string"))?
+            .to_string();
+        let bits = doc
+            .get("prec")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| perr("tuned plan needs integer \"prec\""))?;
+        let prec = Precision::from_bits(bits as u32)
+            .ok_or_else(|| perr(format!("bad tuned-plan precision {bits}")))?;
+        let cj = doc
+            .get("config")
+            .ok_or_else(|| perr("tuned plan needs a \"config\" object"))?;
+        let cfg_field = |k: &str| -> Result<u32> {
+            cj.get(k)
+                .and_then(Json::as_i64)
+                .filter(|&v| v >= 1 && v <= u32::MAX as i64)
+                .map(|v| v as u32)
+                .ok_or_else(|| perr(format!("tuned-plan config needs \"{k}\"")))
+        };
+        let cfg = TunedConfigSig {
+            lanes: cfg_field("lanes")?,
+            tile_r: cfg_field("tile_r")?,
+            tile_c: cfg_field("tile_c")?,
+            vrf_kib: cfg_field("vrf_kib")?,
+        };
+        let search_chunks = doc
+            .get("search_chunks")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| perr("tuned plan needs boolean \"search_chunks\""))?;
+        let ops_json = doc
+            .get("ops")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| perr("tuned plan needs an \"ops\" array"))?;
+        let mut ops = Vec::with_capacity(ops_json.len());
+        for e in ops_json {
+            ops.push(parse_op_tuning(e, prec)?);
+        }
+        Ok(TunedPlan { model, prec, cfg, search_chunks, ops })
+    }
+
+    /// Write this plan to `dir` under its canonical cache file name;
+    /// returns the path written. Creates the directory if needed.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<std::path::PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .map_err(|e| SpeedError::Bench(format!("creating {}: {e}", dir.display())))?;
+        let path =
+            dir.join(Self::cache_file_name(&self.model, self.prec, self.variant_digest()));
+        std::fs::write(&path, self.to_json())
+            .map_err(|e| SpeedError::Bench(format!("writing {}: {e}", path.display())))?;
+        Ok(path)
+    }
+
+    /// Load a plan file from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<TunedPlan> {
+        let path = path.as_ref();
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| perr(format!("reading tuned plan {}: {e}", path.display())))?;
+        Self::from_json(&src)
+    }
+}
+
+fn kind_name(kind: OpKind) -> &'static str {
+    match kind {
+        OpKind::Mm => "mm",
+        OpKind::Conv => "conv",
+        OpKind::Pwcv => "pwcv",
+        OpKind::Dwcv => "dwcv",
+    }
+}
+
+fn kind_from(s: &str) -> Result<OpKind> {
+    match s {
+        "mm" => Ok(OpKind::Mm),
+        "conv" => Ok(OpKind::Conv),
+        "pwcv" => Ok(OpKind::Pwcv),
+        "dwcv" => Ok(OpKind::Dwcv),
+        other => Err(perr(format!("unknown op kind '{other}' (mm|conv|pwcv|dwcv)"))),
+    }
+}
+
+fn strat_from(s: &str) -> Result<StrategyKind> {
+    match s {
+        "mm" => Ok(StrategyKind::Mm),
+        "ffcs" => Ok(StrategyKind::Ffcs),
+        "cf" => Ok(StrategyKind::Cf),
+        "ff" => Ok(StrategyKind::Ff),
+        other => Err(perr(format!("unknown strategy '{other}' (mm|ffcs|cf|ff)"))),
+    }
+}
+
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn jopt(v: Option<u32>) -> String {
+    match v {
+        None => "null".into(),
+        Some(x) => x.to_string(),
+    }
+}
+
+fn parse_op_tuning(e: &Json, prec: Precision) -> Result<OpTuning> {
+    let kind = kind_from(
+        e.get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| perr("tuned op needs a \"kind\" string"))?,
+    )?;
+    let dim = |k: &str| -> Result<u32> {
+        e.get(k)
+            .and_then(Json::as_i64)
+            .filter(|&v| v >= 0 && v <= u32::MAX as i64)
+            .map(|v| v as u32)
+            .ok_or_else(|| perr(format!("tuned op needs non-negative \"{k}\"")))
+    };
+    let num = |k: &str| -> Result<u64> {
+        e.get(k)
+            .and_then(Json::as_i64)
+            .filter(|&v| v >= 0)
+            .map(|v| v as u64)
+            .ok_or_else(|| perr(format!("tuned op needs non-negative \"{k}\"")))
+    };
+    let chunk = |k: &str| -> Result<Option<u32>> {
+        match e.get(k) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v
+                .as_i64()
+                .filter(|&n| n >= 1 && n <= u32::MAX as i64)
+                .map(|n| Some(n as u32))
+                .ok_or_else(|| perr(format!("tuned op \"{k}\" must be a positive integer"))),
+        }
+    };
+    let strat = |k: &str| -> Result<StrategyKind> {
+        strat_from(
+            e.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| perr(format!("tuned op needs a \"{k}\" string")))?,
+        )
+    };
+    let op = OpDesc {
+        kind,
+        prec,
+        m: dim("m")?,
+        k: dim("k")?,
+        n: dim("n")?,
+        c: dim("c")?,
+        f: dim("f")?,
+        h: dim("h")?,
+        w: dim("w")?,
+        ksize: dim("ksize")?,
+        stride: dim("stride")?,
+        pad: dim("pad")?,
+    };
+    op.validate()?;
+    let choice = MappingChoice { strat: strat("strat")?, chunk: chunk("chunk")? };
+    let static_choice =
+        MappingChoice { strat: strat("static_strat")?, chunk: chunk("static_chunk")? };
+    if !dataflow::applicable(choice.strat, &op) {
+        return Err(perr(format!(
+            "tuned strategy {} not applicable to {}",
+            choice.strat, op.kind
+        )));
+    }
+    Ok(OpTuning {
+        op,
+        count: dim("count")?.max(1),
+        choice,
+        cycles: num("cycles")?,
+        static_choice,
+        static_cycles: num("static_cycles")?,
+        candidates: dim("candidates")?,
+    })
+}
+
+/// FNV-1a fold of one u32 (the plan cache needs a digest that is stable
+/// across platforms and releases; `std`'s hashers are not).
+fn fnv_u32(mut h: u64, v: u32) -> u64 {
+    for b in v.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Stable digest over an operator sequence — the identity of a *shape
+/// variant* (a downscaled zoo model digests differently from its
+/// full-size original even though both keep the model name).
+pub fn ops_digest<'a>(ops: impl IntoIterator<Item = &'a OpDesc>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for op in ops {
+        for v in [
+            op.kind as u32,
+            op.prec.bits(),
+            op.m,
+            op.k,
+            op.n,
+            op.c,
+            op.f,
+            op.h,
+            op.w,
+            op.ksize,
+            op.stride,
+            op.pad,
+        ] {
+            h = fnv_u32(h, v);
+        }
+    }
+    h
+}
+
+/// The distinct operators of a model with occurrence counts, in
+/// first-occurrence order — the exact entry order of a [`TunedPlan`]'s
+/// `ops`, so a plan's [`TunedPlan::variant_digest`] agrees with a digest
+/// computed from the model before tuning.
+fn distinct_ops(ops: &[OpDesc]) -> Vec<(OpDesc, u32)> {
+    let mut distinct: Vec<(OpDesc, u32)> = Vec::new();
+    for op in ops {
+        match distinct.iter_mut().find(|(o, _)| o == op) {
+            Some((_, n)) => *n += 1,
+            None => distinct.push((*op, 1)),
+        }
+    }
+    distinct
+}
+
+/// How hard to search.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOptions {
+    /// Also try smaller-than-default chunk sizes per strategy (the full
+    /// `(strategy × chunk)` space of the module docs). Strategy-only
+    /// search is ~3x cheaper and captures most of the win.
+    pub chunks: bool,
+    /// Simulator mode of the cost oracle. Batch (the default) and Exact
+    /// report bit-identical cycles, so this only trades oracle wall time.
+    pub exec_mode: ExecMode,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions { chunks: true, exec_mode: ExecMode::Batch }
+    }
+}
+
+/// Enumerate the mapping candidates for `op` (static choice first).
+pub fn candidates_for(op: &OpDesc, cfg: &SpeedConfig, opts: &TuneOptions) -> Vec<MappingChoice> {
+    let static_choice = MappingChoice::preferred(op);
+    let mut out = vec![static_choice];
+    for strat in StrategyKind::ALL {
+        if !dataflow::applicable(strat, op) {
+            continue;
+        }
+        let base = MappingChoice::of(strat);
+        if base != static_choice {
+            out.push(base);
+        }
+        if opts.chunks {
+            for c in dataflow::chunk_candidates(op, cfg, strat) {
+                out.push(MappingChoice { strat, chunk: Some(c) });
+            }
+        }
+    }
+    out
+}
+
+/// Tune one operator on a warm engine: cost every candidate with a
+/// quiesced execution (per-candidate stats are then a pure function of
+/// the candidate — the serving layer's determinism contract) and keep the
+/// strict winner. Ties — including "everything ties" — resolve to the
+/// static mapping.
+pub fn tune_op(engine: &mut Engine, op: &OpDesc, opts: &TuneOptions) -> Result<OpTuning> {
+    op.validate()?;
+    let cands = candidates_for(op, engine.config(), opts);
+    let mut best: Option<(MappingChoice, u64, u64)> = None;
+    let mut static_cycles = 0u64;
+    for choice in &cands {
+        engine.quiesce();
+        let (stats, _) = engine.run_op_with(op, *choice, false)?;
+        let cost = (stats.cycles, stats.traffic.total());
+        if *choice == cands[0] {
+            static_cycles = stats.cycles;
+        }
+        let better = match &best {
+            None => true,
+            Some((_, bc, bt)) => cost.0 < *bc || (cost.0 == *bc && cost.1 < *bt),
+        };
+        if better {
+            best = Some((*choice, cost.0, cost.1));
+        }
+    }
+    let (choice, cycles, _) = best.expect("candidate list is never empty");
+    Ok(OpTuning {
+        op: *op,
+        count: 1,
+        choice,
+        cycles,
+        static_choice: cands[0],
+        static_cycles,
+        candidates: cands.len() as u32,
+    })
+}
+
+/// Tune every distinct operator of `model` at `prec` on `cfg`, returning
+/// the plan (occurrence counts preserved, first-occurrence order).
+pub fn tune_model(
+    cfg: &SpeedConfig,
+    model: &Model,
+    prec: Precision,
+    opts: &TuneOptions,
+) -> Result<TunedPlan> {
+    let m = model.at_precision(prec);
+    let mut engine = Engine::new(*cfg)?;
+    engine.set_exec_mode(opts.exec_mode);
+    let distinct = distinct_ops(&m.ops);
+    let mut ops = Vec::with_capacity(distinct.len());
+    for (op, count) in distinct {
+        let mut t = tune_op(&mut engine, &op, opts)?;
+        t.count = count;
+        ops.push(t);
+    }
+    Ok(TunedPlan {
+        model: m.name.to_string(),
+        prec,
+        cfg: TunedConfigSig::of(cfg),
+        search_chunks: opts.chunks,
+        ops,
+    })
+}
+
+/// Tune with a persistent JSON cache: load `dir/<model>@intN.json` when it
+/// exists and matches `cfg`, otherwise tune and save. Returns the plan and
+/// whether it came from the cache.
+pub fn tune_model_cached(
+    cfg: &SpeedConfig,
+    model: &Model,
+    prec: Precision,
+    opts: &TuneOptions,
+    dir: impl AsRef<Path>,
+) -> Result<(TunedPlan, bool)> {
+    let dir = dir.as_ref();
+    let m = model.at_precision(prec);
+    let digest = ops_digest(distinct_ops(&m.ops).iter().map(|(op, _)| op));
+    let path = dir.join(TunedPlan::cache_file_name(m.name, prec, digest));
+    if path.is_file() {
+        if let Ok(plan) = TunedPlan::load(&path) {
+            let covers = m.ops.iter().all(|op| plan.choice_for(op).is_some());
+            // A chunk-searched plan satisfies any request; a
+            // strategies-only plan must not silently stand in for the
+            // broader (strategy x chunk) search the caller asked for.
+            let broad_enough = plan.search_chunks || !opts.chunks;
+            if plan.matches(cfg) && plan.model == m.name && covers && broad_enough {
+                return Ok((plan, true));
+            }
+        }
+        // Mismatched / stale / narrower / unparseable cache entries are
+        // re-tuned and overwritten rather than trusted.
+    }
+    let plan = tune_model(cfg, model, prec, opts)?;
+    plan.save(dir)?;
+    Ok((plan, false))
+}
+
+/// Deterministic operand values for parity checks (xorshift64*, the same
+/// generator the compiler tests use; seed-stable across platforms).
+pub fn seeded_operands(n: usize, prec: Precision, seed: u64) -> Vec<i32> {
+    let (lo, hi) = prec.range();
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            lo + ((s >> 8) % (hi - lo + 1) as u64) as i32
+        })
+        .collect()
+}
+
+/// Execute `op` functionally under `choice` on a fresh engine with seeded
+/// operands; returns the i32 output accumulators.
+pub fn functional_output(
+    cfg: &SpeedConfig,
+    op: &OpDesc,
+    choice: MappingChoice,
+    seed: u64,
+) -> Result<Vec<i32>> {
+    let mut engine = Engine::new(*cfg)?;
+    let prog = engine.program_with(op, choice)?;
+    let layout = *prog.layout();
+    drop(prog);
+    let x = seeded_operands(op.input_elems() as usize, op.prec, seed);
+    let w = seeded_operands(op.weight_elems() as usize, op.prec, seed ^ 0xD1B5_4A32_D192_ED03);
+    engine.preload_packed(layout.in_addr, &x, op.prec);
+    engine.preload_packed(layout.w_addr, &w, op.prec);
+    engine.run_op_with(op, choice, true)?;
+    Ok(engine.inspect_i32(layout.out_addr, op.output_elems() as usize))
+}
+
+/// Verify that `choice` is semantics-preserving for `op`: its functional
+/// output must be bit-identical to the static mixed mapping's. A mismatch
+/// is a tuner/compiler defect and returns a typed `Bench` error naming
+/// the first diverging element.
+pub fn verify_choice(cfg: &SpeedConfig, op: &OpDesc, choice: MappingChoice) -> Result<()> {
+    let seed = 0x5EED_0F_7E57 ^ op.total_macs();
+    let want = functional_output(cfg, op, MappingChoice::preferred(op), seed)?;
+    let got = functional_output(cfg, op, choice, seed)?;
+    if want.len() != got.len() {
+        return Err(SpeedError::Bench(format!(
+            "tuned parity failure for {op:?} under {choice}: {} vs {} output elems",
+            got.len(),
+            want.len()
+        )));
+    }
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        if g != w {
+            return Err(SpeedError::Bench(format!(
+                "tuned parity failure for {op:?} under {choice}: out[{i}] = {g}, static = {w}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Verify every entry of a plan whose mapping deviates from the static
+/// one, skipping operators above `mac_limit` (functional simulation is
+/// O(MACs); full-size zoo layers belong in `--quick`-downscaled runs).
+/// Returns `(verified, skipped)` counts.
+pub fn verify_plan(cfg: &SpeedConfig, plan: &TunedPlan, mac_limit: u64) -> Result<(usize, usize)> {
+    let mut verified = 0;
+    let mut skipped = 0;
+    for t in &plan.ops {
+        if !t.improved() {
+            continue;
+        }
+        if t.op.total_macs() > mac_limit {
+            skipped += 1;
+            continue;
+        }
+        verify_choice(cfg, &t.op, t.choice)?;
+        verified += 1;
+    }
+    Ok((verified, skipped))
+}
+
+/// A pool-wide tuned-plan registry, shared the way `SharedPrograms`
+/// shares compiled programs: cloning is one `Arc`, and a plan any member
+/// inserts is visible to every engine serving [`Policy::Tuned`] requests.
+/// Keyed on `(model name, precision)`; lookups validate the configuration
+/// signature so a plan tuned for another instance is never applied.
+///
+/// [`Policy::Tuned`]: crate::coordinator::Policy::Tuned
+#[derive(Clone, Default)]
+pub struct TunedPlans {
+    /// model name → precision bits → plan. Nested so the serving hot
+    /// path looks up with a borrowed `&str` (no per-request key
+    /// allocation on `Policy::Tuned` requests).
+    map: Arc<Mutex<HashMap<String, HashMap<u32, Arc<TunedPlan>>>>>,
+}
+
+impl TunedPlans {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of registered plans.
+    pub fn len(&self) -> usize {
+        self.map
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .map(HashMap::len)
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Register a plan. An existing plan for the same `(model, precision)`
+    /// is merged: new distinct operators are appended, existing ones keep
+    /// their current choice (so plans for downscaled and full-size
+    /// variants of one zoo model compose instead of clobbering).
+    pub fn insert(&self, plan: TunedPlan) -> Arc<TunedPlan> {
+        let bits = plan.prec.bits();
+        let mut map = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = map.entry(plan.model.clone()).or_default();
+        let merged = match inner.get(&bits) {
+            Some(existing) if existing.cfg == plan.cfg => {
+                let mut ops = existing.ops.clone();
+                for t in plan.ops {
+                    if !ops.iter().any(|have| have.op == t.op) {
+                        ops.push(t);
+                    }
+                }
+                TunedPlan { ops, ..(**existing).clone() }
+            }
+            _ => plan,
+        };
+        let arc = Arc::new(merged);
+        inner.insert(bits, arc.clone());
+        arc
+    }
+
+    /// The plan for `(model, prec)`, if present and tuned for `cfg`.
+    pub fn get(&self, model: &str, prec: Precision, cfg: &SpeedConfig) -> Option<Arc<TunedPlan>> {
+        let map = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        map.get(model)
+            .and_then(|inner| inner.get(&prec.bits()))
+            .filter(|p| p.matches(cfg))
+            .cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Policy;
+
+    fn cfg() -> SpeedConfig {
+        SpeedConfig::reference()
+    }
+
+    fn tiny_model() -> Model {
+        Model {
+            name: "tiny",
+            ops: vec![
+                OpDesc::conv(8, 8, 12, 12, 3, 1, 1, Precision::Int8),
+                OpDesc::pwcv(8, 8, 12, 12, Precision::Int8),
+                OpDesc::dwcv(8, 12, 12, 3, 1, 1, Precision::Int8),
+                OpDesc::mm(8, 16, 8, Precision::Int8),
+                // Repeat of the first layer: dedup + count.
+                OpDesc::conv(8, 8, 12, 12, 3, 1, 1, Precision::Int8),
+            ],
+            scalar_fraction: 0.1,
+        }
+    }
+
+    #[test]
+    fn candidates_start_with_static_and_respect_applicability() {
+        let opts = TuneOptions::default();
+        let conv = OpDesc::conv(16, 16, 12, 12, 3, 1, 1, Precision::Int8);
+        let cands = candidates_for(&conv, &cfg(), &opts);
+        assert_eq!(cands[0], MappingChoice::preferred(&conv));
+        assert!(cands.iter().all(|c| dataflow::applicable(c.strat, &conv)));
+        assert!(cands.iter().any(|c| c.strat == StrategyKind::Ff));
+        // No duplicates.
+        for (i, a) in cands.iter().enumerate() {
+            assert!(!cands[i + 1..].contains(a), "{a} duplicated");
+        }
+        let mm = OpDesc::mm(8, 32, 8, Precision::Int8);
+        let mc = candidates_for(&mm, &cfg(), &opts);
+        assert!(mc.iter().all(|c| c.strat == StrategyKind::Mm));
+        let dw = OpDesc::dwcv(8, 12, 12, 3, 1, 1, Precision::Int8);
+        let dc = candidates_for(&dw, &cfg(), &opts);
+        assert_eq!(dc, vec![MappingChoice::of(StrategyKind::Ff)]);
+    }
+
+    #[test]
+    fn tune_op_never_worse_than_static_and_deterministic() {
+        let mut engine = Engine::new(cfg()).unwrap();
+        let opts = TuneOptions::default();
+        for op in [
+            OpDesc::conv(8, 8, 12, 12, 3, 1, 1, Precision::Int8),
+            OpDesc::pwcv(16, 16, 10, 10, Precision::Int16),
+            OpDesc::mm(8, 32, 8, Precision::Int4),
+        ] {
+            let a = tune_op(&mut engine, &op, &opts).unwrap();
+            assert!(a.cycles <= a.static_cycles, "{op:?}");
+            assert!(a.candidates >= 1);
+            // Re-tuning on the (now warm) engine reproduces the outcome.
+            let b = tune_op(&mut engine, &op, &opts).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn tune_op_rejects_invalid_geometry() {
+        let mut engine = Engine::new(cfg()).unwrap();
+        let bad = OpDesc::conv(3, 4, 2, 2, 5, 1, 0, Precision::Int8);
+        assert!(matches!(
+            tune_op(&mut engine, &bad, &TuneOptions::default()),
+            Err(SpeedError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn tune_model_dedups_and_counts() {
+        let plan =
+            tune_model(&cfg(), &tiny_model(), Precision::Int8, &TuneOptions::default())
+                .unwrap();
+        assert_eq!(plan.model, "tiny");
+        assert_eq!(plan.ops.len(), 4, "5 layers, 4 distinct");
+        assert_eq!(plan.ops[0].count, 2, "repeated conv counted");
+        assert!(plan.tuned_cycles() <= plan.static_cycles());
+        assert!(plan.speedup() >= 1.0);
+        // Every model operator resolves through the plan.
+        for op in &tiny_model().at_precision(Precision::Int8).ops {
+            assert!(plan.choice_for(op).is_some(), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan =
+            tune_model(&cfg(), &tiny_model(), Precision::Int4, &TuneOptions::default())
+                .unwrap();
+        let back = TunedPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+        // Malformed documents fail typed.
+        assert!(matches!(TunedPlan::from_json("[]"), Err(SpeedError::Parse(_))));
+        assert!(matches!(
+            TunedPlan::from_json(r#"{ "model": "x", "prec": 7 }"#),
+            Err(SpeedError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn tuned_session_matches_plan_and_never_regresses() {
+        let model = tiny_model();
+        let prec = Precision::Int8;
+        let plan = Arc::new(
+            tune_model(&cfg(), &model, prec, &TuneOptions::default()).unwrap(),
+        );
+        let mut static_engine = Engine::new(cfg()).unwrap();
+        let static_run = static_engine
+            .session()
+            .with_policy(Policy::Mixed)
+            .run_model(&model, prec)
+            .unwrap();
+        let mut tuned_engine = Engine::new(cfg()).unwrap();
+        let tuned_run = tuned_engine
+            .session()
+            .with_tuned_plan(plan.clone())
+            .run_model(&model, prec)
+            .unwrap();
+        assert_eq!(tuned_run.layers.len(), static_run.layers.len());
+        assert_eq!(tuned_run.total.macs, static_run.total.macs);
+        assert!(
+            tuned_run.total.cycles <= static_run.total.cycles,
+            "tuned {} > static {}",
+            tuned_run.total.cycles,
+            static_run.total.cycles
+        );
+        // Each layer runs the strategy the plan recorded.
+        for layer in &tuned_run.layers {
+            let choice = plan.choice_for(&layer.op).unwrap();
+            assert_eq!(layer.strat, choice.strat);
+        }
+        // Policy::Tuned without a plan degrades to the static mapping.
+        let mut bare = Engine::new(cfg()).unwrap();
+        let fallback = bare
+            .session()
+            .with_policy(Policy::Tuned)
+            .run_model(&model, prec)
+            .unwrap();
+        assert_eq!(fallback.total, static_run.total);
+    }
+
+    #[test]
+    fn verify_choice_accepts_all_candidates_of_small_ops() {
+        let opts = TuneOptions::default();
+        for op in [
+            OpDesc::conv(6, 8, 10, 10, 3, 1, 1, Precision::Int8),
+            OpDesc::pwcv(8, 8, 8, 8, Precision::Int16),
+            OpDesc::mm(8, 24, 6, Precision::Int4),
+        ] {
+            for choice in candidates_for(&op, &cfg(), &opts) {
+                verify_choice(&cfg(), &op, choice).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn registry_shares_merges_and_validates_config() {
+        let reg = TunedPlans::new();
+        assert!(reg.is_empty());
+        let model = tiny_model();
+        let plan =
+            tune_model(&cfg(), &model, Precision::Int8, &TuneOptions::default()).unwrap();
+        reg.insert(plan.clone());
+        assert_eq!(reg.len(), 1);
+        let got = reg.get("tiny", Precision::Int8, &cfg()).unwrap();
+        assert_eq!(*got, plan);
+        assert!(reg.get("tiny", Precision::Int4, &cfg()).is_none());
+        // A different configuration signature refuses the plan.
+        let other = SpeedConfig { lanes: 8, ..cfg() };
+        assert!(reg.get("tiny", Precision::Int8, &other).is_none());
+        // Merging keeps existing entries and appends new distinct ops.
+        let extra = TunedPlan {
+            ops: vec![OpTuning {
+                op: OpDesc::mm(3, 9, 3, Precision::Int8),
+                count: 1,
+                choice: MappingChoice::of(StrategyKind::Mm),
+                cycles: 10,
+                static_choice: MappingChoice::of(StrategyKind::Mm),
+                static_cycles: 10,
+                candidates: 1,
+            }],
+            ..plan.clone()
+        };
+        let merged = reg.insert(extra);
+        assert_eq!(merged.ops.len(), plan.ops.len() + 1);
+        assert!(merged
+            .choice_for(&OpDesc::mm(3, 9, 3, Precision::Int8))
+            .is_some());
+    }
+
+    #[test]
+    fn cache_round_trips_on_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("speed_tuned_cache_{}", std::process::id()));
+        let model = tiny_model();
+        let opts = TuneOptions::default();
+        let (fresh, was_cached) =
+            tune_model_cached(&cfg(), &model, Precision::Int8, &opts, &dir).unwrap();
+        assert!(!was_cached);
+        let (cached, was_cached) =
+            tune_model_cached(&cfg(), &model, Precision::Int8, &opts, &dir).unwrap();
+        assert!(was_cached, "second call must hit the JSON cache");
+        assert_eq!(fresh, cached);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -143,12 +143,24 @@ fn serve_bench_report_is_parseable_and_digest_stable() {
     let sc = Scenario::from_json(PARITY_SCENARIO).unwrap();
     let a = run_serve_bench(
         &sc,
-        &ServeBenchOptions { workers: 1, quick: false, exact: false, max_batch: Some(1) },
+        &ServeBenchOptions {
+            workers: 1,
+            quick: false,
+            exact: false,
+            max_batch: Some(1),
+            tuned: false,
+        },
     )
     .unwrap();
     let b = run_serve_bench(
         &sc,
-        &ServeBenchOptions { workers: 3, quick: false, exact: false, max_batch: None },
+        &ServeBenchOptions {
+            workers: 3,
+            quick: false,
+            exact: false,
+            max_batch: None,
+            tuned: false,
+        },
     )
     .unwrap();
     assert_eq!(a.stats_digest, b.stats_digest, "digest is schedule-invariant");

@@ -1,0 +1,183 @@
+//! Tuner-semantics parity: every mapping the auto-tuner may select must
+//! be a pure re-labeling of the static mixed mapping's work — bit-identical
+//! output memory, identical MAC accounting — across random shapes, every
+//! operator kind, and every supported precision. The deployment image
+//! vendors no proptest; properties run over a deterministic xorshift
+//! stream, same spirit as `proptest_invariants.rs`.
+
+use std::sync::Arc;
+
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::coordinator::Policy;
+use speed_rvv::dataflow::MappingChoice;
+use speed_rvv::engine::Engine;
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::models::zoo::model_by_name;
+use speed_rvv::report::fig12::downscale;
+use speed_rvv::tune::{
+    candidates_for, functional_output, tune_model, tune_op, verify_choice, TuneOptions,
+    TunedPlan,
+};
+
+/// Deterministic xorshift64* stream.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+/// A random *valid* operator of any kind at `prec`, kept small enough
+/// that functional simulation (O(MACs)) stays cheap.
+fn random_op(rng: &mut Rng, prec: Precision) -> OpDesc {
+    match rng.range(0, 3) {
+        0 => OpDesc::mm(
+            rng.range(1, 16) as u32,
+            rng.range(1, 48) as u32,
+            rng.range(1, 16) as u32,
+            prec,
+        ),
+        1 => {
+            let k = *rng.pick(&[1u32, 3, 5]);
+            OpDesc::conv(
+                rng.range(1, 24) as u32,
+                rng.range(1, 16) as u32,
+                rng.range(k as u64, 13) as u32,
+                rng.range(k as u64, 13) as u32,
+                k,
+                rng.range(1, 2) as u32,
+                k / 2,
+                prec,
+            )
+        }
+        2 => OpDesc::pwcv(
+            rng.range(1, 24) as u32,
+            rng.range(1, 16) as u32,
+            rng.range(1, 10) as u32,
+            rng.range(1, 10) as u32,
+            prec,
+        ),
+        _ => OpDesc::dwcv(
+            rng.range(1, 12) as u32,
+            rng.range(3, 13) as u32,
+            rng.range(3, 13) as u32,
+            3,
+            rng.range(1, 2) as u32,
+            1,
+            prec,
+        ),
+    }
+}
+
+/// The tentpole property: for random shapes across all precisions, the
+/// tuner-selected mapping produces output memory bit-identical to the
+/// static mixed mapping, never costs more simulated cycles, and is
+/// reproducible.
+#[test]
+fn prop_tuned_selection_bit_identical_and_never_slower() {
+    let cfg = SpeedConfig::reference();
+    let opts = TuneOptions::default();
+    let mut engine = Engine::new(cfg).unwrap();
+    let mut rng = Rng::new(0x7E57_5EED);
+    for prec in Precision::ALL {
+        for case in 0..12 {
+            let op = random_op(&mut rng, prec);
+            op.validate().unwrap_or_else(|e| panic!("{op:?}: {e}"));
+            let t = tune_op(&mut engine, &op, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {op:?}: {e}"));
+            assert!(
+                t.cycles <= t.static_cycles,
+                "case {case} {op:?}: tuned {} > static {}",
+                t.cycles,
+                t.static_cycles
+            );
+            // Bit-identical outputs vs the static mapping.
+            verify_choice(&cfg, &op, t.choice)
+                .unwrap_or_else(|e| panic!("case {case} {op:?}: {e}"));
+        }
+    }
+}
+
+/// Stronger (smaller) sweep: *every* candidate the tuner could possibly
+/// pick — not just the winner — matches the static mapping bit for bit,
+/// and the functional run's MAC count is the operator's.
+#[test]
+fn prop_every_candidate_bit_identical() {
+    let cfg = SpeedConfig::reference();
+    let opts = TuneOptions::default();
+    let mut rng = Rng::new(99);
+    for prec in Precision::ALL {
+        for _ in 0..4 {
+            let op = random_op(&mut rng, prec);
+            let want =
+                functional_output(&cfg, &op, MappingChoice::preferred(&op), 11).unwrap();
+            for choice in candidates_for(&op, &cfg, &opts) {
+                let got = functional_output(&cfg, &op, choice, 11)
+                    .unwrap_or_else(|e| panic!("{op:?} {choice}: {e}"));
+                assert_eq!(got, want, "{op:?} {choice}");
+            }
+        }
+    }
+}
+
+/// Whole-model integration: a tuned plan for a downscaled CONV-heavy zoo
+/// model round-trips through JSON, never regresses the composed model
+/// run, and Policy::Tuned layer-for-layer follows the plan.
+#[test]
+fn tuned_model_round_trips_and_never_regresses() {
+    let cfg = SpeedConfig::reference();
+    let model = downscale(&model_by_name("vgg16").unwrap(), 16);
+    for prec in [Precision::Int4, Precision::Int8] {
+        let plan = tune_model(&cfg, &model, prec, &TuneOptions::default()).unwrap();
+        // JSON round-trip through the persistent-cache representation.
+        let back = TunedPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back, "{prec}");
+        assert!(plan.speedup() >= 1.0);
+
+        let mut static_engine = Engine::new(cfg).unwrap();
+        let static_run = static_engine
+            .session()
+            .with_policy(Policy::Mixed)
+            .run_model(&model, prec)
+            .unwrap();
+        let mut tuned_engine = Engine::new(cfg).unwrap();
+        let plan = Arc::new(plan);
+        let tuned_run = tuned_engine
+            .session()
+            .with_tuned_plan(plan.clone())
+            .run_model(&model, prec)
+            .unwrap();
+        assert_eq!(tuned_run.total.macs, static_run.total.macs, "{prec}");
+        assert_eq!(tuned_run.layers.len(), static_run.layers.len(), "{prec}");
+        assert!(
+            tuned_run.total.cycles <= static_run.total.cycles,
+            "{prec}: tuned {} > static {}",
+            tuned_run.total.cycles,
+            static_run.total.cycles
+        );
+        for layer in &tuned_run.layers {
+            assert_eq!(
+                layer.strat,
+                plan.choice_for(&layer.op).unwrap().strat,
+                "{prec} {:?}",
+                layer.op
+            );
+        }
+    }
+}
