@@ -25,7 +25,7 @@ use crate::error::{Result, SpeedError};
 use crate::isa::StrategyKind;
 use crate::models::zoo::{model_by_name, MODELS};
 use crate::models::OpDesc;
-use crate::runtime::json::{parse, Json};
+use crate::runtime::json::{jf, jstr, parse, Json};
 use crate::sim::ExecMode;
 use crate::tune::{self, TuneOptions};
 
@@ -316,30 +316,6 @@ impl BenchReport {
     }
 }
 
-fn jf(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x:.6}")
-    } else {
-        "0".into()
-    }
-}
-
-fn jstr(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
-}
-
 /// The `sim_hotpath` workload: the stage-heavy CONV3×3 stream the
 /// EXPERIMENTS perf log has always tracked.
 pub fn hotpath_op(quick: bool) -> OpDesc {
@@ -482,11 +458,14 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
     // model, then replay the *whole model* under both mappings through
     // fresh engines. Simulated cycles are mode-independent (batch ==
     // exact bit-for-bit), so the resulting metric gates identically under
-    // --exact. INT4 is where the static table's FFCS choice is furthest
-    // off: PP = 16 shrinks the MPTU schedule 16x while the per-block
-    // weight refetch only halves, so large CONVs go memory-bound and FF's
-    // weight residency wins outright — exactly the precision-dependent
-    // shift the tuner exists to catch.
+    // --exact. INT4 is where the static table's choice is furthest off:
+    // PP = 16 shrinks the MPTU schedule 16x while weight refetches only
+    // halve, so big layers go memory-bound and the tuner's alternatives
+    // (FF weight residency where it genuinely fits the VRF partition —
+    // the residency gate excludes the fiction shapes — smaller channel
+    // chunks, and wider MM B-tile column blocks) can win. The speedup is
+    // >= 1.0 by the tie-to-static rule whatever the search finds, so the
+    // gated metric's floor holds unconditionally.
     let tuned_points: &[(&str, Precision)] = if opts.quick {
         &[("vgg16", Precision::Int4)]
     } else {

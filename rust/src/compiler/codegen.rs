@@ -448,8 +448,11 @@ fn generate<'a>(
     // The chunk is resolved once (clamped to a PP multiple the VRF fits —
     // see `dataflow::resolve_chunk`) and drives every chunked loop below.
     // Stage totals are chunk-invariant, so any resolved chunk produces the
-    // same plan sizing and bit-identical outputs.
+    // same plan sizing and bit-identical outputs. The MM B-tile column
+    // block resolves the same way (a TILE_C multiple one vreg region
+    // fits); `None` keeps the static per-tile load structure.
     let chunk = dataflow::resolve_chunk(op, cfg, strat, choice.chunk);
+    let jchunk = dataflow::resolve_jchunk(op, cfg, strat, choice.jchunk, chunk);
     let mut e = Emitter::new(op.prec, sink);
     // Prologue: configuration-setting instructions (Fig. 9 step ①).
     e.vsacfg(op.ksize.max(1), strat);
@@ -468,7 +471,7 @@ fn generate<'a>(
         }
     }
     match strat {
-        StrategyKind::Mm => gen_mm(&mut e, op, cfg, layout, chunk),
+        StrategyKind::Mm => gen_mm(&mut e, op, cfg, layout, chunk, jchunk),
         StrategyKind::Ffcs => gen_ffcs(&mut e, op, cfg, layout, chunk),
         StrategyKind::Cf => gen_cf(&mut e, op, cfg, layout, chunk),
         StrategyKind::Ff => gen_ff(&mut e, op, cfg, layout, chunk),
@@ -483,6 +486,27 @@ fn check(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Result<(), Spee
         return Err(SpeedError::Compile(format!(
             "strategy {strat} not applicable to {}",
             op.kind
+        )));
+    }
+    if strat == StrategyKind::Ff && !dataflow::ff_weights_resident(op, cfg) {
+        // FF's cost model stages *all* output channels' weights for the
+        // channel chunk in the VRF weight partition; at this F even the
+        // minimal PP-sized chunk overflows it, so the "weights fetched
+        // exactly once" stream would be fiction. Typed spill instead.
+        let per_lane = op.f.div_ceil(cfg.lanes).max(1) as u64
+            * (op.ksize * op.ksize) as u64
+            * op.prec.pp() as u64
+            * op.prec.bits() as u64
+            / 8;
+        return Err(SpeedError::Layout(format!(
+            "FF weight slice spills the VRF weight partition: F={} over {} \
+             lanes needs {per_lane} B/lane at the minimal {}-channel chunk, \
+             but the partition holds {} B (use FFCS/CF, which refetch \
+             weights per feature-map block)",
+            op.f,
+            cfg.lanes,
+            op.prec.pp(),
+            dataflow::partition_budget(cfg)
         )));
     }
     Ok(())
@@ -612,8 +636,19 @@ pub fn execute_op(
 
 /// MM: weights multi-broadcast, inputs reused across stages, PE
 /// output-stationary across K chunks (Fig. 6). `kc` is the resolved
-/// reduction-dim chunk (default: [`dataflow::mm_k_chunk`]).
-fn gen_mm(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, kc: u32) {
+/// reduction-dim chunk (default: [`dataflow::mm_k_chunk`]); `jc` the
+/// resolved B-tile column block ([`dataflow::resolve_jchunk`], `None` =
+/// the static per-`TILE_C`-tile load structure). The column block only
+/// coalesces broadcast loads — stage totals, MAC accounting, and output
+/// memory are identical for every resolved `jc`.
+fn gen_mm(
+    e: &mut Emitter,
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    lay: &MemLayout,
+    kc: u32,
+    jc: Option<u32>,
+) {
     let pp = op.prec.pp();
     let rows_per_block = cfg.lanes * cfg.tile_r;
     let row_blocks = op.m.div_ceil(rows_per_block);
@@ -628,30 +663,53 @@ fn gen_mm(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, kc: 
             // A slice for this row block / K chunk (lane-striped).
             let a_off = lay.in_addr + op.prec.bytes_for((r0 as u64) * op.k as u64 + k0 as u64);
             e.load_seq_in(cfg, a_off, rows as u64 * kcur as u64);
-            // When the whole K-chunk of B fits one vreg region, a single
-            // multi-broadcast VSALD serves every column tile (the Fig. 2
-            // stream: one weight load, then the VSAM sequence).
-            let whole_b = op.prec.bytes_for(kcur as u64 * op.n as u64)
-                <= dataflow::vreg_region(cfg) as u64;
-            if whole_b {
-                let b_off = lay.w_addr + op.prec.bytes_for((k0 as u64) * op.n as u64);
-                e.load_bcast(cfg, b_off, kcur as u64 * op.n as u64);
-            }
-            for ct in 0..col_tiles {
-                let n0 = ct * cfg.tile_c;
-                let ncur = cfg.tile_c.min(op.n - n0);
-                if !whole_b {
-                    // B tile broadcast to every lane.
+            let stages_per_tile = kcur.div_ceil(pp) as u64;
+            // Degenerate output dims (batch-1 FC / classifier heads)
+            // use the matrix–vector form VSAC (Sec. II-B).
+            let gemv = op.m == 1 || op.n == 1;
+            if let Some(jc) = jc {
+                // Tuned J-dim structure: one broadcast B load per jc-wide
+                // column block, serving every tile inside the block.
+                let jblocks = op.n.div_ceil(jc);
+                for jb in 0..jblocks {
+                    let j0 = jb * jc;
+                    let jcur = jc.min(op.n - j0);
                     let b_off = lay.w_addr
-                        + op.prec.bytes_for((k0 as u64) * op.n as u64 + n0 as u64);
-                    e.load_bcast(cfg, b_off, kcur as u64 * ncur as u64);
+                        + op.prec.bytes_for((k0 as u64) * op.n as u64 + j0 as u64);
+                    e.load_bcast(cfg, b_off, kcur as u64 * jcur as u64);
+                    for _ in 0..jcur.div_ceil(cfg.tile_c) {
+                        if gemv {
+                            e.vsac(stages_per_tile);
+                        } else {
+                            e.vsam(stages_per_tile);
+                        }
+                    }
                 }
-                // Degenerate output dims (batch-1 FC / classifier heads)
-                // use the matrix–vector form VSAC (Sec. II-B).
-                if op.m == 1 || op.n == 1 {
-                    e.vsac(kcur.div_ceil(pp) as u64);
-                } else {
-                    e.vsam(kcur.div_ceil(pp) as u64);
+            } else {
+                // When the whole K-chunk of B fits one vreg region, a
+                // single multi-broadcast VSALD serves every column tile
+                // (the Fig. 2 stream: one weight load, then the VSAM
+                // sequence).
+                let whole_b = op.prec.bytes_for(kcur as u64 * op.n as u64)
+                    <= dataflow::vreg_region(cfg) as u64;
+                if whole_b {
+                    let b_off = lay.w_addr + op.prec.bytes_for((k0 as u64) * op.n as u64);
+                    e.load_bcast(cfg, b_off, kcur as u64 * op.n as u64);
+                }
+                for ct in 0..col_tiles {
+                    let n0 = ct * cfg.tile_c;
+                    let ncur = cfg.tile_c.min(op.n - n0);
+                    if !whole_b {
+                        // B tile broadcast to every lane.
+                        let b_off = lay.w_addr
+                            + op.prec.bytes_for((k0 as u64) * op.n as u64 + n0 as u64);
+                        e.load_bcast(cfg, b_off, kcur as u64 * ncur as u64);
+                    }
+                    if gemv {
+                        e.vsac(stages_per_tile);
+                    } else {
+                        e.vsam(stages_per_tile);
+                    }
                 }
             }
         }
@@ -1094,13 +1152,69 @@ mod tests {
             let cands = dataflow::chunk_candidates(&op, &cfg, strat);
             assert!(!cands.is_empty(), "{op:?} {strat}: no chunk candidates");
             for c in cands {
-                let choice = MappingChoice { strat, chunk: Some(c) };
+                let choice = MappingChoice { chunk: Some(c), ..MappingChoice::of(strat) };
                 let (out, st, sum) = run_op_choice(&op, &cfg, choice, &x, &w);
                 assert_eq!(out, base_out, "{op:?} {choice}");
                 assert_eq!(st.macs, base_st.macs, "{op:?} {choice}");
                 assert_eq!(sum.total_stages, base_sum.total_stages, "{op:?} {choice}");
             }
         }
+    }
+
+    #[test]
+    fn mm_jchunk_override_preserves_outputs_and_stages() {
+        // Widening the B-tile column block coalesces broadcast loads only:
+        // output memory, MACs, and stage totals stay bit-identical, while
+        // the wide MM's load count strictly drops (the win the J-dim arm
+        // of the tuner search exists to find).
+        let cfg = SpeedConfig::reference();
+        for op in [
+            OpDesc::mm(12, 48, 24, Precision::Int8),
+            OpDesc::mm(16, 64, 192, Precision::Int16),
+            OpDesc::mm(1, 32, 40, Precision::Int4), // GEMV form
+        ] {
+            let x = seeded(op.input_elems() as usize, op.prec, 41);
+            let w = seeded(op.weight_elems() as usize, op.prec, 43);
+            let base = MappingChoice::of(StrategyKind::Mm);
+            let (base_out, base_st, base_sum) = run_op_choice(&op, &cfg, base, &x, &w);
+            let cands = dataflow::jchunk_candidates(&op, &cfg, StrategyKind::Mm);
+            assert!(!cands.is_empty(), "{op:?}: no J-dim candidates");
+            for j in cands {
+                let choice = MappingChoice { jchunk: Some(j), ..base };
+                let (out, st, sum) = run_op_choice(&op, &cfg, choice, &x, &w);
+                assert_eq!(out, base_out, "{op:?} {choice}");
+                assert_eq!(st.macs, base_st.macs, "{op:?} {choice}");
+                assert_eq!(sum.total_stages, base_sum.total_stages, "{op:?} {choice}");
+                assert!(
+                    sum.vsald <= base_sum.vsald,
+                    "{op:?} {choice}: {} loads vs {}",
+                    sum.vsald,
+                    base_sum.vsald
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ff_weight_spill_is_a_typed_layout_error() {
+        // Boundary shapes from dataflow::ff_residency_boundary_at_large_f:
+        // F = 604 compiles under FF on the reference config, F = 608 is a
+        // typed spill (Layout, not a panic or a silent cost-model fiction).
+        let cfg = SpeedConfig::reference();
+        let resident = OpDesc::conv(8, 604, 6, 6, 3, 1, 1, Precision::Int8);
+        let layout = MemLayout::for_op(&resident, 1 << 26).unwrap();
+        compile_op(&resident, &cfg, StrategyKind::Ff, layout, false).unwrap();
+        let spilled = OpDesc::conv(8, 608, 6, 6, 3, 1, 1, Precision::Int8);
+        let layout = MemLayout::for_op(&spilled, 1 << 26).unwrap();
+        match compile_op(&spilled, &cfg, StrategyKind::Ff, layout, false) {
+            Err(SpeedError::Layout(m)) => {
+                assert!(m.contains("weight partition"), "{m}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // FFCS still compiles the spilled shape (it never stages all-F
+        // weights), so the mixed mapping is unaffected.
+        compile_op(&spilled, &cfg, StrategyKind::Ffcs, layout, false).unwrap();
     }
 
     #[test]

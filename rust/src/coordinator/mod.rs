@@ -40,6 +40,16 @@ pub enum Policy {
     /// tuned entry — and sessions with no plan attached — fall back to the
     /// static mixed mapping, so `Tuned` is always safe to request.
     Tuned,
+    /// Like [`Policy::Tuned`], but the plan is produced *online* by the
+    /// serve pool: the first request for an uncovered `(model, precision,
+    /// config-signature)` triggers a tuning search on the owning worker
+    /// (a *tune stall*), the plan is published to the pool's shared
+    /// [`crate::tune::TunedPlans`] registry, and every later same-key
+    /// request replays it (a *plan-registry hit*). Per-request statistics
+    /// are identical whether a request stalled or hit — the stall is wall
+    /// time, not simulated work. Outside a pool this behaves exactly like
+    /// `Tuned`.
+    TunedOnline,
 }
 
 impl Policy {
@@ -49,7 +59,9 @@ impl Policy {
     /// choice (strategy + chunk) when a plan is attached.
     pub fn strategy_for(&self, op: &OpDesc) -> Option<StrategyKind> {
         match self {
-            Policy::Mixed | Policy::Tuned => Some(op.preferred_strategy()),
+            Policy::Mixed | Policy::Tuned | Policy::TunedOnline => {
+                Some(op.preferred_strategy())
+            }
             Policy::Fixed(s) => crate::dataflow::applicable(*s, op).then_some(*s),
         }
     }

@@ -24,7 +24,7 @@ use crate::isa::StrategyKind;
 use crate::models::ops::{OpDesc, OpKind};
 
 /// One point of the per-operator mapping space the auto-tuner searches:
-/// a dataflow strategy plus an optional chunk-size override.
+/// a dataflow strategy plus optional chunk-size overrides.
 ///
 /// `chunk: None` means the analytically-derived maximum that fits the VRF
 /// ([`default_chunk`]) — the value the static mapping has always used. An
@@ -32,16 +32,25 @@ use crate::models::ops::{OpDesc, OpKind};
 /// before code generation, so every choice compiles to a stream with the
 /// same stage count and bit-identical outputs; only the load/store
 /// structure (and therefore cycles and traffic) changes.
+///
+/// `jchunk` widens the search along MM's *other* tiled dimension: the
+/// B-tile column block. `None` keeps the static structure (one broadcast
+/// B load per `TILE_C`-wide column tile, or the whole K-chunk of B when it
+/// fits a vreg region); `Some(jc)` loads `jc` columns' worth of B per
+/// broadcast ([`resolve_jchunk`] clamps to a `TILE_C` multiple the vreg
+/// region fits). Conv strategies ignore it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MappingChoice {
     pub strat: StrategyKind,
     pub chunk: Option<u32>,
+    /// MM-only B-tile column-block (J-dim) override.
+    pub jchunk: Option<u32>,
 }
 
 impl MappingChoice {
     /// The strategy with its default (maximal) chunk.
     pub fn of(strat: StrategyKind) -> Self {
-        MappingChoice { strat, chunk: None }
+        MappingChoice { strat, chunk: None, jchunk: None }
     }
 
     /// The static mixed-dataflow choice for `op` (Sec. III table).
@@ -52,10 +61,14 @@ impl MappingChoice {
 
 impl std::fmt::Display for MappingChoice {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self.chunk {
-            None => write!(f, "{}", self.strat),
-            Some(c) => write!(f, "{}/c{}", self.strat, c),
+        write!(f, "{}", self.strat)?;
+        if let Some(c) = self.chunk {
+            write!(f, "/c{c}")?;
         }
+        if let Some(j) = self.jchunk {
+            write!(f, "/j{j}")?;
+        }
+        Ok(())
     }
 }
 
@@ -146,6 +159,13 @@ fn bytes_per_elem_x16(p: Precision) -> u32 {
 /// Channel chunk for FF on CONV/PWCV: *all* output channels' weights for
 /// the chunk (`(F/lanes) × cc × K²` per lane) must fit the VRF weight
 /// partition, so inputs and weights both stream exactly once.
+///
+/// The chunk is capped at the largest PP multiple the partition fits. At
+/// very large F even the minimal PP-sized chunk overflows the partition;
+/// this helper still returns the PP floor to stay total, but the mapping
+/// is then a cost-model fiction ("weights stream exactly once" cannot
+/// hold) — [`ff_weights_resident`] is the residency gate code generation
+/// and the auto-tuner enforce before using FF on CONV/PWCV.
 pub fn ff_c_chunk(op: &OpDesc, cfg: &SpeedConfig) -> u32 {
     let pb = bytes_per_elem_x16(op.prec);
     let kk = op.ksize * op.ksize;
@@ -154,6 +174,33 @@ pub fn ff_c_chunk(op: &OpDesc, cfg: &SpeedConfig) -> u32 {
     let fit = budget / (per_lane_f * kk * pb).max(1);
     let pp = op.prec.pp();
     floor_to(fit.max(pp), pp).min(floor_to(op.c.max(pp), pp))
+}
+
+/// FF-on-CONV/PWCV weight residency: does the per-lane all-F weight slice
+/// of the *minimal* (PP-sized) channel chunk fit the VRF weight
+/// partition? When it does not, no chunk cap can restore residency (the
+/// overflow is driven by F, not by the chunk), FF's "weights fetched
+/// exactly once" cost model would be fiction, and the strategy is
+/// rejected with a typed spill at compile time instead (ROADMAP item:
+/// `ff_c_chunk` floored at PP even past the partition). DWCV's per-lane
+/// weight slice is PP × K² and always fits.
+pub fn ff_weights_resident(op: &OpDesc, cfg: &SpeedConfig) -> bool {
+    if op.kind == OpKind::Dwcv {
+        return true;
+    }
+    let pb = bytes_per_elem_x16(op.prec) as u64;
+    let kk = (op.ksize * op.ksize) as u64;
+    let per_lane_f = op.f.div_ceil(cfg.lanes).max(1) as u64;
+    let pp = op.prec.pp() as u64;
+    per_lane_f * kk * pp * pb <= partition_budget(cfg) as u64 * 16
+}
+
+/// Configuration-aware applicability: [`applicable`] plus the
+/// [`ff_weights_resident`] check — the strategies the auto-tuner may cost
+/// and code generation will accept for `op` on `cfg`.
+pub fn feasible(strat: StrategyKind, op: &OpDesc, cfg: &SpeedConfig) -> bool {
+    applicable(strat, op)
+        && (strat != StrategyKind::Ff || ff_weights_resident(op, cfg))
 }
 
 /// The chunk size the static mapping uses for `strat` over `op`: the
@@ -211,6 +258,58 @@ pub fn chunk_candidates(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> 
         let c = resolve_chunk(op, cfg, strat, Some(d / div));
         if c < d && !out.contains(&c) {
             out.push(c);
+        }
+    }
+    out
+}
+
+/// Largest useful MM B-tile column block for reduction chunk `kc`: a
+/// multiple of `TILE_C` whose `kc × jc` B slice still fits one vreg
+/// region (a wider block would split back into multiple VSALD images,
+/// recreating the per-tile structure it was meant to coalesce), capped at
+/// the operator's padded column count.
+pub fn mm_j_chunk_max(op: &OpDesc, cfg: &SpeedConfig, kc: u32) -> u32 {
+    let pb = bytes_per_elem_x16(op.prec) as u64;
+    let region = vreg_region(cfg) as u64 * 16;
+    let fit = (region / (kc as u64 * pb).max(1)) as u32;
+    let cols = op.n.div_ceil(cfg.tile_c) * cfg.tile_c;
+    floor_to(fit.max(cfg.tile_c), cfg.tile_c).min(cols.max(cfg.tile_c))
+}
+
+/// Clamp an MM B-tile column-block override into the range code
+/// generation honors: a `TILE_C` multiple in `[TILE_C, mm_j_chunk_max]`.
+/// `None` (or a non-MM strategy) keeps the static per-tile structure.
+pub fn resolve_jchunk(
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    strat: StrategyKind,
+    want: Option<u32>,
+    kc: u32,
+) -> Option<u32> {
+    if strat != StrategyKind::Mm || op.kind != OpKind::Mm {
+        return None;
+    }
+    let w = want?;
+    let maxj = mm_j_chunk_max(op, cfg, kc);
+    Some(floor_to(w.clamp(cfg.tile_c, maxj), cfg.tile_c))
+}
+
+/// Candidate B-tile column blocks the auto-tuner tries for MM (the J-dim
+/// arm of the chunk search, alongside [`chunk_candidates`]'s
+/// reduction-dim arm): 2× and 4× `TILE_C` plus the region-limited
+/// maximum, deduplicated, each strictly wider than the static per-tile
+/// load. Empty for conv strategies and for MMs too narrow to widen.
+pub fn jchunk_candidates(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Vec<u32> {
+    if strat != StrategyKind::Mm || op.kind != OpKind::Mm {
+        return Vec::new();
+    }
+    let kc = mm_k_chunk(op, cfg);
+    let maxj = mm_j_chunk_max(op, cfg, kc);
+    let mut out = Vec::new();
+    for want in [2 * cfg.tile_c, 4 * cfg.tile_c, maxj] {
+        let j = floor_to(want.clamp(cfg.tile_c, maxj), cfg.tile_c);
+        if j > cfg.tile_c && !out.contains(&j) {
+            out.push(j);
         }
     }
     out
@@ -498,5 +597,78 @@ mod tests {
         let big = OpDesc::conv(64, 64, 112, 112, 3, 1, 1, Precision::Int16);
         assert!(map_op(&small, &cfg(), StrategyKind::Ffcs).partials_in_vrf);
         assert!(!map_op(&big, &cfg(), StrategyKind::Ffcs).partials_in_vrf);
+    }
+
+    #[test]
+    fn ff_residency_boundary_at_large_f() {
+        // Reference config: budget×16 = (16384/3)×16 = 87376. INT8 3×3:
+        // per-lane slice at the minimal PP chunk is (F/4)·9·4·16 ≤ 87376
+        // ⟺ F/4 ≤ 151 — F = 604 is the last resident shape, 608 the
+        // first spilled one.
+        let cfg = cfg();
+        let resident = OpDesc::conv(64, 604, 14, 14, 3, 1, 1, Precision::Int8);
+        let spilled = OpDesc::conv(64, 608, 14, 14, 3, 1, 1, Precision::Int8);
+        assert!(ff_weights_resident(&resident, &cfg));
+        assert!(!ff_weights_resident(&spilled, &cfg));
+        assert!(feasible(StrategyKind::Ff, &resident, &cfg));
+        assert!(!feasible(StrategyKind::Ff, &spilled, &cfg));
+        // The other conv strategies never stage all-F weights and stay
+        // feasible regardless of F.
+        assert!(feasible(StrategyKind::Ffcs, &spilled, &cfg));
+        assert!(feasible(StrategyKind::Cf, &spilled, &cfg));
+        // The vgg16-class INT4 shape the ROADMAP named: PP = 16 pushes the
+        // minimal chunk past the partition even though `ff_c_chunk` floors
+        // at PP — exactly the fiction the residency gate closes.
+        let vgg_like = OpDesc::conv(512, 512, 14, 14, 3, 1, 1, Precision::Int4);
+        assert_eq!(ff_c_chunk(&vgg_like, &cfg), Precision::Int4.pp());
+        assert!(!ff_weights_resident(&vgg_like, &cfg));
+        // DWCV weights are PP×K² per lane: always resident.
+        let dw = OpDesc::dwcv(4096, 14, 14, 3, 1, 1, Precision::Int4);
+        assert!(ff_weights_resident(&dw, &cfg));
+        assert!(feasible(StrategyKind::Ff, &dw, &cfg));
+    }
+
+    #[test]
+    fn jchunk_resolution_and_candidates() {
+        let cfg = cfg();
+        // Wide MM: many column tiles, so the J-dim search has room.
+        let op = OpDesc::mm(16, 64, 192, Precision::Int8);
+        let kc = mm_k_chunk(&op, &cfg);
+        let maxj = mm_j_chunk_max(&op, &cfg, kc);
+        assert_eq!(maxj % cfg.tile_c, 0);
+        assert!(maxj >= cfg.tile_c);
+        // The widened B slice still fits one vreg region.
+        assert!(
+            op.prec.bytes_for(kc as u64 * maxj as u64) <= vreg_region(&cfg) as u64,
+            "kc={kc} maxj={maxj}"
+        );
+        // Resolution clamps into [TILE_C, maxj] as a TILE_C multiple.
+        assert_eq!(resolve_jchunk(&op, &cfg, StrategyKind::Mm, None, kc), None);
+        assert_eq!(
+            resolve_jchunk(&op, &cfg, StrategyKind::Mm, Some(1), kc),
+            Some(cfg.tile_c)
+        );
+        assert_eq!(
+            resolve_jchunk(&op, &cfg, StrategyKind::Mm, Some(u32::MAX), kc),
+            Some(maxj)
+        );
+        for want in [3u32, 7, 10, 1000] {
+            let j = resolve_jchunk(&op, &cfg, StrategyKind::Mm, Some(want), kc).unwrap();
+            assert_eq!(j % cfg.tile_c, 0, "want={want}");
+            assert!(j >= cfg.tile_c && j <= maxj, "want={want}: {j}");
+        }
+        // Candidates: strictly wider than the static per-tile load, deduped.
+        let cands = jchunk_candidates(&op, &cfg, StrategyKind::Mm);
+        assert!(!cands.is_empty(), "wide MM must offer J-dim candidates");
+        for (i, j) in cands.iter().enumerate() {
+            assert!(*j > cfg.tile_c && *j <= maxj && *j % cfg.tile_c == 0);
+            assert!(!cands[i + 1..].contains(j), "{j} duplicated");
+        }
+        // Conv strategies and narrow MMs have no J-dim to widen.
+        let conv = OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8);
+        assert!(jchunk_candidates(&conv, &cfg, StrategyKind::Ffcs).is_empty());
+        assert_eq!(resolve_jchunk(&conv, &cfg, StrategyKind::Ffcs, Some(8), 4), None);
+        let narrow = OpDesc::mm(8, 32, cfg.tile_c, Precision::Int8);
+        assert!(jchunk_candidates(&narrow, &cfg, StrategyKind::Mm).is_empty());
     }
 }

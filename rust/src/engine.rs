@@ -72,6 +72,9 @@ pub struct ProgramKey {
     /// Auto-tuner chunk override ([`MappingChoice::chunk`]); distinct
     /// chunks compile distinct streams and must cache separately.
     pub chunk: Option<u32>,
+    /// Auto-tuner MM B-tile column-block override
+    /// ([`MappingChoice::jchunk`]) — same cache-separation rule.
+    pub jchunk: Option<u32>,
     cfg: CfgSig,
 }
 
@@ -309,6 +312,7 @@ impl Engine {
             op: *op,
             strat: choice.strat,
             chunk: choice.chunk,
+            jchunk: choice.jchunk,
             cfg: CfgSig::of(&self.cfg),
         };
         if let Some(p) = self.programs.get(&key) {
@@ -456,7 +460,7 @@ impl<'e> Session<'e> {
     /// The mapping choice this session's policy assigns to `op` (None =
     /// not applicable under a fixed-strategy ablation policy).
     fn choice_for(&self, op: &OpDesc) -> Option<MappingChoice> {
-        if self.policy == Policy::Tuned {
+        if matches!(self.policy, Policy::Tuned | Policy::TunedOnline) {
             if let Some(plan) = &self.tuned {
                 if let Some(choice) = plan.choice_for(op) {
                     return Some(choice);
@@ -465,7 +469,15 @@ impl<'e> Session<'e> {
             // No plan attached / no tuned entry: static mixed fallback.
             return Some(MappingChoice::preferred(op));
         }
-        self.policy.strategy_for(op).map(MappingChoice::of)
+        // Fixed-strategy ablations skip operators the strategy cannot
+        // legally run — which since the FF weight-residency gate includes
+        // infeasible (spilling) shapes, not just the inapplicable ones:
+        // an `--policy ff` sweep must skip a huge-F CONV the same way it
+        // skips an MM, not die on the typed Layout spill.
+        self.policy
+            .strategy_for(op)
+            .filter(|s| crate::dataflow::feasible(*s, op, &self.engine.cfg))
+            .map(MappingChoice::of)
     }
 
     /// Execute a whole model at a precision; the engine's program cache

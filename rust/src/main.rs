@@ -8,7 +8,8 @@
 //! repro golden [--artifacts DIR]        three-way golden checks via PJRT
 //! repro run-model <name> [--prec 16|8|4|all] [--policy mixed|ffcs|cf|ff]
 //!                 [--quick] [--workers N]
-//! repro dse [--quick] [--workers N]     Fig. 14 sweep
+//! repro dse [--quick] [--workers N] [--tuned] [--out FILE]
+//!                                       Fig. 14 sweep (± per-point tuning)
 //! repro speed-bench [--quick] [--exact] [--out FILE] [--baseline FILE]
 //!                   [--write-baseline FILE] [--tolerance F]
 //!                                       perf harness -> BENCH_sim.json
@@ -88,12 +89,7 @@ fn dispatch(args: &[String]) -> Result<(), SpeedError> {
         "report" => cmd_report(rest),
         "golden" => cmd_golden(rest),
         "run-model" => cmd_run_model(rest),
-        "dse" => {
-            let workers = workers_opt(rest)?;
-            let (text, _) = report::fig14_with(workers, flag(rest, "--quick"));
-            println!("{text}");
-            Ok(())
-        }
+        "dse" => cmd_dse(rest),
         "speed-bench" => cmd_speed_bench(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "tune" => cmd_tune(rest),
@@ -121,7 +117,13 @@ commands:
                               run through the Engine/Session API
                               names: vgg16 resnet18 googlenet mobilenetv2
                                      vit_tiny vit_b16
-  dse [--quick] [--workers N] Fig. 14 design-space sweep
+  dse [--quick] [--workers N] [--tuned] [--out FILE]
+                              Fig. 14 design-space sweep; --tuned runs a
+                              per-point (strategy x chunk) mapping search
+                              alongside the static Sec. III mapping,
+                              reports both, verifies tuned <= static
+                              cycles at every point (exit 1 on violation),
+                              and --out writes the DSE_sweep.json artifact
   speed-bench [--quick] [--exact] [--out FILE] [--baseline FILE]
               [--write-baseline FILE] [--tolerance F]
                               run the perf harness; writes BENCH_sim.json
@@ -137,7 +139,12 @@ commands:
                               per-request stats digest that is identical for
                               any worker count / batching / --exact choice
                               (--tuned pre-tunes every model in the mix and
-                              serves them from the tuned-plan registry)
+                              serves them from the tuned-plan registry; a
+                              scenario mix entry with "policy":
+                              "tuned_online" instead tunes online — the
+                              first request for an uncovered model tunes on
+                              its worker and publishes the plan, later
+                              requests hit the shared registry)
   tune [--model M] [--prec 16|8|4] [--quick] [--no-chunks] [--exact]
        [--cache DIR] [--out FILE] [--no-verify]
                               empirical mixed-dataflow auto-tuner: search
@@ -329,6 +336,38 @@ fn cmd_run_model(args: &[String]) -> Result<(), SpeedError> {
         cache.hits,
         cache.misses
     );
+    Ok(())
+}
+
+fn cmd_dse(args: &[String]) -> Result<(), SpeedError> {
+    let workers = workers_opt(args)?;
+    let quick = flag(args, "--quick");
+    let tuned = flag(args, "--tuned");
+    let (text, points) = report::fig14_tuned_with(workers, quick, tuned);
+    println!("{text}");
+    if tuned {
+        // The acceptance gate: ties resolve to static inside the tuner,
+        // so a point where tuned costs more cycles is a defect and must
+        // fail the run (and the tune-smoke CI leg).
+        for p in &points {
+            let t = p.tuned.expect("tuned sweep fills every point");
+            if t.cycles > p.static_cycles {
+                return Err(SpeedError::Bench(format!(
+                    "DSE point {}L {}x{}: tuned {} cycles > static {}",
+                    p.cfg.lanes, p.cfg.tile_r, p.cfg.tile_c, t.cycles, p.static_cycles
+                )));
+            }
+        }
+        println!(
+            "tuned <= static cycles verified at all {} DSE points",
+            points.len()
+        );
+    }
+    if let Some(out) = opt(args, "--out") {
+        std::fs::write(out, speed_rvv::dse::sweep_json(&points, quick))
+            .map_err(|e| SpeedError::Bench(format!("writing {out}: {e}")))?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 

@@ -8,7 +8,7 @@
 use crate::ara::{ara_cost, AraParams};
 use crate::compiler::{execute_op, MemLayout};
 use crate::config::SpeedConfig;
-use crate::dataflow::applicable;
+use crate::dataflow::feasible;
 use crate::isa::StrategyKind;
 use crate::models::OpDesc;
 use crate::sim::Processor;
@@ -45,7 +45,7 @@ pub fn fig10_data(cfg: &SpeedConfig) -> Vec<Fig10Cell> {
     for (name, op) in super::benchmark_ops() {
         let ara = ara_cost(&op, &params).dram_total();
         for strat in [StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff] {
-            if !applicable(strat, &op) {
+            if !feasible(strat, &op, cfg) {
                 continue;
             }
             cells.push(Fig10Cell {

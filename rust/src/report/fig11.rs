@@ -8,7 +8,7 @@
 use crate::ara::{ara_cost, AraParams};
 use crate::compiler::{execute_op, MemLayout};
 use crate::config::{Precision, SpeedConfig};
-use crate::dataflow::applicable;
+use crate::dataflow::feasible;
 use crate::isa::StrategyKind;
 use crate::models::{OpDesc, OpKind};
 use crate::sim::Processor;
@@ -65,7 +65,7 @@ pub fn fig11_data(cfg: &SpeedConfig, sizes: &[u32]) -> Vec<Fig11Point> {
     for (name, op) in cases {
         let ara = ara_cost(&op, &params).ops_per_cycle(&op);
         for strat in [StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff] {
-            if !applicable(strat, &op) {
+            if !feasible(strat, &op, cfg) {
                 continue;
             }
             out.push(Fig11Point {

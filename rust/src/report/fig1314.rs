@@ -2,7 +2,7 @@
 
 use crate::config::SpeedConfig;
 use crate::coordinator::runner::default_workers;
-use crate::dse::{peak_area_eff, sweep_with, DsePoint};
+use crate::dse::{peak_area_eff, sweep_opts, DsePoint};
 use crate::metrics::{lane_area, speed_area};
 
 /// Fig. 13 text report: processor- and lane-level area breakdown of the
@@ -50,16 +50,39 @@ pub fn fig14() -> (String, Vec<DsePoint>) {
 /// Fig. 14 with an explicit sweep worker count and optional quick mode
 /// (1/4-scale workload).
 pub fn fig14_with(workers: usize, quick: bool) -> (String, Vec<DsePoint>) {
-    let points = sweep_with(workers, quick);
+    fig14_tuned_with(workers, quick, false)
+}
+
+/// [`fig14_with`] with an optional per-point mapping search (`repro dse
+/// --tuned`): the table gains tuned-cycle / tuned-efficiency columns and
+/// the winning mapping per point, and the summary reports the tuned peak
+/// alongside the static one.
+pub fn fig14_tuned_with(
+    workers: usize,
+    quick: bool,
+    tuned: bool,
+) -> (String, Vec<DsePoint>) {
+    let points = sweep_opts(workers, quick, tuned);
     let rows: Vec<Vec<String>> = points
         .iter()
         .map(|p| {
-            vec![
+            let mut row = vec![
                 format!("{}L {}x{}", p.cfg.lanes, p.cfg.tile_r, p.cfg.tile_c),
                 format!("{:.1}", p.gops),
                 format!("{:.2}", p.area_mm2),
                 format!("{:.1}", p.area_eff()),
-            ]
+            ];
+            if tuned {
+                let t = p.tuned.expect("tuned sweep fills every point");
+                row.push(format!("{:.1}", t.gops));
+                row.push(format!("{:.1}", p.best_area_eff()));
+                row.push(format!(
+                    "{}{}",
+                    t.choice,
+                    if t.cycles < p.static_cycles { " *" } else { "" }
+                ));
+            }
+            row
         })
         .collect();
     let peak = peak_area_eff(&points);
@@ -68,10 +91,18 @@ pub fn fig14_with(workers: usize, quick: bool) -> (String, Vec<DsePoint>) {
     let mut out = String::from(
         "Fig. 14 — DSE: CONV3x3 @16-bit across lanes x tile geometry\n",
     );
-    out.push_str(&super::render_table(
-        &["config", "GOPS", "area mm²", "GOPS/mm²"],
-        &rows,
-    ));
+    if tuned {
+        out.push_str(&super::render_table(
+            &["config", "GOPS", "area mm²", "GOPS/mm²", "tuned GOPS", "tuned GOPS/mm²",
+              "mapping"],
+            &rows,
+        ));
+    } else {
+        out.push_str(&super::render_table(
+            &["config", "GOPS", "area mm²", "GOPS/mm²"],
+            &rows,
+        ));
+    }
     out.push_str(&format!(
         "\nthroughput range {lo:.1}-{hi:.1} GOPS (paper 8.5-161.3); peak area \
          efficiency {:.1} GOPS/mm² at {:.1} GOPS on {}L {}x{} (paper 80.3 at 96.4, \
@@ -82,6 +113,36 @@ pub fn fig14_with(workers: usize, quick: bool) -> (String, Vec<DsePoint>) {
         peak.cfg.tile_r,
         peak.cfg.tile_c
     ));
+    if tuned {
+        let improved = points
+            .iter()
+            .filter(|p| p.tuned.is_some_and(|t| t.cycles < p.static_cycles))
+            .count();
+        let violations = points
+            .iter()
+            .filter(|p| p.tuned.is_some_and(|t| t.cycles > p.static_cycles))
+            .count();
+        let best = points
+            .iter()
+            .max_by(|a, b| a.best_area_eff().partial_cmp(&b.best_area_eff()).unwrap())
+            .expect("non-empty sweep");
+        out.push_str(&format!(
+            "tuned sweep: mapping search improved {improved}/{} points \
+             (* marks them); tuned peak area efficiency {:.1} GOPS/mm² on \
+             {}L {}x{}; {}\n",
+            points.len(),
+            best.best_area_eff(),
+            best.cfg.lanes,
+            best.cfg.tile_r,
+            best.cfg.tile_c,
+            if violations == 0 {
+                "tuned cycles <= static cycles held at every point".to_string()
+            } else {
+                // cmd_dse turns this into a typed nonzero exit right after.
+                format!("TUNER DEFECT: tuned > static at {violations} point(s)")
+            }
+        ));
+    }
     (out, points)
 }
 

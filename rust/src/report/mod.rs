@@ -17,7 +17,7 @@ pub mod table23;
 pub use fig10::fig10;
 pub use fig11::fig11;
 pub use fig12::{fig12, fig12_with};
-pub use fig1314::{fig13, fig14, fig14_with};
+pub use fig1314::{fig13, fig14, fig14_tuned_with, fig14_with};
 pub use fig2::fig2;
 pub use table1::{table1, table1_with};
 pub use table23::{table2, table3};

@@ -1,12 +1,88 @@
-//! Minimal JSON parser for the artifact manifest and golden vectors.
+//! Minimal JSON parser and emission/digest helpers.
 //!
 //! The deployment image vendors no serde; the AOT manifest format is
 //! small and fixed (objects, arrays, strings, integers/floats, bools), so
 //! a compact recursive-descent parser keeps the runtime self-contained.
+//!
+//! This module is also the one home of the crate's hand-rolled JSON
+//! *emission* helpers ([`jstr`], [`jf`], [`jopt`]) and of the stable
+//! [`Fnv64`] hasher — `serve::batch` (batch keys), the serve stats
+//! digest, `tune::ops_digest`, and the bench report writers all used to
+//! carry private copies; they now share these. Digest compatibility with
+//! the pre-consolidation implementations is locked by the unit tests
+//! below (published FNV-1a vectors plus a byte-for-byte comparison
+//! against the legacy per-word fold).
 
 use std::collections::BTreeMap;
+use std::hash::Hasher;
 
 use crate::error::SpeedError;
+
+/// FNV-1a, 64-bit: a tiny deterministic hasher. The std `DefaultHasher`
+/// is not guaranteed stable across releases, while batching keys, the
+/// serve-bench stats digest, and the tuned-plan cache file names must be
+/// reproducible across platforms and releases.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher for Fnv64 {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+}
+
+/// JSON-escape a string into a quoted literal.
+pub fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format a finite float for JSON (non-finite values serialize as 0).
+pub fn jf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0".into()
+    }
+}
+
+/// An optional unsigned integer as a JSON number or `null`.
+pub fn jopt(v: Option<u32>) -> String {
+    match v {
+        None => "null".into(),
+        Some(x) => x.to_string(),
+    }
+}
 
 /// Shorthand: a parse-class [`SpeedError`].
 fn perr(m: impl Into<String>) -> SpeedError {
@@ -278,5 +354,60 @@ mod tests {
     fn large_int_data_roundtrip() {
         let j = parse("[2147483647, -2147483648]").unwrap();
         assert_eq!(j.as_i64_vec().unwrap(), vec![i32::MAX as i64, i32::MIN as i64]);
+    }
+
+    fn fnv(bytes: &[u8]) -> u64 {
+        let mut h = Fnv64::new();
+        h.write(bytes);
+        h.finish()
+    }
+
+    #[test]
+    fn fnv64_matches_published_vectors() {
+        // The canonical FNV-1a 64-bit test vectors (Fowler/Noll/Vo): any
+        // deviation would silently invalidate every committed batch key,
+        // stats digest, and tuned-plan cache file name.
+        assert_eq!(fnv(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn fnv64_matches_the_legacy_per_word_fold() {
+        // `tune::ops_digest` used to fold u32 words through a private
+        // byte-at-a-time FNV-1a; the consolidated hasher must reproduce
+        // those digests exactly so existing cache file names stay valid.
+        fn legacy_fold_u32(mut h: u64, v: u32) -> u64 {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+        let words = [0u32, 1, 16, 0xDEAD_BEEF, u32::MAX, 0x0102_0304];
+        let mut legacy = 0xcbf2_9ce4_8422_2325u64;
+        let mut new = Fnv64::new();
+        for w in words {
+            legacy = legacy_fold_u32(legacy, w);
+            new.write(&w.to_le_bytes());
+        }
+        assert_eq!(new.finish(), legacy);
+    }
+
+    #[test]
+    fn emission_helpers() {
+        assert_eq!(jstr("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(jstr("\u{1}"), "\"\\u0001\"");
+        assert_eq!(jf(1.5), "1.500000");
+        assert_eq!(jf(f64::NAN), "0");
+        assert_eq!(jf(f64::INFINITY), "0");
+        assert_eq!(jopt(None), "null");
+        assert_eq!(jopt(Some(12)), "12");
+        // Emitted strings parse back through this module's own parser.
+        let doc = format!("{{ \"s\": {}, \"f\": {}, \"o\": {} }}",
+                          jstr("x\ny"), jf(2.25), jopt(Some(7)));
+        let j = parse(&doc).unwrap();
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("x\ny"));
+        assert_eq!(j.get("f").and_then(Json::as_f64), Some(2.25));
+        assert_eq!(j.get("o").and_then(Json::as_i64), Some(7));
     }
 }

@@ -18,8 +18,9 @@ use crate::engine::Engine;
 use crate::error::Result;
 use crate::isa::StrategyKind;
 use crate::models::OpDesc;
+use crate::runtime::json::Fnv64;
 use crate::sim::SimStats;
-use crate::tune::TunedPlans;
+use crate::tune::{tune_model_on, TuneOptions, TunedPlans};
 
 use super::RequestKind;
 
@@ -56,9 +57,22 @@ impl BatchKey {
     }
 }
 
+/// What online tuning did for one executed request (pool metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TuneEvent {
+    /// Not a [`Policy::TunedOnline`] model request.
+    None,
+    /// Served from an already-published covering plan in the registry.
+    PlanHit,
+    /// First request for an uncovered `(model, precision, config-sig)`
+    /// key: the worker ran the tuning search and published the plan.
+    Stall,
+}
+
 /// Execute one request (or the representative of a micro-batch) on a
-/// quiesced worker engine. Returns the deterministic per-request stats
-/// plus the number of vector operators executed.
+/// quiesced worker engine. Returns the deterministic per-request stats,
+/// the number of vector operators executed, and the online-tuning
+/// disposition.
 ///
 /// `stats.precision_switches` is rewritten to the request's *internal*
 /// switch count (see the `serve` module docs): the boundary switch a
@@ -70,18 +84,63 @@ impl BatchKey {
 /// plan degrades to the static mixed mapping (never an error). The
 /// registry is fixed for a pool's lifetime, so same-key requests resolve
 /// the same plan and micro-batching stays semantics-preserving.
+///
+/// A [`Policy::TunedOnline`] model request additionally closes the loop:
+/// when the registry has no plan *covering this model's operators* for
+/// the engine's configuration, the worker tunes the model right here
+/// ([`tune_model_on`] — a *tune stall*, wall time only), publishes the
+/// plan, and serves the request from the published (merge-resolved)
+/// registry entry. Tuning is deterministic and every execution is
+/// quiesced, so a request's stats are bit-identical whether it stalled,
+/// hit the registry, or raced another worker's concurrent tune of the
+/// same key.
 pub(crate) fn execute_request(
     engine: &mut Engine,
     kind: &RequestKind,
     tuned: &TunedPlans,
-) -> Result<(SimStats, usize)> {
+) -> Result<(SimStats, usize, TuneEvent)> {
     engine.quiesce();
     match kind {
         RequestKind::Model { model, prec, policy } => {
-            let plan = if *policy == Policy::Tuned {
-                tuned.get(model.name, *prec, engine.config())
-            } else {
-                None
+            let mut event = TuneEvent::None;
+            let plan = match policy {
+                Policy::Tuned => tuned.get(model.name, *prec, engine.config()),
+                Policy::TunedOnline => {
+                    // Coverage must be checked against the ops *at the
+                    // request precision* (exactly what `tune_model_on`
+                    // tunes and `run_model` executes): `OpDesc` equality
+                    // includes `prec`, so comparing raw `model.ops` would
+                    // never match a plan tuned at a different precision
+                    // and every such request would re-tune.
+                    let typed = model.at_precision(*prec);
+                    let covering = tuned
+                        .get(model.name, *prec, engine.config())
+                        .filter(|p| {
+                            typed.ops.iter().all(|op| p.choice_for(op).is_some())
+                        });
+                    match covering {
+                        Some(p) => {
+                            event = TuneEvent::PlanHit;
+                            Some(p)
+                        }
+                        None => {
+                            // The worker's engine (in the pool's exec
+                            // mode) is the search oracle; its program
+                            // cache keeps every candidate compilation for
+                            // the replays that follow.
+                            let plan = tune_model_on(
+                                engine,
+                                model,
+                                *prec,
+                                &TuneOptions::default(),
+                            )?;
+                            event = TuneEvent::Stall;
+                            engine.quiesce();
+                            Some(tuned.insert(plan))
+                        }
+                    }
+                }
+                _ => None,
             };
             let mut session = engine.session().with_policy(*policy);
             if let Some(plan) = plan {
@@ -91,12 +150,12 @@ pub(crate) fn execute_request(
             let mut stats = r.total.clone();
             stats.precision_switches =
                 intra_request_switches(r.layers.iter().map(|l| l.op.prec));
-            Ok((stats, r.layers.len()))
+            Ok((stats, r.layers.len(), event))
         }
         RequestKind::Op { op, strat } => {
             let (mut stats, _) = engine.run_op(op, *strat, false)?;
             stats.precision_switches = 0;
-            Ok((stats, 1))
+            Ok((stats, 1, TuneEvent::None))
         }
     }
 }
@@ -115,30 +174,6 @@ fn intra_request_switches(mut precs: impl Iterator<Item = Precision>) -> u64 {
         }
     }
     switches
-}
-
-/// FNV-1a, 64-bit: a tiny deterministic hasher (the std `DefaultHasher`
-/// is not guaranteed stable across releases, and batching keys plus the
-/// serve-bench digest must be reproducible).
-pub(crate) struct Fnv64(u64);
-
-impl Fnv64 {
-    pub(crate) fn new() -> Self {
-        Fnv64(0xcbf2_9ce4_8422_2325)
-    }
-}
-
-impl Hasher for Fnv64 {
-    fn finish(&self) -> u64 {
-        self.0
-    }
-
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
-        }
-    }
 }
 
 #[cfg(test)]
@@ -211,14 +246,14 @@ mod tests {
             op: OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int8),
             strat: StrategyKind::Ffcs,
         };
-        let (a, la) = execute_request(&mut engine, &kind, &tuned).unwrap();
+        let (a, la, _) = execute_request(&mut engine, &kind, &tuned).unwrap();
         // Interleave unrelated work at another precision, then repeat.
         let other = RequestKind::Op {
             op: OpDesc::mm(6, 12, 6, Precision::Int16),
             strat: StrategyKind::Mm,
         };
         execute_request(&mut engine, &other, &tuned).unwrap();
-        let (b, lb) = execute_request(&mut engine, &kind, &tuned).unwrap();
+        let (b, lb, _) = execute_request(&mut engine, &kind, &tuned).unwrap();
         assert_eq!(a, b, "quiesce + switch normalization make replays bit-identical");
         assert_eq!(la, lb);
     }
@@ -240,9 +275,47 @@ mod tests {
             policy: Policy::Tuned,
         };
         let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
-        let (a, la) = execute_request(&mut engine, &mixed, &tuned).unwrap();
-        let (b, lb) = execute_request(&mut engine, &tuned_kind, &tuned).unwrap();
+        let (a, la, ea) = execute_request(&mut engine, &mixed, &tuned).unwrap();
+        let (b, lb, eb) = execute_request(&mut engine, &tuned_kind, &tuned).unwrap();
         assert_eq!(a, b);
         assert_eq!(la, lb);
+        assert_eq!(ea, TuneEvent::None);
+        assert_eq!(eb, TuneEvent::None);
+    }
+
+    #[test]
+    fn tuned_online_stalls_once_then_hits_and_stays_bit_identical() {
+        let registry = TunedPlans::new();
+        let model = downscale(&model_by_name("mobilenetv2").unwrap(), 16);
+        let kind = RequestKind::Model {
+            model: model.clone(),
+            prec: Precision::Int8,
+            policy: Policy::TunedOnline,
+        };
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        // First execution: uncovered key — the worker tunes and publishes.
+        let (a, la, ea) = execute_request(&mut engine, &kind, &registry).unwrap();
+        assert_eq!(ea, TuneEvent::Stall);
+        assert_eq!(registry.len(), 1);
+        // Second execution: served from the shared registry, bit-identical.
+        let (b, lb, eb) = execute_request(&mut engine, &kind, &registry).unwrap();
+        assert_eq!(eb, TuneEvent::PlanHit);
+        assert_eq!(a, b, "stall vs registry replay must be bit-identical");
+        assert_eq!(la, lb);
+        // A second engine (another worker) sees the published plan too.
+        let mut other = Engine::new(SpeedConfig::reference()).unwrap();
+        let (c, lc, ec) = execute_request(&mut other, &kind, &registry).unwrap();
+        assert_eq!(ec, TuneEvent::PlanHit);
+        assert_eq!(a, c);
+        assert_eq!(la, lc);
+        // TunedOnline is never slower than the static mixed mapping.
+        let mixed_kind = RequestKind::Model {
+            model,
+            prec: Precision::Int8,
+            policy: Policy::Mixed,
+        };
+        let (m, _, _) = execute_request(&mut engine, &mixed_kind, &registry).unwrap();
+        assert_eq!(a.macs, m.macs);
+        assert!(a.cycles <= m.cycles, "online {} > mixed {}", a.cycles, m.cycles);
     }
 }

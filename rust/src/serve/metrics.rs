@@ -5,6 +5,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::engine::CacheStats;
+use crate::runtime::json::{jf, jstr};
 
 use super::scenario::XorShift64;
 
@@ -33,6 +34,12 @@ struct Core {
     batches: u64,
     /// Requests that shared a batch with at least one other request.
     coalesced: u64,
+    /// Online tuning searches performed by workers (`Policy::TunedOnline`
+    /// executions that found no covering plan in the registry).
+    tune_stalls: u64,
+    /// `Policy::TunedOnline` executions served from an already-published
+    /// covering plan in the shared registry.
+    plan_hits: u64,
     /// Bounded latency sample (see [`LATENCY_SAMPLE_CAP`]).
     lat_us: Vec<u64>,
     /// Total finished requests observed (reservoir denominator).
@@ -73,6 +80,14 @@ impl ServeMetrics {
         if size > 1 {
             c.coalesced += size;
         }
+    }
+
+    pub(crate) fn record_tune_stall(&self) {
+        self.lock().tune_stalls += 1;
+    }
+
+    pub(crate) fn record_plan_hit(&self) {
+        self.lock().plan_hits += 1;
     }
 
     pub(crate) fn record_finished(&self, ok: bool, latency: Duration) {
@@ -117,6 +132,8 @@ impl ServeMetrics {
             failed: u64,
             batches: u64,
             coalesced: u64,
+            tune_stalls: u64,
+            plan_hits: u64,
             lat_seen: u64,
             lat_sum: u64,
             lat_max: u64,
@@ -131,6 +148,8 @@ impl ServeMetrics {
                     failed: c.failed,
                     batches: c.batches,
                     coalesced: c.coalesced,
+                    tune_stalls: c.tune_stalls,
+                    plan_hits: c.plan_hits,
                     lat_seen: c.lat_seen,
                     lat_sum: c.lat_sum,
                     lat_max: c.lat_max,
@@ -153,6 +172,8 @@ impl ServeMetrics {
             in_flight: c.submitted.saturating_sub(c.completed + c.failed),
             batches: c.batches,
             coalesced: c.coalesced,
+            tune_stalls: c.tune_stalls,
+            plan_hits: c.plan_hits,
             wall_s,
             throughput_rps: if wall_s > 0.0 {
                 (c.completed + c.failed) as f64 / wall_s
@@ -205,6 +226,19 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// Requests that shared a batch with at least one other request.
     pub coalesced: u64,
+    /// Online tuning searches performed by workers — `Policy::TunedOnline`
+    /// executions that found no covering plan in the shared registry and
+    /// tuned on the spot (the *tune stall* of the online-tuning loop).
+    /// Serialized same-key traffic pays exactly one stall per `(model,
+    /// precision, config-sig)` key; simultaneous first requests on
+    /// different workers may each tune before the first publish lands
+    /// (deterministic and merge-resolved — wasted wall time, never wrong
+    /// results), in which case each search is counted.
+    pub tune_stalls: u64,
+    /// `Policy::TunedOnline` executions served from an already-published
+    /// covering plan in the shared [`TunedPlans`](crate::tune::TunedPlans)
+    /// registry.
+    pub plan_hits: u64,
     /// Seconds since the pool started.
     pub wall_s: f64,
     /// Finished requests per second of pool lifetime.
@@ -284,6 +318,8 @@ impl MetricsSnapshot {
             false,
         );
         field("steals", self.steals.to_string(), false);
+        field("tune_stalls", self.tune_stalls.to_string(), false);
+        field("plan_hits", self.plan_hits.to_string(), false);
         field("affinity_hits", self.affinity_hits.to_string(), false);
         field("affinity_misses", self.affinity_misses.to_string(), false);
         field("affinity_rate", jf(self.affinity_rate()), false);
@@ -303,32 +339,6 @@ impl MetricsSnapshot {
         s.push_str(&format!("{indent}}}"));
         s
     }
-}
-
-/// Format a finite float for JSON (non-finite values serialize as 0).
-pub(crate) fn jf(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x:.6}")
-    } else {
-        "0".into()
-    }
-}
-
-/// JSON-escape a string.
-pub(crate) fn jstr(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
 }
 
 #[cfg(test)]
@@ -382,6 +392,9 @@ mod tests {
         m.record_rejected();
         m.record_batch(3);
         m.record_batch(1);
+        m.record_tune_stall();
+        m.record_plan_hit();
+        m.record_plan_hit();
         for i in 0..4 {
             m.record_finished(true, Duration::from_micros(100 * (i + 1)));
         }
@@ -406,6 +419,8 @@ mod tests {
         assert_eq!(snap.in_flight, 0);
         assert_eq!(snap.batches, 2);
         assert_eq!(snap.coalesced, 3);
+        assert_eq!(snap.tune_stalls, 1);
+        assert_eq!(snap.plan_hits, 2);
         assert_eq!(snap.p50_us, 300);
         assert_eq!(snap.max_us, 900);
         assert!((snap.affinity_rate() - 0.6).abs() < 1e-12);
@@ -422,5 +437,7 @@ mod tests {
             Some(4)
         );
         assert_eq!(doc.get("precision_switches").and_then(Json::as_i64), Some(7));
+        assert_eq!(doc.get("tune_stalls").and_then(Json::as_i64), Some(1));
+        assert_eq!(doc.get("plan_hits").and_then(Json::as_i64), Some(2));
     }
 }

@@ -29,6 +29,15 @@
 //! * **Scenario files** ([`Scenario`]) — JSON workload descriptions
 //!   (model mix, precision mix, deterministic arrival pattern + seed)
 //!   under `bench/scenarios/`, driven by `repro serve-bench`.
+//! * **Online first-request tuning** — a model request under
+//!   [`Policy::TunedOnline`](crate::coordinator::Policy::TunedOnline)
+//!   (scenario `"policy": "tuned_online"`) consults the pool's shared
+//!   [`TunedPlans`](crate::tune::TunedPlans) registry; the first request
+//!   for an uncovered `(model, precision, config-sig)` key tunes on the
+//!   owning worker (a *tune stall*, counted in
+//!   [`MetricsSnapshot::tune_stalls`]) and publishes the plan, and every
+//!   later request replays it ([`MetricsSnapshot::plan_hits`]). Only the
+//!   stalling worker's lane pays the search; other lanes keep serving.
 //!
 //! # Determinism contract
 //!
@@ -72,8 +81,7 @@ pub use metrics::MetricsSnapshot;
 pub use pool::{ServeOptions, ServePool, Ticket};
 pub use scenario::{Arrival, MixEntry, Scenario, Workload, XorShift64};
 
-use batch::Fnv64;
-use metrics::{jf, jstr};
+use crate::runtime::json::{jf, jstr, Fnv64};
 
 /// What one request asks the pool to run (timing/traffic simulation; the
 /// functional path is certified separately by the golden checks).
@@ -289,6 +297,12 @@ impl ServeBenchReport {
             m.affinity_misses,
             m.precision_switches
         ));
+        if m.tune_stalls + m.plan_hits > 0 {
+            s.push_str(&format!(
+                "  online tune: {} stall(s), {} plan-registry hit(s)\n",
+                m.tune_stalls, m.plan_hits
+            ));
+        }
         s.push_str(&format!(
             "  programs:   {} compiled, cache {:.0}% hit ({} shared)\n",
             m.compiled_programs,

@@ -22,7 +22,7 @@ use crate::error::{Result, SpeedError};
 use crate::sim::ExecMode;
 use crate::tune::TunedPlans;
 
-use super::batch::{execute_request, BatchKey};
+use super::batch::{execute_request, BatchKey, TuneEvent};
 use super::metrics::{SchedCounters, ServeMetrics};
 use super::scheduler::{Job, SchedState};
 use super::{Completion, MetricsSnapshot, Request, RequestKind, RequestResult};
@@ -346,10 +346,11 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
         shared.space_cv.notify_all();
 
         let kind = batch[0].req.kind.clone();
-        let executed = match catch_unwind(AssertUnwindSafe(|| {
+        let (executed, tune_event) = match catch_unwind(AssertUnwindSafe(|| {
             execute_request(&mut engine, &kind, &shared.tuned)
         })) {
-                Ok(r) => r,
+                Ok(Ok((stats, layers, event))) => (Ok((stats, layers)), event),
+                Ok(Err(e)) => (Err(e), TuneEvent::None),
                 Err(payload) => {
                     // The engine's internal state is unknowable after a
                     // panic: preserve its accounting, rebuild it (the
@@ -362,13 +363,25 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
                     lost.switches += engine.precision_switches();
                     lost.programs += engine.compiled_programs();
                     engine = build_engine(&shared);
-                    Err(SpeedError::Serve(format!(
-                        "worker {w} panicked serving {}: {}",
-                        kind.label(),
-                        panic_msg(payload.as_ref())
-                    )))
+                    (
+                        Err(SpeedError::Serve(format!(
+                            "worker {w} panicked serving {}: {}",
+                            kind.label(),
+                            panic_msg(payload.as_ref())
+                        ))),
+                        TuneEvent::None,
+                    )
                 }
             };
+        // Online-tuning accounting: one event per executed batch (the
+        // batch runs the search / registry lookup once, whatever its
+        // size). The stall happened on this worker's thread only — other
+        // lanes kept serving throughout.
+        match tune_event {
+            TuneEvent::Stall => shared.metrics.record_tune_stall(),
+            TuneEvent::PlanHit => shared.metrics.record_plan_hit(),
+            TuneEvent::None => {}
+        }
 
         let n = batch.len();
         shared.metrics.record_batch(n as u64);

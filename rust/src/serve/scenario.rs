@@ -26,7 +26,8 @@
 //!
 //! Mix entries are drawn per request with probability proportional to
 //! `weight`. Model entries accept `downscale` (spatial/token reduction
-//! via the Fig. 12 harness) and `policy` (`mixed|ffcs|cf|ff`); operator
+//! via the Fig. 12 harness) and `policy`
+//! (`mixed|ffcs|cf|ff|tuned|tuned_online`); operator
 //! entries accept the dimensions of their kind (`mm`: `m,k,n`; `conv`:
 //! `c,f,h,w,ksize[,stride,pad]`; `pwcv`: `c,f,h,w`; `dwcv`:
 //! `c,h,w,ksize[,stride,pad]`) and an optional explicit `strat`.
@@ -324,8 +325,12 @@ fn parse_policy(s: &str) -> Result<Policy> {
         // Serve from the pool's tuned-plan registry (falls back to the
         // static mixed mapping for operators without a tuned entry).
         "tuned" => Ok(Policy::Tuned),
+        // Online first-request tuning: an uncovered (model, precision,
+        // config-sig) key tunes on the owning worker and publishes the
+        // plan to the pool's shared registry for every later request.
+        "tuned_online" => Ok(Policy::TunedOnline),
         other => Err(perr(format!(
-            "unknown policy '{other}' (mixed|ffcs|cf|ff|tuned)"
+            "unknown policy '{other}' (mixed|ffcs|cf|ff|tuned|tuned_online)"
         ))),
     }
 }
@@ -541,6 +546,27 @@ mod tests {
             "arrival": { "pattern": "warp" },
             "mix": [ { "op": "mm", "m": 2, "k": 2, "n": 2, "prec": 8 } ] }"#;
         assert!(Scenario::from_json(bad_arrival).is_err());
+    }
+
+    #[test]
+    fn tuned_online_policy_parses() {
+        let sc = r#"{ "requests": 2, "mix": [
+            { "model": "mobilenetv2", "prec": 8, "downscale": 4,
+              "policy": "tuned_online" } ] }"#;
+        let sc = Scenario::from_json(sc).unwrap();
+        assert_eq!(sc.mix[0].policy, Policy::TunedOnline);
+        let kinds = sc.generate(false).unwrap();
+        assert!(matches!(
+            &kinds[0],
+            RequestKind::Model { policy: Policy::TunedOnline, .. }
+        ));
+        // Unknown policies still fail fast, naming the accepted set.
+        let bad = r#"{ "requests": 1, "mix": [
+            { "model": "mobilenetv2", "prec": 8, "policy": "tuned_offline" } ] }"#;
+        match Scenario::from_json(bad) {
+            Err(SpeedError::Parse(m)) => assert!(m.contains("tuned_online"), "{m}"),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

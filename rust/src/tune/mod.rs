@@ -7,11 +7,14 @@
 //! per-feature-map-block weight refetch on every block, while FF keeps all
 //! weights resident and streams them exactly once. Instead of extending
 //! the analytic table, this module measures: it enumerates every
-//! applicable `(strategy × chunk-size)` mapping candidate
-//! ([`dataflow::applicable`], [`dataflow::chunk_candidates`]), costs each
-//! one on the fast-path cycle simulator ([`ExecMode::Batch`] — bit-exact
-//! vs per-instruction mode, so the oracle is the machine itself), and
-//! records the winner per operator in a [`TunedPlan`].
+//! *feasible* `(strategy × chunk)` mapping candidate
+//! ([`dataflow::feasible`] — the applicability matrix plus the FF
+//! weight-residency gate — with [`dataflow::chunk_candidates`] on the
+//! reduction/channel axis and [`dataflow::jchunk_candidates`] on the MM
+//! B-tile column axis), costs each one on the fast-path cycle simulator
+//! ([`ExecMode::Batch`] — bit-exact vs per-instruction mode, so the
+//! oracle is the machine itself), and records the winner per operator in
+//! a [`TunedPlan`].
 //!
 //! Tuning is **semantics-preserving by construction**: strategies and
 //! chunk sizes only reorder/partition the same arithmetic, so every
@@ -46,7 +49,7 @@ use crate::error::{Result, SpeedError};
 use crate::isa::StrategyKind;
 use crate::models::ops::{OpDesc, OpKind};
 use crate::models::zoo::Model;
-use crate::runtime::json::{parse, Json};
+use crate::runtime::json::{jopt, jstr, parse, Fnv64, Json};
 use crate::sim::ExecMode;
 
 fn perr(m: impl Into<String>) -> SpeedError {
@@ -71,6 +74,20 @@ impl TunedConfigSig {
             tile_r: cfg.tile_r,
             tile_c: cfg.tile_c,
             vrf_kib: cfg.vrf_kib,
+        }
+    }
+
+    /// A full configuration carrying this signature's code-shaping fields
+    /// (timing fields from the reference instance). Mapping feasibility —
+    /// [`dataflow::feasible`] — depends only on the signature fields, so
+    /// this is sufficient to validate a plan document's entries.
+    fn as_config(&self) -> SpeedConfig {
+        SpeedConfig {
+            lanes: self.lanes,
+            tile_r: self.tile_r,
+            tile_c: self.tile_c,
+            vrf_kib: self.vrf_kib,
+            ..SpeedConfig::reference()
         }
     }
 }
@@ -184,7 +201,8 @@ impl TunedPlan {
                 "    {{ \"kind\": {}, \"m\": {}, \"k\": {}, \"n\": {}, \"c\": {}, \
                  \"f\": {}, \"h\": {}, \"w\": {}, \"ksize\": {}, \"stride\": {}, \
                  \"pad\": {}, \"count\": {}, \"strat\": {}, \"chunk\": {}, \
-                 \"cycles\": {}, \"static_strat\": {}, \"static_chunk\": {}, \
+                 \"jchunk\": {}, \"cycles\": {}, \"static_strat\": {}, \
+                 \"static_chunk\": {}, \"static_jchunk\": {}, \
                  \"static_cycles\": {}, \"candidates\": {} }}{}\n",
                 jstr(kind_name(o.kind)),
                 o.m,
@@ -202,9 +220,11 @@ impl TunedPlan {
                 // strat_from parses back.
                 jstr(&t.choice.strat.to_string()),
                 jopt(t.choice.chunk),
+                jopt(t.choice.jchunk),
                 t.cycles,
                 jstr(&t.static_choice.strat.to_string()),
                 jopt(t.static_choice.chunk),
+                jopt(t.static_choice.jchunk),
                 t.static_cycles,
                 t.candidates,
                 if i + 1 < self.ops.len() { "," } else { "" }
@@ -255,7 +275,7 @@ impl TunedPlan {
             .ok_or_else(|| perr("tuned plan needs an \"ops\" array"))?;
         let mut ops = Vec::with_capacity(ops_json.len());
         for e in ops_json {
-            ops.push(parse_op_tuning(e, prec)?);
+            ops.push(parse_op_tuning(e, prec, &cfg)?);
         }
         Ok(TunedPlan { model, prec, cfg, search_chunks, ops })
     }
@@ -311,30 +331,7 @@ fn strat_from(s: &str) -> Result<StrategyKind> {
     }
 }
 
-fn jstr(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
-}
-
-fn jopt(v: Option<u32>) -> String {
-    match v {
-        None => "null".into(),
-        Some(x) => x.to_string(),
-    }
-}
-
-fn parse_op_tuning(e: &Json, prec: Precision) -> Result<OpTuning> {
+fn parse_op_tuning(e: &Json, prec: Precision, sig: &TunedConfigSig) -> Result<OpTuning> {
     let kind = kind_from(
         e.get("kind")
             .and_then(Json::as_str)
@@ -386,12 +383,24 @@ fn parse_op_tuning(e: &Json, prec: Precision) -> Result<OpTuning> {
         pad: dim("pad")?,
     };
     op.validate()?;
-    let choice = MappingChoice { strat: strat("strat")?, chunk: chunk("chunk")? };
-    let static_choice =
-        MappingChoice { strat: strat("static_strat")?, chunk: chunk("static_chunk")? };
-    if !dataflow::applicable(choice.strat, &op) {
+    let choice = MappingChoice {
+        strat: strat("strat")?,
+        chunk: chunk("chunk")?,
+        // Absent in pre-J-dim plan documents: parses as None.
+        jchunk: chunk("jchunk")?,
+    };
+    let static_choice = MappingChoice {
+        strat: strat("static_strat")?,
+        chunk: chunk("static_chunk")?,
+        jchunk: chunk("static_jchunk")?,
+    };
+    // Feasibility (applicability + FF weight residency) is validated
+    // against the plan's own configuration signature, so a stale document
+    // naming a mapping code generation would reject fails at load time —
+    // never mid-request.
+    if !dataflow::feasible(choice.strat, &op, &sig.as_config()) {
         return Err(perr(format!(
-            "tuned strategy {} not applicable to {}",
+            "tuned strategy {} not feasible for {} on the plan's configuration",
             choice.strat, op.kind
         )));
     }
@@ -406,20 +415,16 @@ fn parse_op_tuning(e: &Json, prec: Precision) -> Result<OpTuning> {
     })
 }
 
-/// FNV-1a fold of one u32 (the plan cache needs a digest that is stable
-/// across platforms and releases; `std`'s hashers are not).
-fn fnv_u32(mut h: u64, v: u32) -> u64 {
-    for b in v.to_le_bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
-    }
-    h
-}
-
 /// Stable digest over an operator sequence — the identity of a *shape
 /// variant* (a downscaled zoo model digests differently from its
-/// full-size original even though both keep the model name).
+/// full-size original even though both keep the model name). Runs on the
+/// crate-wide [`Fnv64`] hasher; byte-for-byte compatible with the private
+/// per-word fold this module carried before the consolidation (locked by
+/// `digest_matches_pre_consolidation_fold` below), so existing cache file
+/// names stay valid.
 pub fn ops_digest<'a>(ops: impl IntoIterator<Item = &'a OpDesc>) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    use std::hash::Hasher;
+    let mut h = Fnv64::new();
     for op in ops {
         for v in [
             op.kind as u32,
@@ -435,10 +440,10 @@ pub fn ops_digest<'a>(ops: impl IntoIterator<Item = &'a OpDesc>) -> u64 {
             op.stride,
             op.pad,
         ] {
-            h = fnv_u32(h, v);
+            h.write(&v.to_le_bytes());
         }
     }
-    h
+    h.finish()
 }
 
 /// The distinct operators of a model with occurrence counts, in
@@ -475,11 +480,16 @@ impl Default for TuneOptions {
 }
 
 /// Enumerate the mapping candidates for `op` (static choice first).
+/// Candidates are restricted to [`dataflow::feasible`] strategies (FF on
+/// CONV/PWCV drops out where its weight slice cannot stay VRF-resident),
+/// and with [`TuneOptions::chunks`] the search covers both chunk axes:
+/// smaller reduction/channel chunks ([`dataflow::chunk_candidates`]) and,
+/// for MM, wider B-tile column blocks ([`dataflow::jchunk_candidates`]).
 pub fn candidates_for(op: &OpDesc, cfg: &SpeedConfig, opts: &TuneOptions) -> Vec<MappingChoice> {
     let static_choice = MappingChoice::preferred(op);
     let mut out = vec![static_choice];
     for strat in StrategyKind::ALL {
-        if !dataflow::applicable(strat, op) {
+        if !dataflow::feasible(strat, op, cfg) {
             continue;
         }
         let base = MappingChoice::of(strat);
@@ -488,7 +498,10 @@ pub fn candidates_for(op: &OpDesc, cfg: &SpeedConfig, opts: &TuneOptions) -> Vec
         }
         if opts.chunks {
             for c in dataflow::chunk_candidates(op, cfg, strat) {
-                out.push(MappingChoice { strat, chunk: Some(c) });
+                out.push(MappingChoice { chunk: Some(c), ..base });
+            }
+            for j in dataflow::jchunk_candidates(op, cfg, strat) {
+                out.push(MappingChoice { jchunk: Some(j), ..base });
             }
         }
     }
@@ -540,20 +553,39 @@ pub fn tune_model(
     prec: Precision,
     opts: &TuneOptions,
 ) -> Result<TunedPlan> {
-    let m = model.at_precision(prec);
     let mut engine = Engine::new(*cfg)?;
     engine.set_exec_mode(opts.exec_mode);
+    tune_model_on(&mut engine, model, prec, opts)
+}
+
+/// [`tune_model`] on an existing warm engine — the serve pool's online
+/// first-request tuning path: the owning worker's engine (and its
+/// program cache, which keeps every candidate compilation for the replays
+/// that follow) performs the search. The engine's current execution mode
+/// is used as-is ([`TuneOptions::exec_mode`] only selects the mode when
+/// [`tune_model`] builds a throwaway engine); batch and exact report
+/// bit-identical cycles, so the plan is mode-independent either way. The
+/// engine is left quiesced, ready for the request that triggered the
+/// tune.
+pub fn tune_model_on(
+    engine: &mut Engine,
+    model: &Model,
+    prec: Precision,
+    opts: &TuneOptions,
+) -> Result<TunedPlan> {
+    let m = model.at_precision(prec);
     let distinct = distinct_ops(&m.ops);
     let mut ops = Vec::with_capacity(distinct.len());
     for (op, count) in distinct {
-        let mut t = tune_op(&mut engine, &op, opts)?;
+        let mut t = tune_op(engine, &op, opts)?;
         t.count = count;
         ops.push(t);
     }
+    engine.quiesce();
     Ok(TunedPlan {
         model: m.name.to_string(),
         prec,
-        cfg: TunedConfigSig::of(cfg),
+        cfg: TunedConfigSig::of(engine.config()),
         search_chunks: opts.chunks,
         ops,
     })
@@ -934,6 +966,112 @@ mod tests {
         assert!(merged
             .choice_for(&OpDesc::mm(3, 9, 3, Precision::Int8))
             .is_some());
+    }
+
+    #[test]
+    fn digest_matches_pre_consolidation_fold() {
+        // The consolidation satellite's lock: ops_digest on the shared
+        // Fnv64 must reproduce the private per-word fold it replaced, or
+        // every existing bench/tuned/ cache file name would silently
+        // orphan.
+        fn legacy_fold_u32(mut h: u64, v: u32) -> u64 {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+        let ops = tiny_model().ops;
+        let mut legacy = 0xcbf2_9ce4_8422_2325u64;
+        for op in &ops {
+            for v in [
+                op.kind as u32,
+                op.prec.bits(),
+                op.m,
+                op.k,
+                op.n,
+                op.c,
+                op.f,
+                op.h,
+                op.w,
+                op.ksize,
+                op.stride,
+                op.pad,
+            ] {
+                legacy = legacy_fold_u32(legacy, v);
+            }
+        }
+        assert_eq!(ops_digest(ops.iter()), legacy);
+    }
+
+    #[test]
+    fn wide_mm_search_covers_the_j_dim() {
+        // The J-dim arm of the chunk search: a wide MM offers B-tile
+        // column-block candidates, every one of them is semantics-
+        // preserving, and a plan that records one round-trips through the
+        // JSON cache representation.
+        let opts = TuneOptions::default();
+        let op = OpDesc::mm(8, 32, 64, Precision::Int8);
+        let cands = candidates_for(&op, &cfg(), &opts);
+        assert!(
+            cands.iter().any(|c| c.jchunk.is_some()),
+            "wide MM search must include J-dim candidates: {cands:?}"
+        );
+        for choice in &cands {
+            verify_choice(&cfg(), &op, *choice).unwrap();
+        }
+        // Force a jchunk entry into a plan and prove the JSON round-trip.
+        let jcand = *cands.iter().find(|c| c.jchunk.is_some()).unwrap();
+        let plan = TunedPlan {
+            model: "jtest".into(),
+            prec: Precision::Int8,
+            cfg: TunedConfigSig::of(&cfg()),
+            search_chunks: true,
+            ops: vec![OpTuning {
+                op,
+                count: 2,
+                choice: jcand,
+                cycles: 90,
+                static_choice: MappingChoice::preferred(&op),
+                static_cycles: 100,
+                candidates: cands.len() as u32,
+            }],
+        };
+        let back = TunedPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.ops[0].choice.jchunk, jcand.jchunk);
+    }
+
+    #[test]
+    fn infeasible_ff_is_skipped_and_rejected_at_parse() {
+        // The residency fix: FF drops out of the candidate set for a
+        // large-F CONV (no typed spill can reach the tuner), and a stale
+        // plan document naming it fails fast at load.
+        let op = OpDesc::conv(64, 608, 6, 6, 3, 1, 1, Precision::Int8);
+        let cands = candidates_for(&op, &cfg(), &TuneOptions::default());
+        assert!(
+            cands.iter().all(|c| c.strat != StrategyKind::Ff),
+            "{cands:?}"
+        );
+        // A hand-built plan entry claiming FF for that op must not parse.
+        let plan = TunedPlan {
+            model: "stale".into(),
+            prec: Precision::Int8,
+            cfg: TunedConfigSig::of(&cfg()),
+            search_chunks: true,
+            ops: vec![OpTuning {
+                op,
+                count: 1,
+                choice: MappingChoice::of(StrategyKind::Ff),
+                cycles: 1,
+                static_choice: MappingChoice::preferred(&op),
+                static_cycles: 1,
+                candidates: 1,
+            }],
+        };
+        match TunedPlan::from_json(&plan.to_json()) {
+            Err(SpeedError::Parse(m)) => assert!(m.contains("not feasible"), "{m}"),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

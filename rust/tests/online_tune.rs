@@ -1,0 +1,216 @@
+//! Online first-request tuning (ISSUE 5 acceptance bar): the first
+//! `Policy::TunedOnline` request for an uncovered `(model, precision,
+//! config-sig)` key tunes on its owning worker and publishes the plan to
+//! the pool's shared `TunedPlans` registry; every later same-key request
+//! replays it with bit-identical per-request stats. The plan the pool
+//! converges to is the plan offline `repro tune` produces for the same
+//! workload, and a tune stall on one worker never blocks other lanes.
+
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::coordinator::Policy;
+use speed_rvv::isa::StrategyKind;
+use speed_rvv::models::zoo::Model;
+use speed_rvv::models::OpDesc;
+use speed_rvv::serve::{
+    stats_digest, RequestKind, RequestResult, ServeOptions, ServePool,
+};
+use speed_rvv::tune::{tune_model, TuneOptions, TunedPlans};
+
+fn cfg() -> SpeedConfig {
+    SpeedConfig::reference()
+}
+
+/// A small CONV-heavy model: cheap to tune, rich enough that every
+/// operator class (and therefore every strategy family) participates.
+fn tiny_model() -> Model {
+    Model {
+        name: "tiny_online",
+        ops: vec![
+            OpDesc::conv(8, 8, 12, 12, 3, 1, 1, Precision::Int8),
+            OpDesc::pwcv(8, 16, 10, 10, Precision::Int8),
+            OpDesc::dwcv(16, 10, 10, 3, 1, 1, Precision::Int8),
+            OpDesc::mm(10, 16, 24, Precision::Int8),
+            OpDesc::conv(8, 8, 12, 12, 3, 1, 1, Precision::Int8),
+        ],
+        scalar_fraction: 0.1,
+    }
+}
+
+fn online_kind(prec: Precision) -> RequestKind {
+    RequestKind::Model { model: tiny_model(), prec, policy: Policy::TunedOnline }
+}
+
+fn small_op(prec: Precision, m: u32) -> RequestKind {
+    RequestKind::Op { op: OpDesc::mm(m, 8, 4, prec), strat: StrategyKind::Mm }
+}
+
+fn pool_with(
+    registry: TunedPlans,
+    workers: usize,
+    max_batch: usize,
+    steal_threshold: usize,
+) -> ServePool {
+    ServePool::new_tuned(
+        cfg(),
+        ServeOptions {
+            workers,
+            capacity: 64,
+            max_batch,
+            steal_threshold,
+            ..Default::default()
+        },
+        registry,
+    )
+    .unwrap()
+}
+
+#[test]
+fn second_request_is_served_from_the_shared_registry_bit_identically() {
+    // One worker, no coalescing: request 0 must stall (tune + publish),
+    // requests 1 and 2 must hit the published plan, and all three must
+    // report bit-identical per-request stats — the stall is wall time,
+    // never simulated work.
+    let registry = TunedPlans::new();
+    let pool = pool_with(registry.clone(), 1, 1, 2);
+    let kinds = vec![
+        online_kind(Precision::Int8),
+        online_kind(Precision::Int8),
+        online_kind(Precision::Int8),
+    ];
+    let results = pool.run_all(kinds).unwrap();
+    assert_eq!(results[0].stats, results[1].stats, "stall vs registry replay");
+    assert_eq!(results[1].stats, results[2].stats);
+    assert_eq!(results[0].layers, results[1].layers);
+    let snap = pool.shutdown();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.tune_stalls, 1, "exactly one online tune per key");
+    assert_eq!(snap.plan_hits, 2, "every later request hits the registry");
+    assert_eq!(registry.len(), 1, "the plan was published pool-wide");
+}
+
+#[test]
+fn online_pool_converges_to_the_offline_plan() {
+    let registry = TunedPlans::new();
+    let pool = pool_with(registry.clone(), 2, 4, 2);
+    pool.run_all(vec![online_kind(Precision::Int8)]).unwrap();
+    pool.shutdown();
+    let online = registry.get("tiny_online", Precision::Int8, &cfg()).unwrap();
+    // Offline `repro tune` of the same workload with the same (default)
+    // search options produces the identical plan — same per-op choices,
+    // cycles, counts, and search breadth.
+    let offline =
+        tune_model(&cfg(), &tiny_model(), Precision::Int8, &TuneOptions::default())
+            .unwrap();
+    assert_eq!(*online, offline);
+}
+
+#[test]
+fn per_request_stats_bit_identical_across_policies_and_worker_counts() {
+    // The parity bar across Policy::{Mixed, Tuned, TunedOnline}: tuned
+    // policies agree with each other bit for bit (whoever produced the
+    // plan), both run exactly the static work (same MACs, same layers),
+    // and are never slower; every policy's stats are invariant in worker
+    // count and micro-batch cap.
+    let prec = Precision::Int8;
+    let run = |policy: Policy, registry: TunedPlans, workers: usize, max_batch: usize| {
+        let pool = pool_with(registry, workers, max_batch, 2);
+        let kinds = vec![
+            RequestKind::Model { model: tiny_model(), prec, policy },
+            small_op(Precision::Int4, 4),
+            RequestKind::Model { model: tiny_model(), prec, policy },
+        ];
+        pool.run_all(kinds).unwrap()
+    };
+    let assert_same = |a: &[RequestResult], b: &[RequestResult], what: &str| {
+        assert_eq!(stats_digest(a), stats_digest(b), "{what}");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.stats, y.stats, "{what}: request {}", x.id);
+            assert_eq!(x.layers, y.layers, "{what}: request {}", x.id);
+        }
+    };
+
+    // TunedOnline is worker-count- and batching-invariant.
+    let online_1 = run(Policy::TunedOnline, TunedPlans::new(), 1, 1);
+    let online_3 = run(Policy::TunedOnline, TunedPlans::new(), 3, 8);
+    assert_same(&online_1, &online_3, "online: workers 1 vs 3");
+
+    // Pre-seeded Policy::Tuned (the offline path) serves the identical
+    // stats: online vs offline tuning is invisible to the request.
+    let offline_plan =
+        tune_model(&cfg(), &tiny_model(), prec, &TuneOptions::default()).unwrap();
+    let seeded = TunedPlans::new();
+    seeded.insert(offline_plan);
+    let tuned = run(Policy::Tuned, seeded, 2, 4);
+    assert_same(&online_1, &tuned, "online vs pre-seeded tuned");
+
+    // Mixed runs the same work (identical MACs and layer counts) and is
+    // never faster than the tuned mapping.
+    let mixed = run(Policy::Mixed, TunedPlans::new(), 2, 1);
+    for (t, m) in online_1.iter().zip(&mixed) {
+        assert_eq!(t.stats.macs, m.stats.macs, "request {}", t.id);
+        assert_eq!(t.layers, m.layers, "request {}", t.id);
+        assert!(
+            t.stats.cycles <= m.stats.cycles,
+            "request {}: tuned {} > mixed {}",
+            t.id,
+            t.stats.cycles,
+            m.stats.cycles
+        );
+    }
+}
+
+#[test]
+fn tune_stall_on_one_worker_never_blocks_other_lanes() {
+    // Two workers: the first request stalls worker A in a tuning search
+    // while a stream of INT4 ops lands on the other lane (different
+    // precision => different affinity lane). Liveness: everything
+    // completes, exactly one stall is paid, and the op results are the
+    // deterministic ones — the stall never leaks into another request's
+    // stats.
+    let registry = TunedPlans::new();
+    let pool = pool_with(registry, 2, 1, 2);
+    let mut tickets = vec![pool.submit(online_kind(Precision::Int8)).unwrap()];
+    for i in 0..8 {
+        tickets.push(pool.submit(small_op(Precision::Int4, 2 + (i % 3))).unwrap());
+    }
+    let results: Vec<RequestResult> =
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    assert_eq!(results.len(), 9);
+    // Identical op requests report identical stats regardless of the
+    // concurrent stall.
+    assert_eq!(results[1].stats, results[4].stats);
+    assert_eq!(results[2].stats, results[5].stats);
+    let snap = pool.shutdown();
+    assert_eq!(snap.completed, 9);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.in_flight, 0);
+    assert_eq!(snap.tune_stalls, 1);
+}
+
+#[test]
+fn distinct_precisions_tune_separately_and_coalesced_batches_stall_once() {
+    // Two precisions of one model are two registry keys (two stalls); a
+    // coalesced batch of same-key requests runs the search once for the
+    // whole batch.
+    let registry = TunedPlans::new();
+    let pool = pool_with(registry.clone(), 1, 8, 2);
+    let kinds = vec![
+        online_kind(Precision::Int8),
+        online_kind(Precision::Int8),
+        online_kind(Precision::Int4),
+        online_kind(Precision::Int8),
+        online_kind(Precision::Int4),
+    ];
+    let results = pool.run_all(kinds).unwrap();
+    // Same-precision requests are bit-identical however they were served.
+    assert_eq!(results[0].stats, results[1].stats);
+    assert_eq!(results[1].stats, results[3].stats);
+    assert_eq!(results[2].stats, results[4].stats);
+    let snap = pool.shutdown();
+    assert_eq!(snap.completed, 5);
+    assert_eq!(registry.len(), 2, "one plan per (model, precision)");
+    assert_eq!(snap.tune_stalls, 2, "one stall per key");
+    // Whatever coalescing happened, accounting is consistent: every
+    // executed TunedOnline batch either stalled or hit.
+    assert_eq!(snap.tune_stalls + snap.plan_hits, snap.batches);
+}

@@ -127,7 +127,7 @@ fn committed_mixed_edge_scenario_is_deterministic() {
 
 #[test]
 fn other_committed_scenarios_parse_and_generate() {
-    for file in ["steady_vision.json", "vit_burst.json"] {
+    for file in ["steady_vision.json", "vit_burst.json", "online_tune.json"] {
         let path =
             format!("{}/../bench/scenarios/{file}", env!("CARGO_MANIFEST_DIR"));
         let sc = Scenario::load(&path).unwrap_or_else(|e| panic!("{file}: {e}"));
@@ -180,6 +180,201 @@ fn serve_bench_report_is_parseable_and_digest_stable() {
     assert_eq!(metrics.get("completed").and_then(Json::as_i64), Some(10));
     assert!(metrics.get("latency_us").and_then(|l| l.get("p99")).is_some());
     assert!(metrics.get("precision_switches").is_some());
+}
+
+/// Deterministic xorshift64* stream for the randomized property tests
+/// (the image vendors no proptest; same spirit as `tune_parity.rs`).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+/// A random small valid request: mostly single operators across all
+/// precisions, occasionally a tiny model (mixed or online-tuned).
+fn random_kind(rng: &mut Rng) -> RequestKind {
+    use speed_rvv::coordinator::Policy;
+    use speed_rvv::isa::StrategyKind;
+    use speed_rvv::models::zoo::Model;
+    use speed_rvv::models::OpDesc;
+    let prec = match rng.range(0, 2) {
+        0 => speed_rvv::Precision::Int16,
+        1 => speed_rvv::Precision::Int8,
+        _ => speed_rvv::Precision::Int4,
+    };
+    match rng.range(0, 9) {
+        0 => RequestKind::Model {
+            model: Model {
+                name: "prop_tiny",
+                ops: vec![
+                    OpDesc::conv(4, 8, 8, 8, 3, 1, 1, prec),
+                    OpDesc::mm(6, 8, 10, prec),
+                ],
+                scalar_fraction: 0.1,
+            },
+            prec,
+            policy: if rng.range(0, 1) == 0 { Policy::Mixed } else { Policy::TunedOnline },
+        },
+        1..=4 => RequestKind::Op {
+            op: OpDesc::mm(
+                rng.range(1, 10) as u32,
+                rng.range(1, 16) as u32,
+                rng.range(1, 10) as u32,
+                prec,
+            ),
+            strat: StrategyKind::Mm,
+        },
+        5..=6 => {
+            let op = OpDesc::pwcv(
+                rng.range(1, 8) as u32,
+                rng.range(1, 8) as u32,
+                rng.range(1, 8) as u32,
+                rng.range(1, 8) as u32,
+                prec,
+            );
+            RequestKind::Op { op, strat: StrategyKind::Cf }
+        }
+        _ => {
+            let op = OpDesc::dwcv(
+                rng.range(1, 8) as u32,
+                rng.range(3, 9) as u32,
+                rng.range(3, 9) as u32,
+                3,
+                1,
+                1,
+                prec,
+            );
+            RequestKind::Op { op, strat: StrategyKind::Ff }
+        }
+    }
+}
+
+#[test]
+fn prop_random_streams_lose_nothing_and_replay_bit_identically() {
+    // Scheduler + online-tuner property sweep: for random request
+    // streams, pool geometries, and steal thresholds, (1) every submitted
+    // request completes exactly once, in submission-id order, with
+    // nothing lost, duplicated, or left in flight; (2) an independent
+    // pool replaying the same stream under a different geometry reports
+    // bit-identical per-request stats; (3) the routing counters account
+    // for exactly the submitted requests.
+    let mut rng = Rng::new(0xC0FF_EE05);
+    for trial in 0..4 {
+        let n = rng.range(12, 28) as usize;
+        let kinds: Vec<RequestKind> = (0..n).map(|_| random_kind(&mut rng)).collect();
+        let geom = |rng: &mut Rng| {
+            (
+                rng.range(1, 4) as usize,  // workers
+                rng.range(1, 8) as usize,  // max_batch
+                rng.range(1, 3) as usize,  // steal threshold
+            )
+        };
+        let (w1, b1, s1) = geom(&mut rng);
+        let (w2, b2, s2) = geom(&mut rng);
+        let run = |workers, max_batch, steal_threshold| {
+            let pool = ServePool::new(
+                SpeedConfig::reference(),
+                ServeOptions {
+                    workers,
+                    capacity: 64,
+                    max_batch,
+                    steal_threshold,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let results = pool.run_all(kinds.clone()).unwrap();
+            (results, pool.shutdown())
+        };
+        let (a, snap_a) = run(w1, b1, s1);
+        let (b, snap_b) = run(w2, b2, s2);
+        // (1) nothing lost or duplicated; ids are the submission order.
+        assert_eq!(a.len(), n, "trial {trial}");
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "trial {trial}");
+        }
+        assert_eq!(snap_a.submitted, n as u64, "trial {trial}");
+        assert_eq!(snap_a.completed + snap_a.failed, n as u64, "trial {trial}");
+        assert_eq!(snap_a.in_flight, 0, "trial {trial}");
+        assert_eq!(snap_a.rejected, 0, "blocking submit never drops");
+        // (2) schedule-invariant stats across geometries.
+        assert_same_stats(&a, &b, &format!("trial {trial}: {w1}/{b1}/{s1} vs {w2}/{b2}/{s2}"));
+        // (3) every routed request is an affinity hit or miss, exactly once.
+        assert_eq!(
+            snap_a.affinity_hits + snap_a.affinity_misses,
+            n as u64,
+            "trial {trial}"
+        );
+        assert_eq!(snap_b.completed + snap_b.failed, n as u64, "trial {trial}");
+        // Queue depth can never exceed the configured capacity.
+        assert!(snap_a.queue_max_depth <= 64, "trial {trial}");
+    }
+}
+
+#[test]
+fn single_precision_streams_miss_affinity_exactly_once() {
+    // Precision-affinity invariant: in an all-one-precision stream only
+    // the very first request can miss (no lane has the affinity yet);
+    // every later request finds a matching lane, and stealing — which
+    // transfers same-precision work — never breaks the invariant.
+    let kinds: Vec<RequestKind> = (0..12)
+        .map(|i| RequestKind::Op {
+            op: speed_rvv::models::OpDesc::mm(2 + (i % 4), 8, 4, speed_rvv::Precision::Int8),
+            strat: speed_rvv::isa::StrategyKind::Mm,
+        })
+        .collect();
+    for workers in [1usize, 3] {
+        let pool = ServePool::new(
+            SpeedConfig::reference(),
+            ServeOptions { workers, capacity: 64, max_batch: 2, steal_threshold: 2, ..Default::default() },
+        )
+        .unwrap();
+        pool.run_all(kinds.clone()).unwrap();
+        let snap = pool.shutdown();
+        assert_eq!(snap.affinity_misses, 1, "workers={workers}");
+        assert_eq!(snap.affinity_hits, 11, "workers={workers}");
+    }
+}
+
+#[test]
+fn huge_steal_threshold_disables_stealing() {
+    // The steal-threshold contract: below the threshold a backed-up lane
+    // keeps its affinity run, so an unreachable threshold must yield zero
+    // steals however unbalanced the lanes get.
+    let kinds: Vec<RequestKind> = (0..16)
+        .map(|i| RequestKind::Op {
+            op: speed_rvv::models::OpDesc::mm(2 + (i % 5), 6, 4, speed_rvv::Precision::Int8),
+            strat: speed_rvv::isa::StrategyKind::Mm,
+        })
+        .collect();
+    let pool = ServePool::new(
+        SpeedConfig::reference(),
+        ServeOptions {
+            workers: 3,
+            capacity: 64,
+            max_batch: 1,
+            steal_threshold: usize::MAX,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    pool.run_all(kinds).unwrap();
+    let snap = pool.shutdown();
+    assert_eq!(snap.steals, 0);
+    assert_eq!(snap.completed, 16);
 }
 
 #[test]
