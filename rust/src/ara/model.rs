@@ -64,6 +64,7 @@ impl AraParams {
 /// Cost of one operator on Ara.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AraCost {
+    /// Total cycles.
     pub cycles: u64,
     /// External-memory bytes read (inputs + weights).
     pub dram_read: u64,
@@ -77,6 +78,7 @@ pub struct AraCost {
 }
 
 impl AraCost {
+    /// MAC-ops of `op` per modeled cycle.
     pub fn ops_per_cycle(&self, op: &OpDesc) -> f64 {
         if self.cycles == 0 {
             return 0.0;
@@ -84,6 +86,7 @@ impl AraCost {
         op.total_ops() as f64 / self.cycles as f64
     }
 
+    /// Total DRAM traffic, bytes.
     pub fn dram_total(&self) -> u64 {
         self.dram_read + self.dram_write
     }

@@ -49,11 +49,17 @@ impl Default for BenchOptions {
 /// One timed benchmark entry (operator or model × precision).
 #[derive(Debug, Clone)]
 pub struct BenchEntry {
+    /// Bench label (operator shape or model name).
     pub name: String,
+    /// Operand precision the entry ran at.
     pub prec: Precision,
+    /// Mapping strategy label ("mixed" for whole-model runs).
     pub strategy: String,
+    /// Host wall time of the timed (cache-warm) pass, in seconds.
     pub wall_s: f64,
+    /// Simulated cycles of the timed pass.
     pub sim_cycles: u64,
+    /// Multiply-accumulate operations in the workload.
     pub macs: u64,
     /// Simulated throughput of the modeled hardware (GOPS at the
     /// reference clock) — the paper-facing number.
@@ -61,6 +67,7 @@ pub struct BenchEntry {
     /// Host-side simulation throughput: simulated MAC-ops per second of
     /// wall time — the reproduction-facing number this harness tracks.
     pub mops_per_s_host: f64,
+    /// Program-cache hit rate of the owning engine when the entry finished.
     pub cache_hit_rate: f64,
 }
 
@@ -68,11 +75,17 @@ pub struct BenchEntry {
 /// both execution modes.
 #[derive(Debug, Clone)]
 pub struct HotpathResult {
+    /// Human-readable description of the measured operator.
     pub op: String,
+    /// Total MPTU stages in the compiled stream (per rep).
     pub stages: u64,
+    /// Wall seconds per rep under [`ExecMode::Exact`].
     pub exact_wall_s: f64,
+    /// Wall seconds per rep under the stream-run fast path.
     pub fast_wall_s: f64,
+    /// Simulated stages per host second, exact mode.
     pub exact_stages_per_s: f64,
+    /// Simulated stages per host second, fast path.
     pub fast_stages_per_s: f64,
     /// fast / exact simulated-stages-per-second.
     pub speedup: f64,
@@ -83,7 +96,9 @@ pub struct HotpathResult {
 /// batch and exact mode — so the section gates cleanly in either.
 #[derive(Debug, Clone)]
 pub struct TunedBenchEntry {
+    /// Zoo model the comparison ran on.
     pub model: String,
+    /// Operand precision of the comparison.
     pub prec: Precision,
     /// Whole-model simulated cycles under `Policy::Mixed`.
     pub cycles_static: u64,
@@ -110,19 +125,26 @@ impl TunedBenchEntry {
 /// Everything one `speed-bench` invocation measured.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
+    /// The run used the downscaled CI (`--quick`) configuration.
     pub quick: bool,
     /// The run skipped the batch fast path (`--exact` / `SPEED_EXACT`):
     /// the hotpath "fast" leg is exact-mode data, so the fast-path metrics
     /// are not emitted (and not gated).
     pub exact_only: bool,
+    /// The `sim_hotpath` exact-vs-fast measurement.
     pub hotpath: HotpathResult,
+    /// Fig. 11-style operator sweep entries.
     pub operators: Vec<BenchEntry>,
+    /// Fig. 12-style whole-model sweep entries.
     pub models: Vec<BenchEntry>,
     /// Auto-tuned vs static-mixed comparisons (`repro tune`'s win,
     /// re-measured end to end through composed model runs).
     pub tuned: Vec<TunedBenchEntry>,
+    /// Program-cache hits across the operator sweep's shared engine.
     pub cache_hits: u64,
+    /// Program-cache misses across the operator sweep's shared engine.
     pub cache_misses: u64,
+    /// Wall time of the whole invocation, in seconds.
     pub total_wall_s: f64,
 }
 
@@ -160,6 +182,7 @@ impl BenchReport {
         m
     }
 
+    /// Look up one gateable metric by name.
     pub fn metric(&self, name: &str) -> Option<f64> {
         self.metrics().into_iter().find(|(n, _)| n == name).map(|(_, v)| v)
     }

@@ -20,8 +20,11 @@ pub const MEM_MIN_BYTES: u64 = 1 << 20;
 /// DRAM placement of one operator's tensors.
 #[derive(Debug, Clone, Copy)]
 pub struct MemLayout {
+    /// Base address of the input tensor region.
     pub in_addr: u64,
+    /// Base address of the weight tensor region.
     pub w_addr: u64,
+    /// Base address of the output (i32 accumulator) region.
     pub out_addr: u64,
     /// Spill region for partial sums (used only when the schedule spills).
     pub partial_addr: u64,
@@ -62,13 +65,21 @@ impl MemLayout {
 /// Instruction-mix summary of a compiled operator.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CodegenSummary {
+    /// Total instructions emitted (scalar + vector).
     pub total_insns: u64,
+    /// `VSALD` transfers emitted.
     pub vsald: u64,
+    /// Official `VLE` loads emitted (partial-sum reloads).
     pub vle: u64,
+    /// `VSAM`/`VSAC` tensor bursts emitted.
     pub vsam: u64,
+    /// `VSE` stores emitted (output rows + partial spills).
     pub vse: u64,
+    /// Configuration instructions emitted (`VSACFG` forms).
     pub cfg_insns: u64,
+    /// Total MPTU dataflow stages across all tensor bursts.
     pub total_stages: u64,
+    /// Distinct vector registers the stream touches.
     pub vregs_used: u32,
 }
 
@@ -78,8 +89,11 @@ pub struct CodegenSummary {
 /// simulator's batch fast path consumes (`Processor::run_segment`).
 #[derive(Debug, Clone)]
 pub struct CompiledOp {
+    /// The plan the simulator installs before running the segments.
     pub plan: OpPlan,
+    /// Program segments, run in order.
     pub segments: Vec<Segment>,
+    /// Emission summary (instruction mix, stages, register footprint).
     pub summary: CodegenSummary,
 }
 
@@ -482,6 +496,10 @@ fn generate<'a>(
 fn check(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Result<(), SpeedError> {
     op.validate()?;
     cfg.validate()?;
+    // The 4-bit VSACFG kernel field caps ksize at 15; anything larger must
+    // be Kseg-decomposed upstream. Typed rejection here — the emitter's
+    // `pack_cfg` would truncate the field in release builds.
+    Insn::try_pack_cfg(op.prec, op.ksize.max(1), strat)?;
     if !dataflow::applicable(strat, op) {
         return Err(SpeedError::Compile(format!(
             "strategy {strat} not applicable to {}",

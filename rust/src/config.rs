@@ -69,6 +69,7 @@ impl Precision {
         v.clamp(lo, hi)
     }
 
+    /// The precision with the given bit width (16, 8, or 4).
     pub fn from_bits(bits: u32) -> Option<Precision> {
         match bits {
             16 => Some(Precision::Int16),
@@ -78,6 +79,7 @@ impl Precision {
         }
     }
 
+    /// All supported precisions, widest first.
     pub const ALL: [Precision; 3] = [Precision::Int16, Precision::Int8, Precision::Int4];
 }
 
@@ -213,6 +215,7 @@ pub struct SpeedConfigBuilder {
 }
 
 impl SpeedConfigBuilder {
+    /// Number of vector lanes (scalable modules).
     pub fn lanes(mut self, lanes: u32) -> Self {
         self.cfg.lanes = lanes;
         self
@@ -225,21 +228,25 @@ impl SpeedConfigBuilder {
         self
     }
 
+    /// VRF capacity per lane, KiB.
     pub fn vrf_kib(mut self, kib: u32) -> Self {
         self.cfg.vrf_kib = kib;
         self
     }
 
+    /// Clock frequency, GHz.
     pub fn freq_ghz(mut self, ghz: f64) -> Self {
         self.cfg.freq_ghz = ghz;
         self
     }
 
+    /// External-memory bandwidth, bytes per cycle.
     pub fn mem_bw_bytes_per_cycle(mut self, bytes: u32) -> Self {
         self.cfg.mem_bw_bytes_per_cycle = bytes;
         self
     }
 
+    /// External-memory access latency, cycles.
     pub fn mem_latency(mut self, cycles: u32) -> Self {
         self.cfg.mem_latency = cycles;
         self

@@ -70,16 +70,22 @@ impl Policy {
 /// Per-layer outcome.
 #[derive(Debug, Clone)]
 pub struct LayerResult {
+    /// The operator that ran.
     pub op: OpDesc,
+    /// Strategy it ran under.
     pub strat: StrategyKind,
+    /// Simulation statistics of the run.
     pub stats: SimStats,
 }
 
 /// Whole-model outcome on SPEED.
 #[derive(Debug, Clone)]
 pub struct ModelResult {
+    /// Model name.
     pub name: String,
+    /// Precision the model ran at.
     pub prec: Precision,
+    /// Per-layer outcomes, in execution order.
     pub layers: Vec<LayerResult>,
     /// Merged vector-processor stats (cycles = Σ layer cycles).
     pub total: SimStats,
@@ -99,10 +105,12 @@ impl ModelResult {
         self.total.cycles + self.scalar_cycles
     }
 
+    /// Whole-model MAC-ops per simulated cycle.
     pub fn ops_per_cycle(&self) -> f64 {
         self.total.ops_per_cycle()
     }
 
+    /// Whole-model throughput at `freq_ghz`, in GOPS.
     pub fn gops(&self, freq_ghz: f64) -> f64 {
         self.total.gops(freq_ghz)
     }
@@ -144,11 +152,15 @@ pub fn run_model(
 /// Ara's minimum SEW of 8 (no sub-byte support).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AraModelResult {
+    /// Total Ara cycles over all layers.
     pub cycles: u64,
+    /// Total DRAM traffic, bytes.
     pub dram_bytes: u64,
+    /// Total RVV instructions issued.
     pub insns: u64,
 }
 
+/// Sum the Ara baseline cost model over every layer of `model` at `prec`.
 pub fn run_model_ara(model: &Model, prec: Precision, params: &AraParams) -> AraModelResult {
     let m = model.at_precision(prec);
     let mut out = AraModelResult::default();

@@ -41,7 +41,9 @@ use crate::models::ops::{OpDesc, OpKind};
 /// region fits). Conv strategies ignore it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MappingChoice {
+    /// The dataflow strategy.
     pub strat: StrategyKind,
+    /// Chunk-size override (None = the analytic default).
     pub chunk: Option<u32>,
     /// MM-only B-tile column-block (J-dim) override.
     pub jchunk: Option<u32>,
@@ -75,6 +77,7 @@ impl std::fmt::Display for MappingChoice {
 /// Geometry of one strategy applied to one operator on one configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct Mapping {
+    /// The strategy this geometry realizes.
     pub strat: StrategyKind,
     /// Input-channel (or reduction-dim) elements consumed per chunk.
     pub chunk: u32,

@@ -40,9 +40,11 @@ pub struct TunedDsePoint {
 /// One evaluated DSE point.
 #[derive(Debug, Clone, Copy)]
 pub struct DsePoint {
+    /// The configuration evaluated.
     pub cfg: SpeedConfig,
     /// Achieved GOPS under the static Sec. III mapping.
     pub gops: f64,
+    /// Modeled area of the configuration, mm².
     pub area_mm2: f64,
     /// Simulated cycles of the static mapping.
     pub static_cycles: u64,

@@ -30,6 +30,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::analysis;
 use crate::compiler::{self, CodegenSummary, MemLayout, MEM_MIN_BYTES};
 use crate::config::{Precision, SpeedConfig};
 use crate::coordinator::{LayerResult, ModelResult, Policy};
@@ -67,7 +68,9 @@ impl CfgSig {
 /// code-shaping configuration signature.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ProgramKey {
+    /// The operator (shape + precision).
     pub op: OpDesc,
+    /// Dataflow strategy the program was compiled for.
     pub strat: StrategyKind,
     /// Auto-tuner chunk override ([`MappingChoice::chunk`]); distinct
     /// chunks compile distinct streams and must cache separately.
@@ -91,6 +94,7 @@ pub struct Program {
 }
 
 impl Program {
+    /// Codegen summary (instruction/stage counts) of the compiled stream.
     pub fn summary(&self) -> &CodegenSummary {
         &self.summary
     }
@@ -101,6 +105,7 @@ impl Program {
         self.choice
     }
 
+    /// External-memory placement the program was compiled against.
     pub fn layout(&self) -> &MemLayout {
         &self.layout
     }
@@ -119,7 +124,9 @@ impl Program {
 /// Program-cache hit/miss counters.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from cache (private or shared).
     pub hits: u64,
+    /// Lookups that compiled a new program.
     pub misses: u64,
     /// Subset of `hits` that were satisfied by a [`SharedPrograms`] cache
     /// (another engine in the pool compiled the program first).
@@ -127,10 +134,12 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Total cache lookups.
     pub fn lookups(&self) -> u64 {
         self.hits + self.misses
     }
 
+    /// Hits over lookups (0.0 when no lookups happened).
     pub fn hit_rate(&self) -> f64 {
         if self.lookups() == 0 {
             return 0.0;
@@ -150,6 +159,7 @@ pub struct SharedPrograms {
 }
 
 impl SharedPrograms {
+    /// An empty shared cache.
     pub fn new() -> Self {
         Self::default()
     }
@@ -159,6 +169,7 @@ impl SharedPrograms {
         self.map.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
+    /// Whether the shared cache holds no programs.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -184,6 +195,9 @@ pub struct Engine {
     /// Pool-wide second-level cache (see [`SharedPrograms`]).
     shared: Option<SharedPrograms>,
     cache: CacheStats,
+    /// Release-build opt-in for compile-time stream verification (debug
+    /// builds always verify — see [`Engine::set_verify_on_compile`]).
+    verify_on_compile: bool,
 }
 
 impl Engine {
@@ -203,6 +217,7 @@ impl Engine {
             programs: HashMap::new(),
             shared: None,
             cache: CacheStats::default(),
+            verify_on_compile: false,
         })
     }
 
@@ -220,6 +235,7 @@ impl Engine {
         Ok(engine)
     }
 
+    /// The processor configuration this engine was built with.
     pub fn config(&self) -> &SpeedConfig {
         &self.cfg
     }
@@ -230,6 +246,7 @@ impl Engine {
         &self.proc
     }
 
+    /// Program-cache hit/miss counters so far.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache
     }
@@ -253,8 +270,23 @@ impl Engine {
         self.proc.set_exec_mode(mode);
     }
 
+    /// The active simulation mode.
     pub fn exec_mode(&self) -> ExecMode {
         self.proc.exec_mode()
+    }
+
+    /// Opt a release build into static stream verification on every
+    /// program-cache miss (see [`crate::analysis`]). Debug builds always
+    /// verify regardless of this flag; a failing program is rejected with
+    /// [`SpeedError::Verify`] and never enters the cache.
+    pub fn set_verify_on_compile(&mut self, on: bool) {
+        self.verify_on_compile = on;
+    }
+
+    /// Whether this engine verifies compiled streams on cache miss
+    /// (always true in debug builds).
+    pub fn verify_on_compile(&self) -> bool {
+        cfg!(debug_assertions) || self.verify_on_compile
     }
 
     /// Drain the warm processor's pipeline back to its fresh-construction
@@ -339,6 +371,17 @@ impl Engine {
         } else {
             None
         };
+        // Static verification before the program can enter the cache: a
+        // stream that would misconfigure the datapath or touch memory
+        // outside its layout is a typed error here, not a simulator fault
+        // three layers later. Streamed (non-materialized) programs skip
+        // this — `repro verify` covers them via the streaming verifier.
+        if self.verify_on_compile() {
+            if let Some(segs) = &segments {
+                analysis::verify_segments(op, &self.cfg, choice, layout, segs)
+                    .into_result()?;
+            }
+        }
         let plan = OpPlan {
             desc: *op,
             strat: choice.strat,
@@ -446,6 +489,7 @@ impl<'e> Session<'e> {
         self
     }
 
+    /// The strategy-selection policy this session runs under.
     pub fn policy(&self) -> Policy {
         self.policy
     }
@@ -510,6 +554,7 @@ impl<'e> Session<'e> {
         self.engine.precision_switches() - self.switch_base
     }
 
+    /// The underlying engine this session borrows.
     pub fn engine(&self) -> &Engine {
         self.engine
     }
@@ -684,6 +729,21 @@ mod tests {
         assert_eq!(b.cache_stats().shared_hits, 4);
         assert_eq!(b.cache_stats().hits, 8);
         assert!(!shared.is_empty());
+    }
+
+    #[test]
+    fn verify_on_compile_accepts_codegen_output() {
+        // With verification forced on (it is already on in debug builds),
+        // every compiler-emitted program must pass the static verifier and
+        // cache exactly as before — soundness of the verifier against its
+        // own codegen is the no-false-positive contract.
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        engine.set_verify_on_compile(true);
+        assert!(engine.verify_on_compile());
+        let model = tiny_model();
+        engine.session().run_model(&model, Precision::Int8).unwrap();
+        assert_eq!(engine.cache_stats().misses, 4);
+        assert_eq!(engine.compiled_programs(), 4);
     }
 
     #[test]

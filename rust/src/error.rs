@@ -38,6 +38,11 @@ pub enum SpeedError {
     /// backpressure, submission to a shut-down pool, or a worker that
     /// died while holding a request.
     Serve(String),
+    /// Static verification failure: the compiled instruction stream
+    /// violates a verifier rule ([`crate::analysis`]) — the program would
+    /// misconfigure the hardware, access memory outside its layout, or
+    /// break a fast-path precondition if it ever reached the simulator.
+    Verify(String),
 }
 
 impl SpeedError {
@@ -52,6 +57,7 @@ impl SpeedError {
             SpeedError::Parse(_) => "parse",
             SpeedError::Bench(_) => "bench",
             SpeedError::Serve(_) => "serve",
+            SpeedError::Verify(_) => "verify",
         }
     }
 
@@ -64,7 +70,8 @@ impl SpeedError {
             | SpeedError::Artifact(m)
             | SpeedError::Parse(m)
             | SpeedError::Bench(m)
-            | SpeedError::Serve(m) => m.clone(),
+            | SpeedError::Serve(m)
+            | SpeedError::Verify(m) => m.clone(),
             SpeedError::Sim(e) => e.to_string(),
         }
     }
@@ -128,6 +135,7 @@ mod tests {
             SpeedError::Parse("x".into()),
             SpeedError::Bench("x".into()),
             SpeedError::Serve("x".into()),
+            SpeedError::Verify("x".into()),
         ] {
             assert!(e.source().is_none(), "{e}");
         }
@@ -144,6 +152,7 @@ mod tests {
             SpeedError::Parse("m".into()),
             SpeedError::Bench("m".into()),
             SpeedError::Serve("m".into()),
+            SpeedError::Verify("m".into()),
         ]
         .iter()
         .map(|e| e.kind())

@@ -30,7 +30,9 @@ fn perr(m: impl Into<String>) -> SpeedError {
 /// Assembly error with 1-based line information.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct AsmError {
+    /// 1-based source line the error occurred on.
     pub line: usize,
+    /// Human-readable description of the problem.
     pub msg: String,
 }
 

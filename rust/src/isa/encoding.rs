@@ -22,11 +22,17 @@
 use super::insn::{Dim, Insn, LdMode, Vtype, WidthSel};
 use crate::config::Precision;
 
+/// RVV arithmetic/config major opcode (OP-V).
 pub const OPC_OP_V: u32 = 0b1010111;
+/// Vector-load major opcode (LOAD-FP space, as in RVV).
 pub const OPC_LOAD_FP: u32 = 0b0000111;
+/// Vector-store major opcode (STORE-FP space).
 pub const OPC_STORE_FP: u32 = 0b0100111;
+/// Scalar OP-IMM major opcode (ADDI).
 pub const OPC_OP_IMM: u32 = 0b0010011;
+/// custom-0 major opcode: `VSACFG` / `VSACFG.DIM` / `VSALD`.
 pub const OPC_CUSTOM0: u32 = 0b0001011;
+/// custom-1 major opcode: `VSAM` / `VSAC`.
 pub const OPC_CUSTOM1: u32 = 0b0101011;
 
 const F3_OPIVV: u32 = 0b000;
@@ -44,9 +50,24 @@ const F6_VMV: u32 = 0b010111;
 /// Errors produced when decoding a 32-bit word.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DecodeError {
+    /// The major opcode is not one this ISA subset uses.
     UnknownOpcode(u32),
-    UnknownFunct { opcode: u32, funct3: u32, funct6: u32 },
-    BadField { what: &'static str, value: u32 },
+    /// The opcode is known but the funct3/funct6 pair is not.
+    UnknownFunct {
+        /// Major opcode of the word.
+        opcode: u32,
+        /// funct3 field (bits 14:12).
+        funct3: u32,
+        /// funct6 field (bits 31:26).
+        funct6: u32,
+    },
+    /// A field holds a value with no architectural meaning.
+    BadField {
+        /// Which field was malformed.
+        what: &'static str,
+        /// The offending raw value.
+        value: u32,
+    },
 }
 
 impl std::fmt::Display for DecodeError {

@@ -3,19 +3,25 @@
 
 
 use crate::config::Precision;
+use crate::error::SpeedError;
 
 /// Dataflow mapping strategy selector carried in `VSACFG.zimm[8:6]`
 /// (Sec. III): MM for matrix multiplication, FFCS for CONV, CF for PWCV,
 /// FF for DWCV.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StrategyKind {
+    /// Matrix-multiplication mapping (weights multi-broadcast).
     Mm,
+    /// Feature-map-First-Channel-Second (CONV).
     Ffcs,
+    /// Channel-First (PWCV; partials accumulate inside the PE).
     Cf,
+    /// Feature-map-First (DWCV; weights resident, inputs stream once).
     Ff,
 }
 
 impl StrategyKind {
+    /// The 3-bit strategy code as encoded in `VSACFG.zimm[8:6]`.
     pub fn code(self) -> u32 {
         match self {
             StrategyKind::Mm => 0,
@@ -25,6 +31,7 @@ impl StrategyKind {
         }
     }
 
+    /// Decode a 3-bit strategy code; `None` for reserved codes.
     pub fn from_code(c: u32) -> Option<Self> {
         match c {
             0 => Some(StrategyKind::Mm),
@@ -35,6 +42,7 @@ impl StrategyKind {
         }
     }
 
+    /// Every strategy, in encoding order.
     pub const ALL: [StrategyKind; 4] =
         [StrategyKind::Mm, StrategyKind::Ffcs, StrategyKind::Cf, StrategyKind::Ff];
 }
@@ -55,7 +63,9 @@ impl std::fmt::Display for StrategyKind {
 /// official `VLE`, or multi-broadcast of the same data to every lane.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LdMode {
+    /// Sequential allocation striped across lanes (like official `VLE`).
     Sequential,
+    /// Multi-broadcast: the same data replicated to every lane.
     Broadcast,
 }
 
@@ -63,7 +73,9 @@ pub enum LdMode {
 /// control register currently says" (the common case after `VSACFG`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WidthSel {
+    /// Use the operand precision currently latched by `VSACFG`.
     FromCfg,
+    /// Use an explicit operand precision, ignoring the latched state.
     Explicit(Precision),
 }
 
@@ -73,18 +85,28 @@ pub enum WidthSel {
 /// H/W (input feature map), Stride. `NStages` sets the FFCS revisit depth N.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dim {
+    /// MM output rows.
     M,
+    /// MM reduction depth.
     K,
+    /// MM output columns.
     N,
+    /// Convolution input channels.
     C,
+    /// Convolution output channels.
     F,
+    /// Input feature-map height.
     H,
+    /// Input feature-map width.
     W,
+    /// Convolution stride.
     Stride,
+    /// FFCS revisit depth N (number of stationary feature-map stages).
     NStages,
 }
 
 impl Dim {
+    /// The dimension selector code carried by `VSACFG.DIM`.
     pub fn code(self) -> u32 {
         match self {
             Dim::M => 0,
@@ -99,6 +121,7 @@ impl Dim {
         }
     }
 
+    /// Decode a dimension selector code; `None` for reserved codes.
     pub fn from_code(c: u32) -> Option<Self> {
         Some(match c {
             0 => Dim::M,
@@ -114,6 +137,7 @@ impl Dim {
         })
     }
 
+    /// Every dimension register, in encoding order.
     pub const ALL: [Dim; 9] =
         [Dim::M, Dim::K, Dim::N, Dim::C, Dim::F, Dim::H, Dim::W, Dim::Stride, Dim::NStages];
 }
@@ -125,6 +149,7 @@ impl std::fmt::Display for Dim {
 }
 
 impl Dim {
+    /// Lower-case assembly mnemonic of the dimension register.
     pub fn as_str(&self) -> &'static str {
         match self {
             Dim::M => "m",
@@ -148,20 +173,24 @@ pub struct RegSet {
 }
 
 impl RegSet {
+    /// Build a set from at most 3 register indices.
     pub fn new(rs: &[u8]) -> Self {
         let mut regs = [0u8; 3];
         regs[..rs.len()].copy_from_slice(rs);
         RegSet { regs, len: rs.len() as u8 }
     }
 
+    /// The registers as a slice (also available via `Deref`).
     pub fn as_slice(&self) -> &[u8] {
         &self.regs[..self.len as usize]
     }
 
+    /// Does the set contain register `r`?
     pub fn contains(&self, r: u8) -> bool {
         self.as_slice().contains(&r)
     }
 
+    /// Is the set empty?
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -199,6 +228,7 @@ pub struct Vtype {
 }
 
 impl Vtype {
+    /// A vtype with the given SEW (LMUL fixed at 1).
     pub fn new(sew: u32) -> Self {
         Vtype { sew }
     }
@@ -215,6 +245,7 @@ impl Vtype {
         vsew << 3
     }
 
+    /// Decode a vtype payload (inverse of [`Vtype::to_bits`]).
     pub fn from_bits(bits: u32) -> Self {
         let vsew = (bits >> 3) & 0x7;
         Vtype { sew: 8 << vsew }
@@ -342,6 +373,26 @@ impl Insn {
         pcode | ((ksize as u16 & 0xF) << 2) | ((strat.code() as u16 & 0x7) << 6)
     }
 
+    /// Fallible [`Insn::pack_cfg`]: the `ksize <= 15` Kseg bound as a typed
+    /// [`SpeedError::Compile`] instead of a release-invisible
+    /// `debug_assert!`. A kernel past the 4-bit field would silently
+    /// truncate (`& 0xF`) and configure the wrong kernel size in release
+    /// builds; callers that accept external operator descriptors gate on
+    /// this before emitting any configuration instruction.
+    pub fn try_pack_cfg(
+        prec: Precision,
+        ksize: u32,
+        strat: StrategyKind,
+    ) -> Result<u16, SpeedError> {
+        if ksize > 15 {
+            return Err(SpeedError::Compile(format!(
+                "kernel size {ksize} exceeds the 4-bit VSACFG field; \
+                 Kseg-decompose below 16 first"
+            )));
+        }
+        Ok(Self::pack_cfg(prec, ksize, strat))
+    }
+
     /// Inverse of [`Insn::pack_cfg`].
     pub fn unpack_cfg(zimm: u16) -> Option<(Precision, u32, StrategyKind)> {
         let prec = match zimm & 0x3 {
@@ -370,6 +421,17 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn try_pack_cfg_rejects_oversized_kernel() {
+        assert_eq!(
+            Insn::try_pack_cfg(Precision::Int8, 15, StrategyKind::Ffcs).unwrap(),
+            Insn::pack_cfg(Precision::Int8, 15, StrategyKind::Ffcs)
+        );
+        let err = Insn::try_pack_cfg(Precision::Int8, 16, StrategyKind::Ffcs).unwrap_err();
+        assert!(matches!(err, SpeedError::Compile(_)), "{err}");
+        assert!(err.to_string().contains("Kseg"), "{err}");
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub struct StreamRun {
 /// keep working on it unchanged.
 #[derive(Debug, Clone, Default)]
 pub struct Segment {
+    /// The instruction stream.
     pub insns: Vec<Insn>,
     /// Non-overlapping, in ascending `start` order.
     pub runs: Vec<StreamRun>,
@@ -54,10 +55,12 @@ impl Segment {
         Segment { insns, runs: Vec::new() }
     }
 
+    /// Number of instructions in the segment.
     pub fn len(&self) -> usize {
         self.insns.len()
     }
 
+    /// Whether the segment holds no instructions.
     pub fn is_empty(&self) -> bool {
         self.insns.is_empty()
     }

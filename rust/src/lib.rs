@@ -74,9 +74,20 @@
 //!   [`tune::TunedPlans`] registry
 //!   ([`coordinator::Policy::Tuned`]).
 //!
+//! * a **static program verifier** ([`analysis`], CLI `verify`): an
+//!   abstract interpreter over compiled instruction streams that proves
+//!   configuration, dataflow, memory-safety, fast-path, and residency
+//!   invariants *before* a program reaches the simulator, with stable
+//!   rule IDs (`V-CFG-*`, `V-REG-*`, `V-MEM-*`, `V-RUN-*`, `V-RES-*`)
+//!   surfaced as [`SpeedError::Verify`] diagnostics.
+//!
 //! See `DESIGN.md` for the substitution rationale and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+pub mod analysis;
 pub mod ara;
 pub mod bench;
 pub mod compiler;

@@ -16,6 +16,8 @@
 //! repro serve-bench --scenario FILE [--workers N] [--quick] [--exact]
 //!                   [--max-batch K] [--out FILE]
 //!                                       serving harness -> SERVE_bench.json
+//! repro verify [--model M --prec P | --all] [--strategy S] [--quick]
+//!                                       static stream verification sweep
 //! repro asm <file.s>                    assemble / encode / disassemble
 //! repro info                            configuration + artifact summary
 //! ```
@@ -34,6 +36,7 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 
+use speed_rvv::analysis::{self, Rule};
 use speed_rvv::bench;
 use speed_rvv::config::{Precision, SpeedConfig};
 use speed_rvv::coordinator::runner::{default_workers, run_parallel};
@@ -42,6 +45,7 @@ use speed_rvv::engine::Engine;
 use speed_rvv::error::SpeedError;
 use speed_rvv::isa::{self, StrategyKind};
 use speed_rvv::models::zoo::{model_by_name, MODELS};
+use speed_rvv::models::OpDesc;
 use speed_rvv::report;
 use speed_rvv::runtime::{golden_check_all, Engine as PjrtEngine};
 use speed_rvv::serve;
@@ -93,6 +97,7 @@ fn dispatch(args: &[String]) -> Result<(), SpeedError> {
         "speed-bench" => cmd_speed_bench(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "tune" => cmd_tune(rest),
+        "verify" => cmd_verify(rest),
         "asm" => cmd_asm(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -155,6 +160,15 @@ commands:
                               tuned plan is slower than static (it never is,
                               by construction). --cache DIR reuses
                               bench/tuned/-style plan files across runs
+  verify [--model M] [--prec 16|8|4|all] [--all] [--strategy mm|ffcs|cf|ff]
+         [--quick]
+                              static stream verifier: abstract-interpret
+                              every compiled program (zoo x precisions x
+                              feasible mapping candidates, no simulation),
+                              print a per-rule violation table, and exit
+                              nonzero on any diagnostic. Default sweeps
+                              the whole zoo at all precisions; --quick
+                              downscales the models for a fast smoke pass
   asm <file.s>                assemble, encode, and disassemble a program
   info                        configuration + artifact summary
 run-model also accepts --exact (per-instruction simulation; the default
@@ -557,6 +571,98 @@ fn cmd_tune(args: &[String]) -> Result<(), SpeedError> {
     std::fs::write(out, plan.to_json())
         .map_err(|e| SpeedError::Bench(format!("writing {out}: {e}")))?;
     println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_verify(args: &[String]) -> Result<(), SpeedError> {
+    let names: Vec<&str> = match opt(args, "--model") {
+        Some(n) => vec![n],
+        // `--all` (and the bare default) sweep the whole zoo.
+        None => MODELS.to_vec(),
+    };
+    let precs: Vec<Precision> = match opt(args, "--prec").unwrap_or("all") {
+        "16" => vec![Precision::Int16],
+        "8" => vec![Precision::Int8],
+        "4" => vec![Precision::Int4],
+        "all" => vec![Precision::Int16, Precision::Int8, Precision::Int4],
+        other => return Err(SpeedError::Config(format!("bad precision '{other}'"))),
+    };
+    let strat_filter = match opt(args, "--strategy") {
+        None => None,
+        Some("mm") => Some(StrategyKind::Mm),
+        Some("ffcs") => Some(StrategyKind::Ffcs),
+        Some("cf") => Some(StrategyKind::Cf),
+        Some("ff") => Some(StrategyKind::Ff),
+        Some(other) => {
+            return Err(SpeedError::Config(format!("bad strategy '{other}'")))
+        }
+    };
+    let quick = flag(args, "--quick");
+    let cfg = SpeedConfig::reference();
+    let topts = TuneOptions::default(); // full (strategy x chunk) candidate space
+
+    let mut rule_totals = [0u64; Rule::ALL.len()];
+    let (mut programs, mut insns, mut segments) = (0u64, 0u64, 0u64);
+    let mut failures: Vec<String> = Vec::new();
+    let t0 = std::time::Instant::now();
+    for name in &names {
+        let mut model = model_by_name(name).ok_or_else(|| {
+            SpeedError::Config(format!("unknown model '{name}' ({MODELS:?})"))
+        })?;
+        if quick {
+            model = report::fig12::downscale(&model, 4);
+        }
+        for &prec in &precs {
+            let m = model.at_precision(prec);
+            let mut seen: Vec<OpDesc> = Vec::new();
+            for op in &m.ops {
+                if seen.contains(op) {
+                    continue;
+                }
+                seen.push(*op);
+                for choice in tune::candidates_for(op, &cfg, &topts) {
+                    if strat_filter.is_some_and(|s| choice.strat != s) {
+                        continue;
+                    }
+                    // Streams the program through the abstract interpreter;
+                    // nothing is simulated and nothing is cached.
+                    let rep = analysis::verify_op(op, &cfg, choice)?;
+                    programs += 1;
+                    insns += rep.insns;
+                    segments += rep.segments as u64;
+                    for (t, c) in rule_totals.iter_mut().zip(rep.rule_counts) {
+                        *t += c;
+                    }
+                    if !rep.is_clean() && failures.len() < 32 {
+                        for d in rep.diagnostics.iter().take(3) {
+                            failures.push(format!("{name} @ {prec} {choice}: {d}"));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "verified {programs} compiled program(s): {insns} instructions in \
+         {segments} segments, {} model(s) x {} precision(s), {:.2} s",
+        names.len(),
+        precs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("  {:<10} {:>9}  invariant", "rule", "hits");
+    for (rule, &n) in Rule::ALL.iter().zip(&rule_totals) {
+        println!("  {:<10} {n:>9}  {}", rule.id(), rule.summary());
+    }
+    let total: u64 = rule_totals.iter().sum();
+    if total > 0 {
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        return Err(SpeedError::Verify(format!(
+            "{total} violation(s) across {programs} program(s)"
+        )));
+    }
+    println!("all {programs} programs verifier-clean");
     Ok(())
 }
 

@@ -41,15 +41,22 @@ fn frontend_mm2(lanes: f64) -> f64 {
 /// Per-component lane area for a configuration (mm² at 28 nm).
 #[derive(Debug, Clone, Copy)]
 pub struct LaneArea {
+    /// Banked vector register file.
     pub vrf: f64,
+    /// Operand/result queues.
     pub queues: f64,
+    /// Operand requester.
     pub requester: f64,
+    /// Vector ALU.
     pub alu: f64,
+    /// Multi-precision tensor unit.
     pub mptu: f64,
+    /// Everything else (control, wiring).
     pub misc: f64,
 }
 
 impl LaneArea {
+    /// Total lane area, mm².
     pub fn total(&self) -> f64 {
         self.vrf + self.queues + self.requester + self.alu + self.mptu + self.misc
     }
@@ -74,12 +81,16 @@ pub fn lane_area(cfg: &SpeedConfig) -> LaneArea {
 /// Full-processor area breakdown (mm² at 28 nm).
 #[derive(Debug, Clone, Copy)]
 pub struct AreaBreakdown {
+    /// One lane's component breakdown.
     pub lane: LaneArea,
+    /// All lanes together, mm².
     pub lanes_total: f64,
+    /// Frontend (VIDU/VIS/VLDU + scalar interface), mm².
     pub frontend: f64,
 }
 
 impl AreaBreakdown {
+    /// Total processor area, mm².
     pub fn total(&self) -> f64 {
         self.lanes_total + self.frontend
     }

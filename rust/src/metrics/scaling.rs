@@ -22,10 +22,15 @@ pub fn project_power(power: f64, _from_nm: f64, _to_nm: f64) -> f64 {
 /// A performance point reported at some node, projectable to another.
 #[derive(Debug, Clone, Copy)]
 pub struct ReportedMetrics {
+    /// Process node, nm.
     pub node_nm: f64,
+    /// Clock frequency, GHz.
     pub freq_ghz: f64,
+    /// Area, mm².
     pub area_mm2: f64,
+    /// Power, W.
     pub power_w: f64,
+    /// Throughput, GOPS.
     pub gops: f64,
 }
 
@@ -43,10 +48,12 @@ impl ReportedMetrics {
         }
     }
 
+    /// Area efficiency, GOPS/mm².
     pub fn area_eff(&self) -> f64 {
         self.gops / self.area_mm2
     }
 
+    /// Energy efficiency, GOPS/W.
     pub fn energy_eff(&self) -> f64 {
         self.gops / self.power_w
     }

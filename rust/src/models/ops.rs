@@ -41,23 +41,36 @@ impl std::fmt::Display for OpKind {
 /// `ksize == 1`; DWCV has `f == c`). Unused fields are zero.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct OpDesc {
+    /// Operator class.
     pub kind: OpKind,
+    /// Operand precision.
     pub prec: Precision,
     // --- MM dims ---
+    /// MM rows of `A` (0 for convolutions).
     pub m: u32,
+    /// MM inner dimension (0 for convolutions).
     pub k: u32,
+    /// MM columns of `B` (0 for convolutions).
     pub n: u32,
     // --- convolution dims ---
+    /// Input channels (0 for MM).
     pub c: u32,
+    /// Output channels / filters (0 for MM; `== c` for DWCV).
     pub f: u32,
+    /// Input height (0 for MM).
     pub h: u32,
+    /// Input width (0 for MM).
     pub w: u32,
+    /// Square kernel size (1 for PWCV, 0 for MM).
     pub ksize: u32,
+    /// Convolution stride (0 for MM).
     pub stride: u32,
+    /// Zero padding on each spatial edge (0 for MM).
     pub pad: u32,
 }
 
 impl OpDesc {
+    /// Matrix multiplication `A(M×K) @ B(K×N)`.
     pub fn mm(m: u32, k: u32, n: u32, prec: Precision) -> Self {
         OpDesc {
             kind: OpKind::Mm,
@@ -75,15 +88,18 @@ impl OpDesc {
         }
     }
 
+    /// Standard convolution: `f` filters of `c×ksize×ksize` over `c×h×w`.
     pub fn conv(c: u32, f: u32, h: u32, w: u32, ksize: u32, stride: u32, pad: u32,
                 prec: Precision) -> Self {
         OpDesc { kind: OpKind::Conv, prec, m: 0, k: 0, n: 0, c, f, h, w, ksize, stride, pad }
     }
 
+    /// Point-wise (1×1, stride-1, unpadded) convolution.
     pub fn pwcv(c: u32, f: u32, h: u32, w: u32, prec: Precision) -> Self {
         OpDesc { kind: OpKind::Pwcv, prec, m: 0, k: 0, n: 0, c, f, h, w, ksize: 1, stride: 1, pad: 0 }
     }
 
+    /// Depth-wise convolution: one `ksize×ksize` filter per channel.
     pub fn dwcv(c: u32, h: u32, w: u32, ksize: u32, stride: u32, pad: u32,
                 prec: Precision) -> Self {
         OpDesc { kind: OpKind::Dwcv, prec, m: 0, k: 0, n: 0, c, f: c, h, w, ksize, stride, pad }

@@ -14,6 +14,7 @@ use crate::models::ops::OpDesc;
 /// A benchmark network: a name plus its vectorizable operator sequence.
 #[derive(Debug, Clone)]
 pub struct Model {
+    /// Network name as used by the CLI and reports.
     pub name: &'static str,
     /// Vector-processor operators (CONV/PWCV/DWCV/MM) in execution order.
     pub ops: Vec<OpDesc>,

@@ -16,9 +16,13 @@ use crate::sim::Processor;
 /// Traffic of one (operator, strategy) cell, in bytes.
 #[derive(Debug, Clone)]
 pub struct Fig10Cell {
+    /// Operator label.
     pub operator: &'static str,
+    /// Strategy SPEED ran under.
     pub strat: StrategyKind,
+    /// SPEED external-memory traffic, bytes.
     pub speed_bytes: u64,
+    /// Ara external-memory traffic, bytes.
     pub ara_bytes: u64,
 }
 

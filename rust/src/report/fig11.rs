@@ -16,14 +16,20 @@ use crate::sim::Processor;
 /// One point of the Fig. 11 sweep.
 #[derive(Debug, Clone)]
 pub struct Fig11Point {
+    /// Operator label (e.g. "CONV3x3").
     pub operator: &'static str,
+    /// Feature-map size of the point.
     pub fmap: u32,
+    /// Strategy SPEED ran the operator under.
     pub strat: StrategyKind,
+    /// SPEED MAC-ops per cycle.
     pub speed_ops_per_cycle: f64,
+    /// Ara MAC-ops per cycle.
     pub ara_ops_per_cycle: f64,
 }
 
 impl Fig11Point {
+    /// SPEED over Ara throughput.
     pub fn speedup(&self) -> f64 {
         self.speed_ops_per_cycle / self.ara_ops_per_cycle
     }

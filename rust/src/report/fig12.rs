@@ -15,15 +15,22 @@ use crate::models::zoo::{model_by_name, Model, MODELS};
 /// One (model, precision) result.
 #[derive(Debug, Clone)]
 pub struct Fig12Point {
+    /// Model name.
     pub model: String,
+    /// Precision of the comparison.
     pub prec: Precision,
+    /// SPEED whole-model cycles.
     pub speed_cycles: u64,
+    /// SPEED MAC-ops per cycle.
     pub speed_ops_per_cycle: f64,
+    /// Ara whole-model cycles.
     pub ara_cycles: u64,
+    /// Ara MAC-ops per cycle.
     pub ara_ops_per_cycle: f64,
 }
 
 impl Fig12Point {
+    /// Ara cycles over SPEED cycles.
     pub fn speedup(&self) -> f64 {
         self.ara_cycles as f64 / self.speed_cycles as f64
     }

@@ -15,15 +15,25 @@ use crate::sim::Processor;
 /// Structured Fig. 2 results.
 #[derive(Debug, Clone)]
 pub struct Fig2Result {
+    /// SPEED simulated cycles.
     pub speed_cycles: u64,
+    /// Instructions in the SPEED stream.
     pub speed_insns: u64,
+    /// Vector registers the SPEED stream touches.
     pub speed_vregs: u32,
+    /// SPEED MAC-ops per cycle.
     pub speed_ops_per_cycle: f64,
+    /// `VSAM` instructions in the SPEED stream.
     pub speed_vsam_count: u64,
+    /// Ara baseline cycles.
     pub ara_cycles: u64,
+    /// Ara instruction count.
     pub ara_insns: u64,
+    /// Vector registers the Ara schedule touches.
     pub ara_vregs: u32,
+    /// Ara MAC-ops per cycle.
     pub ara_ops_per_cycle: f64,
+    /// Disassembly of the SPEED stream (the figure's listing).
     pub speed_listing: String,
 }
 

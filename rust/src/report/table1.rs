@@ -16,18 +16,25 @@ use crate::report::fig12::downscale;
 /// One Table I row.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// Model name.
     pub model: String,
+    /// SPEED cycles, convolutional layers only.
     pub speed_conv_cycles: u64,
+    /// SPEED cycles, complete application.
     pub speed_complete_cycles: u64,
+    /// Ara cycles, convolutional layers only.
     pub ara_conv_cycles: u64,
+    /// Ara cycles, complete application.
     pub ara_complete_cycles: u64,
 }
 
 impl Table1Row {
+    /// Ara over SPEED, convolutional layers only.
     pub fn conv_speedup(&self) -> f64 {
         self.ara_conv_cycles as f64 / self.speed_conv_cycles as f64
     }
 
+    /// Ara over SPEED, complete application.
     pub fn complete_speedup(&self) -> f64 {
         self.ara_complete_cycles as f64 / self.speed_complete_cycles as f64
     }

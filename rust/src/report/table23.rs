@@ -73,14 +73,21 @@ pub fn measured_peak_gops(cfg: &SpeedConfig, prec: Precision) -> f64 {
 /// A Table III competitor row as reported by its own paper.
 #[derive(Debug, Clone)]
 pub struct Competitor {
+    /// Design name as cited.
     pub name: &'static str,
+    /// Process node, nm.
     pub node_nm: f64,
+    /// Die / core area, mm².
     pub area_mm2: f64,
+    /// Reported clock, GHz.
     pub freq_ghz: f64,
+    /// Reported power, W.
     pub power_w: f64,
-    /// (GOPS @INT8, GOPS at best integer precision, best precision label)
+    /// GOPS at INT8.
     pub int8_gops: f64,
+    /// GOPS at the design's best integer precision.
     pub best_gops: f64,
+    /// Label of that best precision (e.g. "2b").
     pub best_label: &'static str,
 }
 
@@ -103,13 +110,21 @@ pub fn competitors() -> Vec<Competitor> {
 /// One output row of the Table III comparison.
 #[derive(Debug, Clone)]
 pub struct Table3Row {
+    /// Design name.
     pub name: String,
+    /// Throughput at INT8, GOPS (projected to 28 nm).
     pub gops_8b: f64,
+    /// Area efficiency at INT8, GOPS/mm².
     pub area_eff_8b: f64,
+    /// Energy efficiency at INT8, GOPS/W.
     pub energy_eff_8b: f64,
+    /// Throughput at the best precision, GOPS.
     pub gops_best: f64,
+    /// Area efficiency at the best precision, GOPS/mm².
     pub area_eff_best: f64,
+    /// Energy efficiency at the best precision, GOPS/W.
     pub energy_eff_best: f64,
+    /// Label of the best precision.
     pub best_label: String,
 }
 

@@ -11,10 +11,15 @@ use crate::error::Result;
 /// One AOT-compiled computation.
 #[derive(Debug, Clone)]
 pub struct Artifact {
+    /// Manifest key (computation name).
     pub name: String,
+    /// Path (relative to the artifact dir) of the HLO text file.
     pub hlo_file: String,
+    /// Path of the golden-vector JSON (empty when none was exported).
     pub golden_file: String,
+    /// Shapes of each input operand, outermost dimension first.
     pub input_shapes: Vec<Vec<i64>>,
+    /// Shape of the single output.
     pub output_shape: Vec<i64>,
     /// Operator metadata (op kind, bits, stride, ...) as parsed JSON.
     pub meta: Json,
@@ -26,6 +31,7 @@ impl Artifact {
         self.meta.get("bits").and_then(|j| j.as_i64()).unwrap_or(8) as u32
     }
 
+    /// Operator kind string from the metadata ("?" when absent).
     pub fn op_kind(&self) -> &str {
         self.meta.get("op").and_then(|j| j.as_str()).unwrap_or("?")
     }
@@ -38,6 +44,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Read and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).map_err(|e| {
@@ -46,6 +53,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Parse a manifest document from its JSON source.
     pub fn parse(text: &str) -> Result<Self> {
         let doc = parse(text).map_err(|e| aerr(format!("manifest: {e}")))?;
         if doc.get("format").and_then(|j| j.as_str()) != Some("hlo-text") {
@@ -96,18 +104,22 @@ impl Manifest {
         Ok(Manifest { artifacts })
     }
 
+    /// Look up one artifact by name.
     pub fn artifact(&self, name: &str) -> Option<&Artifact> {
         self.artifacts.get(name)
     }
 
+    /// All artifact names, in sorted order.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.artifacts.keys().map(|s| s.as_str())
     }
 
+    /// Number of artifacts in the manifest.
     pub fn len(&self) -> usize {
         self.artifacts.len()
     }
 
+    /// Whether the manifest holds no artifacts.
     pub fn is_empty(&self) -> bool {
         self.artifacts.is_empty()
     }
@@ -116,12 +128,16 @@ impl Manifest {
 /// Golden vectors for one artifact (inputs + expected output).
 #[derive(Debug, Clone)]
 pub struct Golden {
+    /// Flattened integer input operands, in artifact order.
     pub inputs: Vec<Vec<i32>>,
+    /// Flattened expected output.
     pub output: Vec<i32>,
+    /// Shape of the expected output.
     pub output_shape: Vec<i64>,
 }
 
 impl Golden {
+    /// Read and parse the golden-vector file for `art` under `dir`.
     pub fn load(dir: &Path, art: &Artifact) -> Result<Self> {
         let path = dir.join(&art.golden_file);
         let text = std::fs::read_to_string(&path)

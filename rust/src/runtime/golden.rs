@@ -25,16 +25,19 @@ use super::{aerr, Engine};
 /// Outcome of one artifact's golden check.
 #[derive(Debug, Clone)]
 pub struct GoldenReport {
+    /// Artifact name.
     pub name: String,
     /// PJRT output == build-time golden vector.
     pub pjrt_ok: bool,
     /// Simulator output == PJRT output (None = artifact is not a single
     /// operator the simulator executes).
     pub sim_ok: Option<bool>,
+    /// Output elements compared.
     pub elems: usize,
 }
 
 impl GoldenReport {
+    /// Every performed comparison matched.
     pub fn ok(&self) -> bool {
         self.pjrt_ok && self.sim_ok.unwrap_or(true)
     }

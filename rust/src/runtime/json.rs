@@ -26,6 +26,7 @@ use crate::error::SpeedError;
 pub struct Fnv64(u64);
 
 impl Fnv64 {
+    /// A hasher at the FNV-1a offset basis.
     pub fn new() -> Self {
         Fnv64(0xcbf2_9ce4_8422_2325)
     }
@@ -92,15 +93,22 @@ fn perr(m: impl Into<String>) -> SpeedError {
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object member lookup (None on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -108,6 +116,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice, if it is one.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -115,6 +124,7 @@ impl Json {
         }
     }
 
+    /// The value as a string, if it is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -122,6 +132,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool, if it is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -129,6 +140,7 @@ impl Json {
         }
     }
 
+    /// The value as a number, if it is one.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -136,10 +148,12 @@ impl Json {
         }
     }
 
+    /// The value truncated to i64, if it is a number.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
 
+    /// The value as an object map, if it is one.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),

@@ -43,6 +43,7 @@ impl Engine {
         Ok(Engine { client, dir, manifest, cache: HashMap::new() })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

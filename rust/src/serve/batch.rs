@@ -38,6 +38,7 @@ pub enum BatchKey {
 }
 
 impl BatchKey {
+    /// Derive the coalescing key for a request kind.
     pub fn of(kind: &RequestKind) -> BatchKey {
         match kind {
             RequestKind::Model { model, prec, policy } => {

@@ -214,11 +214,15 @@ pub fn percentile_us(sorted: &[u64], q: f64) -> u64 {
 /// A point-in-time aggregate view of a pool.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Worker engines in the pool.
     pub workers: usize,
+    /// Requests admitted to the queue.
     pub submitted: u64,
     /// `try_submit` calls refused for lack of queue space.
     pub rejected: u64,
+    /// Requests finished successfully.
     pub completed: u64,
+    /// Requests that finished with an error.
     pub failed: u64,
     /// Admitted but not yet finished.
     pub in_flight: u64,
@@ -243,18 +247,25 @@ pub struct MetricsSnapshot {
     pub wall_s: f64,
     /// Finished requests per second of pool lifetime.
     pub throughput_rps: f64,
+    /// Median request latency, µs.
     pub p50_us: u64,
+    /// 95th-percentile request latency, µs.
     pub p95_us: u64,
+    /// 99th-percentile request latency, µs.
     pub p99_us: u64,
+    /// Worst request latency, µs.
     pub max_us: u64,
+    /// Mean request latency, µs.
     pub mean_us: f64,
     /// Deepest total queue observed at routing time.
     pub queue_max_depth: usize,
     /// Mean total queue depth observed at routing time.
     pub queue_avg_depth: f64,
+    /// Requests a worker stole from another lane's queue.
     pub steals: u64,
     /// Requests routed to a lane already at their precision.
     pub affinity_hits: u64,
+    /// Requests routed to a lane at a different precision.
     pub affinity_misses: u64,
     /// Pool-wide program-cache counters (summed over workers).
     pub cache: CacheStats,

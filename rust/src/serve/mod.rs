@@ -117,12 +117,14 @@ impl RequestKind {
 pub struct Request {
     /// Pool-assigned id, ascending in submission order.
     pub id: u64,
+    /// What the request executes.
     pub kind: RequestKind,
 }
 
 /// The outcome of one served request.
 #[derive(Debug, Clone)]
 pub struct RequestResult {
+    /// Id of the request this result answers.
     pub id: u64,
     /// Deterministic per-request simulation statistics (see the module
     /// docs for the determinism contract).
@@ -203,13 +205,19 @@ impl Default for ServeBenchOptions {
 /// `SERVE_bench.json`.
 #[derive(Debug, Clone)]
 pub struct ServeBenchReport {
+    /// Scenario name.
     pub scenario: String,
+    /// Scenario RNG seed the run used.
     pub seed: u64,
+    /// The run used the downscaled quick configuration.
     pub quick: bool,
+    /// The run simulated per-instruction (exact mode).
     pub exact: bool,
     /// Model requests were served from auto-tuned mapping plans.
     pub tuned: bool,
+    /// Worker engines that served the run.
     pub workers: usize,
+    /// Requests generated and served.
     pub requests: usize,
     /// Simulated cycles summed over every request.
     pub total_cycles: u64,
@@ -224,6 +232,7 @@ pub struct ServeBenchReport {
     pub stats_digest: u64,
     /// Wall time of the submit-to-last-completion window.
     pub wall_s: f64,
+    /// Final pool metrics snapshot.
     pub snapshot: MetricsSnapshot,
 }
 

@@ -67,6 +67,7 @@ impl Default for XorShift64 {
 }
 
 impl XorShift64 {
+    /// Seed the generator (any value, including 0, is fine).
     pub fn new(seed: u64) -> Self {
         // Splitmix-style scramble keeps low-entropy seeds (0, 1, 2...)
         // from producing correlated streams; `| 1` keeps the state
@@ -78,6 +79,7 @@ impl XorShift64 {
         )
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.0;
         x ^= x << 13;
@@ -141,9 +143,13 @@ pub enum Workload {
 /// One weighted line of the workload mix.
 #[derive(Debug, Clone)]
 pub struct MixEntry {
+    /// What the entry instantiates.
     pub workload: Workload,
+    /// Precision requests from this entry run at.
     pub prec: Precision,
+    /// Relative draw weight within the mix.
     pub weight: u32,
+    /// Strategy-selection policy for model entries.
     pub policy: Policy,
     /// Explicit dataflow strategy for operator entries (default: the
     /// operator's preferred strategy).
@@ -174,7 +180,9 @@ impl MixEntry {
 /// A parsed scenario file.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Scenario name (from the document or the file stem).
     pub name: String,
+    /// RNG seed driving arrivals and mix draws.
     pub seed: u64,
     /// Requests to generate (capped at [`QUICK_REQUEST_CAP`] in quick
     /// mode).
@@ -183,7 +191,9 @@ pub struct Scenario {
     pub capacity: Option<usize>,
     /// Micro-batch cap override (None = the pool default).
     pub max_batch: Option<usize>,
+    /// Arrival pattern of the generated requests.
     pub arrival: Arrival,
+    /// Weighted workload mix.
     pub mix: Vec<MixEntry>,
 }
 

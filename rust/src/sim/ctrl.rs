@@ -11,18 +11,28 @@ use crate::isa::{Dim, Insn, StrategyKind, Vtype};
 /// Operator dimensions latched via `VSACFG.DIM`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Dims {
+    /// MM rows of `A`.
     pub m: u32,
+    /// MM inner dimension.
     pub k: u32,
+    /// MM columns of `B`.
     pub n: u32,
+    /// Input channels.
     pub c: u32,
+    /// Output channels.
     pub f: u32,
+    /// Input height.
     pub h: u32,
+    /// Input width.
     pub w: u32,
+    /// Convolution stride.
     pub stride: u32,
+    /// Pipeline stages of the current burst.
     pub nstages: u32,
 }
 
 impl Dims {
+    /// Latch dimension `dim` to `v`.
     pub fn set(&mut self, dim: Dim, v: u32) {
         match dim {
             Dim::M => self.m = v,
@@ -37,6 +47,7 @@ impl Dims {
         }
     }
 
+    /// Read back a latched dimension.
     pub fn get(&self, dim: Dim) -> u32 {
         match dim {
             Dim::M => self.m,

@@ -5,6 +5,7 @@
 //! byte, low nibble first). Accumulators are 32-bit little-endian.
 
 use crate::config::Precision;
+use crate::error::SpeedError;
 
 /// Read element `idx` of a packed buffer at precision `p` (sign-extended).
 pub fn read_elem(buf: &[u8], idx: usize, p: Precision) -> i32 {
@@ -57,16 +58,29 @@ pub fn write_i32(buf: &mut [u8], idx: usize, v: i32) {
 }
 
 /// Pack a slice of values into a fresh buffer at precision `p`.
+///
+/// Panics when a value falls outside the precision's signed range — use
+/// [`try_pack`] for the fallible form. (The range check was once a
+/// `debug_assert!`, so a release build would nibble-truncate the
+/// out-of-range operand and corrupt the fixture silently.)
 pub fn pack(values: &[i32], p: Precision) -> Vec<u8> {
+    try_pack(values, p).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible [`pack`]: a typed error naming the offending operand instead
+/// of truncating it.
+pub fn try_pack(values: &[i32], p: Precision) -> Result<Vec<u8>, SpeedError> {
+    let (lo, hi) = p.range();
+    if let Some((i, &v)) = values.iter().enumerate().find(|&(_, &v)| v < lo || v > hi) {
+        return Err(SpeedError::Config(format!(
+            "operand {v} at index {i} is outside the {p} range [{lo}, {hi}]"
+        )));
+    }
     let mut buf = vec![0u8; p.bytes_for(values.len() as u64) as usize];
     for (i, &v) in values.iter().enumerate() {
-        debug_assert!(
-            v >= p.range().0 && v <= p.range().1,
-            "value {v} out of {p} range"
-        );
         write_elem(&mut buf, i, p, v);
     }
-    buf
+    Ok(buf)
 }
 
 /// Unpack `n` values from a packed buffer at precision `p`.
@@ -83,6 +97,15 @@ pub fn unpack(buf: &[u8], n: usize, p: Precision) -> Vec<i32> {
 /// with branch-free inner loops the compiler can vectorize. Equivalent
 /// to `n` calls of [`read_elem`].
 pub fn unpack_into(buf: &[u8], n: usize, p: Precision, out: &mut Vec<i32>) {
+    // Always-on shape check (promoted from a trailing `debug_assert_eq!`):
+    // a short buffer used to panic only on the INT8 path and silently
+    // truncate the output on the INT16/INT4 paths in release builds.
+    let need = p.bytes_for(n as u64) as usize;
+    assert!(
+        buf.len() >= need,
+        "unpacking {n} {p} elements needs {need} B, buffer holds {} B",
+        buf.len()
+    );
     out.clear();
     out.reserve(n);
     match p {
@@ -108,7 +131,6 @@ pub fn unpack_into(buf: &[u8], n: usize, p: Precision, out: &mut Vec<i32>) {
             }
         }
     }
-    debug_assert_eq!(out.len(), n);
 }
 
 #[cfg(test)]
@@ -159,6 +181,27 @@ mod tests {
                 assert_eq!(out, vals, "{p} n={n}");
             }
         }
+    }
+
+    #[test]
+    fn try_pack_rejects_out_of_range() {
+        let err = try_pack(&[1, 200, 3], Precision::Int8).unwrap_err();
+        assert!(matches!(err, SpeedError::Config(_)), "{err}");
+        assert!(err.to_string().contains("200"), "{err}");
+        assert!(try_pack(&[127, -128], Precision::Int8).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the INT4 range")]
+    fn pack_panics_on_out_of_range() {
+        pack(&[9], Precision::Int4);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer holds")]
+    fn unpack_into_rejects_short_buffer() {
+        let mut out = Vec::new();
+        unpack_into(&[0u8; 2], 3, Precision::Int16, &mut out);
     }
 
     #[test]

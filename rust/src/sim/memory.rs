@@ -12,19 +12,28 @@ use super::elem;
 /// What a transfer moves — used for the Fig. 10 traffic breakdown.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrafficClass {
+    /// Input activations.
     Input,
+    /// Weights / filters.
     Weight,
+    /// Partial sums spilled and refetched.
     Partial,
+    /// Final outputs.
     Output,
 }
 
 /// Byte counters per traffic class.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct TrafficStats {
+    /// Bytes of input activations read.
     pub input_read: u64,
+    /// Bytes of weights read.
     pub weight_read: u64,
+    /// Bytes of partial sums read back.
     pub partial_read: u64,
+    /// Bytes of partial sums written out.
     pub partial_write: u64,
+    /// Bytes of final outputs written.
     pub output_write: u64,
 }
 
@@ -35,14 +44,17 @@ impl TrafficStats {
             + self.output_write
     }
 
+    /// Total bytes read (inputs + weights + partial sums).
     pub fn reads(&self) -> u64 {
         self.input_read + self.weight_read + self.partial_read
     }
 
+    /// Total bytes written (partial sums + outputs).
     pub fn writes(&self) -> u64 {
         self.partial_write + self.output_write
     }
 
+    /// Count `bytes` read under `class`.
     pub fn add_read(&mut self, class: TrafficClass, bytes: u64) {
         match class {
             TrafficClass::Input => self.input_read += bytes,
@@ -52,6 +64,7 @@ impl TrafficStats {
         }
     }
 
+    /// Count `bytes` written under `class`.
     pub fn add_write(&mut self, class: TrafficClass, bytes: u64) {
         match class {
             TrafficClass::Partial => self.partial_write += bytes,
@@ -63,6 +76,7 @@ impl TrafficStats {
 /// Flat external memory with traffic accounting.
 pub struct ExtMem {
     data: Vec<u8>,
+    /// Accumulated byte traffic by class.
     pub traffic: TrafficStats,
 }
 
@@ -72,6 +86,7 @@ impl ExtMem {
         ExtMem { data: vec![0; bytes], traffic: TrafficStats::default() }
     }
 
+    /// Current memory size in bytes.
     pub fn size(&self) -> usize {
         self.data.len()
     }

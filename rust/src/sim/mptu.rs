@@ -47,15 +47,26 @@ impl OutputRows {
     }
 
     /// Wrap an existing flat row-major buffer.
+    ///
+    /// Panics when the buffer length is not a whole number of rows — an
+    /// always-on check (promoted from a `debug_assert!`): a ragged buffer
+    /// would shift every subsequent row's contents in release builds,
+    /// corrupting functional output instead of failing here.
     pub fn from_flat(data: Vec<i32>, row_elems: usize) -> Self {
-        debug_assert!(row_elems == 0 || data.len() % row_elems == 0);
+        assert!(
+            row_elems == 0 || data.len() % row_elems == 0,
+            "flat buffer of {} elements is not a whole number of {row_elems}-element rows",
+            data.len()
+        );
         OutputRows { data, row_elems }
     }
 
+    /// Elements per row.
     pub fn row_elems(&self) -> usize {
         self.row_elems
     }
 
+    /// Number of complete rows held.
     pub fn num_rows(&self) -> usize {
         if self.row_elems == 0 {
             0
@@ -93,6 +104,7 @@ impl OutputRows {
         self.data
     }
 
+    /// Whether no rows are held.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

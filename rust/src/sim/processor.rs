@@ -98,8 +98,11 @@ pub enum ExecMode {
 
 /// The SPEED machine.
 pub struct Processor {
+    /// The hardware configuration.
     pub cfg: SpeedConfig,
+    /// Architectural control state (latched VSACFG/VSETVLI).
     pub ctrl: CtrlState,
+    /// External memory with traffic accounting.
     pub mem: ExtMem,
     xregs: [i64; 32],
     /// Per-lane VRF byte arrays.
@@ -185,6 +188,7 @@ impl Processor {
         self.computed_rows.clear();
     }
 
+    /// The installed operator plan, if any.
     pub fn plan(&self) -> Option<&OpPlan> {
         self.plan.as_ref()
     }
@@ -194,6 +198,7 @@ impl Processor {
         self.mode = mode;
     }
 
+    /// The active simulation mode.
     pub fn exec_mode(&self) -> ExecMode {
         self.mode
     }

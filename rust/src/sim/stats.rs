@@ -18,8 +18,10 @@ pub enum Fu {
 }
 
 impl Fu {
+    /// All functional units, in [`Fu::index`] order.
     pub const ALL: [Fu; 5] = [Fu::Vldu, Fu::Vsu, Fu::Mptu, Fu::Valu, Fu::Scalar];
 
+    /// Position in per-FU stat arrays.
     pub fn index(self) -> usize {
         match self {
             Fu::Vldu => 0,
@@ -30,6 +32,7 @@ impl Fu {
         }
     }
 
+    /// Display name of the unit.
     pub fn name(self) -> &'static str {
         match self {
             Fu::Vldu => "VLDU",
@@ -51,8 +54,11 @@ pub struct SimStats {
     pub cycles: u64,
     /// Instructions decoded, by class.
     pub insns_total: u64,
+    /// Custom (VSACFG/VSALD/VSAM/VSAC) instructions decoded.
     pub insns_custom: u64,
+    /// Official RVV instructions decoded.
     pub insns_vector: u64,
+    /// Scalar instructions decoded.
     pub insns_scalar: u64,
     /// Per-FU busy cycles.
     pub fu_busy: [u64; 5],

@@ -61,13 +61,18 @@ fn perr(m: impl Into<String>) -> SpeedError {
 /// scale costs uniformly and do not change the argmax).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TunedConfigSig {
+    /// Number of vector lanes.
     pub lanes: u32,
+    /// MPTU tile rows per lane.
     pub tile_r: u32,
+    /// MPTU tile columns per lane.
     pub tile_c: u32,
+    /// VRF capacity per lane, KiB.
     pub vrf_kib: u32,
 }
 
 impl TunedConfigSig {
+    /// The code-shaping signature of `cfg`.
     pub fn of(cfg: &SpeedConfig) -> Self {
         TunedConfigSig {
             lanes: cfg.lanes,
@@ -105,6 +110,7 @@ pub struct OpTuning {
     pub cycles: u64,
     /// The static Sec. III mapping and its simulated cycles.
     pub static_choice: MappingChoice,
+    /// Simulated cycles of the static mapping.
     pub static_cycles: u64,
     /// Mapping candidates costed (including the static one).
     pub candidates: u32,
@@ -123,7 +129,9 @@ impl OpTuning {
 pub struct TunedPlan {
     /// Zoo model name (or any caller-chosen label for ad-hoc op sets).
     pub model: String,
+    /// Precision the plan was tuned at.
     pub prec: Precision,
+    /// Code-shaping configuration the plan is valid for.
     pub cfg: TunedConfigSig,
     /// Whether the search that produced this plan included chunk-size
     /// candidates ([`TuneOptions::chunks`]). The persistent cache refuses
@@ -515,10 +523,21 @@ pub fn candidates_for(op: &OpDesc, cfg: &SpeedConfig, opts: &TuneOptions) -> Vec
 /// static mapping.
 pub fn tune_op(engine: &mut Engine, op: &OpDesc, opts: &TuneOptions) -> Result<OpTuning> {
     op.validate()?;
-    let cands = candidates_for(op, engine.config(), opts);
+    let cfg = *engine.config();
+    let cands = candidates_for(op, &cfg, opts);
     let mut best: Option<(MappingChoice, u64, u64)> = None;
     let mut static_cycles = 0u64;
     for choice in &cands {
+        // Statically verify the candidate's stream before paying for its
+        // simulation. A broken *static* mapping is a compiler bug and
+        // aborts the tune; a broken alternative candidate is merely
+        // dropped from the search (the static fallback always remains).
+        if let Err(e) = crate::analysis::ensure_verified(op, &cfg, *choice) {
+            if *choice == cands[0] {
+                return Err(e);
+            }
+            continue;
+        }
         engine.quiesce();
         let (stats, _) = engine.run_op_with(op, *choice, false)?;
         let cost = (stats.cycles, stats.traffic.total());
@@ -721,6 +740,7 @@ pub struct TunedPlans {
 }
 
 impl TunedPlans {
+    /// An empty plan registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -735,6 +755,7 @@ impl TunedPlans {
             .sum()
     }
 
+    /// Whether no plans are registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -1,0 +1,500 @@
+//! Mutation harness for the static stream verifier (`speed_rvv::analysis`).
+//!
+//! Each test takes a genuine compiler-emitted program, breaks exactly one
+//! invariant the way a codegen bug would (drop a `VSACFG`, swap a vector
+//! register, shift an address past its partition, corrupt run metadata),
+//! and asserts that the verifier fires the *intended* rule ID. Collateral
+//! diagnostics are allowed — a broken stream may violate several
+//! invariants at once — but the targeted rule must be among them.
+//!
+//! The final property test is the other half of the contract: across
+//! seeded random operators, precisions, and feasible mapping candidates,
+//! every unmutated codegen stream must be verifier-clean (no false
+//! positives).
+
+use speed_rvv::analysis::{verify_op, verify_segments, Rule, VerifyReport};
+use speed_rvv::compiler::{compile_op_with, MemLayout};
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::dataflow::{self, MappingChoice};
+use speed_rvv::isa::{
+    Dim, Insn, LdMode, RunKind, Segment, StrategyKind, StreamRun, Vtype, WidthSel,
+};
+use speed_rvv::models::OpDesc;
+
+fn cfg() -> SpeedConfig {
+    SpeedConfig::reference()
+}
+
+/// Compile `op` under `strat` and hand back everything a mutation needs.
+fn compile(op: &OpDesc, strat: StrategyKind) -> (MappingChoice, MemLayout, Vec<Segment>) {
+    let choice = MappingChoice::of(strat);
+    let (layout, _) = MemLayout::place(op);
+    let segs = compile_op_with(op, &cfg(), choice, layout, false)
+        .expect("fixture op compiles")
+        .segments;
+    (choice, layout, segs)
+}
+
+fn verify(
+    op: &OpDesc,
+    choice: MappingChoice,
+    layout: MemLayout,
+    segs: &[Segment],
+) -> VerifyReport {
+    verify_segments(op, &cfg(), choice, layout, segs)
+}
+
+/// First `(segment, index)` whose instruction matches `pred`.
+fn find_pos(segs: &[Segment], pred: impl Fn(&Insn) -> bool) -> (usize, usize) {
+    for (s, seg) in segs.iter().enumerate() {
+        if let Some(i) = seg.insns.iter().position(&pred) {
+            return (s, i);
+        }
+    }
+    panic!("instruction pattern not found in stream");
+}
+
+/// First `(segment, index-of-Addi)` of a `(li ; vsald)` pair whose address
+/// falls in `[lo, hi)`.
+fn find_load_pair(segs: &[Segment], lo: u64, hi: u64) -> (usize, usize) {
+    for (s, seg) in segs.iter().enumerate() {
+        let hit = seg.insns.windows(2).position(|p| match (p[0], p[1]) {
+            (Insn::Addi { rd, rs1: 0, imm }, Insn::Vsald { rs1, .. }) => {
+                rd != 0 && rs1 == rd && imm >= 0 && (imm as u64) >= lo && (imm as u64) < hi
+            }
+            _ => false,
+        });
+        if let Some(i) = hit {
+            return (s, i);
+        }
+    }
+    panic!("no load pair addressed in [{lo:#x}, {hi:#x})");
+}
+
+/// First `(segment, index-of-Addi)` of a `(li ; vse)` pair whose address
+/// falls in `[lo, hi)`.
+fn find_store_pair(segs: &[Segment], lo: u64, hi: u64) -> (usize, usize) {
+    for (s, seg) in segs.iter().enumerate() {
+        let hit = seg.insns.windows(2).position(|p| match (p[0], p[1]) {
+            (Insn::Addi { rd, rs1: 0, imm }, Insn::Vse { rs1, .. }) => {
+                rd != 0 && rs1 == rd && imm >= 0 && (imm as u64) >= lo && (imm as u64) < hi
+            }
+            _ => false,
+        });
+        if let Some(i) = hit {
+            return (s, i);
+        }
+    }
+    panic!("no store pair addressed in [{lo:#x}, {hi:#x})");
+}
+
+/// First run of `kind` in the stream as `(segment, run-index)`.
+fn find_run(segs: &[Segment], kind: RunKind) -> (usize, usize) {
+    for (s, seg) in segs.iter().enumerate() {
+        if let Some(r) = seg.runs.iter().position(|r| r.kind == kind) {
+            return (s, r);
+        }
+    }
+    panic!("no {kind:?} run in stream");
+}
+
+fn mm_fixture() -> (OpDesc, MappingChoice, MemLayout, Vec<Segment>) {
+    let op = OpDesc::mm(8, 16, 8, Precision::Int8);
+    let (choice, layout, segs) = compile(&op, StrategyKind::Mm);
+    (op, choice, layout, segs)
+}
+
+fn ff_fixture() -> (OpDesc, MappingChoice, MemLayout, Vec<Segment>) {
+    let op = OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8);
+    let (choice, layout, segs) = compile(&op, StrategyKind::Ff);
+    (op, choice, layout, segs)
+}
+
+// ---------------------------------------------------------------- V-CFG --
+
+#[test]
+fn dropped_vsacfg_fires_v_cfg_01() {
+    let (op, choice, layout, mut segs) = ff_fixture();
+    let (s, i) = find_pos(&segs, |x| matches!(x, Insn::Vsacfg { .. }));
+    segs[s].insns[i] = Insn::Addi { rd: 0, rs1: 0, imm: 0 };
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::CfgNotLatched), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn swapped_precision_fires_v_cfg_02() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, i) = find_pos(&segs, |x| matches!(x, Insn::Vsacfg { .. }));
+    segs[s].insns[i] = Insn::Vsacfg {
+        rd: 25,
+        zimm: Insn::pack_cfg(Precision::Int4, 1, StrategyKind::Mm),
+        uimm: 0,
+    };
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::CfgMismatch), "{:?}", r.diagnostics.first());
+    assert!(!r.fired(Rule::CfgNotLatched), "a latch did happen");
+}
+
+#[test]
+fn dropped_dim_latch_fires_v_cfg_03() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, i) = find_pos(&segs, |x| matches!(x, Insn::VsacfgDim { dim: Dim::K, .. }));
+    segs[s].insns[i] = Insn::Addi { rd: 0, rs1: 0, imm: 0 };
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::DimUnset), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn dropped_vsetvli_fires_v_cfg_04() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, i) = find_pos(&segs, |x| matches!(x, Insn::Vsetvli { .. }));
+    segs[s].insns[i] = Insn::Addi { rd: 0, rs1: 0, imm: 0 };
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::VlUnset), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn undecodable_zimm_fires_v_cfg_05() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, i) = find_pos(&segs, |x| matches!(x, Insn::Vsacfg { .. }));
+    // Precision bits 0b11 decode to no precision at all.
+    segs[s].insns[i] = Insn::Vsacfg { rd: 25, zimm: 0x0003, uimm: 0 };
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::CfgEncoding), "{:?}", r.diagnostics.first());
+}
+
+// ---------------------------------------------------------------- V-REG --
+
+#[test]
+fn tensor_before_any_load_fires_v_reg_01() {
+    let op = OpDesc::mm(4, 4, 4, Precision::Int8);
+    let choice = MappingChoice::of(StrategyKind::Mm);
+    let (layout, _) = MemLayout::place(&op);
+    // A hand-built prologue that latches everything correctly, then fires
+    // a tensor burst with no VSALD ever staged.
+    let seg = Segment::new(vec![
+        Insn::Vsacfg {
+            rd: 25,
+            zimm: Insn::pack_cfg(Precision::Int8, 1, StrategyKind::Mm),
+            uimm: 0,
+        },
+        Insn::Addi { rd: 25, rs1: 0, imm: 4 },
+        Insn::VsacfgDim { rd: 0, rs1: 25, dim: Dim::M },
+        Insn::Addi { rd: 25, rs1: 0, imm: 4 },
+        Insn::VsacfgDim { rd: 0, rs1: 25, dim: Dim::K },
+        Insn::Addi { rd: 25, rs1: 0, imm: 4 },
+        Insn::VsacfgDim { rd: 0, rs1: 25, dim: Dim::N },
+        Insn::Addi { rd: 30, rs1: 0, imm: 4 },
+        Insn::Vsetvli { rd: 0, rs1: 30, vtype: Vtype::new(8) },
+        Insn::Vsam { vd: 8, vs1: 0, vs2: 4, stages: 1 },
+    ]);
+    let r = verify(&op, choice, layout, &[seg]);
+    assert!(r.fired(Rule::UseBeforeDef), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn unconsumed_trailing_load_fires_v_reg_02() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let last = segs.len() - 1;
+    segs[last].insns.push(Insn::Addi { rd: 29, rs1: 0, imm: layout.in_addr as i32 });
+    segs[last].insns.push(Insn::Vsald {
+        vd: 2,
+        rs1: 29,
+        mode: LdMode::Sequential,
+        width: WidthSel::FromCfg,
+    });
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::DeadLoad), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn swapped_tensor_operand_fires_v_reg_03() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    // Uniformly remap every burst's input operand so run homogeneity is
+    // preserved but the operand no longer names the freshest load.
+    let mut swapped = 0;
+    for seg in &mut segs {
+        for insn in &mut seg.insns {
+            match insn {
+                Insn::Vsam { vs1, .. } | Insn::Vsac { vs1, .. } => {
+                    *vs1 ^= 1;
+                    swapped += 1;
+                }
+                _ => {}
+            }
+        }
+    }
+    assert!(swapped > 0);
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::StaleOperand), "{:?}", r.diagnostics.first());
+    assert!(!r.fired(Rule::TensorRunNotHomogeneous), "uniform remap keeps runs homogeneous");
+}
+
+// ---------------------------------------------------------------- V-MEM --
+
+#[test]
+fn load_shifted_past_partition_fires_v_mem_01() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, i) = find_load_pair(&segs, layout.in_addr, layout.w_addr);
+    // Last byte of the input partition: the transfer now runs off its end
+    // (while the base address still classifies as an input-region load).
+    let shifted = layout.in_addr + op.input_bytes() - 1;
+    if let Insn::Addi { rd, .. } = segs[s].insns[i] {
+        segs[s].insns[i] = Insn::Addi { rd, rs1: 0, imm: shifted as i32 };
+    }
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::LoadOutOfRegion), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn misaligned_output_store_fires_v_mem_02() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, i) = find_store_pair(&segs, layout.out_addr, layout.partial_addr);
+    if let Insn::Addi { rd, imm, .. } = segs[s].insns[i] {
+        segs[s].insns[i] = Insn::Addi { rd, rs1: 0, imm: imm + 4 };
+    }
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::StoreNotRow), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn non_accumulator_partial_spill_fires_v_mem_03() {
+    let op = OpDesc::mm(4, 4, 4, Precision::Int8);
+    let choice = MappingChoice::of(StrategyKind::Mm);
+    let (layout, _) = MemLayout::place(&op);
+    // A spill drained at SEW 8: partials are 32-bit accumulators.
+    let seg = Segment::new(vec![
+        Insn::Addi { rd: 30, rs1: 0, imm: 4 },
+        Insn::Vsetvli { rd: 0, rs1: 30, vtype: Vtype::new(8) },
+        Insn::Addi { rd: 27, rs1: 0, imm: layout.partial_addr as i32 },
+        Insn::Vse { vs3: 16, rs1: 27, eew: 32 },
+    ]);
+    let r = verify(&op, choice, layout, &[seg]);
+    assert!(r.fired(Rule::PartialOutOfRegion), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn untracked_address_fires_v_mem_04() {
+    let op = OpDesc::mm(4, 4, 4, Precision::Int8);
+    let choice = MappingChoice::of(StrategyKind::Mm);
+    let (layout, _) = MemLayout::place(&op);
+    // x22 is never written: the access is not statically provable.
+    let seg = Segment::new(vec![
+        Insn::Vsacfg {
+            rd: 25,
+            zimm: Insn::pack_cfg(Precision::Int8, 1, StrategyKind::Mm),
+            uimm: 0,
+        },
+        Insn::Addi { rd: 30, rs1: 0, imm: 4 },
+        Insn::Vsetvli { rd: 0, rs1: 30, vtype: Vtype::new(8) },
+        Insn::Vsald { vd: 0, rs1: 22, mode: LdMode::Sequential, width: WidthSel::FromCfg },
+    ]);
+    let r = verify(&op, choice, layout, &[seg]);
+    assert!(r.fired(Rule::UnprovenAccess), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn oversized_broadcast_fires_v_mem_05() {
+    let op = OpDesc::mm(4, 4, 4, Precision::Int8);
+    let choice = MappingChoice::of(StrategyKind::Mm);
+    let (layout, _) = MemLayout::place(&op);
+    // 100_000 broadcast bytes cannot fit one vector-register region.
+    let seg = Segment::new(vec![
+        Insn::Vsacfg {
+            rd: 25,
+            zimm: Insn::pack_cfg(Precision::Int8, 1, StrategyKind::Mm),
+            uimm: 0,
+        },
+        Insn::Addi { rd: 30, rs1: 0, imm: 100_000 },
+        Insn::Vsetvli { rd: 0, rs1: 30, vtype: Vtype::new(8) },
+        Insn::Addi { rd: 29, rs1: 0, imm: layout.in_addr as i32 },
+        Insn::Vsald { vd: 0, rs1: 29, mode: LdMode::Broadcast, width: WidthSel::FromCfg },
+    ]);
+    let r = verify(&op, choice, layout, &[seg]);
+    assert!(r.fired(Rule::VrfOverflow), "{:?}", r.diagnostics.first());
+}
+
+// ---------------------------------------------------------------- V-RUN --
+
+#[test]
+fn out_of_bounds_run_fires_v_run_01() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let last = segs.len() - 1;
+    let n = segs[last].insns.len() as u32;
+    segs[last].runs.push(StreamRun { start: n, len: 2, kind: RunKind::Load });
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::RunBounds), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn broken_tensor_run_fires_v_run_02() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, ri) = find_run(&segs, RunKind::Tensor);
+    let start = segs[s].runs[ri].start as usize;
+    // A non-tensor instruction where the run metadata promises a burst.
+    segs[s].insns[start] = Insn::Vmv { vd: 8, rs1: 0 };
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::TensorRunNotHomogeneous), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn corrupted_load_pair_fires_v_run_03() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, ri) = find_run(&segs, RunKind::Load);
+    let i = segs[s].runs[ri].start as usize + 1;
+    if let Insn::Vsald { vd, mode, width, .. } = segs[s].insns[i] {
+        // The load no longer reads the address its `li` partner set up.
+        segs[s].insns[i] = Insn::Vsald { vd, rs1: 21, mode, width };
+    } else {
+        panic!("load run does not start with (li ; vsald)");
+    }
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::LoadRunPairs), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn corrupted_store_pair_fires_v_run_04() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let (s, ri) = find_run(&segs, RunKind::Store);
+    let i = segs[s].runs[ri].start as usize + 1;
+    if let Insn::Vse { vs3, eew, .. } = segs[s].insns[i] {
+        segs[s].insns[i] = Insn::Vse { vs3, rs1: 21, eew };
+    } else {
+        panic!("store run does not start with (li ; vse)");
+    }
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::StoreRunPairs), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn zero_stage_burst_fires_v_run_05() {
+    let (op, choice, layout, mut segs) = mm_fixture();
+    let mut zeroed = 0;
+    for seg in &mut segs {
+        for insn in &mut seg.insns {
+            match insn {
+                Insn::Vsam { stages, .. } | Insn::Vsac { stages, .. } => {
+                    *stages = 0;
+                    zeroed += 1;
+                }
+                _ => {}
+            }
+        }
+    }
+    assert!(zeroed > 0);
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::ZeroStageTensor), "{:?}", r.diagnostics.first());
+    assert!(!r.fired(Rule::TensorRunNotHomogeneous), "uniform zeroing keeps runs homogeneous");
+}
+
+// ---------------------------------------------------------------- V-RES --
+
+#[test]
+fn extra_weight_fetch_fires_v_res_01() {
+    let (op, choice, layout, mut segs) = ff_fixture();
+    // One more weight-region fetch than the tensor holds: an FF stream
+    // promised residency, so any refetch is a violation.
+    let last = segs.len() - 1;
+    segs[last].insns.push(Insn::Addi { rd: 29, rs1: 0, imm: layout.w_addr as i32 });
+    segs[last].insns.push(Insn::Vsald {
+        vd: 4,
+        rs1: 29,
+        mode: LdMode::Sequential,
+        width: WidthSel::FromCfg,
+    });
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::WeightRefetch), "{:?}", r.diagnostics.first());
+}
+
+#[test]
+fn missing_weight_fetch_fires_v_res_02() {
+    let (op, choice, layout, mut segs) = ff_fixture();
+    let (s, i) = find_load_pair(&segs, layout.w_addr, layout.out_addr);
+    // Erase one weight transfer entirely (run metadata cleared so only
+    // the coverage invariant is under test).
+    segs[s].insns[i] = Insn::Addi { rd: 0, rs1: 0, imm: 0 };
+    segs[s].insns[i + 1] = Insn::Addi { rd: 0, rs1: 0, imm: 0 };
+    segs[s].runs.clear();
+    let r = verify(&op, choice, layout, &segs);
+    assert!(r.fired(Rule::WeightCoverage), "{:?}", r.diagnostics.first());
+}
+
+// ---------------------------------------------------- no false positives --
+
+/// xorshift64* PRNG (same shape as the other property suites): the tests
+/// must be deterministic, so no OS entropy.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u32 {
+        (lo + self.next() % (hi - lo + 1)) as u32
+    }
+}
+
+#[test]
+fn every_codegen_stream_is_verifier_clean() {
+    let cfg = cfg();
+    let precs = [Precision::Int16, Precision::Int8, Precision::Int4];
+    let mut rng = Rng::new(0x5EED_CAFE);
+    let mut verified = 0u32;
+    for trial in 0..40u32 {
+        let prec = precs[rng.range(0, 2) as usize];
+        let op = match rng.range(0, 3) {
+            0 => OpDesc::mm(rng.range(1, 16), rng.range(1, 40), rng.range(1, 16), prec),
+            1 => {
+                let k = [1u32, 3][rng.range(0, 1) as usize];
+                OpDesc::conv(
+                    rng.range(1, 10),
+                    rng.range(1, 10),
+                    rng.range(4, 12),
+                    rng.range(4, 12),
+                    k,
+                    rng.range(1, 2),
+                    k / 2,
+                    prec,
+                )
+            }
+            2 => OpDesc::pwcv(rng.range(1, 12), rng.range(1, 12), rng.range(2, 10), rng.range(2, 10), prec),
+            _ => {
+                let k = [1u32, 3][rng.range(0, 1) as usize];
+                OpDesc::dwcv(rng.range(1, 12), rng.range(4, 12), rng.range(4, 12), k, rng.range(1, 2), k / 2, prec)
+            }
+        };
+        if op.validate().is_err() {
+            continue;
+        }
+        for strat in StrategyKind::ALL {
+            if !dataflow::feasible(strat, &op, &cfg) {
+                continue;
+            }
+            let mut choices = vec![MappingChoice::of(strat)];
+            // One non-default chunk per strategy keeps the tuner's
+            // candidate space honest without blowing up test time.
+            if let Some(c) = dataflow::chunk_candidates(&op, &cfg, strat).first() {
+                choices.push(MappingChoice { chunk: Some(*c), ..MappingChoice::of(strat) });
+            }
+            for choice in choices {
+                let report = verify_op(&op, &cfg, choice)
+                    .unwrap_or_else(|e| panic!("trial {trial} {op:?} {strat}: {e}"));
+                assert!(
+                    report.is_clean(),
+                    "trial {trial} {op:?} {choice}: {:?}",
+                    report.diagnostics.first()
+                );
+                verified += 1;
+            }
+        }
+    }
+    assert!(verified > 40, "property test exercised too few programs ({verified})");
+}
