@@ -10,7 +10,7 @@ use speed_rvv::config::Precision;
 use speed_rvv::engine::Engine;
 use speed_rvv::isa::{assemble, StrategyKind};
 use speed_rvv::models::ops::OpDesc;
-use speed_rvv::runtime::Engine as PjrtEngine;
+use speed_rvv::runtime::PjrtEngine;
 use speed_rvv::{SpeedConfig, SpeedError};
 
 fn main() -> Result<(), SpeedError> {

@@ -18,11 +18,10 @@
 use std::time::Instant;
 
 use speed_rvv::config::Precision;
-use speed_rvv::coordinator::Policy;
 use speed_rvv::models::ops::OpDesc;
 use speed_rvv::models::zoo::Model;
-use speed_rvv::runtime::Engine as PjrtEngine;
-use speed_rvv::serve::{RequestKind, ServeOptions};
+use speed_rvv::runtime::PjrtEngine;
+use speed_rvv::serve::{Request, ServeOptions};
 use speed_rvv::{ServePool, SpeedConfig, SpeedError};
 
 const REQUESTS: usize = 64;
@@ -103,11 +102,7 @@ fn main() -> Result<(), SpeedError> {
         cfg,
         ServeOptions { workers: 2, capacity: 32, ..Default::default() },
     )?;
-    let results = pool.run_all((0..REQUESTS).map(|_| RequestKind::Model {
-        model: block.clone(),
-        prec: Precision::Int8,
-        policy: Policy::Mixed,
-    }))?;
+    let results = pool.run_all((0..REQUESTS).map(|_| Request::model(block.clone())))?;
     let metrics = pool.shutdown();
 
     let cycles = results[0].stats.cycles;

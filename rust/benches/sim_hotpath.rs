@@ -48,7 +48,7 @@ fn main() {
     }
 
     // --- PJRT execute hot path (if artifacts built) ----------------------
-    if let Ok(mut engine) = speed_rvv::runtime::Engine::open("artifacts") {
+    if let Ok(mut engine) = speed_rvv::runtime::PjrtEngine::open("artifacts") {
         let a: Vec<i32> = vec![1; 32 * 64];
         let b: Vec<i32> = vec![1; 64 * 32];
         let _ = engine.execute("mm_i8", &[a.clone(), b.clone()]).unwrap(); // warm

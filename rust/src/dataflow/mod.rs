@@ -257,7 +257,12 @@ pub fn resolve_chunk(
 pub fn chunk_candidates(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Vec<u32> {
     let d = default_chunk(op, cfg, strat);
     let mut out = Vec::new();
-    for div in [2u32, 4] {
+    // Skinny MMs — autoregressive decode steps: at most one row block,
+    // with the reduction dimension growing alongside the KV cache — are
+    // dominated by the K walk, so the search gets a finer d/8 arm there.
+    let skinny = op.kind == OpKind::Mm && op.m <= cfg.lanes * cfg.tile_r;
+    let divs: &[u32] = if skinny { &[2, 4, 8] } else { &[2, 4] };
+    for &div in divs {
         let c = resolve_chunk(op, cfg, strat, Some(d / div));
         if c < d && !out.contains(&c) {
             out.push(c);
@@ -673,5 +678,41 @@ mod tests {
         assert_eq!(resolve_jchunk(&conv, &cfg, StrategyKind::Ffcs, Some(8), 4), None);
         let narrow = OpDesc::mm(8, 32, cfg.tile_c, Precision::Int8);
         assert!(jchunk_candidates(&narrow, &cfg, StrategyKind::Mm).is_empty());
+    }
+
+    #[test]
+    fn decode_shapes_stay_feasible_and_get_skinny_candidates() {
+        let cfg = cfg();
+        // Decode-step MMs: one output row (or one per fused head), K
+        // growing with the KV cache. Every growing-K variant must stay
+        // feasible and resolve legal chunks — the serve path tunes each
+        // cache length as its own workload.
+        for prec in Precision::ALL {
+            let pp = prec.pp();
+            for kv in [64u32, 96, 160, 256, 1024] {
+                let op = OpDesc::mm(1, kv, 128, prec);
+                assert!(feasible(StrategyKind::Mm, &op, &cfg), "{prec} kv={kv}");
+                let d = default_chunk(&op, &cfg, StrategyKind::Mm);
+                for c in chunk_candidates(&op, &cfg, StrategyKind::Mm) {
+                    assert!(c < d && c >= pp && c % pp == 0, "{prec} kv={kv}: {c}");
+                }
+            }
+        }
+        // The skinny arm: a single-row-block MM offers a finer minimum
+        // candidate than the same-(K, N) many-row MM (same default chunk,
+        // since the VRF tile math is M-independent).
+        let skinny = OpDesc::mm(1, 256, 128, Precision::Int16);
+        let wide = OpDesc::mm(1024, 256, 128, Precision::Int16);
+        let d = default_chunk(&skinny, &cfg, StrategyKind::Mm);
+        assert_eq!(d, default_chunk(&wide, &cfg, StrategyKind::Mm));
+        let min_of = |op: &OpDesc| {
+            chunk_candidates(op, &cfg, StrategyKind::Mm).into_iter().min().unwrap()
+        };
+        assert!(
+            min_of(&skinny) < min_of(&wide),
+            "skinny {} !< wide {}",
+            min_of(&skinny),
+            min_of(&wide)
+        );
     }
 }

@@ -37,6 +37,7 @@ use crate::coordinator::{LayerResult, ModelResult, Policy};
 use crate::dataflow::MappingChoice;
 use crate::error::{Result, SpeedError};
 use crate::isa::{Segment, StrategyKind};
+use crate::models::attn::AttnDesc;
 use crate::models::zoo::Model;
 use crate::models::OpDesc;
 use crate::sim::{ExecMode, OpPlan, Processor, SimStats};
@@ -544,6 +545,19 @@ impl<'e> Session<'e> {
         Ok(ModelResult { name: m.name.to_string(), prec, layers, total, scalar_cycles })
     }
 
+    /// Execute one attention layer as its MM composition
+    /// ([`AttnDesc::lower`]): per FlashAttention-style KV tile, a `QK^T`
+    /// score MM and an `AV` weighted-value MM, mapped under the session's
+    /// policy like any other workload (the softmax-scale epilogue between
+    /// them is scalar-core work outside the vector datapath). The engine's
+    /// program cache makes repeated decode steps at the same cache length
+    /// compile nothing.
+    pub fn run_attn(&mut self, desc: &AttnDesc) -> Result<ModelResult> {
+        desc.validate()?;
+        let cfg = *self.engine.config();
+        self.run_model(&desc.to_model(&cfg), desc.prec)
+    }
+
     /// Aggregate stats over everything this session has run.
     pub fn stats(&self) -> &SimStats {
         &self.total
@@ -757,5 +771,25 @@ mod tests {
             .unwrap();
         // CF applies to CONV and PWCV only.
         assert_eq!(r.layers.len(), 2);
+    }
+
+    #[test]
+    fn attention_runs_as_tiled_mm_composition() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let desc = AttnDesc::decode(4, 32, 96, Precision::Int8);
+        let mut session = engine.session();
+        let res = session.run_attn(&desc).unwrap();
+        drop(session);
+        // QK^T and AV per KV tile: an even number of MM layers covering
+        // the layer's full MAC count (tile padding can only add work).
+        assert!(res.layers.len() >= 2 && res.layers.len() % 2 == 0);
+        assert!(res.total.macs >= desc.total_macs());
+        // The same decode shape replays entirely from the program cache.
+        let misses = engine.cache_stats().misses;
+        engine.session().run_attn(&desc).unwrap();
+        assert_eq!(engine.cache_stats().misses, misses);
+        // Malformed descriptors fail typed before touching the datapath.
+        let bad = AttnDesc { head_dim: 0, ..desc };
+        assert!(engine.session().run_attn(&bad).is_err());
     }
 }

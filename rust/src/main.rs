@@ -47,7 +47,7 @@ use speed_rvv::isa::{self, StrategyKind};
 use speed_rvv::models::zoo::{model_by_name, MODELS};
 use speed_rvv::models::OpDesc;
 use speed_rvv::report;
-use speed_rvv::runtime::{golden_check_all, Engine as PjrtEngine};
+use speed_rvv::runtime::{golden_check_all, PjrtEngine};
 use speed_rvv::serve;
 use speed_rvv::sim::ExecMode;
 use speed_rvv::tune::{self, TuneOptions, TunedPlan};

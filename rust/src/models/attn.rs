@@ -1,0 +1,360 @@
+//! Multi-head attention as MM compositions with FlashAttention-style
+//! KV tiling.
+//!
+//! SPEED has no attention primitive — the MPTU executes CONV/PWCV/DWCV/MM
+//! (Sec. III). An attention layer therefore *lowers* to the MM vocabulary:
+//! per KV tile, a `QK^T` score MM and an `AV` weighted-value MM, with the
+//! softmax-scale epilogue on the scalar core (it is part of every model's
+//! `scalar_fraction`, Table I). The tile size is chosen so the resident
+//! working set — one K tile plus one V tile — fits the VRF input
+//! partitions across lanes, the FlashAttention discipline of streaming
+//! the KV cache through on-chip memory exactly once per query block.
+//!
+//! Two layers of fidelity live here:
+//!
+//! * **Cost model** ([`AttnDesc::lower`]) — the MM decomposition the
+//!   simulator prices. Head loops are fused along the M dimension
+//!   (`heads·q_len` rows), the same MAC-identical fusion
+//!   [`crate::models::zoo::vit`] uses; [`AttnDesc::total_macs`] is
+//!   conserved exactly by the tiling.
+//! * **Functional model** ([`attn_reference`] / [`attn_tiled`]) — integer
+//!   attention used by the golden tests. The softmax surrogate is a
+//!   deterministic fixed-point weighting (Q16 `1/√d` score scale, row-max
+//!   normalization, power-of-two weight decay) chosen so that the tiled
+//!   two-pass evaluation is **bit-exact** against the naive reference at
+//!   every precision: pass one reduces the row maximum over tiles (max is
+//!   associative), pass two accumulates the integer numerator/denominator
+//!   (addition is associative), so no floating-point rescaling error
+//!   exists by construction.
+
+use crate::config::{Precision, SpeedConfig};
+use crate::dataflow::partition_budget;
+use crate::error::SpeedError;
+use crate::models::ops::OpDesc;
+use crate::models::zoo::Model;
+
+/// One multi-head attention layer, fully specified.
+///
+/// `q_len` is the number of query tokens this invocation scores
+/// (`kv_len` for prefill, 1 for an autoregressive decode step); `kv_len`
+/// is the number of key/value entries attended over — the KV-cache length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AttnDesc {
+    /// Attention heads.
+    pub heads: u32,
+    /// Per-head feature width (`dim = heads × head_dim`).
+    pub head_dim: u32,
+    /// Query tokens scored by this invocation.
+    pub q_len: u32,
+    /// Key/value entries attended over (KV-cache length).
+    pub kv_len: u32,
+    /// Operand precision of Q/K/V.
+    pub prec: Precision,
+}
+
+impl AttnDesc {
+    /// Prefill-shaped attention: every token attends over the whole
+    /// prompt (`q_len == kv_len == tokens`).
+    pub fn prefill(heads: u32, head_dim: u32, tokens: u32, prec: Precision) -> Self {
+        AttnDesc { heads, head_dim, q_len: tokens, kv_len: tokens, prec }
+    }
+
+    /// Decode-shaped attention: one new query token attends over a
+    /// `kv_len`-entry cache (`q_len == 1`).
+    pub fn decode(heads: u32, head_dim: u32, kv_len: u32, prec: Precision) -> Self {
+        AttnDesc { heads, head_dim, q_len: 1, kv_len, prec }
+    }
+
+    /// Model width `heads × head_dim`.
+    pub fn dim(&self) -> u32 {
+        self.heads * self.head_dim
+    }
+
+    /// Validate dimension consistency.
+    pub fn validate(&self) -> Result<(), SpeedError> {
+        if self.heads == 0 || self.head_dim == 0 || self.q_len == 0 || self.kv_len == 0 {
+            return Err(SpeedError::Compile(format!(
+                "attention dims must be nonzero: {self:?}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Total multiply-accumulates: `QK^T` plus `AV`, summed over heads.
+    pub fn total_macs(&self) -> u64 {
+        2 * self.heads as u64 * self.q_len as u64 * self.kv_len as u64 * self.head_dim as u64
+    }
+
+    /// Bytes the K and V caches occupy at the operand precision
+    /// (nibble-packed for INT4) — the per-layer residency the serving
+    /// scheduler tracks.
+    pub fn kv_bytes(&self) -> u64 {
+        2 * self.prec.bytes_for(self.kv_len as u64 * self.dim() as u64)
+    }
+
+    /// FlashAttention-style KV tile: the largest PP multiple of KV rows
+    /// whose K tile plus V tile (`2 × tile × dim` operands at the
+    /// precision) fits the VRF input partitions aggregated over lanes
+    /// ([`partition_budget`] per lane), so the cache streams through the
+    /// VRF once without spilling partials. At least PP rows; capped at
+    /// the cache length (a short cache is a single tile).
+    pub fn kv_tile(&self, cfg: &SpeedConfig) -> u32 {
+        let budget = cfg.lanes as u64 * partition_budget(cfg) as u64;
+        let row_bytes = self.prec.bytes_for(2 * self.dim() as u64).max(1);
+        let fit = (budget / row_bytes).min(u32::MAX as u64) as u32;
+        let pp = self.prec.pp();
+        ((fit / pp).max(1) * pp).min(self.kv_len.max(1))
+    }
+
+    /// Lower to the MM vocabulary: per KV tile of [`AttnDesc::kv_tile`]
+    /// rows, a `QK^T` score MM (`heads·q_len × head_dim × tile`) and an
+    /// `AV` weighted-value MM (`heads·q_len × tile × head_dim`). Head
+    /// loops are fused along M — identical MAC count, one compiled
+    /// program per tile shape. The softmax-scale epilogue between the two
+    /// MMs is scalar-core work, modeled by the owning model's
+    /// `scalar_fraction`.
+    pub fn lower(&self, cfg: &SpeedConfig) -> Vec<OpDesc> {
+        let tile = self.kv_tile(cfg);
+        let rows = self.heads * self.q_len;
+        let mut ops = Vec::new();
+        let mut off = 0u32;
+        while off < self.kv_len {
+            let t = tile.min(self.kv_len - off);
+            ops.push(OpDesc::mm(rows, self.head_dim, t, self.prec));
+            ops.push(OpDesc::mm(rows, t, self.head_dim, self.prec));
+            off += t;
+        }
+        ops
+    }
+
+    /// The lowered layer as a standalone [`Model`] (for
+    /// [`Session::run_attn`](crate::engine::Session::run_attn)).
+    pub fn to_model(&self, cfg: &SpeedConfig) -> Model {
+        Model { name: "attn", ops: self.lower(cfg), scalar_fraction: 0.0 }
+    }
+}
+
+/// Q16 fixed-point score scale `⌊65536 / ⌊√head_dim⌋⌋` — the integer
+/// stand-in for attention's `1/√d` temperature.
+fn scale_q16(head_dim: u32) -> i64 {
+    let mut r = 0u32;
+    while (r + 1) * (r + 1) <= head_dim {
+        r += 1;
+    }
+    (1i64 << 16) / r.max(1) as i64
+}
+
+/// Weight-decay granularity: the scaled-score deficit to the row maximum
+/// is quantized in steps of `2^WEIGHT_SHIFT`, each step halving the
+/// fixed-point weight (`WEIGHT_ONE >> step`).
+const WEIGHT_SHIFT: u32 = 8;
+/// Fixed-point unity weight (Q16); the row-maximum score always weighs
+/// this much, so the denominator is never zero.
+const WEIGHT_ONE: i64 = 1 << 16;
+
+/// Integer softmax-surrogate weight of a scaled score `s` under row
+/// maximum `m` (`m ≥ s`): `2^16` halved once per `2^WEIGHT_SHIFT` of
+/// deficit, reaching exactly zero past 16 halvings.
+fn weight(m: i64, s: i64) -> i64 {
+    let steps = ((m - s) >> WEIGHT_SHIFT).min(63) as u32;
+    WEIGHT_ONE >> steps
+}
+
+/// Naive scalar reference for integer multi-head attention.
+///
+/// Layout (row-major, head-major): `q` is `heads × q_len × head_dim`,
+/// `k` and `v` are `heads × kv_len × head_dim`; the result is
+/// `heads × q_len × head_dim`, requantized to `desc.prec`'s range.
+///
+/// Per head and query row: i64 `QK^T` scores, Q16 `1/√d` scaling
+/// ([`scale_q16`]), row-max normalization, power-of-two weights
+/// ([`weight`]), then `⌊Σ wv / Σ w⌋` (truncating i64 division) clamped
+/// into the precision's signed range.
+pub fn attn_reference(desc: &AttnDesc, q: &[i32], k: &[i32], v: &[i32]) -> Vec<i32> {
+    attn_tiled(desc, q, k, v, desc.kv_len.max(1))
+}
+
+/// Two-pass streaming evaluation of the same integer attention over KV
+/// tiles of `tile` rows: pass one reduces the row maximum across tiles,
+/// pass two accumulates the weight denominator and the weighted-value
+/// numerator. Both reductions are associative in integer arithmetic, so
+/// the result is bit-exact against [`attn_reference`] for **any** tile
+/// size — the property the FlashAttention-style lowering relies on and
+/// `tests/attn_golden.rs` enforces.
+pub fn attn_tiled(desc: &AttnDesc, q: &[i32], k: &[i32], v: &[i32], tile: u32) -> Vec<i32> {
+    let (h, hd) = (desc.heads as usize, desc.head_dim as usize);
+    let (ql, kl) = (desc.q_len as usize, desc.kv_len as usize);
+    assert_eq!(q.len(), h * ql * hd, "Q operand shape");
+    assert_eq!(k.len(), h * kl * hd, "K operand shape");
+    assert_eq!(v.len(), h * kl * hd, "V operand shape");
+    let tile = (tile as usize).max(1);
+    let scale = scale_q16(desc.head_dim);
+    let score = |qrow: &[i32], krow: &[i32]| -> i64 {
+        let dot: i64 = qrow
+            .iter()
+            .zip(krow)
+            .map(|(&a, &b)| a as i64 * b as i64)
+            .sum();
+        (dot * scale) >> 16
+    };
+    let mut out = vec![0i32; h * ql * hd];
+    for head in 0..h {
+        let kbase = head * kl * hd;
+        for row in 0..ql {
+            let qrow = &q[(head * ql + row) * hd..(head * ql + row + 1) * hd];
+            // Pass 1: row maximum of the scaled scores, tile by tile.
+            let mut m = i64::MIN;
+            for t0 in (0..kl).step_by(tile) {
+                for j in t0..(t0 + tile).min(kl) {
+                    m = m.max(score(qrow, &k[kbase + j * hd..kbase + (j + 1) * hd]));
+                }
+            }
+            // Pass 2: integer numerator/denominator, tile by tile.
+            let mut den = 0i64;
+            let mut num = vec![0i64; hd];
+            for t0 in (0..kl).step_by(tile) {
+                for j in t0..(t0 + tile).min(kl) {
+                    let krow = &k[kbase + j * hd..kbase + (j + 1) * hd];
+                    let w = weight(m, score(qrow, krow));
+                    if w == 0 {
+                        continue;
+                    }
+                    den += w;
+                    let vrow = &v[kbase + j * hd..kbase + (j + 1) * hd];
+                    for (acc, &val) in num.iter_mut().zip(vrow) {
+                        *acc += w * val as i64;
+                    }
+                }
+            }
+            let orow = &mut out[(head * ql + row) * hd..(head * ql + row + 1) * hd];
+            for (o, n) in orow.iter_mut().zip(&num) {
+                *o = desc.prec.clamp((n / den) as i32);
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic Q/K/V operands for `desc` from `seed` (values uniform in
+/// the precision's signed range) — the shared generator of the attention
+/// golden tests.
+pub fn seeded_operands(desc: &AttnDesc, seed: u64) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    let (lo, hi) = desc.prec.range();
+    let span = (hi - lo + 1) as u64;
+    let mut state = seed ^ 0x9E37_79B9_7F4A_7C15;
+    let mut next = move || {
+        // xorshift64* — matches the scenario RNG family.
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        let r = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
+        lo + (r % span) as i32
+    };
+    let qn = (desc.heads * desc.q_len * desc.head_dim) as usize;
+    let kn = (desc.heads * desc.kv_len * desc.head_dim) as usize;
+    let q: Vec<i32> = (0..qn).map(|_| next()).collect();
+    let k: Vec<i32> = (0..kn).map(|_| next()).collect();
+    let v: Vec<i32> = (0..kn).map(|_| next()).collect();
+    (q, k, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_validation() {
+        let a = AttnDesc::prefill(4, 32, 64, Precision::Int8);
+        assert_eq!((a.q_len, a.kv_len, a.dim()), (64, 64, 128));
+        let d = AttnDesc::decode(4, 32, 48, Precision::Int4);
+        assert_eq!(d.q_len, 1);
+        assert!(a.validate().is_ok());
+        assert!(AttnDesc::decode(0, 32, 48, Precision::Int8).validate().is_err());
+        assert!(AttnDesc::prefill(4, 32, 0, Precision::Int8).validate().is_err());
+    }
+
+    #[test]
+    fn kv_bytes_nibble_packs() {
+        let d = AttnDesc::decode(4, 32, 3, Precision::Int4);
+        // 2 caches x 3 rows x 128 nibbles = 384 B at INT8; halved at INT4.
+        assert_eq!(d.kv_bytes(), 2 * (3 * 128) / 2);
+        assert_eq!(
+            AttnDesc { prec: Precision::Int16, ..d }.kv_bytes(),
+            2 * 3 * 128 * 2
+        );
+    }
+
+    #[test]
+    fn lowering_conserves_macs_and_validates() {
+        let cfg = SpeedConfig::reference();
+        for prec in Precision::ALL {
+            for (heads, hd, q, kv) in
+                [(4, 32, 64, 64), (4, 32, 1, 48), (12, 64, 197, 197), (8, 64, 1, 2000)]
+            {
+                let a = AttnDesc { heads, head_dim: hd, q_len: q, kv_len: kv, prec };
+                let ops = a.lower(&cfg);
+                assert!(ops.len() >= 2 && ops.len() % 2 == 0);
+                let macs: u64 = ops.iter().map(|o| o.total_macs()).sum();
+                assert_eq!(macs, a.total_macs(), "{a:?}");
+                for op in &ops {
+                    op.validate().unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kv_tile_fits_vrf_input_partitions() {
+        // A long cache must be split: tile x dim K and V slices together
+        // stay within the aggregated per-lane input-partition budget.
+        let cfg = SpeedConfig::reference();
+        for prec in Precision::ALL {
+            let a = AttnDesc { heads: 8, head_dim: 64, q_len: 1, kv_len: 100_000, prec };
+            let t = a.kv_tile(&cfg);
+            assert_eq!(t % prec.pp(), 0);
+            assert!(t < a.kv_len, "long cache must tile at {prec}");
+            assert!(
+                prec.bytes_for(2 * t as u64 * a.dim() as u64)
+                    <= cfg.lanes as u64 * partition_budget(&cfg) as u64,
+                "tile overflows the VRF budget at {prec}"
+            );
+        }
+        // A short cache is a single tile.
+        let a = AttnDesc::prefill(4, 32, 16, Precision::Int8);
+        assert_eq!(a.kv_tile(&cfg), 16);
+    }
+
+    #[test]
+    fn tiled_matches_reference_at_every_precision_and_tile() {
+        for prec in Precision::ALL {
+            let a = AttnDesc { heads: 2, head_dim: 8, q_len: 5, kv_len: 23, prec };
+            let (q, k, v) = seeded_operands(&a, 0xC0FF_EE00 + prec.bits() as u64);
+            let golden = attn_reference(&a, &q, &k, &v);
+            assert_eq!(golden.len(), 2 * 5 * 8);
+            let (lo, hi) = prec.range();
+            assert!(golden.iter().all(|&o| (lo..=hi).contains(&o)));
+            for tile in [1, 2, 3, 7, 8, 16, 23, 64] {
+                assert_eq!(
+                    attn_tiled(&a, &q, &k, &v, tile),
+                    golden,
+                    "tile {tile} diverges at {prec}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attention_attends_to_the_matching_key() {
+        // One query identical to key row 1 and far from the rest: the
+        // output must reproduce value row 1 (weights collapse onto it).
+        let a = AttnDesc { heads: 1, head_dim: 4, q_len: 1, kv_len: 3, prec: Precision::Int8 };
+        let q = vec![100, -100, 100, -100];
+        let k = vec![
+            -100, 100, -100, 100, // opposite -> huge deficit -> weight 0
+            100, -100, 100, -100, // match -> row max
+            0, 0, 0, 0, // zero score -> large deficit
+        ];
+        let v = vec![1, 2, 3, 4, 50, -60, 70, -80, 9, 9, 9, 9];
+        assert_eq!(attn_reference(&a, &q, &k, &v), vec![50, -60, 70, -80]);
+    }
+}

@@ -1,8 +1,10 @@
 //! DNN workload descriptions: operator descriptors and the benchmark
 //! network zoo of the paper's evaluation (Sec. IV-A).
 
+pub mod attn;
 pub mod ops;
 pub mod zoo;
 
+pub use attn::{attn_reference, attn_tiled, AttnDesc};
 pub use ops::{OpDesc, OpKind};
-pub use zoo::{model_by_name, Model, MODELS};
+pub use zoo::{llm_spec, model_by_name, LlmSpec, Model, MODELS};

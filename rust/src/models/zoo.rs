@@ -1,5 +1,7 @@
 //! The benchmark network zoo of Sec. IV: VGG16, ResNet18, GoogLeNet,
-//! MobileNetV2, ViT-Tiny and ViT-B/16, expressed as operator sequences.
+//! MobileNetV2, ViT-Tiny and ViT-B/16, expressed as operator sequences —
+//! plus `llm_tiny`, a small decoder-only transformer whose prefill and
+//! autoregressive-decode forms drive the stateful serving scenarios.
 //!
 //! Layer tables follow the published architectures at 224×224 (CNNs) /
 //! 197 tokens (ViTs), batch 1. Weight values are synthetic (shapes are what
@@ -8,7 +10,8 @@
 //! non-vectorizable glue) is modeled per Table I's complete-application
 //! evaluation.
 
-use crate::config::Precision;
+use crate::config::{Precision, SpeedConfig};
+use crate::models::attn::AttnDesc;
 use crate::models::ops::OpDesc;
 
 /// A benchmark network: a name plus its vectorizable operator sequence.
@@ -41,10 +44,12 @@ impl Model {
     }
 }
 
-/// All six benchmark models (constructed at INT8; use [`Model::at_precision`]
-/// to re-type).
-pub const MODELS: [&str; 6] =
-    ["vgg16", "resnet18", "googlenet", "mobilenetv2", "vit_tiny", "vit_b16"];
+/// All seven benchmark models (constructed at INT8; use
+/// [`Model::at_precision`] to re-type). `llm_tiny` resolves to its
+/// prefill form at [`LLM_DEFAULT_TOKENS`] tokens; the per-step decode
+/// workloads come from [`LlmSpec::decode_step`].
+pub const MODELS: [&str; 7] =
+    ["vgg16", "resnet18", "googlenet", "mobilenetv2", "vit_tiny", "vit_b16", "llm_tiny"];
 
 /// Look up a benchmark model by name.
 pub fn model_by_name(name: &str) -> Option<Model> {
@@ -56,8 +61,101 @@ pub fn model_by_name(name: &str) -> Option<Model> {
         "mobilenetv2" => Some(mobilenetv2(p)),
         "vit_tiny" => Some(vit(p, "vit_tiny", 192, 768, 197, 12)),
         "vit_b16" => Some(vit(p, "vit_b16", 768, 3072, 197, 12)),
+        "llm_tiny" => Some(LLM_TINY.prefill(p, LLM_DEFAULT_TOKENS)),
         _ => None,
     }
+}
+
+/// Prompt length `llm_tiny` prefills at when resolved through
+/// [`model_by_name`] (the fig. 12 / verify sweeps); serving scenarios
+/// choose their own prompt and decode lengths per session.
+pub const LLM_DEFAULT_TOKENS: u32 = 64;
+
+/// The decoder-only transformer of the zoo: deliberately tiny (2 layers,
+/// width 128) so the whole-zoo sweeps stay fast while still exercising
+/// multi-head attention, KV growth, and decode-shaped GEMMs.
+pub const LLM_TINY: LlmSpec =
+    LlmSpec { name: "llm_tiny", dim: 128, heads: 4, mlp: 256, depth: 2 };
+
+/// Geometry of a decoder-only transformer family entry, from which both
+/// serving phases derive: [`LlmSpec::prefill`] (whole-prompt attention,
+/// throughput-bound) and [`LlmSpec::decode_step`] (one token against a
+/// growing KV cache, memory-bound at every precision). The KV residency
+/// the serving scheduler tracks is [`LlmSpec::kv_bytes`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LlmSpec {
+    /// Zoo name of the family (both phases report under it).
+    pub name: &'static str,
+    /// Model width (`heads × head_dim`).
+    pub dim: u32,
+    /// Attention heads per layer.
+    pub heads: u32,
+    /// MLP hidden width.
+    pub mlp: u32,
+    /// Transformer layers.
+    pub depth: u32,
+}
+
+impl LlmSpec {
+    /// Per-head feature width.
+    pub fn head_dim(&self) -> u32 {
+        self.dim / self.heads
+    }
+
+    /// The prefill workload: every prompt token through every layer —
+    /// QKV projection, tiled attention ([`AttnDesc::lower`] on the
+    /// reference instance), output projection, and the MLP pair — plus
+    /// the last-token LM head. Embedding lookup is scalar-core work
+    /// (no MACs), inside `scalar_fraction` with softmax and layernorm.
+    pub fn prefill(&self, prec: Precision, tokens: u32) -> Model {
+        let cfg = SpeedConfig::reference();
+        let t = tokens.max(1);
+        let mut ops = Vec::new();
+        for _ in 0..self.depth {
+            ops.push(OpDesc::mm(t, self.dim, 3 * self.dim, prec));
+            ops.extend(AttnDesc::prefill(self.heads, self.head_dim(), t, prec).lower(&cfg));
+            ops.push(OpDesc::mm(t, self.dim, self.dim, prec));
+            ops.push(OpDesc::mm(t, self.dim, self.mlp, prec));
+            ops.push(OpDesc::mm(t, self.mlp, self.dim, prec));
+        }
+        ops.push(OpDesc::mm(1, self.dim, 1000, prec));
+        Model { name: self.name, ops, scalar_fraction: 0.10 }
+    }
+
+    /// One autoregressive decode step: a single new token attends over a
+    /// `kv_len`-entry cache (`kv_len` counts the new token itself, i.e.
+    /// prompt length + tokens generated so far). Every projection MM has
+    /// `m == 1` and the head-fused attention MMs have `m == heads` — the
+    /// memory-bound skinny-MM regime the tuner's decode candidates
+    /// target.
+    pub fn decode_step(&self, prec: Precision, kv_len: u32) -> Model {
+        let cfg = SpeedConfig::reference();
+        let mut ops = Vec::new();
+        for _ in 0..self.depth {
+            ops.push(OpDesc::mm(1, self.dim, 3 * self.dim, prec));
+            ops.extend(
+                AttnDesc::decode(self.heads, self.head_dim(), kv_len.max(1), prec).lower(&cfg),
+            );
+            ops.push(OpDesc::mm(1, self.dim, self.dim, prec));
+            ops.push(OpDesc::mm(1, self.dim, self.mlp, prec));
+            ops.push(OpDesc::mm(1, self.mlp, self.dim, prec));
+        }
+        ops.push(OpDesc::mm(1, self.dim, 1000, prec));
+        Model { name: self.name, ops, scalar_fraction: 0.10 }
+    }
+
+    /// Bytes the session's K and V caches occupy across all layers at
+    /// `kv_len` cached tokens — the residency the serving scheduler
+    /// charges against its per-worker KV budget.
+    pub fn kv_bytes(&self, prec: Precision, kv_len: u32) -> u64 {
+        self.depth as u64
+            * AttnDesc::decode(self.heads, self.head_dim(), kv_len.max(1), prec).kv_bytes()
+    }
+}
+
+/// Look up a transformer family entry by zoo name.
+pub fn llm_spec(name: &str) -> Option<LlmSpec> {
+    (name == LLM_TINY.name).then_some(LLM_TINY)
 }
 
 /// VGG16: thirteen 3×3 CONV layers + three FC layers.
@@ -316,6 +414,43 @@ mod tests {
             .map(|o| o.total_macs())
             .sum();
         assert!(pw_dw as f64 / m.total_macs() as f64 > 0.8);
+    }
+
+    #[test]
+    fn llm_tiny_phases_validate_and_scale() {
+        let spec = llm_spec("llm_tiny").unwrap();
+        assert_eq!(spec, LLM_TINY);
+        assert!(llm_spec("vgg16").is_none());
+        for prec in Precision::ALL {
+            let pre = spec.prefill(prec, 32);
+            let step = spec.decode_step(prec, 33);
+            for op in pre.ops.iter().chain(&step.ops) {
+                op.validate().unwrap_or_else(|e| panic!("{prec}: {e}"));
+            }
+            // Decode is skinny: one output row per MM, or one per head
+            // for the head-fused attention MMs.
+            assert!(step.ops.iter().all(|o| o.m == 1 || o.m == spec.heads));
+            assert!(step.ops.iter().any(|o| o.m == 1));
+            // One step is far cheaper than the whole prompt prefill.
+            assert!(step.total_macs() < pre.total_macs());
+        }
+        // KV residency grows monotonically with the cache and halves
+        // with the operand width (nibble-packed INT4).
+        let b8 = spec.kv_bytes(Precision::Int8, 64);
+        assert_eq!(b8, spec.depth as u64 * 2 * 64 * spec.dim as u64);
+        assert!(spec.kv_bytes(Precision::Int8, 65) > b8);
+        assert_eq!(spec.kv_bytes(Precision::Int4, 64), b8 / 2);
+        assert_eq!(spec.kv_bytes(Precision::Int16, 64), b8 * 2);
+    }
+
+    #[test]
+    fn llm_tiny_resolves_to_prefill_form() {
+        let m = model_by_name("llm_tiny").unwrap();
+        assert_eq!(m.name, "llm_tiny");
+        assert_eq!(
+            m.total_macs(),
+            LLM_TINY.prefill(Precision::Int8, LLM_DEFAULT_TOKENS).total_macs()
+        );
     }
 
     #[test]

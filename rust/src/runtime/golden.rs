@@ -20,7 +20,7 @@ use crate::models::ops::OpDesc;
 use crate::sim::Processor;
 
 use super::artifacts::{Artifact, Golden};
-use super::{aerr, Engine};
+use super::{aerr, PjrtEngine};
 
 /// Outcome of one artifact's golden check.
 #[derive(Debug, Clone)]
@@ -105,7 +105,7 @@ pub fn simulate_op(op: &OpDesc, inputs: &[Vec<i32>]) -> Result<Vec<i32>> {
 
 /// Check one artifact: PJRT vs golden, and simulator vs PJRT when the
 /// artifact maps to a single operator.
-pub fn golden_check(engine: &mut Engine, dir: &Path, name: &str) -> Result<GoldenReport> {
+pub fn golden_check(engine: &mut PjrtEngine, dir: &Path, name: &str) -> Result<GoldenReport> {
     let art = engine
         .manifest()
         .artifact(name)
@@ -126,7 +126,7 @@ pub fn golden_check(engine: &mut Engine, dir: &Path, name: &str) -> Result<Golde
 }
 
 /// Check every artifact in the manifest.
-pub fn golden_check_all(engine: &mut Engine, dir: &Path) -> Result<Vec<GoldenReport>> {
+pub fn golden_check_all(engine: &mut PjrtEngine, dir: &Path) -> Result<Vec<GoldenReport>> {
     let names: Vec<String> = engine.manifest().names().map(|s| s.to_string()).collect();
     names.iter().map(|n| golden_check(engine, dir, n)).collect()
 }

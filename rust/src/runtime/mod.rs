@@ -26,21 +26,27 @@ pub(crate) fn aerr(m: impl Into<String>) -> SpeedError {
 
 /// A PJRT engine holding the CPU client and a compiled-executable cache —
 /// one compiled executable per model variant, loaded once and reused on
-/// the hot path.
-pub struct Engine {
+/// the hot path. Named for the runtime it wraps, distinguishing it from
+/// the simulator-side [`crate::engine::Engine`].
+pub struct PjrtEngine {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
-impl Engine {
+/// Deprecated name of [`PjrtEngine`], kept so downstream `use
+/// speed_rvv::runtime::Engine` keeps compiling for one release.
+#[deprecated(note = "renamed to `PjrtEngine` (avoids clashing with `crate::engine::Engine`)")]
+pub type Engine = PjrtEngine;
+
+impl PjrtEngine {
     /// Open the artifact directory (must contain `manifest.json`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| aerr(format!("PJRT: {e:?}")))?;
-        Ok(Engine { client, dir, manifest, cache: HashMap::new() })
+        Ok(PjrtEngine { client, dir, manifest, cache: HashMap::new() })
     }
 
     /// The loaded artifact manifest.
@@ -77,7 +83,7 @@ impl Engine {
         self.execute_slices(name, &views)
     }
 
-    /// Borrowing variant of [`Engine::execute`]: a serving hot loop keeps
+    /// Borrowing variant of [`PjrtEngine::execute`]: a serving hot loop keeps
     /// its weights loaded once and passes them by reference on every
     /// request, instead of cloning megabytes of operands per call.
     pub fn execute_slices(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<i32>> {

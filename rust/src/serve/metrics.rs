@@ -8,6 +8,7 @@ use crate::engine::CacheStats;
 use crate::runtime::json::{jf, jstr};
 
 use super::scenario::XorShift64;
+use super::Phase;
 
 /// Counters harvested from the scheduler under its lock.
 #[derive(Debug, Clone, Copy, Default)]
@@ -15,6 +16,10 @@ pub(crate) struct SchedCounters {
     pub steals: u64,
     pub affinity_hits: u64,
     pub affinity_misses: u64,
+    pub kv_hits: u64,
+    pub kv_misses: u64,
+    pub kv_spills: u64,
+    pub kv_bytes_peak: u64,
     pub max_depth: usize,
     pub avg_depth: f64,
 }
@@ -47,8 +52,19 @@ struct Core {
     /// Exact running sum and max over *all* latencies.
     lat_sum: u64,
     lat_max: u64,
+    /// Per-phase bounded latency samples (same reservoir discipline) —
+    /// the prefill/decode split of the transformer-serving report.
+    prefill: PhaseLat,
+    decode: PhaseLat,
     /// Deterministic generator for reservoir replacement.
     rng: XorShift64,
+}
+
+/// One phase's bounded latency reservoir.
+#[derive(Default)]
+struct PhaseLat {
+    us: Vec<u64>,
+    seen: u64,
 }
 
 /// Live pool counters (one mutex, touched once per request event).
@@ -90,7 +106,7 @@ impl ServeMetrics {
         self.lock().plan_hits += 1;
     }
 
-    pub(crate) fn record_finished(&self, ok: bool, latency: Duration) {
+    pub(crate) fn record_finished(&self, ok: bool, latency: Duration, phase: Phase) {
         let us = latency.as_micros() as u64;
         let mut c = self.lock();
         if ok {
@@ -111,6 +127,29 @@ impl ServeMetrics {
             if idx < LATENCY_SAMPLE_CAP {
                 c.lat_us[idx] = us;
             }
+        }
+        // Per-phase reservoir under the same discipline.
+        let seen = {
+            let p = match phase {
+                Phase::Prefill => &mut c.prefill,
+                Phase::Decode => &mut c.decode,
+            };
+            p.seen += 1;
+            p.seen
+        };
+        let idx = if seen as usize > LATENCY_SAMPLE_CAP {
+            Some(c.rng.below(seen) as usize)
+        } else {
+            None
+        };
+        let p = match phase {
+            Phase::Prefill => &mut c.prefill,
+            Phase::Decode => &mut c.decode,
+        };
+        match idx {
+            None => p.us.push(us),
+            Some(i) if i < LATENCY_SAMPLE_CAP => p.us[i] = us,
+            Some(_) => {}
         }
     }
 
@@ -137,8 +176,10 @@ impl ServeMetrics {
             lat_seen: u64,
             lat_sum: u64,
             lat_max: u64,
+            prefill_seen: u64,
+            decode_seen: u64,
         }
-        let (c, mut sorted) = {
+        let (c, mut sorted, mut pre_sorted, mut dec_sorted) = {
             let c = self.lock();
             (
                 Scalars {
@@ -153,11 +194,17 @@ impl ServeMetrics {
                     lat_seen: c.lat_seen,
                     lat_sum: c.lat_sum,
                     lat_max: c.lat_max,
+                    prefill_seen: c.prefill.seen,
+                    decode_seen: c.decode.seen,
                 },
                 c.lat_us.clone(),
+                c.prefill.us.clone(),
+                c.decode.us.clone(),
             )
         };
         sorted.sort_unstable();
+        pre_sorted.sort_unstable();
+        dec_sorted.sort_unstable();
         let mean_us = if c.lat_seen == 0 {
             0.0
         } else {
@@ -185,11 +232,23 @@ impl ServeMetrics {
             p99_us: percentile_us(&sorted, 0.99),
             max_us: c.lat_max,
             mean_us,
+            prefill_requests: c.prefill_seen,
+            decode_requests: c.decode_seen,
+            prefill_p50_us: percentile_us(&pre_sorted, 0.50),
+            prefill_p95_us: percentile_us(&pre_sorted, 0.95),
+            prefill_p99_us: percentile_us(&pre_sorted, 0.99),
+            decode_p50_us: percentile_us(&dec_sorted, 0.50),
+            decode_p95_us: percentile_us(&dec_sorted, 0.95),
+            decode_p99_us: percentile_us(&dec_sorted, 0.99),
             queue_max_depth: sched.max_depth,
             queue_avg_depth: sched.avg_depth,
             steals: sched.steals,
             affinity_hits: sched.affinity_hits,
             affinity_misses: sched.affinity_misses,
+            kv_hits: sched.kv_hits,
+            kv_misses: sched.kv_misses,
+            kv_spills: sched.kv_spills,
+            kv_bytes_peak: sched.kv_bytes_peak,
             cache,
             compiled_programs,
             precision_switches,
@@ -257,6 +316,23 @@ pub struct MetricsSnapshot {
     pub max_us: u64,
     /// Mean request latency, µs.
     pub mean_us: f64,
+    /// Finished requests accounted under [`Phase::Prefill`] (stateless
+    /// requests included — prefill is the default phase).
+    pub prefill_requests: u64,
+    /// Finished requests accounted under [`Phase::Decode`].
+    pub decode_requests: u64,
+    /// Median prefill latency, µs (0 when no prefill finished).
+    pub prefill_p50_us: u64,
+    /// 95th-percentile prefill latency, µs.
+    pub prefill_p95_us: u64,
+    /// 99th-percentile prefill latency, µs.
+    pub prefill_p99_us: u64,
+    /// Median decode-step latency, µs (0 when no decode finished).
+    pub decode_p50_us: u64,
+    /// 95th-percentile decode-step latency, µs.
+    pub decode_p95_us: u64,
+    /// 99th-percentile decode-step latency, µs.
+    pub decode_p99_us: u64,
     /// Deepest total queue observed at routing time.
     pub queue_max_depth: usize,
     /// Mean total queue depth observed at routing time.
@@ -267,6 +343,16 @@ pub struct MetricsSnapshot {
     pub affinity_hits: u64,
     /// Requests routed to a lane at a different precision.
     pub affinity_misses: u64,
+    /// Decode steps routed to the lane holding their session's KV-cache
+    /// residency.
+    pub kv_hits: u64,
+    /// Decode steps whose session had no residency (first decode without
+    /// a prefill, or evicted by a spill) — re-installed where routed.
+    pub kv_misses: u64,
+    /// Sessions evicted from a lane's KV budget (LRU) to admit another.
+    pub kv_spills: u64,
+    /// Largest KV residency observed on any one worker, bytes.
+    pub kv_bytes_peak: u64,
     /// Pool-wide program-cache counters (summed over workers).
     pub cache: CacheStats,
     /// Distinct compiled programs resident across workers (sum of private
@@ -319,6 +405,24 @@ impl MetricsSnapshot {
             ),
             false,
         );
+        field("prefill_requests", self.prefill_requests.to_string(), false);
+        field("decode_requests", self.decode_requests.to_string(), false);
+        field(
+            "prefill_latency_us",
+            format!(
+                "{{ \"p50\": {}, \"p95\": {}, \"p99\": {} }}",
+                self.prefill_p50_us, self.prefill_p95_us, self.prefill_p99_us
+            ),
+            false,
+        );
+        field(
+            "decode_latency_us",
+            format!(
+                "{{ \"p50\": {}, \"p95\": {}, \"p99\": {} }}",
+                self.decode_p50_us, self.decode_p95_us, self.decode_p99_us
+            ),
+            false,
+        );
         field(
             "queue",
             format!(
@@ -334,6 +438,10 @@ impl MetricsSnapshot {
         field("affinity_hits", self.affinity_hits.to_string(), false);
         field("affinity_misses", self.affinity_misses.to_string(), false);
         field("affinity_rate", jf(self.affinity_rate()), false);
+        field("kv_hits", self.kv_hits.to_string(), false);
+        field("kv_misses", self.kv_misses.to_string(), false);
+        field("kv_spills", self.kv_spills.to_string(), false);
+        field("kv_bytes_peak", self.kv_bytes_peak.to_string(), false);
         field(
             "cache",
             format!(
@@ -379,7 +487,7 @@ mod tests {
         let m = ServeMetrics::new();
         let n = LATENCY_SAMPLE_CAP as u64 + 8_192;
         for i in 0..n {
-            m.record_finished(true, Duration::from_micros(i + 1));
+            m.record_finished(true, Duration::from_micros(i + 1), Phase::Prefill);
         }
         let snap = m.snapshot(1, SchedCounters::default(), CacheStats::default(), 0, 0);
         assert_eq!(snap.completed, n);
@@ -407,15 +515,19 @@ mod tests {
         m.record_plan_hit();
         m.record_plan_hit();
         for i in 0..4 {
-            m.record_finished(true, Duration::from_micros(100 * (i + 1)));
+            m.record_finished(true, Duration::from_micros(100 * (i + 1)), Phase::Prefill);
         }
-        m.record_finished(false, Duration::from_micros(900));
+        m.record_finished(false, Duration::from_micros(900), Phase::Decode);
         let snap = m.snapshot(
             2,
             SchedCounters {
                 steals: 1,
                 affinity_hits: 3,
                 affinity_misses: 2,
+                kv_hits: 5,
+                kv_misses: 1,
+                kv_spills: 2,
+                kv_bytes_peak: 4096,
                 max_depth: 4,
                 avg_depth: 2.0,
             },
@@ -450,5 +562,20 @@ mod tests {
         assert_eq!(doc.get("precision_switches").and_then(Json::as_i64), Some(7));
         assert_eq!(doc.get("tune_stalls").and_then(Json::as_i64), Some(1));
         assert_eq!(doc.get("plan_hits").and_then(Json::as_i64), Some(2));
+        // Phase split + KV residency counters (schema-2 additions).
+        assert_eq!(snap.prefill_requests, 4);
+        assert_eq!(snap.decode_requests, 1);
+        assert_eq!(snap.prefill_p99_us, 400);
+        assert_eq!(snap.decode_p50_us, 900);
+        assert_eq!(doc.get("prefill_requests").and_then(Json::as_i64), Some(4));
+        assert_eq!(doc.get("decode_requests").and_then(Json::as_i64), Some(1));
+        assert_eq!(
+            doc.get("decode_latency_us").and_then(|l| l.get("p50")).and_then(Json::as_i64),
+            Some(900)
+        );
+        assert_eq!(doc.get("kv_hits").and_then(Json::as_i64), Some(5));
+        assert_eq!(doc.get("kv_misses").and_then(Json::as_i64), Some(1));
+        assert_eq!(doc.get("kv_spills").and_then(Json::as_i64), Some(2));
+        assert_eq!(doc.get("kv_bytes_peak").and_then(Json::as_i64), Some(4096));
     }
 }

@@ -38,6 +38,17 @@
 //!   [`MetricsSnapshot::tune_stalls`]) and publishes the plan, and every
 //!   later request replays it ([`MetricsSnapshot::plan_hits`]). Only the
 //!   stalling worker's lane pays the search; other lanes keep serving.
+//! * **Stateful transformer serving** — a request may carry a
+//!   [`SessionId`] and a [`Phase`]. [`Phase::Prefill`] requests are
+//!   throughput-bound and batchable; [`Phase::Decode`] requests are
+//!   latency-bound and *cache-affine*: the scheduler pins a session's
+//!   decode steps to the lane holding its KV-cache residency, tracked in
+//!   bytes against a per-worker budget
+//!   ([`ServeOptions::kv_capacity`](pool::ServeOptions::kv_capacity))
+//!   with LRU eviction and hit/miss/spill accounting in
+//!   [`MetricsSnapshot`]. Scenario `"llm"` mix entries
+//!   ([`Workload::Llm`]) expand one logical generation into a prefill
+//!   request plus many growing-K decode-step requests sharing a session.
 //!
 //! # Determinism contract
 //!
@@ -57,6 +68,15 @@
 //! boundary switches are accounted in the aggregate
 //! [`MetricsSnapshot::precision_switches`] — the number the
 //! precision-affinity scheduler exists to minimize.
+//!
+//! Session affinity follows the same rule: KV residency decides *where*
+//! a decode step runs, never *what* it computes — the decode workload
+//! already names its cache length in its operator shapes, so its
+//! `SimStats` are identical whether the step hit its resident lane or
+//! was re-routed after a spill. KV hits, misses, and spills are
+//! aggregate [`MetricsSnapshot`] counters only, and
+//! `tests/serve_parity.rs` pins the per-request digest across worker
+//! counts for session-carrying streams too.
 
 pub mod batch;
 pub mod metrics;
@@ -110,15 +130,149 @@ impl RequestKind {
             RequestKind::Op { op, .. } => format!("{}@{}", op.kind, op.prec),
         }
     }
+
+    /// Deprecated constructor shim for the pre-builder API.
+    #[deprecated(note = "construct through `Request::model(m).prec(p).policy(policy)`")]
+    pub fn model(model: Model, prec: Precision, policy: Policy) -> RequestKind {
+        RequestKind::Model { model, prec, policy }
+    }
+
+    /// Deprecated constructor shim for the pre-builder API.
+    #[deprecated(note = "construct through `Request::op(op).strategy(strat)`")]
+    pub fn op(op: OpDesc, strat: StrategyKind) -> RequestKind {
+        RequestKind::Op { op, strat }
+    }
 }
 
-/// A request admitted into the pool.
+/// Identity of one logical serving session — an autoregressive
+/// generation whose decode steps share KV-cache residency. Ids are
+/// caller-chosen (scenario generation numbers them in draw order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Serving phase — the scheduling class of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Phase {
+    /// Throughput-bound and batchable: whole-prompt prefill, and every
+    /// stateless request (the phase-less API of earlier releases).
+    #[default]
+    Prefill,
+    /// Latency-bound and cache-affine: one autoregressive decode step
+    /// that must land on the worker holding its session's KV residency.
+    Decode,
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        })
+    }
+}
+
+/// A typed serve request: what to run ([`RequestKind`]) plus the serving
+/// metadata the scheduler routes on. Construct through the builders —
+/// the struct is `#[non_exhaustive]`, so future metadata (priorities,
+/// deadlines, ...) will not be breaking changes:
+///
+/// ```
+/// use speed_rvv::config::Precision;
+/// use speed_rvv::models::model_by_name;
+/// use speed_rvv::serve::{Phase, Request, SessionId};
+///
+/// let m = model_by_name("llm_tiny").unwrap();
+/// let req = Request::model(m)
+///     .prec(Precision::Int4)
+///     .session(SessionId(7))
+///     .phase(Phase::Decode);
+/// assert_eq!(req.phase, Phase::Decode);
+/// ```
+#[non_exhaustive]
 #[derive(Debug, Clone)]
 pub struct Request {
-    /// Pool-assigned id, ascending in submission order.
-    pub id: u64,
     /// What the request executes.
     pub kind: RequestKind,
+    /// Logical session this request belongs to (`None` = stateless).
+    pub session: Option<SessionId>,
+    /// Scheduling class (defaults to [`Phase::Prefill`]).
+    pub phase: Phase,
+    /// KV-cache bytes the session occupies *after* this request — the
+    /// residency charged against the owning worker's KV budget (0 for
+    /// stateless requests).
+    pub kv_bytes: u64,
+}
+
+impl Request {
+    /// A whole-model request at the default INT8 precision under the
+    /// paper's mixed strategy policy; refine with
+    /// [`prec`](Request::prec) / [`policy`](Request::policy).
+    pub fn model(model: Model) -> Request {
+        RequestKind::Model { model, prec: Precision::Int8, policy: Policy::Mixed }.into()
+    }
+
+    /// A single-operator request under the operator's preferred
+    /// strategy; refine with [`strategy`](Request::strategy).
+    pub fn op(op: OpDesc) -> Request {
+        RequestKind::Op { op, strat: op.preferred_strategy() }.into()
+    }
+
+    /// Set the operand precision (re-types a single-operator payload).
+    pub fn prec(mut self, prec: Precision) -> Request {
+        match &mut self.kind {
+            RequestKind::Model { prec: p, .. } => *p = prec,
+            RequestKind::Op { op, .. } => op.prec = prec,
+        }
+        self
+    }
+
+    /// Set the strategy policy (whole-model requests; no-op for ops).
+    pub fn policy(mut self, policy: Policy) -> Request {
+        if let RequestKind::Model { policy: p, .. } = &mut self.kind {
+            *p = policy;
+        }
+        self
+    }
+
+    /// Set the dataflow strategy (single-operator requests; no-op for
+    /// whole-model requests, whose policy picks per-layer strategies).
+    pub fn strategy(mut self, strat: StrategyKind) -> Request {
+        if let RequestKind::Op { strat: s, .. } = &mut self.kind {
+            *s = strat;
+        }
+        self
+    }
+
+    /// Attach the request to a logical session.
+    pub fn session(mut self, id: SessionId) -> Request {
+        self.session = Some(id);
+        self
+    }
+
+    /// Set the serving phase.
+    pub fn phase(mut self, phase: Phase) -> Request {
+        self.phase = phase;
+        self
+    }
+
+    /// Declare the session's KV-cache residency (bytes) after this
+    /// request.
+    pub fn kv(mut self, bytes: u64) -> Request {
+        self.kv_bytes = bytes;
+        self
+    }
+}
+
+impl From<RequestKind> for Request {
+    fn from(kind: RequestKind) -> Request {
+        Request { kind, session: None, phase: Phase::Prefill, kv_bytes: 0 }
+    }
 }
 
 /// The outcome of one served request.
@@ -139,6 +293,10 @@ pub struct RequestResult {
     pub batch_size: usize,
     /// Submit-to-completion wall time (measured, host-side).
     pub latency: Duration,
+    /// Session the request belonged to (copied from the request).
+    pub session: Option<SessionId>,
+    /// Serving phase the request was accounted under.
+    pub phase: Phase,
 }
 
 /// One-shot completion slot a worker fulfills and a [`Ticket`] waits on.
@@ -241,7 +399,8 @@ impl ServeBenchReport {
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(2048);
         s.push_str("{\n");
-        s.push_str("  \"schema\": 1,\n  \"bench\": \"serve-bench\",\n");
+        // Schema 2: phase-split metrics + KV-cache residency counters.
+        s.push_str("  \"schema\": 2,\n  \"bench\": \"serve-bench\",\n");
         s.push_str(&format!("  \"scenario\": {},\n", jstr(&self.scenario)));
         s.push_str(&format!("  \"seed\": {},\n", self.seed));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
@@ -291,6 +450,31 @@ impl ServeBenchReport {
             m.p99_us as f64 / 1e3,
             m.max_us as f64 / 1e3
         ));
+        if m.decode_requests > 0 {
+            s.push_str(&format!(
+                "  phases:     {} prefill / {} decode requests\n",
+                m.prefill_requests, m.decode_requests
+            ));
+            s.push_str(&format!(
+                "    prefill:  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n",
+                m.prefill_p50_us as f64 / 1e3,
+                m.prefill_p95_us as f64 / 1e3,
+                m.prefill_p99_us as f64 / 1e3
+            ));
+            s.push_str(&format!(
+                "    decode:   p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n",
+                m.decode_p50_us as f64 / 1e3,
+                m.decode_p95_us as f64 / 1e3,
+                m.decode_p99_us as f64 / 1e3
+            ));
+            s.push_str(&format!(
+                "  kv cache:   {} hits / {} misses / {} spills (peak {:.1} KiB/worker)\n",
+                m.kv_hits,
+                m.kv_misses,
+                m.kv_spills,
+                m.kv_bytes_peak as f64 / 1024.0
+            ));
+        }
         s.push_str(&format!(
             "  queue:      max depth {}, avg {:.1}; {} steals\n",
             m.queue_max_depth, m.queue_avg_depth, m.steals
@@ -345,7 +529,7 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
     let sc_tuned: Option<Scenario> = if opts.tuned {
         let mut s = sc.clone();
         for e in &mut s.mix {
-            if matches!(e.workload, Workload::Model { .. }) {
+            if matches!(e.workload, Workload::Model { .. } | Workload::Llm { .. }) {
                 e.policy = crate::coordinator::Policy::Tuned;
             }
         }
@@ -354,7 +538,7 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
         None
     };
     let sc = sc_tuned.as_ref().unwrap_or(sc);
-    let kinds = sc.generate(opts.quick)?;
+    let reqs = sc.generate(opts.quick)?;
     let registry = crate::tune::TunedPlans::new();
     if opts.tuned {
         // One plan per distinct (model, precision, shape-variant) workload
@@ -367,8 +551,8 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
             ..Default::default()
         };
         let mut done: Vec<(String, u32, u64)> = Vec::new();
-        for kind in &kinds {
-            if let RequestKind::Model { model, prec, .. } = kind {
+        for req in &reqs {
+            if let RequestKind::Model { model, prec, .. } = &req.kind {
                 let key = (
                     model.name.to_string(),
                     prec.bits(),
@@ -399,11 +583,11 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
     // submitter yields the CPU, not any wall-clock sleep — runs are
     // reproducible and as fast as the machine allows.
     let mut rng = XorShift64::new(sc.seed ^ 0xA5A5_5A5A_C0FF_EE00);
-    let requests = kinds.len();
+    let requests = reqs.len();
     let t0 = Instant::now();
     let mut tickets = Vec::with_capacity(requests);
-    for (i, kind) in kinds.into_iter().enumerate() {
-        tickets.push(pool.submit(kind)?);
+    for (i, req) in reqs.into_iter().enumerate() {
+        tickets.push(pool.submit(req)?);
         for _ in 0..sc.arrival.yields_after(i, &mut rng) {
             std::thread::yield_now();
         }
@@ -496,6 +680,46 @@ mod tests {
     }
 
     #[test]
+    fn request_builder_defaults_and_refinement() {
+        let model = crate::models::zoo::model_by_name("llm_tiny").unwrap();
+        let req = Request::model(model);
+        assert_eq!(req.kind.precision(), Precision::Int8);
+        assert_eq!(req.phase, Phase::Prefill);
+        assert!(req.session.is_none());
+        assert_eq!(req.kv_bytes, 0);
+        let req = req
+            .prec(Precision::Int4)
+            .policy(Policy::Fixed(StrategyKind::Mm))
+            .session(SessionId(3))
+            .phase(Phase::Decode)
+            .kv(4096);
+        assert_eq!(req.kind.precision(), Precision::Int4);
+        match &req.kind {
+            RequestKind::Model { policy, .. } => {
+                assert_eq!(*policy, Policy::Fixed(StrategyKind::Mm))
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(req.session, Some(SessionId(3)));
+        assert_eq!((req.phase, req.kv_bytes), (Phase::Decode, 4096));
+        assert_eq!(format!("{} {}", SessionId(3), req.phase), "s3 decode");
+
+        // Op builder: precision re-types the operator; strategy applies.
+        let op = OpDesc::mm(1, 64, 32, Precision::Int8);
+        let req = Request::op(op).prec(Precision::Int16).strategy(StrategyKind::Mm);
+        match &req.kind {
+            RequestKind::Op { op, strat } => {
+                assert_eq!(op.prec, Precision::Int16);
+                assert_eq!(*strat, StrategyKind::Mm);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Cross-kind refinements are explicit no-ops.
+        let req = req.policy(Policy::Mixed);
+        assert!(matches!(req.kind, RequestKind::Op { .. }));
+    }
+
+    #[test]
     fn completion_roundtrip() {
         let c = Completion::default();
         c.fulfill(Err(SpeedError::Serve("gone".into())));
@@ -516,6 +740,8 @@ mod tests {
             worker: 0,
             batch_size: 1,
             latency: Duration::from_micros(5),
+            session: None,
+            phase: Phase::Prefill,
         };
         let mut other = base.clone();
         other.stats.cycles = 101;
@@ -528,6 +754,8 @@ mod tests {
         placed.worker = 3;
         placed.batch_size = 8;
         placed.latency = Duration::from_micros(99);
+        placed.session = Some(SessionId(1));
+        placed.phase = Phase::Decode;
         assert_eq!(a, stats_digest(std::slice::from_ref(&placed)));
     }
 }

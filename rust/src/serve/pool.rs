@@ -47,7 +47,20 @@ pub struct ServeOptions {
     /// Initial external-memory bytes per engine (grows lazily; 0 = the
     /// engine floor).
     pub mem_bytes: usize,
+    /// Per-worker KV-cache residency budget, bytes: how much session K/V
+    /// state one worker's external-memory layout keeps warm before the
+    /// scheduler LRU-evicts the coldest session (a *spill*). 0 disables
+    /// eviction (unlimited residency). Scheduling-only — affects where
+    /// decode steps land and the hit/spill counters, never per-request
+    /// stats.
+    pub kv_capacity: u64,
 }
+
+/// Default per-worker KV residency budget: 4 MiB — a small, deliberate
+/// fraction of the engine's lazily-grown external memory, enough for
+/// hundreds of `llm_tiny`-scale sessions while still exercising eviction
+/// under sustained multi-tenant load.
+pub const DEFAULT_KV_CAPACITY: u64 = 4 << 20;
 
 impl Default for ServeOptions {
     fn default() -> Self {
@@ -58,6 +71,7 @@ impl Default for ServeOptions {
             steal_threshold: 2,
             exec_mode: ExecMode::Batch,
             mem_bytes: 0,
+            kv_capacity: DEFAULT_KV_CAPACITY,
         }
     }
 }
@@ -149,6 +163,7 @@ impl ServePool {
                 opts.capacity,
                 opts.max_batch,
                 opts.steal_threshold,
+                opts.kv_capacity,
             )),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -180,20 +195,21 @@ impl ServePool {
 
     /// Submit a request, blocking while the queue is at capacity
     /// (backpressure). Fails with [`SpeedError::Serve`] once the pool is
-    /// shut down.
-    pub fn submit(&self, kind: RequestKind) -> Result<Ticket> {
-        self.enqueue(kind, true)
+    /// shut down. Accepts a built [`Request`] or (for migration) a bare
+    /// [`RequestKind`].
+    pub fn submit(&self, req: impl Into<Request>) -> Result<Ticket> {
+        self.enqueue(req.into(), true)
     }
 
     /// Submit without blocking: a full queue is an immediate typed
     /// [`SpeedError::Serve`] overflow (counted in the metrics).
-    pub fn try_submit(&self, kind: RequestKind) -> Result<Ticket> {
-        self.enqueue(kind, false)
+    pub fn try_submit(&self, req: impl Into<Request>) -> Result<Ticket> {
+        self.enqueue(req.into(), false)
     }
 
-    fn enqueue(&self, kind: RequestKind, block: bool) -> Result<Ticket> {
-        let prec = kind.precision();
-        let key = BatchKey::of(&kind);
+    fn enqueue(&self, req: Request, block: bool) -> Result<Ticket> {
+        let prec = req.kind.precision();
+        let key = BatchKey::of(&req.kind);
         let mut s = lock(&self.shared.sched);
         loop {
             if s.shutdown {
@@ -215,7 +231,8 @@ impl ServePool {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let done = Arc::new(Completion::default());
         let job = Job {
-            req: Request { id, kind },
+            id,
+            req,
             key,
             prec,
             enqueued: Instant::now(),
@@ -233,12 +250,13 @@ impl ServePool {
 
     /// Submit a stream of requests (blocking, in order) and wait for all
     /// results; results come back in submission order.
-    pub fn run_all(
-        &self,
-        kinds: impl IntoIterator<Item = RequestKind>,
-    ) -> Result<Vec<RequestResult>> {
+    pub fn run_all<I>(&self, reqs: I) -> Result<Vec<RequestResult>>
+    where
+        I: IntoIterator,
+        I::Item: Into<Request>,
+    {
         let tickets: Result<Vec<Ticket>> =
-            kinds.into_iter().map(|k| self.submit(k)).collect();
+            reqs.into_iter().map(|r| self.submit(r)).collect();
         tickets?.into_iter().map(Ticket::wait).collect()
     }
 
@@ -252,6 +270,10 @@ impl ServePool {
                 affinity_misses: s.affinity_misses,
                 max_depth: s.max_depth,
                 avg_depth: s.avg_depth(),
+                kv_hits: s.kv_hits,
+                kv_misses: s.kv_misses,
+                kv_spills: s.kv_spills,
+                kv_bytes_peak: s.kv_bytes_peak,
             }
         };
         let engines = lock(&self.shared.engines);
@@ -388,14 +410,16 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
         for job in batch {
             let latency = job.enqueued.elapsed();
             let result = executed.clone().map(|(stats, layers)| RequestResult {
-                id: job.req.id,
+                id: job.id,
                 stats,
                 layers,
                 worker: w,
                 batch_size: n,
                 latency,
+                session: job.req.session,
+                phase: job.req.phase,
             });
-            shared.metrics.record_finished(result.is_ok(), latency);
+            shared.metrics.record_finished(result.is_ok(), latency, job.req.phase);
             job.done.fulfill(result);
         }
         let cache = engine.cache_stats();
@@ -680,5 +704,39 @@ mod tests {
             "datapath flipped at request boundaries: {}",
             snap.precision_switches
         );
+    }
+
+    #[test]
+    fn decode_follows_session_residency_and_phases_are_counted() {
+        use crate::serve::{Phase, Request, SessionId};
+        let p = pool(2, 64, 1);
+        let sid = SessionId(1);
+        let prefill =
+            Request::op(OpDesc::mm(4, 8, 4, Precision::Int8)).session(sid).kv(512);
+        let mut reqs = vec![prefill];
+        reqs.extend((0..4).map(|_| {
+            Request::op(OpDesc::mm(1, 8, 4, Precision::Int8))
+                .session(sid)
+                .phase(Phase::Decode)
+                .kv(512)
+        }));
+        let results = p.run_all(reqs).unwrap();
+        assert_eq!(results[0].phase, Phase::Prefill);
+        assert_eq!(results[0].session, Some(sid));
+        // Every decode step lands on the lane holding the session's KV
+        // residency (installed when the prefill was routed).
+        let resident = results[1].worker;
+        for r in &results[1..] {
+            assert_eq!(r.phase, Phase::Decode);
+            assert_eq!(r.session, Some(sid));
+            assert_eq!(r.worker, resident, "decode migrated off the resident lane");
+        }
+        let snap = p.shutdown();
+        assert_eq!(snap.prefill_requests, 1);
+        assert_eq!(snap.decode_requests, 4);
+        assert_eq!(snap.kv_hits, 4);
+        assert_eq!(snap.kv_misses, 0);
+        assert_eq!(snap.kv_spills, 0);
+        assert!(snap.kv_bytes_peak >= 512, "peak {}", snap.kv_bytes_peak);
     }
 }

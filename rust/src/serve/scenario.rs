@@ -10,6 +10,7 @@
 //!
 //! ```json
 //! {
+//!   "version": 2,
 //!   "name": "mixed_edge",
 //!   "seed": 42,
 //!   "requests": 64,
@@ -19,10 +20,21 @@
 //!   "mix": [
 //!     { "model": "mobilenetv2", "prec": 8, "weight": 3, "downscale": 2 },
 //!     { "model": "vit_tiny", "prec": 4, "weight": 2, "downscale": 2 },
-//!     { "op": "mm", "m": 64, "k": 64, "n": 64, "prec": 16, "weight": 2 }
+//!     { "op": "mm", "m": 64, "k": 64, "n": 64, "prec": 16, "weight": 2 },
+//!     { "llm": "llm_tiny", "prompt": 64, "decode": 8, "prec": 8, "weight": 1 }
 //!   ]
 //! }
 //! ```
+//!
+//! # Schema versioning
+//!
+//! The top-level `"version"` field names the schema the file was written
+//! against. Files without it load as version 1 (the documented default —
+//! every pre-versioning scenario keeps working); versions this build does
+//! not understand fail fast with a typed [`SpeedError::Parse`]. The
+//! current schema is [`SCENARIO_VERSION`] = 2, which adds `"llm"` mix
+//! entries; an `"llm"` entry in a version-1 document is a parse error
+//! naming the required version.
 //!
 //! Mix entries are drawn per request with probability proportional to
 //! `weight`. Model entries accept `downscale` (spatial/token reduction
@@ -31,6 +43,13 @@
 //! entries accept the dimensions of their kind (`mm`: `m,k,n`; `conv`:
 //! `c,f,h,w,ksize[,stride,pad]`; `pwcv`: `c,f,h,w`; `dwcv`:
 //! `c,h,w,ksize[,stride,pad]`) and an optional explicit `strat`.
+//!
+//! `"llm"` entries (version 2) name a zoo LLM spec and describe one
+//! autoregressive *session* per draw: a `prompt`-token prefill request
+//! followed by `decode` single-token decode-step requests with growing
+//! KV length, all sharing a [`SessionId`](super::SessionId) so the pool
+//! pins the decode tail to the lane holding the session's KV-cache
+//! residency.
 
 use std::path::Path;
 
@@ -39,17 +58,22 @@ use crate::coordinator::Policy;
 use crate::dataflow;
 use crate::error::{Result, SpeedError};
 use crate::isa::StrategyKind;
-use crate::models::zoo::{model_by_name, MODELS};
+use crate::models::zoo::{llm_spec, model_by_name, LlmSpec, LLM_DEFAULT_TOKENS, MODELS};
 use crate::models::OpDesc;
 use crate::report::fig12::downscale;
 use crate::runtime::json::{parse, Json};
 
-use super::RequestKind;
+use super::{Phase, Request, RequestKind, SessionId};
 
 /// Quick mode caps the generated request count at this many.
 pub const QUICK_REQUEST_CAP: usize = 24;
-/// Quick mode multiplies every model entry's downscale factor by this.
+/// Quick mode multiplies every model entry's downscale factor by this
+/// (and divides llm prompt lengths by it).
 pub const QUICK_DOWNSCALE: u32 = 4;
+/// Newest scenario schema version this parser understands. Version 1 is
+/// the pre-versioning schema (the default when `"version"` is absent);
+/// version 2 adds `"llm"` mix entries.
+pub const SCENARIO_VERSION: u32 = 2;
 
 fn perr(m: impl Into<String>) -> SpeedError {
     SpeedError::Parse(m.into())
@@ -138,6 +162,19 @@ pub enum Workload {
     Model { name: String, downscale: u32 },
     /// A single operator (stored at its scenario precision).
     Op(OpDesc),
+    /// An autoregressive LLM session (scenario `"version": 2`): one draw
+    /// emits a `prompt`-token prefill request plus `decode` single-token
+    /// decode-step requests with growing KV length, all carrying the same
+    /// freshly numbered [`SessionId`](super::SessionId).
+    Llm {
+        /// The zoo LLM architecture the session runs.
+        spec: LlmSpec,
+        /// Prompt tokens the prefill request processes (divided by
+        /// [`QUICK_DOWNSCALE`] in quick mode, floor 1).
+        prompt: u32,
+        /// Decode steps emitted after the prefill.
+        decode: u32,
+    },
 }
 
 /// One weighted line of the workload mix.
@@ -157,7 +194,8 @@ pub struct MixEntry {
 }
 
 impl MixEntry {
-    /// Materialize one request from this entry.
+    /// Materialize one request from a model or operator entry (LLM
+    /// entries expand to whole sessions via [`MixEntry::emit`]).
     fn instantiate(&self, quick: bool) -> Result<RequestKind> {
         match &self.workload {
             Workload::Model { name, downscale: d } => {
@@ -173,19 +211,61 @@ impl MixEntry {
                 let strat = self.strat.unwrap_or_else(|| op.preferred_strategy());
                 Ok(RequestKind::Op { op, strat })
             }
+            Workload::Llm { .. } => Err(perr(
+                "llm entries expand to sessions, not single requests (internal)",
+            )),
         }
+    }
+
+    /// Append every request one draw of this entry emits: one request for
+    /// model/op entries, a whole prefill-plus-decode session for llm
+    /// entries (numbered from `sessions`, which advances per session).
+    fn emit(&self, quick: bool, sessions: &mut u64, out: &mut Vec<Request>) -> Result<()> {
+        let Workload::Llm { spec, prompt, decode } = &self.workload else {
+            out.push(Request::from(self.instantiate(quick)?));
+            return Ok(());
+        };
+        let prompt = if quick { (prompt / QUICK_DOWNSCALE).max(1) } else { *prompt };
+        let sid = SessionId(*sessions);
+        *sessions += 1;
+        out.push(
+            Request::model(spec.prefill(self.prec, prompt))
+                .prec(self.prec)
+                .policy(self.policy)
+                .session(sid)
+                .kv(spec.kv_bytes(self.prec, prompt)),
+        );
+        for i in 0..*decode {
+            // Decode step i attends over `prompt + i` cached tokens and
+            // appends one more — the residency charge is the post-step
+            // cache size.
+            let kv_len = prompt + i;
+            out.push(
+                Request::model(spec.decode_step(self.prec, kv_len))
+                    .prec(self.prec)
+                    .policy(self.policy)
+                    .session(sid)
+                    .phase(Phase::Decode)
+                    .kv(spec.kv_bytes(self.prec, kv_len + 1)),
+            );
+        }
+        Ok(())
     }
 }
 
 /// A parsed scenario file.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Schema version the document declared (1 when absent).
+    pub version: u32,
     /// Scenario name (from the document or the file stem).
     pub name: String,
     /// RNG seed driving arrivals and mix draws.
     pub seed: u64,
     /// Requests to generate (capped at [`QUICK_REQUEST_CAP`] in quick
-    /// mode).
+    /// mode). Counts *emitted* requests: an llm draw contributes its
+    /// prefill and every decode step, and the last session may be
+    /// truncated mid-decode to land exactly on this count.
     pub requests: usize,
     /// Pool queue bound override (None = the pool default).
     pub capacity: Option<usize>,
@@ -205,6 +285,19 @@ impl Scenario {
         if doc.as_obj().is_none() {
             return Err(perr("scenario must be a JSON object"));
         }
+        let version = match doc.get("version") {
+            // Pre-versioning files carry no field: the documented
+            // default is version 1 and they keep loading unchanged.
+            None => 1,
+            Some(v) => v
+                .as_i64()
+                .filter(|&n| n >= 1 && n <= SCENARIO_VERSION as i64)
+                .ok_or_else(|| {
+                    perr(format!(
+                        "unsupported scenario \"version\" (this build reads 1..={SCENARIO_VERSION})"
+                    ))
+                })? as u32,
+        };
         let name = doc
             .get("name")
             .and_then(Json::as_str)
@@ -229,7 +322,15 @@ impl Scenario {
         for entry in mix_json {
             mix.push(parse_mix_entry(entry)?);
         }
-        let sc = Scenario { name, seed, requests, capacity, max_batch, arrival, mix };
+        let sc =
+            Scenario { version, name, seed, requests, capacity, max_batch, arrival, mix };
+        // `"llm"` entries are a version-2 construct: a version-1 document
+        // using one is missing the required field, not quietly upgraded.
+        if sc.version < 2
+            && sc.mix.iter().any(|e| matches!(e.workload, Workload::Llm { .. }))
+        {
+            return Err(perr("\"llm\" mix entries require \"version\": 2"));
+        }
         // Fail at parse time, not mid-bench. A weight of 0 disables one
         // entry; all-zero weights leave the weighted pick with nothing to
         // draw (`rng.below(0)` degenerates and the pick panics at bench
@@ -238,9 +339,10 @@ impl Scenario {
         if sc.mix.iter().map(|e| e.weight as u64).sum::<u64>() == 0 {
             return Err(perr("mix weights sum to zero (no entry can be drawn)"));
         }
-        // Every entry must instantiate, even zero-weight (disabled) ones.
+        // Every entry must emit, even zero-weight (disabled) ones.
         for e in &sc.mix {
-            e.instantiate(false)?;
+            let (mut sessions, mut probe) = (0, Vec::new());
+            e.emit(false, &mut sessions, &mut probe)?;
         }
         Ok(sc)
     }
@@ -254,8 +356,10 @@ impl Scenario {
     }
 
     /// Generate the deterministic request stream: same seed, same stream,
-    /// on every platform and every run.
-    pub fn generate(&self, quick: bool) -> Result<Vec<RequestKind>> {
+    /// on every platform and every run. Llm draws emit whole sessions
+    /// (prefill plus decode steps), so generation draws until `requests`
+    /// requests exist and truncates the final session if it overshoots.
+    pub fn generate(&self, quick: bool) -> Result<Vec<Request>> {
         let total_weight: u64 = self.mix.iter().map(|e| e.weight as u64).sum();
         // `from_json` rejects this, but `Scenario` is a plain public
         // struct: a hand-built instance must fail typed, not panic.
@@ -264,8 +368,9 @@ impl Scenario {
         }
         let n = if quick { self.requests.min(QUICK_REQUEST_CAP) } else { self.requests };
         let mut rng = XorShift64::new(self.seed);
+        let mut sessions = 0u64;
         let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
+        while out.len() < n {
             let mut pick = rng.below(total_weight);
             let entry = self
                 .mix
@@ -279,8 +384,9 @@ impl Scenario {
                     }
                 })
                 .expect("weights are positive and sum over the mix");
-            out.push(entry.instantiate(quick)?);
+            entry.emit(quick, &mut sessions, &mut out)?;
         }
+        out.truncate(n);
         Ok(out)
     }
 }
@@ -377,6 +483,32 @@ fn parse_mix_entry(e: &Json) -> Result<MixEntry> {
         Some(p) => parse_policy(p)?,
     };
 
+    if let Some(name) = e.get("llm").and_then(Json::as_str) {
+        let spec = llm_spec(name)
+            .ok_or_else(|| perr(format!("unknown llm spec '{name}' (try \"llm_tiny\")")))?;
+        let count = |k: &str, default: u32| -> Result<u32> {
+            match e.get(k) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_i64()
+                    .filter(|&n| n >= 1 && n <= u32::MAX as i64)
+                    .map(|n| n as u32)
+                    .ok_or_else(|| {
+                        perr(format!("llm \"{k}\" must be a positive 32-bit integer"))
+                    }),
+            }
+        };
+        let prompt = count("prompt", LLM_DEFAULT_TOKENS)?;
+        let decode = count("decode", 8)?;
+        return Ok(MixEntry {
+            workload: Workload::Llm { spec, prompt, decode },
+            prec,
+            weight,
+            policy,
+            strat: None,
+        });
+    }
+
     if let Some(name) = e.get("model").and_then(Json::as_str) {
         if model_by_name(name).is_none() {
             return Err(perr(format!("unknown model '{name}' ({MODELS:?})")));
@@ -399,7 +531,7 @@ fn parse_mix_entry(e: &Json) -> Result<MixEntry> {
     }
 
     let Some(kind) = e.get("op").and_then(Json::as_str) else {
-        return Err(perr("mix entry needs \"model\" or \"op\""));
+        return Err(perr("mix entry needs \"model\", \"op\", or \"llm\""));
     };
     let dim = |k: &str| -> Result<u32> {
         e.get(k)
@@ -481,6 +613,7 @@ mod tests {
     #[test]
     fn parses_and_generates_deterministically() {
         let sc = Scenario::from_json(SC).unwrap();
+        assert_eq!(sc.version, 1, "absent \"version\" defaults to 1");
         assert_eq!(sc.name, "unit");
         assert_eq!(sc.requests, 12);
         assert_eq!(sc.capacity, Some(8));
@@ -491,12 +624,12 @@ mod tests {
         let b = sc.generate(false).unwrap();
         assert_eq!(a.len(), 12);
         for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.label(), y.label());
-            assert_eq!(x.precision(), y.precision());
+            assert_eq!(x.kind.label(), y.kind.label());
+            assert_eq!(x.kind.precision(), y.kind.precision());
         }
         // All three entries appear across a 12-request draw with these
         // weights and this seed (a fixed-stream regression canary).
-        let labels: Vec<String> = a.iter().map(RequestKind::label).collect();
+        let labels: Vec<String> = a.iter().map(|r| r.kind.label()).collect();
         assert!(labels.iter().any(|l| l == "mobilenetv2@INT8"), "{labels:?}");
         assert!(labels.iter().any(|l| l == "MM@INT4"), "{labels:?}");
     }
@@ -507,9 +640,9 @@ mod tests {
         let mut other = sc.clone();
         other.seed = 8;
         let a: Vec<String> =
-            sc.generate(false).unwrap().iter().map(RequestKind::label).collect();
+            sc.generate(false).unwrap().iter().map(|r| r.kind.label()).collect();
         let b: Vec<String> =
-            other.generate(false).unwrap().iter().map(RequestKind::label).collect();
+            other.generate(false).unwrap().iter().map(|r| r.kind.label()).collect();
         assert_ne!(a, b, "seed must shape the stream");
     }
 
@@ -521,8 +654,8 @@ mod tests {
         assert_eq!(quick.len(), QUICK_REQUEST_CAP);
         // A quick-mode model request is smaller than the full-mode one.
         let full = sc.generate(false).unwrap();
-        let macs_of = |ks: &[RequestKind]| -> Option<u64> {
-            ks.iter().find_map(|k| match k {
+        let macs_of = |ks: &[Request]| -> Option<u64> {
+            ks.iter().find_map(|k| match &k.kind {
                 RequestKind::Model { model, .. } => Some(model.total_macs()),
                 _ => None,
             })
@@ -565,9 +698,9 @@ mod tests {
               "policy": "tuned_online" } ] }"#;
         let sc = Scenario::from_json(sc).unwrap();
         assert_eq!(sc.mix[0].policy, Policy::TunedOnline);
-        let kinds = sc.generate(false).unwrap();
+        let reqs = sc.generate(false).unwrap();
         assert!(matches!(
-            &kinds[0],
+            &reqs[0].kind,
             RequestKind::Model { policy: Policy::TunedOnline, .. }
         ));
         // Unknown policies still fail fast, naming the accepted set.
@@ -607,8 +740,70 @@ mod tests {
         let reqs = sc.generate(false).unwrap();
         assert_eq!(reqs.len(), 16);
         // The zero-weight entry is never drawn.
-        assert!(reqs.iter().all(|r| r.label() == "MM@INT8"), "{:?}",
-                reqs.iter().map(RequestKind::label).collect::<Vec<_>>());
+        assert!(reqs.iter().all(|r| r.kind.label() == "MM@INT8"), "{:?}",
+                reqs.iter().map(|r| r.kind.label()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn version_gates_llm_entries() {
+        // Unknown future versions fail fast and typed.
+        let future = r#"{ "version": 3, "requests": 1, "mix": [
+            { "op": "mm", "m": 2, "k": 2, "n": 2, "prec": 8 } ] }"#;
+        match Scenario::from_json(future) {
+            Err(SpeedError::Parse(m)) => assert!(m.contains("version"), "{m}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // An llm entry in an implicit version-1 document names the fix.
+        let v1_llm = r#"{ "requests": 4, "mix": [
+            { "llm": "llm_tiny", "prompt": 8, "decode": 2, "prec": 8 } ] }"#;
+        match Scenario::from_json(v1_llm) {
+            Err(SpeedError::Parse(m)) => assert!(m.contains("\"version\": 2"), "{m}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Version 2 accepts llm entries; unknown llm specs still fail.
+        let v2 = r#"{ "version": 2, "requests": 4, "mix": [
+            { "llm": "llm_tiny", "prompt": 8, "decode": 2, "prec": 8 } ] }"#;
+        let sc = Scenario::from_json(v2).unwrap();
+        assert_eq!(sc.version, 2);
+        let bad = r#"{ "version": 2, "requests": 4, "mix": [
+            { "llm": "llm_huge", "prec": 8 } ] }"#;
+        assert!(matches!(Scenario::from_json(bad), Err(SpeedError::Parse(_))));
+    }
+
+    #[test]
+    fn llm_draw_expands_to_a_session() {
+        let v2 = r#"{ "version": 2, "requests": 9, "seed": 5, "mix": [
+            { "llm": "llm_tiny", "prompt": 8, "decode": 3, "prec": 8 } ] }"#;
+        let sc = Scenario::from_json(v2).unwrap();
+        let reqs = sc.generate(false).unwrap();
+        assert_eq!(reqs.len(), 9);
+        // Draw 1 is session 0 (prefill + 3 decodes), draw 2 is session 1,
+        // and the ninth request truncates session 2 after its prefill.
+        assert_eq!(reqs[0].phase, Phase::Prefill);
+        assert_eq!(reqs[0].session, Some(SessionId(0)));
+        for (i, r) in reqs[1..4].iter().enumerate() {
+            assert_eq!(r.phase, Phase::Decode);
+            assert_eq!(r.session, Some(SessionId(0)));
+            // Growing KV: every step charges one more cached token.
+            assert!(r.kv_bytes > reqs[i].kv_bytes, "step {i}");
+        }
+        assert_eq!(reqs[4].session, Some(SessionId(1)));
+        assert_eq!(reqs[4].phase, Phase::Prefill);
+        assert_eq!(reqs[8].session, Some(SessionId(2)));
+        assert_eq!(reqs[8].phase, Phase::Prefill);
+        // Decode steps are single-token: every MM is one row, or one row
+        // per head in the fused attention MMs.
+        let RequestKind::Model { model, .. } = &reqs[1].kind else {
+            panic!("decode step is a model request");
+        };
+        assert!(model.ops.iter().all(|o| o.m == 1 || o.m == 4));
+        // Quick mode shrinks the prompt, so the prefill gets lighter.
+        let quick = sc.generate(true).unwrap();
+        let macs = |r: &Request| match &r.kind {
+            RequestKind::Model { model, .. } => model.total_macs(),
+            _ => unreachable!(),
+        };
+        assert!(macs(&quick[0]) < macs(&reqs[0]));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Precision-affinity scheduling state (pure logic, no threads).
+//! Precision-affinity + session-affinity scheduling state (pure logic,
+//! no threads).
 //!
 //! Every worker owns a lane. A request is routed to the least-loaded lane
 //! whose worker was last configured at the request's precision — keeping
@@ -7,8 +8,20 @@
 //! private program cache stays hot. When no lane has the right affinity,
 //! the shortest lane takes the request (and adopts the new affinity).
 //! When a lane backs up past `steal_threshold`, an idle worker steals a
-//! micro-batch from its tail. The whole structure lives behind one mutex
-//! owned by the pool; all methods here are called with that lock held.
+//! micro-batch from its tail.
+//!
+//! Session-carrying requests add a stronger constraint: the lane holding
+//! a session's KV-cache residency owns every later request of that
+//! session — a decode step *must* land on the worker whose engine keeps
+//! the session's K/V tensors warm, so session affinity overrides both
+//! queue-length balancing and precision affinity. Residency is tracked
+//! in bytes per lane against a KV budget with LRU eviction (a *spill*);
+//! a decode step finding its residency is a *hit*, one arriving after a
+//! spill (or without a prefill) is a *miss* and re-installs the session
+//! where normal routing puts it. Pinned (decode) tail jobs are never
+//! work-stolen — stealing one would defeat the residency it was routed
+//! for. The whole structure lives behind one mutex owned by the pool;
+//! all methods here are called with that lock held.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -17,10 +30,12 @@ use std::time::Instant;
 use crate::config::Precision;
 
 use super::batch::BatchKey;
-use super::{Completion, Request};
+use super::{Completion, Phase, Request, SessionId};
 
 /// A routed request waiting in a lane.
 pub(crate) struct Job {
+    /// Pool-assigned request id, ascending in submission order.
+    pub id: u64,
     pub req: Request,
     pub key: BatchKey,
     pub prec: Precision,
@@ -28,11 +43,24 @@ pub(crate) struct Job {
     pub done: Arc<Completion>,
 }
 
+impl Job {
+    /// Cache-affine jobs are pinned to their routed lane: stealing a
+    /// decode step would move it off the worker holding its KV residency.
+    fn pinned(&self) -> bool {
+        self.req.session.is_some() && self.req.phase == Phase::Decode
+    }
+}
+
 struct Lane {
     queue: VecDeque<Job>,
     /// Precision of the last request routed to / popped by this lane's
     /// worker — the proxy for "what the datapath is configured at".
     affinity: Option<Precision>,
+    /// Sessions whose KV cache is resident on this lane's worker, in LRU
+    /// order (front = coldest), with the bytes each occupies.
+    kv: Vec<(SessionId, u64)>,
+    /// Total KV bytes resident on this lane.
+    kv_bytes: u64,
 }
 
 /// Scheduler state: per-worker lanes plus the shared queue bound.
@@ -42,11 +70,17 @@ pub(crate) struct SchedState {
     capacity: usize,
     max_batch: usize,
     steal_threshold: usize,
+    /// Per-worker KV residency budget in bytes (0 = unlimited).
+    kv_capacity: u64,
     pub shutdown: bool,
     // ---- counters (harvested into MetricsSnapshot) ----
     pub affinity_hits: u64,
     pub affinity_misses: u64,
     pub steals: u64,
+    pub kv_hits: u64,
+    pub kv_misses: u64,
+    pub kv_spills: u64,
+    pub kv_bytes_peak: u64,
     pub max_depth: usize,
     pub depth_sum: u64,
     pub depth_samples: u64,
@@ -58,19 +92,30 @@ impl SchedState {
         capacity: usize,
         max_batch: usize,
         steal_threshold: usize,
+        kv_capacity: u64,
     ) -> Self {
         SchedState {
             lanes: (0..workers.max(1))
-                .map(|_| Lane { queue: VecDeque::new(), affinity: None })
+                .map(|_| Lane {
+                    queue: VecDeque::new(),
+                    affinity: None,
+                    kv: Vec::new(),
+                    kv_bytes: 0,
+                })
                 .collect(),
             queued: 0,
             capacity: capacity.max(1),
             max_batch: max_batch.max(1),
             steal_threshold: steal_threshold.max(1),
+            kv_capacity,
             shutdown: false,
             affinity_hits: 0,
             affinity_misses: 0,
             steals: 0,
+            kv_hits: 0,
+            kv_misses: 0,
+            kv_spills: 0,
+            kv_bytes_peak: 0,
             max_depth: 0,
             depth_sum: 0,
             depth_samples: 0,
@@ -89,37 +134,80 @@ impl SchedState {
         self.queued < self.capacity
     }
 
-    /// Route a job to a lane (affinity first, then least-loaded). Returns
-    /// the chosen lane index, or the job back when the queue is full.
+    /// The lane holding `sid`'s KV residency, if any.
+    fn kv_lane(&self, sid: SessionId) -> Option<usize> {
+        self.lanes.iter().position(|l| l.kv.iter().any(|&(s, _)| s == sid))
+    }
+
+    /// Install or refresh `sid`'s residency on lane `w` (move to the hot
+    /// end of the LRU, update its byte charge), then evict cold sessions
+    /// past the per-worker budget — each eviction is a *spill*. The
+    /// just-touched session is never evicted, so one oversized session
+    /// may exceed the budget (tracked by `kv_bytes_peak`).
+    fn touch_kv(&mut self, w: usize, sid: SessionId, bytes: u64) {
+        let lane = &mut self.lanes[w];
+        if let Some(pos) = lane.kv.iter().position(|&(s, _)| s == sid) {
+            let (_, old) = lane.kv.remove(pos);
+            lane.kv_bytes -= old;
+        }
+        lane.kv.push((sid, bytes));
+        lane.kv_bytes += bytes;
+        while self.kv_capacity > 0 && lane.kv_bytes > self.kv_capacity && lane.kv.len() > 1 {
+            let (_, old) = lane.kv.remove(0);
+            lane.kv_bytes -= old;
+            self.kv_spills += 1;
+        }
+        self.kv_bytes_peak = self.kv_bytes_peak.max(lane.kv_bytes);
+    }
+
+    /// Route a job to a lane (session residency first, then precision
+    /// affinity, then least-loaded). Returns the chosen lane index, or
+    /// the job back when the queue is full.
     pub fn route(&mut self, job: Job) -> Result<usize, Job> {
         if !self.has_space() {
             return Err(job);
         }
-        // Pass 1: among lanes whose worker is at the request's precision,
-        // the shortest queue (lowest index on ties).
-        let mut chosen: Option<usize> = None;
-        for (i, lane) in self.lanes.iter().enumerate() {
-            if lane.affinity == Some(job.prec)
-                && chosen.map_or(true, |c| lane.queue.len() < self.lanes[c].queue.len())
-            {
-                chosen = Some(i);
+        // Pass 0: a session resident on a lane owns the request — decode
+        // must run where its KV cache is warm, and later prefill chunks
+        // of a session stay with their predecessors.
+        let resident = job.req.session.and_then(|sid| self.kv_lane(sid));
+        let w = if let Some(w) = resident {
+            if job.pinned() {
+                self.kv_hits += 1;
             }
-        }
-        let hit = chosen.is_some();
-        // Pass 2: no affinity match — least-loaded lane overall.
-        let w = chosen.unwrap_or_else(|| {
-            let mut best = 0;
+            w
+        } else {
+            if job.pinned() {
+                self.kv_misses += 1;
+            }
+            // Pass 1: among lanes whose worker is at the request's
+            // precision, the shortest queue (lowest index on ties).
+            let mut chosen: Option<usize> = None;
             for (i, lane) in self.lanes.iter().enumerate() {
-                if lane.queue.len() < self.lanes[best].queue.len() {
-                    best = i;
+                if lane.affinity == Some(job.prec)
+                    && chosen.map_or(true, |c| lane.queue.len() < self.lanes[c].queue.len())
+                {
+                    chosen = Some(i);
                 }
             }
-            best
-        });
-        if hit {
+            // Pass 2: no affinity match — least-loaded lane overall.
+            chosen.unwrap_or_else(|| {
+                let mut best = 0;
+                for (i, lane) in self.lanes.iter().enumerate() {
+                    if lane.queue.len() < self.lanes[best].queue.len() {
+                        best = i;
+                    }
+                }
+                best
+            })
+        };
+        if self.lanes[w].affinity == Some(job.prec) {
             self.affinity_hits += 1;
         } else {
             self.affinity_misses += 1;
+        }
+        if let Some(sid) = job.req.session {
+            self.touch_kv(w, sid, job.req.kv_bytes);
         }
         let lane = &mut self.lanes[w];
         lane.affinity = Some(job.prec);
@@ -133,8 +221,10 @@ impl SchedState {
 
     /// Next micro-batch for worker `w`: the head of its own lane plus
     /// every same-key job waiting there (up to `max_batch`); if the lane
-    /// is empty, a batch stolen from the tail of the most backed-up lane.
-    /// `None` = nothing runnable for this worker right now.
+    /// is empty, a batch stolen from the tail of the most backed-up lane
+    /// — unless that tail is a pinned decode step, which only its
+    /// residency-holding worker may run. `None` = nothing runnable for
+    /// this worker right now.
     pub fn next_batch(&mut self, w: usize) -> Option<Vec<Job>> {
         if let Some(head) = self.lanes[w].queue.pop_front() {
             let key = head.key.clone();
@@ -158,7 +248,9 @@ impl SchedState {
         let victim = (0..self.lanes.len())
             .filter(|&i| i != w)
             .max_by_key(|&i| self.lanes[i].queue.len())?;
-        if self.lanes[victim].queue.len() < self.steal_threshold {
+        if self.lanes[victim].queue.len() < self.steal_threshold
+            || self.lanes[victim].queue.back().is_some_and(|j| j.pinned())
+        {
             return None;
         }
         let tail = self.lanes[victim].queue.pop_back().expect("length checked");
@@ -166,9 +258,11 @@ impl SchedState {
         let prec = tail.prec;
         let mut batch = vec![tail];
         // Take the contiguous same-key run at the tail (the victim's FIFO
-        // front — its worker's next work — stays untouched).
+        // front — its worker's next work — stays untouched; pinned jobs
+        // end the run).
         while batch.len() < self.max_batch {
-            let same = matches!(self.lanes[victim].queue.back(), Some(j) if j.key == key);
+            let same = matches!(self.lanes[victim].queue.back(),
+                Some(j) if j.key == key && !j.pinned());
             if !same {
                 break;
             }
@@ -204,17 +298,28 @@ mod tests {
             strat: StrategyKind::Mm,
         };
         Job {
+            id,
             key: BatchKey::of(&kind),
             prec,
-            req: Request { id, kind },
+            req: Request::from(kind),
             enqueued: Instant::now(),
             done: Arc::new(Completion::default()),
         }
     }
 
+    fn session_job(id: u64, sid: u64, phase: Phase, kv: u64) -> Job {
+        let mut j = job(id, 1 + id as u32, Precision::Int8);
+        j.req = j.req.session(SessionId(sid)).phase(phase).kv(kv);
+        j
+    }
+
+    fn sched(workers: usize) -> SchedState {
+        SchedState::new(workers, 64, 1, 2, 0)
+    }
+
     #[test]
     fn affinity_routes_same_precision_to_same_lane() {
-        let mut s = SchedState::new(3, 64, 1, 2);
+        let mut s = sched(3);
         let a = s.route(job(0, 2, Precision::Int8)).unwrap_or_else(|_| panic!());
         let b = s.route(job(1, 3, Precision::Int8)).unwrap_or_else(|_| panic!());
         assert_eq!(a, b, "same precision sticks to one lane");
@@ -227,38 +332,38 @@ mod tests {
 
     #[test]
     fn overflow_returns_the_job() {
-        let mut s = SchedState::new(1, 2, 1, 2);
+        let mut s = SchedState::new(1, 2, 1, 2, 0);
         assert!(s.route(job(0, 2, Precision::Int8)).is_ok());
         assert!(s.route(job(1, 2, Precision::Int8)).is_ok());
         let back = s.route(job(2, 2, Precision::Int8));
         assert!(back.is_err());
-        assert_eq!(back.err().map(|j| j.req.id), Some(2));
+        assert_eq!(back.err().map(|j| j.id), Some(2));
         assert!(!s.has_space());
         assert_eq!(s.max_depth, 2);
     }
 
     #[test]
     fn micro_batch_takes_same_key_jobs_up_to_cap() {
-        let mut s = SchedState::new(1, 64, 3, 2);
+        let mut s = SchedState::new(1, 64, 3, 2, 0);
         // Keys: A A B A A — batch pops [A,A,A] (cap 3), leaves [B,A].
         for (id, m) in [(0, 2), (1, 2), (2, 9), (3, 2), (4, 2)] {
             s.route(job(id, m, Precision::Int8)).unwrap_or_else(|_| panic!());
         }
         let batch = s.next_batch(0).unwrap();
-        assert_eq!(batch.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![0, 1, 3]);
+        assert_eq!(batch.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1, 3]);
         assert_eq!(s.queued(), 2);
         let batch = s.next_batch(0).unwrap();
-        assert_eq!(batch[0].req.id, 2, "skipped jobs keep FIFO order");
+        assert_eq!(batch[0].id, 2, "skipped jobs keep FIFO order");
         assert_eq!(batch.len(), 1);
         let batch = s.next_batch(0).unwrap();
-        assert_eq!(batch[0].req.id, 4);
+        assert_eq!(batch[0].id, 4);
         assert!(s.next_batch(0).is_none());
         assert_eq!(s.queued(), 0);
     }
 
     #[test]
     fn stealing_only_from_backed_up_lanes() {
-        let mut s = SchedState::new(2, 64, 8, 2);
+        let mut s = SchedState::new(2, 64, 8, 2, 0);
         // Everything lands on lane 0 (same precision).
         s.route(job(0, 2, Precision::Int8)).unwrap_or_else(|_| panic!());
         // One queued job is below the threshold: worker 1 must not steal.
@@ -268,21 +373,85 @@ mod tests {
         // Lane 0 is backed up now; worker 1 steals the same-key tail run
         // in submission order.
         let batch = s.next_batch(1).unwrap();
-        assert_eq!(batch.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(batch.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(s.steals, 1);
         // The victim's head job is untouched.
         let own = s.next_batch(0).unwrap();
-        assert_eq!(own[0].req.id, 0);
+        assert_eq!(own[0].id, 0);
         assert_eq!(s.queued(), 0);
     }
 
     #[test]
     fn depth_accounting() {
-        let mut s = SchedState::new(1, 8, 1, 2);
+        let mut s = SchedState::new(1, 8, 1, 2, 0);
         for id in 0..4 {
             s.route(job(id, 2, Precision::Int8)).unwrap_or_else(|_| panic!());
         }
         assert_eq!(s.max_depth, 4);
         assert!((s.avg_depth() - 2.5).abs() < 1e-9, "{}", s.avg_depth());
+    }
+
+    #[test]
+    fn decode_lands_on_the_resident_lane() {
+        let mut s = sched(4);
+        // Prefill installs residency (neither hit nor miss).
+        let home = s.route(session_job(0, 7, Phase::Prefill, 1024)).unwrap_or_else(|_| panic!());
+        assert_eq!((s.kv_hits, s.kv_misses), (0, 0));
+        // Pile unrelated work onto the home lane so load balancing alone
+        // would steer elsewhere — residency must still win.
+        for id in 1..4 {
+            let w = s.route(job(id, 2, Precision::Int8)).unwrap_or_else(|_| panic!());
+            assert_eq!(w, home, "INT8 affinity keeps these on the home lane");
+        }
+        let w = s.route(session_job(4, 7, Phase::Decode, 1040)).unwrap_or_else(|_| panic!());
+        assert_eq!(w, home, "decode must land on the KV-resident lane");
+        assert_eq!((s.kv_hits, s.kv_misses), (1, 0));
+        // A sessionless decode-free stream never touches KV counters.
+        assert_eq!(s.kv_spills, 0);
+        assert_eq!(s.kv_bytes_peak, 1040, "refresh replaces the byte charge");
+    }
+
+    #[test]
+    fn orphan_decode_counts_a_miss_and_reinstalls() {
+        let mut s = sched(2);
+        let w = s.route(session_job(0, 9, Phase::Decode, 512)).unwrap_or_else(|_| panic!());
+        assert_eq!((s.kv_hits, s.kv_misses), (0, 1));
+        let w2 = s.route(session_job(1, 9, Phase::Decode, 520)).unwrap_or_else(|_| panic!());
+        assert_eq!(w2, w, "re-installed residency is honored");
+        assert_eq!((s.kv_hits, s.kv_misses), (1, 1));
+    }
+
+    #[test]
+    fn kv_budget_evicts_lru_and_counts_spills() {
+        let mut s = SchedState::new(1, 64, 1, 2, 1000);
+        s.route(session_job(0, 1, Phase::Prefill, 600)).unwrap_or_else(|_| panic!());
+        s.route(session_job(1, 2, Phase::Prefill, 600)).unwrap_or_else(|_| panic!());
+        // Session 1 (coldest) was evicted to fit session 2.
+        assert_eq!(s.kv_spills, 1);
+        // Its decode step now misses and re-installs, evicting session 2.
+        s.route(session_job(2, 1, Phase::Decode, 610)).unwrap_or_else(|_| panic!());
+        assert_eq!((s.kv_hits, s.kv_misses, s.kv_spills), (0, 1, 2));
+        // An oversized session is never evicted on its own behalf.
+        s.route(session_job(3, 3, Phase::Prefill, 5000)).unwrap_or_else(|_| panic!());
+        assert_eq!(s.kv_spills, 3, "resident session 1 spilled for it");
+        assert_eq!(s.kv_bytes_peak, 5000);
+    }
+
+    #[test]
+    fn pinned_decode_tail_is_never_stolen() {
+        let mut s = SchedState::new(2, 64, 8, 2, 0);
+        // Route everything to lane 0: prefill installs residency, then
+        // queued decode steps pile up behind an op request.
+        s.route(session_job(0, 5, Phase::Prefill, 256)).unwrap_or_else(|_| panic!());
+        s.route(session_job(1, 5, Phase::Decode, 260)).unwrap_or_else(|_| panic!());
+        s.route(session_job(2, 5, Phase::Decode, 264)).unwrap_or_else(|_| panic!());
+        // Lane 0 is past the steal threshold but its tail is pinned.
+        assert!(s.next_batch(1).is_none(), "decode steps must not be stolen");
+        // The owning worker drains them in order.
+        let b = s.next_batch(0).unwrap();
+        assert_eq!(b[0].id, 0);
+        assert_eq!(s.next_batch(0).unwrap()[0].id, 1);
+        assert_eq!(s.next_batch(0).unwrap()[0].id, 2);
+        assert_eq!(s.kv_hits, 2);
     }
 }

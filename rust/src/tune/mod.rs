@@ -858,6 +858,31 @@ mod tests {
     }
 
     #[test]
+    fn decode_step_tuning_never_loses_to_static() {
+        // Autoregressive decode shapes: skinny MMs whose K grows with the
+        // KV cache. The tuner's skinny-chunk arm must never lose to the
+        // static mapping at any cache length or precision, and every
+        // growing-K variant must resolve through its plan.
+        let spec = crate::models::zoo::llm_spec("llm_tiny").unwrap();
+        for prec in [Precision::Int8, Precision::Int4] {
+            for kv in [65u32, 96] {
+                let step = spec.decode_step(prec, kv);
+                let plan =
+                    tune_model(&cfg(), &step, prec, &TuneOptions::default()).unwrap();
+                assert!(
+                    plan.tuned_cycles() <= plan.static_cycles(),
+                    "{prec} kv={kv}: tuned {} > static {}",
+                    plan.tuned_cycles(),
+                    plan.static_cycles()
+                );
+                for op in &step.at_precision(prec).ops {
+                    assert!(plan.choice_for(op).is_some(), "{op:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn tune_op_rejects_invalid_geometry() {
         let mut engine = Engine::new(cfg()).unwrap();
         let bad = OpDesc::conv(3, 4, 2, 2, 5, 1, 0, Precision::Int8);

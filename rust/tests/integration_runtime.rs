@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use speed_rvv::runtime::{golden_check, golden_check_all, Engine};
+use speed_rvv::runtime::{golden_check, golden_check_all, PjrtEngine};
 use speed_rvv::runtime::artifacts::Golden;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -20,7 +20,7 @@ fn engine_opens_and_lists_artifacts() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     };
-    let engine = Engine::open(&dir).expect("open engine");
+    let engine = PjrtEngine::open(&dir).expect("open engine");
     assert!(engine.manifest().len() >= 10, "expected full artifact set");
     for name in ["mm_i4", "mm_i8", "mm_i16", "conv3x3_i8", "mnv2_block_i8", "vit_mlp_i8"] {
         assert!(engine.manifest().artifact(name).is_some(), "{name}");
@@ -33,7 +33,7 @@ fn every_artifact_passes_golden_check() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     };
-    let mut engine = Engine::open(&dir).expect("open engine");
+    let mut engine = PjrtEngine::open(&dir).expect("open engine");
     let reports = golden_check_all(&mut engine, &dir).expect("golden checks");
     assert!(!reports.is_empty());
     for r in &reports {
@@ -54,7 +54,7 @@ fn executable_cache_reuses_compilations() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     };
-    let mut engine = Engine::open(&dir).expect("open engine");
+    let mut engine = PjrtEngine::open(&dir).expect("open engine");
     assert_eq!(engine.cached(), 0);
     golden_check(&mut engine, &dir, "mm_i8").unwrap();
     assert_eq!(engine.cached(), 1);
@@ -68,7 +68,7 @@ fn execute_rejects_bad_shapes() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     };
-    let mut engine = Engine::open(&dir).expect("open engine");
+    let mut engine = PjrtEngine::open(&dir).expect("open engine");
     // mm_i8 wants (32,64) x (64,32); feed wrong sizes.
     assert!(engine.execute("mm_i8", &[vec![0; 4], vec![0; 4]]).is_err());
     assert!(engine.execute("mm_i8", &[vec![0; 32 * 64]]).is_err());
@@ -84,7 +84,7 @@ fn requant_epilogue_matches_pjrt_artifact() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     };
-    let mut engine = Engine::open(&dir).expect("open engine");
+    let mut engine = PjrtEngine::open(&dir).expect("open engine");
     let art = engine.manifest().artifact("requant_s7_i8").expect("artifact").clone();
     let golden = Golden::load(&dir, &art).expect("golden");
     let pjrt_out = engine.execute("requant_s7_i8", &golden.inputs).expect("execute");

@@ -5,7 +5,7 @@
 
 use speed_rvv::config::SpeedConfig;
 use speed_rvv::serve::{
-    stats_digest, RequestKind, RequestResult, Scenario, ServeOptions, ServePool,
+    stats_digest, Phase, Request, RequestKind, RequestResult, Scenario, ServeOptions, ServePool,
 };
 use speed_rvv::sim::ExecMode;
 use speed_rvv::Engine;
@@ -27,7 +27,7 @@ const PARITY_SCENARIO: &str = r#"{
 }"#;
 
 fn run_pool(
-    kinds: &[RequestKind],
+    reqs: &[Request],
     workers: usize,
     max_batch: usize,
     mode: ExecMode,
@@ -43,7 +43,7 @@ fn run_pool(
         },
     )
     .unwrap();
-    pool.run_all(kinds.to_vec()).unwrap()
+    pool.run_all(reqs.to_vec()).unwrap()
 }
 
 fn assert_same_stats(a: &[RequestResult], b: &[RequestResult], what: &str) {
@@ -59,22 +59,22 @@ fn assert_same_stats(a: &[RequestResult], b: &[RequestResult], what: &str) {
 #[test]
 fn per_request_stats_are_schedule_invariant() {
     let sc = Scenario::from_json(PARITY_SCENARIO).unwrap();
-    let kinds = sc.generate(false).unwrap();
-    assert_eq!(kinds.len(), 10);
+    let reqs = sc.generate(false).unwrap();
+    assert_eq!(reqs.len(), 10);
 
     // Reference: one worker, no coalescing, batch-mode simulator.
-    let reference = run_pool(&kinds, 1, 1, ExecMode::Batch);
+    let reference = run_pool(&reqs, 1, 1, ExecMode::Batch);
 
     // More workers (work stealing + affinity routing engaged).
-    let wide = run_pool(&kinds, 4, 1, ExecMode::Batch);
+    let wide = run_pool(&reqs, 4, 1, ExecMode::Batch);
     assert_same_stats(&reference, &wide, "workers 1 vs 4");
 
     // Micro-batching on.
-    let batched = run_pool(&kinds, 2, 8, ExecMode::Batch);
+    let batched = run_pool(&reqs, 2, 8, ExecMode::Batch);
     assert_same_stats(&reference, &batched, "batched vs unbatched");
 
     // The per-instruction simulator (--exact) with everything else varied.
-    let exact = run_pool(&kinds, 3, 4, ExecMode::Exact);
+    let exact = run_pool(&reqs, 3, 4, ExecMode::Exact);
     assert_same_stats(&reference, &exact, "batch vs exact mode");
 }
 
@@ -86,11 +86,11 @@ fn pool_results_match_a_dedicated_fresh_engine() {
     // intra-request switches; a fresh engine additionally counts the
     // warm-up switch its default INT8 datapath may pay on entry).
     let sc = Scenario::from_json(PARITY_SCENARIO).unwrap();
-    let kinds = sc.generate(false).unwrap();
-    let served = run_pool(&kinds, 2, 4, ExecMode::Batch);
-    for (kind, r) in kinds.iter().zip(&served) {
+    let reqs = sc.generate(false).unwrap();
+    let served = run_pool(&reqs, 2, 4, ExecMode::Batch);
+    for (req, r) in reqs.iter().zip(&served) {
         let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
-        let mut solo = match kind {
+        let mut solo = match &req.kind {
             RequestKind::Model { model, prec, policy } => {
                 let mut session = engine.session().with_policy(*policy);
                 session.run_model(model, *prec).unwrap().total
@@ -100,7 +100,7 @@ fn pool_results_match_a_dedicated_fresh_engine() {
             }
         };
         solo.precision_switches = r.stats.precision_switches;
-        assert_eq!(solo, r.stats, "request {} ({})", r.id, kind.label());
+        assert_eq!(solo, r.stats, "request {} ({})", r.id, req.kind.label());
     }
 }
 
@@ -114,25 +114,30 @@ fn committed_mixed_edge_scenario_is_deterministic() {
     );
     let sc = Scenario::load(path).unwrap();
     assert_eq!(sc.name, "mixed_edge");
-    let kinds = sc.generate(true).unwrap();
-    assert!(!kinds.is_empty());
-    let narrow = run_pool(&kinds, 1, 1, ExecMode::Batch);
-    let wide = run_pool(&kinds, 4, 8, ExecMode::Batch);
+    let reqs = sc.generate(true).unwrap();
+    assert!(!reqs.is_empty());
+    let narrow = run_pool(&reqs, 1, 1, ExecMode::Batch);
+    let wide = run_pool(&reqs, 4, 8, ExecMode::Batch);
     assert_same_stats(&narrow, &wide, "mixed_edge quick");
     // The stream mixes precisions (the scenario's point).
     let precs: std::collections::HashSet<String> =
-        kinds.iter().map(|k| format!("{}", k.precision())).collect();
+        reqs.iter().map(|k| format!("{}", k.kind.precision())).collect();
     assert!(precs.len() >= 2, "{precs:?}");
 }
 
 #[test]
 fn other_committed_scenarios_parse_and_generate() {
-    for file in ["steady_vision.json", "vit_burst.json", "online_tune.json"] {
+    for file in [
+        "steady_vision.json",
+        "vit_burst.json",
+        "online_tune.json",
+        "llm_decode.json",
+    ] {
         let path =
             format!("{}/../bench/scenarios/{file}", env!("CARGO_MANIFEST_DIR"));
         let sc = Scenario::load(&path).unwrap_or_else(|e| panic!("{file}: {e}"));
-        let kinds = sc.generate(true).unwrap_or_else(|e| panic!("{file}: {e}"));
-        assert!(!kinds.is_empty(), "{file}");
+        let reqs = sc.generate(true).unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert!(!reqs.is_empty(), "{file}");
     }
 }
 
@@ -169,7 +174,7 @@ fn serve_bench_report_is_parseable_and_digest_stable() {
     assert_eq!(a.total_traffic_bytes, b.total_traffic_bytes);
 
     let doc = parse(&b.to_json()).unwrap();
-    assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(1));
+    assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(2));
     assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve-bench"));
     assert_eq!(doc.get("requests").and_then(Json::as_i64), Some(10));
     assert_eq!(
@@ -392,15 +397,79 @@ fn backpressure_blocks_then_drains() {
         },
     )
     .unwrap();
-    let kinds: Vec<RequestKind> = Scenario::from_json(PARITY_SCENARIO)
+    let reqs: Vec<Request> = Scenario::from_json(PARITY_SCENARIO)
         .unwrap()
         .generate(false)
         .unwrap();
-    let n = kinds.len() as u64;
-    let results = pool.run_all(kinds).unwrap();
+    let n = reqs.len() as u64;
+    let results = pool.run_all(reqs).unwrap();
     assert_eq!(results.len() as u64, n);
     let snap = pool.shutdown();
     assert_eq!(snap.completed, n);
     assert_eq!(snap.rejected, 0);
     assert!(snap.queue_max_depth <= 2);
+}
+
+/// Version-2 scenario exercising the llm workload: three autoregressive
+/// sessions (one prefill + five decode steps each) across two precisions.
+const LLM_SCENARIO: &str = r#"{
+    "name": "llm_parity",
+    "version": 2,
+    "seed": 7,
+    "requests": 18,
+    "arrival": { "pattern": "burst", "size": 4 },
+    "mix": [
+        { "llm": "llm_tiny", "prompt": 8, "decode": 5, "prec": 8, "weight": 2 },
+        { "llm": "llm_tiny", "prompt": 8, "decode": 5, "prec": 4, "weight": 1 }
+    ]
+}"#;
+
+#[test]
+fn decode_parity_across_worker_counts_with_kv_accounting() {
+    // The ISSUE 7 acceptance bar: session affinity routes decode steps to
+    // the worker holding KV residency, yet per-request stats stay
+    // bit-identical for any worker count — residency decides only WHERE a
+    // request runs, never WHAT it computes.
+    let sc = Scenario::from_json(LLM_SCENARIO).unwrap();
+    let reqs = sc.generate(false).unwrap();
+    assert_eq!(reqs.len(), 18);
+    let decodes = reqs.iter().filter(|r| r.phase == Phase::Decode).count() as u64;
+    assert_eq!(decodes, 15, "3 sessions x 5 decode steps");
+    assert!(reqs.iter().all(|r| r.session.is_some() && r.kv_bytes > 0));
+
+    let run = |workers: usize, kv_capacity: u64| {
+        let pool = ServePool::new(
+            SpeedConfig::reference(),
+            ServeOptions {
+                workers,
+                capacity: 64,
+                max_batch: 4,
+                kv_capacity,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let results = pool.run_all(reqs.clone()).unwrap();
+        (results, pool.shutdown())
+    };
+
+    // Ample KV budget (0 = unlimited): every decode step lands on its
+    // session's resident worker, and the phase split is fully accounted.
+    let (narrow, snap1) = run(1, 0);
+    let (wide, snap4) = run(4, 0);
+    assert_same_stats(&narrow, &wide, "llm decode workers 1 vs 4");
+    for snap in [&snap1, &snap4] {
+        assert_eq!(snap.prefill_requests, reqs.len() as u64 - decodes);
+        assert_eq!(snap.decode_requests, decodes);
+        assert_eq!(snap.kv_hits, decodes);
+        assert_eq!(snap.kv_misses, 0);
+        assert_eq!(snap.kv_spills, 0);
+        assert!(snap.kv_bytes_peak > 0);
+    }
+
+    // A starved per-worker KV budget forces evictions (spills) — but
+    // residency is scheduling-only, so the stats remain bit-identical.
+    let (starved, snap_tiny) = run(4, 1);
+    assert_same_stats(&narrow, &starved, "llm decode with starved kv budget");
+    assert!(snap_tiny.kv_spills > 0);
 }
