@@ -24,7 +24,7 @@ use speed_rvv::coordinator::{ara_complete_cycles, run_model_ara};
 use speed_rvv::engine::Engine;
 use speed_rvv::metrics::{inference_energy_mj, speed_area, speed_power};
 use speed_rvv::models::zoo::model_by_name;
-use speed_rvv::runtime::{golden_check, Engine as PjrtEngine};
+use speed_rvv::runtime::{golden_check, PjrtEngine};
 use speed_rvv::{SpeedConfig, SpeedError};
 
 fn main() -> Result<(), SpeedError> {

@@ -5,7 +5,9 @@
 //! operator sweep, the Fig. 12 model sweep, and the simulator hot-path
 //! micro-bench (`sim_hotpath`) through one warm [`Engine`], and emits a
 //! machine-readable `BENCH_sim.json` with host-side throughput (ops/s,
-//! simulated-stages/s), per-bench wall time, and program-cache hit rates.
+//! simulated-stages/s), per-bench wall time, program-cache hit rates,
+//! per-entry cycle-attribution breakdowns, and the unified
+//! [`crate::obs::Counters`] registry snapshot (schema 3).
 //!
 //! The hot-path bench runs twice — [`ExecMode::Exact`] (per-instruction
 //! stepping) and [`ExecMode::Batch`] (the stream-run fast path) — so every
@@ -25,6 +27,7 @@ use crate::error::{Result, SpeedError};
 use crate::isa::StrategyKind;
 use crate::models::zoo::{model_by_name, MODELS};
 use crate::models::OpDesc;
+use crate::obs::{Counters, CycleBreakdown};
 use crate::runtime::json::{jf, jstr, parse, Json};
 use crate::sim::ExecMode;
 use crate::tune::{self, TuneOptions};
@@ -69,6 +72,9 @@ pub struct BenchEntry {
     pub mops_per_s_host: f64,
     /// Program-cache hit rate of the owning engine when the entry finished.
     pub cache_hit_rate: f64,
+    /// Cycle attribution of the timed pass (components sum to
+    /// [`BenchEntry::sim_cycles`] exactly).
+    pub breakdown: CycleBreakdown,
 }
 
 /// The `sim_hotpath` section: one stage-heavy CONV3×3 stream measured in
@@ -144,6 +150,10 @@ pub struct BenchReport {
     pub cache_hits: u64,
     /// Program-cache misses across the operator sweep's shared engine.
     pub cache_misses: u64,
+    /// Unified counter-registry snapshot ([`crate::obs::Counter`] order):
+    /// one [`Counters`] pool is shared by every engine the harness builds,
+    /// so these totals span the operator, model, and tuned sweeps.
+    pub counters: Vec<(&'static str, u64)>,
     /// Wall time of the whole invocation, in seconds.
     pub total_wall_s: f64,
 }
@@ -191,7 +201,10 @@ impl BenchReport {
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(4096);
         s.push_str("{\n");
-        s.push_str("  \"schema\": 1,\n  \"bench\": \"speed-bench\",\n");
+        // Schema 3: per-entry cycle-attribution breakdowns + the unified
+        // counter-registry snapshot (aligned with `SERVE_bench.json`;
+        // schema 2 was never used by this document).
+        s.push_str("  \"schema\": 3,\n  \"bench\": \"speed-bench\",\n");
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str(&format!("  \"exact_only\": {},\n", self.exact_only));
         s.push_str("  \"sim_hotpath\": {\n");
@@ -211,10 +224,17 @@ impl BenchReport {
         for (key, entries) in [("operators", &self.operators), ("models", &self.models)] {
             s.push_str(&format!("  \"{key}\": [\n"));
             for (i, e) in entries.iter().enumerate() {
+                let buckets = CycleBreakdown::NAMES
+                    .iter()
+                    .zip(e.breakdown.components())
+                    .map(|(n, v)| format!("\"{n}\": {v}"))
+                    .collect::<Vec<_>>()
+                    .join(", ");
                 s.push_str(&format!(
                     "    {{ \"name\": {}, \"prec\": {}, \"strategy\": {}, \"wall_s\": {}, \
                      \"sim_cycles\": {}, \"macs\": {}, \"gops_simulated\": {}, \
-                     \"mops_per_s_host\": {}, \"cache_hit_rate\": {} }}{}\n",
+                     \"mops_per_s_host\": {}, \"cache_hit_rate\": {}, \
+                     \"breakdown\": {{ {} }} }}{}\n",
                     jstr(&e.name),
                     jstr(&e.prec.to_string()),
                     jstr(&e.strategy),
@@ -224,6 +244,7 @@ impl BenchReport {
                     jf(e.gops_simulated),
                     jf(e.mops_per_s_host),
                     jf(e.cache_hit_rate),
+                    buckets,
                     if i + 1 < entries.len() { "," } else { "" }
                 ));
             }
@@ -251,6 +272,14 @@ impl BenchReport {
             "  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n",
             self.cache_hits, self.cache_misses
         ));
+        s.push_str("  \"counters\": {\n");
+        for (i, (n, v)) in self.counters.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{n}\": {v}{}\n",
+                if i + 1 < self.counters.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  },\n");
         s.push_str("  \"metrics\": {\n");
         let metrics = self.metrics();
         for (i, (n, v)) in metrics.iter().enumerate() {
@@ -331,6 +360,13 @@ impl BenchReport {
                 ));
             }
         }
+        let mut split = CycleBreakdown::default();
+        for e in self.operators.iter().chain(&self.models) {
+            split.merge(&e.breakdown);
+        }
+        if split.total() > 0 {
+            s.push_str(&format!("cycle split (timed passes): {}\n", split.summary_line()));
+        }
         s.push_str(&format!(
             "program cache: {} hits / {} misses; total wall {:.2} s\n",
             self.cache_hits, self.cache_misses, self.total_wall_s
@@ -393,6 +429,10 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
     // explicitly and would otherwise override it).
     let exact_only = opts.exact_only || std::env::var_os("SPEED_EXACT").is_some();
     let mode = if exact_only { ExecMode::Exact } else { ExecMode::Batch };
+    // One counter registry shared by every engine the harness builds: the
+    // report's `counters` object then totals cache traffic and verifier
+    // work across all three sweeps.
+    let counters = Counters::new();
 
     // ---- sim_hotpath: exact vs fast ----
     let op = hotpath_op(opts.quick);
@@ -415,6 +455,7 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
     // ---- Fig. 11-style operator sweep (one warm engine) ----
     let mut engine = Engine::new(cfg)?;
     engine.set_exec_mode(mode);
+    engine.set_counters(counters.clone());
     let mut operators = Vec::new();
     let cases = operator_cases(opts.quick);
     for prec in Precision::ALL {
@@ -423,6 +464,7 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
             let strat = op.preferred_strategy();
             // Warm pass compiles; the timed pass replays the cached program.
             engine.run_op(&op, strat, false)?;
+            let b0 = engine.breakdown();
             let t0 = Instant::now();
             let (st, _) = engine.run_op(&op, strat, false)?;
             let wall = t0.elapsed().as_secs_f64();
@@ -436,6 +478,7 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
                 gops_simulated: st.gops(cfg.freq_ghz),
                 mops_per_s_host: 2.0 * st.macs as f64 / wall.max(1e-12) / 1e6,
                 cache_hit_rate: engine.cache_stats().hit_rate(),
+                breakdown: engine.breakdown().since(&b0),
             });
         }
     }
@@ -458,7 +501,9 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
         }
         let mut engine = Engine::new(cfg)?;
         engine.set_exec_mode(mode);
+        engine.set_counters(counters.clone());
         for &prec in precs {
+            let b0 = engine.breakdown();
             let t0 = Instant::now();
             let r = engine.session().run_model(&model, prec)?;
             let wall = t0.elapsed().as_secs_f64();
@@ -472,6 +517,7 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
                 gops_simulated: r.total.gops(cfg.freq_ghz),
                 mops_per_s_host: 2.0 * r.total.macs as f64 / wall.max(1e-12) / 1e6,
                 cache_hit_rate: engine.cache_stats().hit_rate(),
+                breakdown: engine.breakdown().since(&b0),
             });
         }
     }
@@ -511,12 +557,14 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
         let tune_wall = t0.elapsed().as_secs_f64();
         let mut static_engine = Engine::new(cfg)?;
         static_engine.set_exec_mode(mode);
+        static_engine.set_counters(counters.clone());
         let static_run = static_engine
             .session()
             .with_policy(Policy::Mixed)
             .run_model(&model, prec)?;
         let mut tuned_engine = Engine::new(cfg)?;
         tuned_engine.set_exec_mode(mode);
+        tuned_engine.set_counters(counters.clone());
         let improved_ops = plan.improved_ops();
         let tuned_ops = plan.ops.len();
         let tuned_run = tuned_engine
@@ -543,6 +591,7 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
         tuned,
         cache_hits: cache.hits,
         cache_misses: cache.misses,
+        counters: counters.snapshot(),
         total_wall_s: t_all.elapsed().as_secs_f64(),
     })
 }
@@ -618,6 +667,12 @@ mod tests {
                 gops_simulated: 10.0,
                 mops_per_s_host: 1.0,
                 cache_hit_rate: 0.5,
+                breakdown: CycleBreakdown {
+                    chain: 1000,
+                    load: 200,
+                    overhead: 34,
+                    ..Default::default()
+                },
             }],
             models: vec![],
             tuned: vec![TunedBenchEntry {
@@ -631,6 +686,7 @@ mod tests {
             }],
             cache_hits: 1,
             cache_misses: 1,
+            counters: vec![("engine_cache_hits", 1), ("engine_cache_misses", 1)],
             total_wall_s: 0.5,
         }
     }
@@ -639,7 +695,7 @@ mod tests {
     fn json_is_parseable_and_carries_metrics() {
         let r = fake_report();
         let doc = parse(&r.to_json()).unwrap();
-        assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(1));
+        assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(3));
         let m = doc.get("metrics").and_then(Json::as_obj).unwrap();
         assert_eq!(
             m.get("sim_hotpath_fast_stages_per_s").and_then(Json::as_f64),
@@ -655,6 +711,13 @@ mod tests {
         let t = doc.get("tuned").and_then(Json::as_arr).unwrap();
         assert_eq!(t.len(), 1);
         assert_eq!(t[0].get("cycles_tuned").and_then(Json::as_i64), Some(1000));
+        // Schema 3: per-entry cycle breakdowns + the counter registry.
+        let ops = doc.get("operators").and_then(Json::as_arr).unwrap();
+        let bd = ops[0].get("breakdown").unwrap();
+        assert_eq!(bd.get("chain").and_then(Json::as_i64), Some(1000));
+        assert_eq!(bd.get("overhead").and_then(Json::as_i64), Some(34));
+        let counters = doc.get("counters").unwrap();
+        assert_eq!(counters.get("engine_cache_hits").and_then(Json::as_i64), Some(1));
         let best = m.get("tuned_vs_mixed_best_speedup").and_then(Json::as_f64).unwrap();
         assert!((best - 1.2).abs() < 1e-9, "{best}");
     }

@@ -19,6 +19,7 @@ use crate::error::SpeedError;
 use crate::isa::StrategyKind;
 use crate::metrics::speed_area;
 use crate::models::ops::OpDesc;
+use crate::obs::CycleBreakdown;
 use crate::runtime::json::{jf, jstr};
 use crate::tune::{tune_op, TuneOptions};
 
@@ -48,6 +49,10 @@ pub struct DsePoint {
     pub area_mm2: f64,
     /// Simulated cycles of the static mapping.
     pub static_cycles: u64,
+    /// Cycle attribution of the static-mapping run (components sum to
+    /// [`DsePoint::static_cycles`]) — shows where a design point is
+    /// bound (chain-limited vs load/store-limited) as lanes/tiles scale.
+    pub breakdown: CycleBreakdown,
     /// Per-point tuned outcome (`None` on a static-only sweep).
     pub tuned: Option<TunedDsePoint>,
 }
@@ -106,6 +111,9 @@ pub fn eval_point_with(
         gops: stats.gops(cfg.freq_ghz),
         area_mm2: speed_area(cfg).total(),
         static_cycles: stats.cycles,
+        // The engine is fresh, so its lifetime breakdown is exactly the
+        // static run's attribution (captured before any tuned search).
+        breakdown: engine.breakdown(),
         tuned: None,
     };
     if tuned {
@@ -167,7 +175,8 @@ pub fn peak_area_eff(points: &[DsePoint]) -> DsePoint {
 pub fn sweep_json(points: &[DsePoint], quick: bool) -> String {
     let tuned = points.iter().any(|p| p.tuned.is_some());
     let mut s = String::with_capacity(4096);
-    s.push_str("{\n  \"schema\": 1,\n  \"bench\": \"dse\",\n");
+    // Schema 2: per-point static-mapping cycle breakdowns.
+    s.push_str("{\n  \"schema\": 2,\n  \"bench\": \"dse\",\n");
     s.push_str(&format!("  \"quick\": {quick},\n"));
     s.push_str(&format!("  \"tuned\": {tuned},\n"));
     s.push_str("  \"points\": [\n");
@@ -182,10 +191,17 @@ pub fn sweep_json(points: &[DsePoint], quick: bool) -> String {
             ),
             None => ("null".into(), "null".into(), "null".into(), "null".into(), 0),
         };
+        let buckets = CycleBreakdown::NAMES
+            .iter()
+            .zip(p.breakdown.components())
+            .map(|(n, v)| format!("\"{n}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
         s.push_str(&format!(
             "    {{ \"lanes\": {}, \"tile_r\": {}, \"tile_c\": {}, \
              \"gops\": {}, \"area_mm2\": {}, \"area_eff\": {}, \
-             \"cycles_static\": {}, \"cycles_tuned\": {}, \"tuned_gops\": {}, \
+             \"cycles_static\": {}, \"breakdown\": {{ {} }}, \
+             \"cycles_tuned\": {}, \"tuned_gops\": {}, \
              \"tuned_area_eff\": {}, \"tuned_choice\": {}, \"candidates\": {} }}{}\n",
             p.cfg.lanes,
             p.cfg.tile_r,
@@ -194,6 +210,7 @@ pub fn sweep_json(points: &[DsePoint], quick: bool) -> String {
             jf(p.area_mm2),
             jf(p.area_eff()),
             p.static_cycles,
+            buckets,
             tc,
             tg,
             te,
@@ -281,6 +298,10 @@ mod tests {
         let p = eval_point(&SpeedConfig::dse(2, 2, 2), &op).unwrap();
         assert!(p.tuned.is_none());
         assert!(p.static_cycles > 0);
+        // Schema 2: the per-point attribution telescopes to the static
+        // cycle count exactly.
+        assert_eq!(p.breakdown.total(), p.static_cycles);
+        assert!(p.breakdown.chain > 0);
         assert_eq!(p.best_area_eff(), p.area_eff());
         use crate::runtime::json::{parse, Json};
         let doc = parse(&sweep_json(&[p], true)).unwrap();

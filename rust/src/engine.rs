@@ -39,7 +39,8 @@ use crate::error::{Result, SpeedError};
 use crate::isa::{Segment, StrategyKind};
 use crate::models::attn::AttnDesc;
 use crate::models::zoo::Model;
-use crate::models::OpDesc;
+use crate::models::{OpDesc, OpKind};
+use crate::obs::{Counter, Counters, CycleBreakdown, ObsConfig, SpanCat, Tracer};
 use crate::sim::{ExecMode, OpPlan, Processor, SimStats};
 use crate::tune::TunedPlan;
 
@@ -199,6 +200,22 @@ pub struct Engine {
     /// Release-build opt-in for compile-time stream verification (debug
     /// builds always verify — see [`Engine::set_verify_on_compile`]).
     verify_on_compile: bool,
+    /// Observability configuration last applied via [`Engine::set_obs`].
+    obs: ObsConfig,
+    /// Unified counter registry this engine feeds (own by default;
+    /// pool-shared after [`Engine::set_counters`]).
+    counters: Counters,
+}
+
+/// Short human-readable operator label for trace spans.
+fn op_label(op: &OpDesc) -> String {
+    match op.kind {
+        OpKind::Mm => format!("MM {}x{}x{} {}", op.m, op.k, op.n, op.prec),
+        _ => format!(
+            "{} c{} f{} {}x{} k{} {}",
+            op.kind, op.c, op.f, op.h, op.w, op.ksize, op.prec
+        ),
+    }
 }
 
 impl Engine {
@@ -212,14 +229,23 @@ impl Engine {
     pub fn with_memory(cfg: SpeedConfig, mem_bytes: usize) -> Result<Self> {
         cfg.validate()?;
         let mem = mem_bytes.max(MEM_MIN_BYTES as usize);
-        Ok(Engine {
+        let mut engine = Engine {
             cfg,
             proc: Processor::new(cfg, mem),
             programs: HashMap::new(),
             shared: None,
             cache: CacheStats::default(),
             verify_on_compile: false,
-        })
+            obs: ObsConfig::off(),
+            counters: Counters::new(),
+        };
+        // Deprecated alias: a set `SPEED_TRACE` env var routes through the
+        // same explicit config path new code uses (`set_obs`).
+        let env = ObsConfig::from_env();
+        if env != ObsConfig::off() {
+            engine.set_obs(env);
+        }
+        Ok(engine)
     }
 
     /// Build a pool-member engine: compilation results are exchanged with
@@ -250,6 +276,50 @@ impl Engine {
     /// Program-cache hit/miss counters so far.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache
+    }
+
+    /// Apply an observability configuration: attaches a fresh tracer on
+    /// timeline 0 (or detaches it when tracing is off). Attaching or
+    /// detaching a tracer never changes [`SimStats`] — the inertness
+    /// invariant enforced by `tests/obs_inertness.rs`. Pool workers attach
+    /// a pre-built per-worker tracer via [`Engine::set_tracer`] instead.
+    pub fn set_obs(&mut self, obs: ObsConfig) {
+        self.obs = obs;
+        self.proc.attach_tracer(Tracer::from_config(&obs, 0));
+    }
+
+    /// The observability configuration last applied.
+    pub fn obs(&self) -> ObsConfig {
+        self.obs
+    }
+
+    /// Attach a pre-built tracer (pools share one ring per worker
+    /// timeline), or detach tracing with `None`.
+    pub fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        self.proc.attach_tracer(tracer);
+    }
+
+    /// The attached tracer, when tracing is on.
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.proc.tracer()
+    }
+
+    /// Replace the counter registry (pools inject one shared registry
+    /// into every worker engine; see [`Counters`]).
+    pub fn set_counters(&mut self, counters: Counters) {
+        self.counters = counters;
+    }
+
+    /// The unified counter registry this engine feeds.
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    /// Lifetime cycle attribution of the warm processor. The component
+    /// sum equals the processor's lifetime cycle count exactly; diff
+    /// snapshots with [`CycleBreakdown::since`] for per-op attribution.
+    pub fn breakdown(&self) -> CycleBreakdown {
+        self.proc.breakdown()
     }
 
     /// Number of distinct compiled programs resident in the cache.
@@ -350,17 +420,21 @@ impl Engine {
         };
         if let Some(p) = self.programs.get(&key) {
             self.cache.hits += 1;
+            self.counters.incr(Counter::EngineCacheHits);
             return Ok(p.clone());
         }
         if let Some(shared) = &self.shared {
             if let Some(p) = shared.get(&key) {
                 self.cache.hits += 1;
                 self.cache.shared_hits += 1;
+                self.counters.incr(Counter::EngineCacheHits);
+                self.counters.incr(Counter::EngineCacheSharedHits);
                 self.programs.insert(key, p.clone());
                 return Ok(p);
             }
         }
         self.cache.misses += 1;
+        self.counters.incr(Counter::EngineCacheMisses);
         let (layout, required_bytes) = MemLayout::place(op);
         // Sizing pass first: `Sink::Collect` would materialize the *whole*
         // stream, so the only memory-safe way to decide materialization is
@@ -379,8 +453,13 @@ impl Engine {
         // this — `repro verify` covers them via the streaming verifier.
         if self.verify_on_compile() {
             if let Some(segs) = &segments {
-                analysis::verify_segments(op, &self.cfg, choice, layout, segs)
-                    .into_result()?;
+                let report = analysis::verify_segments(op, &self.cfg, choice, layout, segs);
+                self.counters.incr(Counter::VerifyPrograms);
+                self.counters.add(
+                    Counter::VerifyRuleEvals,
+                    report.insns * analysis::Rule::ALL.len() as u64,
+                );
+                report.into_result()?;
             }
         }
         let plan = OpPlan {
@@ -432,22 +511,43 @@ impl Engine {
         let mut plan = prog.plan;
         plan.functional = functional;
         self.proc.set_plan(plan);
+        // Span begin times come from the tracer's virtual clock *before*
+        // each unit runs; durations are that unit's simulated cycles. The
+        // clock itself advances only inside the simulator, so op-span
+        // durations sum to exactly the run's `SimStats::cycles`.
+        let op_begin = self.proc.tracer().map(|t| t.now());
         let mut stats = SimStats::default();
         match &prog.segments {
             Some(segs) => {
-                for seg in segs {
-                    stats.merge(&self.proc.run_segment(seg)?);
+                for (i, seg) in segs.iter().enumerate() {
+                    let seg_begin = self.proc.tracer().map(|t| t.now());
+                    let seg_stats = self.proc.run_segment(seg)?;
+                    if let (Some(begin), Some(t)) = (seg_begin, self.proc.tracer()) {
+                        t.record(SpanCat::Segment, format!("segment {i}"), begin, seg_stats.cycles);
+                    }
+                    stats.merge(&seg_stats);
                 }
             }
             None => {
                 let cfg = self.cfg;
                 let proc = &mut self.proc;
+                let mut seg_idx = 0usize;
                 let mut feed = |seg: Segment| -> Result<(), SpeedError> {
-                    stats.merge(&proc.run_segment(&seg)?);
+                    let seg_begin = proc.tracer().map(|t| t.now());
+                    let seg_stats = proc.run_segment(&seg)?;
+                    if let (Some(begin), Some(t)) = (seg_begin, proc.tracer()) {
+                        let name = format!("segment {seg_idx} (streamed)");
+                        t.record(SpanCat::Segment, name, begin, seg_stats.cycles);
+                    }
+                    seg_idx += 1;
+                    stats.merge(&seg_stats);
                     Ok(())
                 };
                 compiler::stream_op_with(op, &cfg, choice, &prog.layout, &mut feed)?;
             }
+        }
+        if let (Some(begin), Some(t)) = (op_begin, self.proc.tracer()) {
+            t.record(SpanCat::Op, op_label(op), begin, stats.cycles);
         }
         Ok((stats, prog))
     }
@@ -771,6 +871,32 @@ mod tests {
             .unwrap();
         // CF applies to CONV and PWCV only.
         assert_eq!(r.layers.len(), 2);
+    }
+
+    #[test]
+    fn op_spans_sum_to_session_cycles_and_counters_track_cache() {
+        use crate::obs::TraceLevel;
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        engine.set_obs(ObsConfig::tracing(TraceLevel::Segment));
+        let model = tiny_model();
+        let r = engine.session().run_model(&model, Precision::Int8).unwrap();
+        let spans = engine.tracer().unwrap().take_spans();
+        let op_sum: u64 =
+            spans.iter().filter(|s| s.cat == SpanCat::Op).map(|s| s.dur).sum();
+        assert_eq!(op_sum, r.total.cycles, "op spans partition the run");
+        let seg_sum: u64 =
+            spans.iter().filter(|s| s.cat == SpanCat::Segment).map(|s| s.dur).sum();
+        assert_eq!(seg_sum, r.total.cycles, "segments partition it too");
+        let c = engine.counters();
+        assert_eq!(c.get(Counter::EngineCacheMisses), 4);
+        assert_eq!(c.get(Counter::EngineCacheHits), engine.cache_stats().hits);
+        if engine.verify_on_compile() {
+            assert_eq!(c.get(Counter::VerifyPrograms), 4);
+            assert!(c.get(Counter::VerifyRuleEvals) > 0);
+        }
+        // Detaching restores the zero-overhead path.
+        engine.set_obs(ObsConfig::off());
+        assert!(engine.tracer().is_none());
     }
 
     #[test]

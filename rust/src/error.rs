@@ -43,6 +43,10 @@ pub enum SpeedError {
     /// misconfigure the hardware, access memory outside its layout, or
     /// break a fast-path precondition if it ever reached the simulator.
     Verify(String),
+    /// Observability failure: a profile/trace invariant did not hold
+    /// (span durations not summing to the simulated cycle count, a
+    /// malformed trace request) or a trace artifact could not be written.
+    Obs(String),
 }
 
 impl SpeedError {
@@ -58,6 +62,7 @@ impl SpeedError {
             SpeedError::Bench(_) => "bench",
             SpeedError::Serve(_) => "serve",
             SpeedError::Verify(_) => "verify",
+            SpeedError::Obs(_) => "obs",
         }
     }
 
@@ -71,7 +76,8 @@ impl SpeedError {
             | SpeedError::Parse(m)
             | SpeedError::Bench(m)
             | SpeedError::Serve(m)
-            | SpeedError::Verify(m) => m.clone(),
+            | SpeedError::Verify(m)
+            | SpeedError::Obs(m) => m.clone(),
             SpeedError::Sim(e) => e.to_string(),
         }
     }
@@ -136,6 +142,7 @@ mod tests {
             SpeedError::Bench("x".into()),
             SpeedError::Serve("x".into()),
             SpeedError::Verify("x".into()),
+            SpeedError::Obs("x".into()),
         ] {
             assert!(e.source().is_none(), "{e}");
         }
@@ -153,6 +160,7 @@ mod tests {
             SpeedError::Bench("m".into()),
             SpeedError::Serve("m".into()),
             SpeedError::Verify("m".into()),
+            SpeedError::Obs("m".into()),
         ]
         .iter()
         .map(|e| e.kind())

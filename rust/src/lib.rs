@@ -79,7 +79,15 @@
 //!   configuration, dataflow, memory-safety, fast-path, and residency
 //!   invariants *before* a program reaches the simulator, with stable
 //!   rule IDs (`V-CFG-*`, `V-REG-*`, `V-MEM-*`, `V-RUN-*`, `V-RES-*`)
-//!   surfaced as [`SpeedError::Verify`] diagnostics.
+//!   surfaced as [`SpeedError::Verify`] diagnostics;
+//!
+//! * an **observability layer** ([`obs`], CLI `profile`): deterministic
+//!   hierarchical tracing on a virtual (simulated-cycle) clock exported
+//!   as Chrome-trace JSON, an exact cycle-attribution profiler
+//!   ([`obs::CycleBreakdown`] — components sum to `SimStats::cycles` to
+//!   the cycle), and a unified [`obs::Counters`] registry spanning
+//!   engine, scheduler, tuner, and verifier — all inert by contract:
+//!   attaching a tracer never changes simulated results or digests.
 //!
 //! See `DESIGN.md` for the substitution rationale and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -100,6 +108,7 @@ pub mod error;
 pub mod isa;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;
@@ -109,6 +118,7 @@ pub mod tune;
 pub use config::{Precision, SpeedConfig, SpeedConfigBuilder};
 pub use engine::{CacheStats, Engine, Session, SharedPrograms};
 pub use error::SpeedError;
+pub use obs::{Counters, CycleBreakdown, ObsConfig, TraceLevel, Tracer};
 pub use serve::{ServePool, Ticket};
 pub use sim::ExecMode;
 pub use tune::{TunedPlan, TunedPlans};

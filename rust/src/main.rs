@@ -14,8 +14,11 @@
 //!                   [--write-baseline FILE] [--tolerance F]
 //!                                       perf harness -> BENCH_sim.json
 //! repro serve-bench --scenario FILE [--workers N] [--quick] [--exact]
-//!                   [--max-batch K] [--out FILE]
+//!                   [--max-batch K] [--trace] [--out FILE]
 //!                                       serving harness -> SERVE_bench.json
+//! repro profile [--model M --prec P | --scenario F] [--quick]
+//!               [--level op|segment|run|insn] [--out trace.json]
+//!                                       deterministic profiler -> Chrome trace
 //! repro verify [--model M --prec P | --all] [--strategy S] [--quick]
 //!                                       static stream verification sweep
 //! repro asm <file.s>                    assemble / encode / disassemble
@@ -46,6 +49,7 @@ use speed_rvv::error::SpeedError;
 use speed_rvv::isa::{self, StrategyKind};
 use speed_rvv::models::zoo::{model_by_name, MODELS};
 use speed_rvv::models::OpDesc;
+use speed_rvv::obs::{chrome_trace_json, Counter, ObsConfig, SpanCat, TraceLevel};
 use speed_rvv::report;
 use speed_rvv::runtime::{golden_check_all, PjrtEngine};
 use speed_rvv::serve;
@@ -96,6 +100,7 @@ fn dispatch(args: &[String]) -> Result<(), SpeedError> {
         "dse" => cmd_dse(rest),
         "speed-bench" => cmd_speed_bench(rest),
         "serve-bench" => cmd_serve_bench(rest),
+        "profile" => cmd_profile(rest),
         "tune" => cmd_tune(rest),
         "verify" => cmd_verify(rest),
         "asm" => cmd_asm(rest),
@@ -136,7 +141,7 @@ commands:
                               hit rates) and optionally gates against a
                               committed baseline (exit 1 on regression)
   serve-bench --scenario FILE [--workers N] [--quick] [--exact]
-              [--max-batch K] [--tuned] [--out FILE]
+              [--max-batch K] [--tuned] [--trace] [--out FILE]
                               run a serving scenario (bench/scenarios/*.json)
                               through a ServePool; writes SERVE_bench.json
                               (throughput, p50/p95/p99 latency, queue depth,
@@ -149,7 +154,21 @@ commands:
                               "tuned_online" instead tunes online — the
                               first request for an uncovered model tunes on
                               its worker and publishes the plan, later
-                              requests hit the shared registry)
+                              requests hit the shared registry; --trace
+                              attaches per-worker tracers — observability
+                              is inert, so the printed stats digest is
+                              unchanged)
+  profile [--model M --prec 16|8|4 | --scenario FILE] [--quick] [--exact]
+          [--level op|segment|run|insn] [--out trace.json]
+                              deterministic cycle profiler: run one model
+                              (default mobilenetv2 @ INT8) or a serving
+                              scenario with tracing attached, print the
+                              cycle-attribution split, and write a
+                              Chrome-trace/Perfetto JSON whose timestamps
+                              are simulated cycles (virtual clock — the
+                              trace is bit-reproducible run to run).
+                              Exits nonzero if the op spans do not sum to
+                              the simulated total (the self-check)
   tune [--model M] [--prec 16|8|4] [--quick] [--no-chunks] [--exact]
        [--cache DIR] [--out FILE] [--no-verify]
                               empirical mixed-dataflow auto-tuner: search
@@ -443,6 +462,12 @@ fn cmd_serve_bench(args: &[String]) -> Result<(), SpeedError> {
         tuned: flag(args, "--tuned"),
         ..Default::default()
     };
+    if flag(args, "--trace") {
+        // Attach per-worker tracers. Observability is inert by contract:
+        // the per-request stats digest printed below is bit-identical
+        // with or without this flag (the CI obs-smoke leg checks that).
+        opts.obs = ObsConfig::tracing(TraceLevel::Op);
+    }
     if let Some(v) = opt(args, "--workers") {
         opts.workers = v
             .parse::<usize>()
@@ -465,6 +490,106 @@ fn cmd_serve_bench(args: &[String]) -> Result<(), SpeedError> {
     std::fs::write(out, report.to_json())
         .map_err(|e| SpeedError::Bench(format!("writing {out}: {e}")))?;
     println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_profile(args: &[String]) -> Result<(), SpeedError> {
+    let level = match opt(args, "--level") {
+        None => TraceLevel::Run,
+        Some(v) => TraceLevel::parse(v).ok_or_else(|| {
+            SpeedError::Config(format!("bad --level '{v}' (want op|segment|run|insn)"))
+        })?,
+    };
+    let out = opt(args, "--out").unwrap_or("trace.json");
+
+    let (spans, counters, breakdown) = if let Some(path) = opt(args, "--scenario") {
+        // Serving-scenario profile: per-worker tracers through the pool.
+        let scenario = serve::Scenario::load(path)?;
+        let opts = serve::ServeBenchOptions {
+            quick: flag(args, "--quick"),
+            exact: flag(args, "--exact"),
+            obs: ObsConfig::tracing(level),
+            ..Default::default()
+        };
+        let (report, spans) = serve::run_serve_bench_traced(&scenario, &opts)?;
+        print!("{}", report.summary_text());
+        if spans.is_empty() {
+            return Err(SpeedError::Obs("scenario profile produced no spans".into()));
+        }
+        // Request spans cover executed batches (coalesced requests share
+        // one execution, and online tune searches run between spans), so
+        // the exactness bound here is one-sided: span time can never
+        // exceed the cycles the worker engines actually simulated.
+        let req_sum: u64 = spans
+            .iter()
+            .filter(|s| s.cat == SpanCat::Request)
+            .map(|s| s.dur)
+            .sum();
+        let simulated = report.snapshot.breakdown.total();
+        if report.snapshot.counter("trace_spans_dropped") == 0 && req_sum > simulated {
+            return Err(SpeedError::Obs(format!(
+                "request spans sum to {req_sum} cycles, workers simulated only {simulated}"
+            )));
+        }
+        (spans, report.snapshot.counters.clone(), report.snapshot.breakdown)
+    } else {
+        // Single-model profile (default): one warm traced engine.
+        let name = opt(args, "--model").unwrap_or("mobilenetv2");
+        let prec = match opt(args, "--prec").unwrap_or("8") {
+            "16" => Precision::Int16,
+            "8" => Precision::Int8,
+            "4" => Precision::Int4,
+            other => return Err(SpeedError::Config(format!("bad precision '{other}'"))),
+        };
+        let mut model = model_by_name(name).ok_or_else(|| {
+            SpeedError::Config(format!("unknown model '{name}' ({MODELS:?})"))
+        })?;
+        if flag(args, "--quick") {
+            model = report::fig12::downscale(&model, 4);
+        }
+        let mut engine = Engine::new(SpeedConfig::reference())?;
+        if flag(args, "--exact") {
+            engine.set_exec_mode(ExecMode::Exact);
+        }
+        engine.set_obs(ObsConfig { trace: Some(level), capacity: 0, echo_insns: false });
+        let r = engine.session().run_model(&model, prec)?;
+        let breakdown = engine.breakdown();
+        let tracer = engine.tracer().expect("profile always attaches a tracer");
+        let dropped = tracer.dropped();
+        let spans = tracer.take_spans();
+        println!(
+            "profile {name} @ {prec}: {} vector ops, {} simulated cycles, {} spans",
+            r.layers.len(),
+            r.total.cycles,
+            spans.len()
+        );
+        // The self-check behind the trace's exactness claim: op spans
+        // partition the simulated timeline, so their durations must sum
+        // to the simulator's own cycle count (unless the ring dropped
+        // early spans under `--level insn` on a large model).
+        let op_sum: u64 =
+            spans.iter().filter(|s| s.cat == SpanCat::Op).map(|s| s.dur).sum();
+        if dropped == 0 && op_sum != r.total.cycles {
+            return Err(SpeedError::Obs(format!(
+                "op spans sum to {op_sum} cycles, simulator reports {} — trace is not exact",
+                r.total.cycles
+            )));
+        }
+        if breakdown.total() != r.total.cycles {
+            return Err(SpeedError::Obs(format!(
+                "cycle breakdown sums to {} of {} simulated cycles",
+                breakdown.total(),
+                r.total.cycles
+            )));
+        }
+        engine.counters().add(Counter::TraceSpansDropped, dropped);
+        (spans, engine.counters().snapshot(), breakdown)
+    };
+
+    println!("cycle split: {}", breakdown.summary_line());
+    std::fs::write(out, chrome_trace_json(&spans, &counters))
+        .map_err(|e| SpeedError::Obs(format!("writing {out}: {e}")))?;
+    println!("wrote {out} ({} spans, virtual-cycle clock)", spans.len());
     Ok(())
 }
 

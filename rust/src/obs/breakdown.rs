@@ -1,0 +1,174 @@
+//! Exact cycle attribution: where did [`crate::sim::SimStats::cycles`] go?
+//!
+//! The simulator's completion frontier only ever advances monotonically
+//! (`last_complete = max(last_complete, complete)`), so attributing each
+//! frontier advancement to the instruction class that caused it telescopes
+//! *exactly* to the run's cycle count; the ≤ 1-cycle pipeline-drain clamp
+//! applied per run lands in the [`CycleBreakdown::overhead`] bucket. The
+//! invariant `breakdown.total() == stats.cycles` therefore holds to the
+//! cycle for both exec modes — enforced by `tests/obs_inertness.rs`.
+//!
+//! The buckets split the paper's story lines: multi-precision systolic
+//! compute (VSAM/VSAC chains), the memory system (load / store runs and
+//! [`crate::sim::SimStats::stall_mem_port`]), the vector ALU epilogues,
+//! scalar/config glue, and the cost of `VSACFG` precision reconfiguration
+//! — the axes related mixed-precision processors are evaluated on.
+
+/// Exclusive cycle buckets for one simulation run (or any merge of runs).
+///
+/// `Copy`/`Eq` so engines can snapshot-and-diff it like a counter; the
+/// component sum equals the matching `SimStats::cycles` exactly.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CycleBreakdown {
+    /// MPTU systolic chains: `VSAM` / `VSAC` windows (closed-form batch
+    /// runs and scoreboard-issued exact steps alike).
+    pub chain: u64,
+    /// Vector load unit: `VLE` / `VSALD` runs.
+    pub load: u64,
+    /// Vector store unit: `VSE` runs.
+    pub store: u64,
+    /// Vector ALU: `VMACC` / `VMUL` / `VADD` / `VMV` epilogues.
+    pub alu: u64,
+    /// Scalar core + config path: `ADDI` / `VSETVLI` / non-switching
+    /// `VSACFG` dimension updates.
+    pub scalar: u64,
+    /// `VSACFG` executions that re-precision the datapath.
+    pub prec_switch: u64,
+    /// Per-run pipeline-drain residue: the simulator charges every stream
+    /// run at least one cycle; the cycles not explained by a frontier
+    /// advancement land here (≤ 1 per run).
+    pub overhead: u64,
+}
+
+impl CycleBreakdown {
+    /// Bucket names in [`CycleBreakdown::components`] order (stable — the
+    /// report schema-3 JSON key order).
+    pub const NAMES: [&'static str; 7] =
+        ["chain", "load", "store", "alu", "scalar", "prec_switch", "overhead"];
+
+    /// Component values in [`CycleBreakdown::NAMES`] order.
+    pub fn components(&self) -> [u64; 7] {
+        [
+            self.chain,
+            self.load,
+            self.store,
+            self.alu,
+            self.scalar,
+            self.prec_switch,
+            self.overhead,
+        ]
+    }
+
+    /// Sum of every bucket — equals the matching `SimStats::cycles`.
+    pub fn total(&self) -> u64 {
+        self.components().iter().sum()
+    }
+
+    /// Accumulate another breakdown (sequential composition, like
+    /// [`crate::sim::SimStats::merge`]).
+    pub fn merge(&mut self, other: &CycleBreakdown) {
+        self.chain += other.chain;
+        self.load += other.load;
+        self.store += other.store;
+        self.alu += other.alu;
+        self.scalar += other.scalar;
+        self.prec_switch += other.prec_switch;
+        self.overhead += other.overhead;
+    }
+
+    /// Component-wise difference vs an earlier snapshot of the same
+    /// monotone accumulator (per-op / per-request attribution).
+    pub fn since(&self, earlier: &CycleBreakdown) -> CycleBreakdown {
+        CycleBreakdown {
+            chain: self.chain - earlier.chain,
+            load: self.load - earlier.load,
+            store: self.store - earlier.store,
+            alu: self.alu - earlier.alu,
+            scalar: self.scalar - earlier.scalar,
+            prec_switch: self.prec_switch - earlier.prec_switch,
+            overhead: self.overhead - earlier.overhead,
+        }
+    }
+
+    /// JSON object (one line per bucket), indented by `indent` spaces for
+    /// the inner lines — the schema-3 report fragment.
+    pub fn json_object(&self, indent: usize) -> String {
+        let pad = " ".repeat(indent);
+        let mut s = String::from("{\n");
+        for (i, (name, v)) in Self::NAMES.iter().zip(self.components()).enumerate() {
+            s.push_str(&format!(
+                "{pad}  \"{name}\": {v}{}\n",
+                if i + 1 == Self::NAMES.len() { "" } else { "," }
+            ));
+        }
+        s.push_str(&format!("{pad}}}"));
+        s
+    }
+
+    /// One-line percentage summary for CLI output.
+    pub fn summary_line(&self) -> String {
+        let total = self.total().max(1) as f64;
+        Self::NAMES
+            .iter()
+            .zip(self.components())
+            .filter(|&(_, v)| v > 0)
+            .map(|(name, v)| format!("{name} {:.1}%", 100.0 * v as f64 / total))
+            .collect::<Vec<_>>()
+            .join("  ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CycleBreakdown {
+        CycleBreakdown {
+            chain: 60,
+            load: 20,
+            store: 10,
+            alu: 5,
+            scalar: 3,
+            prec_switch: 1,
+            overhead: 1,
+        }
+    }
+
+    #[test]
+    fn total_is_component_sum() {
+        assert_eq!(sample().total(), 100);
+        assert_eq!(CycleBreakdown::default().total(), 0);
+    }
+
+    #[test]
+    fn merge_and_since_are_inverse() {
+        let mut a = sample();
+        let before = a;
+        a.merge(&sample());
+        assert_eq!(a.total(), 200);
+        assert_eq!(a.since(&before), sample());
+    }
+
+    #[test]
+    fn json_object_parses_and_keeps_bucket_order() {
+        let json = sample().json_object(2);
+        let doc = crate::runtime::json::parse(&json).unwrap();
+        assert_eq!(doc.get("chain").and_then(|v| v.as_i64()), Some(60));
+        assert_eq!(doc.get("overhead").and_then(|v| v.as_i64()), Some(1));
+        let names = CycleBreakdown::NAMES;
+        let mut last = 0;
+        for n in names {
+            let pos = json.find(&format!("\"{n}\"")).unwrap();
+            assert!(pos > last, "{n} out of order");
+            last = pos;
+        }
+    }
+
+    #[test]
+    fn summary_line_skips_empty_buckets() {
+        let line = sample().summary_line();
+        assert!(line.contains("chain 60.0%"));
+        let sparse = CycleBreakdown { chain: 4, ..Default::default() };
+        assert_eq!(sparse.summary_line(), "chain 100.0%");
+    }
+}

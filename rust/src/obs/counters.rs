@@ -1,0 +1,211 @@
+//! Unified counter registry: static-ID atomic counters, shared pool-wide.
+//!
+//! Before this module every subsystem grew its own tally struct — engine
+//! `CacheStats`, scheduler fields, serve-metrics tune counters, verifier
+//! rule totals — each with its own snapshot and JSON path. [`Counters`] is
+//! the one registry they all feed: a fixed array of relaxed atomics
+//! indexed by the [`Counter`] enum, cheap-clone shared the same way
+//! [`crate::engine::SharedPrograms`] shares compiled programs across a
+//! pool's engines. The per-subsystem structs remain the lock-held fast
+//! paths and public accessors; the registry is the unified read side with
+//! one [`Counters::snapshot`] / [`Counters::json_object`] surface.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Stable identity of one registry counter. The discriminant order is the
+/// snapshot/JSON order and is append-only (IDs never renumber).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Engine program-cache hits (private or shared).
+    EngineCacheHits,
+    /// Engine program-cache hits served from the pool-shared map.
+    EngineCacheSharedHits,
+    /// Engine program-cache misses (fresh compilations).
+    EngineCacheMisses,
+    /// Scheduler: requests routed to a lane already at their precision.
+    SchedAffinityHits,
+    /// Scheduler: requests that re-precisioned their lane.
+    SchedAffinityMisses,
+    /// Scheduler: micro-batches work-stolen from a backed-up lane.
+    SchedSteals,
+    /// KV residency: decode steps landing on their resident lane.
+    KvHits,
+    /// KV residency: decode steps arriving after a spill (or orphaned).
+    KvMisses,
+    /// KV residency: sessions evicted past the per-worker budget.
+    KvSpills,
+    /// Online tuning: first-request tune-and-publish stalls.
+    TuneStalls,
+    /// Online tuning: requests served from the shared plan registry.
+    TunePlanHits,
+    /// Auto-tuner: candidate mappings costed on the simulator.
+    TuneCandidates,
+    /// Static verifier: compiled programs verified at cache-insert time.
+    VerifyPrograms,
+    /// Static verifier: rule evaluations (instructions × rules).
+    VerifyRuleEvals,
+    /// Tracing: spans evicted from full ring buffers.
+    TraceSpansDropped,
+}
+
+impl Counter {
+    /// Every counter, in stable snapshot order.
+    pub const ALL: [Counter; 15] = [
+        Counter::EngineCacheHits,
+        Counter::EngineCacheSharedHits,
+        Counter::EngineCacheMisses,
+        Counter::SchedAffinityHits,
+        Counter::SchedAffinityMisses,
+        Counter::SchedSteals,
+        Counter::KvHits,
+        Counter::KvMisses,
+        Counter::KvSpills,
+        Counter::TuneStalls,
+        Counter::TunePlanHits,
+        Counter::TuneCandidates,
+        Counter::VerifyPrograms,
+        Counter::VerifyRuleEvals,
+        Counter::TraceSpansDropped,
+    ];
+
+    /// Position in the registry's slot array.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case name (the JSON key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::EngineCacheHits => "engine_cache_hits",
+            Counter::EngineCacheSharedHits => "engine_cache_shared_hits",
+            Counter::EngineCacheMisses => "engine_cache_misses",
+            Counter::SchedAffinityHits => "sched_affinity_hits",
+            Counter::SchedAffinityMisses => "sched_affinity_misses",
+            Counter::SchedSteals => "sched_steals",
+            Counter::KvHits => "kv_hits",
+            Counter::KvMisses => "kv_misses",
+            Counter::KvSpills => "kv_spills",
+            Counter::TuneStalls => "tune_stalls",
+            Counter::TunePlanHits => "tune_plan_hits",
+            Counter::TuneCandidates => "tune_candidates",
+            Counter::VerifyPrograms => "verify_programs",
+            Counter::VerifyRuleEvals => "verify_rule_evals",
+            Counter::TraceSpansDropped => "trace_spans_dropped",
+        }
+    }
+}
+
+/// The shared registry: one relaxed atomic slot per [`Counter`].
+///
+/// Clones share the slots (an `Arc`), so a pool hands one registry to
+/// every worker engine and reads a single coherent snapshot at the end —
+/// the `SharedPrograms` sharing pattern applied to counters.
+#[derive(Clone)]
+pub struct Counters {
+    slots: Arc<[AtomicU64]>,
+}
+
+impl Default for Counters {
+    fn default() -> Self {
+        Counters::new()
+    }
+}
+
+impl std::fmt::Debug for Counters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("Counters");
+        for c in Counter::ALL {
+            let v = self.get(c);
+            if v > 0 {
+                d.field(c.name(), &v);
+            }
+        }
+        d.finish()
+    }
+}
+
+impl Counters {
+    /// A fresh registry with every counter at zero.
+    pub fn new() -> Counters {
+        Counters { slots: (0..Counter::ALL.len()).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// Add `n` to a counter (relaxed; counters are monotone tallies, not
+    /// synchronization).
+    pub fn add(&self, c: Counter, n: u64) {
+        self.slots[c.index()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment a counter by one.
+    pub fn incr(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    /// Current value of one counter.
+    pub fn get(&self, c: Counter) -> u64 {
+        self.slots[c.index()].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every counter in stable order.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        Counter::ALL.iter().map(|&c| (c.name(), self.get(c))).collect()
+    }
+
+    /// JSON object (one line per counter), indented by `indent` spaces
+    /// for the inner lines — the schema-3 report fragment.
+    pub fn json_object(&self, indent: usize) -> String {
+        let pad = " ".repeat(indent);
+        let snap = self.snapshot();
+        let mut s = String::from("{\n");
+        for (i, (name, v)) in snap.iter().enumerate() {
+            s.push_str(&format!(
+                "{pad}  \"{name}\": {v}{}\n",
+                if i + 1 == snap.len() { "" } else { "," }
+            ));
+        }
+        s.push_str(&format!("{pad}}}"));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_match_all_order() {
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<_> = Counter::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Counter::ALL.len());
+    }
+
+    #[test]
+    fn clones_share_slots() {
+        let a = Counters::new();
+        let b = a.clone();
+        a.add(Counter::SchedSteals, 3);
+        b.incr(Counter::SchedSteals);
+        assert_eq!(a.get(Counter::SchedSteals), 4);
+        assert_eq!(b.snapshot()[Counter::SchedSteals.index()], ("sched_steals", 4));
+    }
+
+    #[test]
+    fn json_object_parses_and_lists_every_counter() {
+        let c = Counters::new();
+        c.add(Counter::KvHits, 11);
+        let doc = crate::runtime::json::parse(&c.json_object(4)).unwrap();
+        let obj = doc.as_obj().unwrap();
+        assert_eq!(obj.len(), Counter::ALL.len());
+        assert_eq!(doc.get("kv_hits").and_then(|v| v.as_i64()), Some(11));
+        assert_eq!(doc.get("tune_stalls").and_then(|v| v.as_i64()), Some(0));
+    }
+}

@@ -1,0 +1,113 @@
+//! Deterministic observability: structured tracing, cycle attribution,
+//! and a unified counter registry.
+//!
+//! Three pillars, one hard invariant:
+//!
+//! * **Structured tracing** ([`tracer`]): a [`Tracer`] records hierarchical
+//!   spans (request → op → compiled-segment → stream-run → instruction) on
+//!   a *virtual-tick* clock — simulated cycles, never wall time — into a
+//!   bounded ring buffer, exportable as Chrome-trace JSON
+//!   ([`chrome_trace_json`], CLI `repro profile`). Virtual timestamps make
+//!   traces bit-reproducible: the same workload produces the same trace on
+//!   any machine, any worker count.
+//! * **Cycle attribution** ([`breakdown`]): the simulator attributes every
+//!   cycle of [`crate::sim::SimStats::cycles`] to a [`CycleBreakdown`]
+//!   bucket (VSAM chain, load/store runs, ALU, scalar/config, precision
+//!   switches, pipeline overhead). The components sum *exactly* to the
+//!   total — enforced by property tests — so "where did the cycles go" is
+//!   always answerable without reading source.
+//! * **Counter registry** ([`counters`]): a [`Counters`] pool of static-ID
+//!   atomic counters shared engine-wide (and pool-wide under
+//!   [`crate::serve::ServePool`]), absorbing the previously scattered
+//!   per-subsystem tallies — engine cache hits, scheduler steals/affinity,
+//!   KV residency, tune stalls/plan hits, verifier rule evaluations — with
+//!   one snapshot/JSON path.
+//!
+//! **Observability is free and inert.** Attaching or detaching a tracer
+//! must leave [`crate::sim::SimStats`], serve digests, and tuned-plan
+//! choices bit-identical. Instruction-level tracing in
+//! [`crate::sim::ExecMode::Batch`] expands closed-form runs lazily into
+//! the per-instruction path — bit-exact by the fast-path parity property —
+//! instead of the old `SPEED_TRACE`-forces-exact-mode hack. The env var
+//! survives only as a deprecated alias ([`ObsConfig::from_env`]).
+
+pub mod breakdown;
+pub mod counters;
+pub mod tracer;
+
+pub use breakdown::CycleBreakdown;
+pub use counters::{Counter, Counters};
+pub use tracer::{chrome_trace_json, Span, SpanCat, TraceLevel, Tracer};
+
+/// Observability configuration carried by [`crate::engine::Engine`] and
+/// [`crate::serve::ServeOptions`].
+///
+/// The default is fully off: no tracer is attached and execution paths are
+/// untouched. Cycle attribution and counters are always live — they are
+/// plain integer adds on paths already touching the same cache lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ObsConfig {
+    /// Span granularity to record, or `None` for no tracing.
+    pub trace: Option<TraceLevel>,
+    /// Ring-buffer capacity in spans (`0` = [`ObsConfig::DEFAULT_CAPACITY`]).
+    pub capacity: usize,
+    /// Echo per-instruction scoreboard lines to stderr (the behaviour the
+    /// deprecated `SPEED_TRACE` env var used to force).
+    pub echo_insns: bool,
+}
+
+impl ObsConfig {
+    /// Default span ring capacity when [`ObsConfig::capacity`] is `0`.
+    pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+    /// Observability fully off (the default).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// Tracing at `level` with the default ring capacity.
+    pub fn tracing(level: TraceLevel) -> Self {
+        ObsConfig { trace: Some(level), ..Self::default() }
+    }
+
+    /// Deprecated-alias shim: a set `SPEED_TRACE` env var maps onto
+    /// instruction-level tracing with stderr echo, reproducing the old
+    /// behaviour through the explicit config path. New code should pass an
+    /// [`ObsConfig`] instead.
+    pub fn from_env() -> Self {
+        if std::env::var_os("SPEED_TRACE").is_some() {
+            ObsConfig { trace: Some(TraceLevel::Insn), capacity: 0, echo_insns: true }
+        } else {
+            Self::off()
+        }
+    }
+
+    /// Effective ring capacity (resolving the `0` = default convention).
+    pub fn capacity_or_default(&self) -> usize {
+        if self.capacity == 0 {
+            Self::DEFAULT_CAPACITY
+        } else {
+            self.capacity
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_off() {
+        let c = ObsConfig::off();
+        assert_eq!(c.trace, None);
+        assert!(!c.echo_insns);
+        assert_eq!(c.capacity_or_default(), ObsConfig::DEFAULT_CAPACITY);
+    }
+
+    #[test]
+    fn tracing_constructor_sets_level_only() {
+        let c = ObsConfig::tracing(TraceLevel::Segment);
+        assert_eq!(c.trace, Some(TraceLevel::Segment));
+        assert!(!c.echo_insns);
+    }
+}

@@ -1,0 +1,319 @@
+//! Structured tracing on a virtual-tick clock.
+//!
+//! A [`Tracer`] is a cheap-clone handle onto a bounded span ring buffer
+//! plus a *virtual clock*: a cycle cursor advanced only by the simulator
+//! as it produces cycles ([`Tracer::advance`] is called exactly where
+//! [`crate::sim::SimStats::cycles`] accumulates). Wall time never enters a
+//! span, so traces are bit-reproducible and digest-stable: tracer on/off,
+//! worker count, and host speed cannot change a single timestamp.
+//!
+//! Spans form a hierarchy by containment on one timeline per `tid`
+//! (serving workers use their worker index): a request span encloses its
+//! op spans, an op span its compiled-segment spans, a segment span its
+//! stream-run spans. [`chrome_trace_json`] exports the ring as
+//! Chrome-trace/Perfetto "X" (complete) events — load the file at
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::runtime::json::jstr;
+
+/// Span granularity a [`Tracer`] records, coarsest to finest.
+///
+/// Each level includes every coarser one; [`TraceLevel::Insn`] additionally
+/// makes the batch-mode simulator expand closed-form runs into the
+/// per-instruction path (bit-exact by the fast-path parity property) so
+/// scoreboard-level spans exist to record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// One span per executed operator (and per serve request).
+    Op,
+    /// Plus one span per compiled program segment.
+    Segment,
+    /// Plus one span per batched stream run (tensor chain / load / store).
+    Run,
+    /// Plus one span per instruction, from the issue scoreboard.
+    Insn,
+}
+
+impl TraceLevel {
+    /// Parse a CLI-facing level name.
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s {
+            "op" => Some(TraceLevel::Op),
+            "segment" => Some(TraceLevel::Segment),
+            "run" => Some(TraceLevel::Run),
+            "insn" => Some(TraceLevel::Insn),
+            _ => None,
+        }
+    }
+
+    /// CLI-facing name of the level.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Op => "op",
+            TraceLevel::Segment => "segment",
+            TraceLevel::Run => "run",
+            TraceLevel::Insn => "insn",
+        }
+    }
+}
+
+/// Category of a recorded [`Span`] (the Chrome-trace `cat` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanCat {
+    /// A serve-pool request (or a whole profiled model run).
+    Request,
+    /// One executed operator.
+    Op,
+    /// One compiled program segment.
+    Segment,
+    /// One batched stream run within a segment.
+    Run,
+    /// One instruction's occupancy window on the scoreboard.
+    Insn,
+}
+
+impl SpanCat {
+    /// Chrome-trace category string.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanCat::Request => "request",
+            SpanCat::Op => "op",
+            SpanCat::Segment => "segment",
+            SpanCat::Run => "run",
+            SpanCat::Insn => "insn",
+        }
+    }
+
+    /// Is this category recorded at `level`? Request and op spans are
+    /// always kept — they are the coarsest useful view.
+    pub fn recorded_at(self, level: TraceLevel) -> bool {
+        match self {
+            SpanCat::Request | SpanCat::Op => true,
+            SpanCat::Segment => level >= TraceLevel::Segment,
+            SpanCat::Run => level >= TraceLevel::Run,
+            SpanCat::Insn => level >= TraceLevel::Insn,
+        }
+    }
+}
+
+/// One recorded span on the virtual-tick timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Category (hierarchy level) of the span.
+    pub cat: SpanCat,
+    /// Human-readable label (operator shape, run kind, instruction).
+    pub name: String,
+    /// Virtual-tick start (simulated cycles since the tracer attached).
+    pub begin: u64,
+    /// Duration in virtual ticks (simulated cycles).
+    pub dur: u64,
+    /// Timeline id: the serving worker index (0 for a single engine).
+    pub tid: u32,
+}
+
+/// The shared ring: spans plus the virtual-clock cursor.
+struct TraceBuf {
+    spans: VecDeque<Span>,
+    capacity: usize,
+    dropped: u64,
+    now: u64,
+}
+
+/// Cheap-clone handle onto one virtual timeline's span ring.
+///
+/// Cloning shares the ring and the clock (one timeline per worker); the
+/// recording `level`, `tid`, and echo flag ride along by value.
+#[derive(Clone)]
+pub struct Tracer {
+    buf: Arc<Mutex<TraceBuf>>,
+    tid: u32,
+    level: TraceLevel,
+    echo: bool,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("tid", &self.tid)
+            .field("level", &self.level)
+            .field("spans", &self.span_count())
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// A tracer recording at `level` into a fresh ring of `capacity`
+    /// spans, stamping every span with timeline id `tid`.
+    pub fn new(level: TraceLevel, capacity: usize, tid: u32) -> Tracer {
+        Tracer {
+            buf: Arc::new(Mutex::new(TraceBuf {
+                spans: VecDeque::new(),
+                capacity: capacity.max(1),
+                dropped: 0,
+                now: 0,
+            })),
+            tid,
+            level,
+            echo: false,
+        }
+    }
+
+    /// Build a tracer from an [`super::ObsConfig`], or `None` when tracing
+    /// is off.
+    pub fn from_config(cfg: &super::ObsConfig, tid: u32) -> Option<Tracer> {
+        cfg.trace.map(|level| {
+            let mut t = Tracer::new(level, cfg.capacity_or_default(), tid);
+            t.echo = cfg.echo_insns;
+            t
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TraceBuf> {
+        self.buf.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Recording granularity.
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// Echo per-instruction scoreboard lines to stderr (deprecated
+    /// `SPEED_TRACE` behaviour).
+    pub fn echo(&self) -> bool {
+        self.echo
+    }
+
+    /// Current virtual time (cycles accumulated on this timeline).
+    pub fn now(&self) -> u64 {
+        self.lock().now
+    }
+
+    /// Advance the virtual clock. Called exactly where the simulator
+    /// accumulates cycles into its stats, so span timelines and
+    /// [`crate::sim::SimStats::cycles`] agree by construction.
+    pub fn advance(&self, cycles: u64) {
+        self.lock().now += cycles;
+    }
+
+    /// Record one span (if `cat` is within the recording level). The ring
+    /// is bounded: a full ring evicts its oldest span and counts a drop.
+    pub fn record(&self, cat: SpanCat, name: impl Into<String>, begin: u64, dur: u64) {
+        if !cat.recorded_at(self.level) {
+            return;
+        }
+        let mut b = self.lock();
+        if b.spans.len() >= b.capacity {
+            b.spans.pop_front();
+            b.dropped += 1;
+        }
+        let tid = self.tid;
+        b.spans.push_back(Span { cat, name: name.into(), begin, dur, tid });
+    }
+
+    /// Spans evicted from the full ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    /// Number of spans currently held.
+    pub fn span_count(&self) -> usize {
+        self.lock().spans.len()
+    }
+
+    /// Drain every held span (oldest first), leaving the ring empty and
+    /// the clock untouched.
+    pub fn take_spans(&self) -> Vec<Span> {
+        self.lock().spans.drain(..).collect()
+    }
+}
+
+/// Export spans as Chrome-trace-format JSON (`traceEvents` of "X"
+/// complete events; `ts`/`dur` are virtual cycles, one tick per cycle).
+/// `counters` — typically a [`super::Counters::snapshot`] — rides along
+/// under the format's free-form `otherData` key.
+pub fn chrome_trace_json(spans: &[Span], counters: &[(&'static str, u64)]) -> String {
+    let mut s = String::with_capacity(128 + spans.len() * 96);
+    s.push_str("{\n  \"displayTimeUnit\": \"ns\",\n  \"traceEvents\": [\n");
+    for (i, sp) in spans.iter().enumerate() {
+        s.push_str("    {\"name\": ");
+        s.push_str(&jstr(&sp.name));
+        s.push_str(&format!(
+            ", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \
+             \"pid\": 1, \"tid\": {}}}",
+            sp.cat.name(),
+            sp.begin,
+            sp.dur,
+            sp.tid
+        ));
+        s.push_str(if i + 1 == spans.len() { "\n" } else { ",\n" });
+    }
+    s.push_str("  ],\n  \"otherData\": {\n    \"clock\": \"virtual-cycles\",\n");
+    s.push_str("    \"counters\": {\n");
+    for (i, (name, v)) in counters.iter().enumerate() {
+        s.push_str(&format!("      \"{name}\": {v}"));
+        s.push_str(if i + 1 == counters.len() { "\n" } else { ",\n" });
+    }
+    s.push_str("    }\n  }\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered_and_gate_categories() {
+        assert!(TraceLevel::Op < TraceLevel::Insn);
+        assert!(SpanCat::Op.recorded_at(TraceLevel::Op));
+        assert!(!SpanCat::Run.recorded_at(TraceLevel::Segment));
+        assert!(SpanCat::Insn.recorded_at(TraceLevel::Insn));
+        assert!(SpanCat::Request.recorded_at(TraceLevel::Op));
+        for l in ["op", "segment", "run", "insn"] {
+            assert_eq!(TraceLevel::parse(l).unwrap().name(), l);
+        }
+        assert_eq!(TraceLevel::parse("wall-clock"), None);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::new(TraceLevel::Op, 2, 0);
+        for i in 0..5u64 {
+            t.record(SpanCat::Op, format!("op{i}"), i, 1);
+        }
+        assert_eq!(t.span_count(), 2);
+        assert_eq!(t.dropped(), 3);
+        let spans = t.take_spans();
+        assert_eq!(spans[0].name, "op3");
+        assert_eq!(spans[1].name, "op4");
+        assert_eq!(t.span_count(), 0);
+    }
+
+    #[test]
+    fn clones_share_the_clock_and_ring() {
+        let t = Tracer::new(TraceLevel::Segment, 16, 3);
+        let u = t.clone();
+        t.advance(10);
+        assert_eq!(u.now(), 10);
+        u.record(SpanCat::Segment, "seg", u.now(), 4);
+        assert_eq!(t.span_count(), 1);
+        assert_eq!(t.take_spans()[0].tid, 3);
+    }
+
+    #[test]
+    fn chrome_export_is_parseable_json() {
+        let t = Tracer::new(TraceLevel::Op, 8, 0);
+        t.record(SpanCat::Op, "conv \"3x3\"", 0, 100);
+        t.record(SpanCat::Op, "mm", 100, 50);
+        let json = chrome_trace_json(&t.take_spans(), &[("engine_cache_hits", 7)]);
+        let doc = crate::runtime::json::parse(&json).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(events[1].get("ts").and_then(|v| v.as_i64()), Some(100));
+        let ctrs = doc.get("otherData").and_then(|v| v.get("counters")).unwrap();
+        assert_eq!(ctrs.get("engine_cache_hits").and_then(|v| v.as_i64()), Some(7));
+    }
+}

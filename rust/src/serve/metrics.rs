@@ -5,6 +5,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::engine::CacheStats;
+use crate::obs::CycleBreakdown;
 use crate::runtime::json::{jf, jstr};
 
 use super::scenario::XorShift64;
@@ -160,6 +161,8 @@ impl ServeMetrics {
         cache: CacheStats,
         precision_switches: u64,
         compiled_programs: usize,
+        breakdown: CycleBreakdown,
+        counters: Vec<(&'static str, u64)>,
     ) -> MetricsSnapshot {
         let wall_s = self.started.elapsed().as_secs_f64();
         // Copy out under the lock; the O(n log n) sort happens outside it
@@ -252,6 +255,8 @@ impl ServeMetrics {
             cache,
             compiled_programs,
             precision_switches,
+            breakdown,
+            counters,
         }
     }
 }
@@ -363,9 +368,28 @@ pub struct MetricsSnapshot {
     /// exists to minimize (per-request stats exclude them; see the
     /// `serve` module docs).
     pub precision_switches: u64,
+    /// Pool-wide cycle attribution summed over worker engines: where the
+    /// served cycles went (components sum to the total simulated cycles
+    /// across workers exactly).
+    pub breakdown: CycleBreakdown,
+    /// Unified counter-registry snapshot in [`Counter::ALL`] order —
+    /// engine/tune/verify counters fed live by workers, scheduler
+    /// counters mirrored in at snapshot time.
+    ///
+    /// [`Counter::ALL`]: crate::obs::Counter::ALL
+    pub counters: Vec<(&'static str, u64)>,
 }
 
 impl MetricsSnapshot {
+    /// Look up one unified-registry counter by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+
     /// Fraction of routed requests that landed on a precision-matched lane.
     pub fn affinity_rate(&self) -> f64 {
         let n = self.affinity_hits + self.affinity_misses;
@@ -454,7 +478,31 @@ impl MetricsSnapshot {
             false,
         );
         field("compiled_programs", self.compiled_programs.to_string(), false);
-        field("precision_switches", self.precision_switches.to_string(), true);
+        field("precision_switches", self.precision_switches.to_string(), false);
+        field(
+            "breakdown",
+            {
+                let parts: Vec<String> = CycleBreakdown::NAMES
+                    .iter()
+                    .zip(self.breakdown.components())
+                    .map(|(n, v)| format!("\"{n}\": {v}"))
+                    .collect();
+                format!("{{ {} }}", parts.join(", "))
+            },
+            false,
+        );
+        field(
+            "counters",
+            {
+                let parts: Vec<String> = self
+                    .counters
+                    .iter()
+                    .map(|(n, v)| format!("\"{n}\": {v}"))
+                    .collect();
+                format!("{{ {} }}", parts.join(", "))
+            },
+            true,
+        );
         s.push_str(&format!("{indent}}}"));
         s
     }
@@ -489,7 +537,15 @@ mod tests {
         for i in 0..n {
             m.record_finished(true, Duration::from_micros(i + 1), Phase::Prefill);
         }
-        let snap = m.snapshot(1, SchedCounters::default(), CacheStats::default(), 0, 0);
+        let snap = m.snapshot(
+            1,
+            SchedCounters::default(),
+            CacheStats::default(),
+            0,
+            0,
+            CycleBreakdown::default(),
+            Vec::new(),
+        );
         assert_eq!(snap.completed, n);
         // Exact even past the sample cap.
         assert_eq!(snap.max_us, n);
@@ -534,6 +590,8 @@ mod tests {
             CacheStats { hits: 8, misses: 2, shared_hits: 4 },
             7,
             2,
+            CycleBreakdown { chain: 90, load: 8, overhead: 2, ..Default::default() },
+            vec![("engine_cache_hits", 8), ("tune_stalls", 1)],
         );
         assert_eq!(snap.submitted, 5);
         assert_eq!(snap.rejected, 1);
@@ -577,5 +635,16 @@ mod tests {
         assert_eq!(doc.get("kv_misses").and_then(Json::as_i64), Some(1));
         assert_eq!(doc.get("kv_spills").and_then(Json::as_i64), Some(2));
         assert_eq!(doc.get("kv_bytes_peak").and_then(Json::as_i64), Some(4096));
+        // Schema-3 additions: cycle attribution + unified counters.
+        assert_eq!(
+            doc.get("breakdown").and_then(|b| b.get("chain")).and_then(Json::as_i64),
+            Some(90)
+        );
+        assert_eq!(
+            doc.get("counters")
+                .and_then(|c| c.get("engine_cache_hits"))
+                .and_then(Json::as_i64),
+            Some(8)
+        );
     }
 }

@@ -94,6 +94,7 @@ use crate::error::Result;
 use crate::isa::StrategyKind;
 use crate::models::zoo::Model;
 use crate::models::OpDesc;
+use crate::obs::{ObsConfig, Span};
 use crate::sim::{ExecMode, SimStats};
 
 pub use batch::BatchKey;
@@ -345,6 +346,10 @@ pub struct ServeBenchOptions {
     /// pool's [`TunedPlans`](crate::tune::TunedPlans) registry. Tuning
     /// wall time is excluded from the measured serving window.
     pub tuned: bool,
+    /// Observability configuration for the pool's workers (tracing is
+    /// inert: the stats digest is bit-identical traced or not). Spans
+    /// are returned by [`run_serve_bench_traced`].
+    pub obs: ObsConfig,
 }
 
 impl Default for ServeBenchOptions {
@@ -355,6 +360,7 @@ impl Default for ServeBenchOptions {
             exact: false,
             max_batch: None,
             tuned: false,
+            obs: ObsConfig::off(),
         }
     }
 }
@@ -399,8 +405,10 @@ impl ServeBenchReport {
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(2048);
         s.push_str("{\n");
-        // Schema 2: phase-split metrics + KV-cache residency counters.
-        s.push_str("  \"schema\": 2,\n  \"bench\": \"serve-bench\",\n");
+        // Schema 3: cycle-attribution breakdown + unified counter
+        // registry in the metrics object (schema 2 added the phase-split
+        // metrics + KV-cache residency counters).
+        s.push_str("  \"schema\": 3,\n  \"bench\": \"serve-bench\",\n");
         s.push_str(&format!("  \"scenario\": {},\n", jstr(&self.scenario)));
         s.push_str(&format!("  \"seed\": {},\n", self.seed));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
@@ -502,6 +510,9 @@ impl ServeBenchReport {
             100.0 * m.cache.hit_rate(),
             m.cache.shared_hits
         ));
+        if m.breakdown.total() > 0 {
+            s.push_str(&format!("  cycle split: {}\n", m.breakdown.summary_line()));
+        }
         s.push_str(&format!(
             "  sim totals: {} cycles, {} MACs, {:.1} MiB traffic\n",
             self.total_cycles,
@@ -524,6 +535,17 @@ impl ServeBenchReport {
 /// `Policy::Tuned` from the pool's registry. Tuning happens before the
 /// measured window opens.
 pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeBenchReport> {
+    run_serve_bench_traced(sc, opts).map(|(report, _)| report)
+}
+
+/// [`run_serve_bench`] returning the worker span trace alongside the
+/// report. The spans are empty unless [`ServeBenchOptions::obs`] enables
+/// tracing; export them with [`crate::obs::chrome_trace_json`] (the
+/// `repro profile --scenario` path).
+pub fn run_serve_bench_traced(
+    sc: &Scenario,
+    opts: &ServeBenchOptions,
+) -> Result<(ServeBenchReport, Vec<Span>)> {
     let cfg = SpeedConfig::reference();
     // Under --tuned, model mix entries are served at Policy::Tuned.
     let sc_tuned: Option<Scenario> = if opts.tuned {
@@ -574,6 +596,7 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
             capacity: sc.capacity.unwrap_or(defaults.capacity),
             max_batch: opts.max_batch.or(sc.max_batch).unwrap_or(defaults.max_batch),
             exec_mode: if opts.exact { ExecMode::Exact } else { ExecMode::Batch },
+            obs: opts.obs,
             ..defaults
         },
         registry,
@@ -597,6 +620,7 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
         results.push(t.wait()?);
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    let spans = pool.take_spans();
     let snapshot = pool.shutdown();
 
     let mut total_cycles = 0u64;
@@ -607,7 +631,7 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
         total_macs += r.stats.macs;
         total_traffic += r.stats.traffic.total();
     }
-    Ok(ServeBenchReport {
+    let report = ServeBenchReport {
         scenario: sc.name.clone(),
         seed: sc.seed,
         quick: opts.quick,
@@ -621,7 +645,8 @@ pub fn run_serve_bench(sc: &Scenario, opts: &ServeBenchOptions) -> Result<ServeB
         stats_digest: stats_digest(&results),
         wall_s,
         snapshot,
-    })
+    };
+    Ok((report, spans))
 }
 
 /// Order-sensitive FNV-64 digest over per-request statistics (results are

@@ -19,6 +19,7 @@ use crate::config::SpeedConfig;
 use crate::coordinator::runner::default_workers;
 use crate::engine::{CacheStats, Engine, SharedPrograms};
 use crate::error::{Result, SpeedError};
+use crate::obs::{Counter, Counters, CycleBreakdown, ObsConfig, Span, SpanCat, Tracer};
 use crate::sim::ExecMode;
 use crate::tune::TunedPlans;
 
@@ -54,6 +55,12 @@ pub struct ServeOptions {
     /// decode steps land and the hit/spill counters, never per-request
     /// stats.
     pub kv_capacity: u64,
+    /// Observability configuration applied to every worker: when tracing
+    /// is on, each worker records spans on its own timeline (`tid` =
+    /// worker index) into a per-worker ring drained by
+    /// [`ServePool::take_spans`]. Inert by contract — per-request stats
+    /// and digests are bit-identical traced or not.
+    pub obs: ObsConfig,
 }
 
 /// Default per-worker KV residency budget: 4 MiB — a small, deliberate
@@ -72,6 +79,7 @@ impl Default for ServeOptions {
             exec_mode: ExecMode::Batch,
             mem_bytes: 0,
             kv_capacity: DEFAULT_KV_CAPACITY,
+            obs: ObsConfig::off(),
         }
     }
 }
@@ -82,6 +90,7 @@ struct EngineCounters {
     cache: CacheStats,
     switches: u64,
     programs: usize,
+    breakdown: CycleBreakdown,
 }
 
 struct PoolShared {
@@ -97,6 +106,10 @@ struct PoolShared {
     tuned: TunedPlans,
     engines: Mutex<Vec<EngineCounters>>,
     next_id: AtomicU64,
+    /// Unified counter registry shared by every worker engine.
+    counters: Counters,
+    /// One tracer per worker timeline (empty when tracing is off).
+    tracers: Vec<Tracer>,
 }
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -172,6 +185,10 @@ impl ServePool {
             tuned,
             engines: Mutex::new(vec![EngineCounters::default(); opts.workers]),
             next_id: AtomicU64::new(0),
+            counters: Counters::new(),
+            tracers: (0..opts.workers)
+                .filter_map(|w| Tracer::from_config(&opts.obs, w as u32))
+                .collect(),
         });
         let mut handles = Vec::with_capacity(opts.workers);
         for w in 0..opts.workers {
@@ -280,21 +297,43 @@ impl ServePool {
         let mut cache = CacheStats::default();
         let mut switches = 0u64;
         let mut programs = 0usize;
+        let mut breakdown = CycleBreakdown::default();
         for e in engines.iter() {
             cache.hits += e.cache.hits;
             cache.misses += e.cache.misses;
             cache.shared_hits += e.cache.shared_hits;
             switches += e.switches;
             programs += e.programs;
+            breakdown.merge(&e.breakdown);
         }
         drop(engines);
+        // Unified registry snapshot: engine/tune counters are fed live by
+        // the workers; scheduler counters live under the scheduler lock
+        // (its fast path) and are mirrored in at snapshot time.
+        let mut counters = self.shared.counters.snapshot();
+        counters[Counter::SchedSteals.index()].1 = sched.steals;
+        counters[Counter::SchedAffinityHits.index()].1 = sched.affinity_hits;
+        counters[Counter::SchedAffinityMisses.index()].1 = sched.affinity_misses;
+        counters[Counter::KvHits.index()].1 = sched.kv_hits;
+        counters[Counter::KvMisses.index()].1 = sched.kv_misses;
+        counters[Counter::KvSpills.index()].1 = sched.kv_spills;
+        counters[Counter::TraceSpansDropped.index()].1 =
+            self.shared.tracers.iter().map(|t| t.dropped()).sum();
         self.shared.metrics.snapshot(
             self.shared.opts.workers,
             sched,
             cache,
             switches,
             programs,
+            breakdown,
+            counters,
         )
+    }
+
+    /// Drain every worker tracer's recorded spans (oldest first per
+    /// worker timeline). Empty when the pool was built with tracing off.
+    pub fn take_spans(&self) -> Vec<Span> {
+        self.shared.tracers.iter().flat_map(|t| t.take_spans()).collect()
     }
 
     /// Number of distinct compiled programs in the pool-wide shared cache.
@@ -330,11 +369,15 @@ impl Drop for ServePool {
     }
 }
 
-fn build_engine(shared: &PoolShared) -> Engine {
+fn build_engine(shared: &PoolShared, w: usize) -> Engine {
     let mut engine =
         Engine::with_shared(shared.cfg, shared.opts.mem_bytes, shared.programs.clone())
             .expect("pool configuration was validated at construction");
     engine.set_exec_mode(shared.opts.exec_mode);
+    engine.set_counters(shared.counters.clone());
+    if let Some(t) = shared.tracers.get(w) {
+        engine.set_tracer(Some(t.clone()));
+    }
     engine
 }
 
@@ -347,7 +390,7 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 fn worker_loop(shared: Arc<PoolShared>, w: usize) {
-    let mut engine = build_engine(&shared);
+    let mut engine = build_engine(&shared, w);
     // Counters accumulated by engines discarded after a panic — added back
     // at every harvest so pool metrics never lose prior accounting.
     let mut lost = EngineCounters::default();
@@ -368,6 +411,7 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
         shared.space_cv.notify_all();
 
         let kind = batch[0].req.kind.clone();
+        let req_begin = shared.tracers.get(w).map(|t| t.now());
         let (executed, tune_event) = match catch_unwind(AssertUnwindSafe(|| {
             execute_request(&mut engine, &kind, &shared.tuned)
         })) {
@@ -384,7 +428,8 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
                     lost.cache.shared_hits += cache.shared_hits;
                     lost.switches += engine.precision_switches();
                     lost.programs += engine.compiled_programs();
-                    engine = build_engine(&shared);
+                    lost.breakdown.merge(&engine.breakdown());
+                    engine = build_engine(&shared, w);
                     (
                         Err(SpeedError::Serve(format!(
                             "worker {w} panicked serving {}: {}",
@@ -400,12 +445,26 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
         // size). The stall happened on this worker's thread only — other
         // lanes kept serving throughout.
         match tune_event {
-            TuneEvent::Stall => shared.metrics.record_tune_stall(),
-            TuneEvent::PlanHit => shared.metrics.record_plan_hit(),
+            TuneEvent::Stall => {
+                shared.metrics.record_tune_stall();
+                shared.counters.incr(Counter::TuneStalls);
+            }
+            TuneEvent::PlanHit => {
+                shared.metrics.record_plan_hit();
+                shared.counters.incr(Counter::TunePlanHits);
+            }
             TuneEvent::None => {}
         }
 
         let n = batch.len();
+        // One request span per executed batch: begin was the worker's
+        // virtual time before execution, the duration its simulated
+        // cycles (coalesced requests share one execution).
+        if let (Some(begin), Some(t), Ok((stats, _))) =
+            (req_begin, shared.tracers.get(w), &executed)
+        {
+            t.record(SpanCat::Request, kind.label(), begin, stats.cycles);
+        }
         shared.metrics.record_batch(n as u64);
         for job in batch {
             let latency = job.enqueued.elapsed();
@@ -423,6 +482,8 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
             job.done.fulfill(result);
         }
         let cache = engine.cache_stats();
+        let mut breakdown = lost.breakdown;
+        breakdown.merge(&engine.breakdown());
         lock(&shared.engines)[w] = EngineCounters {
             cache: CacheStats {
                 hits: lost.cache.hits + cache.hits,
@@ -431,6 +492,7 @@ fn worker_loop(shared: Arc<PoolShared>, w: usize) {
             },
             switches: lost.switches + engine.precision_switches(),
             programs: lost.programs + engine.compiled_programs(),
+            breakdown,
         };
     }
 }
@@ -704,6 +766,50 @@ mod tests {
             "datapath flipped at request boundaries: {}",
             snap.precision_switches
         );
+    }
+
+    #[test]
+    fn tracing_pool_is_stats_inert_and_collects_spans() {
+        use crate::obs::TraceLevel;
+        let kinds: Vec<RequestKind> = vec![
+            tiny_op(Precision::Int8),
+            tiny_model_kind(Precision::Int4),
+            tiny_op(Precision::Int8),
+            tiny_op(Precision::Int16),
+        ];
+        let plain = pool(2, 64, 2).run_all(kinds.clone()).unwrap();
+        let traced_pool = ServePool::new(
+            SpeedConfig::reference(),
+            ServeOptions {
+                workers: 2,
+                capacity: 64,
+                max_batch: 2,
+                obs: ObsConfig::tracing(TraceLevel::Run),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let traced = traced_pool.run_all(kinds).unwrap();
+        // Inertness: identical per-request stats, tracer on or off.
+        for (a, b) in plain.iter().zip(&traced) {
+            assert_eq!(a.stats, b.stats, "request {}", a.id);
+            assert_eq!(a.layers, b.layers);
+        }
+        let spans = traced_pool.take_spans();
+        assert!(spans.iter().any(|s| s.cat == SpanCat::Request));
+        assert!(spans.iter().any(|s| s.cat == SpanCat::Op));
+        let snap = traced_pool.shutdown();
+        assert!(snap.breakdown.total() > 0);
+        let get = |name: &str| {
+            snap.counters.iter().find(|(n, _)| *n == name).map(|&(_, v)| v).unwrap()
+        };
+        assert_eq!(
+            get("engine_cache_hits") + get("engine_cache_misses"),
+            snap.cache.lookups(),
+            "registry mirrors the harvested cache counters"
+        );
+        assert_eq!(get("sched_steals"), snap.steals);
+        assert_eq!(get("trace_spans_dropped"), 0);
     }
 
     #[test]

@@ -64,6 +64,12 @@ struct Lane {
 }
 
 /// Scheduler state: per-worker lanes plus the shared queue bound.
+///
+/// The counter fields below are the lock-held fast path; the pool
+/// mirrors them into the unified [`crate::obs::Counters`] registry view
+/// at snapshot time (`ServePool::metrics`), so they appear in the
+/// schema-3 `counters` object without a second atomic write per routing
+/// decision.
 pub(crate) struct SchedState {
     lanes: Vec<Lane>,
     queued: usize,

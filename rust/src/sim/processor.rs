@@ -45,6 +45,7 @@
 
 use crate::config::SpeedConfig;
 use crate::isa::{Insn, LdMode, RunKind, Segment, StreamRun, WidthSel};
+use crate::obs::{CycleBreakdown, SpanCat, TraceLevel, Tracer};
 
 use super::ctrl::CtrlState;
 use super::memory::{ExtMem, TrafficClass};
@@ -118,10 +119,17 @@ pub struct Processor {
     computed: bool,
     /// Batch vs exact consumption of segment run metadata.
     mode: ExecMode,
-    /// `SPEED_TRACE` captured once at construction (reading the
-    /// environment on every `step` dominated the old per-instruction
-    /// cost); tracing forces the exact path so every instruction prints.
-    trace: bool,
+    /// Attached observability tracer (None = fully inert). Attaching a
+    /// tracer never changes [`SimStats`]: instruction-level tracing in
+    /// batch mode expands runs into the per-instruction path, which is
+    /// bit-exact by the fast-path parity property.
+    tracer: Option<Tracer>,
+    /// Virtual-clock value at the current `run_insns` entry (span
+    /// timestamp base while a tracer is attached).
+    span_base: u64,
+    /// Completion frontier at the current `run_insns` entry (maps
+    /// scoreboard times onto the virtual clock).
+    span_frontier: u64,
 
     // ---- scoreboard state (all times in cycles) ----
     t_decode: u64,
@@ -135,6 +143,9 @@ pub struct Processor {
     last_complete: u64,
 
     stats: SimStats,
+    /// Lifetime cycle attribution (accumulates exactly in step with
+    /// `stats.cycles`; see [`CycleBreakdown`]).
+    breakdown: CycleBreakdown,
     vregs_touched: [bool; 32],
     /// Reusable transfer buffer (keeps the hot loop allocation-free).
     scratch: Vec<u8>,
@@ -160,7 +171,9 @@ impl Processor {
             } else {
                 ExecMode::Batch
             },
-            trace: std::env::var_os("SPEED_TRACE").is_some(),
+            tracer: None,
+            span_base: 0,
+            span_frontier: 0,
             t_decode: 0,
             fu_free: [0; 5],
             mem_port_free: 0,
@@ -169,6 +182,7 @@ impl Processor {
             last_mptu_complete: u64::MAX,
             last_complete: 0,
             stats: SimStats::default(),
+            breakdown: CycleBreakdown::default(),
             vregs_touched: [false; 32],
             scratch: Vec::new(),
         }
@@ -201,6 +215,32 @@ impl Processor {
     /// The active simulation mode.
     pub fn exec_mode(&self) -> ExecMode {
         self.mode
+    }
+
+    /// Attach (or detach, with `None`) an observability tracer. The tracer
+    /// is timing-inert: statistics are bit-identical either way.
+    pub fn attach_tracer(&mut self, tracer: Option<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    /// The attached tracer, if any (the engine emits op/segment spans on
+    /// the same virtual clock the processor advances).
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Lifetime cycle attribution across all runs; its bucket sum equals
+    /// [`Processor::lifetime_stats`]`.cycles` exactly.
+    pub fn breakdown(&self) -> CycleBreakdown {
+        self.breakdown
+    }
+
+    /// Per-instruction stepping required? True in exact mode and whenever
+    /// an instruction-level tracer (or stderr echo) is attached — the
+    /// lazy-expansion replacement for the old `SPEED_TRACE`-forces-exact
+    /// construction-time hack.
+    fn insn_tracing(&self) -> bool {
+        self.tracer.as_ref().is_some_and(|t| t.level() >= TraceLevel::Insn || t.echo())
     }
 
     /// Grow external memory to at least `bytes`, preserving contents and
@@ -252,8 +292,11 @@ impl Processor {
     }
 
     /// Run one compiled segment, honoring the processor's [`ExecMode`].
+    /// Instruction-level tracing expands runs lazily into the
+    /// per-instruction path (bit-exact), so batch mode stays the default
+    /// even under a tracer.
     pub fn run_segment(&mut self, seg: &Segment) -> Result<SimStats, SimError> {
-        if self.mode == ExecMode::Exact || self.trace {
+        if self.mode == ExecMode::Exact || self.insn_tracing() {
             self.run_insns(&seg.insns, &[])
         } else {
             self.run_insns(&seg.insns, &seg.runs)
@@ -267,6 +310,13 @@ impl Processor {
         // Clock at entry: cycles of this run are the advance of the machine
         // clock (last completion), so back-to-back runs telescope correctly.
         let run_begin = self.last_complete;
+        // Attribution at entry: whatever `schedule`/`run_tensor` do not
+        // explain of this call's cycles is pipeline-drain overhead.
+        let attr_begin = self.breakdown.total();
+        if let Some(t) = &self.tracer {
+            self.span_base = t.now();
+            self.span_frontier = run_begin;
+        }
 
         let mut ri = 0usize;
         let mut i = 0usize;
@@ -278,10 +328,23 @@ impl Processor {
                     ri += 1;
                     continue;
                 }
-                if r.start as usize == i && self.exec_run(prog, r, &mut run_stats)? {
-                    i += r.len as usize;
-                    ri += 1;
-                    continue 'outer;
+                if r.start as usize == i {
+                    let run_from = self.last_complete;
+                    if self.exec_run(prog, r, &mut run_stats)? {
+                        if let Some(t) = &self.tracer {
+                            let begin =
+                                self.span_base + run_from.saturating_sub(self.span_frontier);
+                            let label = match r.kind {
+                                RunKind::Tensor => "tensor-chain",
+                                RunKind::Load => "load-run",
+                                RunKind::Store => "store-run",
+                            };
+                            t.record(SpanCat::Run, label, begin, self.last_complete - run_from);
+                        }
+                        i += r.len as usize;
+                        ri += 1;
+                        continue 'outer;
+                    }
                 }
                 break;
             }
@@ -291,6 +354,15 @@ impl Processor {
 
         // Total cycles: last completion + 1 (CO stage), relative to run start.
         run_stats.cycles = (self.last_complete + 1).saturating_sub(run_begin + 1).max(1);
+        // The frontier-advance attribution telescopes to exactly
+        // `last_complete - run_begin`; the per-run `max(1)` clamp above is
+        // the only unexplained remainder and lands in `overhead`, keeping
+        // `breakdown.total() == stats.cycles` to the cycle.
+        let attributed = self.breakdown.total() - attr_begin;
+        self.breakdown.overhead += run_stats.cycles - attributed.min(run_stats.cycles);
+        if let Some(t) = &self.tracer {
+            t.advance(run_stats.cycles);
+        }
         run_stats.vregs_used = self.vregs_touched.iter().filter(|&&b| b).count() as u32;
         // Switches performed by *this* run (the ctrl counter is lifetime).
         run_stats.precision_switches = self.ctrl.precision_switches - start_switches;
@@ -395,8 +467,17 @@ impl Processor {
         }
 
         let complete = start + ex_cycles;
-        if self.trace {
-            eprintln!("dec={decode_t} rdy={ready} iss={issue} start={start} done={complete} ex={ex_cycles} {insn:?}");
+        if let Some(t) = &self.tracer {
+            if t.echo() {
+                eprintln!(
+                    "dec={decode_t} rdy={ready} iss={issue} start={start} \
+                     done={complete} ex={ex_cycles} {insn:?}"
+                );
+            }
+            if t.level() >= TraceLevel::Insn {
+                let begin = self.span_base + start.saturating_sub(self.span_frontier);
+                t.record(SpanCat::Insn, format!("{insn:?}"), begin, ex_cycles.max(1));
+            }
         }
         self.fu_free[fu.index()] = complete;
         for &r in writes {
@@ -406,8 +487,45 @@ impl Processor {
             self.vreg_read_done[r as usize] = self.vreg_read_done[r as usize].max(complete);
         }
         st.fu_busy[fu.index()] += ex_cycles;
+        let frontier_was = self.last_complete;
         self.last_complete = self.last_complete.max(complete);
+        self.attribute(insn, self.last_complete - frontier_was);
         complete
+    }
+
+    /// Charge a completion-frontier advancement to the [`CycleBreakdown`]
+    /// bucket of the instruction class that caused it. Deltas telescope to
+    /// the run's cycle count, so buckets stay an exact partition.
+    fn attribute(&mut self, insn: &Insn, delta: u64) {
+        if delta == 0 {
+            return;
+        }
+        match *insn {
+            Insn::Vsam { .. } | Insn::Vsac { .. } => self.breakdown.chain += delta,
+            Insn::Vle { .. } | Insn::Vsald { .. } => self.breakdown.load += delta,
+            Insn::Vse { .. } => self.breakdown.store += delta,
+            Insn::Vmacc { .. }
+            | Insn::Vmul { .. }
+            | Insn::Vadd { .. }
+            | Insn::Vsub { .. }
+            | Insn::Vmax { .. }
+            | Insn::Vmin { .. }
+            | Insn::Vsra { .. }
+            | Insn::Vmv { .. } => self.breakdown.alu += delta,
+            Insn::Vsacfg { zimm, .. } => {
+                // Classified before `ctrl.apply` runs: a VSACFG selecting a
+                // precision other than the latched one is the single-cycle
+                // datapath reconfiguration of Sec. II-E.
+                if Insn::unpack_cfg(zimm).is_some_and(|(p, _, _)| p != self.ctrl.prec) {
+                    self.breakdown.prec_switch += delta;
+                } else {
+                    self.breakdown.scalar += delta;
+                }
+            }
+            Insn::Addi { .. } | Insn::Vsetvli { .. } | Insn::VsacfgDim { .. } => {
+                self.breakdown.scalar += delta;
+            }
+        }
     }
 
     // ================= batch fast path =================
@@ -541,7 +659,9 @@ impl Processor {
                         self.vreg_read_done[vs1 as usize].max(cf);
                     self.vreg_read_done[vs2 as usize] =
                         self.vreg_read_done[vs2 as usize].max(cf);
+                    let frontier_was = self.last_complete;
                     self.last_complete = self.last_complete.max(cf);
+                    self.breakdown.chain += self.last_complete - frontier_was;
                     break;
                 }
             }
@@ -1358,5 +1478,82 @@ mod tests {
         assert_eq!(p.exec_mode(), ExecMode::Exact);
         p.set_exec_mode(ExecMode::Batch);
         assert_eq!(p.exec_mode(), ExecMode::Batch);
+    }
+
+    /// Run one compiled operator in `mode` and return the machine.
+    fn compiled_machine(op: &OpDesc, strat: StrategyKind, mode: ExecMode) -> Processor {
+        let cfg = SpeedConfig::reference();
+        let mut p = Processor::new(cfg, 1 << 22);
+        p.set_exec_mode(mode);
+        let layout = MemLayout::for_op(op, 1 << 22).unwrap();
+        let c = compile_op(op, &cfg, strat, layout, false).unwrap();
+        p.set_plan(c.plan);
+        for seg in &c.segments {
+            p.run_segment(seg).unwrap();
+        }
+        p
+    }
+
+    #[test]
+    fn breakdown_partitions_lifetime_cycles_in_both_modes() {
+        for mode in [ExecMode::Exact, ExecMode::Batch] {
+            let op = OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int8);
+            let p = compiled_machine(&op, StrategyKind::Ffcs, mode);
+            let b = p.breakdown();
+            assert_eq!(b.total(), p.lifetime_stats().cycles, "{mode:?}: {b:?}");
+            assert!(b.chain > 0, "{mode:?}: MPTU chains must be attributed");
+            assert!(b.load > 0, "{mode:?}: load runs must be attributed");
+        }
+    }
+
+    #[test]
+    fn tracer_is_stats_inert_and_records_spans() {
+        use crate::obs::ObsConfig;
+        let op = OpDesc::mm(12, 40, 10, Precision::Int8);
+        let plain = compiled_machine(&op, StrategyKind::Mm, ExecMode::Batch);
+        let cfg = SpeedConfig::reference();
+        let mut traced = Processor::new(cfg, 1 << 22);
+        let tracer =
+            Tracer::from_config(&ObsConfig::tracing(TraceLevel::Run), 0).unwrap();
+        traced.attach_tracer(Some(tracer.clone()));
+        let layout = MemLayout::for_op(&op, 1 << 22).unwrap();
+        let c = compile_op(&op, &cfg, StrategyKind::Mm, layout, false).unwrap();
+        traced.set_plan(c.plan);
+        for seg in &c.segments {
+            traced.run_segment(seg).unwrap();
+        }
+        assert_eq!(plain.lifetime_stats(), traced.lifetime_stats());
+        assert_eq!(plain.breakdown(), traced.breakdown());
+        assert!(tracer.span_count() > 0, "run-level spans recorded");
+        // The virtual clock advanced exactly by the simulated cycles.
+        assert_eq!(tracer.now(), traced.lifetime_stats().cycles);
+    }
+
+    #[test]
+    fn insn_tracer_expands_runs_bit_exactly() {
+        use crate::obs::ObsConfig;
+        // An instruction-level tracer on a *batch-mode* machine must take
+        // the per-instruction path lazily and still produce the exact
+        // stats — the replacement for SPEED_TRACE forcing exact mode.
+        let op = OpDesc::conv(4, 8, 10, 10, 3, 1, 1, Precision::Int16);
+        let exact = compiled_machine(&op, StrategyKind::Ffcs, ExecMode::Exact);
+        let cfg = SpeedConfig::reference();
+        let mut traced = Processor::new(cfg, 1 << 22);
+        traced.set_exec_mode(ExecMode::Batch);
+        let tracer =
+            Tracer::from_config(&ObsConfig::tracing(TraceLevel::Insn), 0).unwrap();
+        traced.attach_tracer(Some(tracer.clone()));
+        let layout = MemLayout::for_op(&op, 1 << 22).unwrap();
+        let c = compile_op(&op, &cfg, StrategyKind::Ffcs, layout, false).unwrap();
+        traced.set_plan(c.plan);
+        for seg in &c.segments {
+            traced.run_segment(seg).unwrap();
+        }
+        assert_eq!(exact.lifetime_stats(), traced.lifetime_stats());
+        let spans = tracer.take_spans();
+        assert!(
+            spans.iter().any(|s| s.cat == SpanCat::Insn),
+            "instruction spans recorded in batch mode"
+        );
     }
 }

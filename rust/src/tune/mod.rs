@@ -49,6 +49,7 @@ use crate::error::{Result, SpeedError};
 use crate::isa::StrategyKind;
 use crate::models::ops::{OpDesc, OpKind};
 use crate::models::zoo::Model;
+use crate::obs::Counter;
 use crate::runtime::json::{jopt, jstr, parse, Fnv64, Json};
 use crate::sim::ExecMode;
 
@@ -540,6 +541,7 @@ pub fn tune_op(engine: &mut Engine, op: &OpDesc, opts: &TuneOptions) -> Result<O
         }
         engine.quiesce();
         let (stats, _) = engine.run_op_with(op, *choice, false)?;
+        engine.counters().incr(Counter::TuneCandidates);
         let cost = (stats.cycles, stats.traffic.total());
         if *choice == cands[0] {
             static_cycles = stats.cycles;

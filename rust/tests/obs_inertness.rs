@@ -1,0 +1,181 @@
+//! Observability inertness contract (ISSUE 8 acceptance bar): attaching a
+//! tracer changes *nothing* the machine reports — per-layer and aggregate
+//! `SimStats`, per-request serving digests, and the cycle-attribution
+//! breakdown are bit-identical with tracing on or off, in both execution
+//! modes and at every trace level (insn-level tracing lazily expands
+//! batch runs, so this doubles as the batch-vs-exact parity witness).
+//! The breakdown itself telescopes exactly: its components sum to the
+//! simulator's cycle count to the cycle.
+
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::models::zoo::{model_by_name, Model};
+use speed_rvv::obs::{chrome_trace_json, ObsConfig, SpanCat, TraceLevel};
+use speed_rvv::report::fig12::downscale;
+use speed_rvv::runtime::json::{parse, Json};
+use speed_rvv::serve::{stats_digest, Request, Scenario, ServeOptions, ServePool};
+use speed_rvv::sim::ExecMode;
+use speed_rvv::Engine;
+
+fn tiny_model() -> Model {
+    downscale(&model_by_name("mobilenetv2").unwrap(), 8)
+}
+
+/// The serve-layer scenario: small enough for the exact-mode leg, mixed
+/// enough to exercise affinity routing and micro-batching.
+const SCENARIO: &str = r#"{
+    "name": "obs_inertness",
+    "seed": 20250807,
+    "requests": 8,
+    "arrival": { "pattern": "burst", "size": 4 },
+    "mix": [
+        { "model": "mobilenetv2", "prec": 8, "weight": 2, "downscale": 8 },
+        { "op": "mm", "m": 24, "k": 32, "n": 24, "prec": 16, "weight": 1 },
+        { "op": "dwcv", "c": 8, "h": 12, "w": 12, "ksize": 3, "prec": 4,
+          "weight": 1 }
+    ]
+}"#;
+
+#[test]
+fn tracing_leaves_engine_stats_bit_identical_in_both_modes() {
+    let model = tiny_model();
+    for mode in [ExecMode::Batch, ExecMode::Exact] {
+        let mut plain = Engine::new(SpeedConfig::reference()).unwrap();
+        plain.set_exec_mode(mode);
+        let base = plain.session().run_model(&model, Precision::Int8).unwrap();
+
+        // Every level, including Insn — which on the batch path lazily
+        // expands stream runs to per-instruction stepping and must still
+        // report bit-identical stats (batch/exact parity).
+        for level in [TraceLevel::Op, TraceLevel::Run, TraceLevel::Insn] {
+            let mut traced = Engine::new(SpeedConfig::reference()).unwrap();
+            traced.set_exec_mode(mode);
+            traced.set_obs(ObsConfig::tracing(level));
+            let r = traced.session().run_model(&model, Precision::Int8).unwrap();
+            assert_eq!(r.total, base.total, "{mode:?} {level:?}");
+            assert_eq!(r.layers.len(), base.layers.len());
+            for (a, b) in r.layers.iter().zip(&base.layers) {
+                assert_eq!(a.stats, b.stats, "{mode:?} {level:?} {:?}", a.op);
+            }
+            // Attribution is tracer-independent too: same buckets on and
+            // off (the breakdown accumulates whether or not anyone looks).
+            assert_eq!(traced.breakdown(), plain.breakdown(), "{mode:?} {level:?}");
+            assert!(traced.tracer().unwrap().span_count() > 0, "{mode:?} {level:?}");
+        }
+    }
+}
+
+#[test]
+fn breakdown_components_sum_exactly_to_simulated_cycles() {
+    let model = tiny_model();
+    for mode in [ExecMode::Batch, ExecMode::Exact] {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        engine.set_exec_mode(mode);
+        let r = engine.session().run_model(&model, Precision::Int8).unwrap();
+        let b = engine.breakdown();
+        // The engine is fresh, so its lifetime attribution is exactly
+        // this run's — and the monotone-frontier argument makes the sum
+        // exact, not approximate.
+        assert_eq!(b.total(), r.total.cycles, "{mode:?}: {b:?}");
+        assert!(b.chain > 0, "{mode:?}: no systolic-chain cycles in {b:?}");
+        assert!(b.load > 0, "{mode:?}: no load cycles in {b:?}");
+    }
+}
+
+fn serve_results(
+    reqs: &[Request],
+    workers: usize,
+    mode: ExecMode,
+    obs: ObsConfig,
+) -> Vec<speed_rvv::serve::RequestResult> {
+    let pool = ServePool::new(
+        SpeedConfig::reference(),
+        ServeOptions {
+            workers,
+            capacity: 64,
+            max_batch: 2,
+            exec_mode: mode,
+            obs,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    pool.run_all(reqs.to_vec()).unwrap()
+}
+
+#[test]
+fn serve_digest_is_tracer_invariant_across_workers_and_modes() {
+    let sc = Scenario::from_json(SCENARIO).unwrap();
+    let reqs = sc.generate(false).unwrap();
+    let reference =
+        serve_results(&reqs, 1, ExecMode::Batch, ObsConfig::off());
+    let base_digest = stats_digest(&reference);
+
+    for workers in [1usize, 3] {
+        for mode in [ExecMode::Batch, ExecMode::Exact] {
+            let traced = serve_results(
+                &reqs,
+                workers,
+                mode,
+                ObsConfig::tracing(TraceLevel::Op),
+            );
+            assert_eq!(
+                stats_digest(&traced),
+                base_digest,
+                "workers {workers}, {mode:?}"
+            );
+            for (a, b) in reference.iter().zip(&traced) {
+                assert_eq!(a.stats, b.stats, "workers {workers}, {mode:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn chrome_trace_is_wellformed_and_op_spans_partition_the_timeline() {
+    let model = tiny_model();
+    let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+    engine.set_obs(ObsConfig::tracing(TraceLevel::Segment));
+    let r = engine.session().run_model(&model, Precision::Int8).unwrap();
+    let tracer = engine.tracer().unwrap();
+    assert_eq!(tracer.dropped(), 0);
+    let spans = tracer.take_spans();
+    assert!(!spans.is_empty());
+
+    // The acceptance bar: op-span durations sum to the simulator's own
+    // total — the trace claims exactly the cycles that were simulated.
+    let op_sum: u64 =
+        spans.iter().filter(|s| s.cat == SpanCat::Op).map(|s| s.dur).sum();
+    assert_eq!(op_sum, r.total.cycles);
+    let seg_sum: u64 = spans
+        .iter()
+        .filter(|s| s.cat == SpanCat::Segment)
+        .map(|s| s.dur)
+        .sum();
+    assert_eq!(seg_sum, r.total.cycles, "segments partition ops exactly");
+
+    let json = chrome_trace_json(&spans, &engine.counters().snapshot());
+    let doc = parse(&json).unwrap();
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert_eq!(events.len(), spans.len());
+    assert_eq!(
+        doc.get("otherData")
+            .and_then(|o| o.get("clock"))
+            .and_then(Json::as_str),
+        Some("virtual-cycles")
+    );
+}
+
+#[test]
+fn traces_are_bit_reproducible_run_to_run() {
+    // The virtual clock has no wall-time dependence: two identical runs
+    // serialize to byte-identical trace documents.
+    let emit = || {
+        let model = tiny_model();
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        engine.set_obs(ObsConfig::tracing(TraceLevel::Run));
+        engine.session().run_model(&model, Precision::Int4).unwrap();
+        let spans = engine.tracer().unwrap().take_spans();
+        chrome_trace_json(&spans, &engine.counters().snapshot())
+    };
+    assert_eq!(emit(), emit());
+}

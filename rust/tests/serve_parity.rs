@@ -153,7 +153,7 @@ fn serve_bench_report_is_parseable_and_digest_stable() {
             quick: false,
             exact: false,
             max_batch: Some(1),
-            tuned: false,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -164,7 +164,7 @@ fn serve_bench_report_is_parseable_and_digest_stable() {
             quick: false,
             exact: false,
             max_batch: None,
-            tuned: false,
+            ..Default::default()
         },
     )
     .unwrap();
