@@ -1,0 +1,482 @@
+//! Static cycle & traffic predictor: exact simulation results without the
+//! simulator.
+//!
+//! The scoreboard of [`crate::sim::Processor`] is a deterministic monotone
+//! system: every instruction's issue/start/complete time is a pure function
+//! of the decode clock, the per-FU free times, the per-vreg hazard tables,
+//! the MPTU chain register, and the shared memory-port free time — and each
+//! of those only ever advances. None of them depends on *data* values, only
+//! on control state (`vl`/`sew`/precision) and scalar address registers,
+//! both of which compiled streams set through `ADDI`/`VSETVLI`/`VSACFG`
+//! with immediate operands. A compiled operator's cycle count is therefore
+//! computable by abstract interpretation alone: replay the scoreboard
+//! recurrence per instruction, skip the functional work (VRF bytes, MAC
+//! numerics, memory contents), and the frontier arithmetic reproduces the
+//! simulator's timing *bit for bit* — not an estimate.
+//!
+//! Concretely, with `ready = decode + 1` and monotone state `F` (FU free),
+//! `H` (hazard tables), `P` (memory port), the per-instruction recurrence
+//! is
+//!
+//! ```text
+//! issue    = max(ready, F[fu], H[reads ∪ writes])
+//! start    = if bytes > 0 { max(issue, P) } else { issue }
+//! complete = start + ex
+//! cycles  += max(complete, frontier) - frontier        (bucketed by class)
+//! ```
+//!
+//! with the MPTU chain discount `ex -= PIPE_FILL` whenever
+//! `issue <= last_mptu_complete`. [`CostModel`] implements exactly this,
+//! and [`cost_op`] runs it over an operator's compiled stream. The
+//! `static_cost` tier-2 property test proves the resulting
+//! [`SimStats`] *and* [`CycleBreakdown`] equal batch-mode execution
+//! bit-identically over random shapes × all precisions × feasible
+//! strategies (exact and batch mode already agree by the fast-path parity
+//! contract).
+//!
+//! The predictor assumes the stream it replays is *legal* — run it after
+//! (or alongside) [`crate::analysis::verify_segments`]; the auto-tuner
+//! does exactly that before using static costs to prune its search.
+
+use crate::compiler::{self, MemLayout};
+use crate::config::SpeedConfig;
+use crate::dataflow::MappingChoice;
+use crate::error::SpeedError;
+use crate::isa::{Insn, WidthSel};
+use crate::models::ops::OpDesc;
+use crate::obs::CycleBreakdown;
+use crate::sim::mptu::PIPE_FILL;
+use crate::sim::{CtrlState, Fu, OpPlan, SimStats, TrafficClass, TrafficStats};
+
+/// The statically predicted execution profile of one compiled operator:
+/// bit-identical to what [`crate::engine::Engine::run_op_with`] would
+/// report for the same `(op, choice)` on a quiesced engine.
+#[derive(Debug, Clone)]
+pub struct StaticCost {
+    /// Predicted run statistics (cycles, stalls, traffic, MACs, ...).
+    pub stats: SimStats,
+    /// Predicted cycle attribution; `breakdown.total() == stats.cycles`.
+    pub breakdown: CycleBreakdown,
+}
+
+impl StaticCost {
+    /// The auto-tuner's cost tuple: simulated cycles first, total
+    /// external-memory traffic as the tie-break.
+    pub fn cost(&self) -> (u64, u64) {
+        (self.stats.cycles, self.stats.traffic.total())
+    }
+}
+
+/// Abstract interpreter replaying the processor's issue/execute scoreboard
+/// over a compiled stream without functional execution.
+///
+/// The model starts from the fresh-machine state ([`CtrlState::default`],
+/// drained pipeline) — the same state a quiesced engine runs each tuning
+/// candidate from, which is what makes the prediction exact rather than
+/// approximate. Feed whole segments in program order via
+/// [`CostModel::run_segment`]; the per-segment stats epilogue (cycle
+/// clamp, overhead residue, traffic deltas) mirrors the simulator's, so
+/// merged multi-segment totals line up too.
+pub struct CostModel {
+    cfg: SpeedConfig,
+    plan: OpPlan,
+    // ---- scoreboard state (mirrors `Processor`, times in cycles) ----
+    t_decode: u64,
+    fu_free: [u64; 5],
+    mem_port_free: u64,
+    vreg_write_done: [u64; 32],
+    vreg_read_done: [u64; 32],
+    last_mptu_complete: u64,
+    last_complete: u64,
+    vregs_touched: [bool; 32],
+    // ---- architectural state the timing depends on ----
+    ctrl: CtrlState,
+    xregs: [i64; 32],
+    stage_cursor: u64,
+    traffic: TrafficStats,
+    // ---- accumulated outputs ----
+    stats: SimStats,
+    breakdown: CycleBreakdown,
+}
+
+impl CostModel {
+    /// A model for one operator execution under `plan`, from the
+    /// fresh-machine entry state.
+    pub fn new(cfg: SpeedConfig, plan: OpPlan) -> Self {
+        CostModel {
+            cfg,
+            plan,
+            t_decode: 0,
+            fu_free: [0; 5],
+            mem_port_free: 0,
+            vreg_write_done: [0; 32],
+            vreg_read_done: [0; 32],
+            last_mptu_complete: u64::MAX,
+            last_complete: 0,
+            vregs_touched: [false; 32],
+            ctrl: CtrlState::default(),
+            xregs: [0; 32],
+            stage_cursor: 0,
+            traffic: TrafficStats::default(),
+            stats: SimStats::default(),
+            breakdown: CycleBreakdown::default(),
+        }
+    }
+
+    /// Replay one segment, accumulating its predicted stats (the same
+    /// per-run epilogue `Processor::run_insns` applies: ≥ 1-cycle clamp,
+    /// overhead residue, per-class traffic delta).
+    pub fn run_segment(&mut self, insns: &[Insn]) {
+        let start_traffic = self.traffic;
+        let start_switches = self.ctrl.precision_switches;
+        let mut run_stats = SimStats::default();
+        let run_begin = self.last_complete;
+        let attr_begin = self.breakdown.total();
+
+        for insn in insns {
+            self.step(insn, &mut run_stats);
+        }
+
+        run_stats.cycles = (self.last_complete + 1).saturating_sub(run_begin + 1).max(1);
+        let attributed = self.breakdown.total() - attr_begin;
+        self.breakdown.overhead += run_stats.cycles - attributed.min(run_stats.cycles);
+        run_stats.vregs_used = self.vregs_touched.iter().filter(|&&b| b).count() as u32;
+        run_stats.precision_switches = self.ctrl.precision_switches - start_switches;
+        let t = self.traffic;
+        run_stats.traffic.input_read = t.input_read - start_traffic.input_read;
+        run_stats.traffic.weight_read = t.weight_read - start_traffic.weight_read;
+        run_stats.traffic.partial_read = t.partial_read - start_traffic.partial_read;
+        run_stats.traffic.partial_write = t.partial_write - start_traffic.partial_write;
+        run_stats.traffic.output_write = t.output_write - start_traffic.output_write;
+        self.stats.merge(&run_stats);
+    }
+
+    /// Consume the model, returning the accumulated prediction.
+    pub fn finish(self) -> StaticCost {
+        StaticCost { stats: self.stats, breakdown: self.breakdown }
+    }
+
+    fn xreg(&self, r: u8) -> i64 {
+        if r == 0 {
+            0
+        } else {
+            self.xregs[r as usize]
+        }
+    }
+
+    fn step(&mut self, insn: &Insn, st: &mut SimStats) {
+        let decode_t = self.t_decode;
+        self.t_decode += 1;
+        st.insns_total += 1;
+        if insn.is_custom() {
+            st.insns_custom += 1;
+        }
+        if insn.is_vector() {
+            st.insns_vector += 1;
+        } else {
+            st.insns_scalar += 1;
+        }
+        let reads = insn.vregs_read();
+        let writes = insn.vregs_written();
+        for r in reads.iter().chain(writes.iter()) {
+            self.vregs_touched[*r as usize] = true;
+        }
+        let (fu, ex_cycles, port_bytes) = self.cost_of(insn);
+        self.schedule(insn, decode_t, fu, ex_cycles, port_bytes, &reads, &writes, st);
+        self.effects(insn, st);
+    }
+
+    /// The scoreboard advance of one classified instruction — the
+    /// frontier recurrence from the module docs, matching
+    /// `Processor::schedule` term for term.
+    #[allow(clippy::too_many_arguments)]
+    fn schedule(
+        &mut self,
+        insn: &Insn,
+        decode_t: u64,
+        fu: Fu,
+        mut ex_cycles: u64,
+        port_bytes: u64,
+        reads: &[u8],
+        writes: &[u8],
+        st: &mut SimStats,
+    ) {
+        let ready = decode_t + 1;
+        let mut issue = ready.max(self.fu_free[fu.index()]);
+        if self.fu_free[fu.index()] > ready {
+            st.stall_fu_busy += self.fu_free[fu.index()] - ready;
+        }
+        let mut hazard_until = 0u64;
+        for &r in reads {
+            hazard_until = hazard_until.max(self.vreg_write_done[r as usize]);
+        }
+        for &r in writes {
+            hazard_until = hazard_until.max(self.vreg_write_done[r as usize]);
+            hazard_until = hazard_until.max(self.vreg_read_done[r as usize]);
+        }
+        if hazard_until > issue {
+            st.stall_hazard += hazard_until - issue;
+            issue = hazard_until;
+        }
+        if fu == Fu::Mptu {
+            if issue <= self.last_mptu_complete {
+                ex_cycles = ex_cycles.saturating_sub(PIPE_FILL).max(1);
+            }
+            self.last_mptu_complete = issue.max(self.fu_free[fu.index()]) + ex_cycles;
+        }
+        let mut start = issue;
+        if port_bytes > 0 {
+            if self.mem_port_free > start {
+                st.stall_mem_port += self.mem_port_free - start;
+                start = self.mem_port_free;
+            }
+            self.mem_port_free = start + ex_cycles;
+        }
+        let complete = start + ex_cycles;
+        self.fu_free[fu.index()] = complete;
+        for &r in writes {
+            self.vreg_write_done[r as usize] = complete;
+        }
+        for &r in reads {
+            self.vreg_read_done[r as usize] = self.vreg_read_done[r as usize].max(complete);
+        }
+        st.fu_busy[fu.index()] += ex_cycles;
+        let frontier_was = self.last_complete;
+        self.last_complete = self.last_complete.max(complete);
+        self.attribute(insn, self.last_complete - frontier_was);
+    }
+
+    fn attribute(&mut self, insn: &Insn, delta: u64) {
+        if delta == 0 {
+            return;
+        }
+        match *insn {
+            Insn::Vsam { .. } | Insn::Vsac { .. } => self.breakdown.chain += delta,
+            Insn::Vle { .. } | Insn::Vsald { .. } => self.breakdown.load += delta,
+            Insn::Vse { .. } => self.breakdown.store += delta,
+            Insn::Vmacc { .. }
+            | Insn::Vmul { .. }
+            | Insn::Vadd { .. }
+            | Insn::Vsub { .. }
+            | Insn::Vmax { .. }
+            | Insn::Vmin { .. }
+            | Insn::Vsra { .. }
+            | Insn::Vmv { .. } => self.breakdown.alu += delta,
+            Insn::Vsacfg { zimm, .. } => {
+                // Classified against the pre-apply precision, like the
+                // simulator (schedule runs before the config latches).
+                if Insn::unpack_cfg(zimm).is_some_and(|(p, _, _)| p != self.ctrl.prec) {
+                    self.breakdown.prec_switch += delta;
+                } else {
+                    self.breakdown.scalar += delta;
+                }
+            }
+            Insn::Addi { .. } | Insn::Vsetvli { .. } | Insn::VsacfgDim { .. } => {
+                self.breakdown.scalar += delta;
+            }
+        }
+    }
+
+    /// (FU, EX cycles, memory-port bytes) under the current control state
+    /// — `Processor::cost_of` with the plan always installed.
+    fn cost_of(&self, insn: &Insn) -> (Fu, u64, u64) {
+        let bw = self.cfg.mem_bw_bytes_per_cycle as u64;
+        let lat = self.cfg.mem_latency as u64;
+        match *insn {
+            Insn::Addi { .. } | Insn::Vsetvli { .. } | Insn::Vsacfg { .. }
+            | Insn::VsacfgDim { .. } => (Fu::Scalar, 1, 0),
+            Insn::Vle { eew, .. } => {
+                let bytes = self.ctrl.vl as u64 * (eew as u64 / 8);
+                (Fu::Vldu, lat + bytes.div_ceil(bw).max(1), bytes)
+            }
+            Insn::Vsald { width, .. } => {
+                let prec = match width {
+                    WidthSel::FromCfg => self.ctrl.prec,
+                    WidthSel::Explicit(p) => p,
+                };
+                let bytes = prec.bytes_for(self.ctrl.vl as u64);
+                (Fu::Vldu, lat + bytes.div_ceil(bw).max(1), bytes)
+            }
+            Insn::Vse { rs1, .. } => {
+                let addr = self.xreg(rs1) as u64;
+                let bytes = if !self.plan.is_partial_addr(addr) {
+                    self.plan.desc.output_row_elems() * 4
+                } else {
+                    self.ctrl.vl as u64 * (self.ctrl.sew as u64 / 8)
+                };
+                (Fu::Vsu, bytes.div_ceil(bw).max(1), bytes)
+            }
+            Insn::Vmacc { .. }
+            | Insn::Vmul { .. }
+            | Insn::Vadd { .. }
+            | Insn::Vsub { .. }
+            | Insn::Vmax { .. }
+            | Insn::Vmin { .. }
+            | Insn::Vsra { .. } => {
+                let per_cycle = self.cfg.lanes as u64 * (64 / self.ctrl.sew as u64).max(1);
+                (Fu::Valu, 2 + (self.ctrl.vl as u64).div_ceil(per_cycle), 0)
+            }
+            Insn::Vmv { .. } => (Fu::Valu, 1, 0),
+            Insn::Vsam { stages, .. } | Insn::Vsac { stages, .. } => {
+                (Fu::Mptu, PIPE_FILL + stages as u64, 0)
+            }
+        }
+    }
+
+    /// The timing-visible architectural effects of one instruction:
+    /// scalar registers, control latching, traffic accounting, the MPTU
+    /// stage cursor. VRF bytes and MAC numerics are deliberately absent —
+    /// they never feed back into the scoreboard.
+    fn effects(&mut self, insn: &Insn, st: &mut SimStats) {
+        match *insn {
+            Insn::Addi { rd, rs1, imm } => {
+                if rd != 0 {
+                    self.xregs[rd as usize] = self.xreg(rs1) + imm as i64;
+                }
+            }
+            Insn::Vsetvli { .. } | Insn::Vsacfg { .. } | Insn::VsacfgDim { .. } => {
+                let regs = self.xregs;
+                self.ctrl.apply(insn, |r| if r == 0 { 0 } else { regs[r as usize] });
+            }
+            Insn::Vle { rs1, eew, .. } => {
+                let addr = self.xreg(rs1) as u64;
+                let total = self.ctrl.vl as u64 * (eew as u64 / 8);
+                let class = self.classify_load(addr);
+                self.traffic.add_read(class, total);
+            }
+            Insn::Vsald { rs1, width, .. } => {
+                let prec = match width {
+                    WidthSel::FromCfg => self.ctrl.prec,
+                    WidthSel::Explicit(p) => p,
+                };
+                let addr = self.xreg(rs1) as u64;
+                let total = prec.bytes_for(self.ctrl.vl as u64);
+                let class = self.classify_load(addr);
+                self.traffic.add_read(class, total);
+            }
+            Insn::Vse { rs1, .. } => {
+                let addr = self.xreg(rs1) as u64;
+                if self.plan.is_partial_addr(addr) {
+                    let bytes = (self.ctrl.vl as u64 * 4).max(4);
+                    self.traffic.add_write(TrafficClass::Partial, bytes);
+                } else {
+                    let bytes = self.plan.desc.output_row_elems() * 4;
+                    self.traffic.add_write(TrafficClass::Output, bytes);
+                }
+            }
+            Insn::Vsam { stages, .. } | Insn::Vsac { stages, .. } => {
+                let slots = self.cfg.peak_macs_per_cycle(self.plan.desc.prec);
+                st.mac_slots += stages as u64 * slots;
+                let total = self.plan.total_stages.max(1);
+                let before = (self.plan.desc.total_macs() as u128 * self.stage_cursor as u128
+                    / total as u128) as u64;
+                self.stage_cursor = (self.stage_cursor + stages as u64).min(total);
+                let after = (self.plan.desc.total_macs() as u128 * self.stage_cursor as u128
+                    / total as u128) as u64;
+                st.macs += after - before;
+            }
+            // Vector-ALU results live only in the VRF: no timing effect.
+            Insn::Vmv { .. }
+            | Insn::Vadd { .. }
+            | Insn::Vsub { .. }
+            | Insn::Vmul { .. }
+            | Insn::Vmax { .. }
+            | Insn::Vmin { .. }
+            | Insn::Vsra { .. }
+            | Insn::Vmacc { .. } => {}
+        }
+    }
+
+    fn classify_load(&self, addr: u64) -> TrafficClass {
+        let p = &self.plan;
+        if p.is_partial_addr(addr) {
+            TrafficClass::Partial
+        } else if addr >= p.w_addr && p.w_addr > p.in_addr {
+            TrafficClass::Weight
+        } else {
+            // Inside the input region, or an unplaced address: inputs —
+            // the same default the simulator uses.
+            TrafficClass::Input
+        }
+    }
+}
+
+/// Statically predict the full execution profile of `op` compiled under
+/// `choice` — without constructing a processor or touching memory.
+///
+/// The prediction is exact: it equals the `SimStats` and
+/// [`CycleBreakdown`] a quiesced engine reports for the same program
+/// (either exec mode — they agree by the parity contract).
+pub fn cost_op(
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    choice: MappingChoice,
+) -> Result<StaticCost, SpeedError> {
+    op.validate()?;
+    let (layout, _) = MemLayout::place(op);
+    let summary = compiler::summarize_op_with(op, cfg, choice, &layout)?;
+    let plan = OpPlan {
+        desc: *op,
+        strat: choice.strat,
+        in_addr: layout.in_addr,
+        w_addr: layout.w_addr,
+        out_addr: layout.out_addr,
+        partial_addr: layout.partial_addr,
+        total_stages: summary.total_stages.max(1),
+        functional: false,
+    };
+    let mut model = CostModel::new(*cfg, plan);
+    compiler::stream_op_with(op, cfg, choice, &layout, &mut |seg| {
+        model.run_segment(&seg.insns);
+        Ok(())
+    })?;
+    Ok(model.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::engine::Engine;
+    use crate::isa::StrategyKind;
+
+    fn predicted_vs_simulated(op: &OpDesc, choice: MappingChoice) {
+        let cfg = SpeedConfig::builder().lanes(4).tile(2, 2).build().unwrap();
+        let predicted = cost_op(op, &cfg, choice).unwrap();
+        let mut engine = Engine::new(cfg).unwrap();
+        let (stats, _) = engine.run_op_with(op, choice, false).unwrap();
+        assert_eq!(predicted.stats, stats, "{op:?} {choice:?}");
+        assert_eq!(predicted.breakdown, engine.breakdown(), "{op:?} {choice:?}");
+        assert_eq!(predicted.breakdown.total(), predicted.stats.cycles);
+    }
+
+    #[test]
+    fn static_cost_matches_simulation_across_kinds() {
+        let cases = [
+            (OpDesc::mm(12, 48, 10, Precision::Int8), StrategyKind::Mm),
+            (OpDesc::pwcv(16, 16, 8, 8, Precision::Int4), StrategyKind::Cf),
+            (OpDesc::dwcv(8, 9, 9, 3, 2, 1, Precision::Int8), StrategyKind::Ff),
+            (OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int16), StrategyKind::Ffcs),
+        ];
+        for (op, strat) in cases {
+            predicted_vs_simulated(&op, MappingChoice::of(strat));
+        }
+    }
+
+    #[test]
+    fn static_cost_matches_simulation_on_spilled_schedule() {
+        // Large FFCS conv: forces partial-sum spill/reload traffic, the
+        // hardest path (partial-region stores cost differently).
+        let op = OpDesc::conv(8, 64, 40, 40, 3, 1, 1, Precision::Int8);
+        predicted_vs_simulated(&op, MappingChoice::of(StrategyKind::Ffcs));
+    }
+
+    #[test]
+    fn cost_tuple_orders_by_cycles_then_traffic() {
+        let a = StaticCost {
+            stats: SimStats { cycles: 10, ..Default::default() },
+            breakdown: CycleBreakdown::default(),
+        };
+        assert_eq!(a.cost(), (10, 0));
+    }
+}

@@ -1,0 +1,711 @@
+//! Liveness and performance lints over compiled instruction streams.
+//!
+//! Where the verifier ([`crate::analysis::verify_segments`]) proves a
+//! stream *legal* (violations are errors that stop execution), the linter
+//! flags streams that are legal but *wasteful*: work the processor will
+//! happily pay for that a better schedule would not emit. Findings are
+//! warnings, reported through a [`LintReport`] that never folds into an
+//! error — the severity contract with [`crate::analysis::VerifyReport`].
+//!
+//! ## Rules
+//!
+//! | ID          | Finding                                                  |
+//! |-------------|----------------------------------------------------------|
+//! | `L-DEAD-01` | vector-ALU/VMV result overwritten before any read        |
+//! | `L-LOAD-01` | reload of data a live vector register already holds      |
+//! | `L-CFG-01`  | config re-latch that changes nothing / precision thrash  |
+//! | `L-RUN-01`  | adjacent same-pattern runs a single batch run could cover|
+//! | `L-VRF-01`  | register footprint near the 32-entry VRF budget          |
+//!
+//! ## Soundness against the operator compiler
+//!
+//! Every rule is designed to be *provably silent* on the compiler's own
+//! output (the `clean` tier-2 test sweeps the whole zoo), which is what
+//! makes a finding actionable rather than noise:
+//!
+//! * `L-DEAD-01` deliberately excludes loads. A `VSALD`/`VLE` destination
+//!   is a partition *handle*, not a value container: multi-chunk loads
+//!   rotate a small register window while the data accumulates in the
+//!   MPTU partition, so "overwritten before read" is normal for loads
+//!   (the same reason the verifier's dead-load rule only fires at stream
+//!   end). Vector-ALU and `VMV` results, by contrast, live in the named
+//!   register — and the compiler emits none, so clean streams cannot fire.
+//! * `L-LOAD-01` requires a statically known address identical to what
+//!   the same register already holds, and its tracking table is cleared
+//!   by tensor ops (which consume the partition) and stores (which may
+//!   alias the loaded region). Compiled split loads strictly advance
+//!   their addresses, so clean streams cannot fire.
+//! * `L-CFG-01` needs a *previously latched* state to call a re-latch
+//!   redundant; the compiler emits exactly one `VSACFG` per stream and
+//!   dedups `VSETVLI` on the emitter's `cur_vl`, which survives segment
+//!   cuts.
+//! * `L-RUN-01` fires only when the concatenated bodies of two adjacent
+//!   runs would still validate as one batch run; the emitter only closes
+//!   a run when the pattern key changes or the segment cuts, so compiled
+//!   metadata is already maximal.
+//! * `L-VRF-01` fires at ≥ [`VRF_PRESSURE_REGS`] distinct registers; the
+//!   compiler's fixed allocation touches eight.
+
+use std::fmt;
+
+use crate::compiler::{self, MemLayout};
+use crate::config::{Precision, SpeedConfig};
+use crate::dataflow::MappingChoice;
+use crate::error::SpeedError;
+use crate::isa::{Insn, LdMode, RunKind, Segment, StrategyKind, WidthSel};
+use crate::models::ops::OpDesc;
+
+use super::verify::{valid_load_pairs, valid_store_pairs};
+
+/// Findings kept per report; further findings only bump the counts.
+pub const MAX_FINDINGS: usize = 256;
+
+/// Distinct-register threshold for `L-VRF-01` (of the 32 architectural
+/// vector registers).
+pub const VRF_PRESSURE_REGS: u32 = 28;
+
+/// Stable lint-rule identifiers. Warning-severity counterparts to the
+/// verifier's [`crate::analysis::Rule`]s: `L-*` findings never stop a
+/// program from running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LintRule {
+    /// `L-DEAD-01`: a vector-ALU/`VMV` result is overwritten before any
+    /// instruction reads it — the defining instruction was wasted work.
+    DeadDef,
+    /// `L-LOAD-01`: a load transfers data the destination register
+    /// provably still holds (same address, same shape, no intervening
+    /// write/consume) — the reload pays memory latency for nothing.
+    RedundantLoad,
+    /// `L-CFG-01`: a configuration instruction re-latches the exact
+    /// current state, or switches precision straight back without any
+    /// tensor work in between.
+    RedundantCfg,
+    /// `L-RUN-01`: two adjacent stream runs of the same pattern would
+    /// validate as a single batch run — the split costs the simulator's
+    /// per-run dispatch and the ≥ 1-cycle run clamp.
+    CoalescableRuns,
+    /// `L-VRF-01`: the stream's register footprint is within a few
+    /// registers of the 32-entry budget; one more live value forces a
+    /// spill (estimated cost attached to the finding).
+    VrfPressure,
+}
+
+impl LintRule {
+    /// All rules, in stable report order.
+    pub const ALL: [LintRule; 5] = [
+        LintRule::DeadDef,
+        LintRule::RedundantLoad,
+        LintRule::RedundantCfg,
+        LintRule::CoalescableRuns,
+        LintRule::VrfPressure,
+    ];
+
+    /// Stable rule identifier (reports, JSON, CI greps).
+    pub fn id(self) -> &'static str {
+        match self {
+            LintRule::DeadDef => "L-DEAD-01",
+            LintRule::RedundantLoad => "L-LOAD-01",
+            LintRule::RedundantCfg => "L-CFG-01",
+            LintRule::CoalescableRuns => "L-RUN-01",
+            LintRule::VrfPressure => "L-VRF-01",
+        }
+    }
+
+    /// One-line description of what the rule flags.
+    pub fn summary(self) -> &'static str {
+        match self {
+            LintRule::DeadDef => "vector result overwritten before any read",
+            LintRule::RedundantLoad => "reload of data the register already holds",
+            LintRule::RedundantCfg => "configuration re-latch that changes nothing",
+            LintRule::CoalescableRuns => "adjacent runs coalescable into one batch run",
+            LintRule::VrfPressure => "register footprint near the VRF budget",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|r| *r == self).expect("rule in ALL")
+    }
+}
+
+impl fmt::Display for LintRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+/// One lint finding, located at `(segment, index)` like the verifier's
+/// diagnostics.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// The rule that fired.
+    pub rule: LintRule,
+    /// Segment index within the compiled stream.
+    pub segment: usize,
+    /// Instruction index within the segment (for `L-VRF-01`, the last
+    /// instruction of the stream).
+    pub index: usize,
+    /// Human-readable explanation with the concrete values involved.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] seg {} insn {}: {}",
+            self.rule.id(),
+            self.segment,
+            self.index,
+            self.message
+        )
+    }
+}
+
+/// The linter's result: warning-level findings plus per-rule counts.
+/// Unlike [`crate::analysis::VerifyReport`] there is no conversion to an
+/// error — a dirty report is advice, not a gate.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// Findings in stream order (capped at [`MAX_FINDINGS`]).
+    pub findings: Vec<Finding>,
+    /// Per-rule firing counts, indexed like [`LintRule::ALL`] (counted
+    /// even past the finding cap).
+    pub rule_counts: [u64; LintRule::ALL.len()],
+    /// Instructions inspected.
+    pub insns: u64,
+    /// Segments inspected.
+    pub segments: usize,
+    /// Whether findings were dropped at the cap.
+    pub truncated: bool,
+}
+
+impl LintReport {
+    /// True when no rule fired.
+    pub fn is_clean(&self) -> bool {
+        self.rule_counts.iter().all(|&c| c == 0)
+    }
+
+    /// Total findings across all rules (including any past the cap).
+    pub fn total_warnings(&self) -> u64 {
+        self.rule_counts.iter().sum()
+    }
+
+    /// Firing count of one rule.
+    pub fn count(&self, rule: LintRule) -> u64 {
+        self.rule_counts[rule.index()]
+    }
+
+    /// Whether one rule fired at all.
+    pub fn fired(&self, rule: LintRule) -> bool {
+        self.count(rule) > 0
+    }
+}
+
+/// What a vector register currently holds, as far as the linter can
+/// prove.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RegVal {
+    /// Nothing tracked (initial, or invalidated).
+    Unknown,
+    /// A vector-ALU/`VMV` result defined at `(segment, index)`, not yet
+    /// read. True register semantics: safe to call dead on overwrite.
+    UnreadDef { segment: usize, index: usize },
+    /// A read (consumed) ALU/`VMV` result — overwriting it is fine.
+    ReadDef,
+    /// Data established by a load at a known address/shape (for
+    /// `L-LOAD-01`); partition-handle semantics, never declared dead.
+    Loaded(LoadKey),
+}
+
+/// Identity of a load's transfer: same key ⇒ byte-identical transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LoadKey {
+    /// `VSALD` with resolved precision and mode.
+    Sald { addr: u64, vl: u32, prec: Precision, mode: LdMode },
+    /// Official `VLE` at an element width.
+    Vle { addr: u64, vl: u32, eew: u32 },
+}
+
+/// Abstract interpreter for the lint pass. State persists across
+/// segments (like the verifier's): the emitter's dedup state does too.
+struct Linter {
+    cfg: SpeedConfig,
+    report: LintReport,
+    seg: usize,
+    /// Known scalar registers (`x0` fixed at 0); `None` = unknown.
+    xregs: [Option<i64>; 32],
+    regs: [RegVal; 32],
+    touched: [bool; 32],
+    latched: Option<(Precision, u32, StrategyKind)>,
+    /// Precision latched before the current one (for thrash detection).
+    prev_prec: Option<Precision>,
+    /// Tensor op seen since the last precision switch?
+    tensor_since_switch: bool,
+    vl: Option<u32>,
+    sew: u32,
+    /// Location of the last instruction seen (anchor for `L-VRF-01`).
+    last_loc: (usize, usize),
+}
+
+impl Linter {
+    fn new(cfg: &SpeedConfig) -> Self {
+        let mut xregs = [None; 32];
+        xregs[0] = Some(0);
+        Linter {
+            cfg: *cfg,
+            report: LintReport::default(),
+            seg: 0,
+            xregs,
+            regs: [RegVal::Unknown; 32],
+            touched: [false; 32],
+            latched: None,
+            prev_prec: None,
+            tensor_since_switch: true,
+            vl: None,
+            sew: 8,
+            last_loc: (0, 0),
+        }
+    }
+
+    fn emit(&mut self, rule: LintRule, segment: usize, index: usize, message: String) {
+        self.report.rule_counts[rule.index()] += 1;
+        if self.report.findings.len() >= MAX_FINDINGS {
+            self.report.truncated = true;
+            return;
+        }
+        self.report.findings.push(Finding { rule, segment, index, message });
+    }
+
+    fn xreg(&self, r: u8) -> Option<i64> {
+        if r == 0 {
+            Some(0)
+        } else {
+            self.xregs[r as usize]
+        }
+    }
+
+    /// Invalidate the `L-LOAD-01` tracking table: tensor ops consume the
+    /// partition, stores may alias the loaded region.
+    fn clear_loads(&mut self) {
+        for r in self.regs.iter_mut() {
+            if matches!(r, RegVal::Loaded(_)) {
+                *r = RegVal::Unknown;
+            }
+        }
+    }
+
+    /// Record a write to `vd`, firing `L-DEAD-01` when it kills an
+    /// unread ALU/`VMV` result, then installing `val`.
+    fn write_reg(&mut self, vd: u8, val: RegVal, at: (usize, usize)) {
+        if let RegVal::UnreadDef { segment, index } = self.regs[vd as usize] {
+            self.emit(
+                LintRule::DeadDef,
+                at.0,
+                at.1,
+                format!(
+                    "overwrites v{vd} whose result (defined at seg {segment} insn {index}) \
+                     was never read — the defining instruction is dead work"
+                ),
+            );
+        }
+        self.regs[vd as usize] = val;
+    }
+
+    fn step(&mut self, insn: &Insn, idx: usize) {
+        self.report.insns += 1;
+        let at = (self.seg, idx);
+        self.last_loc = at;
+        for r in insn.vregs_read().iter().chain(insn.vregs_written().iter()) {
+            self.touched[*r as usize] = true;
+        }
+        // Reads first (an instruction may read the register it writes).
+        for r in insn.vregs_read().iter() {
+            if matches!(self.regs[*r as usize], RegVal::UnreadDef { .. }) {
+                self.regs[*r as usize] = RegVal::ReadDef;
+            }
+        }
+        match *insn {
+            Insn::Addi { rd, rs1, imm } => {
+                if rd != 0 {
+                    self.xregs[rd as usize] = self.xreg(rs1).map(|v| v + imm as i64);
+                }
+            }
+            Insn::Vsetvli { rs1, vtype, .. } => {
+                let new_vl = if rs1 == 0 { self.vl } else { self.xreg(rs1).map(|v| v as u32) };
+                let same_vl = rs1 == 0 || (new_vl.is_some() && new_vl == self.vl);
+                if vtype.sew == self.sew && same_vl && self.vl.is_some() {
+                    self.emit(
+                        LintRule::RedundantCfg,
+                        at.0,
+                        at.1,
+                        format!(
+                            "VSETVLI re-latches the active vl={}/sew={} unchanged",
+                            self.vl.unwrap_or(0),
+                            self.sew
+                        ),
+                    );
+                }
+                self.sew = vtype.sew;
+                if rs1 != 0 {
+                    self.vl = new_vl;
+                }
+            }
+            Insn::Vsacfg { zimm, .. } => {
+                if let Some((prec, ksize, strat)) = Insn::unpack_cfg(zimm) {
+                    if let Some((lp, lk, ls)) = self.latched {
+                        let eff_ksize = if ksize > 0 { ksize } else { lk };
+                        if prec == lp && eff_ksize == lk && strat == ls {
+                            self.emit(
+                                LintRule::RedundantCfg,
+                                at.0,
+                                at.1,
+                                format!(
+                                    "VSACFG re-latches the active \
+                                     ({lp:?}, ksize={lk}, {ls:?}) unchanged"
+                                ),
+                            );
+                        } else if prec != lp {
+                            if self.prev_prec == Some(prec) && !self.tensor_since_switch {
+                                self.emit(
+                                    LintRule::RedundantCfg,
+                                    at.0,
+                                    at.1,
+                                    format!(
+                                        "precision thrash: switches back to {prec:?} with \
+                                         no tensor work at {lp:?} in between"
+                                    ),
+                                );
+                            }
+                            self.prev_prec = Some(lp);
+                            self.tensor_since_switch = false;
+                        }
+                        self.latched = Some((prec, eff_ksize, strat));
+                    } else {
+                        self.latched = Some((prec, ksize.max(1), strat));
+                    }
+                }
+            }
+            Insn::VsacfgDim { .. } => {}
+            Insn::Vle { vd, rs1, eew } => {
+                let key = match (self.xreg(rs1), self.vl) {
+                    (Some(addr), Some(vl)) => {
+                        Some(LoadKey::Vle { addr: addr as u64, vl, eew })
+                    }
+                    _ => None,
+                };
+                self.check_reload(vd, key, at);
+            }
+            Insn::Vsald { vd, rs1, mode, width } => {
+                let prec = match width {
+                    WidthSel::FromCfg => self.latched.map(|(p, _, _)| p),
+                    WidthSel::Explicit(p) => Some(p),
+                };
+                let key = match (self.xreg(rs1), self.vl, prec) {
+                    (Some(addr), Some(vl), Some(prec)) => {
+                        Some(LoadKey::Sald { addr: addr as u64, vl, prec, mode })
+                    }
+                    _ => None,
+                };
+                self.check_reload(vd, key, at);
+            }
+            Insn::Vse { .. } => {
+                // A store may overwrite the bytes a tracked load fetched.
+                self.clear_loads();
+            }
+            Insn::Vsam { vd, .. } | Insn::Vsac { vd, .. } => {
+                // The MPTU consumes the whole partition and redefines the
+                // output handle; drop the reload table.
+                self.clear_loads();
+                self.write_reg(vd, RegVal::Unknown, at);
+            }
+            Insn::Vmv { vd, .. }
+            | Insn::Vadd { vd, .. }
+            | Insn::Vsub { vd, .. }
+            | Insn::Vmul { vd, .. }
+            | Insn::Vmax { vd, .. }
+            | Insn::Vmin { vd, .. }
+            | Insn::Vsra { vd, .. }
+            | Insn::Vmacc { vd, .. } => {
+                self.write_reg(vd, RegVal::UnreadDef { segment: at.0, index: at.1 }, at);
+            }
+        }
+    }
+
+    fn check_reload(&mut self, vd: u8, key: Option<LoadKey>, at: (usize, usize)) {
+        if let (Some(k), RegVal::Loaded(prev)) = (key, self.regs[vd as usize]) {
+            if k == prev {
+                let (addr, bytes) = match k {
+                    LoadKey::Sald { addr, vl, prec, .. } => (addr, prec.bytes_for(vl as u64)),
+                    LoadKey::Vle { addr, vl, eew } => (addr, vl as u64 * (eew as u64 / 8)),
+                };
+                let bw = self.cfg.mem_bw_bytes_per_cycle as u64;
+                let cost = self.cfg.mem_latency as u64 + bytes.div_ceil(bw).max(1);
+                self.emit(
+                    LintRule::RedundantLoad,
+                    at.0,
+                    at.1,
+                    format!(
+                        "v{vd} already holds the {bytes} B at {addr:#x}; the reload \
+                         costs ~{cost} cycles for nothing"
+                    ),
+                );
+            }
+        }
+        self.write_reg(vd, key.map_or(RegVal::Unknown, RegVal::Loaded), at);
+    }
+
+    /// `L-RUN-01`: adjacent same-kind runs whose concatenated body still
+    /// validates as a single batch run.
+    fn check_adjacent_runs(&mut self, seg: &Segment) {
+        for w in seg.runs.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if a.start + a.len != b.start || a.kind != b.kind {
+                continue;
+            }
+            let lo = a.start as usize;
+            let hi = (b.start + b.len) as usize;
+            if hi > seg.insns.len() {
+                continue;
+            }
+            let body = &seg.insns[lo..hi];
+            let merged_valid = match a.kind {
+                RunKind::Tensor => body.iter().all(|i| *i == body[0]),
+                RunKind::Load => body.len() % 2 == 0 && valid_load_pairs(body),
+                RunKind::Store => body.len() % 2 == 0 && valid_store_pairs(body),
+            };
+            if merged_valid {
+                self.emit(
+                    LintRule::CoalescableRuns,
+                    self.seg,
+                    lo,
+                    format!(
+                        "{:?} runs [{lo}, {}) and [{}, {hi}) are adjacent and \
+                         pattern-compatible: one run would dispatch them in a single \
+                         batch advance",
+                        a.kind,
+                        (a.start + a.len) as usize,
+                        b.start as usize,
+                    ),
+                );
+            }
+        }
+    }
+
+    fn check_segment(&mut self, seg: &Segment) {
+        self.check_adjacent_runs(seg);
+        for (idx, insn) in seg.insns.iter().enumerate() {
+            self.step(insn, idx);
+        }
+        self.report.segments += 1;
+        self.seg += 1;
+    }
+
+    fn finish(mut self) -> LintReport {
+        let used = self.touched.iter().filter(|&&b| b).count() as u32;
+        if used >= VRF_PRESSURE_REGS {
+            let bytes = self.cfg.lanes as u64 * (self.cfg.vrf_bytes() as u64 / 32);
+            let bw = self.cfg.mem_bw_bytes_per_cycle as u64;
+            let spill = bytes.div_ceil(bw).max(1)
+                + self.cfg.mem_latency as u64
+                + bytes.div_ceil(bw).max(1);
+            let at = self.last_loc;
+            self.emit(
+                LintRule::VrfPressure,
+                at.0,
+                at.1,
+                format!(
+                    "stream touches {used} of 32 vector registers; one more live \
+                     value spills ~{bytes} B (≈{spill} cycles per spill/reload \
+                     round-trip)"
+                ),
+            );
+        }
+        self.report
+    }
+}
+
+/// Lint a compiled stream. Purely structural — works on any segment
+/// sequence (no operator context needed), which is what the engine's
+/// [`crate::engine::Engine::set_lint_on_compile`] hook and the mutation
+/// tests use.
+pub fn lint_segments(cfg: &SpeedConfig, segments: &[Segment]) -> LintReport {
+    let mut l = Linter::new(cfg);
+    for seg in segments {
+        l.check_segment(seg);
+    }
+    l.finish()
+}
+
+/// Compile `op` under `choice` (streaming — nothing is materialized) and
+/// lint the resulting stream.
+pub fn lint_op(
+    op: &OpDesc,
+    cfg: &SpeedConfig,
+    choice: MappingChoice,
+) -> Result<LintReport, SpeedError> {
+    op.validate()?;
+    let (layout, _) = MemLayout::place(op);
+    let mut l = Linter::new(cfg);
+    compiler::stream_op_with(op, cfg, choice, &layout, &mut |seg| {
+        l.check_segment(&seg);
+        Ok(())
+    })?;
+    Ok(l.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{StreamRun, Vtype};
+
+    fn cfg() -> SpeedConfig {
+        SpeedConfig::builder().lanes(4).tile(2, 2).build().unwrap()
+    }
+
+    fn seg(insns: Vec<Insn>) -> Segment {
+        Segment::new(insns)
+    }
+
+    #[test]
+    fn dead_alu_def_fires_l_dead_01() {
+        // Two VMV splats into v1 with no read in between: the first is dead.
+        let s = seg(vec![
+            Insn::Vmv { vd: 1, rs1: 0 },
+            Insn::Vmv { vd: 1, rs1: 0 },
+        ]);
+        let r = lint_segments(&cfg(), &[s]);
+        assert_eq!(r.count(LintRule::DeadDef), 1);
+        assert!(r.findings[0].message.contains("seg 0 insn 0"));
+    }
+
+    #[test]
+    fn read_def_does_not_fire_l_dead_01() {
+        let s = seg(vec![
+            Insn::Vmv { vd: 1, rs1: 0 },
+            Insn::Vadd { vd: 2, vs1: 1, vs2: 1 }, // reads v1
+            Insn::Vmv { vd: 1, rs1: 0 },          // overwrite after read: fine
+        ]);
+        let r = lint_segments(&cfg(), &[s]);
+        assert_eq!(r.count(LintRule::DeadDef), 0);
+    }
+
+    #[test]
+    fn identical_reload_fires_l_load_01() {
+        let cfg = cfg();
+        let ld = |vd| Insn::Vsald { vd, rs1: 29, mode: LdMode::Broadcast, width: WidthSel::FromCfg };
+        let s = seg(vec![
+            Insn::Vsacfg { rd: 0, zimm: Insn::pack_cfg(Precision::Int8, 1, StrategyKind::Mm), uimm: 0 },
+            Insn::Addi { rd: 30, rs1: 0, imm: 16 },
+            Insn::Vsetvli { rd: 0, rs1: 30, vtype: Vtype::new(8) },
+            Insn::Addi { rd: 29, rs1: 0, imm: 256 },
+            ld(2),
+            Insn::Addi { rd: 29, rs1: 0, imm: 256 },
+            ld(2), // same register, same address, same shape: redundant
+        ]);
+        let r = lint_segments(&cfg, &[s]);
+        assert_eq!(r.count(LintRule::RedundantLoad), 1);
+        assert!(r.findings[0].message.contains("0x100"));
+    }
+
+    #[test]
+    fn reload_after_tensor_op_is_not_redundant() {
+        let cfg = cfg();
+        let ld = |vd| Insn::Vsald { vd, rs1: 29, mode: LdMode::Broadcast, width: WidthSel::FromCfg };
+        let s = seg(vec![
+            Insn::Vsacfg { rd: 0, zimm: Insn::pack_cfg(Precision::Int8, 1, StrategyKind::Mm), uimm: 0 },
+            Insn::Addi { rd: 30, rs1: 0, imm: 16 },
+            Insn::Vsetvli { rd: 0, rs1: 30, vtype: Vtype::new(8) },
+            Insn::Addi { rd: 29, rs1: 0, imm: 256 },
+            ld(2),
+            Insn::Vsam { vd: 8, vs1: 2, vs2: 4, stages: 4 }, // consumes the partition
+            Insn::Addi { rd: 29, rs1: 0, imm: 256 },
+            ld(2),
+        ]);
+        let r = lint_segments(&cfg, &[s]);
+        assert_eq!(r.count(LintRule::RedundantLoad), 0);
+    }
+
+    #[test]
+    fn identical_vsacfg_relatch_fires_l_cfg_01() {
+        let z = Insn::pack_cfg(Precision::Int4, 3, StrategyKind::Ffcs);
+        let s = seg(vec![
+            Insn::Vsacfg { rd: 0, zimm: z, uimm: 0 },
+            Insn::Vsacfg { rd: 0, zimm: z, uimm: 0 },
+        ]);
+        let r = lint_segments(&cfg(), &[s]);
+        assert_eq!(r.count(LintRule::RedundantCfg), 1);
+        // The first latch of a stream never fires.
+        assert!(r.findings[0].index == 1);
+    }
+
+    #[test]
+    fn precision_thrash_fires_l_cfg_01() {
+        let s = seg(vec![
+            Insn::Vsacfg { rd: 0, zimm: Insn::pack_cfg(Precision::Int8, 1, StrategyKind::Mm), uimm: 0 },
+            Insn::Vsacfg { rd: 0, zimm: Insn::pack_cfg(Precision::Int4, 1, StrategyKind::Mm), uimm: 0 },
+            Insn::Vsacfg { rd: 0, zimm: Insn::pack_cfg(Precision::Int8, 1, StrategyKind::Mm), uimm: 0 },
+        ]);
+        let r = lint_segments(&cfg(), &[s]);
+        assert_eq!(r.count(LintRule::RedundantCfg), 1);
+        assert!(r.findings[0].message.contains("thrash"));
+    }
+
+    #[test]
+    fn adjacent_tensor_runs_fire_l_run_01() {
+        let burst = Insn::Vsam { vd: 8, vs1: 0, vs2: 4, stages: 7 };
+        let mut s = seg(vec![burst; 6]);
+        // Artificially split what the emitter would keep as one run.
+        s.runs = vec![
+            StreamRun { start: 0, len: 3, kind: RunKind::Tensor },
+            StreamRun { start: 3, len: 3, kind: RunKind::Tensor },
+        ];
+        let r = lint_segments(&cfg(), &[s]);
+        assert_eq!(r.count(LintRule::CoalescableRuns), 1);
+    }
+
+    #[test]
+    fn incompatible_adjacent_runs_do_not_fire() {
+        let a = Insn::Vsam { vd: 8, vs1: 0, vs2: 4, stages: 7 };
+        let b = Insn::Vsam { vd: 8, vs1: 0, vs2: 4, stages: 3 }; // different burst
+        let mut s = seg(vec![a, a, a, b, b, b]);
+        s.runs = vec![
+            StreamRun { start: 0, len: 3, kind: RunKind::Tensor },
+            StreamRun { start: 3, len: 3, kind: RunKind::Tensor },
+        ];
+        let r = lint_segments(&cfg(), &[s]);
+        assert_eq!(r.count(LintRule::CoalescableRuns), 0);
+    }
+
+    #[test]
+    fn wide_register_footprint_fires_l_vrf_01() {
+        let insns: Vec<Insn> = (0..VRF_PRESSURE_REGS as u8).map(|v| Insn::Vmv { vd: v, rs1: 0 }).collect();
+        let r = lint_segments(&cfg(), &[seg(insns)]);
+        assert_eq!(r.count(LintRule::VrfPressure), 1);
+        assert!(r.findings.iter().any(|f| f.rule == LintRule::VrfPressure));
+        // Narrow footprints stay quiet.
+        let few: Vec<Insn> = (0..8u8).map(|v| Insn::Vmv { vd: v, rs1: 0 }).collect();
+        assert!(!lint_segments(&cfg(), &[seg(few)]).fired(LintRule::VrfPressure));
+    }
+
+    #[test]
+    fn rule_ids_are_unique_and_stable() {
+        let ids: Vec<&str> = LintRule::ALL.iter().map(|r| r.id()).collect();
+        assert_eq!(ids, ["L-DEAD-01", "L-LOAD-01", "L-CFG-01", "L-RUN-01", "L-VRF-01"]);
+        for r in LintRule::ALL {
+            assert!(r.id().starts_with("L-"));
+            assert!(!r.summary().is_empty());
+        }
+    }
+
+    #[test]
+    fn report_counts_past_the_finding_cap() {
+        let mut insns = Vec::new();
+        for _ in 0..(MAX_FINDINGS + 10) {
+            insns.push(Insn::Vmv { vd: 1, rs1: 0 });
+        }
+        let r = lint_segments(&cfg(), &[seg(insns)]);
+        assert!(r.truncated);
+        assert_eq!(r.findings.len(), MAX_FINDINGS);
+        assert_eq!(r.count(LintRule::DeadDef), (MAX_FINDINGS + 9) as u64);
+    }
+}

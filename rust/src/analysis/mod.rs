@@ -1,1184 +1,40 @@
-//! Static verification of compiled SPEED instruction streams.
+//! Static analysis of compiled SPEED instruction streams: verification,
+//! exact cost prediction, and lints.
 //!
-//! The custom VSA instructions fold dataflow strategy, precision, and
-//! dimension state into latched `VSACFG` control registers (Sec. II-B), so
-//! a bad emitter produces a stream that is *silently wrong* rather than
-//! loudly illegal: the simulator would execute it, charge plausible cycles,
-//! and store garbage. This module is the compile-time line of defense — an
-//! abstract interpreter that walks a [`CompiledOp`]'s segments without
-//! simulating them and proves (or refutes) the invariants every layer above
-//! relies on. It tracks the latched control state (the same machine as
-//! [`crate::sim::ctrl::CtrlState`]), scalar address registers, vector
-//! register definedness, and the memory extent of every transfer against
-//! the operator's [`MemLayout`].
+//! Three passes share this module, all abstract interpreters over
+//! [`CompiledOp`] segments that never touch the simulator:
+//!
+//! * **[`verify`](crate::analysis::verify_segments)** (`V-*` rules, in
+//!   [`Rule`]) proves streams *legal* — configuration, dataflow,
+//!   memory-safety, fast-path, and residency invariants. Violations are
+//!   **errors**: a dirty [`VerifyReport`] folds into
+//!   [`SpeedError::Verify`](crate::error::SpeedError::Verify) and the
+//!   program never runs.
+//! * **[`cost`]** proves what a legal stream *costs*: replaying the
+//!   scoreboard's monotone frontier recurrence yields a
+//!   [`SimStats`](crate::sim::SimStats) and
+//!   [`CycleBreakdown`](crate::obs::CycleBreakdown) bit-identical to
+//!   simulating the program — the auto-tuner uses it to rank candidates
+//!   without paying for their simulations.
+//! * **[`lint`]** (`L-*` rules, in [`lint::LintRule`]) flags streams that
+//!   are legal but *wasteful* — dead defs, redundant reloads and config
+//!   re-latches, split batch runs, register pressure. Findings are
+//!   **warnings**: a dirty [`lint::LintReport`] is advice and never stops
+//!   execution.
+//!
+//! The severity contract is deliberate: anything that could make results
+//! wrong is a `V-*` error; anything that only makes them slow is an `L-*`
+//! warning. Both report types carry stable rule IDs, per-rule counts, and
+//! `(segment, index)` locations so CI can grep them (`repro verify`,
+//! `repro lint`).
 //!
 //! [`CompiledOp`]: crate::compiler::CompiledOp
-//!
-//! # Rule families
-//!
-//! | ID | Checks |
-//! |----------|--------------------------------------------------------|
-//! | V-CFG-01 | custom load/compute before any `VSACFG` latch          |
-//! | V-CFG-02 | latched precision/strategy/ksize/dim contradicts the op |
-//! | V-CFG-03 | tensor op uses a dimension register never latched       |
-//! | V-CFG-04 | memory/compute before `VSETVLI` latches a vector length |
-//! | V-CFG-05 | `VSACFG` encoding invalid (zimm, ksize 0, ksize > 15)   |
-//! | V-REG-01 | vector register read before it was written              |
-//! | V-REG-02 | load destination never consumed (dead write)            |
-//! | V-REG-03 | tensor operand is not the latest load of its class      |
-//! | V-MEM-01 | load not contained in its input/weight region           |
-//! | V-MEM-02 | output store misaligned, out of range, or not a row     |
-//! | V-MEM-03 | partial spill/reload outside the spill region           |
-//! | V-MEM-04 | access outside every region or not statically provable  |
-//! | V-MEM-05 | load image overflows a vector-register region           |
-//! | V-RUN-01 | stream-run metadata malformed (bounds/overlap/order)    |
-//! | V-RUN-02 | tensor run is not a chain of identical bursts           |
-//! | V-RUN-03 | load run is not uniform `(li; vsald/vle)` pairs         |
-//! | V-RUN-04 | store run is not `(li; vse)` pairs                      |
-//! | V-RUN-05 | tensor burst encodes zero stages                        |
-//! | V-RES-01 | FF stream refetches weights (residency was a fiction)   |
-//! | V-RES-02 | stream loads fewer weight elements than the op needs    |
-//!
-//! # Invocation layers
-//!
-//! 1. [`Engine`](crate::engine::Engine) verifies on program-cache insert —
-//!    always in debug builds, behind
-//!    [`set_verify_on_compile`](crate::engine::Engine::set_verify_on_compile)
-//!    in release builds.
-//! 2. The auto-tuner rejects candidates that fail verification before
-//!    paying for a simulation ([`crate::tune::tune_op`]).
-//! 3. The `repro verify` CLI sweeps zoo × precisions × feasible mappings
-//!    and prints a per-rule table.
-//! 4. `tests/verifier.rs` corrupts known-good streams and asserts each
-//!    mutation is caught by the intended rule ID.
-//!
-//! The verifier is deliberately *sound for codegen* rather than complete
-//! for arbitrary hand-written streams: every program
-//! [`crate::compiler::compile_op_with`] can emit must verify clean (a
-//! property test enforces this), and any diagnostic on a compiled stream
-//! is a compiler bug. Two modeling choices keep that property:
-//!
-//! * Tensor operands are *partition handles*, not strict dataflow: the MPTU
-//!   consumes whole VRF partitions, and the `vs1`/`vs2` fields name the
-//!   rotation slot of the most recent load. Under the MM strategy there is
-//!   no weight bank (both A and B tiles rotate through the input slots),
-//!   so only `vs1` is constrained there.
-//! * A load overwritten before a tensor op is *not* dead: multi-chunk
-//!   loads rotate a small register window while the data accumulates in
-//!   the partition. Dead-write detection therefore runs at end of stream:
-//!   a load nothing ever consumed is V-REG-02.
 
-use std::fmt;
+pub mod cost;
+pub mod lint;
+mod verify;
 
-use crate::compiler::MemLayout;
-use crate::config::{Precision, SpeedConfig};
-use crate::dataflow::{vreg_region, MappingChoice};
-use crate::error::SpeedError;
-use crate::isa::{Dim, Insn, LdMode, RunKind, Segment, StrategyKind, WidthSel};
-use crate::models::ops::{OpDesc, OpKind};
-
-/// Maximum diagnostics materialized in a [`VerifyReport`]. Rule *counts*
-/// keep accumulating past the cap (the per-rule table stays truthful);
-/// only the stored diagnostic list is truncated.
-pub const MAX_DIAGNOSTICS: usize = 256;
-
-/// A named verifier rule with a stable ID (see the module-level table).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Rule {
-    /// V-CFG-01: custom load/compute before any `VSACFG` latch.
-    CfgNotLatched,
-    /// V-CFG-02: latched precision/strategy/ksize/dim value contradicts
-    /// the operator or mapping choice the program was compiled for.
-    CfgMismatch,
-    /// V-CFG-03: a tensor op consumes a dimension register never latched.
-    DimUnset,
-    /// V-CFG-04: memory/compute before `VSETVLI` latches a vector length.
-    VlUnset,
-    /// V-CFG-05: invalid `VSACFG` encoding — undecodable zimm, a kernel
-    /// field of 0 (keeps stale state), or a kernel size beyond the 4-bit
-    /// field (must be Kseg-decomposed below 16).
-    CfgEncoding,
-    /// V-REG-01: a vector register is read before anything wrote it.
-    UseBeforeDef,
-    /// V-REG-02: a load destination is never consumed by any tensor,
-    /// compute, or store instruction (dead write).
-    DeadLoad,
-    /// V-REG-03: a tensor operand register is not the destination of the
-    /// most recent load of its class.
-    StaleOperand,
-    /// V-MEM-01: a load access is not contained in its input or weight
-    /// region (or reads the output region).
-    LoadOutOfRegion,
-    /// V-MEM-02: an output store is misaligned, past the last row, not a
-    /// full row, or not 32-bit.
-    StoreNotRow,
-    /// V-MEM-03: a partial spill/reload falls outside the spill region.
-    PartialOutOfRegion,
-    /// V-MEM-04: an access lands outside every region of the layout, or
-    /// its address/length cannot be proven statically.
-    UnprovenAccess,
-    /// V-MEM-05: a load image exceeds the per-lane vector-register region.
-    VrfOverflow,
-    /// V-RUN-01: stream-run metadata is malformed (out of bounds,
-    /// overlapping, or out of order).
-    RunBounds,
-    /// V-RUN-02: a tensor run is not a chain of identical bursts — the
-    /// closed-form fast path would be unsound.
-    TensorRunNotHomogeneous,
-    /// V-RUN-03: a load run is not uniform `(li; vsald/vle)` pairs.
-    LoadRunPairs,
-    /// V-RUN-04: a store run is not `(li; vse)` pairs.
-    StoreRunPairs,
-    /// V-RUN-05: a tensor burst encodes zero stages.
-    ZeroStageTensor,
-    /// V-RES-01: an FF-strategy stream loads more weight elements than the
-    /// operator holds — the "weights fetched exactly once" residency
-    /// contract is a fiction for this stream.
-    WeightRefetch,
-    /// V-RES-02: the stream loads fewer weight elements than the operator
-    /// needs — part of the weight tensor never reaches the datapath.
-    WeightCoverage,
-}
-
-impl Rule {
-    /// Every rule, in table order.
-    pub const ALL: [Rule; 20] = [
-        Rule::CfgNotLatched,
-        Rule::CfgMismatch,
-        Rule::DimUnset,
-        Rule::VlUnset,
-        Rule::CfgEncoding,
-        Rule::UseBeforeDef,
-        Rule::DeadLoad,
-        Rule::StaleOperand,
-        Rule::LoadOutOfRegion,
-        Rule::StoreNotRow,
-        Rule::PartialOutOfRegion,
-        Rule::UnprovenAccess,
-        Rule::VrfOverflow,
-        Rule::RunBounds,
-        Rule::TensorRunNotHomogeneous,
-        Rule::LoadRunPairs,
-        Rule::StoreRunPairs,
-        Rule::ZeroStageTensor,
-        Rule::WeightRefetch,
-        Rule::WeightCoverage,
-    ];
-
-    /// The stable rule identifier (`V-CFG-01` … `V-RES-02`).
-    pub fn id(self) -> &'static str {
-        match self {
-            Rule::CfgNotLatched => "V-CFG-01",
-            Rule::CfgMismatch => "V-CFG-02",
-            Rule::DimUnset => "V-CFG-03",
-            Rule::VlUnset => "V-CFG-04",
-            Rule::CfgEncoding => "V-CFG-05",
-            Rule::UseBeforeDef => "V-REG-01",
-            Rule::DeadLoad => "V-REG-02",
-            Rule::StaleOperand => "V-REG-03",
-            Rule::LoadOutOfRegion => "V-MEM-01",
-            Rule::StoreNotRow => "V-MEM-02",
-            Rule::PartialOutOfRegion => "V-MEM-03",
-            Rule::UnprovenAccess => "V-MEM-04",
-            Rule::VrfOverflow => "V-MEM-05",
-            Rule::RunBounds => "V-RUN-01",
-            Rule::TensorRunNotHomogeneous => "V-RUN-02",
-            Rule::LoadRunPairs => "V-RUN-03",
-            Rule::StoreRunPairs => "V-RUN-04",
-            Rule::ZeroStageTensor => "V-RUN-05",
-            Rule::WeightRefetch => "V-RES-01",
-            Rule::WeightCoverage => "V-RES-02",
-        }
-    }
-
-    /// One-line human description of what the rule proves.
-    pub fn summary(self) -> &'static str {
-        match self {
-            Rule::CfgNotLatched => "custom load/compute before any VSACFG latch",
-            Rule::CfgMismatch => "latched config contradicts the compiled op/choice",
-            Rule::DimUnset => "tensor op uses a dimension register never latched",
-            Rule::VlUnset => "memory/compute before VSETVLI latches a vector length",
-            Rule::CfgEncoding => "invalid VSACFG encoding (zimm / ksize 0 / ksize > 15)",
-            Rule::UseBeforeDef => "vector register read before it was written",
-            Rule::DeadLoad => "load destination never consumed (dead write)",
-            Rule::StaleOperand => "tensor operand is not the latest load of its class",
-            Rule::LoadOutOfRegion => "load not contained in its input/weight region",
-            Rule::StoreNotRow => "output store misaligned, out of range, or not a row",
-            Rule::PartialOutOfRegion => "partial spill/reload outside the spill region",
-            Rule::UnprovenAccess => "access outside every region or not statically provable",
-            Rule::VrfOverflow => "load image overflows a vector-register region",
-            Rule::RunBounds => "stream-run metadata malformed (bounds/overlap/order)",
-            Rule::TensorRunNotHomogeneous => "tensor run is not a chain of identical bursts",
-            Rule::LoadRunPairs => "load run is not uniform (li; vsald/vle) pairs",
-            Rule::StoreRunPairs => "store run is not (li; vse) pairs",
-            Rule::ZeroStageTensor => "tensor burst encodes zero stages",
-            Rule::WeightRefetch => "FF stream refetches weights (residency violated)",
-            Rule::WeightCoverage => "stream loads fewer weight elements than the op needs",
-        }
-    }
-
-    fn index(self) -> usize {
-        Rule::ALL.iter().position(|r| *r == self).expect("rule in ALL")
-    }
-}
-
-impl fmt::Display for Rule {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}", self.id())
-    }
-}
-
-/// One verifier finding: a rule violation at a stream position.
-#[derive(Debug, Clone)]
-pub struct Diagnostic {
-    /// The violated rule.
-    pub rule: Rule,
-    /// Segment index within the compiled program.
-    pub segment: usize,
-    /// Instruction index within the segment (0 for program-level findings).
-    pub index: usize,
-    /// Human-readable detail.
-    pub message: String,
-}
-
-impl fmt::Display for Diagnostic {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(
-            f,
-            "[{}] seg {} insn {}: {}",
-            self.rule.id(),
-            self.segment,
-            self.index,
-            self.message
-        )
-    }
-}
-
-/// Outcome of verifying one compiled program.
-#[derive(Debug, Clone, Default)]
-pub struct VerifyReport {
-    /// Stored diagnostics (at most [`MAX_DIAGNOSTICS`]; counts keep going).
-    pub diagnostics: Vec<Diagnostic>,
-    /// Total violations per rule, indexed like [`Rule::ALL`].
-    pub rule_counts: [u64; Rule::ALL.len()],
-    /// Instructions walked.
-    pub insns: u64,
-    /// Segments walked.
-    pub segments: usize,
-    /// True when diagnostics past [`MAX_DIAGNOSTICS`] were dropped.
-    pub truncated: bool,
-}
-
-impl VerifyReport {
-    /// No rule fired.
-    pub fn is_clean(&self) -> bool {
-        self.total_violations() == 0
-    }
-
-    /// Total violations across all rules (counted, not just stored).
-    pub fn total_violations(&self) -> u64 {
-        self.rule_counts.iter().sum()
-    }
-
-    /// Violation count for one rule.
-    pub fn count(&self, rule: Rule) -> u64 {
-        self.rule_counts[rule.index()]
-    }
-
-    /// Did this specific rule fire?
-    pub fn fired(&self, rule: Rule) -> bool {
-        self.count(rule) > 0
-    }
-
-    /// Fold the report into a typed error: `Ok(())` when clean, otherwise
-    /// a [`SpeedError::Verify`] summarizing the first finding.
-    pub fn into_result(self) -> Result<(), SpeedError> {
-        if self.is_clean() {
-            return Ok(());
-        }
-        let total = self.total_violations();
-        let rules: Vec<&str> = Rule::ALL
-            .iter()
-            .filter(|r| self.fired(**r))
-            .map(|r| r.id())
-            .collect();
-        let first = self
-            .diagnostics
-            .first()
-            .map(|d| d.to_string())
-            .unwrap_or_else(|| "no stored diagnostic".into());
-        Err(SpeedError::Verify(format!(
-            "{total} violation(s) of {rules}; first: {first}",
-            rules = rules.join(", ")
-        )))
-    }
-}
-
-/// Tri-state abstract value for latched scalars (vl, dimension registers).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum AbsVal {
-    /// Never latched.
-    Unset,
-    /// Latched from a value the verifier could not track.
-    Unknown,
-    /// Latched to a statically-known value.
-    Known(u32),
-}
-
-/// Memory region of the operator layout an address falls in.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Region {
-    Input,
-    Weight,
-    Output,
-    Partial,
-    Outside,
-}
-
-/// The abstract interpreter. State persists across segments — the emitter
-/// dedups `VSETVLI` on a `cur_vl` that survives segment cuts, and the
-/// simulator's control state likewise persists between `run_segment`
-/// calls, so per-segment-fresh analysis would be wrong on both counts.
-#[derive(Debug)]
-pub struct Verifier {
-    op: OpDesc,
-    cfg: SpeedConfig,
-    choice: MappingChoice,
-    layout: MemLayout,
-    // ---- abstract machine state ----
-    xregs: [Option<i64>; 32],
-    vreg_defined: [bool; 32],
-    latched: Option<(Precision, u32, StrategyKind)>,
-    dims: [AbsVal; 9],
-    vl: AbsVal,
-    sew: u32,
-    /// Loads not yet consumed: vd -> (segment, index) of the load.
-    pending_loads: [Option<(usize, usize)>; 32],
-    /// vd of the most recent VSALD (any region) — the MM operand slot.
-    last_load_any: Option<u8>,
-    /// vd of the most recent input-region VSALD.
-    last_input_load: Option<u8>,
-    /// vd of the most recent weight-region VSALD.
-    last_weight_load: Option<u8>,
-    /// Total weight elements loaded so far (None once unprovable).
-    weight_elems_loaded: Option<u64>,
-    // ---- reporting ----
-    seg: usize,
-    report: VerifyReport,
-}
-
-impl Verifier {
-    /// Start verifying a program compiled from `op` under `choice` for
-    /// `cfg`, placed at `layout`.
-    pub fn new(op: &OpDesc, cfg: &SpeedConfig, choice: MappingChoice, layout: MemLayout) -> Self {
-        let mut xregs = [None; 32];
-        xregs[0] = Some(0); // x0 is architecturally zero
-        let mut v = Verifier {
-            op: *op,
-            cfg: *cfg,
-            choice,
-            layout,
-            xregs,
-            vreg_defined: [false; 32],
-            latched: None,
-            dims: [AbsVal::Unset; 9],
-            vl: AbsVal::Unset,
-            sew: 8,
-            pending_loads: [None; 32],
-            last_load_any: None,
-            last_input_load: None,
-            last_weight_load: None,
-            weight_elems_loaded: Some(0),
-            seg: 0,
-            report: VerifyReport::default(),
-        };
-        // Program-level precondition: the 4-bit VSACFG kernel field cannot
-        // carry a kernel this large; upstream must Kseg-decompose first.
-        if op.ksize > 15 {
-            v.emit(Rule::CfgEncoding, 0, || {
-                format!(
-                    "operator kernel size {} exceeds the 4-bit VSACFG field; \
-                     Kseg-decompose below 16 before compiling",
-                    op.ksize
-                )
-            });
-        }
-        v
-    }
-
-    fn emit(&mut self, rule: Rule, index: usize, msg: impl FnOnce() -> String) {
-        self.report.rule_counts[rule.index()] += 1;
-        if self.report.diagnostics.len() < MAX_DIAGNOSTICS {
-            self.report.diagnostics.push(Diagnostic {
-                rule,
-                segment: self.seg,
-                index,
-                message: msg(),
-            });
-        } else {
-            self.report.truncated = true;
-        }
-    }
-
-    fn region_of(&self, addr: u64) -> Region {
-        let l = &self.layout;
-        if addr >= l.partial_addr {
-            Region::Partial
-        } else if addr >= l.out_addr {
-            Region::Output
-        } else if addr >= l.w_addr {
-            Region::Weight
-        } else if addr >= l.in_addr {
-            Region::Input
-        } else {
-            Region::Outside
-        }
-    }
-
-    /// The statically-known address in `rs1`, or a V-MEM-04 diagnostic.
-    fn known_addr(&mut self, idx: usize, rs1: u8) -> Option<u64> {
-        match self.xregs[rs1 as usize] {
-            Some(a) if a >= 0 => Some(a as u64),
-            Some(a) => {
-                self.emit(Rule::UnprovenAccess, idx, || {
-                    format!("address in x{rs1} is negative ({a})")
-                });
-                None
-            }
-            None => {
-                self.emit(Rule::UnprovenAccess, idx, || {
-                    format!("address in x{rs1} is not statically known")
-                });
-                None
-            }
-        }
-    }
-
-    /// The statically-known vector length, or a diagnostic (V-CFG-04 when
-    /// never set, V-MEM-04 when set from an untracked scalar).
-    fn known_vl(&mut self, idx: usize, what: &str) -> Option<u32> {
-        match self.vl {
-            AbsVal::Known(n) => Some(n),
-            AbsVal::Unset => {
-                self.emit(Rule::VlUnset, idx, || {
-                    format!("{what} before any VSETVLI latched a vector length")
-                });
-                None
-            }
-            AbsVal::Unknown => {
-                self.emit(Rule::UnprovenAccess, idx, || {
-                    format!("{what} under a vector length that is not statically known")
-                });
-                None
-            }
-        }
-    }
-
-    fn require_cfg(&mut self, idx: usize, what: &str) {
-        if self.latched.is_none() {
-            self.emit(Rule::CfgNotLatched, idx, || {
-                format!("{what} before any VSACFG latched precision/strategy")
-            });
-        }
-    }
-
-    /// The effective operand precision of a VSALD.
-    fn width_prec(&self, width: WidthSel) -> Precision {
-        match width {
-            WidthSel::Explicit(p) => p,
-            WidthSel::FromCfg => self.latched.map(|(p, _, _)| p).unwrap_or(self.op.prec),
-        }
-    }
-
-    fn expected_dim(&self, d: Dim) -> u32 {
-        let op = &self.op;
-        match d {
-            Dim::M => op.m,
-            Dim::K => op.k,
-            Dim::N => op.n,
-            Dim::C => op.c,
-            Dim::F => op.f,
-            Dim::H => op.h,
-            Dim::W => op.w,
-            Dim::Stride => op.stride,
-            Dim::NStages => 0,
-        }
-    }
-
-    fn required_dims(&self) -> &'static [Dim] {
-        match self.op.kind {
-            OpKind::Mm => &[Dim::M, Dim::K, Dim::N],
-            _ => &[Dim::C, Dim::F, Dim::H, Dim::W, Dim::Stride],
-        }
-    }
-
-    /// Bounds-check a load of `bytes` at `addr`; returns the region. The
-    /// one-byte slack for sub-byte precisions absorbs the nibble-packing
-    /// ceiling: `bytes_for(off) + bytes_for(n)` can exceed
-    /// `bytes_for(off + n)` by one when both round up.
-    fn check_load_bounds(&mut self, idx: usize, addr: u64, bytes: u64, prec: Precision) -> Region {
-        let l = self.layout;
-        let op = self.op;
-        let slack = u64::from(prec.bits() < 8);
-        let end = addr + bytes;
-        let region = self.region_of(addr);
-        match region {
-            Region::Input => {
-                let limit = l.in_addr + op.input_bytes() + slack;
-                if end > limit {
-                    self.emit(Rule::LoadOutOfRegion, idx, || {
-                        format!(
-                            "load [{addr:#x}, {end:#x}) overruns the input region \
-                             (ends at {limit:#x})"
-                        )
-                    });
-                }
-            }
-            Region::Weight => {
-                let limit = l.w_addr + op.weight_bytes() + slack;
-                if end > limit {
-                    self.emit(Rule::LoadOutOfRegion, idx, || {
-                        format!(
-                            "load [{addr:#x}, {end:#x}) overruns the weight region \
-                             (ends at {limit:#x})"
-                        )
-                    });
-                }
-            }
-            Region::Output => {
-                self.emit(Rule::LoadOutOfRegion, idx, || {
-                    format!("load at {addr:#x} reads the output region")
-                });
-            }
-            Region::Partial => {
-                let limit = l.partial_addr + op.output_bytes();
-                if end > limit {
-                    self.emit(Rule::PartialOutOfRegion, idx, || {
-                        format!(
-                            "partial reload [{addr:#x}, {end:#x}) overruns the spill \
-                             region (ends at {limit:#x})"
-                        )
-                    });
-                }
-            }
-            Region::Outside => {
-                self.emit(Rule::UnprovenAccess, idx, || {
-                    format!("load at {addr:#x} lies below every region of the layout")
-                });
-            }
-        }
-        region
-    }
-
-    /// Mirror of the simulator's per-lane VRF capacity check
-    /// (`Processor::load_to_vrf`): broadcast images must fit one vector
-    /// register region; sequential images are striped across lanes.
-    fn check_vrf_capacity(&mut self, idx: usize, vd: u8, bytes: u64, broadcast: bool) {
-        let region = vreg_region(&self.cfg) as u64;
-        if broadcast {
-            if bytes > region {
-                self.emit(Rule::VrfOverflow, idx, || {
-                    format!(
-                        "broadcast load of {bytes} B into v{vd} exceeds the \
-                         {region} B vector-register region"
-                    )
-                });
-            }
-        } else {
-            let per_lane = bytes.div_ceil(self.cfg.lanes as u64);
-            if per_lane > region {
-                self.emit(Rule::VrfOverflow, idx, || {
-                    format!(
-                        "sequential load of {bytes} B into v{vd} needs {per_lane} B \
-                         per lane, exceeding the {region} B vector-register region"
-                    )
-                });
-            }
-        }
-    }
-
-    /// A vector register was read by a content-bearing instruction.
-    fn consume_vreg(&mut self, idx: usize, r: u8, what: &str) {
-        if !self.vreg_defined[r as usize] {
-            self.emit(Rule::UseBeforeDef, idx, || {
-                format!("{what} reads v{r} before anything wrote it")
-            });
-        }
-        self.pending_loads[r as usize] = None;
-    }
-
-    /// Verify one segment, advancing the persistent abstract state.
-    pub fn check_segment(&mut self, seg: &Segment) {
-        self.check_runs(seg);
-        for (idx, insn) in seg.insns.iter().enumerate() {
-            self.step(idx, insn);
-        }
-        self.report.insns += seg.insns.len() as u64;
-        self.report.segments += 1;
-        self.seg += 1;
-    }
-
-    fn step(&mut self, idx: usize, insn: &Insn) {
-        match *insn {
-            Insn::Addi { rd, rs1, imm } => {
-                if rd != 0 {
-                    self.xregs[rd as usize] = if rs1 == 0 {
-                        Some(imm as i64)
-                    } else {
-                        self.xregs[rs1 as usize].map(|v| v + imm as i64)
-                    };
-                }
-            }
-            Insn::Vsacfg { zimm, .. } => self.latch_cfg(idx, zimm),
-            Insn::VsacfgDim { rs1, dim, .. } => {
-                let val = match self.xregs[rs1 as usize] {
-                    Some(v) if v >= 0 && v <= u32::MAX as i64 => AbsVal::Known(v as u32),
-                    _ => AbsVal::Unknown,
-                };
-                self.dims[dim.code() as usize] = val;
-                if let AbsVal::Known(v) = val {
-                    let want = self.expected_dim(dim);
-                    if self.required_dims().contains(&dim) && v != want {
-                        self.emit(Rule::CfgMismatch, idx, || {
-                            format!("dimension {dim} latched as {v} but the operator has {want}")
-                        });
-                    }
-                }
-            }
-            Insn::Vsetvli { rs1, vtype, .. } => {
-                self.sew = vtype.sew;
-                if rs1 != 0 {
-                    self.vl = match self.xregs[rs1 as usize] {
-                        Some(v) if v >= 0 && v <= u32::MAX as i64 => AbsVal::Known(v as u32),
-                        _ => AbsVal::Unknown,
-                    };
-                }
-            }
-            Insn::Vsald { vd, rs1, mode, width } => self.step_vsald(idx, vd, rs1, mode, width),
-            Insn::Vle { vd, rs1, eew } => self.step_vle(idx, vd, rs1, eew),
-            Insn::Vse { vs3, rs1, eew } => self.step_vse(idx, vs3, rs1, eew),
-            Insn::Vsam { vd, vs1, vs2, stages } | Insn::Vsac { vd, vs1, vs2, stages } => {
-                self.step_tensor(idx, vd, vs1, vs2, stages)
-            }
-            Insn::Vmacc { .. }
-            | Insn::Vmul { .. }
-            | Insn::Vadd { .. }
-            | Insn::Vsub { .. }
-            | Insn::Vmax { .. }
-            | Insn::Vmin { .. }
-            | Insn::Vsra { .. } => {
-                let _ = self.known_vl(idx, "elementwise vector op");
-                for r in insn.vregs_read() {
-                    self.consume_vreg(idx, r, "elementwise vector op");
-                }
-                for r in insn.vregs_written() {
-                    self.vreg_defined[r as usize] = true;
-                }
-            }
-            Insn::Vmv { vd, .. } => {
-                self.vreg_defined[vd as usize] = true;
-            }
-        }
-    }
-
-    fn latch_cfg(&mut self, idx: usize, zimm: u16) {
-        let Some((prec, ksize, strat)) = Insn::unpack_cfg(zimm) else {
-            self.emit(Rule::CfgEncoding, idx, || {
-                format!("VSACFG zimm {zimm:#06x} does not decode to a precision/strategy")
-            });
-            return;
-        };
-        if ksize == 0 {
-            self.emit(Rule::CfgEncoding, idx, || {
-                "VSACFG kernel field is 0: the kernel size would keep stale state".into()
-            });
-        }
-        // Latching mirrors CtrlState::apply: precision and strategy always
-        // latch; a zero kernel field keeps the previous kernel size.
-        let eff_ksize = if ksize > 0 {
-            ksize
-        } else {
-            self.latched.map(|(_, k, _)| k).unwrap_or(1)
-        };
-        self.latched = Some((prec, eff_ksize, strat));
-        if prec != self.op.prec {
-            let want = self.op.prec;
-            self.emit(Rule::CfgMismatch, idx, || {
-                format!("VSACFG latches {prec} but the program was compiled for {want}")
-            });
-        }
-        if strat != self.choice.strat {
-            let want = self.choice.strat;
-            self.emit(Rule::CfgMismatch, idx, || {
-                format!("VSACFG latches strategy {strat} but the mapping choice is {want}")
-            });
-        }
-        let want_k = self.op.ksize.max(1).min(15);
-        if eff_ksize != want_k {
-            self.emit(Rule::CfgMismatch, idx, || {
-                format!("VSACFG latches kernel size {eff_ksize} but the operator has {want_k}")
-            });
-        }
-    }
-
-    fn step_vsald(&mut self, idx: usize, vd: u8, rs1: u8, mode: LdMode, width: WidthSel) {
-        self.require_cfg(idx, "VSALD");
-        let prec = self.width_prec(width);
-        let vl = self.known_vl(idx, "VSALD");
-        let addr = self.known_addr(idx, rs1);
-        let mut region = None;
-        if let (Some(addr), Some(vl)) = (addr, vl) {
-            let bytes = prec.bytes_for(vl as u64);
-            region = Some(self.check_load_bounds(idx, addr, bytes, prec));
-            self.check_vrf_capacity(idx, vd, bytes, mode == LdMode::Broadcast);
-        }
-        self.vreg_defined[vd as usize] = true;
-        self.pending_loads[vd as usize] = Some((self.seg, idx));
-        self.last_load_any = Some(vd);
-        match region {
-            Some(Region::Input) => self.last_input_load = Some(vd),
-            Some(Region::Weight) => {
-                self.last_weight_load = Some(vd);
-                self.weight_elems_loaded = match (self.weight_elems_loaded, vl) {
-                    (Some(t), Some(n)) => Some(t + n as u64),
-                    _ => None,
-                };
-            }
-            _ => {
-                // Unknown address/length: weight accounting is unprovable.
-                if region.is_none() {
-                    self.weight_elems_loaded = None;
-                }
-            }
-        }
-    }
-
-    fn step_vle(&mut self, idx: usize, vd: u8, rs1: u8, eew: u32) {
-        let vl = self.known_vl(idx, "VLE");
-        let addr = self.known_addr(idx, rs1);
-        if let (Some(addr), Some(vl)) = (addr, vl) {
-            let bytes = vl as u64 * (eew as u64 / 8);
-            self.check_load_bounds(idx, addr, bytes, Precision::Int8);
-            self.check_vrf_capacity(idx, vd, bytes, false);
-        }
-        self.vreg_defined[vd as usize] = true;
-        self.pending_loads[vd as usize] = Some((self.seg, idx));
-    }
-
-    fn step_vse(&mut self, idx: usize, vs3: u8, rs1: u8, eew: u32) {
-        let vl = self.known_vl(idx, "VSE");
-        let addr = self.known_addr(idx, rs1);
-        let Some(addr) = addr else {
-            self.pending_loads[vs3 as usize] = None;
-            return;
-        };
-        let l = self.layout;
-        let op = self.op;
-        match self.region_of(addr) {
-            Region::Partial => {
-                // Spill path: the store drains the accumulator partition —
-                // vs3 is architecturally allowed to be a register nothing
-                // wrote (the first spill of a block), so no def check.
-                if self.sew != 32 {
-                    let sew = self.sew;
-                    self.emit(Rule::PartialOutOfRegion, idx, || {
-                        format!("partial spill at SEW {sew}; partials are 32-bit accumulators")
-                    });
-                }
-                if let Some(vl) = vl {
-                    let end = addr + vl as u64 * 4;
-                    let limit = l.partial_addr + op.output_bytes();
-                    if end > limit {
-                        self.emit(Rule::PartialOutOfRegion, idx, || {
-                            format!(
-                                "partial spill [{addr:#x}, {end:#x}) overruns the spill \
-                                 region (ends at {limit:#x})"
-                            )
-                        });
-                    }
-                }
-            }
-            Region::Output => {
-                self.consume_vreg(idx, vs3, "VSE");
-                let row_bytes = op.output_row_elems() * 4;
-                if eew != 32 {
-                    self.emit(Rule::StoreNotRow, idx, || {
-                        format!("output store at EEW {eew}; rows are 32-bit accumulators")
-                    });
-                }
-                if row_bytes == 0 || (addr - l.out_addr) % row_bytes != 0 {
-                    self.emit(Rule::StoreNotRow, idx, || {
-                        format!(
-                            "store at {addr:#x} is not aligned to a {row_bytes}-byte \
-                             output row"
-                        )
-                    });
-                } else {
-                    let row = (addr - l.out_addr) / row_bytes;
-                    if row >= op.output_rows() {
-                        let rows = op.output_rows();
-                        self.emit(Rule::StoreNotRow, idx, || {
-                            format!("store drains row {row} of a {rows}-row output")
-                        });
-                    }
-                }
-                if let Some(vl) = vl {
-                    if vl as u64 != op.output_row_elems() {
-                        let want = op.output_row_elems();
-                        self.emit(Rule::StoreNotRow, idx, || {
-                            format!("store of {vl} elements; an output row has {want}")
-                        });
-                    }
-                }
-            }
-            Region::Input | Region::Weight | Region::Outside => {
-                self.emit(Rule::StoreNotRow, idx, || {
-                    format!("store at {addr:#x} targets neither the output nor spill region")
-                });
-                self.pending_loads[vs3 as usize] = None;
-            }
-        }
-    }
-
-    fn step_tensor(&mut self, idx: usize, vd: u8, vs1: u8, vs2: u8, stages: u8) {
-        self.require_cfg(idx, "tensor op");
-        if stages == 0 {
-            self.emit(Rule::ZeroStageTensor, idx, || {
-                "tensor burst encodes zero stages".into()
-            });
-        }
-        for d in self.required_dims() {
-            if self.dims[d.code() as usize] == AbsVal::Unset {
-                self.emit(Rule::DimUnset, idx, || {
-                    format!("tensor op before dimension {d} was latched")
-                });
-            }
-        }
-        let strat = self.latched.map(|(_, _, s)| s).unwrap_or(self.choice.strat);
-        if strat == StrategyKind::Mm {
-            // MM has no weight bank: A and B tiles both rotate through the
-            // input slots, and vs2 is a don't-care slot the MPTU ignores.
-            match self.last_load_any {
-                None => self.emit(Rule::UseBeforeDef, idx, || {
-                    format!("tensor op reads v{vs1} before any VSALD ran")
-                }),
-                Some(last) if last != vs1 => self.emit(Rule::StaleOperand, idx, || {
-                    format!("tensor operand v{vs1} is stale; the latest load wrote v{last}")
-                }),
-                _ => {}
-            }
-        } else {
-            match self.last_input_load {
-                None => self.emit(Rule::UseBeforeDef, idx, || {
-                    format!("tensor op reads v{vs1} before any input-region VSALD ran")
-                }),
-                Some(last) if last != vs1 => self.emit(Rule::StaleOperand, idx, || {
-                    format!(
-                        "tensor input operand v{vs1} is stale; the latest input load \
-                         wrote v{last}"
-                    )
-                }),
-                _ => {}
-            }
-            match self.last_weight_load {
-                None => self.emit(Rule::UseBeforeDef, idx, || {
-                    format!("tensor op reads v{vs2} before any weight-region VSALD ran")
-                }),
-                Some(last) if last != vs2 => self.emit(Rule::StaleOperand, idx, || {
-                    format!(
-                        "tensor weight operand v{vs2} is stale; the latest weight load \
-                         wrote v{last}"
-                    )
-                }),
-                _ => {}
-            }
-        }
-        // The MPTU consumes whole partitions: every staged load is live.
-        self.pending_loads = [None; 32];
-        self.vreg_defined[vd as usize] = true;
-    }
-
-    /// Validate the segment's stream-run metadata (the batch fast path
-    /// trusts it: `Processor::run_segment` dispatches whole runs through
-    /// closed-form scheduling).
-    fn check_runs(&mut self, seg: &Segment) {
-        let mut last_end = 0u32;
-        for r in &seg.runs {
-            let end = r.start.saturating_add(r.len);
-            if r.len == 0 || r.start < last_end || end as usize > seg.insns.len() {
-                self.emit(Rule::RunBounds, r.start as usize, || {
-                    format!(
-                        "run [{}, {}) is empty, overlapping, or past the segment \
-                         ({} insns)",
-                        r.start,
-                        end,
-                        seg.insns.len()
-                    )
-                });
-                continue;
-            }
-            last_end = end;
-            let body = &seg.insns[r.start as usize..end as usize];
-            match r.kind {
-                RunKind::Tensor => {
-                    let first = body[0];
-                    if !matches!(first, Insn::Vsam { .. } | Insn::Vsac { .. })
-                        || body.iter().any(|i| *i != first)
-                    {
-                        self.emit(Rule::TensorRunNotHomogeneous, r.start as usize, || {
-                            format!(
-                                "tensor run [{}, {}) is not a chain of identical \
-                                 VSAM/VSAC bursts",
-                                r.start, end
-                            )
-                        });
-                    }
-                }
-                RunKind::Load => {
-                    if body.len() % 2 != 0 || !valid_load_pairs(body) {
-                        self.emit(Rule::LoadRunPairs, r.start as usize, || {
-                            format!(
-                                "load run [{}, {}) is not uniform (li; vsald/vle) pairs",
-                                r.start, end
-                            )
-                        });
-                    }
-                }
-                RunKind::Store => {
-                    if body.len() % 2 != 0 || !valid_store_pairs(body) {
-                        self.emit(Rule::StoreRunPairs, r.start as usize, || {
-                            format!("store run [{}, {}) is not (li; vse) pairs", r.start, end)
-                        });
-                    }
-                }
-            }
-        }
-    }
-
-    /// Finish the walk: end-of-stream rules (dead loads, residency) and
-    /// the final report.
-    pub fn finish(mut self) -> VerifyReport {
-        for vd in 0..32u8 {
-            if let Some((seg, idx)) = self.pending_loads[vd as usize] {
-                self.seg = seg;
-                self.emit(Rule::DeadLoad, idx, || {
-                    format!("load into v{vd} is never consumed by any tensor/compute/store")
-                });
-            }
-        }
-        self.seg = self.report.segments;
-        if let Some(total) = self.weight_elems_loaded {
-            let want = self.op.weight_elems();
-            if self.choice.strat == StrategyKind::Ff && total > want {
-                self.emit(Rule::WeightRefetch, 0, || {
-                    format!(
-                        "FF stream loads {total} weight elements for a {want}-element \
-                         tensor: weights are refetched, violating residency"
-                    )
-                });
-            }
-            if total < want {
-                self.emit(Rule::WeightCoverage, 0, || {
-                    format!(
-                        "stream loads only {total} of {want} weight elements: part of \
-                         the weight tensor never reaches the datapath"
-                    )
-                });
-            }
-        }
-        self.report
-    }
-}
-
-/// Mirror of `Processor::valid_load_pairs`: uniform `(li xN, addr ;
-/// vsald/vle vX, (xN))` pairs keyed on the first transfer.
-fn valid_load_pairs(body: &[Insn]) -> bool {
-    if body.len() < 2 {
-        return false;
-    }
-    let key = body[1];
-    body.chunks_exact(2).all(|p| match (p[0], p[1]) {
-        (Insn::Addi { rd, rs1: 0, .. }, Insn::Vsald { rs1, mode, width, .. }) => {
-            rd != 0
-                && rs1 == rd
-                && matches!(key, Insn::Vsald { mode: km, width: kw, .. }
-                    if km == mode && kw == width)
-        }
-        (Insn::Addi { rd, rs1: 0, .. }, Insn::Vle { rs1, eew, .. }) => {
-            rd != 0 && rs1 == rd && matches!(key, Insn::Vle { eew: ke, .. } if ke == eew)
-        }
-        _ => false,
-    })
-}
-
-/// Mirror of `Processor::valid_store_pairs`: `(li xN, addr ; vse vS, (xN))`.
-fn valid_store_pairs(body: &[Insn]) -> bool {
-    body.chunks_exact(2).all(|p| match (p[0], p[1]) {
-        (Insn::Addi { rd, rs1: 0, .. }, Insn::Vse { rs1, .. }) => rd != 0 && rs1 == rd,
-        _ => false,
-    })
-}
-
-/// Verify already-materialized segments of a program compiled from `op`
-/// under `choice` for `cfg` at `layout`.
-pub fn verify_segments(
-    op: &OpDesc,
-    cfg: &SpeedConfig,
-    choice: MappingChoice,
-    layout: MemLayout,
-    segments: &[Segment],
-) -> VerifyReport {
-    let mut v = Verifier::new(op, cfg, choice, layout);
-    for seg in segments {
-        v.check_segment(seg);
-    }
-    v.finish()
-}
-
-/// Compile `op` under `choice` (streaming — the instruction stream is
-/// never materialized) and verify it against the canonical layout.
-/// Compilation failures surface as their own typed errors.
-pub fn verify_op(
-    op: &OpDesc,
-    cfg: &SpeedConfig,
-    choice: MappingChoice,
-) -> Result<VerifyReport, SpeedError> {
-    let (layout, _) = MemLayout::place(op);
-    let mut v = Verifier::new(op, cfg, choice, layout);
-    {
-        let mut feed = |seg: Segment| -> Result<(), SpeedError> {
-            v.check_segment(&seg);
-            Ok(())
-        };
-        crate::compiler::stream_op_with(op, cfg, choice, &layout, &mut feed)?;
-    }
-    Ok(v.finish())
-}
-
-/// [`verify_op`] folded to a typed error: `Ok(())` when the stream is
-/// clean, [`SpeedError::Verify`] otherwise.
-pub fn ensure_verified(
-    op: &OpDesc,
-    cfg: &SpeedConfig,
-    choice: MappingChoice,
-) -> Result<(), SpeedError> {
-    verify_op(op, cfg, choice)?.into_result()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::compiler::compile_op_with;
-
-    fn cfg() -> SpeedConfig {
-        SpeedConfig::reference()
-    }
-
-    fn compile(op: &OpDesc, choice: MappingChoice) -> (MemLayout, Vec<Segment>) {
-        let (layout, _) = MemLayout::place(op);
-        let c = compile_op_with(op, &cfg(), choice, layout, false).unwrap();
-        (layout, c.segments)
-    }
-
-    #[test]
-    fn compiled_streams_verify_clean_across_kinds_and_strategies() {
-        let cases = [
-            (OpDesc::mm(12, 48, 10, Precision::Int8), StrategyKind::Mm),
-            (OpDesc::mm(1, 32, 40, Precision::Int4), StrategyKind::Mm),
-            (OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int16), StrategyKind::Ffcs),
-            (OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8), StrategyKind::Cf),
-            (OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8), StrategyKind::Ff),
-            (OpDesc::pwcv(16, 16, 8, 8, Precision::Int4), StrategyKind::Cf),
-            (OpDesc::dwcv(8, 9, 9, 3, 2, 1, Precision::Int8), StrategyKind::Ff),
-        ];
-        for (op, strat) in cases {
-            let choice = MappingChoice::of(strat);
-            let (layout, segs) = compile(&op, choice);
-            let report = verify_segments(&op, &cfg(), choice, layout, &segs);
-            assert!(
-                report.is_clean(),
-                "{op:?} {strat}: {:?}",
-                report.diagnostics.first()
-            );
-            assert!(report.insns > 0 && report.segments > 0);
-        }
-    }
-
-    #[test]
-    fn spilled_ffcs_stream_verifies_clean() {
-        // Large feature map forces the partial spill/reload path.
-        let op = OpDesc::conv(8, 64, 40, 40, 3, 1, 1, Precision::Int8);
-        let choice = MappingChoice::of(StrategyKind::Ffcs);
-        let report = verify_op(&op, &cfg(), choice).unwrap();
-        assert!(report.is_clean(), "{:?}", report.diagnostics.first());
-    }
-
-    #[test]
-    fn dropped_vsacfg_fires_cfg_rule() {
-        let op = OpDesc::mm(8, 16, 8, Precision::Int8);
-        let choice = MappingChoice::of(StrategyKind::Mm);
-        let (layout, mut segs) = compile(&op, choice);
-        let pos = segs[0]
-            .insns
-            .iter()
-            .position(|i| matches!(i, Insn::Vsacfg { .. }))
-            .unwrap();
-        // Replace in place so run indices stay valid.
-        segs[0].insns[pos] = Insn::Addi { rd: 0, rs1: 0, imm: 0 };
-        let report = verify_segments(&op, &cfg(), choice, layout, &segs);
-        assert!(report.fired(Rule::CfgNotLatched), "{:?}", report.diagnostics);
-    }
-
-    #[test]
-    fn wrong_precision_fires_mismatch() {
-        let op = OpDesc::mm(8, 16, 8, Precision::Int8);
-        let choice = MappingChoice::of(StrategyKind::Mm);
-        let (layout, mut segs) = compile(&op, choice);
-        let pos = segs[0]
-            .insns
-            .iter()
-            .position(|i| matches!(i, Insn::Vsacfg { .. }))
-            .unwrap();
-        segs[0].insns[pos] = Insn::Vsacfg {
-            rd: 25,
-            zimm: Insn::pack_cfg(Precision::Int16, 1, StrategyKind::Mm),
-            uimm: 0,
-        };
-        let report = verify_segments(&op, &cfg(), choice, layout, &segs);
-        assert!(report.fired(Rule::CfgMismatch), "{:?}", report.diagnostics);
-        assert!(!report.fired(Rule::CfgNotLatched));
-    }
-
-    #[test]
-    fn oversized_kernel_is_a_program_level_encoding_violation() {
-        let op = OpDesc::conv(4, 4, 40, 40, 17, 1, 1, Precision::Int8);
-        let (layout, _) = MemLayout::place(&op);
-        let report =
-            verify_segments(&op, &cfg(), MappingChoice::of(StrategyKind::Ffcs), layout, &[]);
-        assert!(report.fired(Rule::CfgEncoding));
-    }
-
-    #[test]
-    fn report_folds_into_typed_verify_error() {
-        let op = OpDesc::mm(8, 16, 8, Precision::Int8);
-        let choice = MappingChoice::of(StrategyKind::Mm);
-        let (layout, mut segs) = compile(&op, choice);
-        segs[0].insns[0] = Insn::Vsam { vd: 8, vs1: 0, vs2: 4, stages: 0 };
-        let report = verify_segments(&op, &cfg(), choice, layout, &segs);
-        let err = report.into_result().unwrap_err();
-        assert!(matches!(err, SpeedError::Verify(_)), "{err}");
-        assert!(err.to_string().contains("V-RUN-05"), "{err}");
-    }
-
-    #[test]
-    fn rule_ids_are_unique_and_stable() {
-        for (i, a) in Rule::ALL.iter().enumerate() {
-            assert_eq!(a.index(), i);
-            for b in &Rule::ALL[i + 1..] {
-                assert_ne!(a.id(), b.id());
-            }
-        }
-        assert_eq!(Rule::CfgNotLatched.id(), "V-CFG-01");
-        assert_eq!(Rule::WeightCoverage.id(), "V-RES-02");
-    }
-}
+pub use verify::{
+    ensure_verified, verify_op, verify_segments, Diagnostic, Rule, Verifier, VerifyReport,
+    MAX_DIAGNOSTICS,
+};

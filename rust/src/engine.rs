@@ -200,6 +200,13 @@ pub struct Engine {
     /// Release-build opt-in for compile-time stream verification (debug
     /// builds always verify — see [`Engine::set_verify_on_compile`]).
     verify_on_compile: bool,
+    /// Opt-in lint pass on cache miss (see
+    /// [`Engine::set_lint_on_compile`]). Findings are warnings: they
+    /// accumulate on the engine and never reject a program.
+    lint_on_compile: bool,
+    /// Lint findings accumulated since the last
+    /// [`Engine::take_lint_findings`].
+    lint_findings: Vec<analysis::lint::Finding>,
     /// Observability configuration last applied via [`Engine::set_obs`].
     obs: ObsConfig,
     /// Unified counter registry this engine feeds (own by default;
@@ -229,23 +236,18 @@ impl Engine {
     pub fn with_memory(cfg: SpeedConfig, mem_bytes: usize) -> Result<Self> {
         cfg.validate()?;
         let mem = mem_bytes.max(MEM_MIN_BYTES as usize);
-        let mut engine = Engine {
+        Ok(Engine {
             cfg,
             proc: Processor::new(cfg, mem),
             programs: HashMap::new(),
             shared: None,
             cache: CacheStats::default(),
             verify_on_compile: false,
+            lint_on_compile: false,
+            lint_findings: Vec::new(),
             obs: ObsConfig::off(),
             counters: Counters::new(),
-        };
-        // Deprecated alias: a set `SPEED_TRACE` env var routes through the
-        // same explicit config path new code uses (`set_obs`).
-        let env = ObsConfig::from_env();
-        if env != ObsConfig::off() {
-            engine.set_obs(env);
-        }
-        Ok(engine)
+        })
     }
 
     /// Build a pool-member engine: compilation results are exchanged with
@@ -360,6 +362,24 @@ impl Engine {
         cfg!(debug_assertions) || self.verify_on_compile
     }
 
+    /// Opt into the performance lint pass ([`crate::analysis::lint`]) on
+    /// every program-cache miss. Unlike verification, lint findings are
+    /// *warnings*: they accumulate on the engine — drain them with
+    /// [`Engine::take_lint_findings`] — and never reject a program.
+    pub fn set_lint_on_compile(&mut self, on: bool) {
+        self.lint_on_compile = on;
+    }
+
+    /// Whether this engine lints compiled streams on cache miss.
+    pub fn lint_on_compile(&self) -> bool {
+        self.lint_on_compile
+    }
+
+    /// Drain the lint findings accumulated by compile-time linting.
+    pub fn take_lint_findings(&mut self) -> Vec<analysis::lint::Finding> {
+        std::mem::take(&mut self.lint_findings)
+    }
+
     /// Drain the warm processor's pipeline back to its fresh-construction
     /// timing state (see [`Processor::reset_pipeline`]). The program
     /// cache, external memory, and datapath control state all persist —
@@ -460,6 +480,16 @@ impl Engine {
                     report.insns * analysis::Rule::ALL.len() as u64,
                 );
                 report.into_result()?;
+            }
+        }
+        // The opt-in lint pass piggybacks on the same materialized
+        // segments. Findings are performance advice, never errors: they
+        // accumulate for `take_lint_findings` and the program caches
+        // regardless.
+        if self.lint_on_compile {
+            if let Some(segs) = &segments {
+                let report = analysis::lint::lint_segments(&self.cfg, segs);
+                self.lint_findings.extend(report.findings);
             }
         }
         let plan = OpPlan {
@@ -858,6 +888,19 @@ mod tests {
         engine.session().run_model(&model, Precision::Int8).unwrap();
         assert_eq!(engine.cache_stats().misses, 4);
         assert_eq!(engine.compiled_programs(), 4);
+    }
+
+    #[test]
+    fn lint_on_compile_is_clean_on_codegen_and_drains() {
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        assert!(!engine.lint_on_compile());
+        engine.set_lint_on_compile(true);
+        assert!(engine.lint_on_compile());
+        engine.session().run_model(&tiny_model(), Precision::Int8).unwrap();
+        // The compiler's own output must lint clean (the no-false-positive
+        // contract lint shares with the verifier), and draining resets.
+        assert!(engine.take_lint_findings().is_empty());
+        assert!(engine.take_lint_findings().is_empty());
     }
 
     #[test]

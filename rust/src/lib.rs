@@ -81,6 +81,15 @@
 //!   rule IDs (`V-CFG-*`, `V-REG-*`, `V-MEM-*`, `V-RUN-*`, `V-RES-*`)
 //!   surfaced as [`SpeedError::Verify`] diagnostics;
 //!
+//! * a **static cost model and performance linter** ([`analysis::cost`],
+//!   [`analysis::lint`], CLI `lint`): [`analysis::cost::cost_op`] replays
+//!   the simulator's scoreboard recurrence to predict `SimStats` and the
+//!   cycle breakdown of a compiled stream *bit-identically* to execution
+//!   (it is what lets `tune --prune` skip simulations while producing a
+//!   byte-identical plan), while [`analysis::lint`] flags legal-but-
+//!   wasteful streams (`L-DEAD-01` … `L-VRF-01`) as warnings that never
+//!   fold into errors — the severity contract with the verifier;
+//!
 //! * an **observability layer** ([`obs`], CLI `profile`): deterministic
 //!   hierarchical tracing on a virtual (simulated-cycle) clock exported
 //!   as Chrome-trace JSON, an exact cycle-attribution profiler

@@ -19,8 +19,10 @@
 //! repro profile [--model M --prec P | --scenario F] [--quick]
 //!               [--level op|segment|run|insn] [--out trace.json]
 //!                                       deterministic profiler -> Chrome trace
-//! repro verify [--model M --prec P | --all] [--strategy S] [--quick]
+//! repro verify [--model M --prec P | --all] [--strategy S] [--quick] [--json]
 //!                                       static stream verification sweep
+//! repro lint [--model M --prec P | --all] [--strategy S] [--quick] [--json]
+//!                                       performance lint sweep (warnings)
 //! repro asm <file.s>                    assemble / encode / disassemble
 //! repro info                            configuration + artifact summary
 //! ```
@@ -39,6 +41,7 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 
+use speed_rvv::analysis::lint::LintRule;
 use speed_rvv::analysis::{self, Rule};
 use speed_rvv::bench;
 use speed_rvv::config::{Precision, SpeedConfig};
@@ -51,6 +54,7 @@ use speed_rvv::models::zoo::{model_by_name, MODELS};
 use speed_rvv::models::OpDesc;
 use speed_rvv::obs::{chrome_trace_json, Counter, ObsConfig, SpanCat, TraceLevel};
 use speed_rvv::report;
+use speed_rvv::runtime::json::jstr;
 use speed_rvv::runtime::{golden_check_all, PjrtEngine};
 use speed_rvv::serve;
 use speed_rvv::sim::ExecMode;
@@ -103,6 +107,7 @@ fn dispatch(args: &[String]) -> Result<(), SpeedError> {
         "profile" => cmd_profile(rest),
         "tune" => cmd_tune(rest),
         "verify" => cmd_verify(rest),
+        "lint" => cmd_lint(rest),
         "asm" => cmd_asm(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -170,7 +175,7 @@ commands:
                               Exits nonzero if the op spans do not sum to
                               the simulated total (the self-check)
   tune [--model M] [--prec 16|8|4] [--quick] [--no-chunks] [--exact]
-       [--cache DIR] [--out FILE] [--no-verify]
+       [--prune] [--cache DIR] [--out FILE] [--no-verify]
                               empirical mixed-dataflow auto-tuner: search
                               (strategy x chunk) per operator with the
                               simulator as cost oracle; writes the plan JSON,
@@ -178,16 +183,28 @@ commands:
                               vs the static mapping, and exits nonzero if the
                               tuned plan is slower than static (it never is,
                               by construction). --cache DIR reuses
-                              bench/tuned/-style plan files across runs
+                              bench/tuned/-style plan files across runs;
+                              --prune ranks candidates with the bit-exact
+                              static cost model and simulates only potential
+                              winners (same plan, fewer simulations)
   verify [--model M] [--prec 16|8|4|all] [--all] [--strategy mm|ffcs|cf|ff]
-         [--quick]
+         [--quick] [--json]
                               static stream verifier: abstract-interpret
                               every compiled program (zoo x precisions x
                               feasible mapping candidates, no simulation),
                               print a per-rule violation table, and exit
                               nonzero on any diagnostic. Default sweeps
                               the whole zoo at all precisions; --quick
-                              downscales the models for a fast smoke pass
+                              downscales the models for a fast smoke pass;
+                              --json emits a machine-readable summary
+  lint [--model M] [--prec 16|8|4|all] [--all] [--strategy mm|ffcs|cf|ff]
+       [--quick] [--json]
+                              performance linter: the same sweep as verify
+                              but for L-* efficiency smells (dead defs,
+                              redundant reloads/re-latches, split runs,
+                              register pressure). Findings are warnings —
+                              the exit code stays 0; --json emits the same
+                              summary shape as verify --json for CI greps
   asm <file.s>                assemble, encode, and disassemble a program
   info                        configuration + artifact summary
 run-model also accepts --exact (per-instruction simulation; the default
@@ -616,12 +633,17 @@ fn cmd_tune(args: &[String]) -> Result<(), SpeedError> {
     let topts = TuneOptions {
         chunks: !flag(args, "--no-chunks"),
         exec_mode: if flag(args, "--exact") { ExecMode::Exact } else { ExecMode::Batch },
+        prune: flag(args, "--prune"),
     };
 
     let t0 = std::time::Instant::now();
+    // The cache-less path tunes on a local engine so the search's counter
+    // registry (candidates simulated vs pruned) is reportable below.
+    let mut tune_engine = Engine::new(cfg)?;
+    tune_engine.set_exec_mode(topts.exec_mode);
     let (plan, cached) = match opt(args, "--cache") {
         Some(dir) => tune::tune_model_cached(&cfg, &model, prec, &topts, dir)?,
-        None => (tune::tune_model(&cfg, &model, prec, &topts)?, false),
+        None => (tune::tune_model_on(&mut tune_engine, &model, prec, &topts)?, false),
     };
     let wall = t0.elapsed().as_secs_f64();
 
@@ -656,6 +678,16 @@ fn cmd_tune(args: &[String]) -> Result<(), SpeedError> {
         plan.tuned_cycles(),
         plan.speedup()
     );
+    if opt(args, "--cache").is_none() {
+        // Machine-greppable search-effort line (the tune-smoke CI leg
+        // checks tune_candidates_pruned > 0 under --prune).
+        let c = tune_engine.counters();
+        println!(
+            "search: tune_candidates={} tune_candidates_pruned={}",
+            c.get(Counter::TuneCandidates),
+            c.get(Counter::TuneCandidatesPruned)
+        );
+    }
 
     // Invariant gate: ties resolve to static, so tuned can never be
     // slower. A violation is a tuner defect and must fail the run (and
@@ -699,30 +731,69 @@ fn cmd_tune(args: &[String]) -> Result<(), SpeedError> {
     Ok(())
 }
 
+/// The shared machine-readable summary of an analysis sweep — `repro
+/// verify --json` and `repro lint --json` emit one shape, so CI greps
+/// both passes identically (`"clean": true`, `"findings": 0`).
+fn analysis_json(
+    pass: &str,
+    programs: u64,
+    insns: u64,
+    segments: u64,
+    rules: &[(&'static str, u64)],
+) -> String {
+    let total: u64 = rules.iter().map(|(_, n)| *n).sum();
+    let mut s = String::from("{\n  \"schema\": 1,\n");
+    s.push_str(&format!("  \"pass\": {},\n", jstr(pass)));
+    s.push_str(&format!("  \"programs\": {programs},\n"));
+    s.push_str(&format!("  \"insns\": {insns},\n"));
+    s.push_str(&format!("  \"segments\": {segments},\n"));
+    s.push_str(&format!("  \"findings\": {total},\n"));
+    s.push_str(&format!("  \"clean\": {},\n", total == 0));
+    s.push_str("  \"rules\": {\n");
+    for (i, (id, n)) in rules.iter().enumerate() {
+        s.push_str(&format!(
+            "    {}: {n}{}\n",
+            jstr(id),
+            if i + 1 < rules.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  }\n}\n");
+    s
+}
+
+/// `--prec` selector shared by the analysis sweeps (default: all three).
+fn precs_opt(args: &[String]) -> Result<Vec<Precision>, SpeedError> {
+    match opt(args, "--prec").unwrap_or("all") {
+        "16" => Ok(vec![Precision::Int16]),
+        "8" => Ok(vec![Precision::Int8]),
+        "4" => Ok(vec![Precision::Int4]),
+        "all" => Ok(vec![Precision::Int16, Precision::Int8, Precision::Int4]),
+        other => Err(SpeedError::Config(format!("bad precision '{other}'"))),
+    }
+}
+
+/// `--strategy` filter shared by the analysis sweeps.
+fn strat_filter_opt(args: &[String]) -> Result<Option<StrategyKind>, SpeedError> {
+    match opt(args, "--strategy") {
+        None => Ok(None),
+        Some("mm") => Ok(Some(StrategyKind::Mm)),
+        Some("ffcs") => Ok(Some(StrategyKind::Ffcs)),
+        Some("cf") => Ok(Some(StrategyKind::Cf)),
+        Some("ff") => Ok(Some(StrategyKind::Ff)),
+        Some(other) => Err(SpeedError::Config(format!("bad strategy '{other}'"))),
+    }
+}
+
 fn cmd_verify(args: &[String]) -> Result<(), SpeedError> {
     let names: Vec<&str> = match opt(args, "--model") {
         Some(n) => vec![n],
         // `--all` (and the bare default) sweep the whole zoo.
         None => MODELS.to_vec(),
     };
-    let precs: Vec<Precision> = match opt(args, "--prec").unwrap_or("all") {
-        "16" => vec![Precision::Int16],
-        "8" => vec![Precision::Int8],
-        "4" => vec![Precision::Int4],
-        "all" => vec![Precision::Int16, Precision::Int8, Precision::Int4],
-        other => return Err(SpeedError::Config(format!("bad precision '{other}'"))),
-    };
-    let strat_filter = match opt(args, "--strategy") {
-        None => None,
-        Some("mm") => Some(StrategyKind::Mm),
-        Some("ffcs") => Some(StrategyKind::Ffcs),
-        Some("cf") => Some(StrategyKind::Cf),
-        Some("ff") => Some(StrategyKind::Ff),
-        Some(other) => {
-            return Err(SpeedError::Config(format!("bad strategy '{other}'")))
-        }
-    };
+    let precs = precs_opt(args)?;
+    let strat_filter = strat_filter_opt(args)?;
     let quick = flag(args, "--quick");
+    let json = flag(args, "--json");
     let cfg = SpeedConfig::reference();
     let topts = TuneOptions::default(); // full (strategy x chunk) candidate space
 
@@ -767,16 +838,22 @@ fn cmd_verify(args: &[String]) -> Result<(), SpeedError> {
             }
         }
     }
-    println!(
-        "verified {programs} compiled program(s): {insns} instructions in \
-         {segments} segments, {} model(s) x {} precision(s), {:.2} s",
-        names.len(),
-        precs.len(),
-        t0.elapsed().as_secs_f64()
-    );
-    println!("  {:<10} {:>9}  invariant", "rule", "hits");
-    for (rule, &n) in Rule::ALL.iter().zip(&rule_totals) {
-        println!("  {:<10} {n:>9}  {}", rule.id(), rule.summary());
+    if json {
+        let rules: Vec<(&'static str, u64)> =
+            Rule::ALL.iter().zip(&rule_totals).map(|(r, &n)| (r.id(), n)).collect();
+        print!("{}", analysis_json("verify", programs, insns, segments, &rules));
+    } else {
+        println!(
+            "verified {programs} compiled program(s): {insns} instructions in \
+             {segments} segments, {} model(s) x {} precision(s), {:.2} s",
+            names.len(),
+            precs.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        println!("  {:<10} {:>9}  invariant", "rule", "hits");
+        for (rule, &n) in Rule::ALL.iter().zip(&rule_totals) {
+            println!("  {:<10} {n:>9}  {}", rule.id(), rule.summary());
+        }
     }
     let total: u64 = rule_totals.iter().sum();
     if total > 0 {
@@ -787,7 +864,95 @@ fn cmd_verify(args: &[String]) -> Result<(), SpeedError> {
             "{total} violation(s) across {programs} program(s)"
         )));
     }
-    println!("all {programs} programs verifier-clean");
+    if !json {
+        println!("all {programs} programs verifier-clean");
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &[String]) -> Result<(), SpeedError> {
+    let names: Vec<&str> = match opt(args, "--model") {
+        Some(n) => vec![n],
+        // `--all` (and the bare default) sweep the whole zoo.
+        None => MODELS.to_vec(),
+    };
+    let precs = precs_opt(args)?;
+    let strat_filter = strat_filter_opt(args)?;
+    let quick = flag(args, "--quick");
+    let json = flag(args, "--json");
+    let cfg = SpeedConfig::reference();
+    let topts = TuneOptions::default(); // full (strategy x chunk) candidate space
+
+    let mut rule_totals = [0u64; LintRule::ALL.len()];
+    let (mut programs, mut insns, mut segments) = (0u64, 0u64, 0u64);
+    let mut samples: Vec<String> = Vec::new();
+    let t0 = std::time::Instant::now();
+    for name in &names {
+        let mut model = model_by_name(name).ok_or_else(|| {
+            SpeedError::Config(format!("unknown model '{name}' ({MODELS:?})"))
+        })?;
+        if quick {
+            model = report::fig12::downscale(&model, 4);
+        }
+        for &prec in &precs {
+            let m = model.at_precision(prec);
+            let mut seen: Vec<OpDesc> = Vec::new();
+            for op in &m.ops {
+                if seen.contains(op) {
+                    continue;
+                }
+                seen.push(*op);
+                for choice in tune::candidates_for(op, &cfg, &topts) {
+                    if strat_filter.is_some_and(|s| choice.strat != s) {
+                        continue;
+                    }
+                    // Streams the program through the linter; nothing is
+                    // simulated and nothing is cached.
+                    let rep = analysis::lint::lint_op(op, &cfg, choice)?;
+                    programs += 1;
+                    insns += rep.insns;
+                    segments += rep.segments as u64;
+                    for (t, c) in rule_totals.iter_mut().zip(rep.rule_counts) {
+                        *t += c;
+                    }
+                    if !rep.is_clean() && samples.len() < 32 {
+                        for f in rep.findings.iter().take(3) {
+                            samples.push(format!("{name} @ {prec} {choice}: {f}"));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let total: u64 = rule_totals.iter().sum();
+    if json {
+        let rules: Vec<(&'static str, u64)> =
+            LintRule::ALL.iter().zip(&rule_totals).map(|(r, &n)| (r.id(), n)).collect();
+        print!("{}", analysis_json("lint", programs, insns, segments, &rules));
+    } else {
+        println!(
+            "linted {programs} compiled program(s): {insns} instructions in \
+             {segments} segments, {} model(s) x {} precision(s), {:.2} s",
+            names.len(),
+            precs.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        println!("  {:<10} {:>9}  smell", "rule", "hits");
+        for (rule, &n) in LintRule::ALL.iter().zip(&rule_totals) {
+            println!("  {:<10} {n:>9}  {}", rule.id(), rule.summary());
+        }
+        if total == 0 {
+            println!("all {programs} programs lint-clean");
+        } else {
+            println!(
+                "{total} warning(s) across {programs} program(s) — advisory only"
+            );
+        }
+    }
+    // Warnings never fail the run; samples go to stderr for humans.
+    for s in &samples {
+        eprintln!("  {s}");
+    }
     Ok(())
 }
 

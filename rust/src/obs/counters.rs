@@ -47,11 +47,14 @@ pub enum Counter {
     VerifyRuleEvals,
     /// Tracing: spans evicted from full ring buffers.
     TraceSpansDropped,
+    /// Auto-tuner: candidate mappings ranked out by the static cost model
+    /// and never simulated (`TuneOptions::prune`).
+    TuneCandidatesPruned,
 }
 
 impl Counter {
     /// Every counter, in stable snapshot order.
-    pub const ALL: [Counter; 15] = [
+    pub const ALL: [Counter; 16] = [
         Counter::EngineCacheHits,
         Counter::EngineCacheSharedHits,
         Counter::EngineCacheMisses,
@@ -67,6 +70,7 @@ impl Counter {
         Counter::VerifyPrograms,
         Counter::VerifyRuleEvals,
         Counter::TraceSpansDropped,
+        Counter::TuneCandidatesPruned,
     ];
 
     /// Position in the registry's slot array.
@@ -92,6 +96,7 @@ impl Counter {
             Counter::VerifyPrograms => "verify_programs",
             Counter::VerifyRuleEvals => "verify_rule_evals",
             Counter::TraceSpansDropped => "trace_spans_dropped",
+            Counter::TuneCandidatesPruned => "tune_candidates_pruned",
         }
     }
 }

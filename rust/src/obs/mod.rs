@@ -29,7 +29,7 @@
 //! [`crate::sim::ExecMode::Batch`] expands closed-form runs lazily into
 //! the per-instruction path — bit-exact by the fast-path parity property —
 //! instead of the old `SPEED_TRACE`-forces-exact-mode hack. The env var
-//! survives only as a deprecated alias ([`ObsConfig::from_env`]).
+//! is gone; tracing is configured explicitly, never ambiently.
 
 pub mod breakdown;
 pub mod counters;
@@ -52,7 +52,7 @@ pub struct ObsConfig {
     /// Ring-buffer capacity in spans (`0` = [`ObsConfig::DEFAULT_CAPACITY`]).
     pub capacity: usize,
     /// Echo per-instruction scoreboard lines to stderr (the behaviour the
-    /// deprecated `SPEED_TRACE` env var used to force).
+    /// retired `SPEED_TRACE` env var used to force).
     pub echo_insns: bool,
 }
 
@@ -68,18 +68,6 @@ impl ObsConfig {
     /// Tracing at `level` with the default ring capacity.
     pub fn tracing(level: TraceLevel) -> Self {
         ObsConfig { trace: Some(level), ..Self::default() }
-    }
-
-    /// Deprecated-alias shim: a set `SPEED_TRACE` env var maps onto
-    /// instruction-level tracing with stderr echo, reproducing the old
-    /// behaviour through the explicit config path. New code should pass an
-    /// [`ObsConfig`] instead.
-    pub fn from_env() -> Self {
-        if std::env::var_os("SPEED_TRACE").is_some() {
-            ObsConfig { trace: Some(TraceLevel::Insn), capacity: 0, echo_insns: true }
-        } else {
-            Self::off()
-        }
     }
 
     /// Effective ring capacity (resolving the `0` = default convention).

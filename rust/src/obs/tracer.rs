@@ -180,8 +180,8 @@ impl Tracer {
         self.level
     }
 
-    /// Echo per-instruction scoreboard lines to stderr (deprecated
-    /// `SPEED_TRACE` behaviour).
+    /// Echo per-instruction scoreboard lines to stderr (what the
+    /// retired `SPEED_TRACE` env var used to force).
     pub fn echo(&self) -> bool {
         self.echo
     }

@@ -35,11 +35,6 @@ pub struct PjrtEngine {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
-/// Deprecated name of [`PjrtEngine`], kept so downstream `use
-/// speed_rvv::runtime::Engine` keeps compiling for one release.
-#[deprecated(note = "renamed to `PjrtEngine` (avoids clashing with `crate::engine::Engine`)")]
-pub type Engine = PjrtEngine;
-
 impl PjrtEngine {
     /// Open the artifact directory (must contain `manifest.json`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {

@@ -132,17 +132,6 @@ impl RequestKind {
         }
     }
 
-    /// Deprecated constructor shim for the pre-builder API.
-    #[deprecated(note = "construct through `Request::model(m).prec(p).policy(policy)`")]
-    pub fn model(model: Model, prec: Precision, policy: Policy) -> RequestKind {
-        RequestKind::Model { model, prec, policy }
-    }
-
-    /// Deprecated constructor shim for the pre-builder API.
-    #[deprecated(note = "construct through `Request::op(op).strategy(strat)`")]
-    pub fn op(op: OpDesc, strat: StrategyKind) -> RequestKind {
-        RequestKind::Op { op, strat }
-    }
 }
 
 /// Identity of one logical serving session — an autoregressive

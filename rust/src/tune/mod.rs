@@ -480,11 +480,19 @@ pub struct TuneOptions {
     /// Simulator mode of the cost oracle. Batch (the default) and Exact
     /// report bit-identical cycles, so this only trades oracle wall time.
     pub exec_mode: ExecMode,
+    /// Rank candidates with the bit-exact static cost model
+    /// ([`crate::analysis::cost`]) and simulate only the static mapping
+    /// plus the candidates tying the best predicted cost. Because the
+    /// model reproduces simulated `(cycles, traffic)` exactly, the pruned
+    /// search selects the same winner — the resulting [`TunedPlan`] is
+    /// byte-identical to the full search's. Skipped candidates tally
+    /// [`Counter::TuneCandidatesPruned`].
+    pub prune: bool,
 }
 
 impl Default for TuneOptions {
     fn default() -> Self {
-        TuneOptions { chunks: true, exec_mode: ExecMode::Batch }
+        TuneOptions { chunks: true, exec_mode: ExecMode::Batch, prune: false }
     }
 }
 
@@ -521,13 +529,14 @@ pub fn candidates_for(op: &OpDesc, cfg: &SpeedConfig, opts: &TuneOptions) -> Vec
 /// quiesced execution (per-candidate stats are then a pure function of
 /// the candidate — the serving layer's determinism contract) and keep the
 /// strict winner. Ties — including "everything ties" — resolve to the
-/// static mapping.
+/// static mapping. With [`TuneOptions::prune`] the bit-exact static cost
+/// model pre-ranks the candidates and only potential winners are
+/// simulated; the outcome is provably the same.
 pub fn tune_op(engine: &mut Engine, op: &OpDesc, opts: &TuneOptions) -> Result<OpTuning> {
     op.validate()?;
     let cfg = *engine.config();
     let cands = candidates_for(op, &cfg, opts);
-    let mut best: Option<(MappingChoice, u64, u64)> = None;
-    let mut static_cycles = 0u64;
+    let mut verified: Vec<MappingChoice> = Vec::with_capacity(cands.len());
     for choice in &cands {
         // Statically verify the candidate's stream before paying for its
         // simulation. A broken *static* mapping is a compiler bug and
@@ -537,6 +546,36 @@ pub fn tune_op(engine: &mut Engine, op: &OpDesc, opts: &TuneOptions) -> Result<O
             if *choice == cands[0] {
                 return Err(e);
             }
+            continue;
+        }
+        verified.push(*choice);
+    }
+    // With pruning, the static cost model ranks the verified candidates
+    // and only potential winners reach the simulator. The model is
+    // bit-exact, so "ties the best predicted cost" is exactly the set of
+    // candidates that could win the simulated search; iteration order is
+    // preserved below, so the pruned argmax is the full search's argmax.
+    // The static mapping is always simulated: `static_cycles` is a
+    // measured number, never a prediction.
+    let keep: Vec<bool> = if opts.prune {
+        let mut costs = Vec::with_capacity(verified.len());
+        for choice in &verified {
+            costs.push(crate::analysis::cost::cost_op(op, &cfg, *choice)?.cost());
+        }
+        let best = costs.iter().min().copied().expect("candidate list is never empty");
+        verified
+            .iter()
+            .zip(&costs)
+            .map(|(choice, cost)| *choice == cands[0] || *cost == best)
+            .collect()
+    } else {
+        vec![true; verified.len()]
+    };
+    let mut best: Option<(MappingChoice, u64, u64)> = None;
+    let mut static_cycles = 0u64;
+    for (choice, keep) in verified.iter().zip(&keep) {
+        if !*keep {
+            engine.counters().incr(Counter::TuneCandidatesPruned);
             continue;
         }
         engine.quiesce();
@@ -882,6 +921,31 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pruned_search_is_byte_identical_and_skips_candidates() {
+        // The pruning acceptance bar: the static-cost-pruned search must
+        // produce a byte-identical plan document while actually skipping
+        // simulations (tune_candidates_pruned > 0), and the candidates it
+        // does simulate must be strictly fewer than the full search's.
+        let model = tiny_model();
+        let prec = Precision::Int8;
+        let full = tune_model(&cfg(), &model, prec, &TuneOptions::default()).unwrap();
+
+        let mut engine = Engine::new(cfg()).unwrap();
+        let opts = TuneOptions { prune: true, ..TuneOptions::default() };
+        let pruned = tune_model_on(&mut engine, &model, prec, &opts).unwrap();
+
+        assert_eq!(pruned.to_json(), full.to_json(), "pruning changed the plan");
+        let skipped = engine.counters().get(Counter::TuneCandidatesPruned);
+        let simulated = engine.counters().get(Counter::TuneCandidates);
+        assert!(skipped > 0, "pruning never skipped a simulation");
+        let total_candidates: u64 = full.ops.iter().map(|t| t.candidates as u64).sum();
+        assert!(
+            simulated < total_candidates,
+            "pruned search simulated {simulated} of {total_candidates}"
+        );
     }
 
     #[test]

@@ -1,0 +1,81 @@
+//! Clean-codegen contract of the performance linter (`analysis::lint`).
+//!
+//! Every lint rule is designed so the operator compiler's own output
+//! cannot fire it (the no-false-positive argument documented per rule in
+//! the module). This test holds that promise across the whole model zoo —
+//! every model, every precision, the default Sec. III mapping and the
+//! auto-tuner's full candidate space — with **no allowlist**: zero
+//! findings, or the rule (or the compiler) is wrong.
+//!
+//! The complementary direction — each rule *does* fire on a hand-mutated
+//! stream — lives with the rules themselves (`src/analysis/lint.rs`
+//! in-file tests, one per stable rule ID).
+
+use speed_rvv::analysis::lint::lint_op;
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::dataflow::MappingChoice;
+use speed_rvv::models::zoo::{model_by_name, MODELS};
+use speed_rvv::models::OpDesc;
+use speed_rvv::report::fig12::downscale;
+use speed_rvv::tune::{candidates_for, TuneOptions};
+
+/// The whole zoo at every precision under the default mixed mapping lints
+/// clean (downscaled shapes — the same sweep `repro lint --all --quick`
+/// runs in CI, restricted to the static mapping).
+#[test]
+fn zoo_default_mappings_lint_clean() {
+    let cfg = SpeedConfig::reference();
+    let mut programs = 0u32;
+    for name in MODELS {
+        let model = downscale(&model_by_name(name).unwrap(), 4);
+        for prec in Precision::ALL {
+            let m = model.at_precision(prec);
+            let mut seen: Vec<OpDesc> = Vec::new();
+            for op in &m.ops {
+                if seen.contains(op) {
+                    continue;
+                }
+                seen.push(*op);
+                let rep = lint_op(op, &cfg, MappingChoice::preferred(op)).unwrap();
+                assert!(
+                    rep.is_clean(),
+                    "{name} @ {prec} {op:?}: {:?}",
+                    rep.findings
+                );
+                assert!(rep.insns > 0, "{name} @ {prec} {op:?}: empty stream");
+                programs += 1;
+            }
+        }
+    }
+    assert!(programs > 50, "only {programs} programs swept");
+}
+
+/// The tuner's full (strategy × chunk) candidate space also lints clean —
+/// chunked and re-strategized streams are still compiler output, so the
+/// no-false-positive contract covers them too.
+#[test]
+fn tuner_candidate_space_lints_clean() {
+    let cfg = SpeedConfig::reference();
+    let topts = TuneOptions::default();
+    for name in ["mobilenetv2", "vit_tiny"] {
+        let model = downscale(&model_by_name(name).unwrap(), 4);
+        for prec in Precision::ALL {
+            let m = model.at_precision(prec);
+            let mut seen: Vec<OpDesc> = Vec::new();
+            for op in &m.ops {
+                if seen.contains(op) {
+                    continue;
+                }
+                seen.push(*op);
+                for choice in candidates_for(op, &cfg, &topts) {
+                    let rep = lint_op(op, &cfg, choice).unwrap();
+                    assert!(
+                        rep.is_clean(),
+                        "{name} @ {prec} {op:?} {choice}: {:?}",
+                        rep.findings
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Property contract of the static cost model (`analysis::cost`).
+//!
+//! The model claims **bit-exactness**: abstract-interpreting a compiled
+//! stream must predict the same `SimStats` *and* the same `CycleBreakdown`
+//! as actually executing it on a fresh machine — across random operator
+//! shapes, all three precisions, and every feasible mapping candidate
+//! (strategy × chunk, the auto-tuner's full search space). That equality
+//! is what lets the tuner prune candidates without simulating them and
+//! still produce a byte-identical plan.
+//!
+//! The deployment image vendors no proptest; properties are exercised with
+//! a deterministic xorshift generator (same convention as
+//! `fastpath_parity.rs`).
+
+use speed_rvv::analysis::cost::cost_op;
+use speed_rvv::config::{Precision, SpeedConfig};
+use speed_rvv::models::ops::OpDesc;
+use speed_rvv::sim::ExecMode;
+use speed_rvv::tune::{candidates_for, TuneOptions};
+use speed_rvv::Engine;
+
+/// Deterministic xorshift64* stream.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+fn random_op(rng: &mut Rng) -> OpDesc {
+    let prec = *rng.pick(&Precision::ALL);
+    match rng.range(0, 3) {
+        0 => OpDesc::mm(
+            rng.range(1, 24) as u32,
+            rng.range(1, 48) as u32,
+            rng.range(1, 24) as u32,
+            prec,
+        ),
+        1 => {
+            let k = *rng.pick(&[1u32, 3, 5]);
+            OpDesc::conv(
+                rng.range(1, 12) as u32,
+                rng.range(1, 16) as u32,
+                rng.range(k as u64, 14) as u32,
+                rng.range(k as u64, 14) as u32,
+                k,
+                rng.range(1, 2) as u32,
+                k / 2,
+                prec,
+            )
+        }
+        2 => OpDesc::pwcv(
+            rng.range(1, 16) as u32,
+            rng.range(1, 16) as u32,
+            rng.range(1, 12) as u32,
+            rng.range(1, 12) as u32,
+            prec,
+        ),
+        _ => OpDesc::dwcv(
+            rng.range(1, 12) as u32,
+            rng.range(3, 14) as u32,
+            rng.range(3, 14) as u32,
+            3,
+            rng.range(1, 2) as u32,
+            1,
+            prec,
+        ),
+    }
+}
+
+/// Predicted cost == simulated cost, bit for bit, on a fresh engine in
+/// batch mode (the tuner's oracle), for every feasible mapping candidate
+/// of random operators at every precision.
+#[test]
+fn prop_static_cost_is_bit_exact_across_candidates() {
+    let cfg = SpeedConfig::reference();
+    let topts = TuneOptions::default(); // full (strategy x chunk) space
+    let mut rng = Rng::new(0xC057);
+    let mut checked = 0u32;
+    for case in 0..40 {
+        let op = random_op(&mut rng);
+        for choice in candidates_for(&op, &cfg, &topts) {
+            let predicted = cost_op(&op, &cfg, choice).unwrap();
+
+            let mut engine = Engine::new(cfg).unwrap();
+            engine.set_exec_mode(ExecMode::Batch);
+            let (stats, _) = engine.run_op_with(&op, choice, false).unwrap();
+
+            assert_eq!(
+                predicted.stats, stats,
+                "case {case} {op:?} {choice}: predicted stats diverge"
+            );
+            assert_eq!(
+                predicted.breakdown,
+                engine.breakdown(),
+                "case {case} {op:?} {choice}: predicted breakdown diverges"
+            );
+            // The breakdown's own completeness invariant must hold for
+            // the prediction too: every cycle is attributed.
+            assert_eq!(predicted.breakdown.total(), predicted.stats.cycles);
+            assert_eq!(predicted.cost(), (stats.cycles, stats.traffic.total()));
+            checked += 1;
+        }
+    }
+    assert!(checked > 100, "only {checked} (op, candidate) points checked");
+}
+
+/// The prediction is also exact against per-instruction execution — the
+/// cost model replays the scoreboard recurrence, so both simulator modes
+/// must agree with it (they are bit-identical to each other by the
+/// fast-path parity property).
+#[test]
+fn static_cost_matches_exact_mode_too() {
+    let cfg = SpeedConfig::reference();
+    for op in [
+        OpDesc::mm(12, 48, 10, Precision::Int8),
+        OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int16),
+        OpDesc::pwcv(16, 16, 8, 8, Precision::Int4),
+    ] {
+        for choice in candidates_for(&op, &cfg, &TuneOptions::default()) {
+            let predicted = cost_op(&op, &cfg, choice).unwrap();
+            let mut engine = Engine::new(cfg).unwrap();
+            engine.set_exec_mode(ExecMode::Exact);
+            let (stats, _) = engine.run_op_with(&op, choice, false).unwrap();
+            assert_eq!(predicted.stats, stats, "{op:?} {choice}");
+            assert_eq!(predicted.breakdown, engine.breakdown(), "{op:?} {choice}");
+        }
+    }
+}
