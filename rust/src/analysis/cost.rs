@@ -57,6 +57,12 @@ pub struct StaticCost {
     pub stats: SimStats,
     /// Predicted cycle attribution; `breakdown.total() == stats.cycles`.
     pub breakdown: CycleBreakdown,
+    /// True when the mapping's partial sums do not fit the VRF partial
+    /// partition ([`crate::dataflow::Mapping::partials_in_vrf`] is false):
+    /// the stream's spill/reload round-trips are real traffic already
+    /// inside `stats`, and the flag lets tuner reports and the
+    /// `L-RES-01` lint surface the residency loss explicitly.
+    pub partials_spilled: bool,
 }
 
 impl StaticCost {
@@ -151,9 +157,11 @@ impl CostModel {
         self.stats.merge(&run_stats);
     }
 
-    /// Consume the model, returning the accumulated prediction.
+    /// Consume the model, returning the accumulated prediction. The
+    /// model only replays a stream, so the geometric `partials_spilled`
+    /// flag starts false; [`cost_op`] fills it from the mapping.
     pub fn finish(self) -> StaticCost {
-        StaticCost { stats: self.stats, breakdown: self.breakdown }
+        StaticCost { stats: self.stats, breakdown: self.breakdown, partials_spilled: false }
     }
 
     fn xreg(&self, r: u8) -> i64 {
@@ -430,7 +438,11 @@ pub fn cost_op(
         model.run_segment(&seg.insns);
         Ok(())
     })?;
-    Ok(model.finish())
+    let mut cost = model.finish();
+    // Geometric residency flag: `summarize_op_with` already proved the
+    // strategy applicable, so `map_op` cannot panic here.
+    cost.partials_spilled = !crate::dataflow::map_op(op, cfg, choice.strat).partials_in_vrf;
+    Ok(cost)
 }
 
 #[cfg(test)]
@@ -476,7 +488,28 @@ mod tests {
         let a = StaticCost {
             stats: SimStats { cycles: 10, ..Default::default() },
             breakdown: CycleBreakdown::default(),
+            partials_spilled: false,
         };
         assert_eq!(a.cost(), (10, 0));
+    }
+
+    #[test]
+    fn static_cost_matches_simulation_on_spilled_ff_boundary() {
+        // The F=604/608 INT8 residency boundary: the resident side keeps
+        // the one-fetch FF stream, the spilled side emits real per-row
+        // weight refetches — the static model must stay bit-identical to
+        // the simulator on both, and the partial-residency flag reflects
+        // the mapping geometry.
+        for f in [604u32, 608] {
+            let op = OpDesc::conv(8, f, 6, 6, 3, 1, 1, Precision::Int8);
+            predicted_vs_simulated(&op, MappingChoice::of(StrategyKind::Ff));
+        }
+        let cfg = SpeedConfig::reference();
+        let big = OpDesc::conv(8, 64, 40, 40, 3, 1, 1, Precision::Int8);
+        let spilled = cost_op(&big, &cfg, MappingChoice::of(StrategyKind::Ffcs)).unwrap();
+        assert!(spilled.partials_spilled);
+        let small = OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8);
+        let resident = cost_op(&small, &cfg, MappingChoice::of(StrategyKind::Ffcs)).unwrap();
+        assert!(!resident.partials_spilled);
     }
 }

@@ -16,6 +16,8 @@
 //! | `L-CFG-01`  | config re-latch that changes nothing / precision thrash  |
 //! | `L-RUN-01`  | adjacent same-pattern runs a single batch run could cover|
 //! | `L-VRF-01`  | register footprint near the 32-entry VRF budget          |
+//! | `L-RES-01`  | mapping spills partial sums off-chip (geometry, see      |
+//! |             | [`lint_mapping`] — never fired by the stream walkers)    |
 //!
 //! ## Soundness against the operator compiler
 //!
@@ -45,6 +47,13 @@
 //!   metadata is already maximal.
 //! * `L-VRF-01` fires at ≥ [`VRF_PRESSURE_REGS`] distinct registers; the
 //!   compiler's fixed allocation touches eight.
+//! * `L-RES-01` is a *mapping* lint, not a stream lint: full-size zoo
+//!   shapes legitimately spill partials (the compiler emits the real
+//!   spill/reload round-trips, and the cost model charges them), so
+//!   wiring it into the stream walkers would make every big-fmap layer
+//!   "dirty". It only fires from [`lint_mapping`], the advisory entry the
+//!   tuner and reports call when they want the residency geometry of a
+//!   specific `(op, choice)` surfaced.
 
 use std::fmt;
 
@@ -88,16 +97,23 @@ pub enum LintRule {
     /// registers of the 32-entry budget; one more live value forces a
     /// spill (estimated cost attached to the finding).
     VrfPressure,
+    /// `L-RES-01`: the mapping's partial sums do not fit the VRF partial
+    /// partition ([`crate::dataflow::Mapping::partials_in_vrf`] is
+    /// false) — every channel pass round-trips partials off-chip. A
+    /// geometry finding from [`lint_mapping`] only; the stream walkers
+    /// never fire it (the spill traffic is legal and honestly costed).
+    PartialSpill,
 }
 
 impl LintRule {
     /// All rules, in stable report order.
-    pub const ALL: [LintRule; 5] = [
+    pub const ALL: [LintRule; 6] = [
         LintRule::DeadDef,
         LintRule::RedundantLoad,
         LintRule::RedundantCfg,
         LintRule::CoalescableRuns,
         LintRule::VrfPressure,
+        LintRule::PartialSpill,
     ];
 
     /// Stable rule identifier (reports, JSON, CI greps).
@@ -108,6 +124,7 @@ impl LintRule {
             LintRule::RedundantCfg => "L-CFG-01",
             LintRule::CoalescableRuns => "L-RUN-01",
             LintRule::VrfPressure => "L-VRF-01",
+            LintRule::PartialSpill => "L-RES-01",
         }
     }
 
@@ -119,6 +136,7 @@ impl LintRule {
             LintRule::RedundantCfg => "configuration re-latch that changes nothing",
             LintRule::CoalescableRuns => "adjacent runs coalescable into one batch run",
             LintRule::VrfPressure => "register footprint near the VRF budget",
+            LintRule::PartialSpill => "mapping spills partial sums off-chip",
         }
     }
 
@@ -536,6 +554,39 @@ pub fn lint_segments(cfg: &SpeedConfig, segments: &[Segment]) -> LintReport {
     l.finish()
 }
 
+/// Advisory residency lint of a mapping's *geometry* — no compilation,
+/// no stream walk. Fires `L-RES-01` when the chosen strategy's partial
+/// sums cannot stay in the VRF partial partition
+/// ([`crate::dataflow::Mapping::partials_in_vrf`]), so every channel pass
+/// round-trips partials through external memory. Deliberately separate
+/// from [`lint_segments`]/[`lint_op`]: the spill traffic is legal and
+/// honestly costed, so stream-level passes (and the zoo-wide CI `lint`
+/// sweep) must stay silent on it. Inapplicable `(op, strategy)` pairs
+/// yield an empty report.
+pub fn lint_mapping(op: &OpDesc, cfg: &SpeedConfig, choice: MappingChoice) -> LintReport {
+    let mut report = LintReport::default();
+    if !crate::dataflow::applicable(choice.strat, op) {
+        return report;
+    }
+    let m = crate::dataflow::map_op(op, cfg, choice.strat);
+    if !m.partials_in_vrf {
+        report.rule_counts[LintRule::PartialSpill.index()] += 1;
+        report.findings.push(Finding {
+            rule: LintRule::PartialSpill,
+            segment: 0,
+            index: 0,
+            message: format!(
+                "{} under {} spills partial sums off-chip: the per-lane partial \
+                 footprint exceeds the VRF partial partition, so every channel \
+                 pass pays a spill/reload round-trip (traffic is charged in the \
+                 static cost; see StaticCost::partials_spilled)",
+                op.kind, choice.strat
+            ),
+        });
+    }
+    report
+}
+
 /// Compile `op` under `choice` (streaming — nothing is materialized) and
 /// lint the resulting stream.
 pub fn lint_op(
@@ -690,11 +741,36 @@ mod tests {
     #[test]
     fn rule_ids_are_unique_and_stable() {
         let ids: Vec<&str> = LintRule::ALL.iter().map(|r| r.id()).collect();
-        assert_eq!(ids, ["L-DEAD-01", "L-LOAD-01", "L-CFG-01", "L-RUN-01", "L-VRF-01"]);
+        assert_eq!(
+            ids,
+            ["L-DEAD-01", "L-LOAD-01", "L-CFG-01", "L-RUN-01", "L-VRF-01", "L-RES-01"]
+        );
         for r in LintRule::ALL {
             assert!(r.id().starts_with("L-"));
             assert!(!r.summary().is_empty());
         }
+    }
+
+    #[test]
+    fn partial_spill_fires_from_mapping_lint_only() {
+        use crate::models::ops::OpDesc;
+        let cfg = SpeedConfig::reference();
+        // Big feature map: FFCS partials round-trip off-chip.
+        let big = OpDesc::conv(8, 64, 40, 40, 3, 1, 1, Precision::Int8);
+        let choice = MappingChoice::of(StrategyKind::Ffcs);
+        let geo = lint_mapping(&big, &cfg, choice);
+        assert_eq!(geo.count(LintRule::PartialSpill), 1);
+        assert!(geo.findings[0].message.contains("partial"), "{}", geo.findings[0].message);
+        // The stream-level pass must stay silent on the same shape: the
+        // spill traffic is legal and costed, not a stream defect.
+        let stream = lint_op(&big, &cfg, choice).unwrap();
+        assert!(!stream.fired(LintRule::PartialSpill));
+        // Resident shapes are clean in both passes.
+        let small = OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8);
+        assert!(lint_mapping(&small, &cfg, choice).is_clean());
+        // Inapplicable pairs yield an empty report, not a panic.
+        let dw = OpDesc::dwcv(8, 9, 9, 3, 1, 1, Precision::Int8);
+        assert!(lint_mapping(&dw, &cfg, choice).is_clean());
     }
 
     #[test]

@@ -151,6 +151,12 @@ struct Emitter<'a> {
     sink: Sink<'a>,
     cur: Vec<Insn>,
     cur_vl: Option<(u32, u32)>,
+    /// Carried-residency mapping: the input tensor is layer-(N-1)'s output,
+    /// still resident in the VRF, so the generators skip every input fetch
+    /// (the reload half of the drain/reload round-trip). `in_flip` stays 0
+    /// and tensor bursts read `V_IN[0]` — the register the carried output
+    /// occupies. Weight fetches and output drains are unaffected.
+    carry_in: bool,
     in_flip: usize,
     w_flip: usize,
     summary: CodegenSummary,
@@ -168,6 +174,7 @@ impl<'a> Emitter<'a> {
             sink,
             cur: Vec::new(),
             cur_vl: None,
+            carry_in: false,
             in_flip: 0,
             w_flip: 0,
             summary: CodegenSummary::default(),
@@ -468,6 +475,7 @@ fn generate<'a>(
     let chunk = dataflow::resolve_chunk(op, cfg, strat, choice.chunk);
     let jchunk = dataflow::resolve_jchunk(op, cfg, strat, choice.jchunk, chunk);
     let mut e = Emitter::new(op.prec, sink);
+    e.carry_in = choice.carry_in;
     // Prologue: configuration-setting instructions (Fig. 9 step ①).
     e.vsacfg(op.ksize.max(1), strat);
     match op.kind {
@@ -493,38 +501,32 @@ fn generate<'a>(
     e.finish()
 }
 
-fn check(op: &OpDesc, cfg: &SpeedConfig, strat: StrategyKind) -> Result<(), SpeedError> {
+fn check(op: &OpDesc, cfg: &SpeedConfig, choice: MappingChoice) -> Result<(), SpeedError> {
     op.validate()?;
     cfg.validate()?;
     // The 4-bit VSACFG kernel field caps ksize at 15; anything larger must
     // be Kseg-decomposed upstream. Typed rejection here — the emitter's
     // `pack_cfg` would truncate the field in release builds.
-    Insn::try_pack_cfg(op.prec, op.ksize.max(1), strat)?;
-    if !dataflow::applicable(strat, op) {
+    Insn::try_pack_cfg(op.prec, op.ksize.max(1), choice.strat)?;
+    if !dataflow::applicable(choice.strat, op) {
         return Err(SpeedError::Compile(format!(
-            "strategy {strat} not applicable to {}",
-            op.kind
+            "strategy {} not applicable to {}",
+            choice.strat, op.kind
         )));
     }
-    if strat == StrategyKind::Ff && !dataflow::ff_weights_resident(op, cfg) {
-        // FF's cost model stages *all* output channels' weights for the
-        // channel chunk in the VRF weight partition; at this F even the
-        // minimal PP-sized chunk overflows it, so the "weights fetched
-        // exactly once" stream would be fiction. Typed spill instead.
-        let per_lane = op.f.div_ceil(cfg.lanes).max(1) as u64
-            * (op.ksize * op.ksize) as u64
-            * op.prec.pp() as u64
-            * op.prec.bits() as u64
-            / 8;
+    // Non-resident FF shapes are not rejected here: `gen_ff` emits the
+    // real per-row refetch runs for the weight tail past
+    // `dataflow::ff_resident_f`, so the stream the simulator, cost model,
+    // and verifier see is honest — spill is a costed mapping property
+    // (`Mapping::weight_refetches`), not a compile error.
+    if choice.carry_in && !dataflow::carry_input_fits(op, cfg) {
         return Err(SpeedError::Layout(format!(
-            "FF weight slice spills the VRF weight partition: F={} over {} \
-             lanes needs {per_lane} B/lane at the minimal {}-channel chunk, \
-             but the partition holds {} B (use FFCS/CF, which refetch \
-             weights per feature-map block)",
-            op.f,
-            cfg.lanes,
-            op.prec.pp(),
-            dataflow::partition_budget(cfg)
+            "carry-in mapping declared but the input tensor ({} B) cannot \
+             stay resident in the VRF output partition ({} B/lane over {} \
+             lanes)",
+            op.input_bytes(),
+            dataflow::partition_budget(cfg),
+            cfg.lanes
         )));
     }
     Ok(())
@@ -552,7 +554,7 @@ pub fn compile_op_with(
     layout: MemLayout,
     functional: bool,
 ) -> Result<CompiledOp, SpeedError> {
-    check(op, cfg, choice.strat)?;
+    check(op, cfg, choice)?;
     let (segments, summary) = generate(op, cfg, choice, &layout, Sink::Collect(Vec::new()))?;
     let plan = OpPlan {
         desc: *op,
@@ -584,7 +586,7 @@ pub fn summarize_op_with(
     choice: MappingChoice,
     layout: &MemLayout,
 ) -> Result<CodegenSummary, SpeedError> {
-    check(op, cfg, choice.strat)?;
+    check(op, cfg, choice)?;
     let (_, summary) = generate(op, cfg, choice, layout, Sink::CountOnly)?;
     Ok(summary)
 }
@@ -611,7 +613,7 @@ pub fn stream_op_with(
     layout: &MemLayout,
     feed: &mut dyn FnMut(Segment) -> Result<(), SpeedError>,
 ) -> Result<CodegenSummary, SpeedError> {
-    check(op, cfg, choice.strat)?;
+    check(op, cfg, choice)?;
     let (_, summary) = generate(op, cfg, choice, layout, Sink::Stream(feed))?;
     Ok(summary)
 }
@@ -627,8 +629,8 @@ pub fn execute_op(
     functional: bool,
 ) -> Result<(crate::sim::SimStats, CodegenSummary), SpeedError> {
     let cfg = proc.cfg;
-    check(op, &cfg, strat)?;
     let choice = MappingChoice::of(strat);
+    check(op, &cfg, choice)?;
     let sized = generate(op, &cfg, choice, &layout, Sink::CountOnly)?.1;
     proc.set_plan(OpPlan {
         desc: *op,
@@ -678,9 +680,12 @@ fn gen_mm(
         for kci in 0..kchunks {
             let k0 = kci * kc;
             let kcur = kc.min(op.k - k0);
-            // A slice for this row block / K chunk (lane-striped).
-            let a_off = lay.in_addr + op.prec.bytes_for((r0 as u64) * op.k as u64 + k0 as u64);
-            e.load_seq_in(cfg, a_off, rows as u64 * kcur as u64);
+            if !e.carry_in {
+                // A slice for this row block / K chunk (lane-striped).
+                let a_off =
+                    lay.in_addr + op.prec.bytes_for((r0 as u64) * op.k as u64 + k0 as u64);
+                e.load_seq_in(cfg, a_off, rows as u64 * kcur as u64);
+            }
             let stages_per_tile = kcur.div_ceil(pp) as u64;
             // Degenerate output dims (batch-1 FC / classifier heads)
             // use the matrix–vector form VSAC (Sec. II-B).
@@ -781,7 +786,9 @@ fn gen_ffcs(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, cc
             let slab = ccur as u64 * op.h as u64 * op.w as u64;
             let in_off = lay.in_addr
                 + op.prec.bytes_for((c0 as u64) * op.h as u64 * op.w as u64);
-            e.load_bcast(cfg, in_off, in_elems.min(slab));
+            if !e.carry_in {
+                e.load_bcast(cfg, in_off, in_elems.min(slab));
+            }
             if spill && cci > 0 {
                 // Reload the block's partials (per output row of the block).
                 for r in 0..rcur {
@@ -847,7 +854,9 @@ fn gen_cf(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, cc: 
             // the full-input re-stream per f-group that makes CF's traffic
             // the highest of the three (Fig. 10).
             let rn = rows_new(op, oy) as u64;
-            e.load_bcast(cfg, lay.in_addr, rn * op.w as u64 * op.c as u64);
+            if !e.carry_in {
+                e.load_bcast(cfg, lay.in_addr, rn * op.w as u64 * op.c as u64);
+            }
             for cci in 0..cchunks {
                 let c0 = cci * cc;
                 let ccur = cc.min(op.c - c0);
@@ -889,9 +898,11 @@ fn gen_ff(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, cc: 
             e.load_seq_w(cfg, w_off, ccur as u64 * kk as u64);
             for oy in 0..oh {
                 let rn = rows_new(op, oy) as u64;
-                e.load_bcast(cfg, lay.in_addr
-                    + op.prec.bytes_for((c0 as u64) * op.h as u64 * op.w as u64),
-                    rn * op.w as u64 * ccur as u64);
+                if !e.carry_in {
+                    e.load_bcast(cfg, lay.in_addr
+                        + op.prec.bytes_for((c0 as u64) * op.h as u64 * op.w as u64),
+                        rn * op.w as u64 * ccur as u64);
+                }
                 e.vsam(
                     (ow.div_ceil(cfg.tile_r * cfg.tile_c) as u64) * kk as u64,
                 );
@@ -905,12 +916,15 @@ fn gen_ff(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, cc: 
             e.cut();
         }
     } else {
-        // FF on CONV/PWCV: inputs stream exactly once; *all* output
-        // channels' weights for the channel chunk stay resident in the
-        // weight partition (ff_c_chunk guarantees the fit), so weights are
-        // also fetched exactly once — the lowest-traffic arm of Fig. 10.
-        // Partials round-trip the result path per channel pass and spill
-        // off-chip only when the output image exceeds the VRF.
+        // FF on CONV/PWCV: inputs stream exactly once. The channel chunk's
+        // weights split at `dataflow::ff_resident_f`: the resident prefix
+        // (all of F when the shape fits — the lowest-traffic arm of
+        // Fig. 10) is fetched once per chunk, and the tail past `rf`
+        // output channels is re-streamed for every output row after the
+        // first — the same honest refetch the cost model charges via
+        // `Mapping::weight_refetches`. Partials round-trip the result path
+        // per channel pass and spill off-chip only when the output image
+        // exceeds the VRF.
         let cchunks = op.c.div_ceil(cc);
         let fgroup = cfg.lanes * cfg.tile_c;
         let fgroups = op.f.div_ceil(fgroup);
@@ -918,14 +932,27 @@ fn gen_ff(e: &mut Emitter, op: &OpDesc, cfg: &SpeedConfig, lay: &MemLayout, cc: 
         for cci in 0..cchunks {
             let c0 = cci * cc;
             let ccur = cc.min(op.c - c0);
-            // All-F weights for this channel chunk, once.
+            // Resident-prefix weights for this channel chunk, once.
+            let rf = dataflow::ff_resident_f(op, cfg, ccur);
             let w_off = lay.w_addr + op.prec.bytes_for((c0 as u64) * kk as u64);
-            e.load_seq_w(cfg, w_off, op.f as u64 * ccur as u64 * kk as u64);
+            if rf > 0 {
+                e.load_seq_w(cfg, w_off, rf as u64 * ccur as u64 * kk as u64);
+            }
+            // Non-resident weight tail: streamed in full on the first row
+            // (completing the initial fetch) and re-streamed per row after
+            // it — `(oh - 1) · tail` refetched elements for this chunk.
+            let tail = (op.f - rf) as u64 * ccur as u64 * kk as u64;
+            let tail_off = w_off + op.prec.bytes_for(rf as u64 * ccur as u64 * kk as u64);
             for oy in 0..oh {
+                if tail > 0 {
+                    e.load_seq_w(cfg, tail_off, tail);
+                }
                 let rn = rows_new(op, oy) as u64;
                 let in_off = lay.in_addr
                     + op.prec.bytes_for((c0 as u64) * op.h as u64 * op.w as u64);
-                e.load_bcast(cfg, in_off, rn * op.w as u64 * ccur as u64);
+                if !e.carry_in {
+                    e.load_bcast(cfg, in_off, rn * op.w as u64 * ccur as u64);
+                }
                 if !fits && cchunks > 1 && cci > 0 {
                     e.reload_partial(lay.partial_addr + oy as u64 * ow as u64 * 4, ow as u64);
                 }
@@ -1214,25 +1241,69 @@ mod tests {
     }
 
     #[test]
-    fn ff_weight_spill_is_a_typed_layout_error() {
-        // Boundary shapes from dataflow::ff_residency_boundary_at_large_f:
-        // F = 604 compiles under FF on the reference config, F = 608 is a
-        // typed spill (Layout, not a panic or a silent cost-model fiction).
+    fn ff_weight_spill_compiles_and_refetches_honestly() {
+        // Boundary pair from dataflow::ff_residency_boundary_at_large_f:
+        // F = 604 is the last resident shape on the reference config,
+        // F = 608 spills the weight tail. Both compile under FF — the
+        // spilled stream re-fetches the non-resident tail per output row
+        // instead of being rejected — and both agree bit-exactly with
+        // FFCS. The stream's measured weight traffic must equal the
+        // mapping's declared accounting: one full fetch plus
+        // `ff_weight_refetches` re-streamed elements.
         let cfg = SpeedConfig::reference();
-        let resident = OpDesc::conv(8, 604, 6, 6, 3, 1, 1, Precision::Int8);
-        let layout = MemLayout::for_op(&resident, 1 << 26).unwrap();
-        compile_op(&resident, &cfg, StrategyKind::Ff, layout, false).unwrap();
-        let spilled = OpDesc::conv(8, 608, 6, 6, 3, 1, 1, Precision::Int8);
-        let layout = MemLayout::for_op(&spilled, 1 << 26).unwrap();
-        match compile_op(&spilled, &cfg, StrategyKind::Ff, layout, false) {
-            Err(SpeedError::Layout(m)) => {
-                assert!(m.contains("weight partition"), "{m}");
-            }
+        for (f, spilled) in [(604u32, false), (608u32, true)] {
+            let op = OpDesc::conv(8, f, 6, 6, 3, 1, 1, Precision::Int8);
+            assert_eq!(dataflow::ff_weights_resident(&op, &cfg), !spilled, "F={f}");
+            let x = seeded(op.input_elems() as usize, op.prec, 47);
+            let w = seeded(op.weight_elems() as usize, op.prec, 53);
+            let (ff, ff_st, _) =
+                run_op_choice(&op, &cfg, MappingChoice::of(StrategyKind::Ff), &x, &w);
+            let (ffcs, _, _) =
+                run_op_choice(&op, &cfg, MappingChoice::of(StrategyKind::Ffcs), &x, &w);
+            assert_eq!(ff, ffcs, "F={f}");
+            assert_eq!(ff_st.macs, op.total_macs(), "F={f}");
+            let refetch = dataflow::ff_weight_refetches(&op, &cfg, None);
+            assert_eq!(spilled, refetch > 0, "F={f}");
+            assert_eq!(
+                ff_st.traffic.weight_read,
+                op.prec.bytes_for(op.weight_elems() + refetch),
+                "F={f}"
+            );
+        }
+    }
+
+    #[test]
+    fn carry_in_elides_input_loads_only() {
+        // A carried mapping (layer N-1's output still resident in the VRF)
+        // skips the input-reload half of the drain/reload round-trip:
+        // zero input bytes read, identical outputs and weight traffic,
+        // strictly fewer instructions.
+        let cfg = SpeedConfig::reference();
+        let op = OpDesc::mm(1, 128, 256, Precision::Int8);
+        let x = seeded(op.input_elems() as usize, op.prec, 59);
+        let w = seeded(op.weight_elems() as usize, op.prec, 61);
+        let base = MappingChoice::of(StrategyKind::Mm);
+        let carry = MappingChoice { carry_in: true, ..base };
+        assert!(dataflow::carry_input_fits(&op, &cfg));
+        let (o1, s1, sum1) = run_op_choice(&op, &cfg, base, &x, &w);
+        let (o2, s2, sum2) = run_op_choice(&op, &cfg, carry, &x, &w);
+        assert_eq!(o1, o2);
+        assert_eq!(s2.traffic.input_read, 0);
+        assert!(s1.traffic.input_read > 0);
+        assert_eq!(s1.traffic.weight_read, s2.traffic.weight_read);
+        assert!(sum2.total_insns < sum1.total_insns);
+        assert!(s2.cycles <= s1.cycles, "carry {} !<= base {}", s2.cycles, s1.cycles);
+
+        // Declaring carry-in on a shape whose input cannot stay resident
+        // is a typed Layout error, not a silently-wrong stream.
+        let big = OpDesc::conv(256, 64, 64, 64, 3, 1, 1, Precision::Int16);
+        assert!(!dataflow::carry_input_fits(&big, &cfg));
+        let layout = MemLayout::place(&big).0;
+        let choice = MappingChoice { carry_in: true, ..MappingChoice::of(StrategyKind::Ffcs) };
+        match compile_op_with(&big, &cfg, choice, layout, false) {
+            Err(SpeedError::Layout(m)) => assert!(m.contains("carry"), "{m}"),
             other => panic!("unexpected {other:?}"),
         }
-        // FFCS still compiles the spilled shape (it never stages all-F
-        // weights), so the mixed mapping is unaffected.
-        compile_op(&spilled, &cfg, StrategyKind::Ffcs, layout, false).unwrap();
     }
 
     #[test]

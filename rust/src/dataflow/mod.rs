@@ -47,12 +47,18 @@ pub struct MappingChoice {
     pub chunk: Option<u32>,
     /// MM-only B-tile column-block (J-dim) override.
     pub jchunk: Option<u32>,
+    /// Model-level tuning: this operator's input is already VRF-resident
+    /// (the previous layer's output), so code generation elides the input
+    /// load runs. Only legal where [`carries_residency`] holds for the
+    /// producing/consuming layer pair; [`crate::compiler`] rejects a carry
+    /// on an operator whose input could not fit the input partition.
+    pub carry_in: bool,
 }
 
 impl MappingChoice {
     /// The strategy with its default (maximal) chunk.
     pub fn of(strat: StrategyKind) -> Self {
-        MappingChoice { strat, chunk: None, jchunk: None }
+        MappingChoice { strat, chunk: None, jchunk: None, carry_in: false }
     }
 
     /// The static mixed-dataflow choice for `op` (Sec. III table).
@@ -69,6 +75,9 @@ impl std::fmt::Display for MappingChoice {
         }
         if let Some(j) = self.jchunk {
             write!(f, "/j{j}")?;
+        }
+        if self.carry_in {
+            write!(f, "+carry")?;
         }
         Ok(())
     }
@@ -89,6 +98,13 @@ pub struct Mapping {
     pub total_stages: u64,
     /// Whether partial sums fit the VRF partial partition (no DRAM spill).
     pub partials_in_vrf: bool,
+    /// FF on CONV/PWCV: extra weight-element loads beyond one full pass,
+    /// paid when the all-F weight slice overflows the weight partition and
+    /// the non-resident remainder must be re-streamed per output row
+    /// ([`ff_weight_refetches`]). Zero when the slice is resident, and
+    /// zero for every other strategy — their per-tile weight walks are
+    /// part of the stream structure itself, not a spill.
+    pub weight_refetches: u64,
 }
 
 /// VRF partition budget per lane: the paper's VRF serves three concurrently
@@ -164,17 +180,21 @@ fn bytes_per_elem_x16(p: Precision) -> u32 {
 /// partition, so inputs and weights both stream exactly once.
 ///
 /// The chunk is capped at the largest PP multiple the partition fits. At
-/// very large F even the minimal PP-sized chunk overflows the partition;
-/// this helper still returns the PP floor to stay total, but the mapping
-/// is then a cost-model fiction ("weights stream exactly once" cannot
-/// hold) — [`ff_weights_resident`] is the residency gate code generation
-/// and the auto-tuner enforce before using FF on CONV/PWCV.
+/// very large F even the minimal PP-sized chunk overflows the partition
+/// and this helper returns the PP floor: the mapping then keeps a
+/// [`ff_resident_f`]-channel weight prefix resident and re-streams the
+/// remainder per output row — real loads code generation emits and
+/// [`ff_weight_refetches`] counts, not a fiction the cost model hides.
+///
+/// Interior math is u64: `per_lane_f * kk * pb` overflows u32 for
+/// extreme F × K² (the same class of bug as the PR-4 `oh()/ow()`
+/// underflow), while [`ff_weights_resident`] was already widened.
 pub fn ff_c_chunk(op: &OpDesc, cfg: &SpeedConfig) -> u32 {
-    let pb = bytes_per_elem_x16(op.prec);
-    let kk = op.ksize * op.ksize;
-    let budget = partition_budget(cfg) * 16;
-    let per_lane_f = op.f.div_ceil(cfg.lanes).max(1);
-    let fit = budget / (per_lane_f * kk * pb).max(1);
+    let pb = bytes_per_elem_x16(op.prec) as u64;
+    let kk = (op.ksize * op.ksize) as u64;
+    let budget = partition_budget(cfg) as u64 * 16;
+    let per_lane_f = op.f.div_ceil(cfg.lanes).max(1) as u64;
+    let fit = (budget / (per_lane_f * kk * pb).max(1)).min(u32::MAX as u64) as u32;
     let pp = op.prec.pp();
     floor_to(fit.max(pp), pp).min(floor_to(op.c.max(pp), pp))
 }
@@ -182,11 +202,12 @@ pub fn ff_c_chunk(op: &OpDesc, cfg: &SpeedConfig) -> u32 {
 /// FF-on-CONV/PWCV weight residency: does the per-lane all-F weight slice
 /// of the *minimal* (PP-sized) channel chunk fit the VRF weight
 /// partition? When it does not, no chunk cap can restore residency (the
-/// overflow is driven by F, not by the chunk), FF's "weights fetched
-/// exactly once" cost model would be fiction, and the strategy is
-/// rejected with a typed spill at compile time instead (ROADMAP item:
-/// `ff_c_chunk` floored at PP even past the partition). DWCV's per-lane
-/// weight slice is PP × K² and always fits.
+/// overflow is driven by F, not by the chunk) and FF's "weights fetched
+/// exactly once" no longer holds: code generation keeps the largest
+/// resident prefix of output channels and re-streams the remainder's
+/// weights per output row — honest extra traffic counted by
+/// [`ff_weight_refetches`] and costed like any other load. DWCV's
+/// per-lane weight slice is PP × K² and always fits.
 pub fn ff_weights_resident(op: &OpDesc, cfg: &SpeedConfig) -> bool {
     if op.kind == OpKind::Dwcv {
         return true;
@@ -198,12 +219,91 @@ pub fn ff_weights_resident(op: &OpDesc, cfg: &SpeedConfig) -> bool {
     per_lane_f * kk * pp * pb <= partition_budget(cfg) as u64 * 16
 }
 
-/// Configuration-aware applicability: [`applicable`] plus the
-/// [`ff_weights_resident`] check — the strategies the auto-tuner may cost
-/// and code generation will accept for `op` on `cfg`.
+/// The largest output-channel count whose weights for a `cc`-channel
+/// chunk fit the VRF weight partition (a multiple of `lanes` since the
+/// slice is lane-striped, capped at `op.f`). Equals `op.f` exactly when
+/// the chunk is resident; the `F - ff_resident_f` remainder is what a
+/// spilled FF stream re-fetches per output row.
+pub fn ff_resident_f(op: &OpDesc, cfg: &SpeedConfig, cc: u32) -> u32 {
+    let pb = bytes_per_elem_x16(op.prec) as u64;
+    let kk = (op.ksize * op.ksize) as u64;
+    let budget = partition_budget(cfg) as u64 * 16;
+    let per_lane = budget / ((cc as u64) * kk * pb).max(1);
+    (per_lane.saturating_mul(cfg.lanes as u64)).min(op.f as u64) as u32
+}
+
+/// Extra weight-element loads an FF stream over CONV/PWCV performs beyond
+/// one full pass of `op.weight_elems()`, under the chunk override `chunk`
+/// (resolved like code generation resolves it). Zero for resident shapes
+/// and for DWCV.
+///
+/// Mirrors [`crate::compiler`]'s emission exactly: per channel chunk, the
+/// [`ff_resident_f`]-channel weight prefix loads once, and the remainder
+/// (`F - rf` channels × chunk × K² elements) re-streams on every one of
+/// the `OH` output rows — `OH - 1` of those passes are refetches.
+pub fn ff_weight_refetches(op: &OpDesc, cfg: &SpeedConfig, chunk: Option<u32>) -> u64 {
+    if op.kind == OpKind::Dwcv || !applicable(StrategyKind::Ff, op) {
+        return 0;
+    }
+    let cc = resolve_chunk(op, cfg, StrategyKind::Ff, chunk);
+    let kk = (op.ksize * op.ksize) as u64;
+    let oh = op.oh() as u64;
+    let mut total = 0u64;
+    let mut c0 = 0u32;
+    while c0 < op.c {
+        let ccur = cc.min(op.c - c0);
+        let rf = ff_resident_f(op, cfg, ccur);
+        total += oh.saturating_sub(1) * (op.f - rf) as u64 * ccur as u64 * kk;
+        c0 += ccur;
+    }
+    total
+}
+
+/// Configuration-aware applicability. Since the honest FF spill model
+/// landed this coincides with [`applicable`]: FF on a non-resident
+/// CONV/PWCV shape compiles a real refetch stream instead of being
+/// rejected, so the auto-tuner costs resident and spilled mappings alike.
+/// The function stays configuration-parameterized because feasibility is
+/// the contract point where a future config-dependent constraint belongs.
 pub fn feasible(strat: StrategyKind, op: &OpDesc, cfg: &SpeedConfig) -> bool {
+    let _ = cfg;
     applicable(strat, op)
-        && (strat != StrategyKind::Ff || ff_weights_resident(op, cfg))
+}
+
+/// Does `op`'s input tensor fit the VRF input partition — the local
+/// precondition for running `op` with [`MappingChoice::carry_in`]?
+/// Conv-family inputs are broadcast (each lane holds the full tensor); MM
+/// A-tiles are lane-striped, so the per-lane share is what must fit.
+pub fn carry_input_fits(op: &OpDesc, cfg: &SpeedConfig) -> bool {
+    let budget = partition_budget(cfg) as u64;
+    match op.kind {
+        OpKind::Mm => op.input_bytes().div_ceil(cfg.lanes as u64) <= budget,
+        _ => op.input_bytes() <= budget,
+    }
+}
+
+/// Model-level residency chain: can `next` consume `prev`'s output
+/// directly from the VRF, skipping the drain/reload round trip? True when
+/// the tensors chain exactly (same precision, `prev`'s output geometry is
+/// `next`'s input geometry), `prev`'s i32 output fits the per-lane output
+/// partition, and `next`'s input satisfies [`carry_input_fits`]. The
+/// tuner only sets [`MappingChoice::carry_in`] at positions where this
+/// holds — and only keeps it when the measured cost is no worse.
+pub fn carries_residency(prev: &OpDesc, next: &OpDesc, cfg: &SpeedConfig) -> bool {
+    if prev.prec != next.prec || prev.output_elems() != next.input_elems() {
+        return false;
+    }
+    let chained = match (prev.kind, next.kind) {
+        (OpKind::Mm, OpKind::Mm) => prev.m == next.m && prev.n == next.k,
+        (OpKind::Mm, _) | (_, OpKind::Mm) => false,
+        (pk, _) => {
+            let prev_ch = if pk == OpKind::Dwcv { prev.c } else { prev.f };
+            prev_ch == next.c && prev.oh() == next.h && prev.ow() == next.w
+        }
+    };
+    chained
+        && prev.output_bytes().div_ceil(cfg.lanes as u64) <= partition_budget(cfg) as u64
+        && carry_input_fits(next, cfg)
 }
 
 /// The chunk size the static mapping uses for `strat` over `op`: the
@@ -339,6 +439,7 @@ fn map_mm(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
         group: cfg.lanes * cfg.tile_r,
         total_stages: row_blocks * col_tiles * stages_k,
         partials_in_vrf: true, // output-stationary in PE across K chunks
+        weight_refetches: 0,
     }
 }
 
@@ -371,6 +472,7 @@ fn map_ffcs(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
         group: cfg.lanes * cfg.tile_c,
         total_stages: stages,
         partials_in_vrf: conv_partials_fit(op, cfg),
+        weight_refetches: 0,
     }
 }
 
@@ -389,6 +491,7 @@ fn map_cf(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
         group: cfg.lanes * cfg.tile_c,
         total_stages: fgroups * pixel_tiles * cpasses * kk,
         partials_in_vrf: true,
+        weight_refetches: 0,
     }
 }
 
@@ -407,12 +510,15 @@ fn map_ff(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
             group: cfg.lanes * pp,
             total_stages: cgroups * pixel_tiles * kk,
             partials_in_vrf: true, // no cross-channel accumulation at all
+            weight_refetches: 0,
         }
     } else {
-        // FF applied to CONV/PWCV (ablation arm of Figs. 10/11): inputs and
-        // weights are streamed exactly once (all output channels' weights
-        // resident per channel chunk), but like FFCS the K == 1 case cannot
-        // hide the per-channel-pass partial round trip.
+        // FF applied to CONV/PWCV (ablation arm of Figs. 10/11): inputs
+        // stream exactly once and the resident weight prefix too; when the
+        // all-F slice overflows the weight partition the remainder
+        // re-streams per output row (`weight_refetches` > 0). Like FFCS,
+        // the K == 1 case cannot hide the per-channel-pass partial round
+        // trip.
         let cc = ff_c_chunk(op, cfg);
         let fgroups = op.f.div_ceil(cfg.lanes * cfg.tile_c) as u64;
         let pixel_tiles = (op.oh() as u64) * (op.ow() as u64).div_ceil(cfg.tile_r as u64);
@@ -427,6 +533,7 @@ fn map_ff(op: &OpDesc, cfg: &SpeedConfig) -> Mapping {
             group: cfg.lanes * cfg.tile_c,
             total_stages: stages,
             partials_in_vrf: conv_partials_fit(op, cfg),
+            weight_refetches: ff_weight_refetches(op, cfg, None),
         }
     }
 }
@@ -612,28 +719,110 @@ mod tests {
         // Reference config: budget×16 = (16384/3)×16 = 87376. INT8 3×3:
         // per-lane slice at the minimal PP chunk is (F/4)·9·4·16 ≤ 87376
         // ⟺ F/4 ≤ 151 — F = 604 is the last resident shape, 608 the
-        // first spilled one.
+        // first spilled one. Both are feasible: the spilled side now
+        // compiles a real refetch stream instead of being rejected.
         let cfg = cfg();
         let resident = OpDesc::conv(64, 604, 14, 14, 3, 1, 1, Precision::Int8);
         let spilled = OpDesc::conv(64, 608, 14, 14, 3, 1, 1, Precision::Int8);
         assert!(ff_weights_resident(&resident, &cfg));
         assert!(!ff_weights_resident(&spilled, &cfg));
         assert!(feasible(StrategyKind::Ff, &resident, &cfg));
-        assert!(!feasible(StrategyKind::Ff, &spilled, &cfg));
-        // The other conv strategies never stage all-F weights and stay
-        // feasible regardless of F.
+        assert!(feasible(StrategyKind::Ff, &spilled, &cfg));
+        assert_eq!(ff_weight_refetches(&resident, &cfg, None), 0);
+        assert!(ff_weight_refetches(&spilled, &cfg, None) > 0);
+        assert_eq!(map_op(&resident, &cfg, StrategyKind::Ff).weight_refetches, 0);
+        assert!(map_op(&spilled, &cfg, StrategyKind::Ff).weight_refetches > 0);
+        // The other conv strategies never stage all-F weights: no spill.
         assert!(feasible(StrategyKind::Ffcs, &spilled, &cfg));
         assert!(feasible(StrategyKind::Cf, &spilled, &cfg));
         // The vgg16-class INT4 shape the ROADMAP named: PP = 16 pushes the
         // minimal chunk past the partition even though `ff_c_chunk` floors
-        // at PP — exactly the fiction the residency gate closes.
+        // at PP — the remainder re-streams per output row, honestly
+        // counted.
         let vgg_like = OpDesc::conv(512, 512, 14, 14, 3, 1, 1, Precision::Int4);
         assert_eq!(ff_c_chunk(&vgg_like, &cfg), Precision::Int4.pp());
         assert!(!ff_weights_resident(&vgg_like, &cfg));
+        assert!(ff_weight_refetches(&vgg_like, &cfg, None) > 0);
         // DWCV weights are PP×K² per lane: always resident.
         let dw = OpDesc::dwcv(4096, 14, 14, 3, 1, 1, Precision::Int4);
         assert!(ff_weights_resident(&dw, &cfg));
         assert!(feasible(StrategyKind::Ff, &dw, &cfg));
+        assert_eq!(ff_weight_refetches(&dw, &cfg, None), 0);
+    }
+
+    #[test]
+    fn ff_refetch_count_matches_closed_form() {
+        let cfg = cfg();
+        // F=608 INT8 3×3: per-lane fit at cc=4 is 87376/(4·9·16) = 151
+        // rows → rf = 604 resident channels, 4 refetched. oh=14 with
+        // pad 1 stride 1 ⇒ 14 output rows, 13 of them refetch passes.
+        let op = OpDesc::conv(64, 608, 14, 14, 3, 1, 1, Precision::Int8);
+        let cc = ff_c_chunk(&op, &cfg);
+        assert_eq!(cc, Precision::Int8.pp());
+        let rf = ff_resident_f(&op, &cfg, cc);
+        assert!(rf < op.f && rf % cfg.lanes == 0);
+        let chunks = op.c / cc;
+        let want = (op.oh() as u64 - 1)
+            * (op.f - rf) as u64
+            * cc as u64
+            * 9
+            * chunks as u64;
+        assert_eq!(ff_weight_refetches(&op, &cfg, None), want);
+        // A smaller chunk override keeps more channels resident per chunk
+        // (never fewer), so refetches never increase with a smaller chunk.
+        for c in chunk_candidates(&op, &cfg, StrategyKind::Ff) {
+            assert!(
+                ff_weight_refetches(&op, &cfg, Some(c))
+                    <= ff_weight_refetches(&op, &cfg, None),
+                "chunk {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn ff_c_chunk_survives_extreme_f_times_k2() {
+        // u32 interior math overflowed here: per_lane_f·kk·pb for
+        // F = 2^22, K = 15 at INT16 is 2^20·225·32 ≈ 2^32.8. The widened
+        // u64 math must floor the chunk at PP, count refetches, and agree
+        // with the residency predicate instead of wrapping (or panicking
+        // in debug builds).
+        let cfg = cfg();
+        let op = OpDesc::conv(64, 1 << 22, 64, 64, 15, 1, 7, Precision::Int16);
+        let pp = Precision::Int16.pp();
+        assert_eq!(ff_c_chunk(&op, &cfg), pp);
+        assert!(!ff_weights_resident(&op, &cfg));
+        assert_eq!(ff_resident_f(&op, &cfg, pp) % cfg.lanes, 0);
+        assert!(ff_weight_refetches(&op, &cfg, None) > 0);
+    }
+
+    #[test]
+    fn residency_carry_chain_geometry_and_fit() {
+        let cfg = cfg();
+        // llm_tiny decode MLP pair: 1×128×256 feeding 1×256×128. Output
+        // of the first is 256 i32 = 1 KiB (256 B/lane ≤ 5461) and the
+        // second's lane-striped A share is 64 B — the chain carries.
+        let up = OpDesc::mm(1, 128, 256, Precision::Int8);
+        let down = OpDesc::mm(1, 256, 128, Precision::Int8);
+        assert!(carries_residency(&up, &down, &cfg));
+        assert!(carry_input_fits(&down, &cfg));
+        // Geometry mismatch (K of the consumer != N of the producer).
+        let wrong = OpDesc::mm(1, 128, 128, Precision::Int8);
+        assert!(!carries_residency(&up, &wrong, &cfg));
+        // Precision mismatch breaks the chain.
+        let down4 = OpDesc::mm(1, 256, 128, Precision::Int4);
+        assert!(!carries_residency(&up, &down4, &cfg));
+        // A large prefill MM's output overflows the output partition.
+        let big_up = OpDesc::mm(64, 128, 256, Precision::Int8);
+        let big_down = OpDesc::mm(64, 256, 128, Precision::Int8);
+        assert!(!carries_residency(&big_up, &big_down, &cfg));
+        // Conv chains: f/oh/ow must line up with c/h/w at the consumer.
+        let a = OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8);
+        let b = OpDesc::conv(8, 8, 10, 10, 3, 1, 1, Precision::Int8);
+        assert!(carries_residency(&a, &b, &cfg));
+        let misfit = OpDesc::conv(8, 8, 12, 12, 3, 1, 1, Precision::Int8);
+        assert!(!carries_residency(&a, &misfit, &cfg));
+        // MM never chains into a conv.
+        assert!(!carries_residency(&up, &a, &cfg));
     }
 
     #[test]

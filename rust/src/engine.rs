@@ -80,6 +80,10 @@ pub struct ProgramKey {
     /// Auto-tuner MM B-tile column-block override
     /// ([`MappingChoice::jchunk`]) — same cache-separation rule.
     pub jchunk: Option<u32>,
+    /// Carry-in mapping ([`MappingChoice::carry_in`]): a carried program
+    /// elides its input loads, so it is a distinct stream from the
+    /// reload-from-DRAM program and must cache separately.
+    pub carry: bool,
     cfg: CfgSig,
 }
 
@@ -436,6 +440,7 @@ impl Engine {
             strat: choice.strat,
             chunk: choice.chunk,
             jchunk: choice.jchunk,
+            carry: choice.carry_in,
             cfg: CfgSig::of(&self.cfg),
         };
         if let Some(p) = self.programs.get(&key) {
@@ -644,11 +649,11 @@ impl<'e> Session<'e> {
             // No plan attached / no tuned entry: static mixed fallback.
             return Some(MappingChoice::preferred(op));
         }
-        // Fixed-strategy ablations skip operators the strategy cannot
-        // legally run — which since the FF weight-residency gate includes
-        // infeasible (spilling) shapes, not just the inapplicable ones:
-        // an `--policy ff` sweep must skip a huge-F CONV the same way it
-        // skips an MM, not die on the typed Layout spill.
+        // Fixed-strategy ablations skip operators outside the strategy's
+        // applicability matrix (an `--policy ff` sweep skips MMs, not
+        // more). FF on a huge-F CONV is *feasible*: the compiler emits
+        // its per-row weight refetch runs and the sweep costs the spill
+        // honestly instead of skipping or rejecting the shape.
         self.policy
             .strategy_for(op)
             .filter(|s| crate::dataflow::feasible(*s, op, &self.engine.cfg))
@@ -662,10 +667,27 @@ impl<'e> Session<'e> {
         let m = model.at_precision(prec);
         let mut layers = Vec::with_capacity(m.ops.len());
         let mut total = SimStats::default();
-        for op in &m.ops {
-            let Some(choice) = self.choice_for(op) else {
+        for (i, op) in m.ops.iter().enumerate() {
+            let Some(mut choice) = self.choice_for(op) else {
                 continue;
             };
+            // Model-level chain: a tuned plan may mark layer i as carrying
+            // its input from layer i-1's VRF-resident output. The chain is
+            // positional, so it only applies when it covers this exact
+            // layer sequence, and the residency precondition is rechecked
+            // against the actual adjacent operators — a plan tuned on a
+            // different shape variant can never smuggle in an unsound
+            // carry (it just reloads, which is always safe).
+            if i > 0 && matches!(self.policy, Policy::Tuned | Policy::TunedOnline) {
+                if let Some(plan) = &self.tuned {
+                    if plan.chain.len() == m.ops.len()
+                        && plan.chain[i]
+                        && crate::dataflow::carries_residency(&m.ops[i - 1], op, &self.engine.cfg)
+                    {
+                        choice.carry_in = true;
+                    }
+                }
+            }
             let (stats, _) = self.engine.run_op_with(op, choice, self.functional)?;
             self.total.merge(&stats);
             total.merge(&stats);
@@ -940,6 +962,76 @@ mod tests {
         // Detaching restores the zero-overhead path.
         engine.set_obs(ObsConfig::off());
         assert!(engine.tracer().is_none());
+    }
+
+    #[test]
+    fn carry_programs_cache_separately() {
+        // A carried program elides its input loads — a different stream —
+        // so the program cache must never hand the reload program back
+        // for a carry request (or the chain measurement would be a no-op).
+        let mut engine = Engine::new(SpeedConfig::reference()).unwrap();
+        let op = OpDesc::mm(1, 128, 256, Precision::Int8);
+        let base = MappingChoice::of(StrategyKind::Mm);
+        let carry = MappingChoice { carry_in: true, ..base };
+        let p1 = engine.program_with(&op, base).unwrap();
+        let p2 = engine.program_with(&op, carry).unwrap();
+        assert_eq!(engine.cache_stats().misses, 2, "carry compiles its own program");
+        assert!(
+            p2.summary().total_insns < p1.summary().total_insns,
+            "carried stream elides the input loads"
+        );
+        // Both now hit.
+        engine.program_with(&op, base).unwrap();
+        engine.program_with(&op, carry).unwrap();
+        assert_eq!(engine.cache_stats().misses, 2);
+        assert_eq!(engine.cache_stats().hits, 2);
+    }
+
+    #[test]
+    fn tuned_session_applies_the_chain_and_never_regresses() {
+        use crate::tune::{self, TuneOptions};
+        // Two skinny MMs whose output feeds the next layer's K axis: the
+        // model-level chain pass must carry the second layer, and a
+        // session running the chained plan must beat (never trail) the
+        // same plan with its chain stripped, at identical MAC counts.
+        let cfg = SpeedConfig::reference();
+        let model = Model {
+            name: "chain2",
+            ops: vec![
+                OpDesc::mm(1, 128, 256, Precision::Int8),
+                OpDesc::mm(1, 256, 128, Precision::Int8),
+            ],
+            scalar_fraction: 0.0,
+        };
+        let prec = Precision::Int8;
+        let plan = tune::tune_model(&cfg, &model, prec, &TuneOptions::default()).unwrap();
+        assert!(plan.chain.iter().any(|&b| b), "decode-shaped MMs must chain");
+        let mut unchained = plan.clone();
+        unchained.chain.clear();
+
+        let mut chained_engine = Engine::new(cfg).unwrap();
+        let chained_run = chained_engine
+            .session()
+            .with_tuned_plan(Arc::new(plan))
+            .run_model(&model, prec)
+            .unwrap();
+        let mut reload_engine = Engine::new(cfg).unwrap();
+        let reload_run = reload_engine
+            .session()
+            .with_tuned_plan(Arc::new(unchained))
+            .run_model(&model, prec)
+            .unwrap();
+        assert_eq!(chained_run.total.macs, reload_run.total.macs);
+        assert!(
+            chained_run.total.cycles <= reload_run.total.cycles,
+            "chained {} > per-op {}",
+            chained_run.total.cycles,
+            reload_run.total.cycles
+        );
+        assert!(
+            chained_run.total.traffic.total() < reload_run.total.traffic.total(),
+            "the carried layer must elide its input reload traffic"
+        );
     }
 
     #[test]

@@ -680,11 +680,13 @@ fn cmd_tune(args: &[String]) -> Result<(), SpeedError> {
     );
     if opt(args, "--cache").is_none() {
         // Machine-greppable search-effort line (the tune-smoke CI leg
-        // checks tune_candidates_pruned > 0 under --prune).
+        // checks tune_candidates_pruned > 0 under --prune and
+        // tune_candidates_spilled_ff > 0 on shapes that spill under FF).
         let c = tune_engine.counters();
         println!(
-            "search: tune_candidates={} tune_candidates_pruned={}",
+            "search: tune_candidates={} tune_candidates_spilled_ff={} tune_candidates_pruned={}",
             c.get(Counter::TuneCandidates),
+            c.get(Counter::TuneCandidatesSpilledFf),
             c.get(Counter::TuneCandidatesPruned)
         );
     }

@@ -50,11 +50,14 @@ pub enum Counter {
     /// Auto-tuner: candidate mappings ranked out by the static cost model
     /// and never simulated (`TuneOptions::prune`).
     TuneCandidatesPruned,
+    /// Auto-tuner: enumerated FF candidates whose weight slice spills the
+    /// VRF (costed with honest per-row refetch runs, not rejected).
+    TuneCandidatesSpilledFf,
 }
 
 impl Counter {
     /// Every counter, in stable snapshot order.
-    pub const ALL: [Counter; 16] = [
+    pub const ALL: [Counter; 17] = [
         Counter::EngineCacheHits,
         Counter::EngineCacheSharedHits,
         Counter::EngineCacheMisses,
@@ -71,6 +74,7 @@ impl Counter {
         Counter::VerifyRuleEvals,
         Counter::TraceSpansDropped,
         Counter::TuneCandidatesPruned,
+        Counter::TuneCandidatesSpilledFf,
     ];
 
     /// Position in the registry's slot array.
@@ -97,6 +101,7 @@ impl Counter {
             Counter::VerifyRuleEvals => "verify_rule_evals",
             Counter::TraceSpansDropped => "trace_spans_dropped",
             Counter::TuneCandidatesPruned => "tune_candidates_pruned",
+            Counter::TuneCandidatesSpilledFf => "tune_candidates_spilled_ff",
         }
     }
 }

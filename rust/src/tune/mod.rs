@@ -8,13 +8,27 @@
 //! weights resident and streams them exactly once. Instead of extending
 //! the analytic table, this module measures: it enumerates every
 //! *feasible* `(strategy × chunk)` mapping candidate
-//! ([`dataflow::feasible`] — the applicability matrix plus the FF
-//! weight-residency gate — with [`dataflow::chunk_candidates`] on the
+//! ([`dataflow::feasible`] — the applicability matrix; FF mappings whose
+//! weight slice spills the VRF stay in the set and are costed with their
+//! honest per-row refetch runs rather than rejected — with
+//! [`dataflow::chunk_candidates`] on the
 //! reduction/channel axis and [`dataflow::jchunk_candidates`] on the MM
 //! B-tile column axis), costs each one on the fast-path cycle simulator
 //! ([`ExecMode::Batch`] — bit-exact vs per-instruction mode, so the
 //! oracle is the machine itself), and records the winner per operator in
 //! a [`TunedPlan`].
+//!
+//! Beyond the per-operator argmax, [`tune_model_on`] runs a model-level
+//! chain pass: where layer N's output can stay VRF-resident and feed
+//! layer N+1 directly ([`dataflow::carries_residency`]), the carried
+//! mapping ([`MappingChoice::carry_in`]) is gated on the bit-exact static
+//! cost model, verified, then confirmed with a quiesced measurement, and
+//! recorded positionally in [`TunedPlan::chain`] — the drain/reload
+//! round-trip through DRAM drops out. The pass only ever accepts strict
+//! improvements over the per-op winner, so the model-level plan is never
+//! worse than the per-op plan, and it is independent of
+//! [`TuneOptions::prune`], so pruned and full searches emit identical
+//! chains.
 //!
 //! Tuning is **semantics-preserving by construction**: strategies and
 //! chunk sizes only reorder/partition the same arithmetic, so every
@@ -140,6 +154,14 @@ pub struct TunedPlan {
     pub search_chunks: bool,
     /// One entry per *distinct* operator, in first-occurrence order.
     pub ops: Vec<OpTuning>,
+    /// Model-level residency chain, positional over the model's full
+    /// layer sequence (not the distinct-op table): `chain[i]` is true
+    /// when layer `i` consumes layer `i-1`'s output directly from the
+    /// VRF (its tuned choice runs with [`MappingChoice::carry_in`])
+    /// instead of the drain/reload round-trip through DRAM. Empty when
+    /// the plan predates model-level tuning or was hand-built — every
+    /// layer then reloads, which is always safe.
+    pub chain: Vec<bool>,
 }
 
 impl TunedPlan {
@@ -201,6 +223,10 @@ impl TunedPlan {
             self.cfg.lanes, self.cfg.tile_r, self.cfg.tile_c, self.cfg.vrf_kib
         ));
         s.push_str(&format!("  \"search_chunks\": {},\n", self.search_chunks));
+        s.push_str(&format!(
+            "  \"chain\": [{}],\n",
+            self.chain.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ")
+        ));
         s.push_str(&format!("  \"cycles_static\": {},\n", self.static_cycles()));
         s.push_str(&format!("  \"cycles_tuned\": {},\n", self.tuned_cycles()));
         s.push_str("  \"ops\": [\n");
@@ -286,7 +312,21 @@ impl TunedPlan {
         for e in ops_json {
             ops.push(parse_op_tuning(e, prec, &cfg)?);
         }
-        Ok(TunedPlan { model, prec, cfg, search_chunks, ops })
+        // Absent in pre-model-level plan documents: parses as empty
+        // (no layer carries — always safe).
+        let chain = match doc.get("chain") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(j) => j
+                .as_arr()
+                .ok_or_else(|| perr("tuned plan \"chain\" must be an array"))?
+                .iter()
+                .map(|v| {
+                    v.as_bool()
+                        .ok_or_else(|| perr("tuned plan \"chain\" entries must be booleans"))
+                })
+                .collect::<Result<Vec<bool>>>()?,
+        };
+        Ok(TunedPlan { model, prec, cfg, search_chunks, ops, chain })
     }
 
     /// Write this plan to `dir` under its canonical cache file name;
@@ -397,16 +437,21 @@ fn parse_op_tuning(e: &Json, prec: Precision, sig: &TunedConfigSig) -> Result<Op
         chunk: chunk("chunk")?,
         // Absent in pre-J-dim plan documents: parses as None.
         jchunk: chunk("jchunk")?,
+        // Per-op entries never carry; carrying is positional model-level
+        // state ([`TunedPlan::chain`]), applied at run time.
+        carry_in: false,
     };
     let static_choice = MappingChoice {
         strat: strat("static_strat")?,
         chunk: chunk("static_chunk")?,
         jchunk: chunk("static_jchunk")?,
+        carry_in: false,
     };
-    // Feasibility (applicability + FF weight residency) is validated
-    // against the plan's own configuration signature, so a stale document
-    // naming a mapping code generation would reject fails at load time —
-    // never mid-request.
+    // Feasibility (the applicability matrix) is validated against the
+    // plan's own configuration signature, so a stale document naming a
+    // mapping code generation would reject fails at load time — never
+    // mid-request. Spilled FF mappings are feasible: their refetch runs
+    // compile and are costed honestly.
     if !dataflow::feasible(choice.strat, &op, &sig.as_config()) {
         return Err(perr(format!(
             "tuned strategy {} not feasible for {} on the plan's configuration",
@@ -497,8 +542,10 @@ impl Default for TuneOptions {
 }
 
 /// Enumerate the mapping candidates for `op` (static choice first).
-/// Candidates are restricted to [`dataflow::feasible`] strategies (FF on
-/// CONV/PWCV drops out where its weight slice cannot stay VRF-resident),
+/// Candidates are restricted to [`dataflow::feasible`] strategies (the
+/// applicability matrix — FF on CONV/PWCV stays in even where its weight
+/// slice spills the VRF; the spilled stream's refetch runs are costed
+/// honestly and lose or win on measured merit),
 /// and with [`TuneOptions::chunks`] the search covers both chunk axes:
 /// smaller reduction/channel chunks ([`dataflow::chunk_candidates`]) and,
 /// for MM, wider B-tile column blocks ([`dataflow::jchunk_candidates`]).
@@ -536,6 +583,16 @@ pub fn tune_op(engine: &mut Engine, op: &OpDesc, opts: &TuneOptions) -> Result<O
     op.validate()?;
     let cfg = *engine.config();
     let cands = candidates_for(op, &cfg, opts);
+    for choice in &cands {
+        // Honest-spill observability: FF candidates whose weight slice
+        // spills are tallied so tune runs surface how often the search is
+        // costing refetch streams instead of rejecting them.
+        if choice.strat == StrategyKind::Ff
+            && dataflow::ff_weight_refetches(op, &cfg, choice.chunk) > 0
+        {
+            engine.counters().incr(Counter::TuneCandidatesSpilledFf);
+        }
+    }
     let mut verified: Vec<MappingChoice> = Vec::with_capacity(cands.len());
     for choice in &cands {
         // Statically verify the candidate's stream before paying for its
@@ -634,12 +691,47 @@ pub fn tune_model_on(
     opts: &TuneOptions,
 ) -> Result<TunedPlan> {
     let m = model.at_precision(prec);
+    let cfg = *engine.config();
     let distinct = distinct_ops(&m.ops);
     let mut ops = Vec::with_capacity(distinct.len());
     for (op, count) in distinct {
         let mut t = tune_op(engine, &op, opts)?;
         t.count = count;
         ops.push(t);
+    }
+    // Model-level chain pass: at every position where layer i-1's output
+    // can stay VRF-resident for layer i, try the tuned choice with
+    // carry-in. Gated on the bit-exact static cost model (so the pass is
+    // identical under both prune modes), verified, then confirmed with a
+    // quiesced measurement — chain[i] is set only when the carried
+    // mapping is strictly better, so the model-level plan is never worse
+    // than the per-op plan.
+    let mut chain = vec![false; m.ops.len()];
+    for i in 1..m.ops.len() {
+        let (prev, cur) = (&m.ops[i - 1], &m.ops[i]);
+        if !dataflow::carries_residency(prev, cur, &cfg) {
+            continue;
+        }
+        let base = ops
+            .iter()
+            .find(|t| t.op == *cur)
+            .expect("distinct table covers the model")
+            .choice;
+        let carry = MappingChoice { carry_in: true, ..base };
+        let base_cost = crate::analysis::cost::cost_op(cur, &cfg, base)?.cost();
+        let carry_cost = crate::analysis::cost::cost_op(cur, &cfg, carry)?.cost();
+        if carry_cost >= base_cost {
+            continue;
+        }
+        if crate::analysis::ensure_verified(cur, &cfg, carry).is_err() {
+            continue;
+        }
+        engine.quiesce();
+        let (bs, _) = engine.run_op_with(cur, base, false)?;
+        engine.quiesce();
+        let (cs, _) = engine.run_op_with(cur, carry, false)?;
+        chain[i] = cs.cycles < bs.cycles
+            || (cs.cycles == bs.cycles && cs.traffic.total() < bs.traffic.total());
     }
     engine.quiesce();
     Ok(TunedPlan {
@@ -648,6 +740,7 @@ pub fn tune_model_on(
         cfg: TunedConfigSig::of(engine.config()),
         search_chunks: opts.chunks,
         ops,
+        chain,
     })
 }
 
@@ -1138,6 +1231,7 @@ mod tests {
             prec: Precision::Int8,
             cfg: TunedConfigSig::of(&cfg()),
             search_chunks: true,
+            chain: vec![],
             ops: vec![OpTuning {
                 op,
                 count: 2,
@@ -1154,22 +1248,34 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_ff_is_skipped_and_rejected_at_parse() {
-        // The residency fix: FF drops out of the candidate set for a
-        // large-F CONV (no typed spill can reach the tuner), and a stale
-        // plan document naming it fails fast at load.
+    fn spilled_ff_is_enumerated_costed_and_parses() {
+        // The honest-spill fix: FF stays in the candidate set for a
+        // large-F CONV — its refetch runs are costed, not rejected — the
+        // spilled candidates are tallied, and a plan document recording
+        // the spilled mapping parses cleanly.
         let op = OpDesc::conv(64, 608, 6, 6, 3, 1, 1, Precision::Int8);
+        assert!(
+            dataflow::ff_weight_refetches(&op, &cfg(), None) > 0,
+            "shape must spill under FF"
+        );
         let cands = candidates_for(&op, &cfg(), &TuneOptions::default());
         assert!(
-            cands.iter().all(|c| c.strat != StrategyKind::Ff),
+            cands.iter().any(|c| c.strat == StrategyKind::Ff),
             "{cands:?}"
         );
-        // A hand-built plan entry claiming FF for that op must not parse.
+        let mut engine = Engine::new(cfg()).unwrap();
+        tune_op(&mut engine, &op, &TuneOptions::default()).unwrap();
+        assert!(
+            engine.counters().get(Counter::TuneCandidatesSpilledFf) > 0,
+            "spilled FF candidates must be tallied"
+        );
+        // A plan entry recording the spilled FF mapping round-trips.
         let plan = TunedPlan {
-            model: "stale".into(),
+            model: "spilled".into(),
             prec: Precision::Int8,
             cfg: TunedConfigSig::of(&cfg()),
             search_chunks: true,
+            chain: vec![],
             ops: vec![OpTuning {
                 op,
                 count: 1,
@@ -1180,10 +1286,47 @@ mod tests {
                 candidates: 1,
             }],
         };
-        match TunedPlan::from_json(&plan.to_json()) {
-            Err(SpeedError::Parse(m)) => assert!(m.contains("not feasible"), "{m}"),
-            other => panic!("unexpected {other:?}"),
+        let back = TunedPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn chain_pass_carries_decode_residency_and_round_trips() {
+        // Model-level tuning: the llm_tiny decode step feeds skinny MM
+        // outputs straight into the next layer's K axis, so the chain
+        // pass must find at least one carried position, and the chain
+        // must survive the JSON cache representation (including absent
+        // "chain" in pre-model-level documents).
+        let spec = crate::models::zoo::llm_spec("llm_tiny").unwrap();
+        let step = spec.decode_step(Precision::Int8, 65);
+        let prec = Precision::Int8;
+        let plan = tune_model(&cfg(), &step, prec, &TuneOptions::default()).unwrap();
+        let m = step.at_precision(prec);
+        assert_eq!(plan.chain.len(), m.ops.len());
+        assert!(!plan.chain[0], "layer 0 has no producer to carry from");
+        assert!(
+            plan.chain.iter().any(|&b| b),
+            "decode step must chain at least one layer: {:?}",
+            plan.chain
+        );
+        // Every carried position actually satisfies the residency chain.
+        for i in 1..m.ops.len() {
+            if plan.chain[i] {
+                assert!(dataflow::carries_residency(&m.ops[i - 1], &m.ops[i], &cfg()));
+            }
         }
+        let back = TunedPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        // A document without "chain" (pre-model-level) parses as empty.
+        let legacy: String = plan
+            .to_json()
+            .lines()
+            .filter(|l| !l.trim_start().starts_with("\"chain\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let old = TunedPlan::from_json(&legacy).unwrap();
+        assert!(old.chain.is_empty());
+        assert_eq!(old.ops, plan.ops);
     }
 
     #[test]

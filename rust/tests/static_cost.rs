@@ -121,6 +121,41 @@ fn prop_static_cost_is_bit_exact_across_candidates() {
     assert!(checked > 100, "only {checked} (op, candidate) points checked");
 }
 
+/// The FF weight-spill boundary pair: F=604 (last VRF-resident) and
+/// F=608 (first spilled) INT8 3x3 CONVs on the reference configuration.
+/// The static cost model must stay bit-exact on both sides — the spilled
+/// stream's per-row refetch runs are replayed like any other emitted
+/// instructions — and the spill must be visible in the cost report.
+#[test]
+fn static_cost_is_bit_exact_across_the_ff_spill_boundary() {
+    use speed_rvv::dataflow::{self, MappingChoice};
+    use speed_rvv::isa::StrategyKind;
+    let cfg = SpeedConfig::reference();
+    for (f, spilled) in [(604u32, false), (608, true)] {
+        let op = OpDesc::conv(8, f, 6, 6, 3, 1, 1, Precision::Int8);
+        assert_eq!(
+            dataflow::ff_weight_refetches(&op, &cfg, None) > 0,
+            spilled,
+            "F={f}: boundary moved"
+        );
+        let choice = MappingChoice::of(StrategyKind::Ff);
+        let predicted = cost_op(&op, &cfg, choice).unwrap();
+        let mut engine = Engine::new(cfg).unwrap();
+        engine.set_exec_mode(ExecMode::Batch);
+        let (stats, _) = engine.run_op_with(&op, choice, false).unwrap();
+        assert_eq!(predicted.stats, stats, "F={f}: predicted stats diverge");
+        assert_eq!(predicted.breakdown, engine.breakdown(), "F={f}");
+        assert_eq!(predicted.cost(), (stats.cycles, stats.traffic.total()), "F={f}");
+        // The refetch traffic is the declared spill, byte for byte.
+        assert_eq!(
+            stats.traffic.weight_read,
+            op.prec
+                .bytes_for(op.weight_elems() + dataflow::ff_weight_refetches(&op, &cfg, None)),
+            "F={f}"
+        );
+    }
+}
+
 /// The prediction is also exact against per-instruction execution — the
 /// cost model replays the scoreboard recurrence, so both simulator modes
 /// must agree with it (they are bit-identical to each other by the

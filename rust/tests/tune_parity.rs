@@ -136,6 +136,43 @@ fn prop_every_candidate_bit_identical() {
     }
 }
 
+/// The honest-spill acceptance pair: F=604 (last VRF-resident) and F=608
+/// (first spilled) INT8 3x3 CONVs straddle the FF weight-residency
+/// boundary on the reference configuration. Both sides must be
+/// bit-identical to the static mapping under FF, tune without losing to
+/// static, and report identical cycles/traffic in batch and exact mode —
+/// the refetch runs are real emitted instructions, not a cost fiction.
+#[test]
+fn ff_spill_boundary_pair_is_honest_across_modes() {
+    use speed_rvv::isa::StrategyKind;
+    use speed_rvv::sim::ExecMode;
+    let cfg = SpeedConfig::reference();
+    let opts = TuneOptions::default();
+    for f in [604u32, 608] {
+        let op = OpDesc::conv(8, f, 6, 6, 3, 1, 1, Precision::Int8);
+        let ff = MappingChoice::of(StrategyKind::Ff);
+        // Bit-identical output memory vs the static mapping, spilled or not.
+        verify_choice(&cfg, &op, ff).unwrap_or_else(|e| panic!("F={f}: {e}"));
+        let mut engine = Engine::new(cfg).unwrap();
+        let t = tune_op(&mut engine, &op, &opts).unwrap();
+        assert!(
+            t.cycles <= t.static_cycles,
+            "F={f}: tuned {} > static {}",
+            t.cycles,
+            t.static_cycles
+        );
+        // Batch and exact agree bit-for-bit on the FF stream.
+        engine.quiesce();
+        let (batch, _) = engine.run_op_with(&op, ff, false).unwrap();
+        let mut exact_engine = Engine::new(cfg).unwrap();
+        exact_engine.set_exec_mode(ExecMode::Exact);
+        let (exact, _) = exact_engine.run_op_with(&op, ff, false).unwrap();
+        assert_eq!(batch.cycles, exact.cycles, "F={f}");
+        assert_eq!(batch.traffic, exact.traffic, "F={f}");
+        assert_eq!(batch.macs, op.total_macs(), "F={f}");
+    }
+}
+
 /// Whole-model integration: a tuned plan for a downscaled CONV-heavy zoo
 /// model round-trips through JSON, never regresses the composed model
 /// run, and Policy::Tuned layer-for-layer follows the plan.
